@@ -1,0 +1,61 @@
+//! Fig. 1 end to end: build the 20-hospital network, generate the synthetic
+//! EHR cohort, and reproduce both panels — the graph (left) and the t-SNE of
+//! three hospitals (right) — writing plot-ready JSON + DOT to out/.
+//!
+//!     cargo run --release --example hospital_network
+
+use decfl::config::ExperimentConfig;
+use decfl::data::{generate, DataConfig};
+use decfl::experiments::fig1;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig::default();
+    std::fs::create_dir_all("out")?;
+
+    // ---- left panel: the hospital graph ----
+    let graph = fig1::hospital_graph(&cfg)?;
+    graph.print_summary();
+    std::fs::write("out/fig1_graph.dot", &graph.dot)?;
+    std::fs::write("out/fig1_graph.json", graph.to_json().to_string())?;
+    println!("  -> out/fig1_graph.dot, out/fig1_graph.json");
+
+    // ---- the cohort itself ----
+    let ds = generate(&DataConfig {
+        n_hospitals: cfg.n,
+        records_per_hospital: cfg.records_per_hospital,
+        records_jitter: 50,
+        heterogeneity: cfg.heterogeneity,
+        ..DataConfig::default()
+    })?;
+    println!(
+        "\ncohort: {} hospitals, {} train + {} test records, AD prevalence {:.3} \
+         (paper: 2103/10022 = 0.210)",
+        ds.n_hospitals(),
+        ds.total_records(),
+        ds.test.n,
+        ds.global_prevalence()
+    );
+    println!(
+        "per-hospital prevalence range: {:.3} .. {:.3}  |  site divergence {:.3}",
+        ds.prevalences.iter().cloned().fold(f64::INFINITY, f64::min),
+        ds.prevalences.iter().cloned().fold(0.0, f64::max),
+        ds.site_divergence()
+    );
+
+    // ---- right panel: t-SNE of three hospitals ----
+    let tsne = fig1::tsne_hospitals(&cfg, &[0, 1, 2], 150, 30.0)?;
+    tsne.print_summary();
+    std::fs::write("out/fig1_tsne.json", tsne.to_json().to_string())?;
+    println!("  -> out/fig1_tsne.json");
+
+    // contrast: the same three hospitals under iid sharding
+    let mut iid = cfg.clone();
+    iid.heterogeneity = 0.0;
+    let tsne_iid = fig1::tsne_hospitals(&iid, &[0, 1, 2], 150, 30.0)?;
+    println!(
+        "control (iid shards): silhouette {:.3} — heterogeneity is what separates \
+         the clusters, exactly the paper's Fig. 1R argument",
+        tsne_iid.silhouette
+    );
+    Ok(())
+}

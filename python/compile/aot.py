@@ -1,0 +1,220 @@
+"""AOT compile path: lower the L2 model to HLO-text artifacts + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one shape-specialized ``<name>.hlo.txt`` per artifact in DESIGN.md §4
+plus ``manifest.json`` describing shapes and *golden values* — outputs of each
+artifact on deterministic pseudo-random inputs that the rust integration
+tests regenerate bit-identically (integer-hash inputs, see ``golden_val``)
+and compare against after executing the compiled HLO through PJRT.
+
+Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---- deterministic golden inputs (mirrored by rust/src/runtime/golden.rs) ----
+
+
+def golden_vec(offset: int, count: int, scale: float) -> np.ndarray:
+    """Knuth-hash pseudo-random f32 vector, exactly reproducible in rust.
+
+    v[i] = ((((offset+i+1) * 2654435761) mod 2^32) / 2^32 - 0.5) * scale
+    computed in f64, cast to f32.
+    """
+    idx = np.arange(offset + 1, offset + count + 1, dtype=np.uint64)
+    hashed = (idx * np.uint64(2654435761)) % np.uint64(2**32)
+    return ((hashed.astype(np.float64) / 2.0**32 - 0.5) * scale).astype(np.float32)
+
+
+def golden_labels(offset: int, count: int) -> np.ndarray:
+    """y[i] = bit0 of the same hash — {0.0, 1.0} labels."""
+    idx = np.arange(offset + 1, offset + count + 1, dtype=np.uint64)
+    hashed = (idx * np.uint64(2654435761)) % np.uint64(2**32)
+    return (hashed & np.uint64(1)).astype(np.float32)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def lower_artifacts(n: int, d: int, h: int, m: int, q: int, shard: int):
+    """Build {name: (lowered, input_shapes, output_shapes)} for all artifacts."""
+    p = model.param_count(d, h)
+
+    def jl(fn, *specs):
+        return jax.jit(fn).lower(*specs)
+
+    arts = {}
+
+    arts["grad_step"] = (
+        jl(lambda t, x, y: model.loss_and_grad(t, x, y, d, h), spec(p), spec(m, d), spec(m)),
+        [[p], [m, d], [m]],
+        [[], [p]],
+    )
+    # Algorithm 1 round structure: Q-1 local updates (eq. 4), then one
+    # communication update (eq. 2/3) which consumes its own gradient — so the
+    # local-phase artifact scans Q-1 steps (see rust algo::RoundPlan).
+    ql = max(q - 1, 1)
+    arts["local_steps"] = (
+        jl(
+            lambda t, bx, by, lrs: model.local_steps(t, bx, by, lrs, d, h),
+            spec(p), spec(ql, m, d), spec(ql, m), spec(ql),
+        ),
+        [[p], [ql, m, d], [ql, m], [ql]],
+        [[p], [ql]],
+    )
+    arts["local_steps_all"] = (
+        jl(
+            lambda th, bx, by, lrs: model.local_steps_all(th, bx, by, lrs, d, h),
+            spec(n, p), spec(n, ql, m, d), spec(n, ql, m), spec(ql),
+        ),
+        [[n, p], [n, ql, m, d], [n, ql, m], [ql]],
+        [[n, p], [n, ql]],
+    )
+    arts["combine"] = (
+        jl(model.combine, spec(n), spec(n, p)),
+        [[n], [n, p]],
+        [[p]],
+    )
+    arts["dsgd_round"] = (
+        jl(
+            lambda w, th, bx, by, lr: model.dsgd_round(w, th, bx, by, lr, d, h),
+            spec(n, n), spec(n, p), spec(n, m, d), spec(n, m), spec(),
+        ),
+        [[n, n], [n, p], [n, m, d], [n, m], []],
+        [[n, p], [n]],
+    )
+    arts["dsgt_round"] = (
+        jl(
+            lambda w, th, ytr, g, bx, by, lr: model.dsgt_round(w, th, ytr, g, bx, by, lr, d, h),
+            spec(n, n), spec(n, p), spec(n, p), spec(n, p), spec(n, m, d), spec(n, m), spec(),
+        ),
+        [[n, n], [n, p], [n, p], [n, p], [n, m, d], [n, m], []],
+        [[n, p], [n, p], [n, p], [n]],
+    )
+    arts["eval_full"] = (
+        jl(
+            lambda th, xs, ys: model.eval_full(th, xs, ys, d, h),
+            spec(n, p), spec(n, shard, d), spec(n, shard),
+        ),
+        [[n, p], [n, shard, d], [n, shard]],
+        [[], [], [], []],
+    )
+    arts["predict"] = (
+        jl(lambda t, x: model.predict(t, x, d, h), spec(p), spec(shard, d)),
+        [[p], [shard, d]],
+        [[shard]],
+    )
+    return arts, p
+
+
+def compute_goldens(n: int, d: int, h: int, m: int, q: int, p: int):
+    """Run (jit, not the HLO files) each artifact on golden inputs; record
+    scalars the rust side asserts after executing the *compiled artifacts*
+    on identical inputs."""
+    theta = jnp.asarray(golden_vec(0, p, 0.2))
+    x = jnp.asarray(golden_vec(p, m * d, 2.0).reshape(m, d))
+    y = jnp.asarray(golden_labels(p + m * d, m))
+
+    loss, grad = jax.jit(lambda t, xx, yy: model.loss_and_grad(t, xx, yy, d, h))(theta, x, y)
+
+    wrow = np.full((n,), 1.0 / n, dtype=np.float32)
+    big = jnp.asarray(golden_vec(1000, n * p, 0.2).reshape(n, p))
+    comb = jax.jit(model.combine)(jnp.asarray(wrow), big)
+
+    ql = max(q - 1, 1)  # matches the local_steps artifact shape
+    bx = jnp.asarray(golden_vec(2000, ql * m * d, 2.0).reshape(ql, m, d))
+    by = jnp.asarray(golden_labels(2000 + ql * m * d, ql * m).reshape(ql, m))
+    lrs = jnp.asarray((0.02 / np.sqrt(np.arange(1, ql + 1))).astype(np.float32))
+    t_out, losses = jax.jit(
+        lambda t, a, b, c: model.local_steps(t, a, b, c, d, h)
+    )(theta, bx, by, lrs)
+
+    return {
+        "grad_step": {
+            "loss": float(loss),
+            "grad_norm": float(jnp.linalg.norm(grad)),
+            "grad_head": [float(v) for v in grad[:4]],
+        },
+        "combine": {
+            "out_norm": float(jnp.linalg.norm(comb)),
+            "out_head": [float(v) for v in comb[:4]],
+        },
+        "local_steps": {
+            "theta_norm": float(jnp.linalg.norm(t_out)),
+            "loss_first": float(losses[0]),
+            "loss_last": float(losses[-1]),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--n", type=int, default=20, help="number of hospital nodes")
+    ap.add_argument("--d", type=int, default=42, help="feature dimension (paper: 42)")
+    ap.add_argument("--hidden", type=int, default=32, help="MLP hidden width")
+    ap.add_argument("--m", type=int, default=20, help="minibatch size (paper: 20)")
+    ap.add_argument("--q", type=int, default=100, help="local steps per comm round (paper: 100)")
+    ap.add_argument("--shard", type=int, default=500, help="per-node records (paper: ~500)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    arts, p = lower_artifacts(args.n, args.d, args.hidden, args.m, args.q, args.shard)
+
+    manifest = {
+        "version": 1,
+        "config": {
+            "n": args.n, "d": args.d, "hidden": args.hidden,
+            "m": args.m, "q": args.q, "shard": args.shard, "p": p,
+        },
+        "artifacts": {},
+        "goldens": compute_goldens(args.n, args.d, args.hidden, args.m, args.q, p),
+    }
+
+    for name, (lowered, in_shapes, out_shapes) in arts.items():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": in_shapes,
+            "outputs": out_shapes,
+        }
+        print(f"  {name:12s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}/manifest.json (P = {p})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: batched matmul with the *batch-in-block* schedule.
+
+The whole-network artifacts (``dsgd_round``, ``dsgt_round``, ``eval_full``,
+``local_steps_all``) compute every hospital's MLP forward/backward in one
+call: ``X [N,m,d] @ W1 [N,d,h]`` — a batched matmul.  Two schedules were
+measured (EXPERIMENTS.md §Perf):
+
+* **grid-over-batch** (one grid step per node, or vmap of the 2-d kernel):
+  interpret-mode grid iteration costs ~1.5 ms per step on CPU-PJRT, so a
+  20-node round paid ~30 ms in grid overhead alone;
+* **batch-in-block** (this kernel): the entire padded batch lives in one
+  block — VMEM per grid step is ``bb * (bm*bk + bk*bn + bm*bn) * 4`` bytes,
+  ≈ 1.6 MiB for the paper shapes (20, 24, 128) × (20, 128, 128), far under
+  the 16 MiB budget — so a full round is a handful of grid steps.  11×
+  faster end to end on this testbed, and on a real TPU the same BlockSpec
+  keeps the MXU fed with back-to-back (bm×bk)·(bk×bn) tiles per batch lane.
+
+The k-axis still tiles (accumulating in the output block) so large
+contractions stay within VMEM.  Zero padding everywhere is exact for matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _round_up
+
+_SUBLANE = 8
+_LANE = 128
+# batch lanes per block: 32 covers the paper's N=20 in one grid step while
+# keeping the block set < 4 MiB for the default tile sizes.
+_BB = 32
+_BM = 128
+_BN = 128
+_BK = 256
+
+
+def block_shape_batched(b: int, m: int, k: int, n: int) -> tuple[int, int, int, int]:
+    """(bb, bm, bk, bn) for a [b,m,k] x [b,k,n] batched matmul."""
+    bm = min(_BM, _round_up(m, _SUBLANE))
+    bn = min(_BN, _round_up(n, _LANE))
+    bk = min(_BK, _round_up(k, _LANE))
+    bb = min(_BB, b)
+    return bb, bm, bk, bn
+
+
+def vmem_bytes_batched(b: int, m: int, k: int, n: int) -> int:
+    """Estimated VMEM bytes resident per grid step (f32)."""
+    bb, bm, bk, bn = block_shape_batched(b, m, k, n)
+    return 4 * bb * (bm * bk + bk * bn + bm * bn)
+
+
+def _bmm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _bmm(x: jax.Array, w: jax.Array) -> jax.Array:
+    b, m, k = x.shape
+    b2, k2, n = w.shape
+    if b != b2 or k != k2:
+        raise ValueError(f"bmm shape mismatch: {x.shape} @ {w.shape}")
+    bb, bm, bk, bn = block_shape_batched(b, m, k, n)
+    bp = _round_up(b, bb)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, bp - b), (0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, bp - b), (0, kp - k), (0, np_ - n)))
+    grid = (bp // bb, mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_bmm_kernel, nk=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bm, bk), lambda b_, i, j, k_: (b_, i, k_)),
+            pl.BlockSpec((bb, bk, bn), lambda b_, i, j, k_: (b_, k_, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm, bn), lambda b_, i, j, k_: (b_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:b, :m, :n]
+
+
+@jax.custom_vjp
+def bmm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Batched ``x @ w`` over the leading axis, differentiable (custom VJP)."""
+    return _bmm(x, w)
+
+
+def _bmm_fwd(x, w):
+    return _bmm(x, w), (x, w)
+
+
+def _bmm_bwd(res, g):
+    x, w = res
+    return _bmm(g, jnp.swapaxes(w, 1, 2)), _bmm(jnp.swapaxes(x, 1, 2), g)
+
+
+bmm.defvjp(_bmm_fwd, _bmm_bwd)

@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+This is the compute hot-spot of the paper's workload: every node's shallow-MLP
+forward/backward is two matmuls, and the gossip mixing step ``W @ Theta`` is a
+third (see ``mix.py``).
+
+TPU shaping
+-----------
+The kernel follows the canonical MXU-friendly schedule: a 3-d grid over
+``(rows, cols, contraction)`` tiles, each grid step loading an
+``(bm, bk)`` block of ``x`` and a ``(bk, bn)`` block of ``w`` into VMEM and
+accumulating ``x_blk @ w_blk`` into the output block in f32.  Block sizes are
+rounded to the f32 VPU/MXU tile quanta (sublane 8, lane 128).  Inputs whose
+dimensions are not multiples of the chosen blocks are zero-padded by the
+wrapper and the result is sliced back — zero padding is exact for matmul.
+
+The kernel is always lowered with ``interpret=True``: the CPU PJRT plugin
+(xla_extension 0.5.1) cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO which the rust runtime runs unmodified.  On a real TPU the
+same BlockSpecs compile to an MXU pipeline; DESIGN.md §7 and EXPERIMENTS.md
+estimate the VMEM footprint / MXU utilization for the default shapes.
+
+Autodiff
+--------
+Pallas calls do not support reverse-mode AD in interpret mode, so ``matmul``
+carries a ``custom_vjp`` whose forward and backward passes are the same tiled
+kernel (``dx = g @ w.T``, ``dw = x.T @ g``).  This keeps the *entire* MLP
+backward pass inside Pallas kernels — nothing falls back to XLA dot except
+the scalar glue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# f32 tile quanta on TPU: (sublane, lane) = (8, 128).
+_SUBLANE = 8
+_LANE = 128
+
+# Default VMEM budget guard: max elements held per grid step
+# (x block + w block + o block), in f32.  16 MiB VMEM / 4 B = 4 Mi elements;
+# stay well under with <= 256 Ki elements per step.
+_DEFAULT_BM = 128
+_DEFAULT_BN = 128
+_DEFAULT_BK = 256
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def block_shape(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Pick (bm, bk, bn) for an (m, k) x (k, n) matmul.
+
+    Small dimensions get a single tile rounded to the hardware quantum so the
+    grid collapses; large dimensions use the default MXU-sized blocks.
+    """
+    bm = min(_DEFAULT_BM, _round_up(m, _SUBLANE))
+    bn = min(_DEFAULT_BN, _round_up(n, _LANE))
+    bk = min(_DEFAULT_BK, _round_up(k, _LANE))
+    return bm, bk, bn
+
+
+def vmem_bytes(m: int, k: int, n: int) -> int:
+    """Estimated VMEM bytes resident per grid step (f32)."""
+    bm, bk, bn = block_shape(m, k, n)
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One grid step: accumulate an (bm, bk) @ (bk, bn) product into o."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_raw(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled pallas matmul on padded inputs (shapes already block multiples)."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bk, bn = block_shape(m, k, n)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Pad to block multiples, run the tiled kernel, slice back."""
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"matmul contraction mismatch: {x.shape} @ {w.shape}")
+    bm, bk, bn = block_shape(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    return _mm_raw(xp, wp)[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` as a tiled Pallas kernel, differentiable (custom VJP)."""
+    return _mm(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _mm(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return _mm(g, w.T), _mm(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: gossip mixing ``W @ Theta`` and per-node row mixing.
+
+The decentralized comm step (paper eqs. 2–3) combines neighbor parameters with
+the mixing-matrix weights.  Stacking node parameters as ``Theta in R^{N x P}``
+this is a *skinny* matmul: N is tiny (20 hospitals) while P is the flat
+parameter count, so the schedule tiles only the P axis and keeps the whole
+N x N weight block resident in VMEM.
+
+``mix_all``  : (W [N,N], Theta [N,P])   -> W @ Theta       (fused fast path)
+``mix_row``  : (w [N],   Theta [N,P])   -> sum_j w_j Theta_j (actor mode — one
+               node combining the neighborhood it received over the netsim)
+
+Both are exact for zero padding, which the wrappers use to reach tile quanta.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _round_up
+
+_SUBLANE = 8
+_LANE = 128
+# P-axis tile: one grid step holds (Np x Np) + 2 * (Np x BP) f32 blocks in
+# VMEM; BP = 512 keeps that < 0.5 MiB for N <= 64.
+_BP = 512
+
+
+def _mix_kernel(w_ref, t_ref, o_ref):
+    o_ref[...] = jnp.dot(w_ref[...], t_ref[...], preferred_element_type=jnp.float32)
+
+
+def _mix_padded(w: jax.Array, theta: jax.Array) -> jax.Array:
+    """(Mp, Np) @ (Np, Pp) with the P axis gridded; shapes pre-padded."""
+    mp, np_ = w.shape
+    _, pp = theta.shape
+    bp = min(_BP, pp)
+    grid = (pp // bp,)
+    return pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mp, np_), lambda j: (0, 0)),
+            pl.BlockSpec((np_, bp), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mp, bp), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, pp), jnp.float32),
+        interpret=True,
+    )(w, theta)
+
+
+def mix_all(w: jax.Array, theta: jax.Array) -> jax.Array:
+    """``W @ Theta`` for the whole network in one kernel launch."""
+    n, n2 = w.shape
+    n3, p = theta.shape
+    if n != n2 or n != n3:
+        raise ValueError(f"mix_all shape mismatch: W {w.shape}, Theta {theta.shape}")
+    npad = _round_up(n, _SUBLANE)
+    bp = min(_BP, _round_up(p, _LANE))
+    ppad = _round_up(p, bp)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, npad - n), (0, npad - n)))
+    tp = jnp.pad(theta.astype(jnp.float32), ((0, npad - n), (0, ppad - p)))
+    return _mix_padded(wp, tp)[:n, :p]
+
+
+def mix_row(wrow: jax.Array, theta: jax.Array) -> jax.Array:
+    """One node's combine: ``sum_j w_j Theta_j`` (eq. 2/3 left term)."""
+    (n,) = wrow.shape
+    n2, p = theta.shape
+    if n != n2:
+        raise ValueError(f"mix_row shape mismatch: w {wrow.shape}, Theta {theta.shape}")
+    npad = _round_up(n, _SUBLANE)
+    bp = min(_BP, _round_up(p, _LANE))
+    ppad = _round_up(p, bp)
+    wp = jnp.pad(wrow.astype(jnp.float32)[None, :], ((0, _SUBLANE - 1), (0, npad - n)))
+    tp = jnp.pad(theta.astype(jnp.float32), ((0, npad - n), (0, ppad - p)))
+    return _mix_padded(wp, tp)[0, :p]

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for the Pallas kernels and the L2 model.
+
+Everything here is the straightforward textbook computation with no tiling,
+padding, or pallas involvement.  pytest compares every kernel and every model
+function against these references — this file is the correctness ground truth
+for the whole compile path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def ref_bmm(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("bmk,bkn->bmn", x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def ref_mix_all(w: jax.Array, theta: jax.Array) -> jax.Array:
+    return jnp.dot(w.astype(jnp.float32), theta.astype(jnp.float32))
+
+
+def ref_mix_row(wrow: jax.Array, theta: jax.Array) -> jax.Array:
+    return jnp.dot(wrow.astype(jnp.float32), theta.astype(jnp.float32))
+
+
+# ---- model oracle (flat-parameter shallow MLP, logistic loss) ----
+
+
+def ref_unflatten(theta: jax.Array, d: int, h: int):
+    i0 = d * h
+    w1 = theta[:i0].reshape(d, h)
+    b1 = theta[i0 : i0 + h]
+    w2 = theta[i0 + h : i0 + 2 * h].reshape(h, 1)
+    b2 = theta[i0 + 2 * h :]
+    return w1, b1, w2, b2
+
+
+def ref_logits(theta: jax.Array, x: jax.Array, d: int, h: int) -> jax.Array:
+    w1, b1, w2, b2 = ref_unflatten(theta, d, h)
+    hid = jnp.tanh(jnp.dot(x, w1) + b1)
+    return (jnp.dot(hid, w2) + b2)[:, 0]
+
+
+def ref_loss(theta: jax.Array, x: jax.Array, y: jax.Array, d: int, h: int) -> jax.Array:
+    """Mean logistic loss, labels y in {0, 1}."""
+    z = ref_logits(theta, x, d, h)
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def ref_loss_and_grad(theta, x, y, d: int, h: int):
+    return jax.value_and_grad(lambda t: ref_loss(t, x, y, d, h))(theta)
+
+
+def ref_local_steps(theta, bx, by, lrs, d: int, h: int):
+    """Q plain SGD steps (paper eq. 4), returning final params and per-step loss."""
+    losses = []
+    for q in range(bx.shape[0]):
+        loss, g = ref_loss_and_grad(theta, bx[q], by[q], d, h)
+        theta = theta - lrs[q] * g
+        losses.append(loss)
+    return theta, jnp.stack(losses)
+
+
+def ref_dsgd_round(w, big_theta, bx, by, lr, d: int, h: int):
+    """Paper eq. 2 applied to every node (stacked)."""
+    n = big_theta.shape[0]
+    losses, grads = [], []
+    for i in range(n):
+        loss, g = ref_loss_and_grad(big_theta[i], bx[i], by[i], d, h)
+        losses.append(loss)
+        grads.append(g)
+    g = jnp.stack(grads)
+    theta_next = jnp.dot(w, big_theta) - lr * g
+    return theta_next, jnp.stack(losses)
+
+
+def ref_dsgt_round(w, big_theta, y_tr, g_old, bx, by, lr, d: int, h: int):
+    """Paper eq. 3 applied to every node (stacked)."""
+    theta_next = jnp.dot(w, big_theta) - lr * y_tr
+    n = big_theta.shape[0]
+    losses, grads = [], []
+    for i in range(n):
+        loss, g = ref_loss_and_grad(theta_next[i], bx[i], by[i], d, h)
+        losses.append(loss)
+        grads.append(g)
+    g_new = jnp.stack(grads)
+    y_next = jnp.dot(w, y_tr) + g_new - g_old
+    return theta_next, y_next, g_new, jnp.stack(losses)
+
+
+def ref_eval_full(big_theta, xs, ys, d: int, h: int):
+    """(mean loss, accuracy, stationarity gap, consensus error)."""
+    n = big_theta.shape[0]
+    losses, grads, accs = [], [], []
+    for i in range(n):
+        loss, g = ref_loss_and_grad(big_theta[i], xs[i], ys[i], d, h)
+        z = ref_logits(big_theta[i], xs[i], d, h)
+        accs.append(jnp.mean(((z > 0).astype(jnp.float32) == ys[i]).astype(jnp.float32)))
+        losses.append(loss)
+        grads.append(g)
+    mean_grad = jnp.mean(jnp.stack(grads), axis=0)
+    stat = jnp.sum(mean_grad**2)
+    theta_bar = jnp.mean(big_theta, axis=0)
+    cons = jnp.mean(jnp.sum((big_theta - theta_bar) ** 2, axis=1))
+    return (
+        jnp.mean(jnp.stack(losses)),
+        jnp.mean(jnp.stack(accs)),
+        stat,
+        cons,
+    )

@@ -1,0 +1,185 @@
+"""L2: the paper's model and update rules as jax functions over flat params.
+
+Every function here operates on *flat* f32 parameter vectors (``theta`` of
+length ``P = d*h + 2h + 1``) because the object the decentralized algorithms
+gossip is the flat vector — mixing is a matrix product over ``Theta`` in
+``R^{N x P}``.  All matrix products route through the L1 Pallas kernels
+(``kernels.matmul`` / ``kernels.mix``), so the AOT-lowered HLO exercises the
+kernel schedule end to end.
+
+The model is the paper's "shallow neural network" per node: a 1-hidden-layer
+MLP (tanh) with logistic loss for the AD-vs-MCI binary classification, input
+dimension 42 (paper §3).
+
+These functions are lowered once by ``aot.py`` into shape-specialized HLO
+artifacts; python never runs on the training path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.bmm import bmm
+from .kernels.matmul import matmul
+from .kernels.mix import mix_all, mix_row
+
+
+def param_count(d: int, h: int) -> int:
+    """Flat parameter count of the d -> h -> 1 MLP."""
+    return d * h + h + h + 1
+
+
+def unflatten(theta: jax.Array, d: int, h: int):
+    """Split the flat vector into (W1 [d,h], b1 [h], W2 [h,1], b2 [1])."""
+    i0 = d * h
+    w1 = theta[:i0].reshape(d, h)
+    b1 = theta[i0 : i0 + h]
+    w2 = theta[i0 + h : i0 + 2 * h].reshape(h, 1)
+    b2 = theta[i0 + 2 * h :]
+    return w1, b1, w2, b2
+
+
+def logits(theta: jax.Array, x: jax.Array, d: int, h: int) -> jax.Array:
+    """Forward pass -> raw logits [batch]."""
+    w1, b1, w2, b2 = unflatten(theta, d, h)
+    hid = jnp.tanh(matmul(x, w1) + b1)
+    return (matmul(hid, w2) + b2)[:, 0]
+
+
+def loss(theta: jax.Array, x: jax.Array, y: jax.Array, d: int, h: int) -> jax.Array:
+    """Mean logistic loss; labels y in {0, 1} (1 = AD, 0 = MCI)."""
+    z = logits(theta, x, d, h)
+    return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+
+def loss_and_grad(theta, x, y, d: int, h: int):
+    """(loss, grad) — one stochastic gradient (the ``grad_step`` artifact)."""
+    return jax.value_and_grad(lambda t: loss(t, x, y, d, h))(theta)
+
+
+def predict(theta, x, d: int, h: int) -> jax.Array:
+    """P(AD | x) per row (the ``predict`` artifact, used for test-set AUC)."""
+    return jax.nn.sigmoid(logits(theta, x, d, h))
+
+
+def local_steps(theta, bx, by, lrs, d: int, h: int):
+    """Paper eq. (4), Q times, inside one ``lax.scan``.
+
+    bx [Q,m,d] / by [Q,m] are the pre-sampled minibatches for the Q local
+    updates, lrs [Q] the per-step learning rates (the coordinator implements
+    the paper's alpha_r = alpha0/sqrt(r) schedule).  One PJRT call per Q
+    steps instead of Q calls — the key L2 perf decision.
+    """
+
+    def step(t, qb):
+        qx, qy, lr = qb
+        l, g = jax.value_and_grad(lambda tt: loss(tt, qx, qy, d, h))(t)
+        return t - lr * g, l
+
+    theta_out, losses = lax.scan(step, theta, (bx, by, lrs))
+    return theta_out, losses
+
+
+# ---- whole-network (batched) ops ------------------------------------------
+# No vmap here: interpret-mode pallas under vmap/grid-over-batch pays ~1.5 ms
+# per grid step on CPU-PJRT, so the whole-network functions are written
+# directly on the batch-in-block bmm kernel (EXPERIMENTS.md §Perf, 11x).
+
+
+def unflatten_all(big_theta, d: int, h: int):
+    """Stacked params [N,P] -> (W1 [N,d,h], b1 [N,h], W2 [N,h,1], b2 [N,1])."""
+    n = big_theta.shape[0]
+    i0 = d * h
+    w1 = big_theta[:, :i0].reshape(n, d, h)
+    b1 = big_theta[:, i0 : i0 + h]
+    w2 = big_theta[:, i0 + h : i0 + 2 * h].reshape(n, h, 1)
+    b2 = big_theta[:, i0 + 2 * h :]
+    return w1, b1, w2, b2
+
+
+def logits_all(big_theta, xs, d: int, h: int):
+    """Every node's forward pass: [N,P] x [N,B,d] -> [N,B]."""
+    w1, b1, w2, b2 = unflatten_all(big_theta, d, h)
+    hid = jnp.tanh(bmm(xs, w1) + b1[:, None, :])
+    return (bmm(hid, w2) + b2[:, None, :])[..., 0]
+
+
+def _loss_sum_all(big_theta, xs, ys, d: int, h: int):
+    """Sum over nodes of per-node mean losses (aux: per-node losses, logits).
+
+    grad of the *sum* w.r.t. the stacked [N,P] params is exactly the stack of
+    per-node gradients — per-node grads without vmap.
+    """
+    z = logits_all(big_theta, xs, d, h)
+    per = jnp.mean(jnp.logaddexp(0.0, z) - ys * z, axis=1)
+    return jnp.sum(per), (per, z)
+
+
+def loss_and_grad_all(big_theta, xs, ys, d: int, h: int):
+    """(per-node losses [N], logits [N,B], grads [N,P]) in one fused pass."""
+    (_, (per, z)), grads = jax.value_and_grad(
+        lambda t: _loss_sum_all(t, xs, ys, d, h), has_aux=True
+    )(big_theta)
+    return per, z, grads
+
+
+def local_steps_all(big_theta, bx, by, lrs, d: int, h: int):
+    """Whole-network local phase: Q' eq.-4 steps for every node in one call.
+
+    big_theta [N,P], bx [N,Q',m,d], by [N,Q',m], shared lrs [Q'].
+    Scans over the step axis with the batched gradient inside.
+    """
+    bx_t = jnp.swapaxes(bx, 0, 1)  # [Q', N, m, d]
+    by_t = jnp.swapaxes(by, 0, 1)  # [Q', N, m]
+
+    def step(t, qb):
+        qx, qy, lr = qb
+        per, _, g = loss_and_grad_all(t, qx, qy, d, h)
+        return t - lr * g, per
+
+    theta_out, losses = lax.scan(step, big_theta, (bx_t, by_t, lrs))
+    return theta_out, jnp.swapaxes(losses, 0, 1)  # [N, Q']
+
+
+def combine(wrow, big_theta):
+    """One node's gossip combine (actor mode): sum_j w_j theta_j."""
+    return mix_row(wrow, big_theta)
+
+
+def dsgd_round(w, big_theta, bx, by, lr, d: int, h: int):
+    """Paper eq. (2) for all nodes, fused: Theta' = W Theta - lr * G."""
+    losses, _, grads = loss_and_grad_all(big_theta, bx, by, d, h)
+    theta_next = mix_all(w, big_theta) - lr * grads
+    return theta_next, losses
+
+
+def dsgt_round(w, big_theta, y_tr, g_old, bx, by, lr, d: int, h: int):
+    """Paper eq. (3) for all nodes, fused.
+
+    Theta' = W Theta - lr * Y
+    Y'     = W Y + grad(Theta') - g_old
+    Returns (Theta', Y', grad(Theta'), losses) — the caller threads g as state.
+    """
+    theta_next = mix_all(w, big_theta) - lr * y_tr
+    losses, _, g_new = loss_and_grad_all(theta_next, bx, by, d, h)
+    y_next = mix_all(w, y_tr) + g_new - g_old
+    return theta_next, y_next, g_new, losses
+
+
+def eval_full(big_theta, xs, ys, d: int, h: int):
+    """Full-shard metrics: (mean loss, accuracy, stationarity, consensus).
+
+    stationarity = || (1/N) sum_i grad f_i(theta_i) ||^2   (Theorem 1 LHS, term 1)
+    consensus    = (1/N) sum_i || theta_i - theta_bar ||^2 (Theorem 1 LHS, term 2)
+    """
+    # single fused batched pass: losses, logits and per-node grads together
+    # (§Perf L2 optimization — no recomputed forward, no vmap)
+    losses, zs, grads = loss_and_grad_all(big_theta, xs, ys, d, h)
+    acc = jnp.mean(((zs > 0).astype(jnp.float32) == ys).astype(jnp.float32))
+    mean_grad = jnp.mean(grads, axis=0)
+    stat = jnp.sum(mean_grad**2)
+    theta_bar = jnp.mean(big_theta, axis=0)
+    cons = jnp.mean(jnp.sum((big_theta - theta_bar) ** 2, axis=1))
+    return jnp.mean(losses), acc, stat, cons

@@ -1,0 +1,78 @@
+"""AOT path: golden-input generators and lowering sanity (small shapes so the
+test is fast; `make artifacts` does the full-size lowering)."""
+
+import json
+import os
+
+import numpy as np
+
+from compile import aot, model
+
+
+class TestGoldenGenerators:
+    def test_golden_vec_deterministic(self):
+        a = aot.golden_vec(0, 10, 0.2)
+        b = aot.golden_vec(0, 10, 0.2)
+        np.testing.assert_array_equal(a, b)
+
+    def test_golden_vec_offset_disjoint(self):
+        a = aot.golden_vec(0, 10, 1.0)
+        b = aot.golden_vec(10, 10, 1.0)
+        assert not np.allclose(a, b)
+        # offset slices must agree with one long draw
+        long = aot.golden_vec(0, 20, 1.0)
+        np.testing.assert_array_equal(long[10:], b)
+
+    def test_golden_vec_range(self):
+        v = aot.golden_vec(0, 1000, 2.0)
+        assert v.dtype == np.float32
+        assert float(v.min()) >= -1.0 and float(v.max()) <= 1.0
+
+    def test_golden_vec_known_value(self):
+        # hand-computed: hash(1) = 2654435761 mod 2^32 = 2654435761
+        # v = (2654435761 / 2^32 - 0.5) * 1.0
+        expected = np.float32((2654435761 / 2.0**32 - 0.5) * 1.0)
+        assert aot.golden_vec(0, 1, 1.0)[0] == expected
+
+    def test_golden_labels_binary(self):
+        y = aot.golden_labels(0, 100)
+        assert set(np.unique(y)).issubset({0.0, 1.0})
+        # both classes present
+        assert 0.0 in y and 1.0 in y
+
+
+class TestLowering:
+    def test_lower_all_artifacts_small(self):
+        n, d, h, m, q, shard = 4, 6, 5, 3, 2, 7
+        arts, p = aot.lower_artifacts(n, d, h, m, q, shard)
+        assert p == model.param_count(d, h)
+        assert set(arts) == {
+            "grad_step", "local_steps", "local_steps_all", "combine",
+            "dsgd_round", "dsgt_round", "eval_full", "predict",
+        }
+        for name, (lowered, ins, outs) in arts.items():
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_goldens_finite(self):
+        g = aot.compute_goldens(n=4, d=6, h=5, m=3, q=2, p=model.param_count(6, 5))
+        for section in g.values():
+            for v in section.values():
+                arr = np.asarray(v)
+                assert np.all(np.isfinite(arr))
+
+    def test_manifest_end_to_end(self, tmp_path):
+        import subprocess, sys
+        env = dict(os.environ)
+        pydir = os.path.join(os.path.dirname(__file__), "..")
+        out = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", str(tmp_path),
+             "--n", "3", "--d", "4", "--hidden", "3", "--m", "2", "--q", "2", "--shard", "5"],
+            cwd=pydir, env=env, capture_output=True, text=True, timeout=600,
+        )
+        assert out.returncode == 0, out.stderr
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["config"]["p"] == model.param_count(4, 3)
+        for art in man["artifacts"].values():
+            assert (tmp_path / art["file"]).exists()

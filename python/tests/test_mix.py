@@ -1,0 +1,98 @@
+"""Gossip-mixing kernel vs oracle, plus the doubly-stochastic invariants the
+decentralized algorithms rely on (Assumption 1 consequences)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mix import mix_all, mix_row
+from compile.kernels.ref import ref_mix_all, ref_mix_row
+
+
+def metropolis(adj: np.ndarray) -> np.ndarray:
+    """Reference Metropolis-Hastings weights for a 0/1 adjacency matrix."""
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    w = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def ring_adj(n: int) -> np.ndarray:
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        a[i, (i + 1) % n] = a[(i + 1) % n, i] = 1.0
+    return a
+
+
+class TestMixAll:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(metropolis(ring_adj(20)))
+        theta = jnp.asarray(rng.standard_normal((20, 1409)).astype(np.float32))
+        np.testing.assert_allclose(mix_all(w, theta), ref_mix_all(w, theta), rtol=1e-5, atol=1e-5)
+
+    def test_identity_weights_fixed_point(self):
+        rng = np.random.default_rng(1)
+        theta = jnp.asarray(rng.standard_normal((8, 100)).astype(np.float32))
+        np.testing.assert_allclose(mix_all(jnp.eye(8), theta), theta, rtol=1e-6, atol=1e-6)
+
+    def test_preserves_consensus(self):
+        # if all nodes agree, mixing is a no-op (W 1 = 1)
+        w = jnp.asarray(metropolis(ring_adj(10)))
+        theta = jnp.tile(jnp.arange(50, dtype=jnp.float32)[None, :], (10, 1))
+        np.testing.assert_allclose(mix_all(w, theta), theta, rtol=1e-5, atol=1e-5)
+
+    def test_preserves_mean(self):
+        # column-stochastic W preserves the network average (key DSGT invariant)
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(metropolis(ring_adj(12)))
+        theta = jnp.asarray(rng.standard_normal((12, 64)).astype(np.float32))
+        np.testing.assert_allclose(
+            jnp.mean(mix_all(w, theta), axis=0), jnp.mean(theta, axis=0), rtol=1e-4, atol=1e-5
+        )
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            mix_all(jnp.eye(4), jnp.zeros((5, 10)))
+
+
+class TestMixRow:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        wrow = jnp.asarray(metropolis(ring_adj(20))[0])
+        theta = jnp.asarray(rng.standard_normal((20, 1409)).astype(np.float32))
+        np.testing.assert_allclose(mix_row(wrow, theta), ref_mix_row(wrow, theta), rtol=1e-5, atol=1e-5)
+
+    def test_one_hot_selects_row(self):
+        rng = np.random.default_rng(4)
+        theta = jnp.asarray(rng.standard_normal((6, 33)).astype(np.float32))
+        onehot = jnp.zeros(6).at[3].set(1.0)
+        np.testing.assert_allclose(mix_row(onehot, theta), theta[3], rtol=1e-6, atol=1e-6)
+
+    def test_consistent_with_mix_all(self):
+        rng = np.random.default_rng(5)
+        w = jnp.asarray(metropolis(ring_adj(9)))
+        theta = jnp.asarray(rng.standard_normal((9, 200)).astype(np.float32))
+        full = mix_all(w, theta)
+        for i in range(9):
+            np.testing.assert_allclose(mix_row(w[i], theta), full[i], rtol=1e-5, atol=1e-5)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            mix_row(jnp.zeros(4), jnp.zeros((5, 10)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 40), p=st.integers(1, 700), seed=st.integers(0, 2**31 - 1))
+def test_mix_hypothesis(n, p, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    theta = jnp.asarray(rng.standard_normal((n, p)).astype(np.float32))
+    np.testing.assert_allclose(mix_all(w, theta), ref_mix_all(w, theta), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(mix_row(w[0], theta), ref_mix_row(w[0], theta), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,189 @@
+"""L2 model vs pure-jnp oracle: every update rule the rust coordinator will
+execute through the AOT artifacts, checked against ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+D, H = 42, 32
+P = model.param_count(D, H)
+
+
+def make(rng, *shape, scale=1.0):
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(np.float32))
+
+
+def labels(rng, *shape):
+    return jnp.asarray(rng.integers(0, 2, shape).astype(np.float32))
+
+
+class TestForward:
+    def test_param_count(self):
+        assert P == 42 * 32 + 32 + 32 + 1 == 1409
+
+    def test_unflatten_roundtrip(self):
+        rng = np.random.default_rng(0)
+        theta = make(rng, P)
+        w1, b1, w2, b2 = model.unflatten(theta, D, H)
+        assert w1.shape == (D, H) and b1.shape == (H,)
+        assert w2.shape == (H, 1) and b2.shape == (1,)
+        flat = jnp.concatenate([w1.ravel(), b1, w2.ravel(), b2])
+        np.testing.assert_array_equal(flat, theta)
+
+    def test_logits_match_ref(self):
+        rng = np.random.default_rng(1)
+        theta, x = make(rng, P, scale=0.2), make(rng, 20, D)
+        np.testing.assert_allclose(
+            model.logits(theta, x, D, H), ref.ref_logits(theta, x, D, H), rtol=1e-4, atol=1e-5
+        )
+
+    def test_loss_matches_ref(self):
+        rng = np.random.default_rng(2)
+        theta, x, y = make(rng, P, scale=0.2), make(rng, 20, D), labels(rng, 20)
+        np.testing.assert_allclose(
+            model.loss(theta, x, y, D, H), ref.ref_loss(theta, x, y, D, H), rtol=1e-5, atol=1e-6
+        )
+
+    def test_predict_is_sigmoid_of_logits(self):
+        rng = np.random.default_rng(3)
+        theta, x = make(rng, P, scale=0.2), make(rng, 10, D)
+        pr = model.predict(theta, x, D, H)
+        assert float(pr.min()) >= 0.0 and float(pr.max()) <= 1.0
+        np.testing.assert_allclose(
+            pr, jax.nn.sigmoid(ref.ref_logits(theta, x, D, H)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_loss_at_zero_params_is_log2(self):
+        rng = np.random.default_rng(4)
+        x, y = make(rng, 30, D), labels(rng, 30)
+        np.testing.assert_allclose(
+            model.loss(jnp.zeros(P), x, y, D, H), np.log(2.0), rtol=1e-5
+        )
+
+
+class TestGrad:
+    def test_grad_matches_ref(self):
+        rng = np.random.default_rng(5)
+        theta, x, y = make(rng, P, scale=0.2), make(rng, 20, D), labels(rng, 20)
+        l_p, g_p = model.loss_and_grad(theta, x, y, D, H)
+        l_r, g_r = ref.ref_loss_and_grad(theta, x, y, D, H)
+        np.testing.assert_allclose(l_p, l_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(g_p, g_r, rtol=1e-4, atol=1e-5)
+
+    def test_grad_matches_finite_differences(self):
+        rng = np.random.default_rng(6)
+        theta, x, y = make(rng, P, scale=0.1), make(rng, 10, D), labels(rng, 10)
+        _, g = model.loss_and_grad(theta, x, y, D, H)
+        eps = 1e-3
+        for idx in [0, P // 2, P - 1]:
+            e = jnp.zeros(P).at[idx].set(eps)
+            fd = (model.loss(theta + e, x, y, D, H) - model.loss(theta - e, x, y, D, H)) / (2 * eps)
+            np.testing.assert_allclose(g[idx], fd, rtol=2e-2, atol=2e-4)
+
+    def test_gradient_descent_decreases_loss(self):
+        rng = np.random.default_rng(7)
+        theta, x, y = make(rng, P, scale=0.1), make(rng, 50, D), labels(rng, 50)
+        l0, g = model.loss_and_grad(theta, x, y, D, H)
+        l1 = model.loss(theta - 0.1 * g, x, y, D, H)
+        assert float(l1) < float(l0)
+
+
+class TestLocalSteps:
+    def test_matches_ref_unrolled(self):
+        rng = np.random.default_rng(8)
+        q, m = 5, 10
+        theta = make(rng, P, scale=0.2)
+        bx, by = make(rng, q, m, D), labels(rng, q, m)
+        lrs = jnp.asarray((0.02 / np.sqrt(np.arange(1, q + 1))).astype(np.float32))
+        t_p, l_p = model.local_steps(theta, bx, by, lrs, D, H)
+        t_r, l_r = ref.ref_local_steps(theta, bx, by, lrs, D, H)
+        np.testing.assert_allclose(t_p, t_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(l_p, l_r, rtol=1e-4, atol=1e-5)
+
+    def test_q1_equals_single_grad_step(self):
+        rng = np.random.default_rng(9)
+        theta = make(rng, P, scale=0.2)
+        x, y = make(rng, 1, 20, D), labels(rng, 1, 20)
+        lr = jnp.asarray([0.05], dtype=jnp.float32)
+        t_scan, _ = model.local_steps(theta, x, y, lr, D, H)
+        _, g = model.loss_and_grad(theta, x[0], y[0], D, H)
+        np.testing.assert_allclose(t_scan, theta - 0.05 * g, rtol=1e-5, atol=1e-6)
+
+
+class TestRounds:
+    def setup_method(self):
+        self.rng = np.random.default_rng(10)
+        self.n, self.m = 6, 8
+        adj = np.zeros((self.n, self.n), dtype=np.float32)
+        for i in range(self.n):
+            adj[i, (i + 1) % self.n] = adj[(i + 1) % self.n, i] = 1.0
+        deg = adj.sum(1)
+        w = np.zeros_like(adj)
+        for i in range(self.n):
+            for j in range(self.n):
+                if i != j and adj[i, j]:
+                    w[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+            w[i, i] = 1.0 - w[i].sum()
+        self.w = jnp.asarray(w)
+        self.theta = make(self.rng, self.n, P, scale=0.2)
+        self.bx = make(self.rng, self.n, self.m, D)
+        self.by = labels(self.rng, self.n, self.m)
+
+    def test_dsgd_round_matches_ref(self):
+        t_p, l_p = model.dsgd_round(self.w, self.theta, self.bx, self.by, 0.05, D, H)
+        t_r, l_r = ref.ref_dsgd_round(self.w, self.theta, self.bx, self.by, 0.05, D, H)
+        np.testing.assert_allclose(t_p, t_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(l_p, l_r, rtol=1e-4, atol=1e-5)
+
+    def test_dsgt_round_matches_ref(self):
+        y0 = make(self.rng, self.n, P, scale=0.1)
+        g0 = make(self.rng, self.n, P, scale=0.1)
+        out_p = model.dsgt_round(self.w, self.theta, y0, g0, self.bx, self.by, 0.05, D, H)
+        out_r = ref.ref_dsgt_round(self.w, self.theta, y0, g0, self.bx, self.by, 0.05, D, H)
+        for a, b in zip(out_p, out_r):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_dsgt_preserves_tracker_mean(self):
+        # key GT invariant: mean(Y') = mean(Y) + mean(G_new) - mean(G_old)
+        _, g0 = jax.vmap(lambda t, x_, y_: model.loss_and_grad(t, x_, y_, D, H))(
+            self.theta, self.bx, self.by
+        )
+        y0 = g0
+        t1, y1, g1, _ = model.dsgt_round(self.w, self.theta, y0, g0, self.bx, self.by, 0.05, D, H)
+        np.testing.assert_allclose(
+            jnp.mean(y1, axis=0), jnp.mean(g1, axis=0), rtol=1e-3, atol=1e-5
+        )
+
+    def test_eval_full_matches_ref(self):
+        out_p = model.eval_full(self.theta, self.bx, self.by, D, H)
+        out_r = ref.ref_eval_full(self.theta, self.bx, self.by, D, H)
+        for a, b in zip(out_p, out_r):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_eval_consensus_zero_at_consensus(self):
+        same = jnp.tile(self.theta[0][None, :], (self.n, 1))
+        _, _, _, cons = model.eval_full(same, self.bx, self.by, D, H)
+        assert float(cons) < 1e-8
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(2, 50),
+    h=st.integers(1, 40),
+    m=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_model_grad_hypothesis(d, h, m, seed):
+    rng = np.random.default_rng(seed)
+    p = model.param_count(d, h)
+    theta = jnp.asarray((rng.standard_normal(p) * 0.2).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 2, m).astype(np.float32))
+    l_p, g_p = model.loss_and_grad(theta, x, y, d, h)
+    l_r, g_r = ref.ref_loss_and_grad(theta, x, y, d, h)
+    np.testing.assert_allclose(l_p, l_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_p, g_r, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,44 @@
+//! EXP-F1L + EXP-F1R: regenerate both panels of the paper's Figure 1 and
+//! time the substrates involved (graph build, layout, t-SNE).
+//!
+//!     cargo bench --bench bench_fig1            # reduced t-SNE size
+//!     DECFL_FULL=1 cargo bench --bench bench_fig1
+
+use decfl::benchutil::{bench, full_scale, report, section};
+use decfl::config::ExperimentConfig;
+use decfl::experiments::fig1;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    // Fig. 1R of the paper shows strongly separated hospitals; regenerate at
+    // the heterogeneity level that matches that visual (training default 0.6)
+    cfg.heterogeneity = 1.0;
+    let per = if full_scale() { 150 } else { 100 };
+
+    section("EXP-F1L: hospital network (paper Fig. 1 left)");
+    let rep = fig1::hospital_graph(&cfg)?;
+    rep.print_summary();
+    std::fs::create_dir_all("out")?;
+    std::fs::write("out/fig1_graph.json", rep.to_json().to_string())?;
+    let t = bench(1.0, || {
+        let r = fig1::hospital_graph(&cfg).unwrap();
+        std::hint::black_box(r.spectral_gap);
+    });
+    report("graph + layout + spectra", &t);
+
+    section("EXP-F1R: t-SNE of 3 hospitals (paper Fig. 1 right)");
+    let rep = fig1::tsne_hospitals(&cfg, &[0, 1, 2], per, 30.0)?;
+    rep.print_summary();
+    std::fs::write("out/fig1_tsne.json", rep.to_json().to_string())?;
+    println!(
+        "paper-vs-ours: paper shows visibly separated per-hospital clusters; \
+         our silhouette = {:.3} ({} pts/hospital) — separated iff > ~0.25",
+        rep.silhouette, per
+    );
+    let t = bench(3.0, || {
+        let r = fig1::tsne_hospitals(&cfg, &[0, 1, 2], per.min(60), 20.0).unwrap();
+        std::hint::black_box(r.silhouette);
+    });
+    report(&format!("t-SNE ({} pts)", 3 * per.min(60)), &t);
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! EXP-A3: DSGT's advantage over DSGD as a function of data heterogeneity —
+//! the paper's core motivation for gradient tracking ("DSGT has the
+//! advantages of dealing with non-identical datasets compared with DSGD").
+//!
+//!     cargo bench --bench bench_hetero
+
+use decfl::benchutil::{full_scale, section};
+use decfl::experiments::sweeps;
+
+fn main() -> anyhow::Result<()> {
+    let (steps, seeds): (usize, Vec<u64>) =
+        if full_scale() { (2_000, vec![7, 8, 9]) } else { (600, vec![7, 8]) };
+    section(&format!("EXP-A3: heterogeneity sweep (Q=1, T={steps})"));
+    let rows = sweeps::hetero_sweep(&[0.0, 0.3, 0.6, 1.0], steps, &seeds)?;
+    sweeps::print_hetero_table(&rows);
+    let iid = rows.first().unwrap().advantage;
+    let noniid = rows.last().unwrap().advantage;
+    println!(
+        "\npaper-vs-ours: the tracker cancels the heterogeneity-driven consensus \
+         bias — DSGD/DSGT consensus-error ratio goes from {iid:.2}x (iid) to \
+         {noniid:.2}x (het=1.0); the shared stationarity term stays equal, \
+         matching the paper's 'the difference ... will be diminishing \
+         asymptotically'."
+    );
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! EXP-A1: communication savings vs the local period Q (§2.3's motivation:
+//! "communication rounds ... can be saved significantly without loss of
+//! optimality").
+//!
+//!     cargo bench --bench bench_qsweep
+
+use decfl::benchutil::{full_scale, section};
+use decfl::experiments::sweeps;
+
+fn main() -> anyhow::Result<()> {
+    let (steps, qs): (usize, Vec<usize>) = if full_scale() {
+        (10_000, vec![1, 5, 20, 100, 500])
+    } else {
+        (2_000, vec![1, 5, 20, 100])
+    };
+    let target = 0.45;
+
+    section(&format!("EXP-A1: Q sweep (FD-DSGT, T={steps} local steps)"));
+    let rows = sweeps::q_sweep(&qs, steps, target, 7)?;
+    sweeps::print_q_table(&rows, target);
+
+    // shape check vs the paper: larger Q ⇒ far fewer comm rounds/bytes at
+    // (nearly) the same final loss
+    let q1 = rows.first().unwrap();
+    let qmax = rows.last().unwrap();
+    println!(
+        "\npaper-vs-ours: Q={} uses {:.0}x fewer bytes than Q=1 ({:.2} vs {:.2} MB), \
+         final loss {:.4} vs {:.4} (paper: savings 'without loss of optimality')",
+        qmax.q,
+        q1.bytes as f64 / qmax.bytes as f64,
+        qmax.bytes as f64 / 1e6,
+        q1.bytes as f64 / 1e6,
+        qmax.final_loss,
+        q1.final_loss
+    );
+    std::fs::create_dir_all("out")?;
+    std::fs::write(
+        "out/qsweep.json",
+        sweeps::rows_to_json(&rows, sweeps::q_row_json).to_string(),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! EXP-P: runtime micro-benchmarks — the §Perf measurement harness.
+//!
+//! Times every PJRT artifact call, the native twin, and a full fused
+//! communication round, so the §Perf log in EXPERIMENTS.md has stable
+//! numbers to cite.  Skips PJRT sections when artifacts are absent.
+//!
+//!     cargo bench --bench bench_runtime
+
+use decfl::benchutil::{bench, report, section};
+use decfl::coordinator::{Compute, NativeCompute, PjrtCompute};
+use decfl::rng::Pcg64;
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn rand_labels(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let mut rng = Pcg64::seed(0);
+
+    let pjrt = if dir.join("manifest.json").exists() {
+        Some(PjrtCompute::load(&dir)?)
+    } else {
+        eprintln!("artifacts missing — PJRT sections skipped");
+        None
+    };
+
+    // shapes (paper config)
+    let (n, d, h, m, shard) = pjrt
+        .as_ref()
+        .map(|p| {
+            let s = p.engine().shapes();
+            (s.n, s.d, s.hidden, s.m, s.shard)
+        })
+        .unwrap_or((20, 42, 32, 20, 500));
+    let native = NativeCompute::new(d, h, n, m);
+    let p = native.dims().2;
+
+    let theta = rand_vec(&mut rng, p, 0.2);
+    let x = rand_vec(&mut rng, m * d, 1.0);
+    let y = rand_labels(&mut rng, m);
+    let big_theta = rand_vec(&mut rng, n * p, 0.2);
+    let wrow = vec![1.0f32 / n as f32; n];
+    let g = decfl::graph::Graph::build(
+        &decfl::graph::Topology::RandomGeometric { radius: 0.35 },
+        n,
+        &mut Pcg64::seed(1),
+    )?;
+    let w = decfl::mixing::to_f32(&decfl::mixing::build(&g, decfl::mixing::Scheme::Metropolis));
+    let bx = rand_vec(&mut rng, n * m * d, 1.0);
+    let by = rand_labels(&mut rng, n * m);
+    let y_tr = rand_vec(&mut rng, n * p, 0.1);
+    let g_old = rand_vec(&mut rng, n * p, 0.1);
+
+    let ds = decfl::data::generate(&decfl::data::DataConfig {
+        n_hospitals: n,
+        records_per_hospital: shard,
+        records_jitter: 0,
+        ..Default::default()
+    })?
+    .resampled_to(shard);
+
+    if let Some(pjrt) = &pjrt {
+        section("PJRT artifact call latency (paper shapes: N=20, P=1409, m=20)");
+        pjrt.engine().warmup(&["grad_step", "combine", "local_steps", "dsgd_round", "dsgt_round", "eval_full"])?;
+        report("grad_step", &bench(2.0, || {
+            std::hint::black_box(pjrt.grad_step(&theta, &x, &y).unwrap());
+        }));
+        report("combine (1 node gossip mix)", &bench(2.0, || {
+            std::hint::black_box(pjrt.combine(&wrow, &big_theta).unwrap());
+        }));
+        let ql = pjrt.local_steps_len().unwrap();
+        let lbx = rand_vec(&mut rng, ql * m * d, 1.0);
+        let lby = rand_labels(&mut rng, ql * m);
+        let lrs: Vec<f32> = (1..=ql).map(|r| 0.02 / (r as f32).sqrt()).collect();
+        report(&format!("local_steps (Q-1 = {ql} scan)"), &bench(3.0, || {
+            std::hint::black_box(pjrt.local_steps(&theta, &lbx, &lby, &lrs).unwrap());
+        }));
+        let lbx_all = rand_vec(&mut rng, n * ql * m * d, 1.0);
+        let lby_all = rand_labels(&mut rng, n * ql * m);
+        report(&format!("local_steps_all artifact ({ql} steps)"), &bench(5.0, || {
+            std::hint::black_box(
+                pjrt.engine().execute("local_steps_all", &[&big_theta, &lbx_all, &lby_all, &lrs]).unwrap(),
+            );
+        }));
+        report("dsgd_round (whole network)", &bench(3.0, || {
+            std::hint::black_box(pjrt.dsgd_round(&w, &big_theta, &bx, &by, 0.02).unwrap());
+        }));
+        report("dsgt_round (whole network)", &bench(3.0, || {
+            std::hint::black_box(
+                pjrt.dsgt_round(&w, &big_theta, &y_tr, &g_old, &bx, &by, 0.02).unwrap(),
+            );
+        }));
+        report("eval_full (20 x 500 records)", &bench(3.0, || {
+            std::hint::black_box(pjrt.eval_full(&big_theta, &ds.shards).unwrap());
+        }));
+    }
+
+    section("native twin (same ops, pure rust)");
+    report("grad_step", &bench(2.0, || {
+        std::hint::black_box(native.grad_step(&theta, &x, &y).unwrap());
+    }));
+    report("combine", &bench(2.0, || {
+        std::hint::black_box(native.combine(&wrow, &big_theta).unwrap());
+    }));
+    report("dsgd_round", &bench(2.0, || {
+        std::hint::black_box(native.dsgd_round(&w, &big_theta, &bx, &by, 0.02).unwrap());
+    }));
+    report("dsgt_round", &bench(2.0, || {
+        std::hint::black_box(
+            native.dsgt_round(&w, &big_theta, &y_tr, &g_old, &bx, &by, 0.02).unwrap(),
+        );
+    }));
+    report("eval_full", &bench(2.0, || {
+        std::hint::black_box(native.eval_full(&big_theta, &ds.shards).unwrap());
+    }));
+
+    section("end-to-end round throughput (FD-DSGT, fused driver)");
+    for backend in ["pjrt", "native"] {
+        if backend == "pjrt" && pjrt.is_none() {
+            continue;
+        }
+        let mut cfg = decfl::config::ExperimentConfig::default();
+        cfg.backend = if backend == "pjrt" {
+            decfl::config::Backend::Pjrt
+        } else {
+            decfl::config::Backend::Native
+        };
+        cfg.total_steps = 300; // 3 comm rounds per iteration
+        cfg.eval_every = 1000; // no intermediate evals: time the hot loop
+        let asm = decfl::coordinator::assemble(&cfg)?;
+        let compute = decfl::coordinator::make_compute(&cfg)?;
+        let t = bench(10.0, || {
+            let log = decfl::coordinator::fused::train(&cfg, compute.as_ref(), &asm.ds, &asm.graph, &asm.w).unwrap();
+            std::hint::black_box(log.rows.len());
+        });
+        println!(
+            "{backend:<8} 3 rounds (300 local steps): p50 {} → {:.1} local steps/s",
+            decfl::benchutil::fmt_s(t.p50_s),
+            300.0 / t.p50_s
+        );
+    }
+    Ok(())
+}

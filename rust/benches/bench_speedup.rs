@@ -1,0 +1,28 @@
+//! EXP-T1: Theorem 1 — linear speedup of DSGT (Q=1) in the number of nodes.
+//!
+//!     cargo bench --bench bench_speedup
+//!     DECFL_FULL=1 cargo bench --bench bench_speedup   # larger T, more seeds
+
+use decfl::benchutil::{full_scale, section};
+use decfl::experiments::speedup;
+
+fn main() -> anyhow::Result<()> {
+    let (t_steps, seeds): (usize, Vec<u64>) = if full_scale() {
+        (1_000, vec![7, 8, 9, 10, 11])
+    } else {
+        (300, vec![7, 8, 9])
+    };
+    let ns = [4usize, 8, 16, 32];
+
+    section(&format!("EXP-T1: Theorem 1 speedup (T={t_steps}, {} seeds)", seeds.len()));
+    let res = speedup::run(&ns, t_steps, &seeds)?;
+    res.print_table();
+    println!(
+        "linear-speedup consistent: {}",
+        if res.supports_linear_speedup() { "YES" } else { "NO" }
+    );
+    std::fs::create_dir_all("out")?;
+    std::fs::write("out/speedup.json", res.to_json().to_string())?;
+    println!("wrote out/speedup.json");
+    Ok(())
+}

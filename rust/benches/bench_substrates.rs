@@ -1,0 +1,86 @@
+//! Substrate micro-benchmarks: graph generation, mixing matrices, the Jacobi
+//! eigensolver, the EHR generator, the netsim, and t-SNE — the from-scratch
+//! infrastructure everything else stands on.
+//!
+//!     cargo bench --bench bench_substrates
+
+use decfl::benchutil::{bench, report, section};
+use decfl::data::{generate, DataConfig};
+use decfl::graph::{Graph, Topology};
+use decfl::linalg::sym_eig;
+use decfl::mixing::{build, validate, Scheme};
+use decfl::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    section("graph + mixing (N = 20, paper scale)");
+    report("RGG(20) build", &bench(1.0, || {
+        let g = Graph::build(&Topology::RandomGeometric { radius: 0.35 }, 20, &mut Pcg64::seed(7)).unwrap();
+        std::hint::black_box(g.edge_count());
+    }));
+    let g = Graph::build(&Topology::RandomGeometric { radius: 0.35 }, 20, &mut Pcg64::seed(7))?;
+    report("metropolis weights", &bench(1.0, || {
+        std::hint::black_box(build(&g, Scheme::Metropolis));
+    }));
+    let w = build(&g, Scheme::Metropolis);
+    report("assumption-1 validation (jacobi eig)", &bench(1.0, || {
+        std::hint::black_box(validate(&w).second_eig);
+    }));
+
+    section("eigensolver scaling");
+    for n in [20usize, 50, 100] {
+        let mut rng = Pcg64::seed(n as u64);
+        let mut a = decfl::linalg::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        report(&format!("sym_eig {n}x{n}"), &bench(1.0, || {
+            std::hint::black_box(sym_eig(&a).values[0]);
+        }));
+    }
+
+    section("EHR generator");
+    report("cohort 20 x 500 (paper scale)", &bench(3.0, || {
+        let ds = generate(&DataConfig::default()).unwrap();
+        std::hint::black_box(ds.total_records());
+    }));
+
+    section("netsim gossip round (20 nodes, P=1409 payload)");
+    report("channel round (threads)", &bench(3.0, || {
+        let g = Graph::build(&Topology::Ring, 20, &mut Pcg64::seed(0)).unwrap();
+        let (eps, _stats) = decfl::netsim::build(&g, decfl::netsim::LinkModel::default(), 1);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|mut ep| {
+                std::thread::spawn(move || {
+                    let p = std::sync::Arc::new(vec![0.0f32; 1409]);
+                    ep.broadcast(0, decfl::netsim::PayloadKind::Params, &p).unwrap();
+                    ep.gather(0, decfl::netsim::PayloadKind::Params).unwrap().len()
+                })
+            })
+            .collect();
+        for h in handles {
+            std::hint::black_box(h.join().unwrap());
+        }
+    }));
+
+    section("t-SNE (150 points, 42-d)");
+    let ds = generate(&DataConfig::default())?;
+    let mut rows = Vec::new();
+    for i in 0..150 {
+        rows.push(ds.shards[0].row(i).iter().map(|&v| v as f64).collect::<Vec<_>>());
+    }
+    let x = decfl::linalg::Mat::from_rows(&rows);
+    report("tsne 150x42 (100 iters)", &bench(5.0, || {
+        let e = decfl::tsne::tsne(
+            &x,
+            &decfl::tsne::TsneConfig { iterations: 100, perplexity: 20.0, ..Default::default() },
+        )
+        .unwrap();
+        std::hint::black_box(e.data[0]);
+    }));
+    Ok(())
+}

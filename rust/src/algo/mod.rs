@@ -1,0 +1,173 @@
+//! Algorithm-level building blocks shared by both execution drivers.
+//!
+//! The update rules themselves (paper eqs. 2–4) live in the AOT artifacts
+//! (L2 jax, `python/compile/model.py`) and in the bit-mirroring native
+//! backend (`native.rs`).  This module holds what remains above that level:
+//! the paper's learning-rate schedule, the round structure implied by
+//! Algorithm 1 (Q−1 local updates, then one communication update which
+//! itself consumes a gradient), and the flat-vector helpers the drivers use.
+
+pub mod native;
+
+/// The paper's diminishing step size `α_r = α₀ / √r` (§3: α₀ = 0.02).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub alpha0: f64,
+}
+
+impl LrSchedule {
+    pub fn new(alpha0: f64) -> Self {
+        assert!(alpha0 > 0.0, "alpha0 must be positive");
+        LrSchedule { alpha0 }
+    }
+
+    /// Step sizes are 1-indexed; `lr(0)` is clamped to `lr(1)`.
+    pub fn lr(&self, step: usize) -> f32 {
+        (self.alpha0 / (step.max(1) as f64).sqrt()) as f32
+    }
+
+    /// Learning rates for the local phase of communication round `round`
+    /// (1-based): global steps `(round-1)*q + 1 ..= (round-1)*q + count`.
+    pub fn local_lrs(&self, round: usize, q: usize, count: usize) -> Vec<f32> {
+        let base = (round - 1) * q;
+        (1..=count).map(|k| self.lr(base + k)).collect()
+    }
+
+    /// Learning rate for the communication update of round `round`
+    /// (global step `round * q`).
+    pub fn comm_lr(&self, round: usize, q: usize) -> f32 {
+        self.lr(round * q)
+    }
+}
+
+/// Round structure of Algorithm 1 for a given local period Q:
+/// `local_per_round` eq.-4 updates followed by one eq.-2/3 update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub q: usize,
+    /// Q − 1 (0 when Q = 1, i.e. classic DSGD/DSGT).
+    pub local_per_round: usize,
+}
+
+impl RoundPlan {
+    pub fn new(q: usize) -> Self {
+        assert!(q >= 1);
+        RoundPlan { q, local_per_round: q - 1 }
+    }
+
+    /// Total gradient evaluations per communication round.
+    pub fn steps_per_round(&self) -> usize {
+        self.q
+    }
+
+    /// Communication rounds needed to spend `total_steps` local iterations.
+    pub fn rounds_for(&self, total_steps: usize) -> usize {
+        total_steps.div_ceil(self.q)
+    }
+}
+
+// ---- flat f32 vector helpers (the gossip payload math) ----
+
+/// `y += a * x`
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = a*x + b*y`
+pub fn axpby(y: &mut [f32], a: f32, x: &[f32], b: f32) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+pub fn l2_dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Row-mean of a flat row-major `[n x p]` matrix.
+pub fn row_mean(flat: &[f32], n: usize, p: usize) -> Vec<f32> {
+    assert_eq!(flat.len(), n * p);
+    let mut out = vec![0.0f64; p];
+    for i in 0..n {
+        for (acc, &v) in out.iter_mut().zip(&flat[i * p..(i + 1) * p]) {
+            *acc += v as f64;
+        }
+    }
+    out.into_iter().map(|v| (v / n as f64) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_matches_paper() {
+        let s = LrSchedule::new(0.02);
+        assert!((s.lr(1) - 0.02).abs() < 1e-9);
+        assert!((s.lr(100) - 0.002).abs() < 1e-9);
+        assert_eq!(s.lr(0), s.lr(1));
+    }
+
+    #[test]
+    fn local_lrs_cover_round_prefix() {
+        let s = LrSchedule::new(0.02);
+        // round 2, q = 5: local steps are global steps 6..=9, comm step 10
+        let lrs = s.local_lrs(2, 5, 4);
+        assert_eq!(lrs.len(), 4);
+        assert!((lrs[0] - s.lr(6)).abs() < 1e-9);
+        assert!((lrs[3] - s.lr(9)).abs() < 1e-9);
+        assert!((s.comm_lr(2, 5) - s.lr(10)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_plan() {
+        let p = RoundPlan::new(100);
+        assert_eq!(p.local_per_round, 99);
+        assert_eq!(p.steps_per_round(), 100);
+        assert_eq!(p.rounds_for(10_000), 100);
+        assert_eq!(p.rounds_for(10_001), 101);
+        let classic = RoundPlan::new(1);
+        assert_eq!(classic.local_per_round, 0);
+        assert_eq!(classic.rounds_for(500), 500);
+    }
+
+    #[test]
+    fn vector_helpers() {
+        let mut y = vec![1.0f32, 2.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+        axpby(&mut y, 1.0, &[1.0, 1.0], 0.0);
+        assert_eq!(y, vec![1.0, 1.0]);
+        scale(&mut y, 3.0);
+        assert_eq!(y, vec![3.0, 3.0]);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert_eq!(l2_dist_sq(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn row_mean_small() {
+        let flat = [1.0f32, 2.0, 3.0, 5.0];
+        assert_eq!(row_mean(&flat, 2, 2), vec![2.0, 3.5]);
+    }
+}

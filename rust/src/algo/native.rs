@@ -1,0 +1,492 @@
+//! Native (pure-rust) compute backend — the in-process twin of the AOT
+//! artifacts.
+//!
+//! Implements exactly the same functions as `python/compile/model.py`
+//! (flat-parameter shallow MLP, logistic loss, eq. 2/3/4 updates, full-shard
+//! metrics) in plain rust with f64 accumulation.  Three jobs:
+//!
+//! 1. **correctness oracle** — integration tests run the PJRT artifacts and
+//!    this backend on identical inputs and require agreement to f32 noise;
+//! 2. **shape-free sweeps** — the Theorem-1 speedup bench varies N and the
+//!    Q-sweep varies Q, which would otherwise need one AOT artifact set per
+//!    configuration;
+//! 3. **driver property tests** — coordinator invariants are tested without
+//!    artifacts on disk.
+//!
+//! The PJRT path remains the production path; this backend exists so the
+//! system is *testable and sweepable*, mirroring what e.g. a CPU-reference
+//! backend is to a TPU runtime.
+
+use super::{axpy, l2_dist_sq, row_mean};
+
+/// Model dimensions (matches `ModelShapes` minus the artifact-bound fields).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NativeModel {
+    pub d: usize,
+    pub h: usize,
+}
+
+impl NativeModel {
+    pub fn new(d: usize, h: usize) -> Self {
+        assert!(d > 0 && h > 0);
+        NativeModel { d, h }
+    }
+
+    /// Flat parameter count `d*h + h + h + 1`.
+    pub fn p(&self) -> usize {
+        self.d * self.h + 2 * self.h + 1
+    }
+
+    /// He-style init matching a small random start (std 0.2/sqrt(d)).
+    pub fn init(&self, rng: &mut crate::rng::Pcg64) -> Vec<f32> {
+        let std1 = (1.0 / self.d as f64).sqrt();
+        let std2 = (1.0 / self.h as f64).sqrt();
+        let mut theta = vec![0.0f32; self.p()];
+        let (dh, h) = (self.d * self.h, self.h);
+        for v in &mut theta[..dh] {
+            *v = (rng.normal() * std1) as f32;
+        }
+        // b1 zeros
+        for v in &mut theta[dh + h..dh + 2 * h] {
+            *v = (rng.normal() * std2) as f32;
+        }
+        // b2 zero
+        theta
+    }
+
+    /// Forward pass: logits for each of the `n` rows of `x` (row-major n×d).
+    pub fn logits(&self, theta: &[f32], x: &[f32]) -> Vec<f64> {
+        let (d, h) = (self.d, self.h);
+        assert_eq!(theta.len(), self.p());
+        let n = x.len() / d;
+        assert_eq!(x.len(), n * d);
+        let w1 = &theta[..d * h];
+        let b1 = &theta[d * h..d * h + h];
+        let w2 = &theta[d * h + h..d * h + 2 * h];
+        let b2 = theta[d * h + 2 * h] as f64;
+        let mut out = Vec::with_capacity(n);
+        let mut hid = vec![0.0f64; h];
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            for (k, hk) in hid.iter_mut().enumerate() {
+                let mut acc = b1[k] as f64;
+                // w1 is [d, h] row-major: w1[j*h + k]
+                for (j, &xj) in row.iter().enumerate() {
+                    acc += xj as f64 * w1[j * h + k] as f64;
+                }
+                *hk = acc.tanh();
+            }
+            let mut z = b2;
+            for (k, &hk) in hid.iter().enumerate() {
+                z += hk * w2[k] as f64;
+            }
+            out.push(z);
+        }
+        out
+    }
+
+    /// Mean logistic loss (labels in {0,1}) and flat gradient — the
+    /// `grad_step` artifact's twin.
+    pub fn loss_and_grad(&self, theta: &[f32], x: &[f32], y: &[f32]) -> (f64, Vec<f32>) {
+        let (d, h) = (self.d, self.h);
+        let n = y.len();
+        assert_eq!(x.len(), n * d);
+        let w1 = &theta[..d * h];
+        let b1 = &theta[d * h..d * h + h];
+        let w2 = &theta[d * h + h..d * h + 2 * h];
+        let b2 = theta[d * h + 2 * h] as f64;
+
+        let mut g = vec![0.0f64; self.p()];
+        let mut loss = 0.0f64;
+        let mut hid = vec![0.0f64; h];
+        let inv_n = 1.0 / n as f64;
+
+        for i in 0..n {
+            let row = &x[i * d..(i + 1) * d];
+            for (k, hk) in hid.iter_mut().enumerate() {
+                let mut acc = b1[k] as f64;
+                for (j, &xj) in row.iter().enumerate() {
+                    acc += xj as f64 * w1[j * h + k] as f64;
+                }
+                *hk = acc.tanh();
+            }
+            let mut z = b2;
+            for (k, &hk) in hid.iter().enumerate() {
+                z += hk * w2[k] as f64;
+            }
+            let yi = y[i] as f64;
+            // loss: log(1 + e^z) - y z, numerically stable
+            loss += if z > 0.0 { z + (-z).exp().ln_1p() } else { z.exp().ln_1p() } - yi * z;
+            // dL/dz = sigmoid(z) - y
+            let dz = 1.0 / (1.0 + (-z).exp()) - yi;
+            let gz = dz * inv_n;
+            // grads
+            g[d * h + 2 * h] += gz; // b2
+            for k in 0..h {
+                g[d * h + h + k] += gz * hid[k]; // w2
+                let dh = gz * w2[k] as f64 * (1.0 - hid[k] * hid[k]);
+                g[d * h + k] += dh; // b1
+                for (j, &xj) in row.iter().enumerate() {
+                    g[j * h + k] += dh * xj as f64;
+                }
+            }
+        }
+        (loss * inv_n, g.into_iter().map(|v| v as f32).collect())
+    }
+
+    /// `count` eq.-4 SGD steps on pre-sampled batches — `local_steps` twin.
+    /// `bx` is `[count, m, d]`, `by` `[count, m]`, `lrs` `[count]`.
+    pub fn local_steps(
+        &self,
+        theta: &mut Vec<f32>,
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+    ) -> Vec<f64> {
+        let count = lrs.len();
+        if count == 0 {
+            return Vec::new();
+        }
+        let m = by.len() / count;
+        assert_eq!(bx.len(), count * m * self.d);
+        let mut losses = Vec::with_capacity(count);
+        for qi in 0..count {
+            let x = &bx[qi * m * self.d..(qi + 1) * m * self.d];
+            let yb = &by[qi * m..(qi + 1) * m];
+            let (loss, grad) = self.loss_and_grad(theta, x, yb);
+            axpy(theta, -lrs[qi], &grad);
+            losses.push(loss);
+        }
+        losses
+    }
+
+    /// `Σ_j w_j θ_j` over stacked `thetas` (n×p) — `combine` twin.
+    pub fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Vec<f32> {
+        let p = self.p();
+        let n = wrow.len();
+        assert_eq!(thetas.len(), n * p);
+        let mut out = vec![0.0f64; p];
+        for (j, &wj) in wrow.iter().enumerate() {
+            if wj == 0.0 {
+                continue;
+            }
+            for (o, &t) in out.iter_mut().zip(&thetas[j * p..(j + 1) * p]) {
+                *o += wj as f64 * t as f64;
+            }
+        }
+        out.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Whole-network eq. 2 — `dsgd_round` twin.
+    /// Returns (Θ′ `[n,p]`, per-node losses).
+    pub fn dsgd_round(
+        &self,
+        w: &[f32],
+        theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        n: usize,
+        m: usize,
+    ) -> (Vec<f32>, Vec<f64>) {
+        let p = self.p();
+        let mut out = vec![0.0f32; n * p];
+        let mut losses = Vec::with_capacity(n);
+        for i in 0..n {
+            let mixed = self.combine(&w[i * n..(i + 1) * n], theta);
+            let (loss, grad) = self.loss_and_grad(
+                &theta[i * p..(i + 1) * p],
+                &bx[i * m * self.d..(i + 1) * m * self.d],
+                &by[i * m..(i + 1) * m],
+            );
+            let dst = &mut out[i * p..(i + 1) * p];
+            dst.copy_from_slice(&mixed);
+            axpy(dst, -lr, &grad);
+            losses.push(loss);
+        }
+        (out, losses)
+    }
+
+    /// Whole-network eq. 3 — `dsgt_round` twin.
+    /// Returns (Θ′, Y′, G′, losses).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgt_round(
+        &self,
+        w: &[f32],
+        theta: &[f32],
+        y_tr: &[f32],
+        g_old: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        n: usize,
+        m: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>) {
+        let p = self.p();
+        // Θ' = W Θ - lr Y
+        let mut theta_next = vec![0.0f32; n * p];
+        for i in 0..n {
+            let mixed = self.combine(&w[i * n..(i + 1) * n], theta);
+            let dst = &mut theta_next[i * p..(i + 1) * p];
+            dst.copy_from_slice(&mixed);
+            axpy(dst, -lr, &y_tr[i * p..(i + 1) * p]);
+        }
+        // G' = grad(Θ'), Y' = W Y + G' - G
+        let mut g_new = vec![0.0f32; n * p];
+        let mut y_next = vec![0.0f32; n * p];
+        let mut losses = Vec::with_capacity(n);
+        for i in 0..n {
+            let (loss, grad) = self.loss_and_grad(
+                &theta_next[i * p..(i + 1) * p],
+                &bx[i * m * self.d..(i + 1) * m * self.d],
+                &by[i * m..(i + 1) * m],
+            );
+            g_new[i * p..(i + 1) * p].copy_from_slice(&grad);
+            losses.push(loss);
+            let mixed_y = self.combine(&w[i * n..(i + 1) * n], y_tr);
+            let dst = &mut y_next[i * p..(i + 1) * p];
+            dst.copy_from_slice(&mixed_y);
+            axpy(dst, 1.0, &grad);
+            axpy(dst, -1.0, &g_old[i * p..(i + 1) * p]);
+        }
+        (theta_next, y_next, g_new, losses)
+    }
+
+    /// Full-shard metrics — `eval_full` twin:
+    /// (mean loss, accuracy, `||mean grad||²`, consensus).
+    pub fn eval_full(&self, theta: &[f32], shards: &[crate::data::Shard]) -> (f64, f64, f64, f64) {
+        let p = self.p();
+        let n = shards.len();
+        assert_eq!(theta.len(), n * p);
+        let mut mean_grad = vec![0.0f64; p];
+        let mut loss_sum = 0.0;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (i, s) in shards.iter().enumerate() {
+            let th = &theta[i * p..(i + 1) * p];
+            let (loss, grad) = self.loss_and_grad(th, &s.x, &s.y);
+            loss_sum += loss;
+            for (acc, &g) in mean_grad.iter_mut().zip(&grad) {
+                *acc += g as f64;
+            }
+            let zs = self.logits(th, &s.x);
+            for (z, &yv) in zs.iter().zip(&s.y) {
+                if ((*z > 0.0) as u32 as f32) == yv {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let stat: f64 = mean_grad.iter().map(|g| (g / n as f64) * (g / n as f64)).sum();
+        let theta_bar = row_mean(theta, n, p);
+        let cons: f64 = (0..n)
+            .map(|i| l2_dist_sq(&theta[i * p..(i + 1) * p], &theta_bar))
+            .sum::<f64>()
+            / n as f64;
+        (loss_sum / n as f64, correct as f64 / total.max(1) as f64, stat, cons)
+    }
+
+    /// `P(AD|x)` per row — `predict` twin.
+    pub fn predict(&self, theta: &[f32], x: &[f32]) -> Vec<f32> {
+        self.logits(theta, x)
+            .into_iter()
+            .map(|z| (1.0 / (1.0 + (-z).exp())) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil;
+
+    fn model() -> NativeModel {
+        NativeModel::new(6, 4)
+    }
+
+    fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    fn rand_labels(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect()
+    }
+
+    #[test]
+    fn p_matches_formula() {
+        assert_eq!(model().p(), 6 * 4 + 4 + 4 + 1);
+        assert_eq!(NativeModel::new(42, 32).p(), 1409);
+    }
+
+    #[test]
+    fn loss_at_zero_is_log2() {
+        let m = model();
+        let mut rng = Pcg64::seed(0);
+        let x = rand_vec(&mut rng, 10 * m.d, 1.0);
+        let y = rand_labels(&mut rng, 10);
+        let (loss, _) = m.loss_and_grad(&vec![0.0; m.p()], &x, &y);
+        assert!((loss - std::f64::consts::LN_2).abs() < 1e-9, "{loss}");
+    }
+
+    #[test]
+    fn grad_matches_finite_differences_property() {
+        testutil::check("native grad vs fd", 12, 3, |rng| {
+            let m = model();
+            let theta = rand_vec(rng, m.p(), 0.3);
+            let x = rand_vec(rng, 8 * m.d, 1.0);
+            let y = rand_labels(rng, 8);
+            let (_, g) = m.loss_and_grad(&theta, &x, &y);
+            let eps = 1e-3f32;
+            for &idx in &[0usize, m.p() / 2, m.p() - 1] {
+                let mut tp = theta.clone();
+                tp[idx] += eps;
+                let mut tm = theta.clone();
+                tm[idx] -= eps;
+                let (lp, _) = m.loss_and_grad(&tp, &x, &y);
+                let (lm, _) = m.loss_and_grad(&tm, &x, &y);
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                if (g[idx] as f64 - fd).abs() > 1e-3 * (1.0 + fd.abs()) {
+                    return Err(format!("idx {idx}: grad {} vs fd {fd}", g[idx]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sgd_decreases_loss() {
+        let m = model();
+        let mut rng = Pcg64::seed(4);
+        let mut theta = m.init(&mut rng);
+        let x = rand_vec(&mut rng, 50 * m.d, 1.0);
+        let y = rand_labels(&mut rng, 50);
+        let (l0, g) = m.loss_and_grad(&theta, &x, &y);
+        axpy(&mut theta, -0.5, &g);
+        let (l1, _) = m.loss_and_grad(&theta, &x, &y);
+        assert!(l1 < l0, "{l1} !< {l0}");
+    }
+
+    #[test]
+    fn local_steps_match_manual_unroll() {
+        let m = model();
+        let mut rng = Pcg64::seed(5);
+        let theta0 = m.init(&mut rng);
+        let q = 4;
+        let batch = 5;
+        let bx = rand_vec(&mut rng, q * batch * m.d, 1.0);
+        let by = rand_labels(&mut rng, q * batch);
+        let lrs: Vec<f32> = (1..=q).map(|r| 0.02 / (r as f32).sqrt()).collect();
+
+        let mut theta_scan = theta0.clone();
+        let losses = m.local_steps(&mut theta_scan, &bx, &by, &lrs);
+
+        let mut theta_manual = theta0;
+        for qi in 0..q {
+            let x = &bx[qi * batch * m.d..(qi + 1) * batch * m.d];
+            let yb = &by[qi * batch..(qi + 1) * batch];
+            let (loss, g) = m.loss_and_grad(&theta_manual, x, yb);
+            assert!((loss - losses[qi]).abs() < 1e-12);
+            axpy(&mut theta_manual, -lrs[qi], &g);
+        }
+        assert_eq!(theta_scan, theta_manual);
+    }
+
+    #[test]
+    fn combine_uniform_is_mean() {
+        let m = model();
+        let mut rng = Pcg64::seed(6);
+        let n = 5;
+        let thetas = rand_vec(&mut rng, n * m.p(), 0.5);
+        let wrow = vec![1.0 / n as f32; n];
+        let mixed = m.combine(&wrow, &thetas);
+        let mean = row_mean(&thetas, n, m.p());
+        testutil::assert_close(&mixed, &mean, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn dsgt_preserves_tracker_mean_property() {
+        // key GT invariant: mean(Y^{r+1}) = mean(G^{r+1}) when Y^0 = G^0
+        testutil::check("tracker mean", 8, 7, |rng| {
+            let m = model();
+            let n = 4;
+            let batch = 6;
+            let p = m.p();
+            // metropolis ring weights
+            let g = crate::graph::Graph::build(&crate::graph::Topology::Ring, n, rng)
+                .map_err(|e| e.to_string())?;
+            let w = crate::mixing::to_f32(&crate::mixing::build(&g, crate::mixing::Scheme::Metropolis));
+            let theta = rand_vec(rng, n * p, 0.3);
+            let bx0 = rand_vec(rng, n * batch * m.d, 1.0);
+            let by0 = rand_labels(rng, n * batch);
+            // init: G0 = grads at theta, Y0 = G0
+            let mut g0 = vec![0.0f32; n * p];
+            for i in 0..n {
+                let (_, gi) = m.loss_and_grad(
+                    &theta[i * p..(i + 1) * p],
+                    &bx0[i * batch * m.d..(i + 1) * batch * m.d],
+                    &by0[i * batch..(i + 1) * batch],
+                );
+                g0[i * p..(i + 1) * p].copy_from_slice(&gi);
+            }
+            let bx1 = rand_vec(rng, n * batch * m.d, 1.0);
+            let by1 = rand_labels(rng, n * batch);
+            let (_t1, y1, g1, _) =
+                m.dsgt_round(&w, &theta, &g0, &g0, &bx1, &by1, 0.05, n, batch);
+            let my = row_mean(&y1, n, p);
+            let mg = row_mean(&g1, n, p);
+            testutil::assert_close(&my, &mg, 1e-4)
+        });
+    }
+
+    #[test]
+    fn dsgd_round_at_consensus_with_zero_lr_is_noop() {
+        let m = model();
+        let mut rng = Pcg64::seed(8);
+        let n = 3;
+        let batch = 4;
+        let p = m.p();
+        let one = m.init(&mut rng);
+        let mut theta = Vec::new();
+        for _ in 0..n {
+            theta.extend_from_slice(&one);
+        }
+        let g = crate::graph::Graph::build(&crate::graph::Topology::Complete, n, &mut rng).unwrap();
+        let w = crate::mixing::to_f32(&crate::mixing::build(&g, crate::mixing::Scheme::Metropolis));
+        let bx = rand_vec(&mut rng, n * batch * m.d, 1.0);
+        let by = rand_labels(&mut rng, n * batch);
+        let (next, _) = m.dsgd_round(&w, &theta, &bx, &by, 0.0, n, batch);
+        testutil::assert_close(&next, &theta, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn eval_consensus_zero_when_equal() {
+        let m = model();
+        let mut rng = Pcg64::seed(9);
+        let one = m.init(&mut rng);
+        let mut theta = Vec::new();
+        for _ in 0..3 {
+            theta.extend_from_slice(&one);
+        }
+        let shard = crate::data::Shard {
+            n: 6,
+            d: m.d,
+            x: rand_vec(&mut rng, 6 * m.d, 1.0),
+            y: rand_labels(&mut rng, 6),
+        };
+        let (_, acc, _, cons) = m.eval_full(&theta, &[shard.clone(), shard.clone(), shard]);
+        assert!(cons < 1e-12, "{cons}");
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn predict_probabilities() {
+        let m = model();
+        let mut rng = Pcg64::seed(10);
+        let theta = m.init(&mut rng);
+        let x = rand_vec(&mut rng, 7 * m.d, 1.0);
+        let pr = m.predict(&theta, &x);
+        assert_eq!(pr.len(), 7);
+        assert!(pr.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}

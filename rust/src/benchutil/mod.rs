@@ -1,0 +1,119 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`bench`] /
+//! [`bench_n`]: warmup, then timed iterations with mean / p50 / p95 and
+//! throughput reporting.  Deliberately simple — wall-clock medians over
+//! enough iterations are adequate for the size of effects the §Perf log
+//! tracks (2x-100x, not 2%).
+
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.p50_s > 0.0 {
+            1.0 / self.p50_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench_n<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing {
+        iters,
+        mean_s: mean,
+        p50_s: samples[samples.len() / 2],
+        p95_s: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        min_s: samples[0],
+    }
+}
+
+/// Time with auto-chosen iteration count targeting ~`budget_s` seconds.
+pub fn bench<F: FnMut()>(budget_s: f64, mut f: F) -> Timing {
+    // one probe run to size the loop
+    let t = Instant::now();
+    f();
+    let probe = t.elapsed().as_secs_f64().max(1e-7);
+    let iters = ((budget_s / probe) as usize).clamp(3, 10_000);
+    bench_n(1, iters, f)
+}
+
+/// Pretty row: name, median, mean, throughput.
+pub fn report(name: &str, t: &Timing) {
+    println!(
+        "{name:<36} p50 {:>10} mean {:>10} p95 {:>10}  ({:>8.1}/s, n={})",
+        fmt_s(t.p50_s),
+        fmt_s(t.mean_s),
+        fmt_s(t.p95_s),
+        t.per_sec(),
+        t.iters
+    );
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// `DECFL_FULL=1 cargo bench` switches to paper-scale parameters.
+pub fn full_scale() -> bool {
+    std::env::var("DECFL_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_collects_stats() {
+        let mut x = 0u64;
+        let t = bench_n(1, 10, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert_eq!(t.iters, 10);
+        assert!(t.p50_s >= 0.0 && t.mean_s >= 0.0);
+        assert!(t.min_s <= t.p50_s && t.p50_s <= t.p95_s);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_s(2e-9).ends_with("ns"));
+        assert!(fmt_s(2e-5).ends_with("µs"));
+        assert!(fmt_s(2e-2).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,248 @@
+//! Hand-rolled CLI argument parser (no clap in the offline build).
+//!
+//! Grammar: `decfl <subcommand> [--key value]... [--flag]...`
+//! Flags are declared by each subcommand through [`Args::get_*`] accessors;
+//! unknown flags are rejected by [`Args::finish`] so typos fail loudly.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument `{a}` (only one subcommand allowed)");
+            };
+            if key.is_empty() {
+                bail!("bare `--` not supported");
+            }
+            // `--key=value` or `--key value` or boolean `--key`
+            if let Some((k, v)) = key.split_once('=') {
+                if out.options.insert(k.to_string(), v.to_string()).is_some() {
+                    bail!("duplicate option --{k}");
+                }
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = it.next().unwrap();
+                if out.options.insert(key.to_string(), v).is_some() {
+                    bail!("duplicate option --{key}");
+                }
+            } else {
+                out.flags.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.mark(key);
+        self.options
+            .get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} expects an integer, got `{v}`")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.mark(key);
+        self.options
+            .get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} expects an integer, got `{v}`")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.mark(key);
+        self.options
+            .get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} expects a number, got `{v}`")))
+            .transpose()
+    }
+
+    /// Boolean flag presence (`--verbose`).
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option (`--qs 1,10,100`).
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse::<usize>().with_context(|| format!("--{key}: bad entry `{p}`")))
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        self.mark(key);
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse::<f64>().with_context(|| format!("--{key}: bad entry `{p}`")))
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    /// Error on any option/flag that no accessor ever looked at.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        let mut unknown: Vec<&str> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.iter().any(|s| s == *k))
+            .map(String::as_str)
+            .collect();
+        unknown.dedup();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {}", unknown.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", "));
+        }
+        Ok(())
+    }
+}
+
+/// Apply shared experiment-config overrides that most subcommands accept.
+pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentConfig) -> Result<()> {
+    if let Some(path) = args.get_str("config") {
+        *cfg = crate::config::ExperimentConfig::from_file(std::path::Path::new(path))?;
+    }
+    if let Some(v) = args.get_str("algo") {
+        cfg.algo = crate::config::AlgoKind::parse(v)?;
+    }
+    if let Some(v) = args.get_str("mode") {
+        cfg.mode = crate::config::Mode::parse(v)?;
+    }
+    if let Some(v) = args.get_str("backend") {
+        cfg.backend = crate::config::Backend::parse(v)?;
+    }
+    if let Some(v) = args.get_usize("steps")? {
+        cfg.total_steps = v;
+    }
+    if let Some(v) = args.get_usize("q")? {
+        cfg.q = v;
+    }
+    if let Some(v) = args.get_f64("alpha0")? {
+        cfg.alpha0 = v;
+    }
+    if let Some(v) = args.get_str("topology") {
+        cfg.topology = v.to_string();
+    }
+    if let Some(v) = args.get_str("mixing") {
+        cfg.mixing = v.to_string();
+    }
+    if let Some(v) = args.get_f64("heterogeneity")? {
+        cfg.heterogeneity = v;
+    }
+    if let Some(v) = args.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_str("artifacts") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    if let Some(v) = args.get_str("out") {
+        cfg.out = Some(v.to_string());
+    }
+    if let Some(v) = args.get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--algo", "fd-dsgt", "--steps", "1000", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_str("algo"), Some("fd-dsgt"));
+        assert_eq!(a.get_usize("steps").unwrap(), Some(1000));
+        assert!(a.has_flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["train", "--q=50", "--alpha0=0.05"]);
+        assert_eq!(a.get_usize("q").unwrap(), Some(50));
+        assert_eq!(a.get_f64("alpha0").unwrap(), Some(0.05));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["sweep", "--qs", "1,10,100", "--hets", "0.0, 0.5, 1.0"]);
+        assert_eq!(a.get_usize_list("qs").unwrap(), Some(vec![1, 10, 100]));
+        assert_eq!(a.get_f64_list("hets").unwrap(), Some(vec![0.0, 0.5, 1.0]));
+    }
+
+    #[test]
+    fn unknown_option_rejected_by_finish() {
+        let a = parse(&["train", "--bogus", "1"]);
+        let _ = a.get_str("algo");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        assert!(Args::parse(["--a", "1", "--a", "2"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["x", "--shift", "-1.5"]);
+        assert_eq!(a.get_f64("shift").unwrap(), Some(-1.5));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--steps", "many"]);
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_flag("help"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Experiment configuration: a TOML-subset file format + typed config.
+//!
+//! The offline build has no serde/toml crates, so `toml.rs` implements the
+//! subset the configs need: `[section]` headers, `key = value` with string /
+//! integer / float / boolean values, `#` comments.  CLI flags override file
+//! values; defaults below reproduce the paper's §3 setup exactly
+//! (N=20, m=20, Q=100, α_r = 0.02/√r, d=42).
+
+pub mod toml;
+
+pub use toml::TomlDoc;
+
+use anyhow::{bail, Result};
+
+/// Which optimizer drives training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    /// Classic decentralized SGD (eq. 2 every iteration; Q forced to 1).
+    Dsgd,
+    /// Classic gradient tracking (eq. 3 every iteration; Q forced to 1).
+    Dsgt,
+    /// Federated DSGD: Q local steps (eq. 4) between eq. 2 rounds.
+    FdDsgd,
+    /// Federated DSGT: Q local steps between eq. 3 rounds.
+    FdDsgt,
+    /// Star-network FedAvg baseline (server mean every Q steps).
+    FedAvg,
+    /// Fictitious fusion center: plain SGD on pooled data.
+    Centralized,
+}
+
+impl AlgoKind {
+    pub fn parse(s: &str) -> Result<AlgoKind> {
+        Ok(match s {
+            "dsgd" => AlgoKind::Dsgd,
+            "dsgt" => AlgoKind::Dsgt,
+            "fd-dsgd" | "fddsgd" => AlgoKind::FdDsgd,
+            "fd-dsgt" | "fddsgt" => AlgoKind::FdDsgt,
+            "fedavg" => AlgoKind::FedAvg,
+            "centralized" | "sgd" => AlgoKind::Centralized,
+            other => bail!("unknown algo `{other}` (dsgd|dsgt|fd-dsgd|fd-dsgt|fedavg|centralized)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::Dsgd => "dsgd",
+            AlgoKind::Dsgt => "dsgt",
+            AlgoKind::FdDsgd => "fd-dsgd",
+            AlgoKind::FdDsgt => "fd-dsgt",
+            AlgoKind::FedAvg => "fedavg",
+            AlgoKind::Centralized => "centralized",
+        }
+    }
+
+    /// Does this algorithm use the gradient tracker (2x gossip bytes)?
+    pub fn uses_tracker(&self) -> bool {
+        matches!(self, AlgoKind::Dsgt | AlgoKind::FdDsgt)
+    }
+
+    /// Effective local period: classic variants communicate every step.
+    pub fn effective_q(&self, q: usize) -> usize {
+        match self {
+            AlgoKind::Dsgd | AlgoKind::Dsgt => 1,
+            _ => q.max(1),
+        }
+    }
+}
+
+/// Compute backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifacts through PJRT — the production path.
+    Pjrt,
+    /// Pure-rust twin (`algo::native`) — oracle + shape-free sweeps.
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "pjrt" => Backend::Pjrt,
+            "native" => Backend::Native,
+            other => bail!("unknown backend `{other}` (pjrt|native)"),
+        })
+    }
+}
+
+/// Execution mode for decentralized algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// One OS thread per hospital, gossip through the netsim (fidelity).
+    Actors,
+    /// Whole-network fused rounds, one PJRT call per round (throughput).
+    Fused,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "actors" => Mode::Actors,
+            "fused" => Mode::Fused,
+            other => bail!("unknown mode `{other}` (actors|fused)"),
+        })
+    }
+}
+
+/// Everything an experiment run needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    // -- model / artifact shapes (must match `make artifacts`) --
+    pub n: usize,
+    pub d: usize,
+    pub hidden: usize,
+    pub m: usize,
+    pub q: usize,
+    pub shard: usize,
+    pub artifacts_dir: String,
+
+    // -- algorithm --
+    pub algo: AlgoKind,
+    /// α_r = alpha0 / sqrt(r) (paper: 0.02).
+    pub alpha0: f64,
+    /// Total local iterations T (comm rounds = T / Q for FD variants).
+    pub total_steps: usize,
+    /// Evaluate metrics every this many *communication* rounds.
+    pub eval_every: usize,
+    pub mode: Mode,
+
+    // -- topology / mixing --
+    pub topology: String,
+    pub mixing: String,
+
+    // -- data --
+    pub heterogeneity: f64,
+    pub records_per_hospital: usize,
+    pub ad_prevalence: f64,
+
+    // -- network model --
+    pub latency_s: f64,
+    pub bandwidth_bps: f64,
+    pub drop_prob: f64,
+    /// Modeled per-local-step compute time (drives the simulated clock).
+    pub compute_s_per_step: f64,
+
+    /// Compute backend: PJRT artifacts (production) or native rust (sweeps).
+    pub backend: Backend,
+
+    pub seed: u64,
+    /// Optional JSON metrics dump path.
+    pub out: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            n: 20,
+            d: 42,
+            hidden: 32,
+            m: 20,
+            q: 100,
+            shard: 500,
+            artifacts_dir: "artifacts".into(),
+            algo: AlgoKind::FdDsgt,
+            alpha0: 0.02,
+            total_steps: 10_000,
+            eval_every: 1,
+            mode: Mode::Fused,
+            topology: "knn".into(),
+            mixing: "metropolis".into(),
+            heterogeneity: 0.6,
+            records_per_hospital: 500,
+            ad_prevalence: 0.21,
+            latency_s: 0.010,
+            bandwidth_bps: 12_500_000.0,
+            drop_prob: 0.0,
+            compute_s_per_step: 1e-3,
+            backend: Backend::Pjrt,
+            seed: 7,
+            out: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file, keeping defaults for missing keys.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let doc = TomlDoc::parse_file(path)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_doc(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Overlay values from a parsed document.
+    pub fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_usize("model.n")? { self.n = v; }
+        if let Some(v) = doc.get_usize("model.d")? { self.d = v; }
+        if let Some(v) = doc.get_usize("model.hidden")? { self.hidden = v; }
+        if let Some(v) = doc.get_usize("model.m")? { self.m = v; }
+        if let Some(v) = doc.get_usize("model.q")? { self.q = v; }
+        if let Some(v) = doc.get_usize("model.shard")? { self.shard = v; }
+        if let Some(v) = doc.get_str("model.artifacts_dir") { self.artifacts_dir = v.to_string(); }
+        if let Some(v) = doc.get_str("algo.name") { self.algo = AlgoKind::parse(v)?; }
+        if let Some(v) = doc.get_f64("algo.alpha0")? { self.alpha0 = v; }
+        if let Some(v) = doc.get_usize("algo.total_steps")? { self.total_steps = v; }
+        if let Some(v) = doc.get_usize("algo.eval_every")? { self.eval_every = v; }
+        if let Some(v) = doc.get_str("algo.mode") { self.mode = Mode::parse(v)?; }
+        if let Some(v) = doc.get_str("graph.topology") { self.topology = v.to_string(); }
+        if let Some(v) = doc.get_str("graph.mixing") { self.mixing = v.to_string(); }
+        if let Some(v) = doc.get_f64("data.heterogeneity")? { self.heterogeneity = v; }
+        if let Some(v) = doc.get_usize("data.records_per_hospital")? { self.records_per_hospital = v; }
+        if let Some(v) = doc.get_f64("data.ad_prevalence")? { self.ad_prevalence = v; }
+        if let Some(v) = doc.get_f64("net.latency_s")? { self.latency_s = v; }
+        if let Some(v) = doc.get_f64("net.bandwidth_bps")? { self.bandwidth_bps = v; }
+        if let Some(v) = doc.get_f64("net.drop_prob")? { self.drop_prob = v; }
+        if let Some(v) = doc.get_f64("net.compute_s_per_step")? { self.compute_s_per_step = v; }
+        if let Some(v) = doc.get_str("algo.backend") { self.backend = Backend::parse(v)?; }
+        if let Some(v) = doc.get_usize("run.seed")? { self.seed = v as u64; }
+        if let Some(v) = doc.get_str("run.out") { self.out = Some(v.to_string()); }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.m == 0 || self.total_steps == 0 {
+            bail!("n, m, total_steps must be positive");
+        }
+        if self.alpha0 <= 0.0 {
+            bail!("alpha0 must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.heterogeneity) {
+            bail!("heterogeneity in [0,1]");
+        }
+        if self.q == 0 {
+            bail!("q must be >= 1");
+        }
+        crate::graph::Topology::parse(&self.topology)?;
+        crate::mixing::Scheme::parse(&self.mixing)?;
+        Ok(())
+    }
+
+    /// The paper's learning-rate schedule α_r = α₀ / √r (r is 1-based).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        self.alpha0 / ((step.max(1)) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.n, 20);
+        assert_eq!(c.d, 42);
+        assert_eq!(c.m, 20);
+        assert_eq!(c.q, 100);
+        assert!((c.alpha0 - 0.02).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn lr_schedule() {
+        let c = ExperimentConfig::default();
+        assert!((c.lr_at(1) - 0.02).abs() < 1e-12);
+        assert!((c.lr_at(4) - 0.01).abs() < 1e-12);
+        assert!((c.lr_at(0) - 0.02).abs() < 1e-12); // clamped
+    }
+
+    #[test]
+    fn algo_parse_and_q() {
+        assert_eq!(AlgoKind::parse("fd-dsgt").unwrap(), AlgoKind::FdDsgt);
+        assert_eq!(AlgoKind::Dsgd.effective_q(100), 1);
+        assert_eq!(AlgoKind::FdDsgd.effective_q(100), 100);
+        assert!(AlgoKind::Dsgt.uses_tracker());
+        assert!(!AlgoKind::FdDsgd.uses_tracker());
+        assert!(AlgoKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn file_overlay() {
+        let dir = std::env::temp_dir().join(format!("decfl_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "# fig2 config\n[model]\nq = 50\n[algo]\nname = \"dsgd\"\nalpha0 = 0.05\n[run]\nseed = 99\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.q, 50);
+        assert_eq!(cfg.algo, AlgoKind::Dsgd);
+        assert!((cfg.alpha0 - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.n, 20); // untouched default
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut c = ExperimentConfig::default();
+        c.q = 0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.topology = "bogus".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.alpha0 = -1.0;
+        assert!(c.validate().is_err());
+    }
+}

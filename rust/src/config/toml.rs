@@ -1,0 +1,220 @@
+//! TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//!
+//! Values: double-quoted strings, booleans, integers, floats.  Keys are
+//! exposed flattened as `section.key`.  This covers every config file in the
+//! repo; anything fancier (arrays, tables-of-tables, dates) is rejected
+//! loudly rather than misparsed.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// A parsed document: flattened `section.key` → value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    bail!("line {}: bad section name `{name}`", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+                bail!("line {}: bad key `{key}`", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let parsed = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value for `{full}`", lineno + 1))?;
+            if doc.values.insert(full.clone(), parsed).is_some() {
+                bail!("line {}: duplicate key `{full}`", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Int(i)) if *i >= 0 => Ok(Some(*i as usize)),
+            Some(v) => bail!("`{key}` must be a non-negative integer, got {v:?}"),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Float(x)) => Ok(Some(*x)),
+            Some(TomlValue::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => bail!("`{key}` must be a number, got {v:?}"),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(TomlValue::Bool(b)) => Ok(Some(*b)),
+            Some(v) => bail!("`{key}` must be a boolean, got {v:?}"),
+        }
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("embedded quote (escapes unsupported in this subset)");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // integer first (no dot/exponent), then float
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse `{s}` (strings need double quotes)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment
+top = "level"
+[model]
+n = 20
+alpha = 0.02          # paper lr
+[algo]
+name = "fd-dsgt"
+fused = true
+big = 1_000_000
+neg = -4
+sci = 1e-3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("top"), Some("level"));
+        assert_eq!(doc.get_usize("model.n").unwrap(), Some(20));
+        assert_eq!(doc.get_f64("model.alpha").unwrap(), Some(0.02));
+        assert_eq!(doc.get_str("algo.name"), Some("fd-dsgt"));
+        assert_eq!(doc.get_bool("algo.fused").unwrap(), Some(true));
+        assert_eq!(doc.get_usize("algo.big").unwrap(), Some(1_000_000));
+        assert_eq!(doc.get("algo.neg"), Some(&TomlValue::Int(-4)));
+        assert_eq!(doc.get_f64("algo.sci").unwrap(), Some(1e-3));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.get_usize("a.y").unwrap(), None);
+        assert_eq!(doc.get_str("b.z"), None);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let doc = TomlDoc::parse("[a]\nx = \"str\"\nneg = -2\n").unwrap();
+        assert!(doc.get_usize("a.x").is_err());
+        assert!(doc.get_usize("a.neg").is_err());
+        assert!(doc.get_bool("a.x").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[unclosed\nx=1").is_err());
+        assert!(TomlDoc::parse("just a line").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = unquoted").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("[s]\nk=1\n[s2]\nk = \"x\ny\"").is_err());
+    }
+
+    #[test]
+    fn duplicate_across_sections_ok() {
+        let doc = TomlDoc::parse("[a]\nk = 1\n[b]\nk = 2\n").unwrap();
+        assert_eq!(doc.get_usize("a.k").unwrap(), Some(1));
+        assert_eq!(doc.get_usize("b.k").unwrap(), Some(2));
+    }
+}

@@ -1,0 +1,268 @@
+//! Baseline trainers the paper's intro compares against:
+//! the *fictitious fusion center* (centralized SGD on pooled data) and
+//! star-network FedAvg (McMahan et al., 2017).
+//!
+//! Both reuse the same artifact-level ops, samplers, lr schedule, and metric
+//! shapes as the decentralized drivers, so EXP-A4's comm-cost/quality
+//! comparison is apples-to-apples.
+
+use crate::algo::native::NativeModel;
+use crate::algo::{axpy, LrSchedule, RoundPlan};
+use crate::config::ExperimentConfig;
+use crate::data::{FederatedDataset, Shard};
+use crate::graph::Graph;
+use crate::metrics::{round_metrics, RunLog};
+use crate::netsim::{analytic::Accountant, LinkModel, NetSnapshot};
+use anyhow::Result;
+
+use super::compute::Compute;
+use super::sampler::{init_theta, NodeSampler};
+
+/// Centralized SGD on the pooled cohort — the fusion center the paper argues
+/// is infeasible for patient data.  Zero communication by construction; the
+/// "comm round" axis advances every Q steps so curves align with FD runs.
+pub fn centralized(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+) -> Result<RunLog> {
+    let (d, h, _p) = compute.dims();
+    let model = NativeModel::new(d, h);
+    let pooled = ds.pooled();
+    let sched = LrSchedule::new(cfg.alpha0);
+    let q = cfg.q.max(1);
+    let mut theta = init_theta(cfg.seed, 0, &model);
+    let mut sampler = NodeSampler::new(cfg.seed, 0, cfg.m);
+    let mut bx = vec![0.0f32; cfg.m * d];
+    let mut by = vec![0.0f32; cfg.m];
+    let mut log = RunLog::new("centralized");
+    let started = std::time::Instant::now();
+
+    let eval_shard = |theta: &[f32]| -> (f64, f64, f64, f64) {
+        // single "node" owning everything: consensus ≡ 0
+        let (loss, grad) = model.loss_and_grad(theta, &pooled.x, &pooled.y);
+        let zs = model.logits(theta, &pooled.x);
+        let correct = zs
+            .iter()
+            .zip(&pooled.y)
+            .filter(|(z, &y)| ((**z > 0.0) as u32 as f32) == y)
+            .count();
+        let stat: f64 = grad.iter().map(|&g| (g as f64) * (g as f64)).sum();
+        (loss, correct as f64 / pooled.n as f64, stat, 0.0)
+    };
+
+    log.push(round_metrics(0, 0, eval_shard(&theta), NetSnapshot::default(), 0.0));
+    for step in 1..=cfg.total_steps {
+        sampler.batch(&pooled, &mut bx, &mut by);
+        let (_, grad) = compute.grad_step(&theta, &bx, &by)?;
+        axpy(&mut theta, -sched.lr(step), &grad);
+        if step % (q * cfg.eval_every.max(1)) == 0 || step == cfg.total_steps {
+            log.push(round_metrics(
+                (step / q) as u64,
+                step as u64,
+                eval_shard(&theta),
+                NetSnapshot::default(),
+                started.elapsed().as_secs_f64(),
+            ));
+        }
+    }
+    Ok(log)
+}
+
+/// Star-network FedAvg: every round each client takes Q local steps from the
+/// server parameters, the server averages.  Uses the star graph for comm
+/// accounting (client↑ + server↓ per round).
+pub fn fedavg(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+) -> Result<RunLog> {
+    let n = ds.n_hospitals();
+    let (d, h, p) = compute.dims();
+    let model = NativeModel::new(d, h);
+    let q = cfg.q.max(1);
+    let plan = RoundPlan::new(q);
+    let rounds = plan.rounds_for(cfg.total_steps);
+    let sched = LrSchedule::new(cfg.alpha0);
+
+    // server init = node-0 init (a shared broadcast start, as FedAvg assumes)
+    let mut server = init_theta(cfg.seed, 0, &model);
+    let mut samplers: Vec<NodeSampler> =
+        (0..n).map(|i| NodeSampler::new(cfg.seed, i, cfg.m)).collect();
+    let local = plan.local_per_round;
+    let mut lx = vec![0.0f32; local * cfg.m * d];
+    let mut ly = vec![0.0f32; local * cfg.m];
+    let mut bx = vec![0.0f32; cfg.m * d];
+    let mut by = vec![0.0f32; cfg.m];
+
+    let star = Graph::build(&crate::graph::Topology::Star, n + 1, &mut crate::rng::Pcg64::seed(0))?;
+    let link = LinkModel {
+        latency_s: cfg.latency_s,
+        bandwidth_bps: cfg.bandwidth_bps,
+        drop_prob: 0.0,
+    };
+    let mut acct = Accountant::new(&star, link);
+    let mut log = RunLog::new("fedavg");
+    let started = std::time::Instant::now();
+
+    let stacked_server = |server: &[f32]| {
+        let mut stacked = Vec::with_capacity(n * p);
+        for _ in 0..n {
+            stacked.extend_from_slice(server);
+        }
+        stacked
+    };
+    let eval0 = compute.eval_full(&stacked_server(&server), &ds.shards)?;
+    log.push(round_metrics(0, 0, eval0, acct.snapshot(), 0.0));
+
+    for round in 1..=rounds {
+        let mut mean = vec![0.0f64; p];
+        for i in 0..n {
+            let mut theta = server.clone();
+            if local > 0 {
+                let lrs = sched.local_lrs(round, q, local);
+                samplers[i].batches(&ds.shards[i], local, &mut lx, &mut ly);
+                let (t2, _) = compute.local_steps(&theta, &lx, &ly, &lrs)?;
+                theta = t2;
+            }
+            // final local step of the round (keeps total gradient count = Q)
+            samplers[i].batch(&ds.shards[i], &mut bx, &mut by);
+            let (_, grad) = compute.grad_step(&theta, &bx, &by)?;
+            axpy(&mut theta, -sched.comm_lr(round, q), &grad);
+            for (acc, &t) in mean.iter_mut().zip(&theta) {
+                *acc += t as f64;
+            }
+        }
+        for (s, acc) in server.iter_mut().zip(&mean) {
+            *s = (acc / n as f64) as f32;
+        }
+        acct.local_compute(q as u64, cfg.compute_s_per_step);
+        acct.star_round(n, p);
+
+        if round % cfg.eval_every.max(1) == 0 || round == rounds {
+            let eval = compute.eval_full(&stacked_server(&server), &ds.shards)?;
+            log.push(round_metrics(
+                round as u64,
+                (round * q) as u64,
+                eval,
+                acct.snapshot(),
+                started.elapsed().as_secs_f64(),
+            ));
+        }
+    }
+    Ok(log)
+}
+
+/// Test-set AUC for a trained parameter vector (trapezoidal ROC integral) —
+/// used by examples to report held-out discrimination.
+pub fn auc(compute: &dyn Compute, theta: &[f32], test: &Shard) -> Result<f64> {
+    let probs = compute.predict(theta, &test.x)?;
+    let mut pairs: Vec<(f32, f32)> = probs.iter().copied().zip(test.y.iter().copied()).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // rank-sum (Mann–Whitney) AUC with tie handling by average rank
+    let n_pos = pairs.iter().filter(|(_, y)| *y == 1.0).count();
+    let n_neg = pairs.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return Ok(0.5);
+    }
+    let mut rank_sum = 0.0f64;
+    let mut i = 0usize;
+    while i < pairs.len() {
+        let mut j = i;
+        while j < pairs.len() && pairs[j].0 == pairs[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + j + 1) as f64 / 2.0; // 1-based average rank
+        for k in i..j {
+            if pairs[k].1 == 1.0 {
+                rank_sum += avg_rank;
+            }
+        }
+        i = j;
+    }
+    Ok((rank_sum - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgoKind;
+    use crate::coordinator::compute::NativeCompute;
+    use crate::data::{generate, DataConfig};
+
+    fn setup() -> (ExperimentConfig, NativeCompute, FederatedDataset) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 4;
+        cfg.hidden = 8;
+        cfg.m = 10;
+        cfg.q = 5;
+        cfg.total_steps = 100;
+        cfg.eval_every = 2;
+        cfg.records_per_hospital = 60;
+        let ds = generate(&DataConfig {
+            n_hospitals: 4,
+            records_per_hospital: 60,
+            records_jitter: 0,
+            heterogeneity: 0.4,
+            ..DataConfig::default()
+        })
+        .unwrap();
+        let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+        (cfg, compute, ds)
+    }
+
+    #[test]
+    fn centralized_trains_with_zero_comm() {
+        let (cfg, compute, ds) = setup();
+        let log = centralized(&cfg, &compute, &ds).unwrap();
+        assert!(log.rows.last().unwrap().loss < log.rows.first().unwrap().loss);
+        assert_eq!(log.rows.last().unwrap().bytes, 0);
+        assert_eq!(log.rows.last().unwrap().consensus, 0.0);
+    }
+
+    #[test]
+    fn fedavg_trains_and_pays_star_bytes() {
+        let (mut cfg, compute, ds) = setup();
+        cfg.algo = AlgoKind::FedAvg;
+        let log = fedavg(&cfg, &compute, &ds).unwrap();
+        assert!(log.rows.last().unwrap().loss < log.rows.first().unwrap().loss);
+        let rounds = log.rows.last().unwrap().comm_rounds;
+        let p = compute.dims().2;
+        assert_eq!(log.rows.last().unwrap().bytes, rounds * 2 * 4 * (p * 4) as u64);
+        // consensus identically zero: all clients leave from server params
+        assert_eq!(log.rows.last().unwrap().consensus, 0.0);
+    }
+
+    #[test]
+    fn auc_on_separable_data_is_high() {
+        let (cfg, compute, _) = setup();
+        let _ = cfg;
+        // fabricate a test shard scored perfectly by construction
+        let d = compute.dims().0;
+        let model = NativeModel::new(d, compute.dims().1);
+        let mut rng = crate::rng::Pcg64::seed(0);
+        let theta = model.init(&mut rng);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..50 {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let z = model.logits(&theta, &row)[0];
+            x.extend_from_slice(&row);
+            y.push(if z > 0.0 { 1.0 } else { 0.0 });
+            let _ = i;
+        }
+        let test = Shard { n: 50, d, x, y };
+        let a = auc(&compute, &theta, &test).unwrap();
+        assert!(a > 0.99, "auc {a}");
+    }
+
+    #[test]
+    fn auc_of_random_scores_near_half() {
+        let (_, compute, ds) = setup();
+        let model = NativeModel::new(compute.dims().0, compute.dims().1);
+        // θ = 0 → all probabilities 0.5 → ties → AUC 0.5 exactly
+        let theta = vec![0.0f32; model.p()];
+        let a = auc(&compute, &theta, &ds.test).unwrap();
+        assert!((a - 0.5).abs() < 1e-9, "auc {a}");
+    }
+}

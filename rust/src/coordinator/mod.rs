@@ -1,0 +1,181 @@
+//! L3 coordinator: wires config → data → graph → mixing → driver.
+//!
+//! [`run`] is the single entry point the CLI, examples, and benches use: it
+//! builds the federated cohort, the hospital graph and its mixing matrix
+//! (validated against Assumption 1), selects the compute backend (PJRT
+//! artifacts or the native twin) and the execution driver (fused or actors),
+//! dispatches baselines, and returns the metric log.
+
+pub mod actors;
+pub mod baselines;
+pub mod compute;
+pub mod fused;
+pub mod sampler;
+
+use crate::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use crate::data::{generate, DataConfig, FederatedDataset};
+use crate::graph::{Graph, Topology};
+use crate::metrics::RunLog;
+use crate::mixing::{self, Scheme};
+use crate::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+
+pub use compute::{Compute, NativeCompute, PjrtCompute};
+
+/// Everything `run` assembled, exposed for examples/benches that need the
+/// pieces (dataset for AUC, graph for reporting, ...).
+pub struct Assembled {
+    pub ds: FederatedDataset,
+    pub graph: Graph,
+    pub w: crate::linalg::Mat,
+    pub spectral_gap: f64,
+}
+
+/// Build dataset + graph + mixing matrix from a config.
+pub fn assemble(cfg: &ExperimentConfig) -> Result<Assembled> {
+    cfg.validate()?;
+    let ds = generate(&DataConfig {
+        n_hospitals: cfg.n,
+        records_per_hospital: cfg.records_per_hospital,
+        records_jitter: cfg.records_per_hospital / 10,
+        ad_prevalence: cfg.ad_prevalence,
+        heterogeneity: cfg.heterogeneity,
+        test_fraction: 0.1,
+        seed: cfg.seed,
+    })?;
+    let topo = Topology::parse(&cfg.topology)?;
+    let mut grng = Pcg64::new(cfg.seed, 0x6EA9);
+    let graph = Graph::build(&topo, cfg.n, &mut grng)?;
+    if !graph.is_connected() {
+        bail!("generated graph is disconnected — Assumption 1 violated");
+    }
+    let w = mixing::build(&graph, Scheme::parse(&cfg.mixing)?);
+    let v = mixing::validate(&w);
+    if !v.holds() {
+        bail!("mixing matrix violates Assumption 1: {v:?}");
+    }
+    Ok(Assembled { ds, graph, w, spectral_gap: v.spectral_gap })
+}
+
+/// Build the configured compute backend (single-threaded handle).
+pub fn make_compute(cfg: &ExperimentConfig) -> Result<Box<dyn Compute>> {
+    match cfg.backend {
+        Backend::Native => Ok(Box::new(NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m))),
+        Backend::Pjrt => {
+            let c = PjrtCompute::load(std::path::Path::new(&cfg.artifacts_dir))
+                .context("loading PJRT artifacts")?;
+            c.engine().check_config(cfg.n, cfg.d, cfg.hidden, cfg.m, cfg.q)?;
+            Ok(Box::new(c))
+        }
+    }
+}
+
+/// Run a full experiment per the config; returns the metric log.
+pub fn run(cfg: &ExperimentConfig) -> Result<RunLog> {
+    let asm = assemble(cfg)?;
+    run_on(cfg, &asm)
+}
+
+/// Run on pre-assembled pieces (benches reuse one dataset across algos).
+pub fn run_on(cfg: &ExperimentConfig, asm: &Assembled) -> Result<RunLog> {
+    let eval_compute = make_compute(cfg)?;
+    match cfg.algo {
+        AlgoKind::Centralized => baselines::centralized(cfg, eval_compute.as_ref(), &asm.ds),
+        AlgoKind::FedAvg => baselines::fedavg(cfg, eval_compute.as_ref(), &asm.ds),
+        _ => match cfg.mode {
+            Mode::Fused => fused::train(cfg, eval_compute.as_ref(), &asm.ds, &asm.graph, &asm.w),
+            Mode::Actors => {
+                let factory = |_node: usize| make_compute(cfg);
+                actors::train(cfg, &factory, eval_compute.as_ref(), &asm.ds, &asm.graph, &asm.w)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.n = 5;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 4;
+        cfg.total_steps = 40;
+        cfg.eval_every = 5;
+        cfg.records_per_hospital = 60;
+        cfg
+    }
+
+    #[test]
+    fn assemble_validates_assumption_1() {
+        let asm = assemble(&native_cfg()).unwrap();
+        assert_eq!(asm.ds.n_hospitals(), 5);
+        assert!(asm.spectral_gap > 0.0);
+        assert!(asm.graph.is_connected());
+    }
+
+    #[test]
+    fn run_every_algorithm_native() {
+        for algo in [
+            AlgoKind::Dsgd,
+            AlgoKind::Dsgt,
+            AlgoKind::FdDsgd,
+            AlgoKind::FdDsgt,
+            AlgoKind::FedAvg,
+            AlgoKind::Centralized,
+        ] {
+            let mut cfg = native_cfg();
+            cfg.algo = algo;
+            let log = run(&cfg).unwrap();
+            assert!(!log.rows.is_empty(), "{algo:?}");
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last < first, "{algo:?}: loss {first} -> {last}");
+            assert!(last.is_finite());
+        }
+    }
+
+    #[test]
+    fn run_actor_mode_native() {
+        let mut cfg = native_cfg();
+        cfg.mode = Mode::Actors;
+        cfg.algo = AlgoKind::FdDsgt;
+        let log = run(&cfg).unwrap();
+        assert!(log.rows.last().unwrap().bytes > 0);
+    }
+
+    #[test]
+    fn fd_beats_classic_per_comm_round_native() {
+        // the paper's headline: FD variants reach low loss in far fewer
+        // communication rounds
+        let mut fd = native_cfg();
+        fd.algo = AlgoKind::FdDsgt;
+        fd.q = 10;
+        fd.total_steps = 400;
+        fd.eval_every = 1;
+        let asm = assemble(&fd).unwrap();
+        let log_fd = run_on(&fd, &asm).unwrap();
+
+        let mut classic = fd.clone();
+        classic.algo = AlgoKind::Dsgt;
+        let log_classic = run_on(&classic, &asm).unwrap();
+
+        // at equal comm rounds (40 for FD = all its rounds), FD is further along
+        let fd_final = log_fd.rows.last().unwrap();
+        let classic_at_same_rounds = log_classic
+            .rows
+            .iter()
+            .filter(|r| r.comm_rounds <= fd_final.comm_rounds)
+            .next_back()
+            .unwrap();
+        assert!(
+            fd_final.loss < classic_at_same_rounds.loss,
+            "fd {} vs classic {}",
+            fd_final.loss,
+            classic_at_same_rounds.loss
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! The 42-feature EHR schema (paper §3: "problem dimension of 42").
+//!
+//! Feature families mirror what an AD/MCI cohort extract from claims + EHR
+//! typically carries: demographics, vitals, laboratory panels, comorbidity
+//! flags, medication exposure, and cognition/utilization scores.  Each
+//! feature declares its raw distribution and the fixed standardization
+//! parameters; sampling emits *standardized* values directly (raw value
+//! drawn, then `(v - mean)/std`), with the per-hospital site shift added in
+//! standardized units.  `ad_weight` is the feature's loading in the teacher's
+//! clinical linear risk term (positive = pushes toward AD).
+
+use crate::rng::Pcg64;
+
+/// Number of features — the paper's problem dimension.
+pub const N_FEATURES: usize = 42;
+
+/// Raw distribution family of a feature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FeatureKind {
+    /// Gaussian with (mean, std), truncated to [lo, hi].
+    Continuous { mean: f64, std: f64, lo: f64, hi: f64 },
+    /// Bernoulli(p) flag.
+    Binary { p: f64 },
+    /// Poisson-ish non-negative count, approximated by a truncated Gaussian
+    /// with std = sqrt(mean) (adequate for the simulator's purposes).
+    Count { mean: f64, max: f64 },
+}
+
+/// One feature's spec.
+#[derive(Clone, Copy, Debug)]
+pub struct FeatureSpec {
+    pub name: &'static str,
+    pub kind: FeatureKind,
+    /// Teacher loading (standardized units).
+    pub ad_weight: f64,
+}
+
+impl FeatureSpec {
+    /// (mean, std) used for standardization — fixed, site-independent.
+    fn moments(&self) -> (f64, f64) {
+        match self.kind {
+            FeatureKind::Continuous { mean, std, .. } => (mean, std),
+            FeatureKind::Binary { p } => (p, (p * (1.0 - p)).sqrt().max(1e-6)),
+            FeatureKind::Count { mean, .. } => (mean, mean.sqrt().max(1e-6)),
+        }
+    }
+
+    /// Draw one standardized value with a site shift (standardized units).
+    ///
+    /// Binary flags shift in probability space (logit shift) so they stay in
+    /// {0,1}; continuous/count features shift their mean.
+    pub fn sample_standardized(&self, rng: &mut Pcg64, site_shift: f64) -> f64 {
+        let (mean, std) = self.moments();
+        match self.kind {
+            FeatureKind::Continuous { lo, hi, .. } => {
+                let raw = rng.normal_ms(mean + site_shift * std, std).clamp(lo, hi);
+                (raw - mean) / std
+            }
+            FeatureKind::Binary { p } => {
+                // logit-shift the prevalence by the site effect
+                let logit = (p / (1.0 - p)).ln() + site_shift;
+                let p_site = 1.0 / (1.0 + (-logit).exp());
+                let v = if rng.bernoulli(p_site) { 1.0 } else { 0.0 };
+                (v - mean) / std
+            }
+            FeatureKind::Count { max, .. } => {
+                let raw = rng.normal_ms(mean + site_shift * std, std).clamp(0.0, max);
+                (raw - mean) / std
+            }
+        }
+    }
+}
+
+/// The full 42-feature schema.
+pub fn ehr_schema() -> &'static [FeatureSpec] {
+    use FeatureKind::*;
+    const S: [FeatureSpec; N_FEATURES] = [
+        // --- demographics (6) ---
+        FeatureSpec { name: "age", kind: Continuous { mean: 74.0, std: 7.5, lo: 50.0, hi: 95.0 }, ad_weight: 0.55 },
+        FeatureSpec { name: "sex_female", kind: Binary { p: 0.58 }, ad_weight: 0.10 },
+        FeatureSpec { name: "race_white", kind: Binary { p: 0.72 }, ad_weight: 0.0 },
+        FeatureSpec { name: "race_black", kind: Binary { p: 0.14 }, ad_weight: 0.05 },
+        FeatureSpec { name: "race_other", kind: Binary { p: 0.14 }, ad_weight: 0.0 },
+        FeatureSpec { name: "years_education", kind: Continuous { mean: 13.0, std: 3.0, lo: 0.0, hi: 22.0 }, ad_weight: -0.25 },
+        // --- vitals (5) ---
+        FeatureSpec { name: "bmi", kind: Continuous { mean: 27.0, std: 4.5, lo: 14.0, hi: 50.0 }, ad_weight: -0.10 },
+        FeatureSpec { name: "systolic_bp", kind: Continuous { mean: 132.0, std: 15.0, lo: 85.0, hi: 200.0 }, ad_weight: 0.08 },
+        FeatureSpec { name: "diastolic_bp", kind: Continuous { mean: 76.0, std: 10.0, lo: 45.0, hi: 120.0 }, ad_weight: 0.02 },
+        FeatureSpec { name: "heart_rate", kind: Continuous { mean: 72.0, std: 11.0, lo: 40.0, hi: 140.0 }, ad_weight: 0.0 },
+        FeatureSpec { name: "weight_kg", kind: Continuous { mean: 75.0, std: 14.0, lo: 35.0, hi: 160.0 }, ad_weight: -0.06 },
+        // --- labs (10) ---
+        FeatureSpec { name: "glucose", kind: Continuous { mean: 104.0, std: 22.0, lo: 55.0, hi: 300.0 }, ad_weight: 0.06 },
+        FeatureSpec { name: "hba1c", kind: Continuous { mean: 6.0, std: 0.9, lo: 4.0, hi: 13.0 }, ad_weight: 0.08 },
+        FeatureSpec { name: "ldl", kind: Continuous { mean: 112.0, std: 30.0, lo: 30.0, hi: 250.0 }, ad_weight: 0.04 },
+        FeatureSpec { name: "hdl", kind: Continuous { mean: 54.0, std: 14.0, lo: 15.0, hi: 110.0 }, ad_weight: -0.05 },
+        FeatureSpec { name: "triglycerides", kind: Continuous { mean: 140.0, std: 60.0, lo: 30.0, hi: 500.0 }, ad_weight: 0.02 },
+        FeatureSpec { name: "creatinine", kind: Continuous { mean: 1.0, std: 0.3, lo: 0.3, hi: 4.0 }, ad_weight: 0.03 },
+        FeatureSpec { name: "egfr", kind: Continuous { mean: 72.0, std: 18.0, lo: 10.0, hi: 120.0 }, ad_weight: -0.04 },
+        FeatureSpec { name: "vitamin_b12", kind: Continuous { mean: 480.0, std: 170.0, lo: 100.0, hi: 1200.0 }, ad_weight: -0.08 },
+        FeatureSpec { name: "tsh", kind: Continuous { mean: 2.1, std: 1.1, lo: 0.1, hi: 10.0 }, ad_weight: 0.02 },
+        FeatureSpec { name: "crp", kind: Continuous { mean: 3.0, std: 2.5, lo: 0.0, hi: 25.0 }, ad_weight: 0.07 },
+        // --- comorbidity flags (10) ---
+        FeatureSpec { name: "hypertension", kind: Binary { p: 0.62 }, ad_weight: 0.10 },
+        FeatureSpec { name: "diabetes", kind: Binary { p: 0.28 }, ad_weight: 0.12 },
+        FeatureSpec { name: "stroke_history", kind: Binary { p: 0.09 }, ad_weight: 0.22 },
+        FeatureSpec { name: "depression", kind: Binary { p: 0.31 }, ad_weight: 0.18 },
+        FeatureSpec { name: "anxiety", kind: Binary { p: 0.22 }, ad_weight: 0.08 },
+        FeatureSpec { name: "ckd", kind: Binary { p: 0.15 }, ad_weight: 0.06 },
+        FeatureSpec { name: "copd", kind: Binary { p: 0.12 }, ad_weight: 0.03 },
+        FeatureSpec { name: "cad", kind: Binary { p: 0.21 }, ad_weight: 0.07 },
+        FeatureSpec { name: "afib", kind: Binary { p: 0.11 }, ad_weight: 0.09 },
+        FeatureSpec { name: "hyperlipidemia", kind: Binary { p: 0.55 }, ad_weight: 0.02 },
+        // --- medication exposure (6) ---
+        FeatureSpec { name: "n_active_meds", kind: Count { mean: 7.0, max: 30.0 }, ad_weight: 0.12 },
+        FeatureSpec { name: "rx_donepezil", kind: Binary { p: 0.18 }, ad_weight: 0.45 },
+        FeatureSpec { name: "rx_memantine", kind: Binary { p: 0.08 }, ad_weight: 0.40 },
+        FeatureSpec { name: "rx_antidepressant", kind: Binary { p: 0.26 }, ad_weight: 0.10 },
+        FeatureSpec { name: "rx_antihypertensive", kind: Binary { p: 0.55 }, ad_weight: 0.04 },
+        FeatureSpec { name: "rx_statin", kind: Binary { p: 0.48 }, ad_weight: 0.00 },
+        // --- cognition / utilization (5) ---
+        FeatureSpec { name: "cognitive_score", kind: Continuous { mean: 24.0, std: 4.0, lo: 0.0, hi: 30.0 }, ad_weight: -0.65 },
+        FeatureSpec { name: "outpatient_visits_yr", kind: Count { mean: 9.0, max: 60.0 }, ad_weight: 0.08 },
+        FeatureSpec { name: "inpatient_days_yr", kind: Count { mean: 1.5, max: 40.0 }, ad_weight: 0.12 },
+        FeatureSpec { name: "er_visits_yr", kind: Count { mean: 0.8, max: 15.0 }, ad_weight: 0.10 },
+        FeatureSpec { name: "years_since_mci_dx", kind: Continuous { mean: 2.5, std: 1.6, lo: 0.0, hi: 12.0 }, ad_weight: 0.30 },
+    ];
+    &S
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{mean, variance};
+
+    #[test]
+    fn schema_has_42_features() {
+        assert_eq!(ehr_schema().len(), N_FEATURES);
+        assert_eq!(N_FEATURES, 42);
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<&str> = ehr_schema().iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), N_FEATURES);
+    }
+
+    #[test]
+    fn standardized_samples_near_zero_mean_unit_var() {
+        let mut rng = Pcg64::seed(0);
+        for spec in ehr_schema() {
+            let xs: Vec<f64> = (0..20_000).map(|_| spec.sample_standardized(&mut rng, 0.0)).collect();
+            let m = mean(&xs);
+            let v = variance(&xs);
+            // truncation biases some features slightly; generous bounds
+            assert!(m.abs() < 0.15, "{}: mean {m}", spec.name);
+            assert!((0.5..1.5).contains(&v), "{}: var {v}", spec.name);
+        }
+    }
+
+    #[test]
+    fn site_shift_moves_continuous_mean() {
+        let mut rng = Pcg64::seed(1);
+        let spec = &ehr_schema()[0]; // age
+        let base: f64 = (0..5000).map(|_| spec.sample_standardized(&mut rng, 0.0)).sum::<f64>() / 5000.0;
+        let shifted: f64 = (0..5000).map(|_| spec.sample_standardized(&mut rng, 1.0)).sum::<f64>() / 5000.0;
+        assert!(shifted - base > 0.6, "base {base} shifted {shifted}");
+    }
+
+    #[test]
+    fn site_shift_moves_binary_prevalence() {
+        let mut rng = Pcg64::seed(2);
+        let spec = ehr_schema().iter().find(|s| s.name == "diabetes").unwrap();
+        let (mean_p, std_p) = match spec.kind {
+            FeatureKind::Binary { p } => (p, (p * (1.0 - p)).sqrt()),
+            _ => unreachable!(),
+        };
+        let count_ones = |rng: &mut Pcg64, shift: f64| -> f64 {
+            (0..5000)
+                .filter(|_| {
+                    let v = spec.sample_standardized(rng, shift);
+                    // destandardize: v*std + mean ≈ 1.0?
+                    (v * std_p + mean_p) > 0.5
+                })
+                .count() as f64
+                / 5000.0
+        };
+        let base = count_ones(&mut rng, 0.0);
+        let up = count_ones(&mut rng, 1.5);
+        assert!(up > base + 0.1, "base {base} up {up}");
+    }
+
+    #[test]
+    fn counts_nonnegative_raw() {
+        let mut rng = Pcg64::seed(3);
+        for spec in ehr_schema() {
+            if let FeatureKind::Count { mean: m, .. } = spec.kind {
+                let std = m.sqrt();
+                for _ in 0..2000 {
+                    let v = spec.sample_standardized(&mut rng, 0.0);
+                    let raw = v * std + m;
+                    assert!(raw >= -1e-9, "{}: raw {raw}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clinical_signs_sane() {
+        // cognition protects, age and AD meds indicate
+        let by_name = |n: &str| ehr_schema().iter().find(|s| s.name == n).unwrap().ad_weight;
+        assert!(by_name("cognitive_score") < 0.0);
+        assert!(by_name("years_education") < 0.0);
+        assert!(by_name("age") > 0.0);
+        assert!(by_name("rx_donepezil") > 0.0);
+    }
+}

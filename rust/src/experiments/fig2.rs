@@ -1,0 +1,211 @@
+//! EXP-F2: the paper's Figure 2 — convergence of DSGD, DSGT, FD-DSGD and
+//! FD-DSGT *with respect to communication rounds* on the heterogeneous
+//! hospital cohort (paper §3: N=20, m=20, Q=100, α_r = 0.02/√r).
+//!
+//! All four algorithms share one dataset, graph and mixing matrix; the FD
+//! variants spend Q local steps per communication round, the classic ones
+//! communicate every step.  The expected *shape* (paper): per communication
+//! round the FD curves drop far faster, and DSGT ends at a smaller
+//! optimality gap than DSGD on non-identical shards.
+
+use crate::config::{AlgoKind, ExperimentConfig};
+use crate::coordinator::{assemble, run_on, Assembled};
+use crate::jsonl::{self, Json};
+use crate::metrics::RunLog;
+use anyhow::Result;
+
+/// The four curves of Fig. 2, in paper order.
+pub const FIG2_ALGOS: [AlgoKind; 4] =
+    [AlgoKind::Dsgd, AlgoKind::Dsgt, AlgoKind::FdDsgd, AlgoKind::FdDsgt];
+
+pub struct Fig2Result {
+    pub logs: Vec<RunLog>,
+    pub spectral_gap: f64,
+}
+
+/// Run the full Fig. 2 comparison.  `cfg.total_steps` bounds the *local
+/// iteration* budget shared by every algorithm, so the classic variants get
+/// the same number of gradient evaluations as the FD ones.
+pub fn run(cfg: &ExperimentConfig) -> Result<Fig2Result> {
+    let asm = assemble(cfg)?;
+    run_with(cfg, &asm)
+}
+
+pub fn run_with(cfg: &ExperimentConfig, asm: &Assembled) -> Result<Fig2Result> {
+    let mut logs = Vec::with_capacity(FIG2_ALGOS.len());
+    for algo in FIG2_ALGOS {
+        let mut c = cfg.clone();
+        c.algo = algo;
+        // classic variants communicate every step: evaluating all of them is
+        // O(total_steps) evals — thin the eval grid to keep runs comparable
+        if algo.effective_q(c.q) == 1 {
+            let fd_rounds = cfg.total_steps.div_ceil(cfg.q.max(1));
+            c.eval_every = (cfg.total_steps / fd_rounds.max(1)).max(1) * cfg.eval_every.max(1);
+        }
+        logs.push(run_on(&c, asm)?);
+    }
+    Ok(Fig2Result { logs, spectral_gap: asm.spectral_gap })
+}
+
+impl Fig2Result {
+    pub fn to_json(&self) -> Json {
+        jsonl::obj(vec![
+            ("spectral_gap", jsonl::num(self.spectral_gap)),
+            ("curves", Json::Arr(self.logs.iter().map(RunLog::to_json).collect())),
+        ])
+    }
+
+    /// Print the series the paper plots, at a readable number of rows.
+    pub fn print_table(&self) {
+        println!("Fig.2 — convergence vs communication rounds (spectral gap {:.4})", self.spectral_gap);
+        println!(
+            "{:<10} {:>11} {:>12} {:>12} {:>14} {:>14} {:>12}",
+            "algo", "comm_rounds", "local_steps", "loss", "stationarity", "consensus", "MBytes"
+        );
+        for log in &self.logs {
+            let pick = pick_rows(&log.rows, 6);
+            for r in pick {
+                println!(
+                    "{:<10} {:>11} {:>12} {:>12.5} {:>14.3e} {:>14.3e} {:>12.2}",
+                    log.algo,
+                    r.comm_rounds,
+                    r.local_steps,
+                    r.loss,
+                    r.stationarity,
+                    r.consensus,
+                    r.bytes as f64 / 1e6
+                );
+            }
+        }
+    }
+
+    /// The paper's qualitative claims, checked numerically.  Returns
+    /// human-readable findings (used by the bench harness and EXPERIMENTS.md).
+    pub fn findings(&self) -> Vec<String> {
+        let by_name = |name: &str| self.logs.iter().find(|l| l.algo == name).unwrap();
+        let dsgd = by_name("dsgd");
+        let dsgt = by_name("dsgt");
+        let fd_dsgd = by_name("fd-dsgd");
+        let fd_dsgt = by_name("fd-dsgt");
+        let mut out = Vec::new();
+
+        // claim 1: at equal comm rounds, FD ≫ classic
+        let budget = fd_dsgt.rows.last().unwrap().comm_rounds;
+        let at = |log: &RunLog, rounds: u64| -> f64 {
+            log.rows
+                .iter()
+                .filter(|r| r.comm_rounds <= rounds)
+                .next_back()
+                .unwrap()
+                .loss
+        };
+        out.push(format!(
+            "at {budget} comm rounds: FD-DSGT loss {:.4} vs DSGT {:.4} (ratio {:.2}x); \
+             FD-DSGD {:.4} vs DSGD {:.4}",
+            at(fd_dsgt, budget),
+            at(dsgt, budget),
+            at(dsgt, budget) / at(fd_dsgt, budget),
+            at(fd_dsgd, budget),
+            at(dsgd, budget),
+        ));
+
+        // claim 2: DSGT beats DSGD on optimality gap (non-identical data)
+        out.push(format!(
+            "final optimality gap: DSGT {:.3e} vs DSGD {:.3e}; FD-DSGT {:.3e} vs FD-DSGD {:.3e}",
+            dsgt.rows.last().unwrap().optimality_gap(),
+            dsgd.rows.last().unwrap().optimality_gap(),
+            fd_dsgt.rows.last().unwrap().optimality_gap(),
+            fd_dsgd.rows.last().unwrap().optimality_gap(),
+        ));
+
+        // claim 3: comm savings in bytes at equal local steps
+        let steps = fd_dsgt.rows.last().unwrap().local_steps;
+        let bytes_at = |log: &RunLog| {
+            log.rows
+                .iter()
+                .filter(|r| r.local_steps <= steps)
+                .next_back()
+                .unwrap()
+                .bytes as f64
+                / 1e6
+        };
+        out.push(format!(
+            "bytes to spend {steps} local steps: DSGT {:.1} MB vs FD-DSGT {:.1} MB \
+             ({:.0}x saving)",
+            bytes_at(dsgt),
+            bytes_at(fd_dsgt),
+            bytes_at(dsgt) / bytes_at(fd_dsgt).max(1e-9),
+        ));
+        out
+    }
+}
+
+fn pick_rows(rows: &[crate::metrics::RoundMetrics], k: usize) -> Vec<&crate::metrics::RoundMetrics> {
+    if rows.len() <= k {
+        return rows.iter().collect();
+    }
+    (0..k)
+        .map(|i| &rows[i * (rows.len() - 1) / (k - 1)])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.n = 5;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 10;
+        cfg.total_steps = 200;
+        cfg.eval_every = 1;
+        cfg.records_per_hospital = 60;
+        cfg.heterogeneity = 0.7;
+        cfg
+    }
+
+    #[test]
+    fn fig2_reproduces_paper_shape() {
+        let res = run(&small_cfg()).unwrap();
+        assert_eq!(res.logs.len(), 4);
+
+        // every curve decreases
+        for log in &res.logs {
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last < first, "{}: {first} -> {last}", log.algo);
+        }
+
+        // paper claim: FD-DSGT beats DSGT at equal comm rounds
+        let find = |n: &str| res.logs.iter().find(|l| l.algo == n).unwrap();
+        let budget = find("fd-dsgt").rows.last().unwrap().comm_rounds;
+        let classic_at = find("dsgt")
+            .rows
+            .iter()
+            .filter(|r| r.comm_rounds <= budget)
+            .next_back()
+            .unwrap()
+            .loss;
+        let fd_final = find("fd-dsgt").rows.last().unwrap().loss;
+        assert!(
+            fd_final < classic_at,
+            "FD-DSGT {fd_final} should beat DSGT {classic_at} at {budget} rounds"
+        );
+
+        // findings render without panicking and mention the budget
+        let f = res.findings();
+        assert_eq!(f.len(), 3);
+        assert!(f[0].contains("comm rounds"));
+    }
+
+    #[test]
+    fn json_dump_has_four_curves() {
+        let res = run(&small_cfg()).unwrap();
+        let j = Json::parse(&res.to_json().to_string()).unwrap();
+        assert_eq!(j.get("curves").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,110 @@
+//! Fruchterman–Reingold force-directed layout (Fig. 1L regeneration).
+//!
+//! Produces 2-d coordinates for the hospital graph that the experiment
+//! harness dumps alongside the DOT export so the paper's left figure can be
+//! re-plotted from the JSON output.
+
+use super::Graph;
+use crate::rng::Pcg64;
+
+/// 2-d node positions in [0, 1]^2.
+pub fn layout(g: &Graph, rng: &mut Pcg64, iterations: usize) -> Vec<(f64, f64)> {
+    let n = g.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![(0.5, 0.5)];
+    }
+    let mut pos: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+    let k = (1.0 / n as f64).sqrt(); // ideal edge length
+    let mut temp = 0.1;
+    let cool = 0.95;
+
+    for _ in 0..iterations {
+        let mut disp = vec![(0.0f64, 0.0f64); n];
+        // repulsive forces between all pairs
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = pos[i].0 - pos[j].0;
+                let dy = pos[i].1 - pos[j].1;
+                let d = (dx * dx + dy * dy).sqrt().max(1e-9);
+                let f = k * k / d;
+                let (ux, uy) = (dx / d, dy / d);
+                disp[i].0 += ux * f;
+                disp[i].1 += uy * f;
+                disp[j].0 -= ux * f;
+                disp[j].1 -= uy * f;
+            }
+        }
+        // attractive forces along edges
+        for (i, j) in g.edges() {
+            let dx = pos[i].0 - pos[j].0;
+            let dy = pos[i].1 - pos[j].1;
+            let d = (dx * dx + dy * dy).sqrt().max(1e-9);
+            let f = d * d / k;
+            let (ux, uy) = (dx / d, dy / d);
+            disp[i].0 -= ux * f;
+            disp[i].1 -= uy * f;
+            disp[j].0 += ux * f;
+            disp[j].1 += uy * f;
+        }
+        // displace, capped by temperature
+        for i in 0..n {
+            let (dx, dy) = disp[i];
+            let d = (dx * dx + dy * dy).sqrt().max(1e-9);
+            let step = d.min(temp);
+            pos[i].0 = (pos[i].0 + dx / d * step).clamp(0.0, 1.0);
+            pos[i].1 = (pos[i].1 + dy / d * step).clamp(0.0, 1.0);
+        }
+        temp *= cool;
+    }
+    pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+
+    #[test]
+    fn layout_in_unit_square() {
+        let mut rng = Pcg64::seed(0);
+        let g = Graph::build(&Topology::RandomGeometric { radius: 0.3 }, 20, &mut rng).unwrap();
+        let pos = layout(&g, &mut rng, 100);
+        assert_eq!(pos.len(), 20);
+        for (x, y) in pos {
+            assert!((0.0..=1.0).contains(&x) && (0.0..=1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn layout_separates_nodes() {
+        let mut rng = Pcg64::seed(1);
+        let g = Graph::build(&Topology::Ring, 10, &mut rng).unwrap();
+        let pos = layout(&g, &mut rng, 200);
+        // no two nodes collapsed onto each other
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d = ((pos[i].0 - pos[j].0).powi(2) + (pos[i].1 - pos[j].1).powi(2)).sqrt();
+                assert!(d > 1e-3, "nodes {i},{j} collapsed (d={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn layout_deterministic_given_seed() {
+        let g = Graph::build(&Topology::Ring, 8, &mut Pcg64::seed(2)).unwrap();
+        let a = layout(&g, &mut Pcg64::seed(3), 50);
+        let b = layout(&g, &mut Pcg64::seed(3), 50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn singleton_and_empty() {
+        let g1 = Graph::empty(1);
+        assert_eq!(layout(&g1, &mut Pcg64::seed(0), 10), vec![(0.5, 0.5)]);
+        let g0 = Graph::empty(0);
+        assert!(layout(&g0, &mut Pcg64::seed(0), 10).is_empty());
+    }
+}

@@ -1,0 +1,574 @@
+//! Hospital-network graphs: generators, connectivity, spectra, layout.
+//!
+//! The paper's setting is an undirected, connected graph of 20 hospitals
+//! (Fig. 1 left).  This module provides the topology generators used across
+//! the experiments (the paper's RGG-looking network plus the standard
+//! ablation families), connectivity validation (Assumption 1 requires a
+//! connected graph), spectral statistics, and a force-directed layout +
+//! DOT export for regenerating Fig. 1L.
+
+pub mod layout;
+
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// An undirected simple graph over nodes `0..n`.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    /// Sorted neighbor lists.
+    adj: Vec<Vec<usize>>,
+}
+
+/// Topology families available in configs and CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// Cycle over n nodes.
+    Ring,
+    /// Path (worst-case diameter).
+    Path,
+    /// 2-d torus `rows x cols` (n = rows * cols).
+    Torus { rows: usize, cols: usize },
+    /// Every pair connected.
+    Complete,
+    /// Hub-and-spoke (the *star network* of classic federated learning).
+    Star,
+    /// Erdős–Rényi G(n, p), resampled until connected.
+    ErdosRenyi { p: f64 },
+    /// Random geometric graph on the unit square, radius grown until
+    /// connected — visually matches the paper's Fig. 1L hospital network.
+    RandomGeometric { radius: f64 },
+    /// Watts–Strogatz small world: ring with k nearest neighbors, rewired
+    /// with probability beta.
+    SmallWorld { k: usize, beta: f64 },
+    /// Geometric k-nearest-neighbor graph: random points on the unit square,
+    /// each joined to its k nearest; components stitched by their closest
+    /// inter-component pair.  Sparse (mean degree ≈ k..2k) and connected —
+    /// the closest match to the paper's Fig. 1L hospital network.
+    KNearest { k: usize },
+}
+
+impl Topology {
+    pub fn parse(name: &str) -> Result<Topology> {
+        Ok(match name {
+            "ring" => Topology::Ring,
+            "path" => Topology::Path,
+            "complete" => Topology::Complete,
+            "star" => Topology::Star,
+            "torus" => Topology::Torus { rows: 0, cols: 0 }, // sized at build
+            "er" | "erdos-renyi" => Topology::ErdosRenyi { p: 0.25 },
+            "rgg" | "geometric" => Topology::RandomGeometric { radius: 0.25 },
+            "smallworld" | "ws" => Topology::SmallWorld { k: 4, beta: 0.2 },
+            "knn" | "geo" => Topology::KNearest { k: 3 },
+            other => bail!("unknown topology `{other}` (ring|path|torus|complete|star|er|rgg|smallworld|knn)"),
+        })
+    }
+}
+
+impl Graph {
+    pub fn empty(n: usize) -> Self {
+        Graph { n, adj: vec![Vec::new(); n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i].binary_search(&j).is_ok()
+    }
+
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert!(i < self.n && j < self.n && i != j, "bad edge ({i},{j})");
+        if let Err(pos) = self.adj[i].binary_search(&j) {
+            self.adj[i].insert(pos, j);
+        }
+        if let Err(pos) = self.adj[j].binary_search(&i) {
+            self.adj[j].insert(pos, i);
+        }
+    }
+
+    /// Undirected edge list with i < j.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in 0..self.n {
+            for &j in &self.adj[i] {
+                if i < j {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    /// BFS connectivity check (Assumption 1 precondition).
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter via repeated BFS (n is small).
+    pub fn diameter(&self) -> usize {
+        let mut best = 0;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            dist[s] = 0;
+            let mut q = std::collections::VecDeque::from([s]);
+            while let Some(u) = q.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        q.push_back(v);
+                    }
+                }
+            }
+            best = best.max(*dist.iter().filter(|&&d| d != usize::MAX).max().unwrap_or(&0));
+        }
+        best
+    }
+
+    /// 0/1 adjacency matrix.
+    pub fn adjacency(&self) -> Mat {
+        let mut a = Mat::zeros(self.n, self.n);
+        for (i, j) in self.edges() {
+            a[(i, j)] = 1.0;
+            a[(j, i)] = 1.0;
+        }
+        a
+    }
+
+    /// Build a topology. `rng` is used by the random families; deterministic
+    /// families ignore it.
+    pub fn build(topo: &Topology, n: usize, rng: &mut Pcg64) -> Result<Graph> {
+        if n == 0 {
+            bail!("graph needs at least 1 node");
+        }
+        let g = match topo {
+            Topology::Ring => {
+                let mut g = Graph::empty(n);
+                if n > 1 {
+                    for i in 0..n {
+                        g.add_edge(i, (i + 1) % n);
+                    }
+                }
+                g
+            }
+            Topology::Path => {
+                let mut g = Graph::empty(n);
+                for i in 1..n {
+                    g.add_edge(i - 1, i);
+                }
+                g
+            }
+            Topology::Complete => {
+                let mut g = Graph::empty(n);
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        g.add_edge(i, j);
+                    }
+                }
+                g
+            }
+            Topology::Star => {
+                let mut g = Graph::empty(n);
+                for i in 1..n {
+                    g.add_edge(0, i);
+                }
+                g
+            }
+            Topology::Torus { rows, cols } => {
+                let (r, c) = if *rows * *cols == n {
+                    (*rows, *cols)
+                } else {
+                    best_torus_dims(n)?
+                };
+                let mut g = Graph::empty(n);
+                for i in 0..r {
+                    for j in 0..c {
+                        let id = i * c + j;
+                        if c > 1 {
+                            g.add_edge(id, i * c + (j + 1) % c);
+                        }
+                        if r > 1 {
+                            g.add_edge(id, ((i + 1) % r) * c + j);
+                        }
+                    }
+                }
+                g
+            }
+            Topology::ErdosRenyi { p } => {
+                // resample until connected (expected O(1) tries above the threshold)
+                for _ in 0..1000 {
+                    let mut g = Graph::empty(n);
+                    for i in 0..n {
+                        for j in (i + 1)..n {
+                            if rng.bernoulli(*p) {
+                                g.add_edge(i, j);
+                            }
+                        }
+                    }
+                    if g.is_connected() {
+                        return Ok(g);
+                    }
+                }
+                bail!("ErdosRenyi(p={p}) failed to produce a connected graph in 1000 tries");
+            }
+            Topology::RandomGeometric { radius } => {
+                let pts: Vec<(f64, f64)> =
+                    (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+                let mut r = *radius;
+                loop {
+                    let mut g = Graph::empty(n);
+                    for i in 0..n {
+                        for j in (i + 1)..n {
+                            let dx = pts[i].0 - pts[j].0;
+                            let dy = pts[i].1 - pts[j].1;
+                            if (dx * dx + dy * dy).sqrt() <= r {
+                                g.add_edge(i, j);
+                            }
+                        }
+                    }
+                    if g.is_connected() {
+                        return Ok(g);
+                    }
+                    r *= 1.2; // grow radius until connected
+                    if r > 2.0 {
+                        bail!("RGG failed to connect");
+                    }
+                }
+            }
+            Topology::SmallWorld { k, beta } => {
+                let k = (*k).max(2) & !1usize; // even, >= 2
+                if k >= n {
+                    bail!("smallworld k={k} >= n={n}");
+                }
+                let mut g = Graph::empty(n);
+                for i in 0..n {
+                    for off in 1..=(k / 2) {
+                        g.add_edge(i, (i + off) % n);
+                    }
+                }
+                // rewire each ring edge with prob beta
+                for i in 0..n {
+                    for off in 1..=(k / 2) {
+                        let j = (i + off) % n;
+                        if rng.bernoulli(*beta) && g.degree(i) > 1 {
+                            // pick a new endpoint not already adjacent
+                            for _try in 0..16 {
+                                let t = rng.range(0, n);
+                                if t != i && !g.has_edge(i, t) {
+                                    g.remove_edge(i, j);
+                                    g.add_edge(i, t);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                if !g.is_connected() {
+                    // fall back: stitch with a ring to guarantee Assumption 1
+                    for i in 0..n {
+                        g.add_edge(i, (i + 1) % n);
+                    }
+                }
+                g
+            }
+            Topology::KNearest { k } => {
+                let k = (*k).max(1).min(n.saturating_sub(1)).max(1);
+                let pts: Vec<(f64, f64)> =
+                    (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+                let d2 = |a: usize, b: usize| {
+                    let dx = pts[a].0 - pts[b].0;
+                    let dy = pts[a].1 - pts[b].1;
+                    dx * dx + dy * dy
+                };
+                let mut g = Graph::empty(n);
+                for i in 0..n {
+                    let mut others: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+                    others.sort_by(|&a, &b| d2(i, a).partial_cmp(&d2(i, b)).unwrap());
+                    for &j in others.iter().take(k) {
+                        g.add_edge(i, j);
+                    }
+                }
+                // stitch components via their closest inter-component pair
+                while !g.is_connected() && n > 1 {
+                    let comp = g.components();
+                    let mut best: Option<(usize, usize, f64)> = None;
+                    for i in 0..n {
+                        for j in (i + 1)..n {
+                            if comp[i] != comp[j] {
+                                let d = d2(i, j);
+                                if best.map(|(_, _, bd)| d < bd).unwrap_or(true) {
+                                    best = Some((i, j, d));
+                                }
+                            }
+                        }
+                    }
+                    let (i, j, _) = best.expect("disconnected graph must have a cross pair");
+                    g.add_edge(i, j);
+                }
+                g
+            }
+        };
+        Ok(g)
+    }
+
+    /// Connected-component id per node (BFS labeling).
+    pub fn components(&self) -> Vec<usize> {
+        let mut comp = vec![usize::MAX; self.n];
+        let mut next = 0;
+        for s in 0..self.n {
+            if comp[s] != usize::MAX {
+                continue;
+            }
+            let mut q = std::collections::VecDeque::from([s]);
+            comp[s] = next;
+            while let Some(u) = q.pop_front() {
+                for &v in &self.adj[u] {
+                    if comp[v] == usize::MAX {
+                        comp[v] = next;
+                        q.push_back(v);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+
+    fn remove_edge(&mut self, i: usize, j: usize) {
+        if let Ok(pos) = self.adj[i].binary_search(&j) {
+            self.adj[i].remove(pos);
+        }
+        if let Ok(pos) = self.adj[j].binary_search(&i) {
+            self.adj[j].remove(pos);
+        }
+    }
+
+    /// Graphviz DOT export (Fig. 1L artifact).
+    pub fn to_dot(&self, labels: Option<&[String]>) -> String {
+        let mut out = String::from("graph hospitals {\n  node [shape=circle];\n");
+        for i in 0..self.n {
+            let label = labels.map(|l| l[i].as_str()).unwrap_or("");
+            out.push_str(&format!("  n{i} [label=\"{}\"];\n", if label.is_empty() { format!("H{i}") } else { label.to_string() }));
+        }
+        for (i, j) in self.edges() {
+            out.push_str(&format!("  n{i} -- n{j};\n"));
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Most-square factorization of n for the torus.
+fn best_torus_dims(n: usize) -> Result<(usize, usize)> {
+    let mut best = None;
+    let mut r = 1;
+    while r * r <= n {
+        if n % r == 0 {
+            best = Some((r, n / r));
+        }
+        r += 1;
+    }
+    match best {
+        Some((1, _)) if n > 2 => bail!("torus needs a composite node count, got prime {n}"),
+        Some(dims) => Ok(dims),
+        None => bail!("torus needs n >= 1"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil;
+
+    fn rng() -> Pcg64 {
+        Pcg64::seed(42)
+    }
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::build(&Topology::Ring, 20, &mut rng()).unwrap();
+        assert_eq!(g.edge_count(), 20);
+        assert!(g.is_connected());
+        assert!((0..20).all(|i| g.degree(i) == 2));
+        assert_eq!(g.diameter(), 10);
+    }
+
+    #[test]
+    fn path_structure() {
+        let g = Graph::build(&Topology::Path, 10, &mut rng()).unwrap();
+        assert_eq!(g.edge_count(), 9);
+        assert_eq!(g.diameter(), 9);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = Graph::build(&Topology::Complete, 8, &mut rng()).unwrap();
+        assert_eq!(g.edge_count(), 28);
+        assert_eq!(g.diameter(), 1);
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = Graph::build(&Topology::Star, 20, &mut rng()).unwrap();
+        assert_eq!(g.degree(0), 19);
+        assert!((1..20).all(|i| g.degree(i) == 1));
+        assert_eq!(g.diameter(), 2);
+    }
+
+    #[test]
+    fn torus_structure() {
+        let g = Graph::build(&Topology::Torus { rows: 4, cols: 5 }, 20, &mut rng()).unwrap();
+        assert!(g.is_connected());
+        assert!((0..20).all(|i| g.degree(i) == 4));
+        assert_eq!(g.edge_count(), 40);
+    }
+
+    #[test]
+    fn torus_auto_dims() {
+        let g = Graph::build(&Topology::Torus { rows: 0, cols: 0 }, 20, &mut rng()).unwrap();
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_prime_rejected() {
+        assert!(Graph::build(&Topology::Torus { rows: 0, cols: 0 }, 13, &mut rng()).is_err());
+    }
+
+    #[test]
+    fn er_connected_by_construction() {
+        for seed in 0..5 {
+            let mut r = Pcg64::seed(seed);
+            let g = Graph::build(&Topology::ErdosRenyi { p: 0.25 }, 20, &mut r).unwrap();
+            assert!(g.is_connected());
+        }
+    }
+
+    #[test]
+    fn rgg_connected_and_paper_sized() {
+        let g = Graph::build(&Topology::RandomGeometric { radius: 0.3 }, 20, &mut rng()).unwrap();
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 20);
+    }
+
+    #[test]
+    fn smallworld_connected() {
+        for seed in 0..5 {
+            let mut r = Pcg64::seed(seed);
+            let g = Graph::build(&Topology::SmallWorld { k: 4, beta: 0.3 }, 20, &mut r).unwrap();
+            assert!(g.is_connected());
+        }
+    }
+
+    #[test]
+    fn edges_symmetric_property() {
+        testutil::check("adjacency symmetric", 16, 0, |rng| {
+            let n = rng.range(2, 30);
+            let g = Graph::build(&Topology::ErdosRenyi { p: 0.4 }, n, rng)
+                .map_err(|e| e.to_string())?;
+            for (i, j) in g.edges() {
+                if !g.has_edge(j, i) {
+                    return Err(format!("edge ({i},{j}) not symmetric"));
+                }
+            }
+            let a = g.adjacency();
+            if !a.is_symmetric(0.0) {
+                return Err("adjacency matrix not symmetric".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degree_sum_equals_twice_edges_property() {
+        testutil::check("handshake lemma", 16, 1, |rng| {
+            let n = rng.range(2, 30);
+            let g = Graph::build(&Topology::ErdosRenyi { p: 0.3 }, n, rng)
+                .map_err(|e| e.to_string())?;
+            let degsum: usize = (0..n).map(|i| g.degree(i)).sum();
+            if degsum == 2 * g.edge_count() {
+                Ok(())
+            } else {
+                Err(format!("degsum {degsum} != 2*{}", g.edge_count()))
+            }
+        });
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn dot_export_contains_all_edges() {
+        let g = Graph::build(&Topology::Ring, 5, &mut rng()).unwrap();
+        let dot = g.to_dot(None);
+        assert!(dot.starts_with("graph hospitals"));
+        assert_eq!(dot.matches(" -- ").count(), 5);
+    }
+
+    #[test]
+    fn knn_sparse_and_connected() {
+        for seed in 0..8 {
+            let mut r = Pcg64::seed(seed);
+            let g = Graph::build(&Topology::KNearest { k: 3 }, 20, &mut r).unwrap();
+            assert!(g.is_connected(), "seed {seed}");
+            let mean_deg = 2.0 * g.edge_count() as f64 / 20.0;
+            assert!((3.0..=6.5).contains(&mean_deg), "seed {seed}: mean degree {mean_deg}");
+        }
+    }
+
+    #[test]
+    fn components_labels_partition() {
+        let mut g = Graph::empty(5);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        let c = g.components();
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[2], c[3]);
+        assert_ne!(c[0], c[2]);
+        assert_ne!(c[4], c[0]);
+        assert_ne!(c[4], c[2]);
+    }
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        for name in ["ring", "path", "complete", "star", "torus", "er", "rgg", "smallworld", "knn"] {
+            assert!(Topology::parse(name).is_ok(), "{name}");
+        }
+        assert!(Topology::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! # decfl — fully decentralized federated learning for EHR
+//!
+//! Production-shaped reproduction of *Learn Electronic Health Records by
+//! Fully Decentralized Federated Learning* (Lu, Zhang, Wang, Mack; 2019).
+//!
+//! N hospital nodes connected by an undirected graph collaboratively train a
+//! shallow neural network on non-identical EHR shards, exchanging parameters
+//! only with graph neighbors (DSGD / DSGT), with `Q` local SGD steps between
+//! communication rounds (the paper's federated variant).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L1/L2 (build-time python): Pallas kernels + jax model, AOT-lowered to
+//!   HLO-text artifacts in `artifacts/` by `make artifacts`.
+//! - L3 (this crate): the decentralized runtime — graph topologies, mixing
+//!   matrices, synthetic EHR data, the gossip network simulator, the
+//!   DSGD/DSGT schedulers, node actors, metrics, and every experiment
+//!   harness that regenerates the paper's figures.
+//!
+//! Quickstart: `make artifacts && cargo run --release -- train --algo fd-dsgt`.
+
+pub mod algo;
+pub mod benchutil;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod jsonl;
+pub mod linalg;
+pub mod metrics;
+pub mod mixing;
+pub mod netsim;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod tsne;

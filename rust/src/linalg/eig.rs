@@ -1,0 +1,230 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Used for mixing-matrix spectra (the second-largest eigenvalue magnitude
+//! drives consensus speed — Assumption 1), spectral-gap reporting in the
+//! topology benches, and PCA.  Jacobi is O(n^3) per sweep but unconditionally
+//! stable and exact enough (off-diagonal Frobenius norm < 1e-12) for the
+//! small matrices this system handles.
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: `A = V diag(values) V^T`.
+/// `values` are sorted ascending; `vectors.col(k)` is the k-th eigenvector.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    pub values: Vec<f64>,
+    /// Column k is the eigenvector for values[k].
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigensolver. Panics if `a` is not square; symmetry is the
+/// caller's contract (use `Mat::is_symmetric` to validate first).
+pub fn sym_eig(a: &Mat) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s
+    };
+
+    const MAX_SWEEPS: usize = 100;
+    let scale = a.frob_norm().max(1e-300);
+    for _ in 0..MAX_SWEEPS {
+        if off(&m).sqrt() <= 1e-13 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // rotation angle
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // apply rotation J(p,q,theta) on both sides: m = J^T m J
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract + sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &old_col) in idx.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    SymEig { values, vectors }
+}
+
+/// Magnitude of the second-largest-in-magnitude eigenvalue of a (symmetric,
+/// stochastic) mixing matrix — the consensus contraction factor.  For a
+/// doubly stochastic W, the largest eigenvalue is exactly 1 with eigenvector
+/// 1/sqrt(n); this returns max |λ_k| over the remaining spectrum.
+pub fn second_eigenvalue_magnitude(w: &Mat) -> f64 {
+    let eig = sym_eig(w);
+    let n = eig.values.len();
+    if n < 2 {
+        return 0.0;
+    }
+    // drop the eigenvalue closest to 1 (the consensus mode), take max |.| of rest
+    let mut vals = eig.values.clone();
+    let one_idx = (0..n)
+        .min_by(|&i, &j| {
+            (vals[i] - 1.0)
+                .abs()
+                .partial_cmp(&(vals[j] - 1.0).abs())
+                .unwrap()
+        })
+        .unwrap();
+    vals.remove(one_idx);
+    vals.into_iter().map(f64::abs).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil;
+
+    fn random_symmetric(rng: &mut Pcg64, n: usize) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.normal();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 2.0;
+        let e = sym_eig(&a);
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_property() {
+        testutil::check("A = V D V^T", 24, 7, |rng| {
+            let n = rng.range(2, 12);
+            let a = random_symmetric(rng, n);
+            let e = sym_eig(&a);
+            // rebuild A
+            let mut d = Mat::zeros(n, n);
+            for i in 0..n {
+                d[(i, i)] = e.values[i];
+            }
+            let rebuilt = e.vectors.matmul(&d).matmul(&e.vectors.t());
+            let err = a.sub(&rebuilt).frob_norm() / a.frob_norm().max(1.0);
+            if err < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("reconstruction err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn vectors_orthonormal_property() {
+        testutil::check("V^T V = I", 24, 8, |rng| {
+            let n = rng.range(2, 12);
+            let a = random_symmetric(rng, n);
+            let e = sym_eig(&a);
+            let vtv = e.vectors.t().matmul(&e.vectors);
+            let err = vtv.sub(&Mat::eye(n)).frob_norm();
+            if err < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("orthonormality err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn trace_equals_eigenvalue_sum() {
+        testutil::check("trace = sum eig", 24, 9, |rng| {
+            let n = rng.range(2, 10);
+            let a = random_symmetric(rng, n);
+            let e = sym_eig(&a);
+            let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let sum: f64 = e.values.iter().sum();
+            if (tr - sum).abs() < 1e-9 * (1.0 + tr.abs()) {
+                Ok(())
+            } else {
+                Err(format!("trace {tr} vs sum {sum}"))
+            }
+        });
+    }
+
+    #[test]
+    fn second_eig_of_complete_graph_metropolis() {
+        // complete graph metropolis: W = (1/n) 11^T → second eigenvalue 0
+        let n = 6;
+        let w = Mat::from_vec(n, n, vec![1.0 / n as f64; n * n]);
+        assert!(second_eigenvalue_magnitude(&w) < 1e-10);
+    }
+
+    #[test]
+    fn second_eig_of_identity_is_one() {
+        // identity = no mixing → contraction factor 1 (never converges)
+        assert!((second_eigenvalue_magnitude(&Mat::eye(5)) - 1.0).abs() < 1e-12);
+    }
+}

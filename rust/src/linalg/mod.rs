@@ -1,0 +1,360 @@
+//! Dense linear algebra (f64, row-major), built from scratch for the
+//! analysis substrates: mixing-matrix spectra (Assumption 1), PCA
+//! initialization for t-SNE, and general experiment math.
+//!
+//! Scope is deliberately "small dense": the largest matrices in this system
+//! are N x N mixing matrices (N ≤ a few hundred) and sample covariance
+//! matrices (42 x 42), so an O(n^3) Jacobi eigensolver is simple, robust and
+//! fast enough.
+
+pub mod eig;
+
+pub use eig::{sym_eig, SymEig};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.concat() }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order for cache-friendly row-major access
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Column means (used by PCA / standardization).
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (acc, &v) in m.iter_mut().zip(self.row(i)) {
+                *acc += v;
+            }
+        }
+        for v in &mut m {
+            *v /= self.rows as f64;
+        }
+        m
+    }
+
+    /// Sample covariance (rows = observations).
+    pub fn covariance(&self) -> Mat {
+        assert!(self.rows > 1, "covariance needs > 1 row");
+        let means = self.col_means();
+        let mut cov = Mat::zeros(self.cols, self.cols);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..self.cols {
+                let di = row[i] - means[i];
+                for j in i..self.cols {
+                    cov[(i, j)] += di * (row[j] - means[j]);
+                }
+            }
+        }
+        let denom = (self.rows - 1) as f64;
+        for i in 0..self.cols {
+            for j in i..self.cols {
+                cov[(i, j)] /= denom;
+                cov[(j, i)] = cov[(i, j)];
+            }
+        }
+        cov
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+// ---- vector helpers ----
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Project rows of `x` onto the top-`k` principal components.
+pub fn pca(x: &Mat, k: usize) -> Mat {
+    assert!(k <= x.cols, "pca k > cols");
+    let cov = x.covariance();
+    let eig = sym_eig(&cov);
+    // eigenvalues ascending → take last k columns, largest first
+    let means = x.col_means();
+    let mut out = Mat::zeros(x.rows, k);
+    for r in 0..x.rows {
+        for (kk, out_col) in (0..k).enumerate() {
+            let col = x.cols - 1 - kk; // descending eigenvalue order
+            let mut acc = 0.0;
+            for j in 0..x.cols {
+                acc += (x[(r, j)] - means[j]) * eig.vectors[(j, col)];
+            }
+            out[(r, out_col)] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil;
+
+    #[test]
+    fn eye_matmul_identity() {
+        let mut rng = Pcg64::seed(0);
+        let a = Mat::from_vec(4, 4, (0..16).map(|_| rng.normal()).collect());
+        let i = Mat::eye(4);
+        let prod = a.matmul(&i);
+        assert!(a.sub(&prod).frob_norm() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_associative_property() {
+        testutil::check("matmul assoc", 16, 1, |rng| {
+            let n = rng.range(1, 8);
+            let m = rng.range(1, 8);
+            let k = rng.range(1, 8);
+            let l = rng.range(1, 8);
+            let a = Mat::from_vec(n, m, (0..n * m).map(|_| rng.normal()).collect());
+            let b = Mat::from_vec(m, k, (0..m * k).map(|_| rng.normal()).collect());
+            let c = Mat::from_vec(k, l, (0..k * l).map(|_| rng.normal()).collect());
+            let left = a.matmul(&b).matmul(&c);
+            let right = a.matmul(&b.matmul(&c));
+            if left.sub(&right).frob_norm() < 1e-9 {
+                Ok(())
+            } else {
+                Err("assoc violated".into())
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seed(2);
+        let a = Mat::from_vec(3, 5, (0..15).map(|_| rng.normal()).collect());
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::seed(3);
+        let a = Mat::from_vec(4, 6, (0..24).map(|_| rng.normal()).collect());
+        let x: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let xm = Mat::from_vec(6, 1, x.clone());
+        let via_matmul = a.matmul(&xm);
+        let via_matvec = a.matvec(&x);
+        for i in 0..4 {
+            assert!((via_matmul[(i, 0)] - via_matvec[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn covariance_of_known_data() {
+        // perfectly correlated columns → cov = [[1,1],[1,1]] * var
+        let x = Mat::from_rows(&[vec![0.0, 0.0], vec![1.0, 1.0], vec![2.0, 2.0]]);
+        let c = x.covariance();
+        assert!((c[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((c[(0, 1)] - 1.0).abs() < 1e-12);
+        assert!(c.is_symmetric(1e-14));
+    }
+
+    #[test]
+    fn covariance_psd_property() {
+        testutil::check("cov psd", 16, 4, |rng| {
+            let n = rng.range(3, 20);
+            let d = rng.range(2, 6);
+            let x = Mat::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect());
+            let cov = x.covariance();
+            let eig = sym_eig(&cov);
+            if eig.values.iter().all(|&v| v > -1e-9) {
+                Ok(())
+            } else {
+                Err(format!("negative eigenvalue: {:?}", eig.values))
+            }
+        });
+    }
+
+    #[test]
+    fn pca_recovers_dominant_direction() {
+        // data stretched along (1,1)/sqrt(2): first PC must align with it
+        let mut rng = Pcg64::seed(5);
+        let mut rows = Vec::new();
+        for _ in 0..200 {
+            let t = rng.normal() * 10.0;
+            let e = rng.normal() * 0.1;
+            rows.push(vec![t + e, t - e]);
+        }
+        let x = Mat::from_rows(&rows);
+        let proj = pca(&x, 1);
+        // variance along PC1 should be ~ 2 * 100 (t appears in both coords)
+        let col: Vec<f64> = (0..proj.rows).map(|i| proj[(i, 0)]).collect();
+        assert!(variance(&col) > 150.0, "pc1 var {}", variance(&col));
+    }
+
+    #[test]
+    fn vector_helpers() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(dist2(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        Mat::zeros(2, 3).matmul(&Mat::zeros(4, 2));
+    }
+}

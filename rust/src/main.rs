@@ -1,0 +1,217 @@
+//! `decfl` — fully decentralized federated learning for EHR (CLI).
+//!
+//! Subcommands map 1:1 to DESIGN.md §5's experiment index; `train` is the
+//! general driver.  Run `decfl help` for usage.
+
+use anyhow::{bail, Result};
+use decfl::cli::{apply_common_overrides, Args};
+use decfl::config::ExperimentConfig;
+use decfl::experiments::{fig1, fig2, speedup, sweeps};
+
+const HELP: &str = "\
+decfl — fully decentralized federated learning for electronic health records
+(reproduction of Lu, Zhang, Wang & Mack, 2019)
+
+USAGE: decfl <subcommand> [options]
+
+SUBCOMMANDS
+  train       train one algorithm and print/dump the metric log
+  fig2        EXP-F2: DSGD vs DSGT vs FD-DSGD vs FD-DSGT per comm round
+  graph       EXP-F1L: hospital network (layout, DOT, spectral stats)
+  tsne        EXP-F1R: t-SNE of three hospitals + silhouette
+  speedup     EXP-T1: Theorem 1 linear-speedup sweep over N (native backend)
+  qsweep      EXP-A1: local-period Q sweep
+  topology    EXP-A2: topology / spectral-gap sweep
+  hetero      EXP-A3: heterogeneity sweep (DSGD vs DSGT)
+  baselines   EXP-A4: FD-DSGT vs FedAvg vs centralized
+  export-data write the synthetic cohort as per-hospital CSVs
+  info        print artifact manifest + config summary
+  help        this text
+
+COMMON OPTIONS (train + experiments)
+  --config <file>         TOML config (defaults reproduce the paper: N=20,
+                          m=20, Q=100, alpha0=0.02, d=42)
+  --algo <name>           dsgd|dsgt|fd-dsgd|fd-dsgt|fedavg|centralized
+  --mode <m>              fused|actors          (default fused)
+  --backend <b>           pjrt|native           (default pjrt)
+  --steps <T>             total local iterations (default 10000)
+  --q <Q>                 local period          (default 100)
+  --alpha0 <a>            lr scale              (default 0.02)
+  --topology <t>          ring|path|torus|complete|star|er|rgg|smallworld
+  --mixing <s>            metropolis|lazy|maxdeg
+  --heterogeneity <h>     data non-iidness in [0,1] (default 0.6)
+  --seed <s>              RNG seed (default 7)
+  --eval-every <k>        evaluate every k comm rounds
+  --artifacts <dir>       artifact dir (default artifacts/)
+  --out <file>            dump metrics/results JSON
+
+EXAMPLES
+  decfl train --algo fd-dsgt --steps 10000 --q 100
+  decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
+  decfl speedup --ns 4,8,16,32 --steps 400
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    if args.has_flag("help") || sub == "help" {
+        print!("{HELP}");
+        return Ok(());
+    }
+
+    let mut cfg = ExperimentConfig::default();
+    apply_common_overrides(&args, &mut cfg)?;
+
+    match sub.as_str() {
+        "train" => {
+            args.finish()?;
+            cfg.validate()?;
+            eprintln!(
+                "training {} (mode {:?}, backend {:?}): N={} Q={} T={} on {} topology",
+                cfg.algo.name(), cfg.mode, cfg.backend, cfg.n,
+                cfg.algo.effective_q(cfg.q), cfg.total_steps, cfg.topology
+            );
+            let log = decfl::coordinator::run(&cfg)?;
+            print!("{}", log.to_csv());
+            summary(&log);
+            dump(&cfg.out, &log.to_json())?;
+        }
+        "fig2" => {
+            args.finish()?;
+            cfg.validate()?;
+            let res = fig2::run(&cfg)?;
+            res.print_table();
+            for f in res.findings() {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &res.to_json())?;
+        }
+        "graph" => {
+            let dot_path = args.get_str("dot").map(str::to_string);
+            args.finish()?;
+            let rep = fig1::hospital_graph(&cfg)?;
+            rep.print_summary();
+            if let Some(path) = dot_path {
+                std::fs::write(&path, &rep.dot)?;
+                eprintln!("wrote DOT to {path}");
+            }
+            dump(&cfg.out, &rep.to_json())?;
+        }
+        "tsne" => {
+            let hospitals = args
+                .get_usize_list("hospitals")?
+                .unwrap_or_else(|| vec![0, 1, 2]);
+            let per = args.get_usize("per-hospital")?.unwrap_or(150);
+            let perplexity = args.get_f64("perplexity")?.unwrap_or(30.0);
+            args.finish()?;
+            let rep = fig1::tsne_hospitals(&cfg, &hospitals, per, perplexity)?;
+            rep.print_summary();
+            dump(&cfg.out, &rep.to_json())?;
+        }
+        "speedup" => {
+            let ns = args.get_usize_list("ns")?.unwrap_or_else(|| vec![4, 8, 16, 32]);
+            let seeds = args
+                .get_usize_list("seeds")?
+                .unwrap_or_else(|| vec![7, 8, 9])
+                .into_iter()
+                .map(|s| s as u64)
+                .collect::<Vec<_>>();
+            args.finish()?;
+            let res = speedup::run(&ns, cfg.total_steps.min(2000), &seeds)?;
+            res.print_table();
+            println!(
+                "linear-speedup consistent: {}",
+                if res.supports_linear_speedup() { "YES" } else { "NO" }
+            );
+            dump(&cfg.out, &res.to_json())?;
+        }
+        "qsweep" => {
+            let qs = args.get_usize_list("qs")?.unwrap_or_else(|| vec![1, 5, 20, 100, 500]);
+            let target = args.get_f64("target")?.unwrap_or(0.45);
+            args.finish()?;
+            let rows = sweeps::q_sweep(&qs, cfg.total_steps, target, cfg.seed)?;
+            sweeps::print_q_table(&rows, target);
+            dump(&cfg.out, &sweeps::rows_to_json(&rows, sweeps::q_row_json))?;
+        }
+        "topology" => {
+            args.finish()?;
+            let rows = sweeps::topology_sweep(
+                &["path", "ring", "rgg", "er", "torus", "complete"],
+                cfg.total_steps,
+                cfg.seed,
+            )?;
+            sweeps::print_topology_table(&rows);
+        }
+        "hetero" => {
+            let hets = args.get_f64_list("hets")?.unwrap_or_else(|| vec![0.0, 0.3, 0.6, 1.0]);
+            args.finish()?;
+            let rows = sweeps::hetero_sweep(&hets, cfg.total_steps, &[cfg.seed, cfg.seed + 1])?;
+            sweeps::print_hetero_table(&rows);
+        }
+        "baselines" => {
+            args.finish()?;
+            let rows = sweeps::baseline_compare(cfg.total_steps, cfg.q, cfg.seed)?;
+            sweeps::print_baseline_table(&rows);
+        }
+        "export-data" => {
+            let dir = args.get_str("dir").unwrap_or("out/cohort").to_string();
+            args.finish()?;
+            let asm = decfl::coordinator::assemble(&cfg)?;
+            asm.ds.export_csv(std::path::Path::new(&dir))?;
+            println!(
+                "wrote {} hospitals ({} records, prevalence {:.3}, site divergence {:.3}) to {dir}",
+                asm.ds.n_hospitals(),
+                asm.ds.total_records(),
+                asm.ds.global_prevalence(),
+                asm.ds.site_divergence()
+            );
+        }
+        "info" => {
+            args.finish()?;
+            let manifest =
+                decfl::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+            let s = manifest.shapes;
+            println!("artifacts: {}", cfg.artifacts_dir);
+            println!("  model: d={} hidden={} P={} | N={} m={} Q={} shard={}",
+                s.d, s.hidden, s.p, s.n, s.m, s.q, s.shard);
+            for (name, spec) in &manifest.artifacts {
+                println!("  {name:12} {} in → {} out  ({})",
+                    spec.inputs.len(), spec.outputs.len(), spec.file);
+            }
+        }
+        other => bail!("unknown subcommand `{other}` (try `decfl help`)"),
+    }
+    Ok(())
+}
+
+fn summary(log: &decfl::metrics::RunLog) {
+    if let Some(last) = log.last() {
+        eprintln!(
+            "final: round {} | loss {:.4} acc {:.3} | stationarity {:.3e} consensus {:.3e} | {:.1} MB, {} msgs, sim {:.1}s, wall {:.1}s",
+            last.comm_rounds,
+            last.loss,
+            last.accuracy,
+            last.stationarity,
+            last.consensus,
+            last.bytes as f64 / 1e6,
+            last.messages,
+            last.sim_time_s,
+            last.wall_time_s,
+        );
+    }
+}
+
+fn dump(out: &Option<String>, json: &decfl::jsonl::Json) -> Result<()> {
+    if let Some(path) = out {
+        std::fs::write(path, json.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Training metrics: the quantities the paper's figures plot, plus the
+//! communication accounting the netsim produces.
+//!
+//! Per evaluated round we record the two Theorem-1 terms (stationarity gap
+//! `||(1/N) Σ ∇f_i(θ_i)||²` and consensus error `(1/N) Σ ||θ_i - θ̄||²`),
+//! global training loss and accuracy, and the cumulative communication cost
+//! (rounds / messages / bytes / simulated seconds).  Fig. 2's x-axis is
+//! `comm_rounds`; the comm-cost benches read `bytes`.
+
+use crate::jsonl::{self, Json};
+use crate::netsim::NetSnapshot;
+use anyhow::Result;
+
+/// One evaluation point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundMetrics {
+    /// Communication rounds completed so far (Fig. 2 x-axis).
+    pub comm_rounds: u64,
+    /// Local SGD iterations completed so far (total across the schedule).
+    pub local_steps: u64,
+    pub loss: f64,
+    pub accuracy: f64,
+    /// `|| (1/N) Σ_i ∇f_i(θ_i) ||²` on full shards.
+    pub stationarity: f64,
+    /// `(1/N) Σ_i ||θ_i − θ̄||²`.
+    pub consensus: f64,
+    pub bytes: u64,
+    pub messages: u64,
+    pub sim_time_s: f64,
+    pub wall_time_s: f64,
+}
+
+impl RoundMetrics {
+    /// The combined Theorem-1 left-hand side.
+    pub fn optimality_gap(&self) -> f64 {
+        self.stationarity + self.consensus
+    }
+}
+
+/// Metric log for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub algo: String,
+    pub rows: Vec<RoundMetrics>,
+}
+
+impl RunLog {
+    pub fn new(algo: &str) -> Self {
+        RunLog { algo: algo.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: RoundMetrics) {
+        self.rows.push(m);
+    }
+
+    pub fn last(&self) -> Option<&RoundMetrics> {
+        self.rows.last()
+    }
+
+    /// First comm-round index at which loss drops to `target` (None = never).
+    /// The Q-sweep bench uses this as "rounds to target".
+    pub fn rounds_to_loss(&self, target: f64) -> Option<u64> {
+        self.rows.iter().find(|r| r.loss <= target).map(|r| r.comm_rounds)
+    }
+
+    /// Minimum optimality gap achieved.
+    pub fn best_gap(&self) -> f64 {
+        self.rows.iter().map(RoundMetrics::optimality_gap).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let col = |f: &dyn Fn(&RoundMetrics) -> f64| {
+            jsonl::arr_f64(&self.rows.iter().map(|r| f(r)).collect::<Vec<_>>())
+        };
+        jsonl::obj(vec![
+            ("algo", jsonl::s(&self.algo)),
+            ("comm_rounds", col(&|r| r.comm_rounds as f64)),
+            ("local_steps", col(&|r| r.local_steps as f64)),
+            ("loss", col(&|r| r.loss)),
+            ("accuracy", col(&|r| r.accuracy)),
+            ("stationarity", col(&|r| r.stationarity)),
+            ("consensus", col(&|r| r.consensus)),
+            ("bytes", col(&|r| r.bytes as f64)),
+            ("sim_time_s", col(&|r| r.sim_time_s)),
+            ("wall_time_s", col(&|r| r.wall_time_s)),
+        ])
+    }
+
+    /// CSV with a header, one row per evaluation.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "comm_rounds,local_steps,loss,accuracy,stationarity,consensus,bytes,messages,sim_time_s,wall_time_s\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.4},{:.6e},{:.6e},{},{},{:.4},{:.3}\n",
+                r.comm_rounds,
+                r.local_steps,
+                r.loss,
+                r.accuracy,
+                r.stationarity,
+                r.consensus,
+                r.bytes,
+                r.messages,
+                r.sim_time_s,
+                r.wall_time_s
+            ));
+        }
+        out
+    }
+
+    pub fn save_json(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+/// Assemble a [`RoundMetrics`] from eval outputs + net accounting.
+#[allow(clippy::too_many_arguments)]
+pub fn round_metrics(
+    comm_rounds: u64,
+    local_steps: u64,
+    eval: (f64, f64, f64, f64),
+    net: NetSnapshot,
+    wall_time_s: f64,
+) -> RoundMetrics {
+    let (loss, accuracy, stationarity, consensus) = eval;
+    RoundMetrics {
+        comm_rounds,
+        local_steps,
+        loss,
+        accuracy,
+        stationarity,
+        consensus,
+        bytes: net.bytes,
+        messages: net.messages,
+        sim_time_s: net.sim_time_s,
+        wall_time_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(cr: u64, loss: f64) -> RoundMetrics {
+        RoundMetrics {
+            comm_rounds: cr,
+            local_steps: cr * 100,
+            loss,
+            accuracy: 0.8,
+            stationarity: 1e-3,
+            consensus: 2e-3,
+            bytes: cr * 1000,
+            messages: cr * 10,
+            sim_time_s: cr as f64 * 0.1,
+            wall_time_s: cr as f64 * 0.01,
+        }
+    }
+
+    #[test]
+    fn gap_is_sum_of_terms() {
+        let r = row(1, 0.5);
+        assert!((r.optimality_gap() - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounds_to_loss_finds_first_crossing() {
+        let mut log = RunLog::new("dsgt");
+        for (cr, l) in [(1, 0.7), (2, 0.55), (3, 0.49), (4, 0.2)] {
+            log.push(row(cr, l));
+        }
+        assert_eq!(log.rounds_to_loss(0.5), Some(3));
+        assert_eq!(log.rounds_to_loss(0.1), None);
+    }
+
+    #[test]
+    fn best_gap_min() {
+        let mut log = RunLog::new("x");
+        log.push(row(1, 0.7));
+        let mut better = row(2, 0.6);
+        better.stationarity = 1e-5;
+        better.consensus = 1e-5;
+        log.push(better);
+        assert!((log.best_gap() - 2e-5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = RunLog::new("x");
+        log.push(row(1, 0.7));
+        log.push(row(2, 0.6));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("comm_rounds,"));
+    }
+
+    #[test]
+    fn json_roundtrips_and_has_columns() {
+        let mut log = RunLog::new("fd-dsgt");
+        log.push(row(1, 0.7));
+        let j = crate::jsonl::Json::parse(&log.to_json().to_string()).unwrap();
+        assert_eq!(j.get("algo").unwrap().as_str().unwrap(), "fd-dsgt");
+        assert_eq!(j.get("loss").unwrap().as_f64_vec().unwrap(), vec![0.7]);
+    }
+}

@@ -1,0 +1,249 @@
+//! Mixing-matrix construction and validation (paper Assumption 1).
+//!
+//! The decentralized updates (eqs. 2–3) combine neighbor iterates with a
+//! symmetric doubly stochastic weight matrix `W` whose second-largest
+//! eigenvalue magnitude is < 1 on a connected graph.  Three standard
+//! constructions are provided; all are validated against Assumption 1 by
+//! [`validate`], and the spectral gap `1 - |λ₂|` is exposed because it is the
+//! consensus-rate knob the topology ablation (EXP-A2) sweeps.
+
+use crate::graph::Graph;
+use crate::linalg::{eig::second_eigenvalue_magnitude, Mat};
+use anyhow::{bail, Result};
+
+/// Weighting schemes for building `W` from a graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Metropolis–Hastings: `w_ij = 1 / (1 + max(deg_i, deg_j))` on edges.
+    /// Symmetric, doubly stochastic, positive-semidefinite-ish diagonally
+    /// dominant for most graphs; the default everywhere in the paper repro.
+    Metropolis,
+    /// Lazy Metropolis: `(I + W_mh) / 2` — guarantees all eigenvalues are in
+    /// (0, 1], useful when a topology would otherwise put λ_min near -1
+    /// (e.g. bipartite-ish structures).
+    LazyMetropolis,
+    /// Max-degree: `w_ij = 1/(1 + max_deg)` on edges, remainder on diagonal.
+    MaxDegree,
+}
+
+impl Scheme {
+    pub fn parse(name: &str) -> Result<Scheme> {
+        Ok(match name {
+            "metropolis" => Scheme::Metropolis,
+            "lazy" | "lazy-metropolis" => Scheme::LazyMetropolis,
+            "maxdeg" | "max-degree" => Scheme::MaxDegree,
+            other => bail!("unknown mixing scheme `{other}` (metropolis|lazy|maxdeg)"),
+        })
+    }
+}
+
+/// Build the mixing matrix for `g` under `scheme`.
+pub fn build(g: &Graph, scheme: Scheme) -> Mat {
+    let n = g.n();
+    let mut w = Mat::zeros(n, n);
+    match scheme {
+        Scheme::Metropolis | Scheme::LazyMetropolis => {
+            for i in 0..n {
+                for &j in g.neighbors(i) {
+                    w[(i, j)] = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+                }
+            }
+            for i in 0..n {
+                let off: f64 = g.neighbors(i).iter().map(|&j| w[(i, j)]).sum();
+                w[(i, i)] = 1.0 - off;
+            }
+            if scheme == Scheme::LazyMetropolis {
+                for i in 0..n {
+                    for j in 0..n {
+                        w[(i, j)] *= 0.5;
+                    }
+                    w[(i, i)] += 0.5;
+                }
+            }
+        }
+        Scheme::MaxDegree => {
+            let dmax = (0..n).map(|i| g.degree(i)).max().unwrap_or(0) as f64;
+            let wij = 1.0 / (1.0 + dmax);
+            for i in 0..n {
+                for &j in g.neighbors(i) {
+                    w[(i, j)] = wij;
+                }
+                w[(i, i)] = 1.0 - g.degree(i) as f64 * wij;
+            }
+        }
+    }
+    w
+}
+
+/// Validation report for Assumption 1.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub symmetric: bool,
+    pub rows_stochastic: bool,
+    pub nonnegative: bool,
+    pub second_eig: f64,
+    pub spectral_gap: f64,
+}
+
+impl Validation {
+    pub fn holds(&self) -> bool {
+        self.symmetric && self.rows_stochastic && self.nonnegative && self.second_eig < 1.0
+    }
+}
+
+/// Check `W` against Assumption 1: symmetric, `W 1 = 1`, `|λ₂| < 1`.
+pub fn validate(w: &Mat) -> Validation {
+    let n = w.rows;
+    let symmetric = w.is_symmetric(1e-12);
+    let rows_stochastic = (0..n).all(|i| (w.row(i).iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    let nonnegative = w.data.iter().all(|&x| x >= -1e-12);
+    let second_eig = second_eigenvalue_magnitude(w);
+    Validation {
+        symmetric,
+        rows_stochastic,
+        nonnegative,
+        second_eig,
+        spectral_gap: 1.0 - second_eig,
+    }
+}
+
+/// Flatten to f32 row-major (what the PJRT artifacts consume).
+pub fn to_f32(w: &Mat) -> Vec<f32> {
+    w.data.iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::rng::Pcg64;
+    use crate::testutil;
+
+    fn build_graph(topo: &Topology, n: usize, seed: u64) -> Graph {
+        Graph::build(topo, n, &mut Pcg64::seed(seed)).unwrap()
+    }
+
+    #[test]
+    fn metropolis_ring_known_weights() {
+        let g = build_graph(&Topology::Ring, 6, 0);
+        let w = build(&g, Scheme::Metropolis);
+        // all degrees 2 → off-diag weight 1/3, diagonal 1/3
+        for i in 0..6 {
+            assert!((w[(i, i)] - 1.0 / 3.0).abs() < 1e-12);
+            for &j in g.neighbors(i) {
+                assert!((w[(i, j)] - 1.0 / 3.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn all_schemes_satisfy_assumption_1() {
+        let topologies = [
+            Topology::Ring,
+            Topology::Path,
+            Topology::Complete,
+            Topology::Star,
+            Topology::ErdosRenyi { p: 0.3 },
+            Topology::RandomGeometric { radius: 0.35 },
+        ];
+        for (ti, topo) in topologies.iter().enumerate() {
+            for scheme in [Scheme::Metropolis, Scheme::LazyMetropolis, Scheme::MaxDegree] {
+                let g = build_graph(topo, 20, ti as u64);
+                let w = build(&g, scheme);
+                let v = validate(&w);
+                assert!(v.holds(), "{topo:?} {scheme:?}: {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_has_nonnegative_spectrum() {
+        let g = build_graph(&Topology::Ring, 8, 0); // even ring: λ_min(W_mh) can be negative
+        let w = build(&g, Scheme::LazyMetropolis);
+        let eig = crate::linalg::sym_eig(&w);
+        assert!(eig.values.iter().all(|&v| v > -1e-12), "{:?}", eig.values);
+    }
+
+    #[test]
+    fn complete_graph_metropolis_is_uniform_averaging() {
+        let g = build_graph(&Topology::Complete, 5, 0);
+        let w = build(&g, Scheme::Metropolis);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((w[(i, j)] - 0.2).abs() < 1e-12);
+            }
+        }
+        assert!(validate(&w).second_eig < 1e-10);
+    }
+
+    #[test]
+    fn denser_graph_smaller_second_eig() {
+        let ring = build(&build_graph(&Topology::Ring, 20, 0), Scheme::Metropolis);
+        let complete = build(&build_graph(&Topology::Complete, 20, 0), Scheme::Metropolis);
+        let er = build(&build_graph(&Topology::ErdosRenyi { p: 0.4 }, 20, 1), Scheme::Metropolis);
+        let l_ring = validate(&ring).second_eig;
+        let l_er = validate(&er).second_eig;
+        let l_complete = validate(&complete).second_eig;
+        assert!(l_complete < l_er && l_er < l_ring, "{l_complete} {l_er} {l_ring}");
+    }
+
+    #[test]
+    fn mixing_contracts_disagreement_property() {
+        // ||W x - x̄ 1|| <= |λ₂| ||x - x̄ 1|| — the consensus contraction
+        testutil::check("mixing contraction", 16, 5, |rng| {
+            let n = rng.range(3, 25);
+            let g = Graph::build(&Topology::ErdosRenyi { p: 0.4 }, n, rng)
+                .map_err(|e| e.to_string())?;
+            let w = build(&g, Scheme::Metropolis);
+            let lam2 = validate(&w).second_eig;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let xbar = crate::linalg::mean(&x);
+            let centered: Vec<f64> = x.iter().map(|v| v - xbar).collect();
+            let wx = w.matvec(&x);
+            let wx_centered: Vec<f64> = wx.iter().map(|v| v - xbar).collect();
+            let before = crate::linalg::norm2(&centered);
+            let after = crate::linalg::norm2(&wx_centered);
+            if after <= lam2 * before + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("no contraction: {after} > {lam2} * {before}"))
+            }
+        });
+    }
+
+    #[test]
+    fn doubly_stochastic_property() {
+        testutil::check("column sums", 16, 6, |rng| {
+            let n = rng.range(3, 25);
+            let g = Graph::build(&Topology::ErdosRenyi { p: 0.35 }, n, rng)
+                .map_err(|e| e.to_string())?;
+            for scheme in [Scheme::Metropolis, Scheme::LazyMetropolis, Scheme::MaxDegree] {
+                let w = build(&g, scheme);
+                for j in 0..n {
+                    let col: f64 = (0..n).map(|i| w[(i, j)]).sum();
+                    if (col - 1.0).abs() > 1e-9 {
+                        return Err(format!("{scheme:?} col {j} sums to {col}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn to_f32_roundtrip() {
+        let g = build_graph(&Topology::Ring, 4, 0);
+        let w = build(&g, Scheme::Metropolis);
+        let f = to_f32(&w);
+        assert_eq!(f.len(), 16);
+        assert!((f[0] as f64 - w[(0, 0)]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("metropolis").unwrap(), Scheme::Metropolis);
+        assert_eq!(Scheme::parse("lazy").unwrap(), Scheme::LazyMetropolis);
+        assert_eq!(Scheme::parse("maxdeg").unwrap(), Scheme::MaxDegree);
+        assert!(Scheme::parse("nope").is_err());
+    }
+}

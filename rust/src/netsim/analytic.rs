@@ -1,0 +1,138 @@
+//! Analytic communication accounting for the fused driver.
+//!
+//! The fused execution mode computes a whole gossip round in one PJRT call,
+//! so no real messages flow — but the experiment still needs the exact
+//! communication cost a deployment would pay.  This accountant charges the
+//! same quantities the channel-based netsim measures: per directed edge and
+//! payload kind, one message of `payload_bytes`; per round, simulated time
+//! advances by the local-compute phase plus the slowest link transfer
+//! (synchronous gossip = max over edges), with payload kinds pipelined
+//! sequentially (DSGT sends θ then ϑ).
+//!
+//! With a lossless link this matches [`super::NetStats`] byte-for-byte
+//! (integration-tested); loss injection is an actor-mode-only feature.
+
+use super::{LinkModel, NetSnapshot};
+use crate::graph::Graph;
+
+/// Deterministic mirror of the netsim counters for fused execution.
+#[derive(Clone, Debug)]
+pub struct Accountant {
+    /// Directed messages per payload kind per round (= 2 |E|).
+    directed_edges: u64,
+    link: LinkModel,
+    snap: NetSnapshot,
+}
+
+impl Accountant {
+    pub fn new(g: &Graph, link: LinkModel) -> Self {
+        Accountant {
+            directed_edges: 2 * g.edge_count() as u64,
+            link,
+            snap: NetSnapshot::default(),
+        }
+    }
+
+    /// Charge a local-compute phase: all nodes run `steps` SGD steps in
+    /// parallel, each costing `secs_per_step`.
+    pub fn local_compute(&mut self, steps: u64, secs_per_step: f64) {
+        self.snap.sim_time_s += steps as f64 * secs_per_step;
+    }
+
+    /// Charge one synchronous gossip round exchanging `kinds` payloads of
+    /// `payload_elems` f32 each over every edge.
+    pub fn comm_round(&mut self, payload_elems: usize, kinds: u32) {
+        let bytes = (payload_elems * std::mem::size_of::<f32>()) as u64;
+        let msgs = self.directed_edges * kinds as u64;
+        self.snap.messages += msgs;
+        self.snap.bytes += msgs * bytes;
+        self.snap.rounds += 1;
+        let per_kind = self.link.latency_s + bytes as f64 / self.link.bandwidth_bps;
+        self.snap.sim_time_s += per_kind * kinds as f64;
+    }
+
+    /// Charge a star-network round (FedAvg): every client uploads and
+    /// downloads one payload to/from the server.
+    pub fn star_round(&mut self, n_clients: usize, payload_elems: usize) {
+        let bytes = (payload_elems * std::mem::size_of::<f32>()) as u64;
+        let msgs = 2 * n_clients as u64;
+        self.snap.messages += msgs;
+        self.snap.bytes += msgs * bytes;
+        self.snap.rounds += 1;
+        // upload (parallel) + download (parallel)
+        self.snap.sim_time_s += 2.0 * (self.link.latency_s + bytes as f64 / self.link.bandwidth_bps);
+    }
+
+    pub fn snapshot(&self) -> NetSnapshot {
+        self.snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matches_channel_netsim_counters() {
+        // run one real gossip round over channels and compare byte counts
+        let g = Graph::build(&Topology::Ring, 6, &mut Pcg64::seed(0)).unwrap();
+        let link = LinkModel::default();
+        let payload = 128usize;
+
+        let (endpoints, stats) = super::super::build(&g, link, 1);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|mut ep| {
+                std::thread::spawn(move || {
+                    let p = std::sync::Arc::new(vec![0.0f32; 128]);
+                    ep.broadcast(0, super::super::PayloadKind::Params, &p).unwrap();
+                    ep.gather(0, super::super::PayloadKind::Params).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        stats.rounds.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let real = stats.snapshot();
+
+        let mut acct = Accountant::new(&g, link);
+        acct.comm_round(payload, 1);
+        let model = acct.snapshot();
+
+        assert_eq!(model.messages, real.messages);
+        assert_eq!(model.bytes, real.bytes);
+        assert_eq!(model.rounds, real.rounds);
+    }
+
+    #[test]
+    fn dsgt_pays_double() {
+        let g = Graph::build(&Topology::Ring, 4, &mut Pcg64::seed(0)).unwrap();
+        let mut a = Accountant::new(&g, LinkModel::default());
+        let mut b = Accountant::new(&g, LinkModel::default());
+        a.comm_round(100, 1);
+        b.comm_round(100, 2);
+        assert_eq!(b.snapshot().bytes, 2 * a.snapshot().bytes);
+        assert!(b.snapshot().sim_time_s > a.snapshot().sim_time_s);
+    }
+
+    #[test]
+    fn compute_time_accumulates() {
+        let g = Graph::build(&Topology::Ring, 4, &mut Pcg64::seed(0)).unwrap();
+        let mut a = Accountant::new(&g, LinkModel::default());
+        a.local_compute(100, 1e-3);
+        assert!((a.snapshot().sim_time_s - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_round_counts() {
+        let g = Graph::build(&Topology::Star, 5, &mut Pcg64::seed(0)).unwrap();
+        let mut a = Accountant::new(&g, LinkModel::default());
+        a.star_round(4, 100);
+        let s = a.snapshot();
+        assert_eq!(s.messages, 8);
+        assert_eq!(s.bytes, 8 * 400);
+    }
+}

@@ -1,0 +1,113 @@
+//! Reusable distribution objects built on [`super::Pcg64`].
+
+use super::Pcg64;
+
+/// Normal distribution with fixed mean and standard deviation.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "negative std");
+        Normal { mean, std }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        rng.normal_ms(self.mean, self.std)
+    }
+
+    /// Sample truncated to [lo, hi] by rejection (used for clinically
+    /// plausible vitals/labs in the EHR generator).
+    pub fn sample_clamped(&self, rng: &mut Pcg64, lo: f64, hi: f64) -> f64 {
+        self.sample(rng).clamp(lo, hi)
+    }
+}
+
+/// Symmetric Dirichlet over `k` categories (label-skew heterogeneity knob:
+/// small alpha → highly non-identical shards, large alpha → near-iid).
+#[derive(Clone, Debug)]
+pub struct Dirichlet {
+    pub alpha: Vec<f64>,
+}
+
+impl Dirichlet {
+    pub fn symmetric(k: usize, alpha: f64) -> Self {
+        assert!(k > 0 && alpha > 0.0);
+        Dirichlet { alpha: vec![alpha; k] }
+    }
+
+    pub fn new(alpha: Vec<f64>) -> Self {
+        assert!(!alpha.is_empty() && alpha.iter().all(|&a| a > 0.0));
+        Dirichlet { alpha }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let gs: Vec<f64> = self.alpha.iter().map(|&a| rng.gamma(a).max(1e-300)).collect();
+        let total: f64 = gs.iter().sum();
+        gs.into_iter().map(|g| g / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_clamped_stays_in_bounds() {
+        let mut rng = Pcg64::seed(1);
+        let d = Normal::new(0.0, 10.0);
+        for _ in 0..1000 {
+            let x = d.sample_clamped(&mut rng, -1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Pcg64::seed(2);
+        let d = Dirichlet::symmetric(5, 0.3);
+        for _ in 0..100 {
+            let p = d.sample(&mut rng);
+            assert_eq!(p.len(), 5);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_is_spiky() {
+        let mut rng = Pcg64::seed(3);
+        let spiky = Dirichlet::symmetric(10, 0.05);
+        let flat = Dirichlet::symmetric(10, 100.0);
+        let max_spiky: f64 = (0..200)
+            .map(|_| spiky.sample(&mut rng).into_iter().fold(0.0, f64::max))
+            .sum::<f64>()
+            / 200.0;
+        let max_flat: f64 = (0..200)
+            .map(|_| flat.sample(&mut rng).into_iter().fold(0.0, f64::max))
+            .sum::<f64>()
+            / 200.0;
+        assert!(max_spiky > 0.7, "spiky mean-max {max_spiky}");
+        assert!(max_flat < 0.2, "flat mean-max {max_flat}");
+    }
+
+    #[test]
+    fn dirichlet_mean_proportional_to_alpha() {
+        let mut rng = Pcg64::seed(4);
+        let d = Dirichlet::new(vec![1.0, 2.0, 7.0]);
+        let n = 20_000;
+        let mut acc = [0.0f64; 3];
+        for _ in 0..n {
+            let p = d.sample(&mut rng);
+            for (a, x) in acc.iter_mut().zip(&p) {
+                *a += x;
+            }
+        }
+        for (a, expect) in acc.iter().zip([0.1, 0.2, 0.7]) {
+            assert!((a / n as f64 - expect).abs() < 0.01);
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! Deterministic pseudo-random number generation and sampling.
+//!
+//! The offline build has no `rand` crate, so this module implements the
+//! generators the system needs from scratch: a PCG64 (DXSM) core generator
+//! plus the samplers used by the data generator, the graph generators, and
+//! the training loop (normal, Bernoulli, gamma/Dirichlet, categorical,
+//! Fisher–Yates shuffling, and without-replacement batch sampling).
+//!
+//! Every consumer takes an explicit seed so whole experiments are exactly
+//! reproducible from the config file; independent subsystems derive
+//! decorrelated streams via [`Pcg64::split`].
+
+pub mod dist;
+
+pub use dist::{Dirichlet, Normal};
+
+/// PCG64-DXSM: 128-bit LCG state, 64-bit output.
+///
+/// Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+/// Statistically Good Algorithms for Random Number Generation" (2014);
+/// DXSM output function as adopted by numpy's default generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Seed the generator. `seed` selects the starting state, `stream`
+    /// selects one of 2^127 distinct sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Convenience single-argument constructor (stream 0).
+    pub fn seed(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive a decorrelated child generator (distinct stream).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64(), tag.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+
+    /// Next raw 64-bit output (DXSM output function).
+    pub fn next_u64(&mut self) -> u64 {
+        let state = self.state;
+        self.state = state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let mut hi = (state >> 64) as u64;
+        let lo = (state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda94_2042_e4dd_58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire rejection).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let l = m as u64;
+            if l >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+            // reject and redraw
+        }
+    }
+
+    /// Uniform usize in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range {lo}..{hi}");
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli draw.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second value discarded for
+    /// statelessness; fine at our call volumes).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean / std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; valid for any shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive");
+        if shape < 1.0 {
+            // boost: G(a) = G(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u: f64 = self.next_f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Categorical draw from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical weights sum to zero");
+        let mut t = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_same_seed() {
+        let mut a = Pcg64::seed(42);
+        let mut b = Pcg64::seed(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed(1);
+        let mut b = Pcg64::seed(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn split_streams_decorrelated() {
+        let mut root = Pcg64::seed(7);
+        let mut c1 = root.split(1);
+        let mut c2 = root.split(2);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Pcg64::seed(4);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut rng = Pcg64::seed(5);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.below(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn below_never_exceeds() {
+        let mut rng = Pcg64::seed(6);
+        for n in [1u64, 2, 7, 1000] {
+            for _ in 0..1000 {
+                assert!(rng.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed(8);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Pcg64::seed(9);
+        for shape in [0.5, 1.0, 2.5, 10.0] {
+            let n = 50_000;
+            let mean = (0..n).map(|_| rng.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut rng = Pcg64::seed(10);
+        let w = [1.0, 3.0, 6.0];
+        let mut counts = [0usize; 3];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / n as f64 - 0.6).abs() < 0.02);
+        assert!((counts[1] as f64 / n as f64 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed(11);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Pcg64::seed(12);
+        for _ in 0..100 {
+            let v = rng.sample_indices(50, 20);
+            assert_eq!(v.len(), 20);
+            let mut s = v.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 20);
+            assert!(v.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_more_than_n_panics() {
+        Pcg64::seed(0).sample_indices(3, 4);
+    }
+}

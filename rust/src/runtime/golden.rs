@@ -1,0 +1,62 @@
+//! Golden-input generators — bit-identical mirrors of `python/compile/aot.py`.
+//!
+//! The AOT manifest records outputs of each artifact on inputs from these
+//! generators; the rust integration tests regenerate the same inputs, run
+//! the *compiled artifacts* through PJRT, and assert the outputs match.
+//! This closes the loop python-jit ↔ HLO-text ↔ rust-PJRT numerically.
+
+/// `v[i] = ((((offset+i+1) * 2654435761) mod 2^32) / 2^32 - 0.5) * scale`
+/// computed in f64, cast to f32 — identical to `aot.golden_vec`.
+pub fn golden_vec(offset: u64, count: usize, scale: f64) -> Vec<f32> {
+    (0..count as u64)
+        .map(|i| {
+            let idx = offset + i + 1;
+            let hashed = idx.wrapping_mul(2654435761) % (1u64 << 32);
+            ((hashed as f64 / 2f64.powi(32) - 0.5) * scale) as f32
+        })
+        .collect()
+}
+
+/// `y[i] = bit0 of the same hash` — identical to `aot.golden_labels`.
+pub fn golden_labels(offset: u64, count: usize) -> Vec<f32> {
+    (0..count as u64)
+        .map(|i| {
+            let idx = offset + i + 1;
+            let hashed = idx.wrapping_mul(2654435761) % (1u64 << 32);
+            (hashed & 1) as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_first_value() {
+        // hash(1) = 2654435761; v = (2654435761/2^32 - 0.5) * 1.0
+        let expect = (2654435761f64 / 2f64.powi(32) - 0.5) as f32;
+        assert_eq!(golden_vec(0, 1, 1.0)[0], expect);
+    }
+
+    #[test]
+    fn offset_slices_consistent() {
+        let long = golden_vec(0, 20, 2.0);
+        let tail = golden_vec(10, 10, 2.0);
+        assert_eq!(&long[10..], &tail[..]);
+    }
+
+    #[test]
+    fn labels_binary() {
+        let y = golden_labels(0, 1000);
+        assert!(y.iter().all(|&v| v == 0.0 || v == 1.0));
+        let ones: usize = y.iter().filter(|&&v| v == 1.0).count();
+        assert!(ones > 300 && ones < 700, "ones {ones}");
+    }
+
+    #[test]
+    fn range_bounded() {
+        let v = golden_vec(123, 10_000, 2.0);
+        assert!(v.iter().all(|x| x.abs() <= 1.0));
+    }
+}

@@ -1,0 +1,272 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! The python compile path (`make artifacts`) leaves shape-specialized
+//! HLO-text files plus `manifest.json` in `artifacts/`; this module is the
+//! only place that touches PJRT.  [`Engine`] owns one CPU client, compiles
+//! each artifact on first use, validates every call against the manifest
+//! shapes, and returns plain `Vec<f32>` outputs.
+//!
+//! Threading: the `xla` crate's client is `Rc`-based (not `Send`), so an
+//! `Engine` is thread-local by construction.  The actor-mode coordinator
+//! gives each node thread its own `Engine` (compiling only the artifacts
+//! that node needs); the fused driver uses a single engine on the main
+//! thread.  Compilation is cached per engine.
+
+pub mod golden;
+
+use crate::jsonl::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shapes the artifacts were specialized to (manifest `config` block).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelShapes {
+    pub n: usize,
+    pub d: usize,
+    pub hidden: usize,
+    pub m: usize,
+    pub q: usize,
+    pub shard: usize,
+    /// Flat parameter count.
+    pub p: usize,
+}
+
+/// One artifact's interface.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub shapes: ModelShapes,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub goldens: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json")).with_context(|| {
+            format!(
+                "loading manifest from {} — run `make artifacts` first",
+                dir.display()
+            )
+        })?;
+        let c = j.get("config")?;
+        let shapes = ModelShapes {
+            n: c.get("n")?.as_usize()?,
+            d: c.get("d")?.as_usize()?,
+            hidden: c.get("hidden")?.as_usize()?,
+            m: c.get("m")?.as_usize()?,
+            q: c.get("q")?.as_usize()?,
+            shard: c.get("shard")?.as_usize()?,
+            p: c.get("p")?.as_usize()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            let inputs = spec
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(Json::as_shape)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(Json::as_shape)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { file: spec.get("file")?.as_str()?.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), shapes, artifacts, goldens: j.get("goldens")?.clone() })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest (have: {:?})", self.artifacts.keys().collect::<Vec<_>>()))
+    }
+}
+
+/// A loaded PJRT engine with a lazy per-artifact executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over `dir` (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine { client, manifest, exes: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn shapes(&self) -> ModelShapes {
+        self.manifest.shapes
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact executable.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(std::rc::Rc::clone(exe));
+        }
+        let spec = self.manifest.spec(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling `{name}`: {e}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), std::rc::Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Eagerly compile a set of artifacts (startup cost paid once).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.executable(name)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` on f32 inputs; shapes validated against the manifest.
+    /// Returns one `Vec<f32>` per output (scalars are length-1).
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "`{name}` expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!(
+                    "`{name}` input {i}: expected {:?} = {want} elements, got {}",
+                    shape,
+                    data.len()
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape input {i} of `{name}`: {e}"))?
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let out = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing `{name}`: {e}"))?;
+        let mut tuple = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching `{name}` result: {e}"))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decomposing `{name}` result: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "`{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut result = Vec::with_capacity(parts.len());
+        for (o, part) in parts.into_iter().enumerate() {
+            let v = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {o} of `{name}` to f32: {e}"))?;
+            let want: usize = spec.outputs[o].iter().product();
+            if v.len() != want {
+                bail!(
+                    "`{name}` output {o}: expected {:?} = {want} elements, got {}",
+                    spec.outputs[o],
+                    v.len()
+                );
+            }
+            result.push(v);
+        }
+        Ok(result)
+    }
+
+    /// Sanity-check this engine against the config the caller expects.
+    pub fn check_config(&self, n: usize, d: usize, hidden: usize, m: usize, q: usize) -> Result<()> {
+        let s = self.manifest.shapes;
+        if (s.n, s.d, s.hidden, s.m, s.q) != (n, d, hidden, m, q) {
+            bail!(
+                "artifacts were compiled for (n={}, d={}, hidden={}, m={}, q={}) but the \
+                 experiment wants (n={n}, d={d}, hidden={hidden}, m={m}, q={q}); \
+                 re-run `make artifacts N={n} D={d} HIDDEN={hidden} M={m} Q={q}`",
+                s.n, s.d, s.hidden, s.m, s.q
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory (overridable via config / `--artifacts`).
+pub fn default_dir() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need real artifacts live in rust/tests/ (integration,
+    // gated on `artifacts/manifest.json` existing).  Here: manifest parsing.
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let dir = std::env::temp_dir().join(format!("decfl_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "version": 1,
+              "config": {"n":4,"d":6,"hidden":5,"m":3,"q":2,"shard":7,"p":41},
+              "artifacts": {
+                "grad_step": {"file":"grad_step.hlo.txt","inputs":[[41],[3,6],[3]],"outputs":[[],[41]]}
+              },
+              "goldens": {"grad_step": {"loss": 0.5}}
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.shapes.p, 41);
+        assert_eq!(m.spec("grad_step").unwrap().inputs[1], vec![3, 6]);
+        assert!(m.spec("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors_helpfully() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

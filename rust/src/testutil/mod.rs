@@ -1,0 +1,134 @@
+//! Miniature property-based testing harness.
+//!
+//! `proptest` is unavailable in this offline environment, so invariant tests
+//! use this harness instead: run a property over many seeded random cases,
+//! and on failure greedily *shrink* the integer case parameters toward
+//! minimal reproducers before reporting.  The failing seed is printed so any
+//! case can be replayed deterministically.
+
+use crate::rng::Pcg64;
+
+/// Number of cases per property (kept moderate; the suite has many).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` random cases derived from `seed`.
+/// The property receives a fresh deterministic RNG per case; returning
+/// `Err(msg)` (or panicking) fails the run with the case index + seed.
+pub fn check<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::seed(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {case_seed}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but the property takes an integer size drawn from
+/// `[lo, hi)`; on failure the size is shrunk toward `lo` to find a minimal
+/// failing size before panicking.
+pub fn check_sized<F>(name: &str, cases: usize, seed: u64, lo: usize, hi: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::seed(case_seed);
+        let size = rng.range(lo, hi);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: retry smaller sizes with the same stream seed
+            let mut min_size = size;
+            let mut min_msg = msg;
+            let mut s = size;
+            while s > lo {
+                s = lo + (s - lo) / 2;
+                let mut rng2 = Pcg64::seed(case_seed);
+                let _ = rng2.range(lo, hi); // consume the size draw as before
+                if let Err(m2) = prop(&mut rng2, s) {
+                    min_size = s;
+                    min_msg = m2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {case_seed}, \
+                 shrunk size {min_size}): {min_msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Assert two f64 scalars are close (relative + absolute).
+pub fn close64(x: f64, y: f64, tol: f64) -> bool {
+    (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 16, 0, |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn check_reports_failure() {
+        check("fails", 8, 0, |rng| {
+            if rng.next_f64() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk size 1")]
+    fn check_sized_shrinks_to_minimum() {
+        // property fails for every size >= 1 → shrinker must reach lo = 1
+        check_sized("always-fails", 1, 0, 1, 100, |_rng, _size| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+    }
+
+    #[test]
+    fn assert_close_rejects_different() {
+        assert!(assert_close(&[1.0], &[1.1], 1e-6).is_err());
+    }
+
+    #[test]
+    fn close64_relative() {
+        assert!(close64(1e9, 1e9 + 1.0, 1e-6));
+        assert!(!close64(1.0, 2.0, 1e-6));
+    }
+}

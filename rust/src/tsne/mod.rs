@@ -1,0 +1,311 @@
+//! Exact t-SNE (Fig. 1R regeneration) + silhouette score.
+//!
+//! The paper's Fig. 1 (right) embeds samples from three hospitals with t-SNE
+//! and shows well-separated per-hospital clusters — the visual argument for
+//! data heterogeneity.  This is an exact O(n²) implementation (van der
+//! Maaten & Hinton, 2008): perplexity calibration by per-point binary search
+//! over Gaussian bandwidths, early exaggeration, momentum gradient descent.
+//! n is a few hundred samples, so quadratic cost is negligible.
+//!
+//! The silhouette score over hospital identity quantifies the separation so
+//! the heterogeneity claim is checkable numerically, not just visually.
+
+use crate::linalg::{dist2, Mat};
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// t-SNE hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iterations: usize,
+    pub learning_rate: f64,
+    /// Early-exaggeration factor applied for the first quarter of iterations.
+    pub exaggeration: f64,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            perplexity: 30.0,
+            iterations: 500,
+            learning_rate: 100.0,
+            exaggeration: 12.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Embed rows of `x` (n x d) into 2-d.
+pub fn tsne(x: &Mat, cfg: &TsneConfig) -> Result<Mat> {
+    let n = x.rows;
+    if n < 5 {
+        bail!("t-SNE needs at least 5 points, got {n}");
+    }
+    if cfg.perplexity >= n as f64 {
+        bail!("perplexity {} must be < n = {n}", cfg.perplexity);
+    }
+
+    // pairwise squared distances in input space
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = dist2(x.row(i), x.row(j));
+            d2[i * n + j] = v;
+            d2[j * n + i] = v;
+        }
+    }
+
+    // per-point bandwidths by binary search on perplexity
+    let target_entropy = cfg.perplexity.ln();
+    let mut p = vec![0.0f64; n * n];
+    for i in 0..n {
+        let row = &d2[i * n..(i + 1) * n];
+        let mut beta = 1.0; // 1 / (2 sigma^2)
+        let (mut lo, mut hi) = (0.0f64, f64::INFINITY);
+        let mut probs = vec![0.0f64; n];
+        for _ in 0..64 {
+            let mut sum = 0.0;
+            for j in 0..n {
+                probs[j] = if j == i { 0.0 } else { (-beta * row[j]).exp() };
+                sum += probs[j];
+            }
+            if sum <= 0.0 {
+                beta *= 0.5;
+                continue;
+            }
+            // entropy H = ln(sum) + beta * <d2>
+            let mut h = 0.0;
+            for j in 0..n {
+                if probs[j] > 0.0 {
+                    h += beta * row[j] * probs[j];
+                }
+            }
+            let entropy = sum.ln() + h / sum;
+            let diff = entropy - target_entropy;
+            if diff.abs() < 1e-5 {
+                break;
+            }
+            if diff > 0.0 {
+                lo = beta;
+                beta = if hi.is_finite() { (beta + hi) / 2.0 } else { beta * 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let sum: f64 = probs.iter().sum::<f64>().max(1e-300);
+        for j in 0..n {
+            p[i * n + j] = probs[j] / sum;
+        }
+    }
+
+    // symmetrize
+    let mut pij = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            pij[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+
+    // init embedding from small Gaussian noise
+    let mut rng = Pcg64::seed(cfg.seed);
+    let mut y: Vec<(f64, f64)> = (0..n).map(|_| (rng.normal() * 1e-2, rng.normal() * 1e-2)).collect();
+    let mut vel = vec![(0.0f64, 0.0f64); n];
+
+    let exag_end = cfg.iterations / 4;
+    for it in 0..cfg.iterations {
+        let exag = if it < exag_end { cfg.exaggeration } else { 1.0 };
+        let momentum = if it < exag_end { 0.5 } else { 0.8 };
+
+        // student-t affinities in embedding space
+        let mut qnum = vec![0.0f64; n * n];
+        let mut qsum = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y[i].0 - y[j].0;
+                let dy = y[i].1 - y[j].1;
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                qnum[i * n + j] = q;
+                qnum[j * n + i] = q;
+                qsum += 2.0 * q;
+            }
+        }
+        let qsum = qsum.max(1e-300);
+
+        // gradient
+        for i in 0..n {
+            let mut gx = 0.0;
+            let mut gy = 0.0;
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let qn = qnum[i * n + j];
+                let qij = (qn / qsum).max(1e-12);
+                let coeff = 4.0 * (exag * pij[i * n + j] - qij) * qn;
+                gx += coeff * (y[i].0 - y[j].0);
+                gy += coeff * (y[i].1 - y[j].1);
+            }
+            vel[i].0 = momentum * vel[i].0 - cfg.learning_rate * gx;
+            vel[i].1 = momentum * vel[i].1 - cfg.learning_rate * gy;
+        }
+        for i in 0..n {
+            y[i].0 += vel[i].0;
+            y[i].1 += vel[i].1;
+        }
+
+        // recenter
+        let cx = y.iter().map(|p| p.0).sum::<f64>() / n as f64;
+        let cy = y.iter().map(|p| p.1).sum::<f64>() / n as f64;
+        for pt in &mut y {
+            pt.0 -= cx;
+            pt.1 -= cy;
+        }
+    }
+
+    let mut out = Mat::zeros(n, 2);
+    for i in 0..n {
+        out[(i, 0)] = y[i].0;
+        out[(i, 1)] = y[i].1;
+    }
+    Ok(out)
+}
+
+/// Mean silhouette coefficient of a labeled embedding (label = hospital id).
+/// +1 = perfectly separated clusters, 0 = overlapping, < 0 = mixed.
+pub fn silhouette(points: &Mat, labels: &[usize]) -> f64 {
+    let n = points.rows;
+    assert_eq!(labels.len(), n);
+    let classes: std::collections::BTreeSet<usize> = labels.iter().copied().collect();
+    if classes.len() < 2 || n < 3 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..n {
+        // mean distance to own cluster (a) and nearest other cluster (b)
+        let mut own_sum = 0.0;
+        let mut own_cnt = 0usize;
+        let mut other: std::collections::BTreeMap<usize, (f64, usize)> = Default::default();
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = dist2(points.row(i), points.row(j)).sqrt();
+            if labels[j] == labels[i] {
+                own_sum += d;
+                own_cnt += 1;
+            } else {
+                let e = other.entry(labels[j]).or_insert((0.0, 0));
+                e.0 += d;
+                e.1 += 1;
+            }
+        }
+        if own_cnt == 0 || other.is_empty() {
+            continue;
+        }
+        let a = own_sum / own_cnt as f64;
+        let b = other
+            .values()
+            .map(|(s, c)| s / *c as f64)
+            .fold(f64::INFINITY, f64::min);
+        total += (b - a) / a.max(b);
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three tight, well-separated Gaussian blobs in 10-d.
+    fn blobs(n_per: usize, seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = Pcg64::seed(seed);
+        let centers = [5.0, -5.0, 0.0];
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for (c, &center) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                let mut row = vec![0.0; 10];
+                for (k, item) in row.iter_mut().enumerate() {
+                    let mu = if k % 3 == c { center } else { 0.0 };
+                    *item = mu + rng.normal() * 0.3;
+                }
+                rows.push(row);
+                labels.push(c);
+            }
+        }
+        (Mat::from_rows(&rows), labels)
+    }
+
+    #[test]
+    fn separates_blobs() {
+        let (x, labels) = blobs(30, 0);
+        let emb = tsne(&x, &TsneConfig { iterations: 300, perplexity: 15.0, ..Default::default() }).unwrap();
+        let s = silhouette(&emb, &labels);
+        assert!(s > 0.5, "silhouette {s}");
+    }
+
+    #[test]
+    fn output_shape_and_finite() {
+        let (x, _) = blobs(10, 1);
+        let emb = tsne(&x, &TsneConfig { iterations: 50, perplexity: 5.0, ..Default::default() }).unwrap();
+        assert_eq!((emb.rows, emb.cols), (30, 2));
+        assert!(emb.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, _) = blobs(8, 2);
+        let cfg = TsneConfig { iterations: 50, perplexity: 5.0, ..Default::default() };
+        let a = tsne(&x, &cfg).unwrap();
+        let b = tsne(&x, &cfg).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (x, _) = blobs(2, 3); // n = 6
+        assert!(tsne(&x, &TsneConfig { perplexity: 10.0, ..Default::default() }).is_err());
+        let tiny = Mat::zeros(3, 4);
+        assert!(tsne(&tiny, &TsneConfig::default()).is_err());
+    }
+
+    #[test]
+    fn silhouette_of_perfect_split_near_one() {
+        // two distant point pairs
+        let pts = Mat::from_rows(&[
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![10.0, 0.0],
+            vec![10.1, 0.0],
+        ]);
+        let s = silhouette(&pts, &[0, 0, 1, 1]);
+        assert!(s > 0.9, "{s}");
+    }
+
+    #[test]
+    fn silhouette_of_mixed_labels_low() {
+        let pts = Mat::from_rows(&[
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![0.2, 0.0],
+            vec![0.3, 0.0],
+        ]);
+        let s = silhouette(&pts, &[0, 1, 0, 1]);
+        assert!(s < 0.2, "{s}");
+    }
+
+    #[test]
+    fn silhouette_single_class_zero() {
+        let pts = Mat::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        assert_eq!(silhouette(&pts, &[0, 0, 0]), 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Integration: the `decfl` binary end-to-end (help, graph, native train,
+//! info, error paths).  PJRT-independent subcommands run unconditionally.
+
+mod common;
+
+use std::process::Command;
+
+fn decfl(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_decfl"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn decfl")
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = decfl(&["help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for sub in ["train", "fig2", "graph", "tsne", "speedup", "qsweep", "baselines"] {
+        assert!(text.contains(sub), "help missing `{sub}`");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = decfl(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_flag_fails_loudly() {
+    let out = decfl(&["train", "--bogus-flag", "1"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--bogus-flag"));
+}
+
+#[test]
+fn graph_subcommand_prints_spectral_stats() {
+    let out = decfl(&["graph", "--seed", "3"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("spectral gap"));
+    assert!(text.contains("20 nodes"));
+}
+
+#[test]
+fn native_train_csv_and_json() {
+    let json_path = std::env::temp_dir().join(format!("decfl_cli_{}.json", std::process::id()));
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fd-dsgd", "--steps", "60",
+        "--q", "10", "--eval-every", "2",
+        "--out", json_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.starts_with("comm_rounds,"), "csv header missing");
+    assert!(text.lines().count() >= 4);
+    let dumped = std::fs::read_to_string(&json_path).unwrap();
+    let j = decfl::jsonl::Json::parse(&dumped).unwrap();
+    assert_eq!(j.get("algo").unwrap().as_str().unwrap(), "fd-dsgd");
+    std::fs::remove_file(&json_path).ok();
+}
+
+#[test]
+fn info_requires_artifacts() {
+    let out = decfl(&["info", "--artifacts", "/nonexistent"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("make artifacts"));
+}
+
+#[test]
+fn info_with_artifacts() {
+    if common::artifacts_dir().is_none() {
+        return;
+    }
+    let out = decfl(&["info"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("P=1409"), "{text}");
+    assert!(text.contains("dsgt_round"));
+}

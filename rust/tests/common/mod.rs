@@ -1,0 +1,32 @@
+//! Shared helpers for integration tests.
+//!
+//! All PJRT integration tests need the AOT artifacts (`make artifacts`).
+//! If they are missing we *skip* (pass with a loud message) so plain
+//! `cargo test` still works in a fresh checkout; `make test` always builds
+//! artifacts first.
+
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: artifacts/manifest.json not found — run `make artifacts` for full coverage"
+        );
+        None
+    }
+}
+
+/// Relative+absolute closeness for f32 buffers crossing the PJRT boundary.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration: the PJRT artifacts and the native rust twin agree on every
+//! artifact-level operation — the strongest evidence that the three-layer
+//! stack computes what the paper's equations say.
+
+mod common;
+
+use decfl::coordinator::{Compute, NativeCompute, PjrtCompute};
+use decfl::rng::Pcg64;
+
+fn backends() -> Option<(PjrtCompute, NativeCompute)> {
+    let dir = common::artifacts_dir()?;
+    let pjrt = PjrtCompute::load(&dir).expect("pjrt load");
+    let s = pjrt.engine().shapes();
+    Some((pjrt, NativeCompute::new(s.d, s.hidden, s.n, s.m)))
+}
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn rand_labels(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect()
+}
+
+#[test]
+fn grad_step_agrees() {
+    let Some((pjrt, native)) = backends() else { return };
+    let (d, _, p) = pjrt.dims();
+    let s = pjrt.engine().shapes();
+    let mut rng = Pcg64::seed(1);
+    let theta = rand_vec(&mut rng, p, 0.2);
+    let x = rand_vec(&mut rng, s.m * d, 1.0);
+    let y = rand_labels(&mut rng, s.m);
+    let (lp, gp) = pjrt.grad_step(&theta, &x, &y).unwrap();
+    let (ln_, gn) = native.grad_step(&theta, &x, &y).unwrap();
+    assert!((lp - ln_).abs() < 1e-5 * (1.0 + ln_.abs()), "loss {lp} vs {ln_}");
+    common::assert_close(&gp, &gn, 1e-4, "grad");
+}
+
+#[test]
+fn combine_agrees() {
+    let Some((pjrt, native)) = backends() else { return };
+    let (_, _, p) = pjrt.dims();
+    let s = pjrt.engine().shapes();
+    let mut rng = Pcg64::seed(2);
+    // a real metropolis row, not uniform weights
+    let g = decfl::graph::Graph::build(
+        &decfl::graph::Topology::RandomGeometric { radius: 0.35 },
+        s.n,
+        &mut Pcg64::seed(3),
+    )
+    .unwrap();
+    let w = decfl::mixing::build(&g, decfl::mixing::Scheme::Metropolis);
+    let wrow: Vec<f32> = w.row(0).iter().map(|&v| v as f32).collect();
+    let thetas = rand_vec(&mut rng, s.n * p, 0.3);
+    let cp = pjrt.combine(&wrow, &thetas).unwrap();
+    let cn = native.combine(&wrow, &thetas).unwrap();
+    common::assert_close(&cp, &cn, 1e-5, "combine");
+}
+
+#[test]
+fn dsgd_round_agrees() {
+    let Some((pjrt, native)) = backends() else { return };
+    let (d, _, p) = pjrt.dims();
+    let s = pjrt.engine().shapes();
+    let mut rng = Pcg64::seed(4);
+    let g = decfl::graph::Graph::build(
+        &decfl::graph::Topology::Ring,
+        s.n,
+        &mut Pcg64::seed(5),
+    )
+    .unwrap();
+    let w = decfl::mixing::to_f32(&decfl::mixing::build(&g, decfl::mixing::Scheme::Metropolis));
+    let theta = rand_vec(&mut rng, s.n * p, 0.3);
+    let bx = rand_vec(&mut rng, s.n * s.m * d, 1.0);
+    let by = rand_labels(&mut rng, s.n * s.m);
+    let (tp, lp) = pjrt.dsgd_round(&w, &theta, &bx, &by, 0.02).unwrap();
+    let (tn, ln_) = native.dsgd_round(&w, &theta, &bx, &by, 0.02).unwrap();
+    common::assert_close(&tp, &tn, 1e-4, "dsgd theta");
+    for (a, b) in lp.iter().zip(&ln_) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "losses {a} vs {b}");
+    }
+}
+
+#[test]
+fn dsgt_round_agrees() {
+    let Some((pjrt, native)) = backends() else { return };
+    let (d, _, p) = pjrt.dims();
+    let s = pjrt.engine().shapes();
+    let mut rng = Pcg64::seed(6);
+    let g = decfl::graph::Graph::build(
+        &decfl::graph::Topology::Ring,
+        s.n,
+        &mut Pcg64::seed(7),
+    )
+    .unwrap();
+    let w = decfl::mixing::to_f32(&decfl::mixing::build(&g, decfl::mixing::Scheme::Metropolis));
+    let theta = rand_vec(&mut rng, s.n * p, 0.3);
+    let y_tr = rand_vec(&mut rng, s.n * p, 0.1);
+    let g_old = rand_vec(&mut rng, s.n * p, 0.1);
+    let bx = rand_vec(&mut rng, s.n * s.m * d, 1.0);
+    let by = rand_labels(&mut rng, s.n * s.m);
+    let (t1, y1, g1, l1) = pjrt.dsgt_round(&w, &theta, &y_tr, &g_old, &bx, &by, 0.02).unwrap();
+    let (t2, y2, g2, l2) = native.dsgt_round(&w, &theta, &y_tr, &g_old, &bx, &by, 0.02).unwrap();
+    common::assert_close(&t1, &t2, 1e-4, "dsgt theta");
+    common::assert_close(&y1, &y2, 1e-4, "dsgt tracker");
+    common::assert_close(&g1, &g2, 1e-4, "dsgt grads");
+    for (a, b) in l1.iter().zip(&l2) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()));
+    }
+}
+
+#[test]
+fn eval_and_predict_agree() {
+    let Some((pjrt, native)) = backends() else { return };
+    let (_, _, p) = pjrt.dims();
+    let s = pjrt.engine().shapes();
+    let mut rng = Pcg64::seed(8);
+    let ds = decfl::data::generate(&decfl::data::DataConfig {
+        n_hospitals: s.n,
+        records_per_hospital: s.shard,
+        records_jitter: 0,
+        ..decfl::data::DataConfig::default()
+    })
+    .unwrap();
+    // exact-shard sizes so native and pjrt see identical data
+    let ds = ds.resampled_to(s.shard);
+    let theta = rand_vec(&mut rng, s.n * p, 0.3);
+    let ep = pjrt.eval_full(&theta, &ds.shards).unwrap();
+    let en = native.eval_full(&theta, &ds.shards).unwrap();
+    assert!((ep.0 - en.0).abs() < 1e-4 * (1.0 + en.0.abs()), "loss {} vs {}", ep.0, en.0);
+    assert!((ep.1 - en.1).abs() < 1e-6, "acc {} vs {}", ep.1, en.1);
+    assert!((ep.2 - en.2).abs() < 1e-5 * (1.0 + en.2.abs()), "stat {} vs {}", ep.2, en.2);
+    assert!((ep.3 - en.3).abs() < 1e-4 * (1.0 + en.3.abs()), "cons {} vs {}", ep.3, en.3);
+
+    let probs_p = pjrt.predict(&theta[..p], &ds.test.x[..s.shard.min(ds.test.n) * s.d]).unwrap();
+    let probs_n = native.predict(&theta[..p], &ds.test.x[..s.shard.min(ds.test.n) * s.d]).unwrap();
+    common::assert_close(&probs_p, &probs_n, 1e-4, "predict");
+}

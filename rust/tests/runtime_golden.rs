@@ -1,0 +1,120 @@
+//! Integration: the compiled HLO artifacts reproduce the golden values the
+//! python compile path recorded in `manifest.json` — closing the loop
+//! python-jit ↔ HLO-text ↔ rust-PJRT numerically.
+
+mod common;
+
+use decfl::runtime::{golden, Engine};
+
+fn engine() -> Option<Engine> {
+    common::artifacts_dir().map(|d| Engine::load(&d).expect("engine load"))
+}
+
+#[test]
+fn manifest_shapes_sane() {
+    let Some(eng) = engine() else { return };
+    let s = eng.shapes();
+    assert_eq!(s.d, 42, "paper problem dimension");
+    assert_eq!(s.p, s.d * s.hidden + 2 * s.hidden + 1);
+    for name in ["grad_step", "local_steps", "local_steps_all", "combine", "dsgd_round", "dsgt_round", "eval_full", "predict"] {
+        assert!(eng.manifest().spec(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn grad_step_matches_golden() {
+    let Some(eng) = engine() else { return };
+    let s = eng.shapes();
+    let theta = golden::golden_vec(0, s.p, 0.2);
+    let x = golden::golden_vec(s.p as u64, s.m * s.d, 2.0);
+    let y = golden::golden_labels((s.p + s.m * s.d) as u64, s.m);
+
+    let out = eng.execute("grad_step", &[&theta, &x, &y]).unwrap();
+    let loss = out[0][0] as f64;
+    let grad = &out[1];
+
+    let g = eng.manifest().goldens.get("grad_step").unwrap();
+    let want_loss = g.get("loss").unwrap().as_f64().unwrap();
+    let want_norm = g.get("grad_norm").unwrap().as_f64().unwrap();
+    let want_head = g.get("grad_head").unwrap().as_f64_vec().unwrap();
+
+    assert!((loss - want_loss).abs() < 1e-5 * (1.0 + want_loss.abs()), "loss {loss} vs {want_loss}");
+    let norm = decfl::algo::l2_norm(grad);
+    assert!((norm - want_norm).abs() < 1e-4 * (1.0 + want_norm), "norm {norm} vs {want_norm}");
+    for (i, w) in want_head.iter().enumerate() {
+        assert!((grad[i] as f64 - w).abs() < 1e-6 + 1e-4 * w.abs(), "grad[{i}] {} vs {w}", grad[i]);
+    }
+}
+
+#[test]
+fn combine_matches_golden() {
+    let Some(eng) = engine() else { return };
+    let s = eng.shapes();
+    let wrow = vec![1.0f32 / s.n as f32; s.n];
+    let big = golden::golden_vec(1000, s.n * s.p, 0.2);
+    let out = eng.execute("combine", &[&wrow, &big]).unwrap();
+    let g = eng.manifest().goldens.get("combine").unwrap();
+    let want_norm = g.get("out_norm").unwrap().as_f64().unwrap();
+    let want_head = g.get("out_head").unwrap().as_f64_vec().unwrap();
+    let norm = decfl::algo::l2_norm(&out[0]);
+    assert!((norm - want_norm).abs() < 1e-4 * (1.0 + want_norm), "norm {norm} vs {want_norm}");
+    for (i, w) in want_head.iter().enumerate() {
+        assert!((out[0][i] as f64 - w).abs() < 1e-6 + 1e-4 * w.abs());
+    }
+}
+
+#[test]
+fn local_steps_matches_golden() {
+    let Some(eng) = engine() else { return };
+    let s = eng.shapes();
+    // goldens were computed with the full-Q shape in aot.py
+    let q = eng.manifest().spec("local_steps").unwrap().inputs[3][0];
+    let theta = golden::golden_vec(0, s.p, 0.2);
+    let bx = golden::golden_vec(2000, q * s.m * s.d, 2.0);
+    let by = golden::golden_labels((2000 + q * s.m * s.d) as u64, q * s.m);
+    let lrs: Vec<f32> = (1..=q).map(|r| 0.02 / (r as f32).sqrt()).collect();
+    let out = eng.execute("local_steps", &[&theta, &bx, &by, &lrs]).unwrap();
+
+    let g = eng.manifest().goldens.get("local_steps").unwrap();
+    let want_theta_norm = g.get("theta_norm").unwrap().as_f64().unwrap();
+    let want_first = g.get("loss_first").unwrap().as_f64().unwrap();
+    let want_last = g.get("loss_last").unwrap().as_f64().unwrap();
+
+    let theta_norm = decfl::algo::l2_norm(&out[0]);
+    assert!(
+        (theta_norm - want_theta_norm).abs() < 1e-3 * (1.0 + want_theta_norm),
+        "theta norm {theta_norm} vs {want_theta_norm}"
+    );
+    let losses = &out[1];
+    assert!((losses[0] as f64 - want_first).abs() < 1e-4 * (1.0 + want_first));
+    assert!((losses[q - 1] as f64 - want_last).abs() < 1e-3 * (1.0 + want_last));
+    // (no monotonicity assertion: golden inputs are hash noise, not learnable)
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let Some(eng) = engine() else { return };
+    let s = eng.shapes();
+    let theta = vec![0.0f32; s.p];
+    // wrong arity
+    assert!(eng.execute("grad_step", &[&theta]).is_err());
+    // wrong element count
+    let bad_x = vec![0.0f32; 3];
+    let y = vec![0.0f32; s.m];
+    assert!(eng.execute("grad_step", &[&theta, &bad_x, &y]).is_err());
+    // unknown artifact
+    assert!(eng.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let eng = Engine::load(&dir).unwrap();
+    let t0 = std::time::Instant::now();
+    eng.warmup(&["grad_step"]).unwrap();
+    let cold = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    eng.warmup(&["grad_step"]).unwrap();
+    let warm = t1.elapsed();
+    assert!(warm < cold / 10, "cache miss? cold {cold:?} warm {warm:?}");
+}

@@ -1,0 +1,93 @@
+//! Integration: end-to-end training through the PJRT artifacts at the
+//! paper's configuration (N=20, d=42, m=20, Q=100) — fused and actor modes,
+//! plus the PJRT-vs-native trajectory cross-check.
+
+mod common;
+
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+
+fn paper_cfg(steps: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Pjrt;
+    cfg.total_steps = steps;
+    cfg.eval_every = 1;
+    cfg
+}
+
+#[test]
+fn fused_fd_dsgt_three_rounds() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let cfg = paper_cfg(300); // 3 comm rounds at Q=100
+    let asm = assemble(&cfg).unwrap();
+    let log = run_on(&cfg, &asm).unwrap();
+    assert_eq!(log.rows.last().unwrap().comm_rounds, 3);
+    assert_eq!(log.rows.last().unwrap().local_steps, 300);
+    let first = log.rows.first().unwrap().loss;
+    let last = log.rows.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+    // DSGT bytes: 2 payloads per round over 2|E| directed edges
+    let e = asm.graph.edge_count() as u64;
+    let p = 1409u64;
+    assert_eq!(log.rows.last().unwrap().bytes, 3 * 2 * (2 * e) * p * 4);
+}
+
+#[test]
+fn fused_fd_dsgd_three_rounds() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = paper_cfg(300);
+    cfg.algo = AlgoKind::FdDsgd;
+    let asm = assemble(&cfg).unwrap();
+    let log = run_on(&cfg, &asm).unwrap();
+    let first = log.rows.first().unwrap().loss;
+    let last = log.rows.last().unwrap().loss;
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn pjrt_and_native_trajectories_agree() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = paper_cfg(200); // 2 rounds
+    cfg.algo = AlgoKind::FdDsgt;
+    let asm = assemble(&cfg).unwrap();
+    let log_pjrt = run_on(&cfg, &asm).unwrap();
+    let mut cfg_n = cfg.clone();
+    cfg_n.backend = Backend::Native;
+    let log_native = run_on(&cfg_n, &asm).unwrap();
+    assert_eq!(log_pjrt.rows.len(), log_native.rows.len());
+    for (rp, rn) in log_pjrt.rows.iter().zip(&log_native.rows) {
+        // 200 sequential f32 updates: modest divergence tolerance
+        assert!(
+            (rp.loss - rn.loss).abs() < 5e-3 * (1.0 + rn.loss.abs()),
+            "round {}: pjrt {} vs native {}",
+            rp.comm_rounds,
+            rp.loss,
+            rn.loss
+        );
+        assert_eq!(rp.bytes, rn.bytes, "accounting must be identical");
+    }
+}
+
+#[test]
+fn actor_mode_pjrt_small_rounds() {
+    let Some(_) = common::artifacts_dir() else { return };
+    // actor mode compiles one engine per node thread — keep it to 1 round
+    let mut cfg = paper_cfg(100);
+    cfg.mode = Mode::Actors;
+    let asm = assemble(&cfg).unwrap();
+    let log = run_on(&cfg, &asm).unwrap();
+    assert_eq!(log.rows.last().unwrap().comm_rounds, 1);
+    assert!(log.rows.last().unwrap().bytes > 0);
+    assert!(log.rows.last().unwrap().loss.is_finite());
+}
+
+#[test]
+fn config_mismatch_is_diagnosed() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = paper_cfg(100);
+    cfg.q = 7; // artifacts were built with Q=100
+    let asm = assemble(&cfg).unwrap();
+    let err = run_on(&cfg, &asm).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
