@@ -1,0 +1,96 @@
+//! EXP-P2: serial vs threaded native whole-network ops — the round engine's
+//! hot path (`local_steps_all`, plus `dsgd_round` / `eval_full`) at growing
+//! node counts.  Per-node work is embarrassingly parallel over disjoint
+//! `[i*p..(i+1)*p]` slices; the bench verifies bitwise-equal outputs, then
+//! records the speedup.
+//!
+//!     cargo bench --bench bench_engine
+
+use decfl::benchutil::{bench, report, section};
+use decfl::coordinator::{Compute, NativeCompute};
+use decfl::rng::Pcg64;
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn rand_labels(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let (d, h, m, local) = (42usize, 32usize, 20usize, 4usize);
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    println!("native whole-network ops, serial vs threaded ({cores} cores), d={d} h={h} m={m}");
+
+    for &n in &[10usize, 50, 200] {
+        let serial = NativeCompute::new(d, h, n, m).with_threads(1);
+        let threaded = NativeCompute::new(d, h, n, m); // 0 = auto: one per core
+        let p = serial.dims().2;
+        let mut rng = Pcg64::seed(7);
+        let theta = rand_vec(&mut rng, n * p, 0.2);
+        let lx = rand_vec(&mut rng, n * local * m * d, 1.0);
+        let ly = rand_labels(&mut rng, n * local * m);
+        let lrs: Vec<f32> = (1..=local).map(|r| 0.02 / (r as f32).sqrt()).collect();
+        let cx = rand_vec(&mut rng, n * m * d, 1.0);
+        let cy = rand_labels(&mut rng, n * m);
+        let w = vec![1.0f32 / n as f32; n * n];
+
+        // determinism pin before timing anything
+        let a = serial.local_steps_all(&theta, &lx, &ly, &lrs)?;
+        let b = threaded.local_steps_all(&theta, &lx, &ly, &lrs)?;
+        anyhow::ensure!(a.0 == b.0 && a.1 == b.1, "threaded result differs at n={n}");
+
+        section(&format!("local_steps_all  n={n} ({local} steps/node)"));
+        let ts = bench(1.0, || {
+            std::hint::black_box(serial.local_steps_all(&theta, &lx, &ly, &lrs).unwrap());
+        });
+        let tp = bench(1.0, || {
+            std::hint::black_box(threaded.local_steps_all(&theta, &lx, &ly, &lrs).unwrap());
+        });
+        report("serial (threads=1)", &ts);
+        report(&format!("threaded (auto, {cores} cores)"), &tp);
+        println!("speedup: {:.2}x", ts.p50_s / tp.p50_s);
+
+        section(&format!("dsgd_round       n={n}"));
+        let ts = bench(0.5, || {
+            std::hint::black_box(serial.dsgd_round(&w, &theta, &cx, &cy, 0.02).unwrap());
+        });
+        let tp = bench(0.5, || {
+            std::hint::black_box(threaded.dsgd_round(&w, &theta, &cx, &cy, 0.02).unwrap());
+        });
+        report("serial (threads=1)", &ts);
+        report(&format!("threaded (auto, {cores} cores)"), &tp);
+        println!("speedup: {:.2}x", ts.p50_s / tp.p50_s);
+    }
+
+    // eval_full over real shards at one representative size
+    let n = 50;
+    let ds = decfl::data::generate(&decfl::data::DataConfig {
+        n_hospitals: n,
+        records_per_hospital: 200,
+        records_jitter: 0,
+        heterogeneity: 0.5,
+        ..decfl::data::DataConfig::default()
+    })?;
+    let serial = NativeCompute::new(ds.d, h, n, m).with_threads(1);
+    let threaded = NativeCompute::new(ds.d, h, n, m);
+    let p = serial.dims().2;
+    let mut rng = Pcg64::seed(9);
+    let theta = rand_vec(&mut rng, n * p, 0.2);
+    let a = serial.eval_full(&theta, &ds.shards)?;
+    let b = threaded.eval_full(&theta, &ds.shards)?;
+    anyhow::ensure!(a == b, "threaded eval_full differs");
+    section(&format!("eval_full        n={n} (200 records/shard)"));
+    let ts = bench(0.5, || {
+        std::hint::black_box(serial.eval_full(&theta, &ds.shards).unwrap());
+    });
+    let tp = bench(0.5, || {
+        std::hint::black_box(threaded.eval_full(&theta, &ds.shards).unwrap());
+    });
+    report("serial (threads=1)", &ts);
+    report(&format!("threaded (auto, {cores} cores)"), &tp);
+    println!("speedup: {:.2}x", ts.p50_s / tp.p50_s);
+
+    Ok(())
+}

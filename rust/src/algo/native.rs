@@ -177,6 +177,63 @@ impl NativeModel {
         out.into_iter().map(|v| v as f32).collect()
     }
 
+    /// Node `i`'s eq.-2 update given the whole stacked Θ: `(W Θ)_i − lr ∇g_i`
+    /// → (θ′_i, loss).  The ONLY implementation of the DSGD node update —
+    /// the serial round below and the threaded `NativeCompute` fan-out both
+    /// call it, so the math cannot desync between paths.
+    pub fn dsgd_node(
+        &self,
+        wrow: &[f32],
+        theta: &[f32],
+        theta_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+    ) -> (Vec<f32>, f64) {
+        let mut t_next = self.combine(wrow, theta);
+        let (loss, grad) = self.loss_and_grad(theta_i, bx_i, by_i);
+        axpy(&mut t_next, -lr, &grad);
+        (t_next, loss)
+    }
+
+    /// Node `i`'s eq.-3 update given the stacked Θ and tracker Y:
+    /// `θ′_i = (W Θ)_i − lr y_i`, `g′_i = ∇g_i(θ′_i)`,
+    /// `y′_i = (W Y)_i + g′_i − g_i` → (θ′_i, y′_i, g′_i, loss).
+    /// Single source of the DSGT node math for serial and threaded paths.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgt_node(
+        &self,
+        wrow: &[f32],
+        theta: &[f32],
+        y_tr: &[f32],
+        y_i: &[f32],
+        g_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, f64) {
+        let mut t_next = self.combine(wrow, theta);
+        axpy(&mut t_next, -lr, y_i);
+        let (loss, grad) = self.loss_and_grad(&t_next, bx_i, by_i);
+        let mut y_next = self.combine(wrow, y_tr);
+        axpy(&mut y_next, 1.0, &grad);
+        axpy(&mut y_next, -1.0, g_i);
+        (t_next, y_next, grad, loss)
+    }
+
+    /// Node `i`'s eval partial: (loss, grad, correct, total) on its shard.
+    /// `eval_full` (serial and threaded) reduces these in node order.
+    pub fn eval_node(&self, theta_i: &[f32], shard: &crate::data::Shard) -> (f64, Vec<f32>, usize, usize) {
+        let (loss, grad) = self.loss_and_grad(theta_i, &shard.x, &shard.y);
+        let zs = self.logits(theta_i, &shard.x);
+        let correct = zs
+            .iter()
+            .zip(&shard.y)
+            .filter(|(z, &yv)| ((**z > 0.0) as u32 as f32) == yv)
+            .count();
+        (loss, grad, correct, shard.y.len())
+    }
+
     /// Whole-network eq. 2 — `dsgd_round` twin.
     /// Returns (Θ′ `[n,p]`, per-node losses).
     pub fn dsgd_round(
@@ -190,25 +247,27 @@ impl NativeModel {
         m: usize,
     ) -> (Vec<f32>, Vec<f64>) {
         let p = self.p();
-        let mut out = vec![0.0f32; n * p];
+        let mut out = Vec::with_capacity(n * p);
         let mut losses = Vec::with_capacity(n);
         for i in 0..n {
-            let mixed = self.combine(&w[i * n..(i + 1) * n], theta);
-            let (loss, grad) = self.loss_and_grad(
+            let (t, loss) = self.dsgd_node(
+                &w[i * n..(i + 1) * n],
+                theta,
                 &theta[i * p..(i + 1) * p],
                 &bx[i * m * self.d..(i + 1) * m * self.d],
                 &by[i * m..(i + 1) * m],
+                lr,
             );
-            let dst = &mut out[i * p..(i + 1) * p];
-            dst.copy_from_slice(&mixed);
-            axpy(dst, -lr, &grad);
+            out.extend_from_slice(&t);
             losses.push(loss);
         }
         (out, losses)
     }
 
     /// Whole-network eq. 3 — `dsgt_round` twin.
-    /// Returns (Θ′, Y′, G′, losses).
+    /// Returns (Θ′, Y′, G′, losses).  Node `i` depends only on its own rows
+    /// of Y/G plus the shared Θ/Y stacks, so the round is a straight loop
+    /// over [`Self::dsgt_node`].
     #[allow(clippy::too_many_arguments)]
     pub fn dsgt_round(
         &self,
@@ -223,59 +282,66 @@ impl NativeModel {
         m: usize,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>) {
         let p = self.p();
-        // Θ' = W Θ - lr Y
-        let mut theta_next = vec![0.0f32; n * p];
-        for i in 0..n {
-            let mixed = self.combine(&w[i * n..(i + 1) * n], theta);
-            let dst = &mut theta_next[i * p..(i + 1) * p];
-            dst.copy_from_slice(&mixed);
-            axpy(dst, -lr, &y_tr[i * p..(i + 1) * p]);
-        }
-        // G' = grad(Θ'), Y' = W Y + G' - G
-        let mut g_new = vec![0.0f32; n * p];
-        let mut y_next = vec![0.0f32; n * p];
+        let mut theta_next = Vec::with_capacity(n * p);
+        let mut y_next = Vec::with_capacity(n * p);
+        let mut g_new = Vec::with_capacity(n * p);
         let mut losses = Vec::with_capacity(n);
         for i in 0..n {
-            let (loss, grad) = self.loss_and_grad(
-                &theta_next[i * p..(i + 1) * p],
+            let (t, y, g, loss) = self.dsgt_node(
+                &w[i * n..(i + 1) * n],
+                theta,
+                y_tr,
+                &y_tr[i * p..(i + 1) * p],
+                &g_old[i * p..(i + 1) * p],
                 &bx[i * m * self.d..(i + 1) * m * self.d],
                 &by[i * m..(i + 1) * m],
+                lr,
             );
-            g_new[i * p..(i + 1) * p].copy_from_slice(&grad);
+            theta_next.extend_from_slice(&t);
+            y_next.extend_from_slice(&y);
+            g_new.extend_from_slice(&g);
             losses.push(loss);
-            let mixed_y = self.combine(&w[i * n..(i + 1) * n], y_tr);
-            let dst = &mut y_next[i * p..(i + 1) * p];
-            dst.copy_from_slice(&mixed_y);
-            axpy(dst, 1.0, &grad);
-            axpy(dst, -1.0, &g_old[i * p..(i + 1) * p]);
         }
         (theta_next, y_next, g_new, losses)
     }
 
     /// Full-shard metrics — `eval_full` twin:
     /// (mean loss, accuracy, `||mean grad||²`, consensus).
+    /// A straight loop over [`Self::eval_node`] followed by the node-order
+    /// reduction in [`Self::eval_reduce`].
     pub fn eval_full(&self, theta: &[f32], shards: &[crate::data::Shard]) -> (f64, f64, f64, f64) {
         let p = self.p();
         let n = shards.len();
         assert_eq!(theta.len(), n * p);
+        let per: Vec<(f64, Vec<f32>, usize, usize)> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| self.eval_node(&theta[i * p..(i + 1) * p], s))
+            .collect();
+        self.eval_reduce(theta, &per)
+    }
+
+    /// Reduce per-node eval partials in node order (the ONLY eval reduction —
+    /// serial and threaded `eval_full` both call it, so the metric formulas
+    /// exist once and cannot desync).
+    pub fn eval_reduce(
+        &self,
+        theta: &[f32],
+        per: &[(f64, Vec<f32>, usize, usize)],
+    ) -> (f64, f64, f64, f64) {
+        let p = self.p();
+        let n = per.len();
         let mut mean_grad = vec![0.0f64; p];
         let mut loss_sum = 0.0;
         let mut correct = 0usize;
         let mut total = 0usize;
-        for (i, s) in shards.iter().enumerate() {
-            let th = &theta[i * p..(i + 1) * p];
-            let (loss, grad) = self.loss_and_grad(th, &s.x, &s.y);
+        for (loss, grad, c, t) in per {
             loss_sum += loss;
-            for (acc, &g) in mean_grad.iter_mut().zip(&grad) {
+            for (acc, &g) in mean_grad.iter_mut().zip(grad) {
                 *acc += g as f64;
             }
-            let zs = self.logits(th, &s.x);
-            for (z, &yv) in zs.iter().zip(&s.y) {
-                if ((*z > 0.0) as u32 as f32) == yv {
-                    correct += 1;
-                }
-                total += 1;
-            }
+            correct += c;
+            total += t;
         }
         let stat: f64 = mean_grad.iter().map(|g| (g / n as f64) * (g / n as f64)).sum();
         let theta_bar = row_mean(theta, n, p);

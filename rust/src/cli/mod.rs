@@ -171,6 +171,9 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     if let Some(v) = args.get_u64("seed")? {
         cfg.seed = v;
     }
+    if let Some(v) = args.get_usize("threads")? {
+        cfg.threads = v;
+    }
     if let Some(v) = args.get_str("artifacts") {
         cfg.artifacts_dir = v.to_string();
     }

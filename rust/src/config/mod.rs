@@ -146,6 +146,12 @@ pub struct ExperimentConfig {
     /// Compute backend: PJRT artifacts (production) or native rust (sweeps).
     pub backend: Backend,
 
+    /// Worker threads for the native backend's whole-network ops
+    /// (`local_steps_all` / `dsgd_round` / `dsgt_round` / `eval_full`).
+    /// 0 = auto (one per available core).  Results are bitwise-identical
+    /// at every thread count — nodes are disjoint `[i*p..(i+1)*p]` slices.
+    pub threads: usize,
+
     pub seed: u64,
     /// Optional JSON metrics dump path.
     pub out: Option<String>,
@@ -176,6 +182,7 @@ impl Default for ExperimentConfig {
             drop_prob: 0.0,
             compute_s_per_step: 1e-3,
             backend: Backend::Pjrt,
+            threads: 0,
             seed: 7,
             out: None,
         }
@@ -215,6 +222,7 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("net.drop_prob")? { self.drop_prob = v; }
         if let Some(v) = doc.get_f64("net.compute_s_per_step")? { self.compute_s_per_step = v; }
         if let Some(v) = doc.get_str("algo.backend") { self.backend = Backend::parse(v)?; }
+        if let Some(v) = doc.get_usize("run.threads")? { self.threads = v; }
         if let Some(v) = doc.get_usize("run.seed")? { self.seed = v as u64; }
         if let Some(v) = doc.get_str("run.out") { self.out = Some(v.to_string()); }
         Ok(())

@@ -13,11 +13,18 @@
 //! θ (and ϑ for DSGT) to graph neighbors, gathers the neighborhood, applies
 //! the eq.-2/3 update through the `combine` kernel, and advances its causal
 //! clock.  Byte/latency accounting comes from the netsim itself.
+//!
+//! The round structure is NOT duplicated here: each node thread implements
+//! [`engine::Driver`] and runs the same [`engine::RoundEngine`] loop as the
+//! fused path — only the phase bodies (netsim gossip instead of one fused
+//! whole-network call) differ, which is exactly what pins driver
+//! equivalence.
 
+use crate::algo::axpy;
 use crate::algo::native::NativeModel;
-use crate::algo::{axpy, LrSchedule, RoundPlan};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
+use crate::engine::{self, RoundEngine};
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::metrics::{round_metrics, RunLog};
@@ -43,10 +50,7 @@ struct NodeTask {
     id: usize,
     shard: Shard,
     wrow: Vec<f32>,
-    q: usize,
-    rounds: usize,
     use_tracker: bool,
-    eval_every: usize,
     cfg: ExperimentConfig,
 }
 
@@ -54,103 +58,139 @@ impl NodeTask {
     fn run(
         &self,
         compute: &dyn Compute,
-        mut ep: netsim::Endpoint,
+        ep: netsim::Endpoint,
         tx: std::sync::mpsc::Sender<Snapshot>,
     ) -> Result<Vec<f32>> {
         let (d, h, p) = compute.dims();
         let model = NativeModel::new(d, h);
-        let sched = LrSchedule::new(self.cfg.alpha0);
-        let plan = RoundPlan::new(self.q);
-        let local = plan.local_per_round;
+        let eng = RoundEngine::from_config(&self.cfg);
+        let local = eng.plan.local_per_round;
         let m = self.cfg.m;
         let n = self.wrow.len();
 
-        let mut theta = init_theta(self.cfg.seed, self.id, &model);
-        let mut sampler = NodeSampler::new(self.cfg.seed, self.id, m);
+        let mut driver = NodeDriver {
+            task: self,
+            compute,
+            ep,
+            tx,
+            p,
+            theta: init_theta(self.cfg.seed, self.id, &model),
+            y_tr: Vec::new(),
+            g_prev: Vec::new(),
+            sampler: NodeSampler::new(self.cfg.seed, self.id, m),
+            lx: vec![0.0f32; local * m * d],
+            ly: vec![0.0f32; local * m],
+            bx: vec![0.0f32; m * d],
+            by: vec![0.0f32; m],
+            stacked: vec![0.0f32; n * p],
+        };
+        eng.run(&mut driver)?;
+        Ok(driver.theta)
+    }
+}
 
-        let mut lx = vec![0.0f32; local * m * d];
-        let mut ly = vec![0.0f32; local * m];
-        let mut bx = vec![0.0f32; m * d];
-        let mut by = vec![0.0f32; m];
-        let mut stacked = vec![0.0f32; n * p];
+/// Per-node [`engine::Driver`]: the same round loop as the fused path, with
+/// the communication phase realized as real gossip over the channel netsim.
+struct NodeDriver<'a> {
+    task: &'a NodeTask,
+    compute: &'a dyn Compute,
+    ep: netsim::Endpoint,
+    tx: std::sync::mpsc::Sender<Snapshot>,
+    p: usize,
+    theta: Vec<f32>,
+    /// DSGT tracker ϑ and previous gradient (empty for DSGD).
+    y_tr: Vec<f32>,
+    g_prev: Vec<f32>,
+    sampler: NodeSampler,
+    lx: Vec<f32>,
+    ly: Vec<f32>,
+    bx: Vec<f32>,
+    by: Vec<f32>,
+    stacked: Vec<f32>,
+}
 
-        // DSGT init: Y⁰ = G⁰ = ∇g(θ⁰) on a fresh batch
-        let (mut y_tr, mut g_prev) = if self.use_tracker {
-            sampler.batch(&self.shard, &mut bx, &mut by);
-            let (_, g0) = compute.grad_step(&theta, &bx, &by)?;
-            (g0.clone(), g0)
+impl engine::Driver for NodeDriver<'_> {
+    fn begin(&mut self) -> Result<()> {
+        // DSGT init: Y⁰ = G⁰ = ∇g(θ⁰) on a fresh batch.  Round-0 metrics are
+        // the observer's job — the node only trains.
+        if self.task.use_tracker {
+            self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
+            let (_, g0) = self.compute.grad_step(&self.theta, &self.bx, &self.by)?;
+            self.y_tr = g0.clone();
+            self.g_prev = g0;
+        }
+        Ok(())
+    }
+
+    fn local_phase(&mut self, _round: usize, lrs: &[f32]) -> Result<()> {
+        self.sampler.batches(&self.task.shard, lrs.len(), &mut self.lx, &mut self.ly);
+        let (t2, _) = self.compute.local_steps(&self.theta, &self.lx, &self.ly, lrs)?;
+        self.theta = t2;
+        self.ep.spend_compute(lrs.len() as f64 * self.task.cfg.compute_s_per_step);
+        Ok(())
+    }
+
+    fn comm_phase(&mut self, round: usize, lr: f32) -> Result<()> {
+        let p = self.p;
+        let id = self.task.id;
+
+        // ---- gossip exchange ----
+        let round_tag = round as u64;
+        let payload = Arc::new(self.theta.clone());
+        self.ep.broadcast(round_tag, PayloadKind::Params, &payload)?;
+        let tracker_payload = if self.task.use_tracker {
+            let tp = Arc::new(self.y_tr.clone());
+            self.ep.broadcast(round_tag, PayloadKind::Tracker, &tp)?;
+            Some(tp)
         } else {
-            (Vec::new(), Vec::new())
+            None
         };
 
-        for round in 1..=self.rounds {
-            // ---- local phase ----
-            if local > 0 {
-                let lrs = sched.local_lrs(round, self.q, local);
-                sampler.batches(&self.shard, local, &mut lx, &mut ly);
-                let (t2, _) = compute.local_steps(&theta, &lx, &ly, &lrs)?;
-                theta = t2;
-                ep.spend_compute(local as f64 * self.cfg.compute_s_per_step);
-            }
-
-            // ---- gossip exchange ----
-            let round_tag = round as u64;
-            let payload = Arc::new(theta.clone());
-            ep.broadcast(round_tag, PayloadKind::Params, &payload)?;
-            let tracker_payload = if self.use_tracker {
-                let tp = Arc::new(y_tr.clone());
-                ep.broadcast(round_tag, PayloadKind::Tracker, &tp)?;
-                Some(tp)
-            } else {
-                None
-            };
-
-            let got = ep.gather(round_tag, PayloadKind::Params)?;
-            stacked.iter_mut().for_each(|v| *v = 0.0);
-            stacked[self.id * p..(self.id + 1) * p].copy_from_slice(&theta);
-            for (from, pl) in &got {
-                stacked[from * p..(from + 1) * p].copy_from_slice(pl);
-            }
-            let mixed = compute.combine(&self.wrow, &stacked)?;
-
-            // ---- eq. 2 / eq. 3 update ----
-            let lr = sched.comm_lr(round, self.q);
-            sampler.batch(&self.shard, &mut bx, &mut by);
-            if self.use_tracker {
-                let got_y = ep.gather(round_tag, PayloadKind::Tracker)?;
-                stacked.iter_mut().for_each(|v| *v = 0.0);
-                stacked[self.id * p..(self.id + 1) * p]
-                    .copy_from_slice(tracker_payload.as_ref().unwrap());
-                for (from, pl) in &got_y {
-                    stacked[from * p..(from + 1) * p].copy_from_slice(pl);
-                }
-                let mixed_y = compute.combine(&self.wrow, &stacked)?;
-                // θ^{r+1} = Σ W θ − α ϑ_i (own tracker)
-                let mut theta_next = mixed;
-                axpy(&mut theta_next, -lr, &y_tr);
-                // ϑ^{r+1} = Σ W ϑ + ∇g(θ^{r+1}) − ∇g(θ^r)
-                let (_, g_new) = compute.grad_step(&theta_next, &bx, &by)?;
-                let mut y_next = mixed_y;
-                axpy(&mut y_next, 1.0, &g_new);
-                axpy(&mut y_next, -1.0, &g_prev);
-                theta = theta_next;
-                y_tr = y_next;
-                g_prev = g_new;
-            } else {
-                // θ^{r+1} = Σ W θ − α ∇g(θ^r): gradient at pre-mix θ
-                let (_, grad) = compute.grad_step(&theta, &bx, &by)?;
-                let mut theta_next = mixed;
-                axpy(&mut theta_next, -lr, &grad);
-                theta = theta_next;
-            }
-            ep.spend_compute(self.cfg.compute_s_per_step);
-
-            if round % self.eval_every == 0 || round == self.rounds {
-                tx.send(Snapshot { round: round_tag, node: self.id, theta: theta.clone() })
-                    .map_err(|_| anyhow!("observer hung up"))?;
-            }
+        let got = self.ep.gather(round_tag, PayloadKind::Params)?;
+        self.stacked.iter_mut().for_each(|v| *v = 0.0);
+        self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.theta);
+        for (from, pl) in &got {
+            self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
         }
-        Ok(theta)
+        let mixed = self.compute.combine(&self.task.wrow, &self.stacked)?;
+
+        // ---- eq. 2 / eq. 3 update ----
+        self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
+        if self.task.use_tracker {
+            let got_y = self.ep.gather(round_tag, PayloadKind::Tracker)?;
+            self.stacked.iter_mut().for_each(|v| *v = 0.0);
+            self.stacked[id * p..(id + 1) * p]
+                .copy_from_slice(tracker_payload.as_ref().unwrap());
+            for (from, pl) in &got_y {
+                self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
+            }
+            let mixed_y = self.compute.combine(&self.task.wrow, &self.stacked)?;
+            // θ^{r+1} = Σ W θ − α ϑ_i (own tracker)
+            let mut theta_next = mixed;
+            axpy(&mut theta_next, -lr, &self.y_tr);
+            // ϑ^{r+1} = Σ W ϑ + ∇g(θ^{r+1}) − ∇g(θ^r)
+            let (_, g_new) = self.compute.grad_step(&theta_next, &self.bx, &self.by)?;
+            let mut y_next = mixed_y;
+            axpy(&mut y_next, 1.0, &g_new);
+            axpy(&mut y_next, -1.0, &self.g_prev);
+            self.theta = theta_next;
+            self.y_tr = y_next;
+            self.g_prev = g_new;
+        } else {
+            // θ^{r+1} = Σ W θ − α ∇g(θ^r): gradient at pre-mix θ
+            let (_, grad) = self.compute.grad_step(&self.theta, &self.bx, &self.by)?;
+            let mut theta_next = mixed;
+            axpy(&mut theta_next, -lr, &grad);
+            self.theta = theta_next;
+        }
+        self.ep.spend_compute(self.task.cfg.compute_s_per_step);
+        Ok(())
+    }
+
+    fn observe(&mut self, round: u64, _local_steps: u64) -> Result<()> {
+        self.tx
+            .send(Snapshot { round, node: self.task.id, theta: self.theta.clone() })
+            .map_err(|_| anyhow!("observer hung up"))
     }
 }
 
@@ -171,9 +211,8 @@ where
     if graph.n() != n {
         bail!("graph has {} nodes, dataset has {n}", graph.n());
     }
-    let q = cfg.algo.effective_q(cfg.q);
-    let plan = RoundPlan::new(q);
-    let rounds = plan.rounds_for(cfg.total_steps);
+    // every node thread derives the identical schedule from the same config
+    let q = RoundEngine::from_config(cfg).q;
     let link = LinkModel {
         latency_s: cfg.latency_s,
         bandwidth_bps: cfg.bandwidth_bps,
@@ -181,7 +220,6 @@ where
     };
     let (endpoints, stats) = netsim::build(graph, link, cfg.seed);
     let (snap_tx, snap_rx) = channel::<Snapshot>();
-    let eval_every = cfg.eval_every.max(1);
     let started = std::time::Instant::now();
 
     let tasks: Vec<(NodeTask, netsim::Endpoint)> = endpoints
@@ -193,10 +231,7 @@ where
                     id: i,
                     shard: ds.shards[i].clone(),
                     wrow: w.row(i).iter().map(|&x| x as f32).collect(),
-                    q,
-                    rounds,
                     use_tracker: cfg.algo.uses_tracker(),
-                    eval_every,
                     cfg: cfg.clone(),
                 },
                 ep,

@@ -2,21 +2,20 @@
 //! the *fictitious fusion center* (centralized SGD on pooled data) and
 //! star-network FedAvg (McMahan et al., 2017).
 //!
-//! Both reuse the same artifact-level ops, samplers, lr schedule, and metric
-//! shapes as the decentralized drivers, so EXP-A4's comm-cost/quality
-//! comparison is apples-to-apples.
+//! Both are thin adapters over [`crate::engine`]: they run the SAME
+//! [`RoundEngine`](crate::engine::RoundEngine) loop as the decentralized
+//! drivers with the `FedAvgStrategy` / `CentralizedStrategy` communication
+//! update plugged in, so EXP-A4's comm-cost/quality comparison is
+//! apples-to-apples by construction — same samplers, same lr schedule, same
+//! eval cadence, same metric shapes.
 
-use crate::algo::native::NativeModel;
-use crate::algo::{axpy, LrSchedule, RoundPlan};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
-use crate::graph::Graph;
-use crate::metrics::{round_metrics, RunLog};
-use crate::netsim::{analytic::Accountant, LinkModel, NetSnapshot};
+use crate::engine;
+use crate::metrics::RunLog;
 use anyhow::Result;
 
 use super::compute::Compute;
-use super::sampler::{init_theta, NodeSampler};
 
 /// Centralized SGD on the pooled cohort — the fusion center the paper argues
 /// is infeasible for patient data.  Zero communication by construction; the
@@ -26,46 +25,7 @@ pub fn centralized(
     compute: &dyn Compute,
     ds: &FederatedDataset,
 ) -> Result<RunLog> {
-    let (d, h, _p) = compute.dims();
-    let model = NativeModel::new(d, h);
-    let pooled = ds.pooled();
-    let sched = LrSchedule::new(cfg.alpha0);
-    let q = cfg.q.max(1);
-    let mut theta = init_theta(cfg.seed, 0, &model);
-    let mut sampler = NodeSampler::new(cfg.seed, 0, cfg.m);
-    let mut bx = vec![0.0f32; cfg.m * d];
-    let mut by = vec![0.0f32; cfg.m];
-    let mut log = RunLog::new("centralized");
-    let started = std::time::Instant::now();
-
-    let eval_shard = |theta: &[f32]| -> (f64, f64, f64, f64) {
-        // single "node" owning everything: consensus ≡ 0
-        let (loss, grad) = model.loss_and_grad(theta, &pooled.x, &pooled.y);
-        let zs = model.logits(theta, &pooled.x);
-        let correct = zs
-            .iter()
-            .zip(&pooled.y)
-            .filter(|(z, &y)| ((**z > 0.0) as u32 as f32) == y)
-            .count();
-        let stat: f64 = grad.iter().map(|&g| (g as f64) * (g as f64)).sum();
-        (loss, correct as f64 / pooled.n as f64, stat, 0.0)
-    };
-
-    log.push(round_metrics(0, 0, eval_shard(&theta), NetSnapshot::default(), 0.0));
-    for step in 1..=cfg.total_steps {
-        sampler.batch(&pooled, &mut bx, &mut by);
-        let (_, grad) = compute.grad_step(&theta, &bx, &by)?;
-        axpy(&mut theta, -sched.lr(step), &grad);
-        if step % (q * cfg.eval_every.max(1)) == 0 || step == cfg.total_steps {
-            log.push(round_metrics(
-                (step / q) as u64,
-                step as u64,
-                eval_shard(&theta),
-                NetSnapshot::default(),
-                started.elapsed().as_secs_f64(),
-            ));
-        }
-    }
+    let (log, _theta) = engine::train_centralized(cfg, compute, ds)?;
     Ok(log)
 }
 
@@ -77,79 +37,7 @@ pub fn fedavg(
     compute: &dyn Compute,
     ds: &FederatedDataset,
 ) -> Result<RunLog> {
-    let n = ds.n_hospitals();
-    let (d, h, p) = compute.dims();
-    let model = NativeModel::new(d, h);
-    let q = cfg.q.max(1);
-    let plan = RoundPlan::new(q);
-    let rounds = plan.rounds_for(cfg.total_steps);
-    let sched = LrSchedule::new(cfg.alpha0);
-
-    // server init = node-0 init (a shared broadcast start, as FedAvg assumes)
-    let mut server = init_theta(cfg.seed, 0, &model);
-    let mut samplers: Vec<NodeSampler> =
-        (0..n).map(|i| NodeSampler::new(cfg.seed, i, cfg.m)).collect();
-    let local = plan.local_per_round;
-    let mut lx = vec![0.0f32; local * cfg.m * d];
-    let mut ly = vec![0.0f32; local * cfg.m];
-    let mut bx = vec![0.0f32; cfg.m * d];
-    let mut by = vec![0.0f32; cfg.m];
-
-    let star = Graph::build(&crate::graph::Topology::Star, n + 1, &mut crate::rng::Pcg64::seed(0))?;
-    let link = LinkModel {
-        latency_s: cfg.latency_s,
-        bandwidth_bps: cfg.bandwidth_bps,
-        drop_prob: 0.0,
-    };
-    let mut acct = Accountant::new(&star, link);
-    let mut log = RunLog::new("fedavg");
-    let started = std::time::Instant::now();
-
-    let stacked_server = |server: &[f32]| {
-        let mut stacked = Vec::with_capacity(n * p);
-        for _ in 0..n {
-            stacked.extend_from_slice(server);
-        }
-        stacked
-    };
-    let eval0 = compute.eval_full(&stacked_server(&server), &ds.shards)?;
-    log.push(round_metrics(0, 0, eval0, acct.snapshot(), 0.0));
-
-    for round in 1..=rounds {
-        let mut mean = vec![0.0f64; p];
-        for i in 0..n {
-            let mut theta = server.clone();
-            if local > 0 {
-                let lrs = sched.local_lrs(round, q, local);
-                samplers[i].batches(&ds.shards[i], local, &mut lx, &mut ly);
-                let (t2, _) = compute.local_steps(&theta, &lx, &ly, &lrs)?;
-                theta = t2;
-            }
-            // final local step of the round (keeps total gradient count = Q)
-            samplers[i].batch(&ds.shards[i], &mut bx, &mut by);
-            let (_, grad) = compute.grad_step(&theta, &bx, &by)?;
-            axpy(&mut theta, -sched.comm_lr(round, q), &grad);
-            for (acc, &t) in mean.iter_mut().zip(&theta) {
-                *acc += t as f64;
-            }
-        }
-        for (s, acc) in server.iter_mut().zip(&mean) {
-            *s = (acc / n as f64) as f32;
-        }
-        acct.local_compute(q as u64, cfg.compute_s_per_step);
-        acct.star_round(n, p);
-
-        if round % cfg.eval_every.max(1) == 0 || round == rounds {
-            let eval = compute.eval_full(&stacked_server(&server), &ds.shards)?;
-            log.push(round_metrics(
-                round as u64,
-                (round * q) as u64,
-                eval,
-                acct.snapshot(),
-                started.elapsed().as_secs_f64(),
-            ));
-        }
-    }
+    let (log, _theta) = engine::train_fedavg(cfg, compute, ds)?;
     Ok(log)
 }
 
@@ -186,6 +74,7 @@ pub fn auc(compute: &dyn Compute, theta: &[f32], test: &Shard) -> Result<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::native::NativeModel;
     use crate::config::AlgoKind;
     use crate::coordinator::compute::NativeCompute;
     use crate::data::{generate, DataConfig};

@@ -241,18 +241,71 @@ impl Compute for PjrtCompute {
 
 // -------------------------------------------------------------- native ----
 
+/// Deterministic parallel map over node indices: node `i`'s result is
+/// computed on whichever worker owns its chunk, then reassembled in index
+/// order.  Because every node's work reads shared inputs and produces an
+/// independent value, the output is bitwise-identical at every thread
+/// count — parallelism never reorders a floating-point reduction.
+fn par_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|s| {
+        for (ti, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (k, o) in slot.iter_mut().enumerate() {
+                    *o = Some(f(ti * chunk + k));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map: every slot filled")).collect()
+}
+
 /// Pure-rust backend (oracle / sweeps). `q_local` bounds nothing — any
 /// number of local steps per call is accepted.
+///
+/// Whole-network ops (`local_steps_all`, `dsgd_round`, `dsgt_round`,
+/// `eval_full`) fan nodes out over scoped threads: per-node work is
+/// embarrassingly parallel over disjoint `[i*p..(i+1)*p]` slices, and all
+/// cross-node reductions run serially in node order, so results are
+/// bitwise-identical to the serial path (`threads = 1`).
 #[derive(Clone, Copy, Debug)]
 pub struct NativeCompute {
     pub model: NativeModel,
     pub n: usize,
     pub m: usize,
+    /// Worker threads for whole-network ops: 0 = auto (one per core).
+    pub threads: usize,
 }
 
 impl NativeCompute {
     pub fn new(d: usize, h: usize, n: usize, m: usize) -> Self {
-        NativeCompute { model: NativeModel::new(d, h), n, m }
+        NativeCompute { model: NativeModel::new(d, h), n, m, threads: 0 }
+    }
+
+    /// Set the worker-thread count (builder style); 0 = auto, 1 = serial.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Effective pool size for a fan-out over `nodes` work items.
+    fn pool(&self, nodes: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        t.min(nodes).max(1)
     }
 }
 
@@ -281,6 +334,38 @@ impl Compute for NativeCompute {
         Ok((t, losses))
     }
 
+    fn local_steps_all(
+        &self,
+        big_theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f64>)> {
+        let p = self.model.p();
+        let nodes = big_theta.len() / p;
+        if nodes == 0 || lrs.is_empty() {
+            return Ok((big_theta.to_vec(), Vec::new()));
+        }
+        let (bxn, byn) = (bx.len() / nodes, by.len() / nodes);
+        let per = par_map(self.pool(nodes), nodes, |i| {
+            let mut t = big_theta[i * p..(i + 1) * p].to_vec();
+            let losses = self.model.local_steps(
+                &mut t,
+                &bx[i * bxn..(i + 1) * bxn],
+                &by[i * byn..(i + 1) * byn],
+                lrs,
+            );
+            (t, losses)
+        });
+        let mut theta_out = Vec::with_capacity(nodes * p);
+        let mut losses = Vec::with_capacity(nodes * lrs.len());
+        for (t, l) in per {
+            theta_out.extend_from_slice(&t);
+            losses.extend_from_slice(&l);
+        }
+        Ok((theta_out, losses))
+    }
+
     fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
         Ok(self.model.combine(wrow, thetas))
     }
@@ -293,7 +378,24 @@ impl Compute for NativeCompute {
         by: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f64>)> {
-        Ok(self.model.dsgd_round(w, theta, bx, by, lr, self.n, self.m))
+        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
+        let per = par_map(self.pool(n), n, |i| {
+            self.model.dsgd_node(
+                &w[i * n..(i + 1) * n],
+                theta,
+                &theta[i * p..(i + 1) * p],
+                &bx[i * m * d..(i + 1) * m * d],
+                &by[i * m..(i + 1) * m],
+                lr,
+            )
+        });
+        let mut out = Vec::with_capacity(n * p);
+        let mut losses = Vec::with_capacity(n);
+        for (t, loss) in per {
+            out.extend_from_slice(&t);
+            losses.push(loss);
+        }
+        Ok((out, losses))
     }
 
     fn dsgt_round(
@@ -306,13 +408,46 @@ impl Compute for NativeCompute {
         by: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>)> {
-        Ok(self
-            .model
-            .dsgt_round(w, theta, y_tr, g_old, bx, by, lr, self.n, self.m))
+        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
+        // node i depends only on row i of Y/G plus shared Θ/Y — the whole
+        // eq.-3 round fans out per node with no cross-node ordering
+        let per = par_map(self.pool(n), n, |i| {
+            self.model.dsgt_node(
+                &w[i * n..(i + 1) * n],
+                theta,
+                y_tr,
+                &y_tr[i * p..(i + 1) * p],
+                &g_old[i * p..(i + 1) * p],
+                &bx[i * m * d..(i + 1) * m * d],
+                &by[i * m..(i + 1) * m],
+                lr,
+            )
+        });
+        let mut theta_next = Vec::with_capacity(n * p);
+        let mut y_out = Vec::with_capacity(n * p);
+        let mut g_new = Vec::with_capacity(n * p);
+        let mut losses = Vec::with_capacity(n);
+        for (t, y, g, loss) in per {
+            theta_next.extend_from_slice(&t);
+            y_out.extend_from_slice(&y);
+            g_new.extend_from_slice(&g);
+            losses.push(loss);
+        }
+        Ok((theta_next, y_out, g_new, losses))
     }
 
     fn eval_full(&self, theta: &[f32], shards: &[Shard]) -> Result<(f64, f64, f64, f64)> {
-        Ok(self.model.eval_full(theta, shards))
+        let p = self.model.p();
+        let n = shards.len();
+        if theta.len() != n * p {
+            bail!("eval_full: theta len {} vs {} shards x p={p}", theta.len(), n);
+        }
+        // per-node partials in parallel; the reduction runs serially in node
+        // order inside eval_reduce → bitwise-equal to the serial twin
+        let per = par_map(self.pool(n), n, |i| {
+            self.model.eval_node(&theta[i * p..(i + 1) * p], &shards[i])
+        });
+        Ok(self.model.eval_reduce(theta, &per))
     }
 
     fn predict(&self, theta: &[f32], x: &[f32]) -> Result<Vec<f32>> {

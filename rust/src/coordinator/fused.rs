@@ -1,26 +1,27 @@
-//! Fused execution driver: one compute call per whole-network phase.
+//! Fused execution driver — a thin adapter over the unified round engine.
 //!
 //! The highest-throughput way to run the decentralized algorithms on a
-//! single machine: every communication round is (at most) N `local_steps`
-//! calls plus ONE `dsgd_round`/`dsgt_round` call covering all nodes, with
-//! communication charged analytically (`netsim::analytic` — byte-exact
-//! vs the channel netsim).  Used by the figure benches and sweeps; the
-//! actor driver (`actors.rs`) is the fidelity path.
+//! single machine: every communication round is ONE whole-network
+//! `local_steps_all` call plus ONE `dsgd_round`/`dsgt_round` call, with
+//! communication charged analytically (`netsim::analytic` — byte-exact vs
+//! the channel netsim).  The round loop itself lives in
+//! [`crate::engine::RoundEngine`]; this module only picks the sync driver
+//! with the gossip strategy matching `cfg.algo`.  The actor driver
+//! (`actors.rs`) is the fidelity path.
 
-use crate::algo::native::NativeModel;
-use crate::algo::{LrSchedule, RoundPlan};
 use crate::config::ExperimentConfig;
 use crate::data::FederatedDataset;
+use crate::engine;
 use crate::graph::Graph;
 use crate::linalg::Mat;
-use crate::metrics::{round_metrics, RunLog};
-use crate::netsim::{analytic::Accountant, LinkModel};
-use anyhow::{bail, Result};
+use crate::metrics::RunLog;
+use anyhow::Result;
 
 use super::compute::Compute;
-use super::sampler::{init_thetas, NodeSampler};
 
 /// Train with the fused driver. `w` must satisfy Assumption 1 over `graph`.
+/// Rejects `cfg.drop_prob > 0` — loss injection needs the channel netsim
+/// (`--mode actors`); the analytic accountant is lossless by construction.
 pub fn train(
     cfg: &ExperimentConfig,
     compute: &dyn Compute,
@@ -28,124 +29,12 @@ pub fn train(
     graph: &Graph,
     w: &Mat,
 ) -> Result<RunLog> {
-    let n = ds.n_hospitals();
-    let (d, _h, p) = compute.dims();
-    if d != ds.d {
-        bail!("backend d={d} vs dataset d={}", ds.d);
-    }
-    let q = cfg.algo.effective_q(cfg.q);
-    let plan = RoundPlan::new(q);
-    let sched = LrSchedule::new(cfg.alpha0);
-    let rounds = plan.rounds_for(cfg.total_steps);
-    let use_tracker = cfg.algo.uses_tracker();
-    let m = cfg.m;
-
-    if let Some(want) = compute.local_steps_len() {
-        if plan.local_per_round > 0 && plan.local_per_round != want {
-            bail!(
-                "artifacts were lowered for Q={} (local phase {want}), config wants Q={q}; \
-                 re-run `make artifacts Q={q}` or use --backend native",
-                want + 1
-            );
-        }
-    }
-
-    let wf: Vec<f32> = crate::mixing::to_f32(w);
-    let model = NativeModel::new(d, compute.dims().1);
-    let mut theta = init_thetas(cfg.seed, n, &model);
-    let mut samplers: Vec<NodeSampler> =
-        (0..n).map(|i| NodeSampler::new(cfg.seed, i, m)).collect();
-
-    let link = LinkModel {
-        latency_s: cfg.latency_s,
-        bandwidth_bps: cfg.bandwidth_bps,
-        drop_prob: 0.0, // loss injection is actor-mode-only
-    };
-    let mut acct = Accountant::new(graph, link);
-    let mut log = RunLog::new(cfg.algo.name());
-    let started = std::time::Instant::now();
-
-    // scratch buffers reused across rounds (no alloc in the hot loop);
-    // the local phase is whole-network shaped for the fused artifact (§Perf)
-    let local = plan.local_per_round;
-    let mut lx = vec![0.0f32; n * local * m * d];
-    let mut ly = vec![0.0f32; n * local * m];
-    let mut cx = vec![0.0f32; n * m * d];
-    let mut cy = vec![0.0f32; n * m];
-
-    // DSGT state: tracker Y and previous gradient G (init with a fresh batch)
-    let (mut y_tr, mut g_prev) = if use_tracker {
-        let mut g0 = vec![0.0f32; n * p];
-        for i in 0..n {
-            let (bx, by) = (&mut cx[i * m * d..(i + 1) * m * d], &mut cy[i * m..(i + 1) * m]);
-            samplers[i].batch(&ds.shards[i], bx, by);
-            let (_, gi) = compute.grad_step(&theta[i * p..(i + 1) * p], bx, by)?;
-            g0[i * p..(i + 1) * p].copy_from_slice(&gi);
-        }
-        (g0.clone(), g0)
-    } else {
-        (Vec::new(), Vec::new())
-    };
-
-    // round 0 metrics (initial point)
-    let eval0 = compute.eval_full(&theta, &ds.shards)?;
-    log.push(round_metrics(0, 0, eval0, acct.snapshot(), started.elapsed().as_secs_f64()));
-
-    for round in 1..=rounds {
-        // ---- local phase: Q-1 eq.-4 steps per node, one fused call ----
-        if local > 0 {
-            let lrs = sched.local_lrs(round, q, local);
-            for i in 0..n {
-                samplers[i].batches(
-                    &ds.shards[i],
-                    local,
-                    &mut lx[i * local * m * d..(i + 1) * local * m * d],
-                    &mut ly[i * local * m..(i + 1) * local * m],
-                );
-            }
-            let (t_next, _losses) = compute.local_steps_all(&theta, &lx, &ly, &lrs)?;
-            theta = t_next;
-            acct.local_compute(local as u64, cfg.compute_s_per_step);
-        }
-
-        // ---- communication step (eq. 2 / eq. 3) ----
-        for i in 0..n {
-            let (bx, by) = (&mut cx[i * m * d..(i + 1) * m * d], &mut cy[i * m..(i + 1) * m]);
-            samplers[i].batch(&ds.shards[i], bx, by);
-        }
-        let lr = sched.comm_lr(round, q);
-        if use_tracker {
-            let (t2, y2, g2, _losses) =
-                compute.dsgt_round(&wf, &theta, &y_tr, &g_prev, &cx, &cy, lr)?;
-            theta = t2;
-            y_tr = y2;
-            g_prev = g2;
-            acct.local_compute(1, cfg.compute_s_per_step);
-            acct.comm_round(p, 2); // θ and ϑ
-        } else {
-            let (t2, _losses) = compute.dsgd_round(&wf, &theta, &cx, &cy, lr)?;
-            theta = t2;
-            acct.local_compute(1, cfg.compute_s_per_step);
-            acct.comm_round(p, 1);
-        }
-
-        // ---- metrics ----
-        if round % cfg.eval_every.max(1) == 0 || round == rounds {
-            let eval = compute.eval_full(&theta, &ds.shards)?;
-            log.push(round_metrics(
-                round as u64,
-                (round * q) as u64,
-                eval,
-                acct.snapshot(),
-                started.elapsed().as_secs_f64(),
-            ));
-        }
-    }
-
+    let (log, _theta) = engine::train_decentralized(cfg, compute, ds, graph, w)?;
     Ok(log)
 }
 
-/// Final stacked parameters of a fused run (re-runs deterministically).
+/// Train and also return the final stacked parameters of the SAME run —
+/// the engine hands back θ directly, so there is no deterministic re-run.
 /// Convenience for examples that need θ for test-set prediction.
 pub fn train_returning_params(
     cfg: &ExperimentConfig,
@@ -154,80 +43,7 @@ pub fn train_returning_params(
     graph: &Graph,
     w: &Mat,
 ) -> Result<(RunLog, Vec<f32>)> {
-    // same loop, but keep θ — implemented by a thin re-run wrapper to keep
-    // `train` allocation-free; cost is identical and determinism guarantees
-    // the same trajectory.
-    let log = train(cfg, compute, ds, graph, w)?;
-    let theta = replay_final_params(cfg, compute, ds, w)?;
-    Ok((log, theta))
-}
-
-fn replay_final_params(
-    cfg: &ExperimentConfig,
-    compute: &dyn Compute,
-    ds: &FederatedDataset,
-    w: &Mat,
-) -> Result<Vec<f32>> {
-    let n = ds.n_hospitals();
-    let (d, h, p) = compute.dims();
-    let q = cfg.algo.effective_q(cfg.q);
-    let plan = RoundPlan::new(q);
-    let sched = LrSchedule::new(cfg.alpha0);
-    let rounds = plan.rounds_for(cfg.total_steps);
-    let use_tracker = cfg.algo.uses_tracker();
-    let m = cfg.m;
-    let wf: Vec<f32> = crate::mixing::to_f32(w);
-    let model = NativeModel::new(d, h);
-    let mut theta = init_thetas(cfg.seed, n, &model);
-    let mut samplers: Vec<NodeSampler> =
-        (0..n).map(|i| NodeSampler::new(cfg.seed, i, m)).collect();
-    let local = plan.local_per_round;
-    let mut lx = vec![0.0f32; n * local * m * d];
-    let mut ly = vec![0.0f32; n * local * m];
-    let mut cx = vec![0.0f32; n * m * d];
-    let mut cy = vec![0.0f32; n * m];
-    let (mut y_tr, mut g_prev) = if use_tracker {
-        let mut g0 = vec![0.0f32; n * p];
-        for i in 0..n {
-            let (bx, by) = (&mut cx[i * m * d..(i + 1) * m * d], &mut cy[i * m..(i + 1) * m]);
-            samplers[i].batch(&ds.shards[i], bx, by);
-            let (_, gi) = compute.grad_step(&theta[i * p..(i + 1) * p], bx, by)?;
-            g0[i * p..(i + 1) * p].copy_from_slice(&gi);
-        }
-        (g0.clone(), g0)
-    } else {
-        (Vec::new(), Vec::new())
-    };
-    for round in 1..=rounds {
-        if local > 0 {
-            let lrs = sched.local_lrs(round, q, local);
-            for i in 0..n {
-                samplers[i].batches(
-                    &ds.shards[i],
-                    local,
-                    &mut lx[i * local * m * d..(i + 1) * local * m * d],
-                    &mut ly[i * local * m..(i + 1) * local * m],
-                );
-            }
-            let (t_next, _) = compute.local_steps_all(&theta, &lx, &ly, &lrs)?;
-            theta = t_next;
-        }
-        for i in 0..n {
-            let (bx, by) = (&mut cx[i * m * d..(i + 1) * m * d], &mut cy[i * m..(i + 1) * m]);
-            samplers[i].batch(&ds.shards[i], bx, by);
-        }
-        let lr = sched.comm_lr(round, q);
-        if use_tracker {
-            let (t2, y2, g2, _) = compute.dsgt_round(&wf, &theta, &y_tr, &g_prev, &cx, &cy, lr)?;
-            theta = t2;
-            y_tr = y2;
-            g_prev = g2;
-        } else {
-            let (t2, _) = compute.dsgd_round(&wf, &theta, &cx, &cy, lr)?;
-            theta = t2;
-        }
-    }
-    Ok(theta)
+    engine::train_decentralized(cfg, compute, ds, graph, w)
 }
 
 #[cfg(test)]
@@ -337,8 +153,16 @@ mod tests {
     fn replay_matches_logged_trajectory() {
         let (cfg, compute, ds, graph, w) = tiny_setup(AlgoKind::FdDsgt, 5, 50);
         let (log, theta) = train_returning_params(&cfg, &compute, &ds, &graph, &w).unwrap();
-        // evaluating the replayed θ reproduces the last logged loss exactly
+        // evaluating the returned θ reproduces the last logged loss exactly
         let eval = compute.eval_full(&theta, &ds.shards).unwrap();
         assert_eq!(eval.0, log.rows.last().unwrap().loss);
+    }
+
+    #[test]
+    fn drop_prob_is_rejected_not_ignored() {
+        let (mut cfg, compute, ds, graph, w) = tiny_setup(AlgoKind::FdDsgt, 5, 20);
+        cfg.drop_prob = 0.2;
+        let err = train(&cfg, &compute, &ds, &graph, &w).unwrap_err();
+        assert!(err.to_string().contains("--mode actors"), "{err}");
     }
 }

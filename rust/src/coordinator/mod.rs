@@ -5,6 +5,10 @@
 //! (validated against Assumption 1), selects the compute backend (PJRT
 //! artifacts or the native twin) and the execution driver (fused or actors),
 //! dispatches baselines, and returns the metric log.
+//!
+//! Every trainer dispatched here is a thin adapter over the unified round
+//! loop in [`crate::engine`] — the drivers differ only in where the phases
+//! execute, never in the round structure.
 
 pub mod actors;
 pub mod baselines;
@@ -57,10 +61,14 @@ pub fn assemble(cfg: &ExperimentConfig) -> Result<Assembled> {
     Ok(Assembled { ds, graph, w, spectral_gap: v.spectral_gap })
 }
 
-/// Build the configured compute backend (single-threaded handle).
+/// Build the configured compute backend.  The native backend fans its
+/// whole-network ops over `cfg.threads` workers (0 = auto) with
+/// bitwise-deterministic results.
 pub fn make_compute(cfg: &ExperimentConfig) -> Result<Box<dyn Compute>> {
     match cfg.backend {
-        Backend::Native => Ok(Box::new(NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m))),
+        Backend::Native => Ok(Box::new(
+            NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m).with_threads(cfg.threads),
+        )),
         Backend::Pjrt => {
             let c = PjrtCompute::load(std::path::Path::new(&cfg.artifacts_dir))
                 .context("loading PJRT artifacts")?;

@@ -1,0 +1,558 @@
+//! The unified round engine — ONE implementation of Algorithm 1's loop.
+//!
+//! Every trainer in this crate (fused DSGD/DSGT, the actor driver, FedAvg,
+//! the centralized fusion-center baseline) runs the same round structure:
+//! Q−1 local eq.-4 updates, then one update that consumes a gradient (eq. 2,
+//! eq. 3, a server average, or a plain SGD step), then metrics on an eval
+//! cadence.  Historically that loop was copy-pasted four times; this module
+//! owns it once and splits the two axes of variation into two traits:
+//!
+//! - [`CommStrategy`] (strategy.rs) — *what* the communication update does:
+//!   Dsgd / Dsgt / FedAvg / Centralized.  Strategies operate on the shared
+//!   [`EngineState`] (θ stack, per-node samplers, batch scratch) through the
+//!   [`Compute`] backend, so they are backend-agnostic.
+//! - [`Driver`] — *where* the phases execute: [`SyncDriver`] runs whole-
+//!   network phases in-process with analytic communication accounting (the
+//!   fused path and both baselines); the actor driver implements [`Driver`]
+//!   per node over the channel netsim (`coordinator::actors`).
+//!
+//! [`RoundEngine::run`] is the only round loop in the crate.  It is
+//! deliberately tiny: schedule + cadence, nothing else, so a new scenario
+//! (dynamic topology, stragglers, checkpointing) is a new `CommStrategy`
+//! or a `Driver` hook — never a fifth copy of the loop.
+//!
+//! Determinism contract: batch order per node-sampler stream, float-op order
+//! per node, and eval cadence are identical across drivers and thread
+//! counts, so trajectories are bitwise-reproducible (pinned by the
+//! `driver_equivalence` integration test).
+
+pub mod strategy;
+
+pub use strategy::{
+    CentralizedStrategy, CommCost, CommStrategy, DsgdStrategy, DsgtStrategy, FedAvgStrategy,
+};
+
+use crate::algo::native::NativeModel;
+use crate::algo::{LrSchedule, RoundPlan};
+use crate::config::{AlgoKind, ExperimentConfig};
+use crate::coordinator::compute::Compute;
+use crate::coordinator::sampler::{init_theta, init_thetas, NodeSampler};
+use crate::data::{FederatedDataset, Shard};
+use crate::graph::Graph;
+use crate::linalg::Mat;
+use crate::metrics::{round_metrics, RunLog};
+use crate::netsim::{analytic::Accountant, LinkModel};
+use anyhow::{bail, Result};
+use std::borrow::Cow;
+
+// ------------------------------------------------------------- engine ----
+
+/// The round schedule of Algorithm 1: local period, lr schedule, round count,
+/// eval cadence.  Shared verbatim by every driver (the actor driver builds
+/// one per node thread; all nodes derive the identical schedule).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundEngine {
+    pub q: usize,
+    pub plan: RoundPlan,
+    pub sched: LrSchedule,
+    pub rounds: usize,
+    pub eval_every: usize,
+}
+
+impl RoundEngine {
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        let q = cfg.algo.effective_q(cfg.q);
+        let plan = RoundPlan::new(q);
+        RoundEngine {
+            q,
+            plan,
+            sched: LrSchedule::new(cfg.alpha0),
+            rounds: plan.rounds_for(cfg.total_steps),
+            eval_every: cfg.eval_every.max(1),
+        }
+    }
+
+    /// THE round loop.  `begin` → per round: local phase (Q−1 steps),
+    /// communication phase (1 step), observation on the eval cadence.
+    pub fn run<D: Driver>(&self, driver: &mut D) -> Result<()> {
+        driver.begin()?;
+        for round in 1..=self.rounds {
+            if self.plan.local_per_round > 0 {
+                let lrs = self.sched.local_lrs(round, self.q, self.plan.local_per_round);
+                driver.local_phase(round, &lrs)?;
+            }
+            driver.comm_phase(round, self.sched.comm_lr(round, self.q))?;
+            if round % self.eval_every == 0 || round == self.rounds {
+                driver.observe(round as u64, (round * self.q) as u64)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Execution substrate for one engine run: how each phase actually executes.
+///
+/// Implementations: [`SyncDriver`] (whole-network, in-process) and the
+/// per-node actor driver in `coordinator::actors`.
+pub trait Driver {
+    /// Pre-loop hook: auxiliary-state init (e.g. DSGT's Y⁰ = G⁰ = ∇g(θ⁰))
+    /// and the round-0 observation where the driver owns metrics.
+    fn begin(&mut self) -> Result<()>;
+    /// The Q−1 eq.-4 local updates of `round` (1-based), one lr per step.
+    fn local_phase(&mut self, round: usize, lrs: &[f32]) -> Result<()>;
+    /// The communication update of `round` (consumes one gradient per node).
+    fn comm_phase(&mut self, round: usize, lr: f32) -> Result<()>;
+    /// Eval-cadence hook with the round index and cumulative local steps.
+    fn observe(&mut self, round: u64, local_steps: u64) -> Result<()>;
+}
+
+// -------------------------------------------------------------- state ----
+
+/// The machinery every strategy shares: the parameter stack, per-node
+/// samplers, the data shards backing them, and reusable batch scratch
+/// (no allocation in the hot loop).
+pub struct EngineState<'a> {
+    /// Rows in the θ stack (hospitals; 1 for the centralized baseline).
+    pub n: usize,
+    pub d: usize,
+    pub p: usize,
+    pub m: usize,
+    /// Stacked parameters `[n, p]`.
+    pub theta: Vec<f32>,
+    /// Per-row batch samplers — streams keyed by (seed, row) only, so every
+    /// driver draws identical batches (the determinism contract).
+    pub samplers: Vec<NodeSampler>,
+    /// Data shard per row (borrowed federated shards, or the owned pooled
+    /// cohort for the centralized baseline).
+    pub shards: Cow<'a, [Shard]>,
+    /// Local-phase batch scratch `[n, local, m, d]` / `[n, local, m]`.
+    pub lx: Vec<f32>,
+    pub ly: Vec<f32>,
+    /// Communication-step batch scratch `[n, m, d]` / `[n, m]`.
+    pub cx: Vec<f32>,
+    pub cy: Vec<f32>,
+}
+
+impl<'a> EngineState<'a> {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        compute: &dyn Compute,
+        shards: Cow<'a, [Shard]>,
+        theta: Vec<f32>,
+    ) -> Self {
+        let (d, _h, p) = compute.dims();
+        let n = shards.len();
+        let m = cfg.m;
+        let local = RoundPlan::new(cfg.algo.effective_q(cfg.q)).local_per_round;
+        EngineState {
+            n,
+            d,
+            p,
+            m,
+            theta,
+            samplers: (0..n).map(|i| NodeSampler::new(cfg.seed, i, m)).collect(),
+            shards,
+            lx: vec![0.0f32; n * local * m * d],
+            ly: vec![0.0f32; n * local * m],
+            cx: vec![0.0f32; n * m * d],
+            cy: vec![0.0f32; n * m],
+        }
+    }
+
+    /// Draw one fresh batch per row into the communication scratch.
+    pub fn draw_comm_batches(&mut self) {
+        let (m, d) = (self.m, self.d);
+        let shards = &self.shards;
+        for (i, s) in self.samplers.iter_mut().enumerate() {
+            s.batch(
+                &shards[i],
+                &mut self.cx[i * m * d..(i + 1) * m * d],
+                &mut self.cy[i * m..(i + 1) * m],
+            );
+        }
+    }
+
+    /// Row `i` of the θ stack.
+    pub fn theta_row(&self, i: usize) -> &[f32] {
+        &self.theta[i * self.p..(i + 1) * self.p]
+    }
+
+    /// Communication batch of row `i` (valid after [`Self::draw_comm_batches`]).
+    pub fn comm_batch(&self, i: usize) -> (&[f32], &[f32]) {
+        (
+            &self.cx[i * self.m * self.d..(i + 1) * self.m * self.d],
+            &self.cy[i * self.m..(i + 1) * self.m],
+        )
+    }
+}
+
+// -------------------------------------------------------- sync driver ----
+
+/// Whole-network in-process driver: each phase is (at most) one `Compute`
+/// call covering all nodes, with communication charged analytically.  This
+/// is the throughput path (`--mode fused`) and the substrate for both
+/// baselines.
+pub struct SyncDriver<'a> {
+    compute: &'a dyn Compute,
+    strategy: Box<dyn CommStrategy + 'a>,
+    st: EngineState<'a>,
+    acct: Option<Accountant>,
+    compute_s_per_step: f64,
+    log: RunLog,
+    started: std::time::Instant,
+}
+
+impl<'a> SyncDriver<'a> {
+    /// Gossip trainer (DSGD / DSGT and their federated variants) over an
+    /// explicit graph + mixing matrix.
+    pub fn decentralized(
+        cfg: &'a ExperimentConfig,
+        compute: &'a dyn Compute,
+        ds: &'a FederatedDataset,
+        graph: &Graph,
+        w: &Mat,
+    ) -> Result<Self> {
+        let (d, h, _p) = compute.dims();
+        if d != ds.d {
+            bail!("backend d={d} vs dataset d={}", ds.d);
+        }
+        let q = cfg.algo.effective_q(cfg.q);
+        let plan = RoundPlan::new(q);
+        if let Some(want) = compute.local_steps_len() {
+            if plan.local_per_round > 0 && plan.local_per_round != want {
+                bail!(
+                    "artifacts were lowered for Q={} (local phase {want}), config wants Q={q}; \
+                     re-run `make artifacts Q={q}` or use --backend native",
+                    want + 1
+                );
+            }
+        }
+        if cfg.drop_prob > 0.0 {
+            bail!(
+                "drop_prob={} requested, but fused execution charges communication \
+                 analytically over lossless links; use `--mode actors` for loss injection",
+                cfg.drop_prob
+            );
+        }
+        let wf: Vec<f32> = crate::mixing::to_f32(w);
+        let strategy: Box<dyn CommStrategy> = match cfg.algo {
+            AlgoKind::Dsgd | AlgoKind::FdDsgd => Box::new(DsgdStrategy::new(wf)),
+            AlgoKind::Dsgt | AlgoKind::FdDsgt => Box::new(DsgtStrategy::new(wf)),
+            other => bail!("{other:?} is not a decentralized gossip algorithm"),
+        };
+        let model = NativeModel::new(d, h);
+        let theta = init_thetas(cfg.seed, ds.n_hospitals(), &model);
+        let link = LinkModel {
+            latency_s: cfg.latency_s,
+            bandwidth_bps: cfg.bandwidth_bps,
+            drop_prob: 0.0, // enforced lossless above
+        };
+        let acct = Accountant::new(graph, link);
+        Ok(Self::build(
+            cfg,
+            compute,
+            Cow::Borrowed(&ds.shards[..]),
+            theta,
+            strategy,
+            Some(acct),
+            cfg.algo.name(),
+        ))
+    }
+
+    /// Star-network FedAvg baseline: every row of the stack starts from the
+    /// server parameters each round; the strategy averages after the final
+    /// local gradient.
+    pub fn fedavg(
+        cfg: &'a ExperimentConfig,
+        compute: &'a dyn Compute,
+        ds: &'a FederatedDataset,
+    ) -> Result<Self> {
+        let (d, h, _p) = compute.dims();
+        if d != ds.d {
+            bail!("backend d={d} vs dataset d={}", ds.d);
+        }
+        if cfg.drop_prob > 0.0 {
+            bail!(
+                "drop_prob={} requested, but the FedAvg baseline charges its star \
+                 network analytically over lossless links",
+                cfg.drop_prob
+            );
+        }
+        let n = ds.n_hospitals();
+        let model = NativeModel::new(d, h);
+        // server init = node-0 init (a shared broadcast start, as FedAvg assumes)
+        let server = init_theta(cfg.seed, 0, &model);
+        let mut theta = Vec::with_capacity(n * model.p());
+        for _ in 0..n {
+            theta.extend_from_slice(&server);
+        }
+        let star = Graph::build(
+            &crate::graph::Topology::Star,
+            n + 1,
+            &mut crate::rng::Pcg64::seed(0),
+        )?;
+        let link = LinkModel {
+            latency_s: cfg.latency_s,
+            bandwidth_bps: cfg.bandwidth_bps,
+            drop_prob: 0.0,
+        };
+        let acct = Accountant::new(&star, link);
+        Ok(Self::build(
+            cfg,
+            compute,
+            Cow::Borrowed(&ds.shards[..]),
+            theta,
+            Box::new(FedAvgStrategy::new()),
+            Some(acct),
+            "fedavg",
+        ))
+    }
+
+    /// Fictitious fusion center: plain SGD on the pooled cohort (one stack
+    /// row, zero communication by construction).
+    pub fn centralized(
+        cfg: &'a ExperimentConfig,
+        compute: &'a dyn Compute,
+        ds: &FederatedDataset,
+    ) -> Result<Self> {
+        let (d, h, _p) = compute.dims();
+        if d != ds.d {
+            bail!("backend d={d} vs dataset d={}", ds.d);
+        }
+        let model = NativeModel::new(d, h);
+        let theta = init_theta(cfg.seed, 0, &model);
+        Ok(Self::build(
+            cfg,
+            compute,
+            Cow::Owned(vec![ds.pooled()]),
+            theta,
+            Box::new(CentralizedStrategy::new(model)),
+            None,
+            "centralized",
+        ))
+    }
+
+    fn build(
+        cfg: &ExperimentConfig,
+        compute: &'a dyn Compute,
+        shards: Cow<'a, [Shard]>,
+        theta: Vec<f32>,
+        strategy: Box<dyn CommStrategy + 'a>,
+        acct: Option<Accountant>,
+        name: &str,
+    ) -> Self {
+        let st = EngineState::new(cfg, compute, shards, theta);
+        SyncDriver {
+            compute,
+            strategy,
+            st,
+            acct,
+            compute_s_per_step: cfg.compute_s_per_step,
+            log: RunLog::new(name),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    fn net_snapshot(&self) -> crate::netsim::NetSnapshot {
+        self.acct.as_ref().map(|a| a.snapshot()).unwrap_or_default()
+    }
+
+    /// Consume the driver: the metric log and the final θ stack of the SAME
+    /// run — no deterministic replay required.
+    pub fn into_result(self) -> (RunLog, Vec<f32>) {
+        (self.log, self.st.theta)
+    }
+}
+
+impl Driver for SyncDriver<'_> {
+    fn begin(&mut self) -> Result<()> {
+        self.strategy.init(&mut self.st, self.compute)?;
+        let eval = self.strategy.eval(&self.st, self.compute)?;
+        let net = self.net_snapshot();
+        self.log
+            .push(round_metrics(0, 0, eval, net, self.started.elapsed().as_secs_f64()));
+        Ok(())
+    }
+
+    fn local_phase(&mut self, _round: usize, lrs: &[f32]) -> Result<()> {
+        let st = &mut self.st;
+        let (m, d, local) = (st.m, st.d, lrs.len());
+        let shards = &st.shards;
+        for (i, s) in st.samplers.iter_mut().enumerate() {
+            s.batches(
+                &shards[i],
+                local,
+                &mut st.lx[i * local * m * d..(i + 1) * local * m * d],
+                &mut st.ly[i * local * m..(i + 1) * local * m],
+            );
+        }
+        let (t_next, _losses) = self.compute.local_steps_all(&st.theta, &st.lx, &st.ly, lrs)?;
+        st.theta = t_next;
+        if let Some(acct) = self.acct.as_mut() {
+            acct.local_compute(local as u64, self.compute_s_per_step);
+        }
+        Ok(())
+    }
+
+    fn comm_phase(&mut self, _round: usize, lr: f32) -> Result<()> {
+        self.strategy.comm_update(&mut self.st, self.compute, lr)?;
+        if let Some(acct) = self.acct.as_mut() {
+            match self.strategy.cost() {
+                CommCost::Gossip { kinds } => {
+                    acct.local_compute(1, self.compute_s_per_step);
+                    acct.comm_round(self.st.p, kinds);
+                }
+                CommCost::Star => {
+                    acct.local_compute(1, self.compute_s_per_step);
+                    acct.star_round(self.st.n, self.st.p);
+                }
+                CommCost::None => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn observe(&mut self, round: u64, local_steps: u64) -> Result<()> {
+        let eval = self.strategy.eval(&self.st, self.compute)?;
+        let net = self.net_snapshot();
+        self.log.push(round_metrics(
+            round,
+            local_steps,
+            eval,
+            net,
+            self.started.elapsed().as_secs_f64(),
+        ));
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- entry points ----
+
+/// Train a gossip algorithm (DSGD/DSGT/FD-*) through the sync driver;
+/// returns the metric log and the final θ stack of the same run.
+pub fn train_decentralized(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+    graph: &Graph,
+    w: &Mat,
+) -> Result<(RunLog, Vec<f32>)> {
+    let engine = RoundEngine::from_config(cfg);
+    let mut driver = SyncDriver::decentralized(cfg, compute, ds, graph, w)?;
+    engine.run(&mut driver)?;
+    Ok(driver.into_result())
+}
+
+/// Train the star-network FedAvg baseline through the sync driver.
+pub fn train_fedavg(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+) -> Result<(RunLog, Vec<f32>)> {
+    let engine = RoundEngine::from_config(cfg);
+    let mut driver = SyncDriver::fedavg(cfg, compute, ds)?;
+    engine.run(&mut driver)?;
+    Ok(driver.into_result())
+}
+
+/// Train the centralized fusion-center baseline through the sync driver.
+pub fn train_centralized(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+) -> Result<(RunLog, Vec<f32>)> {
+    let engine = RoundEngine::from_config(cfg);
+    let mut driver = SyncDriver::centralized(cfg, compute, ds)?;
+    engine.run(&mut driver)?;
+    Ok(driver.into_result())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, Mode};
+    use crate::coordinator::compute::NativeCompute;
+    use crate::data::{generate, DataConfig};
+    use crate::graph::Topology;
+    use crate::mixing::{build as build_w, Scheme};
+    use crate::rng::Pcg64;
+
+    fn setup(algo: AlgoKind) -> (ExperimentConfig, NativeCompute, FederatedDataset, Graph, Mat) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 4;
+        cfg.d = 42;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 5;
+        cfg.algo = algo;
+        cfg.total_steps = 40;
+        cfg.eval_every = 2;
+        cfg.mode = Mode::Fused;
+        cfg.backend = Backend::Native;
+        cfg.records_per_hospital = 60;
+        let ds = generate(&DataConfig {
+            n_hospitals: cfg.n,
+            records_per_hospital: 60,
+            records_jitter: 0,
+            heterogeneity: 0.5,
+            ..DataConfig::default()
+        })
+        .unwrap();
+        let graph = Graph::build(&Topology::Ring, cfg.n, &mut Pcg64::seed(1)).unwrap();
+        let w = build_w(&graph, Scheme::Metropolis);
+        let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+        (cfg, compute, ds, graph, w)
+    }
+
+    #[test]
+    fn engine_schedule_matches_config() {
+        let (cfg, ..) = setup(AlgoKind::FdDsgt);
+        let e = RoundEngine::from_config(&cfg);
+        assert_eq!(e.q, 5);
+        assert_eq!(e.rounds, 8);
+        assert_eq!(e.plan.local_per_round, 4);
+        // classic variants force Q = 1
+        let mut classic = cfg;
+        classic.algo = AlgoKind::Dsgd;
+        assert_eq!(RoundEngine::from_config(&classic).q, 1);
+    }
+
+    #[test]
+    fn returned_theta_is_the_logged_trajectory_endpoint() {
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt);
+        let (log, theta) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let eval = compute.eval_full(&theta, &ds.shards).unwrap();
+        assert_eq!(eval.0, log.rows.last().unwrap().loss);
+    }
+
+    #[test]
+    fn fused_drop_prob_bails_loudly() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd);
+        cfg.drop_prob = 0.1;
+        let err = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap_err();
+        assert!(err.to_string().contains("actors"), "{err}");
+    }
+
+    #[test]
+    fn strategies_share_one_loop_and_all_train() {
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd);
+        let (dsgd, _) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let mut c2 = cfg.clone();
+        c2.algo = AlgoKind::FedAvg;
+        let (fa, _) = train_fedavg(&c2, &compute, &ds).unwrap();
+        let mut c3 = cfg.clone();
+        c3.algo = AlgoKind::Centralized;
+        let (ct, _) = train_centralized(&c3, &compute, &ds).unwrap();
+        for log in [&dsgd, &fa, &ct] {
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last < first, "{}: loss {first} -> {last}", log.algo);
+        }
+        // same cadence from the same engine
+        assert_eq!(dsgd.rows.len(), fa.rows.len());
+        assert_eq!(dsgd.rows.len(), ct.rows.len());
+        // centralized pays zero bytes; fedavg pays star bytes
+        assert_eq!(ct.rows.last().unwrap().bytes, 0);
+        assert!(fa.rows.last().unwrap().bytes > 0);
+    }
+}

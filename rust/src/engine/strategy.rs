@@ -1,0 +1,227 @@
+//! Communication strategies — the pluggable eq.-2/3/averaging/SGD update
+//! the [`RoundEngine`](super::RoundEngine) applies once per round.
+//!
+//! A strategy owns the algorithm-specific auxiliary state (the DSGT tracker,
+//! nothing for the others) and performs the whole-network communication
+//! update on the shared [`EngineState`] through the [`Compute`] backend.
+//! What it does NOT own: the round loop, the lr schedule, batch sampling
+//! streams, or metrics — those are engine machinery, identical for every
+//! algorithm.  Adding an algorithm = implementing this trait; the loop,
+//! both drivers, the CLI, and the benches pick it up unchanged.
+
+use super::EngineState;
+use crate::algo::axpy;
+use crate::algo::native::NativeModel;
+use crate::coordinator::compute::Compute;
+use anyhow::Result;
+
+/// What one communication round costs on the wire (drives the analytic
+/// accountant of the sync driver; the actor driver measures instead).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommCost {
+    /// Synchronous gossip over every graph edge, `kinds` payloads per edge
+    /// (1 = θ only, 2 = θ and the DSGT tracker ϑ).
+    Gossip { kinds: u32 },
+    /// Star-network client↑/server↓ exchange (FedAvg).
+    Star,
+    /// No communication (fusion-center baseline).
+    None,
+}
+
+/// The communication update of Algorithm 1 — eq. 2, eq. 3, a server
+/// average, or a plain SGD step — plus its wire cost and the metric eval.
+/// (The run-log label is the driver's concern — `cfg.algo.name()` — so
+/// strategies carry no display name.)
+pub trait CommStrategy {
+    fn cost(&self) -> CommCost;
+
+    /// Pre-loop initialization (e.g. DSGT's Y⁰ = G⁰ = ∇g(θ⁰) on a fresh
+    /// batch).  Default: nothing.
+    fn init(&mut self, _st: &mut EngineState, _compute: &dyn Compute) -> Result<()> {
+        Ok(())
+    }
+
+    /// Apply the communication update at learning rate `lr`, consuming one
+    /// gradient per stack row.
+    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()>;
+
+    /// Full-shard metrics → (loss, accuracy, stationarity, consensus).
+    /// Default: whole-stack eval over the training shards.
+    fn eval(&self, st: &EngineState, compute: &dyn Compute) -> Result<(f64, f64, f64, f64)> {
+        compute.eval_full(&st.theta, &st.shards)
+    }
+}
+
+// --------------------------------------------------------------- DSGD ----
+
+/// Eq. 2: `θ_i ← Σ_j w_ij θ_j − α ∇g_i(θ_i)` (covers DSGD and FD-DSGD —
+/// the local period lives in the engine, not here).
+pub struct DsgdStrategy {
+    /// Row-major mixing matrix `[n, n]` satisfying Assumption 1.
+    w: Vec<f32>,
+}
+
+impl DsgdStrategy {
+    pub fn new(w: Vec<f32>) -> Self {
+        DsgdStrategy { w }
+    }
+}
+
+impl CommStrategy for DsgdStrategy {
+    fn cost(&self) -> CommCost {
+        CommCost::Gossip { kinds: 1 }
+    }
+
+    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+        st.draw_comm_batches();
+        let (t_next, _losses) = compute.dsgd_round(&self.w, &st.theta, &st.cx, &st.cy, lr)?;
+        st.theta = t_next;
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- DSGT ----
+
+/// Eq. 3 with gradient tracking: mixes θ and the tracker ϑ, then refreshes
+/// the tracker with the gradient difference (covers DSGT and FD-DSGT).
+pub struct DsgtStrategy {
+    w: Vec<f32>,
+    /// Tracker stack Y `[n, p]`.
+    y: Vec<f32>,
+    /// Previous-gradient stack G `[n, p]`.
+    g: Vec<f32>,
+}
+
+impl DsgtStrategy {
+    pub fn new(w: Vec<f32>) -> Self {
+        DsgtStrategy { w, y: Vec::new(), g: Vec::new() }
+    }
+}
+
+impl CommStrategy for DsgtStrategy {
+    fn cost(&self) -> CommCost {
+        CommCost::Gossip { kinds: 2 } // θ and ϑ
+    }
+
+    fn init(&mut self, st: &mut EngineState, compute: &dyn Compute) -> Result<()> {
+        st.draw_comm_batches();
+        let (n, p) = (st.n, st.p);
+        let mut g0 = vec![0.0f32; n * p];
+        for i in 0..n {
+            let (bx, by) = st.comm_batch(i);
+            let (_, gi) = compute.grad_step(st.theta_row(i), bx, by)?;
+            g0[i * p..(i + 1) * p].copy_from_slice(&gi);
+        }
+        self.y = g0.clone();
+        self.g = g0;
+        Ok(())
+    }
+
+    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+        st.draw_comm_batches();
+        let (t_next, y_next, g_next, _losses) =
+            compute.dsgt_round(&self.w, &st.theta, &self.y, &self.g, &st.cx, &st.cy, lr)?;
+        st.theta = t_next;
+        self.y = y_next;
+        self.g = g_next;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- FedAvg ----
+
+/// Star-network FedAvg (McMahan et al., 2017): the engine's local phase runs
+/// every client from the server parameters (all stack rows are identical
+/// after each round); this update takes the final local gradient and
+/// replaces every row with the client average.
+pub struct FedAvgStrategy;
+
+impl FedAvgStrategy {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        FedAvgStrategy
+    }
+}
+
+impl CommStrategy for FedAvgStrategy {
+    fn cost(&self) -> CommCost {
+        CommCost::Star
+    }
+
+    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+        let (n, p) = (st.n, st.p);
+        let mut mean = vec![0.0f64; p];
+        for i in 0..n {
+            // final local step of the round (keeps total gradient count = Q)
+            {
+                let (m, d) = (st.m, st.d);
+                let shard = &st.shards[i];
+                st.samplers[i].batch(
+                    shard,
+                    &mut st.cx[i * m * d..(i + 1) * m * d],
+                    &mut st.cy[i * m..(i + 1) * m],
+                );
+            }
+            let (bx, by) = st.comm_batch(i);
+            let (_, grad) = compute.grad_step(st.theta_row(i), bx, by)?;
+            let row = &mut st.theta[i * p..(i + 1) * p];
+            axpy(row, -lr, &grad);
+            for (acc, &t) in mean.iter_mut().zip(row.iter()) {
+                *acc += t as f64;
+            }
+        }
+        let server: Vec<f32> = mean.into_iter().map(|acc| (acc / n as f64) as f32).collect();
+        for i in 0..n {
+            st.theta[i * p..(i + 1) * p].copy_from_slice(&server);
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- centralized ----
+
+/// The fictitious fusion center the paper argues is infeasible: plain SGD
+/// on the pooled cohort.  One stack row, no communication; the engine's
+/// round axis advances every Q steps so curves align with FD runs.
+pub struct CentralizedStrategy {
+    /// Native twin for metrics — the pooled shard does not match the AOT
+    /// artifacts' per-hospital eval shapes, so eval runs in-process.
+    model: NativeModel,
+}
+
+impl CentralizedStrategy {
+    pub fn new(model: NativeModel) -> Self {
+        CentralizedStrategy { model }
+    }
+}
+
+impl CommStrategy for CentralizedStrategy {
+    fn cost(&self) -> CommCost {
+        CommCost::None
+    }
+
+    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+        st.draw_comm_batches();
+        let (bx, by) = st.comm_batch(0);
+        let (_, grad) = compute.grad_step(&st.theta, bx, by)?;
+        axpy(&mut st.theta, -lr, &grad);
+        Ok(())
+    }
+
+    fn eval(&self, st: &EngineState, _compute: &dyn Compute) -> Result<(f64, f64, f64, f64)> {
+        Ok(self.model.eval_full(&st.theta, &st.shards))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_match_payload_kinds() {
+        assert_eq!(DsgdStrategy::new(vec![1.0]).cost(), CommCost::Gossip { kinds: 1 });
+        assert_eq!(DsgtStrategy::new(vec![1.0]).cost(), CommCost::Gossip { kinds: 2 });
+        assert_eq!(FedAvgStrategy::new().cost(), CommCost::Star);
+        assert_eq!(CentralizedStrategy::new(NativeModel::new(4, 2)).cost(), CommCost::None);
+    }
+}

@@ -13,8 +13,9 @@
 //!   HLO-text artifacts in `artifacts/` by `make artifacts`.
 //! - L3 (this crate): the decentralized runtime — graph topologies, mixing
 //!   matrices, synthetic EHR data, the gossip network simulator, the
-//!   DSGD/DSGT schedulers, node actors, metrics, and every experiment
-//!   harness that regenerates the paper's figures.
+//!   unified round engine (`engine`) with its pluggable communication
+//!   strategies, node actors, metrics, and every experiment harness that
+//!   regenerates the paper's figures.
 //!
 //! Quickstart: `make artifacts && cargo run --release -- train --algo fd-dsgt`.
 
@@ -24,6 +25,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod graph;
 pub mod jsonl;

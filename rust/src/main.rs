@@ -41,6 +41,8 @@ COMMON OPTIONS (train + experiments)
   --mixing <s>            metropolis|lazy|maxdeg
   --heterogeneity <h>     data non-iidness in [0,1] (default 0.6)
   --seed <s>              RNG seed (default 7)
+  --threads <k>           native-backend worker threads, 0 = one per core
+                          (default 0; results identical at any k)
   --eval-every <k>        evaluate every k comm rounds
   --artifacts <dir>       artifact dir (default artifacts/)
   --out <file>            dump metrics/results JSON

@@ -1,0 +1,165 @@
+//! Integration: driver equivalence — the refactor's correctness pin.
+//!
+//! The same config must produce BITWISE-identical loss trajectories through
+//! (a) the fused sync driver vs the actor driver (one thread per hospital,
+//! gossip over the channel netsim), and (b) serial vs threaded native
+//! compute.  Both pins also guard the parallel fan-out against
+//! nondeterministic reduction order.
+
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on, Compute, NativeCompute};
+use decfl::rng::Pcg64;
+
+fn native_cfg(algo: AlgoKind, q: usize, steps: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 5;
+    cfg.d = 42;
+    cfg.hidden = 8;
+    cfg.m = 8;
+    cfg.q = q;
+    cfg.algo = algo;
+    cfg.total_steps = steps;
+    cfg.eval_every = 1;
+    cfg.backend = Backend::Native;
+    cfg.records_per_hospital = 60;
+    cfg.heterogeneity = 0.5;
+    cfg.topology = "ring".into();
+    cfg
+}
+
+#[test]
+fn fused_and_actor_drivers_bitwise_identical() {
+    for (algo, q, steps) in [
+        (AlgoKind::Dsgd, 1, 10),
+        (AlgoKind::FdDsgd, 4, 24),
+        (AlgoKind::Dsgt, 1, 10),
+        (AlgoKind::FdDsgt, 4, 24),
+    ] {
+        let mut cfg = native_cfg(algo, q, steps);
+        let asm = assemble(&cfg).unwrap();
+
+        cfg.mode = Mode::Fused;
+        let fused = run_on(&cfg, &asm).unwrap();
+        cfg.mode = Mode::Actors;
+        let actors = run_on(&cfg, &asm).unwrap();
+
+        assert_eq!(fused.rows.len(), actors.rows.len(), "{algo:?}: row count");
+        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
+            assert_eq!(rf.comm_rounds, ra.comm_rounds, "{algo:?}");
+            assert_eq!(
+                rf.loss.to_bits(),
+                ra.loss.to_bits(),
+                "{algo:?} round {}: fused loss {} vs actor loss {}",
+                rf.comm_rounds,
+                rf.loss,
+                ra.loss
+            );
+            assert_eq!(rf.accuracy.to_bits(), ra.accuracy.to_bits(), "{algo:?}");
+            assert_eq!(rf.stationarity.to_bits(), ra.stationarity.to_bits(), "{algo:?}");
+            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{algo:?}");
+        }
+        // analytic accountant and channel netsim agree byte-for-byte
+        assert_eq!(
+            fused.rows.last().unwrap().bytes,
+            actors.rows.last().unwrap().bytes,
+            "{algo:?}: byte accounting"
+        );
+    }
+}
+
+#[test]
+fn threaded_training_bitwise_equal_serial() {
+    for algo in [AlgoKind::FdDsgd, AlgoKind::FdDsgt] {
+        let mut cfg = native_cfg(algo, 4, 24);
+        cfg.threads = 1;
+        let serial = run_on(&cfg, &assemble(&cfg).unwrap()).unwrap();
+        cfg.threads = 4;
+        let threaded = run_on(&cfg, &assemble(&cfg).unwrap()).unwrap();
+        assert_eq!(serial.rows.len(), threaded.rows.len());
+        for (rs, rt) in serial.rows.iter().zip(&threaded.rows) {
+            assert_eq!(rs.loss.to_bits(), rt.loss.to_bits(), "{algo:?}");
+            assert_eq!(rs.consensus.to_bits(), rt.consensus.to_bits(), "{algo:?}");
+        }
+    }
+}
+
+#[test]
+fn threaded_round_ops_bitwise_equal_serial() {
+    // direct op-level pin at an n that doesn't divide the pool evenly
+    let (d, h, n, m, local) = (11, 6, 7, 5, 3);
+    let serial = NativeCompute::new(d, h, n, m).with_threads(1);
+    let threaded = NativeCompute::new(d, h, n, m).with_threads(3);
+    let p = serial.dims().2;
+    let mut rng = Pcg64::seed(42);
+    let mut vec_of = |len: usize, scale: f64| -> Vec<f32> {
+        (0..len).map(|_| (rng.normal() * scale) as f32).collect()
+    };
+    let theta = vec_of(n * p, 0.3);
+    let y_tr = vec_of(n * p, 0.1);
+    let g_old = vec_of(n * p, 0.1);
+    let lx = vec_of(n * local * m * d, 1.0);
+    let ly: Vec<f32> = (0..n * local * m).map(|i| (i % 2) as f32).collect();
+    let cx = vec_of(n * m * d, 1.0);
+    let cy: Vec<f32> = (0..n * m).map(|i| (i % 3 == 0) as u32 as f32).collect();
+    let lrs = vec![0.05f32; local];
+    let w = vec![1.0f32 / n as f32; n * n];
+
+    let a = serial.local_steps_all(&theta, &lx, &ly, &lrs).unwrap();
+    let b = threaded.local_steps_all(&theta, &lx, &ly, &lrs).unwrap();
+    assert_eq!(a.0, b.0, "local_steps_all theta");
+    assert_eq!(a.1, b.1, "local_steps_all losses");
+
+    let a = serial.dsgd_round(&w, &theta, &cx, &cy, 0.05).unwrap();
+    let b = threaded.dsgd_round(&w, &theta, &cx, &cy, 0.05).unwrap();
+    assert_eq!(a.0, b.0, "dsgd_round theta");
+    assert_eq!(a.1, b.1, "dsgd_round losses");
+
+    let a = serial.dsgt_round(&w, &theta, &y_tr, &g_old, &cx, &cy, 0.05).unwrap();
+    let b = threaded.dsgt_round(&w, &theta, &y_tr, &g_old, &cx, &cy, 0.05).unwrap();
+    assert_eq!(a.0, b.0, "dsgt_round theta");
+    assert_eq!(a.1, b.1, "dsgt_round tracker");
+    assert_eq!(a.2, b.2, "dsgt_round grads");
+    assert_eq!(a.3, b.3, "dsgt_round losses");
+
+    // eval_full needs real shards
+    let ds = decfl::data::generate(&decfl::data::DataConfig {
+        n_hospitals: n,
+        records_per_hospital: 40,
+        records_jitter: 0,
+        heterogeneity: 0.5,
+        ..decfl::data::DataConfig::default()
+    })
+    .unwrap();
+    let serial_ds = NativeCompute::new(ds.d, h, n, m).with_threads(1);
+    let threaded_ds = NativeCompute::new(ds.d, h, n, m).with_threads(3);
+    let pd = serial_ds.dims().2;
+    let theta_ds: Vec<f32> = {
+        let mut r2 = Pcg64::seed(7);
+        (0..n * pd).map(|_| (r2.normal() * 0.3) as f32).collect()
+    };
+    let a = serial_ds.eval_full(&theta_ds, &ds.shards).unwrap();
+    let b = threaded_ds.eval_full(&theta_ds, &ds.shards).unwrap();
+    assert_eq!(a.0.to_bits(), b.0.to_bits(), "eval loss");
+    assert_eq!(a.1.to_bits(), b.1.to_bits(), "eval accuracy");
+    assert_eq!(a.2.to_bits(), b.2.to_bits(), "eval stationarity");
+    assert_eq!(a.3.to_bits(), b.3.to_bits(), "eval consensus");
+}
+
+#[test]
+fn baselines_run_through_the_same_engine_cadence() {
+    // FedAvg and centralized share the engine loop: same round axis and
+    // row cadence as a decentralized run with the same schedule
+    let mut cfg = native_cfg(AlgoKind::FdDsgd, 4, 24);
+    cfg.eval_every = 2;
+    let asm = assemble(&cfg).unwrap();
+    let fd = run_on(&cfg, &asm).unwrap();
+    let mut fa_cfg = cfg.clone();
+    fa_cfg.algo = AlgoKind::FedAvg;
+    let fa = run_on(&fa_cfg, &asm).unwrap();
+    let mut ct_cfg = cfg.clone();
+    ct_cfg.algo = AlgoKind::Centralized;
+    let ct = run_on(&ct_cfg, &asm).unwrap();
+    let rounds: Vec<u64> = fd.rows.iter().map(|r| r.comm_rounds).collect();
+    assert_eq!(rounds, fa.rows.iter().map(|r| r.comm_rounds).collect::<Vec<_>>());
+    assert_eq!(rounds, ct.rows.iter().map(|r| r.comm_rounds).collect::<Vec<_>>());
+}
