@@ -1,0 +1,63 @@
+//! EXP-N1 bench: round-engine throughput and wire cost under every
+//! network plan — static, rewire, edge dropout, node churn — on one shared
+//! base network, fused mode, native backend.
+//!
+//!     cargo bench --bench bench_churn
+//!     DECFL_FULL=1  cargo bench --bench bench_churn   # paper-scale
+//!     DECFL_SMOKE=1 cargo bench --bench bench_churn   # CI compile+run check
+
+use decfl::benchutil::{bench, budget, full_scale, report, section, smoke};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+
+fn main() -> anyhow::Result<()> {
+    let (n, steps, q) = if full_scale() {
+        (20, 2_000, 50)
+    } else if smoke() {
+        (6, 30, 3)
+    } else {
+        (12, 240, 6)
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.algo = AlgoKind::FdDsgt;
+    cfg.n = n;
+    cfg.hidden = 16;
+    cfg.m = 10;
+    cfg.q = q;
+    cfg.total_steps = steps;
+    cfg.eval_every = usize::MAX / 2; // final row only: time the rounds, not eval
+    cfg.records_per_hospital = 120;
+    cfg.topology = "er".into();
+    cfg.rewire_every = 3;
+    cfg.edge_drop = 0.3;
+    cfg.churn = 0.2;
+
+    println!(
+        "time-varying network plans, fd-dsgt fused/native: n={n} steps={steps} q={q} ({} rounds)",
+        steps.div_ceil(q)
+    );
+
+    cfg.net_plan = "static".into();
+    let asm = assemble(&cfg)?; // shared base graph + cohort for every plan
+    for plan in ["static", "rewire", "edge-drop", "churn"] {
+        cfg.net_plan = plan.into();
+        let log = run_on(&cfg, &asm)?;
+        let last = log.rows.last().unwrap();
+        section(&format!("plan {plan}"));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(&cfg, &asm).unwrap());
+        });
+        report(&format!("{plan} ({} rounds)", last.comm_rounds), &t);
+        println!(
+            "wire: {:.2} MB, {} msgs, sim {:.2}s | final loss {:.4}",
+            last.bytes as f64 / 1e6,
+            last.messages,
+            last.sim_time_s,
+            last.loss
+        );
+    }
+    Ok(())
+}

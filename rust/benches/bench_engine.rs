@@ -6,7 +6,7 @@
 //!
 //!     cargo bench --bench bench_engine
 
-use decfl::benchutil::{bench, report, section};
+use decfl::benchutil::{bench, budget, report, section, smoke};
 use decfl::coordinator::{Compute, NativeCompute};
 use decfl::rng::Pcg64;
 
@@ -23,7 +23,8 @@ fn main() -> anyhow::Result<()> {
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     println!("native whole-network ops, serial vs threaded ({cores} cores), d={d} h={h} m={m}");
 
-    for &n in &[10usize, 50, 200] {
+    let sizes: &[usize] = if smoke() { &[10] } else { &[10, 50, 200] };
+    for &n in sizes {
         let serial = NativeCompute::new(d, h, n, m).with_threads(1);
         let threaded = NativeCompute::new(d, h, n, m); // 0 = auto: one per core
         let p = serial.dims().2;
@@ -42,10 +43,10 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(a.0 == b.0 && a.1 == b.1, "threaded result differs at n={n}");
 
         section(&format!("local_steps_all  n={n} ({local} steps/node)"));
-        let ts = bench(1.0, || {
+        let ts = bench(budget(1.0), || {
             std::hint::black_box(serial.local_steps_all(&theta, &lx, &ly, &lrs).unwrap());
         });
-        let tp = bench(1.0, || {
+        let tp = bench(budget(1.0), || {
             std::hint::black_box(threaded.local_steps_all(&theta, &lx, &ly, &lrs).unwrap());
         });
         report("serial (threads=1)", &ts);
@@ -53,10 +54,10 @@ fn main() -> anyhow::Result<()> {
         println!("speedup: {:.2}x", ts.p50_s / tp.p50_s);
 
         section(&format!("dsgd_round       n={n}"));
-        let ts = bench(0.5, || {
+        let ts = bench(budget(0.5), || {
             std::hint::black_box(serial.dsgd_round(&w, &theta, &cx, &cy, 0.02).unwrap());
         });
-        let tp = bench(0.5, || {
+        let tp = bench(budget(0.5), || {
             std::hint::black_box(threaded.dsgd_round(&w, &theta, &cx, &cy, 0.02).unwrap());
         });
         report("serial (threads=1)", &ts);
@@ -65,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // eval_full over real shards at one representative size
-    let n = 50;
+    let n = if smoke() { 10 } else { 50 };
     let ds = decfl::data::generate(&decfl::data::DataConfig {
         n_hospitals: n,
         records_per_hospital: 200,
@@ -82,10 +83,10 @@ fn main() -> anyhow::Result<()> {
     let b = threaded.eval_full(&theta, &ds.shards)?;
     anyhow::ensure!(a == b, "threaded eval_full differs");
     section(&format!("eval_full        n={n} (200 records/shard)"));
-    let ts = bench(0.5, || {
+    let ts = bench(budget(0.5), || {
         std::hint::black_box(serial.eval_full(&theta, &ds.shards).unwrap());
     });
-    let tp = bench(0.5, || {
+    let tp = bench(budget(0.5), || {
         std::hint::black_box(threaded.eval_full(&theta, &ds.shards).unwrap());
     });
     report("serial (threads=1)", &ts);

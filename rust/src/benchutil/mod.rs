@@ -93,6 +93,23 @@ pub fn full_scale() -> bool {
     std::env::var("DECFL_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// `DECFL_SMOKE=1 cargo bench` shrinks workloads to a seconds-long
+/// compile-and-run check — the CI bench-smoke step uses this so bench
+/// targets can neither bit-rot uncompiled nor panic at runtime.
+pub fn smoke() -> bool {
+    std::env::var("DECFL_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Timing budget helper: the smoke budget under `DECFL_SMOKE=1`, the given
+/// default otherwise.
+pub fn budget(default_s: f64) -> f64 {
+    if smoke() {
+        default_s.min(0.05)
+    } else {
+        default_s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -118,6 +118,13 @@ impl Args {
         }
     }
 
+    /// Was `--key` given on the command line at all (option or flag)?
+    /// Unlike the accessors this answers *presence*, letting subcommands
+    /// bail loudly on flags they would otherwise silently ignore.
+    pub fn provided(&self, key: &str) -> bool {
+        self.options.contains_key(key) || self.flags.iter().any(|f| f == key)
+    }
+
     /// Error on any option/flag that no accessor ever looked at.
     pub fn finish(&self) -> Result<()> {
         let seen = self.consumed.borrow();
@@ -164,6 +171,21 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     }
     if let Some(v) = args.get_str("mixing") {
         cfg.mixing = v.to_string();
+    }
+    if let Some(v) = args.get_str("net-plan") {
+        cfg.net_plan = v.to_string();
+    }
+    if let Some(v) = args.get_usize("rewire-every")? {
+        cfg.rewire_every = v;
+    }
+    if let Some(v) = args.get_f64("edge-drop")? {
+        cfg.edge_drop = v;
+    }
+    if let Some(v) = args.get_f64("churn")? {
+        cfg.churn = v;
+    }
+    if let Some(v) = args.get_f64("drop-prob")? {
+        cfg.drop_prob = v;
     }
     if let Some(v) = args.get_f64("heterogeneity")? {
         cfg.heterogeneity = v;
@@ -216,6 +238,25 @@ mod tests {
         let a = parse(&["sweep", "--qs", "1,10,100", "--hets", "0.0, 0.5, 1.0"]);
         assert_eq!(a.get_usize_list("qs").unwrap(), Some(vec![1, 10, 100]));
         assert_eq!(a.get_f64_list("hets").unwrap(), Some(vec![0.0, 0.5, 1.0]));
+    }
+
+    #[test]
+    fn provided_reports_presence_without_consuming() {
+        let a = parse(&["train", "--topology", "ring", "--verbose"]);
+        assert!(a.provided("topology"));
+        assert!(a.provided("verbose"));
+        assert!(!a.provided("mixing"));
+    }
+
+    #[test]
+    fn net_plan_overrides_apply() {
+        let a = parse(&["train", "--net-plan", "churn", "--churn", "0.2", "--rewire-every", "3"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.net_plan, "churn");
+        assert!((cfg.churn - 0.2).abs() < 1e-12);
+        assert_eq!(cfg.rewire_every, 3);
+        assert!(a.finish().is_ok());
     }
 
     #[test]

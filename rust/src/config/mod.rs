@@ -131,6 +131,16 @@ pub struct ExperimentConfig {
     pub topology: String,
     pub mixing: String,
 
+    // -- network schedule (time-varying topology; see graph::schedule) --
+    /// Per-round network plan: static|rewire|edge-drop|churn.
+    pub net_plan: String,
+    /// Rewire cadence in communication rounds (plan = rewire).
+    pub rewire_every: usize,
+    /// Per-edge drop probability per round (plan = edge-drop).
+    pub edge_drop: f64,
+    /// Per-node offline probability per round (plan = churn).
+    pub churn: f64,
+
     // -- data --
     pub heterogeneity: f64,
     pub records_per_hospital: usize,
@@ -174,6 +184,10 @@ impl Default for ExperimentConfig {
             mode: Mode::Fused,
             topology: "knn".into(),
             mixing: "metropolis".into(),
+            net_plan: "static".into(),
+            rewire_every: 5,
+            edge_drop: 0.2,
+            churn: 0.1,
             heterogeneity: 0.6,
             records_per_hospital: 500,
             ad_prevalence: 0.21,
@@ -214,6 +228,10 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("algo.mode") { self.mode = Mode::parse(v)?; }
         if let Some(v) = doc.get_str("graph.topology") { self.topology = v.to_string(); }
         if let Some(v) = doc.get_str("graph.mixing") { self.mixing = v.to_string(); }
+        if let Some(v) = doc.get_str("net.plan") { self.net_plan = v.to_string(); }
+        if let Some(v) = doc.get_usize("net.rewire_every")? { self.rewire_every = v; }
+        if let Some(v) = doc.get_f64("net.edge_drop")? { self.edge_drop = v; }
+        if let Some(v) = doc.get_f64("net.churn")? { self.churn = v; }
         if let Some(v) = doc.get_f64("data.heterogeneity")? { self.heterogeneity = v; }
         if let Some(v) = doc.get_usize("data.records_per_hospital")? { self.records_per_hospital = v; }
         if let Some(v) = doc.get_f64("data.ad_prevalence")? { self.ad_prevalence = v; }
@@ -244,6 +262,7 @@ impl ExperimentConfig {
         }
         crate::graph::Topology::parse(&self.topology)?;
         crate::mixing::Scheme::parse(&self.mixing)?;
+        crate::graph::schedule::plan_from_config(self)?;
         Ok(())
     }
 
@@ -316,5 +335,29 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.alpha0 = -1.0;
         assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.net_plan = "bogus".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.net_plan = "edge-drop".into();
+        c.edge_drop = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn net_plan_overlay_and_defaults() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.net_plan, "static");
+        assert!(c.validate().is_ok());
+        let dir = std::env::temp_dir().join(format!("decfl_net_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("net.toml");
+        std::fs::write(&path, "[net]\nplan = \"churn\"\nchurn = 0.25\nrewire_every = 3\n").unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.net_plan, "churn");
+        assert!((cfg.churn - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.rewire_every, 3);
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -9,23 +9,37 @@
 //! *observer*, not a fusion center; training would proceed identically
 //! without it (the paper's premise).
 //!
-//! Per communication round each node: runs Q−1 eq.-4 local steps, broadcasts
-//! θ (and ϑ for DSGT) to graph neighbors, gathers the neighborhood, applies
-//! the eq.-2/3 update through the `combine` kernel, and advances its causal
-//! clock.  Byte/latency accounting comes from the netsim itself.
+//! Per communication round each node: runs Q−1 eq.-4 local steps, derives
+//! the round's network view from the shared `(seed, round)`-keyed
+//! [`NetworkSchedule`], broadcasts θ (and ϑ for DSGT) to that round's
+//! *active* neighbors, gathers the neighborhood, applies the eq.-2/3 update
+//! through the `combine` kernel with the round's `W` row, and advances its
+//! causal clock.  Channels are wired over the schedule's union graph (a
+//! superset of any round's edges), so a time-varying plan only changes who
+//! a node talks to, never the plumbing.  A node that the churn plan takes
+//! offline draws-and-discards its communication batch (keeping the sampler
+//! stream aligned across drivers and plans, §7) and skips the exchange.
+//! Byte/latency accounting comes from the netsim itself.
+//!
+//! Each node caches its slice of the view under the schedule's view key
+//! (once for static, once per epoch for rewire).  Edge-drop/churn views
+//! change every round, so every node rederives them independently — that
+//! per-node O(n²) is the price of coordination-free determinism (no shared
+//! mutable cache between node threads), and it is deliberate: the fused
+//! driver is the throughput path, actors are the fidelity path.
 //!
 //! The round structure is NOT duplicated here: each node thread implements
 //! [`engine::Driver`] and runs the same [`engine::RoundEngine`] loop as the
 //! fused path — only the phase bodies (netsim gossip instead of one fused
 //! whole-network call) differ, which is exactly what pins driver
-//! equivalence.
+//! equivalence, for static and dynamic network plans alike.
 
 use crate::algo::axpy;
 use crate::algo::native::NativeModel;
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
 use crate::engine::{self, RoundEngine};
-use crate::graph::Graph;
+use crate::graph::{Graph, NetworkSchedule};
 use crate::linalg::Mat;
 use crate::metrics::{round_metrics, RunLog};
 use crate::netsim::{self, LinkModel, PayloadKind};
@@ -45,11 +59,12 @@ struct Snapshot {
 }
 
 
-/// One node's training task (everything thread-local).
+/// One node's training task (everything thread-local; the network schedule
+/// is shared read-only — every node derives identical per-round views).
 struct NodeTask {
     id: usize,
     shard: Shard,
-    wrow: Vec<f32>,
+    net: Arc<NetworkSchedule>,
     use_tracker: bool,
     cfg: ExperimentConfig,
 }
@@ -66,7 +81,7 @@ impl NodeTask {
         let eng = RoundEngine::from_config(&self.cfg);
         let local = eng.plan.local_per_round;
         let m = self.cfg.m;
-        let n = self.wrow.len();
+        let n = self.net.n();
 
         let mut driver = NodeDriver {
             task: self,
@@ -83,6 +98,10 @@ impl NodeTask {
             bx: vec![0.0f32; m * d],
             by: vec![0.0f32; m],
             stacked: vec![0.0f32; n * p],
+            net_key: None,
+            online_now: true,
+            nbrs: Vec::new(),
+            wrow: Vec::new(),
         };
         eng.run(&mut driver)?;
         Ok(driver.theta)
@@ -107,6 +126,31 @@ struct NodeDriver<'a> {
     bx: Vec<f32>,
     by: Vec<f32>,
     stacked: Vec<f32>,
+    /// Cached slice of the current round's network view (own online flag,
+    /// active neighbors, f32 W row), refreshed when the schedule's view key
+    /// changes — built once for static plans, once per epoch for rewire.
+    net_key: Option<u64>,
+    online_now: bool,
+    nbrs: Vec<usize>,
+    wrow: Vec<f32>,
+}
+
+impl NodeDriver<'_> {
+    /// Refresh the cached network view for `round` (no-op while the
+    /// schedule's view key is unchanged — mirrors `SyncDriver::refresh_net`).
+    fn refresh_net(&mut self, round: usize) -> Result<()> {
+        let key = self.task.net.view_key(round);
+        if self.net_key == Some(key) {
+            return Ok(());
+        }
+        let view = self.task.net.view(round)?;
+        let id = self.task.id;
+        self.online_now = view.online[id];
+        self.nbrs = view.active_neighbors(id);
+        self.wrow = view.w.row(id).iter().map(|&x| x as f32).collect();
+        self.net_key = Some(key);
+        Ok(())
+    }
 }
 
 impl engine::Driver for NodeDriver<'_> {
@@ -133,38 +177,48 @@ impl engine::Driver for NodeDriver<'_> {
     fn comm_phase(&mut self, round: usize, lr: f32) -> Result<()> {
         let p = self.p;
         let id = self.task.id;
+        self.refresh_net(round)?;
+        if !self.online_now {
+            // Offline this round (node churn): draw-and-discard the
+            // communication batch so the (seed, row)-keyed sampler stream
+            // stays aligned across drivers and plans (§7), then skip the
+            // exchange — θ (and ϑ, G) stay untouched, mirroring the fused
+            // driver's offline-row restore bit for bit.
+            self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
+            return Ok(());
+        }
 
-        // ---- gossip exchange ----
+        // ---- gossip exchange over this round's active edges ----
         let round_tag = round as u64;
         let payload = Arc::new(self.theta.clone());
-        self.ep.broadcast(round_tag, PayloadKind::Params, &payload)?;
+        self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Params, &payload)?;
         let tracker_payload = if self.task.use_tracker {
             let tp = Arc::new(self.y_tr.clone());
-            self.ep.broadcast(round_tag, PayloadKind::Tracker, &tp)?;
+            self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Tracker, &tp)?;
             Some(tp)
         } else {
             None
         };
 
-        let got = self.ep.gather(round_tag, PayloadKind::Params)?;
+        let got = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Params)?;
         self.stacked.iter_mut().for_each(|v| *v = 0.0);
         self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.theta);
         for (from, pl) in &got {
             self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
         }
-        let mixed = self.compute.combine(&self.task.wrow, &self.stacked)?;
+        let mixed = self.compute.combine(&self.wrow, &self.stacked)?;
 
         // ---- eq. 2 / eq. 3 update ----
         self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
         if self.task.use_tracker {
-            let got_y = self.ep.gather(round_tag, PayloadKind::Tracker)?;
+            let got_y = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Tracker)?;
             self.stacked.iter_mut().for_each(|v| *v = 0.0);
             self.stacked[id * p..(id + 1) * p]
                 .copy_from_slice(tracker_payload.as_ref().unwrap());
             for (from, pl) in &got_y {
                 self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
             }
-            let mixed_y = self.compute.combine(&self.task.wrow, &self.stacked)?;
+            let mixed_y = self.compute.combine(&self.wrow, &self.stacked)?;
             // θ^{r+1} = Σ W θ − α ϑ_i (own tracker)
             let mut theta_next = mixed;
             axpy(&mut theta_next, -lr, &self.y_tr);
@@ -211,14 +265,20 @@ where
     if graph.n() != n {
         bail!("graph has {} nodes, dataset has {n}", graph.n());
     }
-    // every node thread derives the identical schedule from the same config
-    let q = RoundEngine::from_config(cfg).q;
+    // every node thread derives the identical round schedule from the same
+    // config, and the identical per-round network views from the shared
+    // (seed, round)-keyed schedule
+    let eng = RoundEngine::from_config(cfg);
+    let q = eng.q;
+    let net = Arc::new(NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?);
+    // channels are wired over the union of every round's gossip graph
+    let union = net.union_graph(eng.rounds)?;
     let link = LinkModel {
         latency_s: cfg.latency_s,
         bandwidth_bps: cfg.bandwidth_bps,
         drop_prob: cfg.drop_prob,
     };
-    let (endpoints, stats) = netsim::build(graph, link, cfg.seed);
+    let (endpoints, stats) = netsim::build(&union, link, cfg.seed);
     let (snap_tx, snap_rx) = channel::<Snapshot>();
     let started = std::time::Instant::now();
 
@@ -230,7 +290,7 @@ where
                 NodeTask {
                     id: i,
                     shard: ds.shards[i].clone(),
-                    wrow: w.row(i).iter().map(|&x| x as f32).collect(),
+                    net: Arc::clone(&net),
                     use_tracker: cfg.algo.uses_tracker(),
                     cfg: cfg.clone(),
                 },
@@ -373,6 +433,44 @@ mod tests {
             let bf = log_f.rows.last().unwrap().bytes;
             assert_eq!(ba, bf, "{algo:?} actor bytes {ba} vs fused bytes {bf}");
         }
+    }
+
+    #[test]
+    fn actor_dynamic_plans_train_over_real_channels() {
+        for (plan, steps) in [("rewire", 24), ("edge-drop", 24), ("churn", 36)] {
+            let (mut cfg, ds, graph, w) = setup(AlgoKind::FdDsgd, 3, steps);
+            cfg.net_plan = plan.into();
+            cfg.rewire_every = 2;
+            cfg.edge_drop = 0.3;
+            cfg.churn = 0.3;
+            let eval = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+            let factory = native_factory(&cfg);
+            let log = train(&cfg, &factory, &eval, &ds, &graph, &w).unwrap();
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last < first, "{plan}: loss {first} -> {last}");
+            assert!(log.rows.last().unwrap().bytes > 0, "{plan}");
+        }
+    }
+
+    #[test]
+    fn actor_churn_sends_fewer_bytes_than_static() {
+        let (mut cfg, ds, graph, w) = setup(AlgoKind::FdDsgd, 3, 36);
+        cfg.net_plan = "churn".into();
+        cfg.churn = 0.3;
+        let eval = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+        let factory = native_factory(&cfg);
+        let churn_log = train(&cfg, &factory, &eval, &ds, &graph, &w).unwrap();
+        let (cfg2, ds2, graph2, w2) = setup(AlgoKind::FdDsgd, 3, 36);
+        let factory2 = native_factory(&cfg2);
+        let static_log = train(&cfg2, &factory2, &eval, &ds2, &graph2, &w2).unwrap();
+        // offline rounds silence their node's links
+        assert!(
+            churn_log.rows.last().unwrap().bytes < static_log.rows.last().unwrap().bytes,
+            "churn {} vs static {}",
+            churn_log.rows.last().unwrap().bytes,
+            static_log.rows.last().unwrap().bytes
+        );
     }
 
     #[test]

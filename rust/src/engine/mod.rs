@@ -10,7 +10,9 @@
 //! - [`CommStrategy`] (strategy.rs) — *what* the communication update does:
 //!   Dsgd / Dsgt / FedAvg / Centralized.  Strategies operate on the shared
 //!   [`EngineState`] (θ stack, per-node samplers, batch scratch) through the
-//!   [`Compute`] backend, so they are backend-agnostic.
+//!   [`Compute`] backend, so they are backend-agnostic, and receive each
+//!   round's network as a [`RoundNet`] view — the network is a scheduled
+//!   per-round quantity (`graph::schedule`), never captured state.
 //! - [`Driver`] — *where* the phases execute: [`SyncDriver`] runs whole-
 //!   network phases in-process with analytic communication accounting (the
 //!   fused path and both baselines); the actor driver implements [`Driver`]
@@ -18,18 +20,20 @@
 //!
 //! [`RoundEngine::run`] is the only round loop in the crate.  It is
 //! deliberately tiny: schedule + cadence, nothing else, so a new scenario
-//! (dynamic topology, stragglers, checkpointing) is a new `CommStrategy`
-//! or a `Driver` hook — never a fifth copy of the loop.
+//! (stragglers, checkpointing) is a new `CommStrategy`, a `Driver` hook, or
+//! a `NetPlan` — never a fifth copy of the loop.
 //!
 //! Determinism contract: batch order per node-sampler stream, float-op order
-//! per node, and eval cadence are identical across drivers and thread
-//! counts, so trajectories are bitwise-reproducible (pinned by the
-//! `driver_equivalence` integration test).
+//! per node, eval cadence, and the `(seed, round)`-keyed network views are
+//! identical across drivers and thread counts, so trajectories are
+//! bitwise-reproducible (pinned by the `driver_equivalence` integration
+//! test, for static and dynamic network plans alike).
 
 pub mod strategy;
 
 pub use strategy::{
     CentralizedStrategy, CommCost, CommStrategy, DsgdStrategy, DsgtStrategy, FedAvgStrategy,
+    RoundNet,
 };
 
 use crate::algo::native::NativeModel;
@@ -38,7 +42,7 @@ use crate::config::{AlgoKind, ExperimentConfig};
 use crate::coordinator::compute::Compute;
 use crate::coordinator::sampler::{init_theta, init_thetas, NodeSampler};
 use crate::data::{FederatedDataset, Shard};
-use crate::graph::Graph;
+use crate::graph::{Graph, NetworkSchedule};
 use crate::linalg::Mat;
 use crate::metrics::{round_metrics, RunLog};
 use crate::netsim::{analytic::Accountant, LinkModel};
@@ -120,7 +124,8 @@ pub struct EngineState<'a> {
     /// Stacked parameters `[n, p]`.
     pub theta: Vec<f32>,
     /// Per-row batch samplers — streams keyed by (seed, row) only, so every
-    /// driver draws identical batches (the determinism contract).
+    /// driver — and every network plan — draws identical batches (the
+    /// determinism contract).
     pub samplers: Vec<NodeSampler>,
     /// Data shard per row (borrowed federated shards, or the owned pooled
     /// cohort for the centralized baseline).
@@ -191,20 +196,30 @@ impl<'a> EngineState<'a> {
 /// Whole-network in-process driver: each phase is (at most) one `Compute`
 /// call covering all nodes, with communication charged analytically.  This
 /// is the throughput path (`--mode fused`) and the substrate for both
-/// baselines.
+/// baselines.  Gossip strategies see the network through a per-round
+/// [`NetworkSchedule`] view, cached across rounds with an unchanged key.
 pub struct SyncDriver<'a> {
     compute: &'a dyn Compute,
     strategy: Box<dyn CommStrategy + 'a>,
     st: EngineState<'a>,
     acct: Option<Accountant>,
     compute_s_per_step: f64,
+    /// Per-round network schedule (gossip strategies only).
+    net: Option<NetworkSchedule>,
+    /// Cached view of the current round: f32 W, online mask, active edges.
+    wf: Vec<f32>,
+    online: Vec<bool>,
+    round_edges: u64,
+    wf_key: Option<u64>,
     log: RunLog,
     started: std::time::Instant,
 }
 
 impl<'a> SyncDriver<'a> {
     /// Gossip trainer (DSGD / DSGT and their federated variants) over an
-    /// explicit graph + mixing matrix.
+    /// explicit base graph + mixing matrix; `cfg.net_plan` decides how the
+    /// network evolves per round (static keeps `(graph, w)` frozen and is
+    /// bitwise-identical to the pre-schedule behavior).
     pub fn decentralized(
         cfg: &'a ExperimentConfig,
         compute: &'a dyn Compute,
@@ -234,10 +249,10 @@ impl<'a> SyncDriver<'a> {
                 cfg.drop_prob
             );
         }
-        let wf: Vec<f32> = crate::mixing::to_f32(w);
+        let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
         let strategy: Box<dyn CommStrategy> = match cfg.algo {
-            AlgoKind::Dsgd | AlgoKind::FdDsgd => Box::new(DsgdStrategy::new(wf)),
-            AlgoKind::Dsgt | AlgoKind::FdDsgt => Box::new(DsgtStrategy::new(wf)),
+            AlgoKind::Dsgd | AlgoKind::FdDsgd => Box::new(DsgdStrategy::new()),
+            AlgoKind::Dsgt | AlgoKind::FdDsgt => Box::new(DsgtStrategy::new()),
             other => bail!("{other:?} is not a decentralized gossip algorithm"),
         };
         let model = NativeModel::new(d, h);
@@ -247,7 +262,7 @@ impl<'a> SyncDriver<'a> {
             bandwidth_bps: cfg.bandwidth_bps,
             drop_prob: 0.0, // enforced lossless above
         };
-        let acct = Accountant::new(graph, link);
+        let acct = Accountant::new(link);
         Ok(Self::build(
             cfg,
             compute,
@@ -255,6 +270,7 @@ impl<'a> SyncDriver<'a> {
             theta,
             strategy,
             Some(acct),
+            Some(net),
             cfg.algo.name(),
         ))
     }
@@ -278,6 +294,14 @@ impl<'a> SyncDriver<'a> {
                 cfg.drop_prob
             );
         }
+        if cfg.net_plan != "static" {
+            bail!(
+                "net plan `{}` requested, but the FedAvg baseline runs a fixed star \
+                 network and would silently ignore it; dynamic plans apply to gossip \
+                 algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.net_plan
+            );
+        }
         let n = ds.n_hospitals();
         let model = NativeModel::new(d, h);
         // server init = node-0 init (a shared broadcast start, as FedAvg assumes)
@@ -286,17 +310,23 @@ impl<'a> SyncDriver<'a> {
         for _ in 0..n {
             theta.extend_from_slice(&server);
         }
+        // The star family never reads its rng (deterministic hub-and-spoke),
+        // but construction stays seed-threaded for uniformity with every
+        // other Graph::build in the crate; the assert pins the
+        // one-link-per-client shape that `star_round`'s 2n-message charge
+        // assumes.
         let star = Graph::build(
             &crate::graph::Topology::Star,
             n + 1,
-            &mut crate::rng::Pcg64::seed(0),
+            &mut crate::rng::Pcg64::new(cfg.seed, 0x57A2),
         )?;
+        debug_assert_eq!(star.edge_count(), n, "star network has one link per client");
         let link = LinkModel {
             latency_s: cfg.latency_s,
             bandwidth_bps: cfg.bandwidth_bps,
             drop_prob: 0.0,
         };
-        let acct = Accountant::new(&star, link);
+        let acct = Accountant::new(link);
         Ok(Self::build(
             cfg,
             compute,
@@ -304,6 +334,7 @@ impl<'a> SyncDriver<'a> {
             theta,
             Box::new(FedAvgStrategy::new()),
             Some(acct),
+            None,
             "fedavg",
         ))
     }
@@ -319,6 +350,14 @@ impl<'a> SyncDriver<'a> {
         if d != ds.d {
             bail!("backend d={d} vs dataset d={}", ds.d);
         }
+        if cfg.net_plan != "static" {
+            bail!(
+                "net plan `{}` requested, but the centralized baseline has no network \
+                 at all and would silently ignore it; dynamic plans apply to gossip \
+                 algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.net_plan
+            );
+        }
         let model = NativeModel::new(d, h);
         let theta = init_theta(cfg.seed, 0, &model);
         Ok(Self::build(
@@ -328,10 +367,12 @@ impl<'a> SyncDriver<'a> {
             theta,
             Box::new(CentralizedStrategy::new(model)),
             None,
+            None,
             "centralized",
         ))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn build(
         cfg: &ExperimentConfig,
         compute: &'a dyn Compute,
@@ -339,18 +380,43 @@ impl<'a> SyncDriver<'a> {
         theta: Vec<f32>,
         strategy: Box<dyn CommStrategy + 'a>,
         acct: Option<Accountant>,
+        net: Option<NetworkSchedule>,
         name: &str,
     ) -> Self {
         let st = EngineState::new(cfg, compute, shards, theta);
+        let n = st.n;
         SyncDriver {
             compute,
             strategy,
             st,
             acct,
             compute_s_per_step: cfg.compute_s_per_step,
+            net,
+            wf: Vec::new(),
+            online: vec![true; n],
+            round_edges: 0,
+            wf_key: None,
             log: RunLog::new(name),
             started: std::time::Instant::now(),
         }
+    }
+
+    /// Refresh the cached network view for `round` (no-op while the
+    /// schedule's view key is unchanged — every round for static plans).
+    fn refresh_net(&mut self, round: usize) -> Result<()> {
+        let Some(net) = &self.net else {
+            return Ok(());
+        };
+        let key = net.view_key(round);
+        if self.wf_key == Some(key) {
+            return Ok(());
+        }
+        let view = net.view(round)?;
+        self.wf = view.wf();
+        self.round_edges = view.active_directed_edges();
+        self.online = view.online.into_owned();
+        self.wf_key = Some(key);
+        Ok(())
     }
 
     fn net_snapshot(&self) -> crate::netsim::NetSnapshot {
@@ -394,13 +460,19 @@ impl Driver for SyncDriver<'_> {
         Ok(())
     }
 
-    fn comm_phase(&mut self, _round: usize, lr: f32) -> Result<()> {
-        self.strategy.comm_update(&mut self.st, self.compute, lr)?;
+    fn comm_phase(&mut self, round: usize, lr: f32) -> Result<()> {
+        self.refresh_net(round)?;
+        self.strategy.comm_update(
+            &mut self.st,
+            self.compute,
+            &RoundNet { w: &self.wf, online: &self.online },
+            lr,
+        )?;
         if let Some(acct) = self.acct.as_mut() {
             match self.strategy.cost() {
                 CommCost::Gossip { kinds } => {
                     acct.local_compute(1, self.compute_s_per_step);
-                    acct.comm_round(self.st.p, kinds);
+                    acct.comm_round(self.round_edges, self.st.p, kinds);
                 }
                 CommCost::Star => {
                     acct.local_compute(1, self.compute_s_per_step);
@@ -531,6 +603,52 @@ mod tests {
         cfg.drop_prob = 0.1;
         let err = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap_err();
         assert!(err.to_string().contains("actors"), "{err}");
+    }
+
+    #[test]
+    fn baselines_reject_net_plans_loudly() {
+        let (mut cfg, compute, ds, ..) = setup(AlgoKind::FedAvg);
+        cfg.net_plan = "churn".into();
+        let err = train_fedavg(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("star"), "{err}");
+        cfg.algo = AlgoKind::Centralized;
+        let err = train_centralized(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("no network"), "{err}");
+    }
+
+    #[test]
+    fn dynamic_plans_train_end_to_end() {
+        for plan in ["rewire", "edge-drop", "churn"] {
+            let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt);
+            cfg.net_plan = plan.into();
+            cfg.rewire_every = 2;
+            cfg.edge_drop = 0.3;
+            cfg.churn = 0.3;
+            cfg.total_steps = 60;
+            let (log, theta) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last.is_finite(), "{plan}");
+            assert!(last < first, "{plan}: loss {first} -> {last}");
+            assert!(theta.iter().all(|v| v.is_finite()), "{plan}");
+            assert!(log.rows.last().unwrap().bytes > 0, "{plan}");
+        }
+    }
+
+    #[test]
+    fn churn_rounds_charge_fewer_bytes_than_static() {
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd);
+        let (stat, _) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let mut churn_cfg = cfg.clone();
+        churn_cfg.net_plan = "churn".into();
+        churn_cfg.churn = 0.4;
+        let (churn, _) = train_decentralized(&churn_cfg, &compute, &ds, &graph, &w).unwrap();
+        assert!(
+            churn.rows.last().unwrap().bytes < stat.rows.last().unwrap().bytes,
+            "churn {} vs static {}",
+            churn.rows.last().unwrap().bytes,
+            stat.rows.last().unwrap().bytes
+        );
     }
 
     #[test]

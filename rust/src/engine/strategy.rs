@@ -4,10 +4,14 @@
 //! A strategy owns the algorithm-specific auxiliary state (the DSGT tracker,
 //! nothing for the others) and performs the whole-network communication
 //! update on the shared [`EngineState`] through the [`Compute`] backend.
-//! What it does NOT own: the round loop, the lr schedule, batch sampling
-//! streams, or metrics — those are engine machinery, identical for every
-//! algorithm.  Adding an algorithm = implementing this trait; the loop,
-//! both drivers, the CLI, and the benches pick it up unchanged.
+//! The network is NOT captured at construction: every round the driver hands
+//! the strategy a [`RoundNet`] — that round's mixing matrix and online mask
+//! from the `graph::schedule` layer — so time-varying topologies (rewire,
+//! edge dropout, node churn) flow through without the strategy changing.
+//! What a strategy does NOT own: the round loop, the lr schedule, batch
+//! sampling streams, or metrics — those are engine machinery, identical for
+//! every algorithm.  Adding an algorithm = implementing this trait; the
+//! loop, both drivers, the CLI, and the benches pick it up unchanged.
 
 use super::EngineState;
 use crate::algo::axpy;
@@ -19,13 +23,40 @@ use anyhow::Result;
 /// accountant of the sync driver; the actor driver measures instead).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommCost {
-    /// Synchronous gossip over every graph edge, `kinds` payloads per edge
-    /// (1 = θ only, 2 = θ and the DSGT tracker ϑ).
+    /// Synchronous gossip over every *active* edge of the round's network
+    /// view, `kinds` payloads per edge (1 = θ only, 2 = θ and the DSGT
+    /// tracker ϑ).  The per-round edge count comes from the schedule.
     Gossip { kinds: u32 },
     /// Star-network client↑/server↓ exchange (FedAvg).
     Star,
     /// No communication (fusion-center baseline).
     None,
+}
+
+/// The network of ONE communication round, as the schedule emitted it.
+pub struct RoundNet<'a> {
+    /// Row-major f32 mixing matrix `[n, n]` for this round (doubly
+    /// stochastic; offline rows are identity under churn).
+    pub w: &'a [f32],
+    /// Per-node participation mask (all `true` except under node churn).
+    pub online: &'a [bool],
+}
+
+impl RoundNet<'_> {
+    pub fn all_online(&self) -> bool {
+        self.online.iter().all(|&b| b)
+    }
+}
+
+/// Overwrite the stack rows of offline nodes with their previous values —
+/// an offline node skips the communication update entirely (exactly what
+/// its actor-driver counterpart does by not gossiping that round).
+fn restore_offline_rows(next: &mut [f32], prev: &[f32], online: &[bool], p: usize) {
+    for (i, &on) in online.iter().enumerate() {
+        if !on {
+            next[i * p..(i + 1) * p].copy_from_slice(&prev[i * p..(i + 1) * p]);
+        }
+    }
 }
 
 /// The communication update of Algorithm 1 — eq. 2, eq. 3, a server
@@ -41,9 +72,15 @@ pub trait CommStrategy {
         Ok(())
     }
 
-    /// Apply the communication update at learning rate `lr`, consuming one
-    /// gradient per stack row.
-    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()>;
+    /// Apply the communication update at learning rate `lr` over this
+    /// round's network view, consuming one gradient per stack row.
+    fn comm_update(
+        &mut self,
+        st: &mut EngineState,
+        compute: &dyn Compute,
+        net: &RoundNet,
+        lr: f32,
+    ) -> Result<()>;
 
     /// Full-shard metrics → (loss, accuracy, stationarity, consensus).
     /// Default: whole-stack eval over the training shards.
@@ -55,15 +92,14 @@ pub trait CommStrategy {
 // --------------------------------------------------------------- DSGD ----
 
 /// Eq. 2: `θ_i ← Σ_j w_ij θ_j − α ∇g_i(θ_i)` (covers DSGD and FD-DSGD —
-/// the local period lives in the engine, not here).
-pub struct DsgdStrategy {
-    /// Row-major mixing matrix `[n, n]` satisfying Assumption 1.
-    w: Vec<f32>,
-}
+/// the local period lives in the engine, not here; the round's `W` arrives
+/// through [`RoundNet`]).
+pub struct DsgdStrategy;
 
 impl DsgdStrategy {
-    pub fn new(w: Vec<f32>) -> Self {
-        DsgdStrategy { w }
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        DsgdStrategy
     }
 }
 
@@ -72,9 +108,21 @@ impl CommStrategy for DsgdStrategy {
         CommCost::Gossip { kinds: 1 }
     }
 
-    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+    fn comm_update(
+        &mut self,
+        st: &mut EngineState,
+        compute: &dyn Compute,
+        net: &RoundNet,
+        lr: f32,
+    ) -> Result<()> {
+        // Every row draws its batch every round — the sampler streams stay
+        // keyed by (seed, row) alone (§7), independent of the network plan;
+        // offline rows discard theirs below.
         st.draw_comm_batches();
-        let (t_next, _losses) = compute.dsgd_round(&self.w, &st.theta, &st.cx, &st.cy, lr)?;
+        let (mut t_next, _losses) = compute.dsgd_round(net.w, &st.theta, &st.cx, &st.cy, lr)?;
+        if !net.all_online() {
+            restore_offline_rows(&mut t_next, &st.theta, net.online, st.p);
+        }
         st.theta = t_next;
         Ok(())
     }
@@ -84,8 +132,8 @@ impl CommStrategy for DsgdStrategy {
 
 /// Eq. 3 with gradient tracking: mixes θ and the tracker ϑ, then refreshes
 /// the tracker with the gradient difference (covers DSGT and FD-DSGT).
+/// Offline rounds leave a node's θ, ϑ, and G untouched.
 pub struct DsgtStrategy {
-    w: Vec<f32>,
     /// Tracker stack Y `[n, p]`.
     y: Vec<f32>,
     /// Previous-gradient stack G `[n, p]`.
@@ -93,8 +141,9 @@ pub struct DsgtStrategy {
 }
 
 impl DsgtStrategy {
-    pub fn new(w: Vec<f32>) -> Self {
-        DsgtStrategy { w, y: Vec::new(), g: Vec::new() }
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        DsgtStrategy { y: Vec::new(), g: Vec::new() }
     }
 }
 
@@ -117,10 +166,21 @@ impl CommStrategy for DsgtStrategy {
         Ok(())
     }
 
-    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+    fn comm_update(
+        &mut self,
+        st: &mut EngineState,
+        compute: &dyn Compute,
+        net: &RoundNet,
+        lr: f32,
+    ) -> Result<()> {
         st.draw_comm_batches();
-        let (t_next, y_next, g_next, _losses) =
-            compute.dsgt_round(&self.w, &st.theta, &self.y, &self.g, &st.cx, &st.cy, lr)?;
+        let (mut t_next, mut y_next, mut g_next, _losses) =
+            compute.dsgt_round(net.w, &st.theta, &self.y, &self.g, &st.cx, &st.cy, lr)?;
+        if !net.all_online() {
+            restore_offline_rows(&mut t_next, &st.theta, net.online, st.p);
+            restore_offline_rows(&mut y_next, &self.y, net.online, st.p);
+            restore_offline_rows(&mut g_next, &self.g, net.online, st.p);
+        }
         st.theta = t_next;
         self.y = y_next;
         self.g = g_next;
@@ -148,7 +208,13 @@ impl CommStrategy for FedAvgStrategy {
         CommCost::Star
     }
 
-    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+    fn comm_update(
+        &mut self,
+        st: &mut EngineState,
+        compute: &dyn Compute,
+        _net: &RoundNet,
+        lr: f32,
+    ) -> Result<()> {
         let (n, p) = (st.n, st.p);
         let mut mean = vec![0.0f64; p];
         for i in 0..n {
@@ -200,7 +266,13 @@ impl CommStrategy for CentralizedStrategy {
         CommCost::None
     }
 
-    fn comm_update(&mut self, st: &mut EngineState, compute: &dyn Compute, lr: f32) -> Result<()> {
+    fn comm_update(
+        &mut self,
+        st: &mut EngineState,
+        compute: &dyn Compute,
+        _net: &RoundNet,
+        lr: f32,
+    ) -> Result<()> {
         st.draw_comm_batches();
         let (bx, by) = st.comm_batch(0);
         let (_, grad) = compute.grad_step(&st.theta, bx, by)?;
@@ -219,9 +291,17 @@ mod tests {
 
     #[test]
     fn costs_match_payload_kinds() {
-        assert_eq!(DsgdStrategy::new(vec![1.0]).cost(), CommCost::Gossip { kinds: 1 });
-        assert_eq!(DsgtStrategy::new(vec![1.0]).cost(), CommCost::Gossip { kinds: 2 });
+        assert_eq!(DsgdStrategy::new().cost(), CommCost::Gossip { kinds: 1 });
+        assert_eq!(DsgtStrategy::new().cost(), CommCost::Gossip { kinds: 2 });
         assert_eq!(FedAvgStrategy::new().cost(), CommCost::Star);
         assert_eq!(CentralizedStrategy::new(NativeModel::new(4, 2)).cost(), CommCost::None);
+    }
+
+    #[test]
+    fn restore_offline_rows_is_row_exact() {
+        let prev = vec![1.0f32, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let mut next = vec![9.0f32, 9.0, 8.0, 8.0, 7.0, 7.0];
+        restore_offline_rows(&mut next, &prev, &[true, false, true], 2);
+        assert_eq!(next, vec![9.0, 9.0, 2.0, 2.0, 7.0, 7.0]);
     }
 }

@@ -1,0 +1,198 @@
+//! EXP-N1: time-varying networks — the dynamic `NetPlan`s against the
+//! static baseline on ONE assembled base network and cohort.
+//!
+//! Every run shares the same dataset, base graph, mixing matrix, seed, and
+//! round schedule; only `net.plan` varies, so the table isolates what the
+//! network dynamics cost (or save): final loss / consensus, bytes on the
+//! wire, and simulated wall time.  Byte accounting is exact on lossless
+//! links in both execution modes — the analytic accountant charges each
+//! round's *active* edges, matching the channel netsim message for message
+//! (pinned by `tests/driver_equivalence.rs`).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{assemble, run_on, Assembled};
+use crate::graph::Topology;
+use crate::jsonl::{self, Json};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct ChurnRow {
+    pub plan: String,
+    pub final_loss: f64,
+    pub final_consensus: f64,
+    pub comm_rounds: u64,
+    pub bytes: u64,
+    pub sim_time_s: f64,
+}
+
+fn run_one(cfg: &ExperimentConfig, asm: &Assembled, label: &str) -> Result<ChurnRow> {
+    cfg.validate()?;
+    let log = run_on(cfg, asm)?;
+    let last = log.rows.last().expect("run produced no metric rows");
+    Ok(ChurnRow {
+        plan: label.to_string(),
+        final_loss: last.loss,
+        final_consensus: last.consensus,
+        comm_rounds: last.comm_rounds,
+        bytes: last.bytes,
+        sim_time_s: last.sim_time_s,
+    })
+}
+
+/// Sweep the dynamic plans against the static baseline.  `drops` and
+/// `churns` are the edge-drop / node-offline probabilities to try; the
+/// rewire cadence comes from `cfg.rewire_every`.
+pub fn run(cfg: &ExperimentConfig, drops: &[f64], churns: &[f64]) -> Result<Vec<ChurnRow>> {
+    let mut stat = cfg.clone();
+    stat.net_plan = "static".into();
+    stat.validate()?;
+    let asm = assemble(&stat)?;
+
+    let mut rows = vec![run_one(&stat, &asm, "static")?];
+    if Topology::parse(&stat.topology)?.is_randomized() {
+        let mut rw = stat.clone();
+        rw.net_plan = "rewire".into();
+        rows.push(run_one(&rw, &asm, &format!("rewire@{}", rw.rewire_every))?);
+    } else {
+        // rewiring a deterministic family rebuilds the identical graph every
+        // epoch — that row would just duplicate `static`, so say so loudly
+        eprintln!(
+            "note: skipping the rewire row — topology `{}` is deterministic, every \
+             epoch would rebuild the identical graph (use er|rgg|smallworld|knn)",
+            stat.topology
+        );
+    }
+    for &p in drops {
+        let mut c = stat.clone();
+        c.net_plan = "edge-drop".into();
+        c.edge_drop = p;
+        rows.push(run_one(&c, &asm, &format!("edge-drop {p:.2}"))?);
+    }
+    for &p in churns {
+        let mut c = stat.clone();
+        c.net_plan = "churn".into();
+        c.churn = p;
+        rows.push(run_one(&c, &asm, &format!("churn {p:.2}"))?);
+    }
+    Ok(rows)
+}
+
+pub fn print_table(rows: &[ChurnRow]) {
+    println!("EXP-N1 — time-varying networks vs the static baseline (shared base graph)");
+    println!(
+        "{:<16} {:>12} {:>16} {:>12} {:>12} {:>12}",
+        "plan", "final_loss", "final_consensus", "comm_rounds", "MBytes", "sim_time_s"
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:>12.4} {:>16.4e} {:>12} {:>12.2} {:>12.2}",
+            r.plan,
+            r.final_loss,
+            r.final_consensus,
+            r.comm_rounds,
+            r.bytes as f64 / 1e6,
+            r.sim_time_s
+        );
+    }
+}
+
+/// Human-readable observations relative to the static row.
+pub fn findings(rows: &[ChurnRow]) -> Vec<String> {
+    let mut out = Vec::new();
+    let Some(stat) = rows.iter().find(|r| r.plan == "static") else {
+        return out;
+    };
+    for r in rows.iter().filter(|r| r.plan != "static") {
+        let loss_pct = if stat.final_loss.abs() > 1e-12 {
+            100.0 * (r.final_loss - stat.final_loss) / stat.final_loss
+        } else {
+            0.0
+        };
+        let bytes_pct = if stat.bytes > 0 {
+            100.0 * (r.bytes as f64 - stat.bytes as f64) / stat.bytes as f64
+        } else {
+            0.0
+        };
+        out.push(format!(
+            "{}: final loss {:+.1}% vs static, wire bytes {:+.1}%",
+            r.plan, loss_pct, bytes_pct
+        ));
+    }
+    out
+}
+
+pub fn rows_json(rows: &[ChurnRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                jsonl::obj(vec![
+                    ("plan", jsonl::s(&r.plan)),
+                    ("final_loss", jsonl::num(r.final_loss)),
+                    ("final_consensus", jsonl::num(r.final_consensus)),
+                    ("comm_rounds", jsonl::num(r.comm_rounds as f64)),
+                    ("bytes", jsonl::num(r.bytes as f64)),
+                    ("sim_time_s", jsonl::num(r.sim_time_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Backend, Mode};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.mode = Mode::Fused;
+        cfg.algo = AlgoKind::FdDsgt;
+        cfg.n = 5;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 4;
+        cfg.total_steps = 32;
+        cfg.eval_every = 2;
+        cfg.records_per_hospital = 60;
+        cfg.rewire_every = 2; // topology stays the default randomized knn
+        cfg
+    }
+
+    #[test]
+    fn sweep_covers_all_plans_and_static_baseline() {
+        let rows = run(&tiny_cfg(), &[0.3], &[0.3]).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].plan, "static");
+        assert!(rows.iter().any(|r| r.plan.starts_with("rewire@")));
+        assert!(rows.iter().any(|r| r.plan.starts_with("edge-drop")));
+        assert!(rows.iter().any(|r| r.plan.starts_with("churn")));
+        for r in &rows {
+            assert!(r.final_loss.is_finite(), "{}", r.plan);
+            assert!(r.bytes > 0, "{}", r.plan);
+            assert_eq!(r.comm_rounds, 8, "{}", r.plan);
+        }
+        // findings compare every dynamic plan to static
+        assert_eq!(findings(&rows).len(), 3);
+    }
+
+    #[test]
+    fn rewire_row_skipped_for_deterministic_family() {
+        let mut cfg = tiny_cfg();
+        cfg.topology = "ring".into();
+        let rows = run(&cfg, &[], &[]).unwrap();
+        assert_eq!(rows.len(), 1, "only the static row");
+        assert_eq!(rows[0].plan, "static");
+    }
+
+    #[test]
+    fn dynamic_rounds_never_cost_more_bytes_than_static() {
+        let rows = run(&tiny_cfg(), &[0.4], &[0.3]).unwrap();
+        let stat = rows[0].bytes;
+        for r in &rows[1..] {
+            if r.plan.starts_with("edge-drop") || r.plan.starts_with("churn") {
+                assert!(r.bytes <= stat, "{}: {} > static {stat}", r.plan, r.bytes);
+            }
+        }
+    }
+}

@@ -2,6 +2,7 @@
 //! Filled by the fig1/fig2/speedup/sweep modules; each produces both a
 //! human-readable table on stdout and a JSON dump for re-plotting.
 
+pub mod churn;
 pub mod fig1;
 pub mod fig2;
 pub mod speedup;

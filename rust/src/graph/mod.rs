@@ -4,10 +4,14 @@
 //! (Fig. 1 left).  This module provides the topology generators used across
 //! the experiments (the paper's RGG-looking network plus the standard
 //! ablation families), connectivity validation (Assumption 1 requires a
-//! connected graph), spectral statistics, and a force-directed layout +
-//! DOT export for regenerating Fig. 1L.
+//! connected graph), spectral statistics, a force-directed layout +
+//! DOT export for regenerating Fig. 1L, and the time-varying network
+//! schedule (`schedule`) that yields a per-round `(graph, W)` view.
 
 pub mod layout;
+pub mod schedule;
+
+pub use schedule::{NetPlan, NetView, NetworkSchedule};
 
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
@@ -50,6 +54,20 @@ pub enum Topology {
 }
 
 impl Topology {
+    /// Does this family consume randomness when built?  Deterministic
+    /// families (ring, path, torus, complete, star) rebuild the identical
+    /// graph from any rng, so per-epoch resampling cannot change them —
+    /// the rewire net plan rejects them loudly.
+    pub fn is_randomized(&self) -> bool {
+        matches!(
+            self,
+            Topology::ErdosRenyi { .. }
+                | Topology::RandomGeometric { .. }
+                | Topology::SmallWorld { .. }
+                | Topology::KNearest { .. }
+        )
+    }
+
     pub fn parse(name: &str) -> Result<Topology> {
         Ok(match name {
             "ring" => Topology::Ring,

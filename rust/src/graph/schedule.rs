@@ -1,0 +1,636 @@
+//! Time-varying hospital networks: the per-round `(graph, W)` schedule.
+//!
+//! The paper freezes the network after a single Assumption-1 check, but real
+//! hospital WANs churn — links flap, sites go offline, overlays get rebuilt.
+//! This module turns the network from a constructor argument into a
+//! first-class scheduled resource: a [`NetworkSchedule`] yields a
+//! deterministic [`NetView`] (gossip graph, mixing matrix, online mask) for
+//! every communication round, derived purely from `(seed, round)` so every
+//! driver — and every node thread of the actor driver — reconstructs the
+//! identical view independently (the §7 determinism contract).
+//!
+//! Plans:
+//!
+//! - [`NetPlan::Static`] — today's behavior: every round sees the base
+//!   `(graph, W)` (borrowed, zero-copy), bitwise-identical to the
+//!   pre-schedule single-graph loop.
+//! - [`NetPlan::Rewire`] — resample the topology family every `every`
+//!   rounds (epoch 0 keeps the base graph, so short runs match `Static`);
+//!   `W` is rebuilt with the configured mixing scheme.
+//! - [`NetPlan::EdgeDropout`] — every round each base edge drops with
+//!   probability `p`; dropped weights are absorbed into both endpoints'
+//!   self-weights, which keeps `W` symmetric and doubly stochastic.
+//! - [`NetPlan::NodeChurn`] — every round each node goes offline with
+//!   probability `p_offline`; offline nodes skip the communication update
+//!   (their `W` row collapses to identity) and neighbors renormalize by
+//!   absorbing the lost weight into their self-weight.
+//!
+//! Per-round Assumption 1: random masks are redrawn (bounded, deterministic
+//! retry) until the round's *active* subnetwork — kept edges among online
+//! nodes — is connected, so [`NetView::validation`] holds for every emitted
+//! view; if no admissible mask is found the round falls back to the fully
+//! static view, never to a broken one.
+
+use crate::config::ExperimentConfig;
+use crate::graph::{Graph, Topology};
+use crate::linalg::Mat;
+use crate::mixing::{self, Scheme, Validation};
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::borrow::Cow;
+
+/// RNG stream tags (disjoint from the graph/sampler/init/netsim streams).
+const STREAM_REWIRE: u64 = 0x52E1_17E0;
+const STREAM_DROP: u64 = 0xD809_A7E0;
+const STREAM_CHURN: u64 = 0xC407_12E0;
+/// Bounded deterministic resampling for the connectivity requirement.
+const MAX_TRIES: usize = 64;
+
+/// How the network evolves across communication rounds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetPlan {
+    /// Frozen network — every round sees the base `(graph, W)`.
+    Static,
+    /// Resample the topology `family` every `every` rounds (epoch 0 = base).
+    Rewire { every: usize, family: Topology },
+    /// Drop each base edge independently with probability `p` per round.
+    EdgeDropout { p: f64 },
+    /// Take each node offline with probability `p_offline` per round.
+    NodeChurn { p_offline: f64 },
+}
+
+impl NetPlan {
+    /// Short display label (experiment tables, logs).
+    pub fn label(&self) -> String {
+        match self {
+            NetPlan::Static => "static".into(),
+            NetPlan::Rewire { every, .. } => format!("rewire@{every}"),
+            NetPlan::EdgeDropout { p } => format!("edge-drop {p:.2}"),
+            NetPlan::NodeChurn { p_offline } => format!("churn {p_offline:.2}"),
+        }
+    }
+}
+
+/// Parse the network-plan section of a config (shared by
+/// `ExperimentConfig::validate` and [`NetworkSchedule::from_config`]).
+pub fn plan_from_config(cfg: &ExperimentConfig) -> Result<NetPlan> {
+    match cfg.net_plan.as_str() {
+        "static" => Ok(NetPlan::Static),
+        "rewire" => {
+            if cfg.rewire_every == 0 {
+                bail!("rewire_every must be >= 1");
+            }
+            let family = Topology::parse(&cfg.topology)?;
+            if !family.is_randomized() {
+                bail!(
+                    "net plan `rewire` resamples the topology family every epoch, but \
+                     `{}` is deterministic — every epoch would rebuild the identical \
+                     graph, silently behaving like `static`; pick a randomized family \
+                     (er|rgg|smallworld|knn) or use `edge-drop`/`churn`",
+                    cfg.topology
+                );
+            }
+            Ok(NetPlan::Rewire { every: cfg.rewire_every, family })
+        }
+        "edge-drop" | "edgedrop" => {
+            if !(0.0..1.0).contains(&cfg.edge_drop) {
+                bail!("edge_drop must be in [0, 1), got {}", cfg.edge_drop);
+            }
+            Ok(NetPlan::EdgeDropout { p: cfg.edge_drop })
+        }
+        "churn" => {
+            if !(0.0..1.0).contains(&cfg.churn) {
+                bail!("churn must be in [0, 1), got {}", cfg.churn);
+            }
+            Ok(NetPlan::NodeChurn { p_offline: cfg.churn })
+        }
+        other => bail!("unknown net plan `{other}` (static|rewire|edge-drop|churn)"),
+    }
+}
+
+/// One round's network: the gossip graph, its mixing matrix, and which nodes
+/// participate.  Borrows the schedule's base for static rounds (zero-copy);
+/// owns resampled structures otherwise.
+pub struct NetView<'a> {
+    /// The gossip graph of this round.  Under [`NetPlan::EdgeDropout`] this
+    /// is the kept subgraph; under [`NetPlan::NodeChurn`] it stays the base
+    /// graph and `online` masks participation.
+    pub graph: Cow<'a, Graph>,
+    /// Mixing matrix over all n nodes, symmetric and doubly stochastic
+    /// (offline rows collapse to identity under churn).
+    pub w: Cow<'a, Mat>,
+    /// Per-node participation mask (all `true` except under churn).
+    pub online: Cow<'a, [bool]>,
+}
+
+impl NetView<'_> {
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    pub fn all_online(&self) -> bool {
+        self.online.iter().all(|&b| b)
+    }
+
+    /// Row-major f32 copy of `W` (what the compute kernels consume).
+    pub fn wf(&self) -> Vec<f32> {
+        mixing::to_f32(self.w.as_ref())
+    }
+
+    /// This round's gossip partners of node `i`: graph neighbors that are
+    /// online — empty when `i` itself is offline.
+    pub fn active_neighbors(&self, i: usize) -> Vec<usize> {
+        if !self.online[i] {
+            return Vec::new();
+        }
+        self.graph.neighbors(i).iter().copied().filter(|&j| self.online[j]).collect()
+    }
+
+    /// Directed messages per payload kind this round: both directions of
+    /// every kept edge whose endpoints are both online.
+    pub fn active_directed_edges(&self) -> u64 {
+        let g: &Graph = self.graph.as_ref();
+        let mut count = 0u64;
+        for i in 0..g.n() {
+            if !self.online[i] {
+                continue;
+            }
+            count += g.neighbors(i).iter().filter(|&&j| self.online[j]).count() as u64;
+        }
+        count
+    }
+
+    /// Assumption-1 check of the round's *effective* mixing: the full `W`
+    /// when everyone is online, the online principal submatrix under churn
+    /// (offline nodes sit out the round as identity rows by construction).
+    pub fn validation(&self) -> Validation {
+        if self.all_online() {
+            return mixing::validate(self.w.as_ref());
+        }
+        let w: &Mat = self.w.as_ref();
+        let online: Vec<usize> = (0..self.n()).filter(|&i| self.online[i]).collect();
+        let k = online.len();
+        let mut sub = Mat::zeros(k, k);
+        for (a, &i) in online.iter().enumerate() {
+            for (b, &j) in online.iter().enumerate() {
+                sub[(a, b)] = w[(i, j)];
+            }
+        }
+        mixing::validate(&sub)
+    }
+}
+
+/// Deterministic per-round network schedule over a validated base
+/// `(graph, W)`.  Pure function of `(seed, round)`: every caller — the sync
+/// driver, each actor node thread, a test — derives the identical view.
+#[derive(Clone, Debug)]
+pub struct NetworkSchedule {
+    graph: Graph,
+    w: Mat,
+    plan: NetPlan,
+    scheme: Scheme,
+    seed: u64,
+    all_online: Vec<bool>,
+}
+
+impl NetworkSchedule {
+    pub fn new(graph: Graph, w: Mat, plan: NetPlan, scheme: Scheme, seed: u64) -> Result<Self> {
+        if w.rows != graph.n() || w.cols != graph.n() {
+            bail!("W is {}x{} but the graph has {} nodes", w.rows, w.cols, graph.n());
+        }
+        if let NetPlan::Rewire { every, .. } = &plan {
+            if *every == 0 {
+                bail!("rewire cadence must be >= 1");
+            }
+        }
+        if let NetPlan::EdgeDropout { p } = &plan {
+            if !(0.0..1.0).contains(p) {
+                bail!("edge dropout probability must be in [0, 1), got {p}");
+            }
+        }
+        if let NetPlan::NodeChurn { p_offline } = &plan {
+            if !(0.0..1.0).contains(p_offline) {
+                bail!("churn probability must be in [0, 1), got {p_offline}");
+            }
+        }
+        let all_online = vec![true; graph.n()];
+        Ok(NetworkSchedule { graph, w, plan, scheme, seed, all_online })
+    }
+
+    /// Build from a config's `net.*` section over an assembled base network.
+    pub fn from_config(cfg: &ExperimentConfig, graph: Graph, w: Mat) -> Result<Self> {
+        let plan = plan_from_config(cfg)?;
+        let scheme = Scheme::parse(&cfg.mixing)?;
+        NetworkSchedule::new(graph, w, plan, scheme, cfg.seed)
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.n()
+    }
+
+    pub fn plan(&self) -> &NetPlan {
+        &self.plan
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.plan == NetPlan::Static
+    }
+
+    /// Cache key for per-round views: rounds with equal keys see the
+    /// identical view, so drivers can skip rebuilding `W`.
+    pub fn view_key(&self, round: usize) -> u64 {
+        match &self.plan {
+            NetPlan::Static => 0,
+            NetPlan::Rewire { every, .. } => ((round.max(1) - 1) / every) as u64,
+            NetPlan::EdgeDropout { .. } | NetPlan::NodeChurn { .. } => round as u64,
+        }
+    }
+
+    fn base_view(&self) -> NetView<'_> {
+        NetView {
+            graph: Cow::Borrowed(&self.graph),
+            w: Cow::Borrowed(&self.w),
+            online: Cow::Borrowed(&self.all_online[..]),
+        }
+    }
+
+    /// The network of communication round `round` (1-based; round 0 /
+    /// initialization always sees the base view).  Deterministic in
+    /// `(seed, round)` — no internal state advances.
+    pub fn view(&self, round: usize) -> Result<NetView<'_>> {
+        let n = self.graph.n();
+        match &self.plan {
+            NetPlan::Static => Ok(self.base_view()),
+            NetPlan::Rewire { every, family } => {
+                let epoch = (round.max(1) - 1) / every;
+                if epoch == 0 {
+                    return Ok(self.base_view());
+                }
+                let mut rng = Pcg64::new(self.seed, STREAM_REWIRE + epoch as u64);
+                let g = Graph::build(family, n, &mut rng)?;
+                let w = mixing::build(&g, self.scheme);
+                Ok(NetView {
+                    graph: Cow::Owned(g),
+                    w: Cow::Owned(w),
+                    online: Cow::Borrowed(&self.all_online[..]),
+                })
+            }
+            NetPlan::EdgeDropout { p } => {
+                let mut rng = Pcg64::new(self.seed, STREAM_DROP + round as u64);
+                let edges = self.graph.edges();
+                for _try in 0..MAX_TRIES {
+                    let mut kept = Graph::empty(n);
+                    let mut dropped = Vec::new();
+                    for &(i, j) in &edges {
+                        if rng.bernoulli(*p) {
+                            dropped.push((i, j));
+                        } else {
+                            kept.add_edge(i, j);
+                        }
+                    }
+                    if dropped.is_empty() {
+                        return Ok(self.base_view());
+                    }
+                    if !kept.is_connected() {
+                        continue; // redraw: the round must satisfy Assumption 1
+                    }
+                    let w = absorb_edges(&self.w, &dropped);
+                    return Ok(NetView {
+                        graph: Cow::Owned(kept),
+                        w: Cow::Owned(w),
+                        online: Cow::Borrowed(&self.all_online[..]),
+                    });
+                }
+                Ok(self.base_view()) // no connected subgraph found: full round
+            }
+            NetPlan::NodeChurn { p_offline } => {
+                let mut rng = Pcg64::new(self.seed, STREAM_CHURN + round as u64);
+                for _try in 0..MAX_TRIES {
+                    let online: Vec<bool> = (0..n).map(|_| !rng.bernoulli(*p_offline)).collect();
+                    let n_online = online.iter().filter(|&&b| b).count();
+                    if n_online == n {
+                        return Ok(self.base_view());
+                    }
+                    if n_online < 2 || !induced_connected(&self.graph, &online) {
+                        continue; // redraw: online subnetwork must be connected
+                    }
+                    let w = absorb_offline(&self.w, &online);
+                    return Ok(NetView {
+                        graph: Cow::Borrowed(&self.graph),
+                        w: Cow::Owned(w),
+                        online: Cow::Owned(online),
+                    });
+                }
+                Ok(self.base_view()) // no admissible mask: everyone online
+            }
+        }
+    }
+
+    /// Union of every per-round gossip graph over `rounds` rounds — what the
+    /// actor driver wires channels over (a superset of any round's edges).
+    /// Static, edge-dropout, and churn rounds gossip only over base edges;
+    /// rewire epochs contribute their resampled graphs.
+    pub fn union_graph(&self, rounds: usize) -> Result<Graph> {
+        match &self.plan {
+            NetPlan::Rewire { every, .. } => {
+                let mut union = self.graph.clone();
+                // one representative round per epoch: views are constant inside
+                for round in (1..=rounds).step_by((*every).max(1)) {
+                    let v = self.view(round)?;
+                    for (i, j) in v.graph.edges() {
+                        union.add_edge(i, j);
+                    }
+                }
+                Ok(union)
+            }
+            _ => Ok(self.graph.clone()),
+        }
+    }
+}
+
+/// Zero the dropped edges of `w` and absorb their weight into both
+/// endpoints' self-weights — symmetry and double stochasticity preserved.
+fn absorb_edges(w: &Mat, dropped: &[(usize, usize)]) -> Mat {
+    let mut out = w.clone();
+    for &(i, j) in dropped {
+        let wij = out[(i, j)];
+        out[(i, i)] += wij;
+        out[(j, j)] += wij;
+        out[(i, j)] = 0.0;
+        out[(j, i)] = 0.0;
+    }
+    out
+}
+
+/// Collapse offline rows/columns of `w` to identity: each online neighbor
+/// absorbs the lost weight into its self-weight, and the offline row becomes
+/// exactly `e_u` — symmetry and double stochasticity preserved.
+fn absorb_offline(w: &Mat, online: &[bool]) -> Mat {
+    let n = w.rows;
+    let mut out = w.clone();
+    for u in 0..n {
+        if online[u] {
+            continue;
+        }
+        for v in 0..n {
+            if v == u {
+                continue;
+            }
+            let wvu = out[(v, u)];
+            if online[v] && wvu != 0.0 {
+                out[(v, v)] += wvu;
+            }
+            out[(v, u)] = 0.0;
+            out[(u, v)] = 0.0;
+        }
+        out[(u, u)] = 1.0;
+    }
+    out
+}
+
+/// Is the subgraph induced by the online nodes connected?
+fn induced_connected(g: &Graph, online: &[bool]) -> bool {
+    let n = g.n();
+    let total = online.iter().filter(|&&b| b).count();
+    let Some(start) = (0..n).find(|&i| online[i]) else {
+        return false;
+    };
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::from([start]);
+    seen[start] = true;
+    let mut count = 1;
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if online[v] && !seen[v] {
+                seen[v] = true;
+                count += 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    count == total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+
+    fn base(n: usize, seed: u64, topo: &Topology) -> (Graph, Mat) {
+        let g = Graph::build(topo, n, &mut Pcg64::new(seed, 0x6EA9)).unwrap();
+        let w = mixing::build(&g, Scheme::Metropolis);
+        (g, w)
+    }
+
+    fn schedule(plan: NetPlan, n: usize, seed: u64) -> NetworkSchedule {
+        let (g, w) = base(n, seed, &Topology::ErdosRenyi { p: 0.35 });
+        NetworkSchedule::new(g, w, plan, Scheme::Metropolis, seed).unwrap()
+    }
+
+    fn plans() -> Vec<NetPlan> {
+        vec![
+            NetPlan::Static,
+            NetPlan::Rewire { every: 3, family: Topology::ErdosRenyi { p: 0.35 } },
+            NetPlan::EdgeDropout { p: 0.3 },
+            NetPlan::NodeChurn { p_offline: 0.25 },
+        ]
+    }
+
+    #[test]
+    fn static_view_is_the_base_network_every_round() {
+        let s = schedule(NetPlan::Static, 12, 7);
+        for round in [1usize, 2, 17, 100] {
+            let v = s.view(round).unwrap();
+            assert_eq!(v.graph.edges(), s.graph.edges());
+            assert_eq!(v.w.data, s.w.data);
+            assert!(v.all_online());
+            assert_eq!(s.view_key(round), 0);
+        }
+    }
+
+    #[test]
+    fn every_emitted_w_satisfies_per_round_assumption_1() {
+        for seed in [1u64, 7, 23] {
+            for plan in plans() {
+                let s = schedule(plan.clone(), 12, seed);
+                for round in 1..=12 {
+                    let v = s.view(round).unwrap();
+                    let val = v.validation();
+                    assert!(
+                        val.holds(),
+                        "{} seed {seed} round {round}: {val:?}",
+                        plan.label()
+                    );
+                    // the full-n W stays symmetric + doubly stochastic too
+                    let w: &Mat = v.w.as_ref();
+                    assert!(w.is_symmetric(1e-12), "{} round {round}", plan.label());
+                    for i in 0..v.n() {
+                        let sum: f64 = w.row(i).iter().sum();
+                        assert!(
+                            (sum - 1.0).abs() < 1e-9,
+                            "{} round {round} row {i} sums to {sum}",
+                            plan.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn views_are_deterministic_in_seed_and_round() {
+        for plan in plans() {
+            let s = schedule(plan.clone(), 10, 42);
+            let s2 = schedule(plan.clone(), 10, 42);
+            for round in 1..=8 {
+                let a = s.view(round).unwrap();
+                let b = s2.view(round).unwrap();
+                assert_eq!(a.graph.edges(), b.graph.edges(), "{}", plan.label());
+                assert_eq!(a.w.data, b.w.data, "{}", plan.label());
+                assert_eq!(&a.online[..], &b.online[..], "{}", plan.label());
+            }
+        }
+    }
+
+    #[test]
+    fn rewire_changes_only_at_epoch_boundaries() {
+        let s = schedule(
+            NetPlan::Rewire { every: 3, family: Topology::ErdosRenyi { p: 0.35 } },
+            12,
+            7,
+        );
+        // epoch 0 (rounds 1..=3) is the base graph
+        for round in 1..=3 {
+            assert_eq!(s.view(round).unwrap().graph.edges(), s.graph.edges());
+        }
+        // inside an epoch the view is constant; across epochs it may change
+        let e1a = s.view(4).unwrap();
+        let e1b = s.view(6).unwrap();
+        assert_eq!(e1a.graph.edges(), e1b.graph.edges());
+        assert_eq!(s.view_key(4), s.view_key(6));
+        assert_ne!(s.view_key(3), s.view_key(4));
+        let mut any_differs = false;
+        for round in 4..=24 {
+            if s.view(round).unwrap().graph.edges() != s.graph.edges() {
+                any_differs = true;
+            }
+        }
+        assert!(any_differs, "rewire never produced a new topology");
+    }
+
+    #[test]
+    fn edge_dropout_emits_connected_subgraphs_with_absorbed_weight() {
+        let s = schedule(NetPlan::EdgeDropout { p: 0.4 }, 12, 3);
+        let base_edges = s.graph.edge_count();
+        let mut any_dropped = false;
+        for round in 1..=10 {
+            let v = s.view(round).unwrap();
+            assert!(v.graph.is_connected(), "round {round}");
+            assert!(v.graph.edge_count() <= base_edges);
+            // kept subgraph only contains base edges
+            for (i, j) in v.graph.edges() {
+                assert!(s.graph.has_edge(i, j), "round {round}: phantom edge ({i},{j})");
+            }
+            if v.graph.edge_count() < base_edges {
+                any_dropped = true;
+                // dropped edges have zero weight; diagonal absorbed the mass
+                let w: &Mat = v.w.as_ref();
+                for (i, j) in s.graph.edges() {
+                    if !v.graph.has_edge(i, j) {
+                        assert_eq!(w[(i, j)], 0.0);
+                        assert!(w[(i, i)] > s.w[(i, i)]);
+                    }
+                }
+            }
+            assert_eq!(v.active_directed_edges(), 2 * v.graph.edge_count() as u64);
+        }
+        assert!(any_dropped, "p=0.4 never dropped an edge in 10 rounds");
+    }
+
+    #[test]
+    fn churn_collapses_offline_rows_to_identity() {
+        let s = schedule(NetPlan::NodeChurn { p_offline: 0.3 }, 12, 5);
+        let mut any_offline = false;
+        for round in 1..=12 {
+            let v = s.view(round).unwrap();
+            let w: &Mat = v.w.as_ref();
+            for i in 0..v.n() {
+                if !v.online[i] {
+                    any_offline = true;
+                    assert_eq!(w[(i, i)], 1.0, "round {round} node {i}");
+                    for j in 0..v.n() {
+                        if j != i {
+                            assert_eq!(w[(i, j)], 0.0);
+                            assert_eq!(w[(j, i)], 0.0);
+                        }
+                    }
+                    assert!(v.active_neighbors(i).is_empty());
+                }
+            }
+            // active edges never touch an offline endpoint
+            for i in 0..v.n() {
+                for j in v.active_neighbors(i) {
+                    assert!(v.online[i] && v.online[j]);
+                }
+            }
+        }
+        assert!(any_offline, "p_offline=0.3 never took a node offline in 12 rounds");
+    }
+
+    #[test]
+    fn union_graph_covers_every_round() {
+        for plan in plans() {
+            let s = schedule(plan.clone(), 10, 11);
+            let union = s.union_graph(20).unwrap();
+            for round in 1..=20 {
+                for (i, j) in s.view(round).unwrap().graph.edges() {
+                    assert!(
+                        union.has_edge(i, j),
+                        "{} round {round}: edge ({i},{j}) missing from union",
+                        plan.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_probabilities_fall_back_to_static() {
+        let s = schedule(NetPlan::EdgeDropout { p: 0.0 }, 8, 7);
+        let v = s.view(3).unwrap();
+        assert_eq!(v.graph.edges(), s.graph.edges());
+        let s = schedule(NetPlan::NodeChurn { p_offline: 0.0 }, 8, 7);
+        assert!(s.view(3).unwrap().all_online());
+        // p ~ 1 never finds an admissible mask → full static round
+        let s = schedule(NetPlan::EdgeDropout { p: 0.999 }, 8, 7);
+        let v = s.view(1).unwrap();
+        assert!(v.graph.is_connected());
+        assert!(v.validation().holds());
+    }
+
+    #[test]
+    fn plan_parsing_from_config() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.net_plan = "static".into();
+        assert_eq!(plan_from_config(&cfg).unwrap(), NetPlan::Static);
+        cfg.net_plan = "edge-drop".into();
+        cfg.edge_drop = 0.3;
+        assert_eq!(plan_from_config(&cfg).unwrap(), NetPlan::EdgeDropout { p: 0.3 });
+        cfg.net_plan = "churn".into();
+        cfg.churn = 0.2;
+        assert_eq!(plan_from_config(&cfg).unwrap(), NetPlan::NodeChurn { p_offline: 0.2 });
+        cfg.net_plan = "rewire".into();
+        assert!(matches!(plan_from_config(&cfg).unwrap(), NetPlan::Rewire { .. }));
+        // rewire over a deterministic family is a silent static no-op: rejected
+        cfg.topology = "ring".into();
+        let err = plan_from_config(&cfg).unwrap_err();
+        assert!(err.to_string().contains("deterministic"), "{err}");
+        cfg.topology = "er".into();
+        assert!(plan_from_config(&cfg).is_ok());
+        cfg.net_plan = "bogus".into();
+        assert!(plan_from_config(&cfg).is_err());
+        cfg.net_plan = "churn".into();
+        cfg.churn = 1.5;
+        assert!(plan_from_config(&cfg).is_err());
+    }
+}

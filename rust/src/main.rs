@@ -5,8 +5,8 @@
 
 use anyhow::{bail, Result};
 use decfl::cli::{apply_common_overrides, Args};
-use decfl::config::ExperimentConfig;
-use decfl::experiments::{fig1, fig2, speedup, sweeps};
+use decfl::config::{AlgoKind, ExperimentConfig};
+use decfl::experiments::{churn, fig1, fig2, speedup, sweeps};
 
 const HELP: &str = "\
 decfl — fully decentralized federated learning for electronic health records
@@ -24,6 +24,8 @@ SUBCOMMANDS
   topology    EXP-A2: topology / spectral-gap sweep
   hetero      EXP-A3: heterogeneity sweep (DSGD vs DSGT)
   baselines   EXP-A4: FD-DSGT vs FedAvg vs centralized
+  churn       EXP-N1: time-varying networks (rewire / edge-drop / churn)
+              vs the static baseline (--drops, --churns, --rewire-every)
   export-data write the synthetic cohort as per-hospital CSVs
   info        print artifact manifest + config summary
   help        this text
@@ -39,6 +41,13 @@ COMMON OPTIONS (train + experiments)
   --alpha0 <a>            lr scale              (default 0.02)
   --topology <t>          ring|path|torus|complete|star|er|rgg|smallworld
   --mixing <s>            metropolis|lazy|maxdeg
+  --net-plan <p>          static|rewire|edge-drop|churn — how the network
+                          evolves per round (default static)
+  --rewire-every <r>      rewire cadence in comm rounds   (default 5)
+  --edge-drop <p>         per-edge drop prob per round    (default 0.2)
+  --churn <p>             per-node offline prob per round (default 0.1)
+  --drop-prob <p>         frame-loss prob on every link (actors mode only;
+                          lost frames are retransmitted)
   --heterogeneity <h>     data non-iidness in [0,1] (default 0.6)
   --seed <s>              RNG seed (default 7)
   --threads <k>           native-backend worker threads, 0 = one per core
@@ -49,7 +58,9 @@ COMMON OPTIONS (train + experiments)
 
 EXAMPLES
   decfl train --algo fd-dsgt --steps 10000 --q 100
+  decfl train --backend native --net-plan churn --churn 0.2 --steps 2000
   decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
+  decfl churn --backend native --steps 2000 --q 50 --drops 0.2,0.4
   decfl speedup --ns 4,8,16,32 --steps 400
 ";
 
@@ -75,6 +86,7 @@ fn real_main() -> Result<()> {
         "train" => {
             args.finish()?;
             cfg.validate()?;
+            reject_ignored_network_flags(&args, &cfg)?;
             eprintln!(
                 "training {} (mode {:?}, backend {:?}): N={} Q={} T={} on {} topology",
                 cfg.algo.name(), cfg.mode, cfg.backend, cfg.n,
@@ -96,6 +108,7 @@ fn real_main() -> Result<()> {
             dump(&cfg.out, &res.to_json())?;
         }
         "graph" => {
+            reject_plan_flags(&args, &cfg, "graph")?;
             let dot_path = args.get_str("dot").map(str::to_string);
             args.finish()?;
             let rep = fig1::hospital_graph(&cfg)?;
@@ -107,6 +120,7 @@ fn real_main() -> Result<()> {
             dump(&cfg.out, &rep.to_json())?;
         }
         "tsne" => {
+            reject_plan_flags(&args, &cfg, "tsne")?;
             let hospitals = args
                 .get_usize_list("hospitals")?
                 .unwrap_or_else(|| vec![0, 1, 2]);
@@ -118,6 +132,7 @@ fn real_main() -> Result<()> {
             dump(&cfg.out, &rep.to_json())?;
         }
         "speedup" => {
+            reject_plan_flags(&args, &cfg, "speedup")?;
             let ns = args.get_usize_list("ns")?.unwrap_or_else(|| vec![4, 8, 16, 32]);
             let seeds = args
                 .get_usize_list("seeds")?
@@ -135,6 +150,7 @@ fn real_main() -> Result<()> {
             dump(&cfg.out, &res.to_json())?;
         }
         "qsweep" => {
+            reject_plan_flags(&args, &cfg, "qsweep")?;
             let qs = args.get_usize_list("qs")?.unwrap_or_else(|| vec![1, 5, 20, 100, 500]);
             let target = args.get_f64("target")?.unwrap_or(0.45);
             args.finish()?;
@@ -143,6 +159,7 @@ fn real_main() -> Result<()> {
             dump(&cfg.out, &sweeps::rows_to_json(&rows, sweeps::q_row_json))?;
         }
         "topology" => {
+            reject_plan_flags(&args, &cfg, "topology")?;
             args.finish()?;
             let rows = sweeps::topology_sweep(
                 &["path", "ring", "rgg", "er", "torus", "complete"],
@@ -152,17 +169,56 @@ fn real_main() -> Result<()> {
             sweeps::print_topology_table(&rows);
         }
         "hetero" => {
+            reject_plan_flags(&args, &cfg, "hetero")?;
             let hets = args.get_f64_list("hets")?.unwrap_or_else(|| vec![0.0, 0.3, 0.6, 1.0]);
             args.finish()?;
             let rows = sweeps::hetero_sweep(&hets, cfg.total_steps, &[cfg.seed, cfg.seed + 1])?;
             sweeps::print_hetero_table(&rows);
         }
         "baselines" => {
+            reject_plan_flags(&args, &cfg, "baselines")?;
             args.finish()?;
             let rows = sweeps::baseline_compare(cfg.total_steps, cfg.q, cfg.seed)?;
             sweeps::print_baseline_table(&rows);
         }
+        "churn" => {
+            let drops = args.get_f64_list("drops")?.unwrap_or_else(|| vec![0.2, 0.4]);
+            let churns = args.get_f64_list("churns")?.unwrap_or_else(|| vec![0.1, 0.3]);
+            args.finish()?;
+            if matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+                bail!(
+                    "`decfl churn` sweeps gossip network plans, but `{}` has no gossip \
+                     network; pick dsgd|dsgt|fd-dsgd|fd-dsgt",
+                    cfg.algo.name()
+                );
+            }
+            // the sweep owns the plan axis — these would be silently overwritten
+            for key in ["net-plan", "edge-drop", "churn"] {
+                if args.provided(key) {
+                    bail!(
+                        "--{key} was passed, but `decfl churn` sweeps the plan axis \
+                         itself and would silently ignore it; shape the sweep with \
+                         --drops / --churns / --rewire-every instead"
+                    );
+                }
+            }
+            if cfg.net_plan != "static" {
+                bail!(
+                    "the config sets net.plan = `{}`, but `decfl churn` sweeps the \
+                     plan axis itself and would silently ignore it; shape the sweep \
+                     with --drops / --churns / --rewire-every instead",
+                    cfg.net_plan
+                );
+            }
+            let rows = churn::run(&cfg, &drops, &churns)?;
+            churn::print_table(&rows);
+            for f in churn::findings(&rows) {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &churn::rows_json(&rows))?;
+        }
         "export-data" => {
+            reject_plan_flags(&args, &cfg, "export-data")?;
             let dir = args.get_str("dir").unwrap_or("out/cohort").to_string();
             args.finish()?;
             let asm = decfl::coordinator::assemble(&cfg)?;
@@ -176,6 +232,7 @@ fn real_main() -> Result<()> {
             );
         }
         "info" => {
+            reject_plan_flags(&args, &cfg, "info")?;
             args.finish()?;
             let manifest =
                 decfl::runtime::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
@@ -189,6 +246,55 @@ fn real_main() -> Result<()> {
             }
         }
         other => bail!("unknown subcommand `{other}` (try `decfl help`)"),
+    }
+    Ok(())
+}
+
+/// The sweep/report subcommands build their own per-run configs and would
+/// silently run static networks no matter what plan settings arrived — fail
+/// loudly, whether the plan came as a CLI flag or through `--config` TOML,
+/// and point at the subcommands that do honor them.
+fn reject_plan_flags(args: &Args, cfg: &ExperimentConfig, sub: &str) -> Result<()> {
+    for key in ["net-plan", "rewire-every", "edge-drop", "churn"] {
+        if args.provided(key) {
+            bail!(
+                "--{key} was passed, but `decfl {sub}` runs its own fixed network \
+                 setup and would silently ignore it; network plans apply to \
+                 `decfl train` and `decfl churn`"
+            );
+        }
+    }
+    if cfg.net_plan != "static" {
+        bail!(
+            "the config sets net.plan = `{}`, but `decfl {sub}` runs its own fixed \
+             network setup and would silently ignore it; network plans apply to \
+             `decfl train` and `decfl churn`",
+            cfg.net_plan
+        );
+    }
+    Ok(())
+}
+
+/// FedAvg runs a fixed star and the fusion center has no network at all —
+/// network-shaping flags would be silently ignored there, so fail loudly
+/// instead (mirrors the engine-level `drop_prob` / `net_plan` bails, which
+/// cannot see whether a flag was explicitly passed).
+fn reject_ignored_network_flags(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    if !matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+        return Ok(());
+    }
+    let what = match cfg.algo {
+        AlgoKind::FedAvg => "a fixed star network",
+        _ => "a fusion center with no gossip network",
+    };
+    for key in ["topology", "mixing", "net-plan", "rewire-every", "edge-drop", "churn"] {
+        if args.provided(key) {
+            bail!(
+                "--{key} was passed, but `{}` runs {what} and would silently ignore it; \
+                 drop the flag or pick a gossip algorithm (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.algo.name()
+            );
+        }
     }
     Ok(())
 }

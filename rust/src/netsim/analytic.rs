@@ -9,28 +9,24 @@
 //! (synchronous gossip = max over edges), with payload kinds pipelined
 //! sequentially (DSGT sends θ then ϑ).
 //!
-//! With a lossless link this matches [`super::NetStats`] byte-for-byte
-//! (integration-tested); loss injection is an actor-mode-only feature.
+//! The network is a per-round quantity (`graph::schedule`), so the caller
+//! passes each round's directed active-edge count — the accountant holds no
+//! frozen graph.  With a lossless link this matches [`super::NetStats`]
+//! byte-for-byte on every plan (integration-tested); loss injection is an
+//! actor-mode-only feature.
 
 use super::{LinkModel, NetSnapshot};
-use crate::graph::Graph;
 
 /// Deterministic mirror of the netsim counters for fused execution.
 #[derive(Clone, Debug)]
 pub struct Accountant {
-    /// Directed messages per payload kind per round (= 2 |E|).
-    directed_edges: u64,
     link: LinkModel,
     snap: NetSnapshot,
 }
 
 impl Accountant {
-    pub fn new(g: &Graph, link: LinkModel) -> Self {
-        Accountant {
-            directed_edges: 2 * g.edge_count() as u64,
-            link,
-            snap: NetSnapshot::default(),
-        }
+    pub fn new(link: LinkModel) -> Self {
+        Accountant { link, snap: NetSnapshot::default() }
     }
 
     /// Charge a local-compute phase: all nodes run `steps` SGD steps in
@@ -39,11 +35,12 @@ impl Accountant {
         self.snap.sim_time_s += steps as f64 * secs_per_step;
     }
 
-    /// Charge one synchronous gossip round exchanging `kinds` payloads of
-    /// `payload_elems` f32 each over every edge.
-    pub fn comm_round(&mut self, payload_elems: usize, kinds: u32) {
+    /// Charge one synchronous gossip round: `directed_edges` messages per
+    /// payload kind (both directions of every active edge this round), each
+    /// carrying `payload_elems` f32, `kinds` payload kinds pipelined.
+    pub fn comm_round(&mut self, directed_edges: u64, payload_elems: usize, kinds: u32) {
         let bytes = (payload_elems * std::mem::size_of::<f32>()) as u64;
-        let msgs = self.directed_edges * kinds as u64;
+        let msgs = directed_edges * kinds as u64;
         self.snap.messages += msgs;
         self.snap.bytes += msgs * bytes;
         self.snap.rounds += 1;
@@ -71,7 +68,7 @@ impl Accountant {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::Topology;
+    use crate::graph::{Graph, Topology};
     use crate::rng::Pcg64;
 
     #[test]
@@ -98,8 +95,8 @@ mod tests {
         stats.rounds.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let real = stats.snapshot();
 
-        let mut acct = Accountant::new(&g, link);
-        acct.comm_round(payload, 1);
+        let mut acct = Accountant::new(link);
+        acct.comm_round(2 * g.edge_count() as u64, payload, 1);
         let model = acct.snapshot();
 
         assert_eq!(model.messages, real.messages);
@@ -110,26 +107,38 @@ mod tests {
     #[test]
     fn dsgt_pays_double() {
         let g = Graph::build(&Topology::Ring, 4, &mut Pcg64::seed(0)).unwrap();
-        let mut a = Accountant::new(&g, LinkModel::default());
-        let mut b = Accountant::new(&g, LinkModel::default());
-        a.comm_round(100, 1);
-        b.comm_round(100, 2);
+        let edges = 2 * g.edge_count() as u64;
+        let mut a = Accountant::new(LinkModel::default());
+        let mut b = Accountant::new(LinkModel::default());
+        a.comm_round(edges, 100, 1);
+        b.comm_round(edges, 100, 2);
         assert_eq!(b.snapshot().bytes, 2 * a.snapshot().bytes);
         assert!(b.snapshot().sim_time_s > a.snapshot().sim_time_s);
     }
 
     #[test]
+    fn per_round_edge_counts_accumulate() {
+        // a churn-style schedule: 8, then 4, then 8 directed edges
+        let mut a = Accountant::new(LinkModel::default());
+        a.comm_round(8, 100, 1);
+        a.comm_round(4, 100, 1);
+        a.comm_round(8, 100, 1);
+        let s = a.snapshot();
+        assert_eq!(s.messages, 20);
+        assert_eq!(s.bytes, 20 * 400);
+        assert_eq!(s.rounds, 3);
+    }
+
+    #[test]
     fn compute_time_accumulates() {
-        let g = Graph::build(&Topology::Ring, 4, &mut Pcg64::seed(0)).unwrap();
-        let mut a = Accountant::new(&g, LinkModel::default());
+        let mut a = Accountant::new(LinkModel::default());
         a.local_compute(100, 1e-3);
         assert!((a.snapshot().sim_time_s - 0.1).abs() < 1e-12);
     }
 
     #[test]
     fn star_round_counts() {
-        let g = Graph::build(&Topology::Star, 5, &mut Pcg64::seed(0)).unwrap();
-        let mut a = Accountant::new(&g, LinkModel::default());
+        let mut a = Accountant::new(LinkModel::default());
         a.star_round(4, 100);
         let s = a.snapshot();
         assert_eq!(s.messages, 8);

@@ -125,14 +125,26 @@ fn kind_tag(k: PayloadKind) -> u8 {
 }
 
 impl Endpoint {
-    /// Send `payload` to every neighbor, tagged with the gossip round.
+    /// Send `payload` to every wired neighbor, tagged with the gossip round.
     /// Returns the per-edge transmission delay applied.
     pub fn broadcast(&mut self, round: u64, kind: PayloadKind, payload: &Arc<Vec<f32>>) -> Result<f64> {
+        let neighbor_ids: Vec<usize> = self.neighbors.clone();
+        self.send_to(&neighbor_ids, round, kind, payload)
+    }
+
+    /// Send `payload` to a subset of the wired neighbors — the per-round
+    /// neighbor mask of a time-varying network (`graph::schedule`).
+    /// Returns the per-edge transmission delay applied.
+    pub fn send_to(
+        &mut self,
+        targets: &[usize],
+        round: u64,
+        kind: PayloadKind,
+        payload: &Arc<Vec<f32>>,
+    ) -> Result<f64> {
         let bytes = (payload.len() * std::mem::size_of::<f32>()) as u64;
         let mut max_delay = 0.0f64;
-        // iterate via ids to keep borrowck away from &mut self methods
-        let neighbor_ids: Vec<usize> = self.neighbors.clone();
-        for nb in neighbor_ids {
+        for &nb in targets {
             // retransmission loop: deterministic count from this node's rng
             let mut tries = 1u64;
             while self.link.drop_prob > 0.0 && self.rng.bernoulli(self.link.drop_prob) {
@@ -163,11 +175,23 @@ impl Endpoint {
         Ok(max_delay)
     }
 
-    /// Block until one `(round, kind)` message from *every* neighbor has
-    /// arrived; returns them ordered by sender id.  Out-of-order messages
-    /// (future rounds, other kinds) are buffered, not lost.
+    /// Block until one `(round, kind)` message from *every* wired neighbor
+    /// has arrived; returns them ordered by sender id.  Out-of-order
+    /// messages (future rounds, other kinds) are buffered, not lost.
     pub fn gather(&mut self, round: u64, kind: PayloadKind) -> Result<Vec<(usize, Arc<Vec<f32>>)>> {
         let want: Vec<usize> = self.neighbors.clone();
+        self.gather_from(&want, round, kind)
+    }
+
+    /// Block until one `(round, kind)` message from each of `sources` has
+    /// arrived — the per-round neighbor mask of a time-varying network.
+    /// Messages from other senders or rounds are buffered, not lost.
+    pub fn gather_from(
+        &mut self,
+        sources: &[usize],
+        round: u64,
+        kind: PayloadKind,
+    ) -> Result<Vec<(usize, Arc<Vec<f32>>)>> {
         let tag = kind_tag(kind);
         let mut have: BTreeMap<usize, Msg> = BTreeMap::new();
 
@@ -175,7 +199,7 @@ impl Endpoint {
         let keys: Vec<_> = self
             .held
             .keys()
-            .filter(|(r, k, _)| *r == round && *k == tag)
+            .filter(|(r, k, from)| *r == round && *k == tag && sources.contains(from))
             .copied()
             .collect();
         for key in keys {
@@ -183,12 +207,12 @@ impl Endpoint {
             have.insert(msg.from, msg);
         }
 
-        while have.len() < want.len() {
+        while have.len() < sources.len() {
             let msg = self
                 .inbox
                 .recv()
                 .map_err(|_| anyhow::anyhow!("network shut down while node {} waits", self.id))?;
-            if msg.round == round && kind_tag(msg.kind) == tag {
+            if msg.round == round && kind_tag(msg.kind) == tag && sources.contains(&msg.from) {
                 have.insert(msg.from, msg);
             } else {
                 self.held.insert((msg.round, kind_tag(msg.kind), msg.from), msg);
@@ -358,6 +382,28 @@ mod tests {
         assert!(params.iter().all(|(_, p)| p[0] == 1.0));
         let trackers = e1.gather(0, PayloadKind::Tracker).unwrap();
         assert!(trackers.iter().all(|(_, p)| p[0] == 9.0));
+    }
+
+    #[test]
+    fn per_round_subset_send_and_gather() {
+        // wired as a triangle, but this round only the 0-1 link is active
+        let g = Graph::build(&Topology::Complete, 3, &mut Pcg64::seed(0)).unwrap();
+        let (mut eps, stats) = build(&g, LinkModel::default(), 0);
+        let e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let p = Arc::new(vec![5.0f32, 6.0]);
+        e0.send_to(&[1], 0, PayloadKind::Params, &p).unwrap();
+        e1.send_to(&[0], 0, PayloadKind::Params, &p).unwrap();
+        let got = e0.gather_from(&[1], 0, PayloadKind::Params).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 1);
+        let got = e1.gather_from(&[0], 0, PayloadKind::Params).unwrap();
+        assert_eq!(got.len(), 1);
+        // node 2 sat the round out entirely; only the active edge was billed
+        drop(e2);
+        assert_eq!(stats.snapshot().messages, 2);
+        assert_eq!(stats.snapshot().bytes, 2 * 8);
     }
 
     #[test]

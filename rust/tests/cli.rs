@@ -18,8 +18,11 @@ fn help_lists_subcommands() {
     let out = decfl(&["help"]);
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for sub in ["train", "fig2", "graph", "tsne", "speedup", "qsweep", "baselines"] {
+    for sub in ["train", "fig2", "graph", "tsne", "speedup", "qsweep", "baselines", "churn"] {
         assert!(text.contains(sub), "help missing `{sub}`");
+    }
+    for flag in ["--net-plan", "--rewire-every", "--edge-drop", "--churn"] {
+        assert!(text.contains(flag), "help missing `{flag}`");
     }
 }
 
@@ -62,6 +65,89 @@ fn native_train_csv_and_json() {
     let j = decfl::jsonl::Json::parse(&dumped).unwrap();
     assert_eq!(j.get("algo").unwrap().as_str().unwrap(), "fd-dsgd");
     std::fs::remove_file(&json_path).ok();
+}
+
+#[test]
+fn dynamic_plan_train_runs_natively() {
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fd-dsgd", "--steps", "40",
+        "--q", "10", "--eval-every", "2", "--net-plan", "churn", "--churn", "0.2",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.starts_with("comm_rounds,"), "csv header missing");
+}
+
+#[test]
+fn churn_subcommand_sweeps_all_plans() {
+    let out = decfl(&[
+        "churn", "--backend", "native", "--steps", "40", "--q", "10",
+        "--eval-every", "2", "--drops", "0.3", "--churns", "0.2",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for label in ["static", "rewire@", "edge-drop 0.30", "churn 0.20"] {
+        assert!(text.contains(label), "churn table missing `{label}`:\n{text}");
+    }
+    assert!(text.contains("finding:"), "{text}");
+}
+
+#[test]
+fn churn_subcommand_rejects_plan_axis_flags() {
+    // the sweep owns the plan axis: passing --net-plan/--edge-drop/--churn
+    // must fail loudly instead of being silently overwritten
+    let out = decfl(&["churn", "--backend", "native", "--steps", "20", "--net-plan", "rewire"]);
+    assert!(!out.status.success(), "churn --net-plan must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--net-plan"), "{err}");
+    assert!(err.contains("--drops"), "{err}");
+
+    let out = decfl(&["churn", "--backend", "native", "--steps", "20", "--algo", "fedavg"]);
+    assert!(!out.status.success(), "churn --algo fedavg must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("gossip"), "no gossip hint");
+}
+
+#[test]
+fn sweep_subcommands_reject_plan_flags() {
+    // sweeps build their own configs: plan flags would be silently ignored
+    for sub in ["baselines", "qsweep", "hetero"] {
+        let out = decfl(&[sub, "--steps", "20", "--net-plan", "churn"]);
+        assert!(!out.status.success(), "{sub} --net-plan must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("--net-plan"), "{sub}: {err}");
+        assert!(err.contains("silently ignore"), "{sub}: {err}");
+    }
+    // the same plan arriving through --config TOML is caught too
+    let toml = std::env::temp_dir().join(format!("decfl_plan_{}.toml", std::process::id()));
+    std::fs::write(&toml, "[net]\nplan = \"churn\"\n").unwrap();
+    let out = decfl(&["baselines", "--steps", "20", "--config", toml.to_str().unwrap()]);
+    assert!(!out.status.success(), "baselines with TOML net.plan must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("net.plan"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_file(&toml).ok();
+}
+
+#[test]
+fn baselines_reject_network_flags_loudly() {
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fedavg", "--steps", "20",
+        "--topology", "ring",
+    ]);
+    assert!(!out.status.success(), "fedavg --topology must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--topology"), "{err}");
+    assert!(err.contains("silently ignore"), "{err}");
+
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "centralized", "--steps", "20",
+        "--net-plan", "churn",
+    ]);
+    assert!(!out.status.success(), "centralized --net-plan must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--net-plan"), "{err}");
 }
 
 #[test]

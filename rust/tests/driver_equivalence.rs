@@ -2,11 +2,15 @@
 //!
 //! The same config must produce BITWISE-identical loss trajectories through
 //! (a) the fused sync driver vs the actor driver (one thread per hospital,
-//! gossip over the channel netsim), and (b) serial vs threaded native
-//! compute.  Both pins also guard the parallel fan-out against
-//! nondeterministic reduction order.
+//! gossip over the channel netsim) — for the static network AND for every
+//! dynamic `NetPlan`, (b) serial vs threaded native compute, and (c) the
+//! `Static` schedule vs a hand-rolled replica of the pre-schedule
+//! single-graph loop (W captured once, no per-round views).  All pins also
+//! guard the parallel fan-out against nondeterministic reduction order.
 
+use decfl::algo::LrSchedule;
 use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::sampler::{init_thetas, NodeSampler};
 use decfl::coordinator::{assemble, run_on, Compute, NativeCompute};
 use decfl::rng::Pcg64;
 
@@ -64,6 +68,119 @@ fn fused_and_actor_drivers_bitwise_identical() {
             actors.rows.last().unwrap().bytes,
             "{algo:?}: byte accounting"
         );
+    }
+}
+
+#[test]
+fn dynamic_plans_fused_and_actor_drivers_bitwise_identical() {
+    // (plan, base topology, algo) — every dynamic NetPlan through both
+    // drivers, DSGD and DSGT flavors, with per-round byte accounting
+    // matching the channel netsim on lossless links.
+    for (plan, topo, algo) in [
+        ("rewire", "er", AlgoKind::FdDsgd),
+        ("rewire", "er", AlgoKind::FdDsgt),
+        ("edge-drop", "complete", AlgoKind::FdDsgd),
+        ("edge-drop", "complete", AlgoKind::FdDsgt),
+        ("churn", "ring", AlgoKind::FdDsgd),
+        ("churn", "ring", AlgoKind::FdDsgt),
+    ] {
+        let mut cfg = native_cfg(algo, 3, 30);
+        cfg.topology = topo.into();
+        cfg.net_plan = plan.into();
+        cfg.rewire_every = 2;
+        cfg.edge_drop = 0.4;
+        cfg.churn = 0.3;
+        let asm = assemble(&cfg).unwrap();
+
+        cfg.mode = Mode::Fused;
+        let fused = run_on(&cfg, &asm).unwrap();
+        cfg.mode = Mode::Actors;
+        let actors = run_on(&cfg, &asm).unwrap();
+
+        assert_eq!(fused.rows.len(), actors.rows.len(), "{plan}/{algo:?}: row count");
+        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
+            assert_eq!(rf.comm_rounds, ra.comm_rounds, "{plan}/{algo:?}");
+            assert_eq!(
+                rf.loss.to_bits(),
+                ra.loss.to_bits(),
+                "{plan}/{algo:?} round {}: fused loss {} vs actor loss {}",
+                rf.comm_rounds,
+                rf.loss,
+                ra.loss
+            );
+            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{plan}/{algo:?}");
+            assert_eq!(rf.stationarity.to_bits(), ra.stationarity.to_bits(), "{plan}/{algo:?}");
+        }
+        // Per-round active-edge charges must sum to exactly what the channel
+        // netsim moved: with edge counts varying every round, the totals
+        // only agree if every round was charged its own edge count.
+        // (Intermediate rows race ahead in actor mode, so compare finals.)
+        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
+        assert_eq!(ff.bytes, fa.bytes, "{plan}/{algo:?}: byte accounting");
+        assert_eq!(ff.messages, fa.messages, "{plan}/{algo:?}: message accounting");
+    }
+}
+
+#[test]
+fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
+    // Hand-rolled replica of the pre-schedule trainer: W captured once as
+    // f32, the same round structure inlined, no NetworkSchedule anywhere.
+    // The engine's Static plan must match it bit for bit.
+    let cfg = native_cfg(AlgoKind::FdDsgd, 4, 24);
+    assert_eq!(cfg.net_plan, "static", "default plan is static");
+    let asm = assemble(&cfg).unwrap();
+    let engine_log = run_on(&cfg, &asm).unwrap();
+
+    let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+    let model = decfl::algo::native::NativeModel::new(cfg.d, cfg.hidden);
+    let wf: Vec<f32> = decfl::mixing::to_f32(&asm.w); // captured once, pre-refactor style
+    let q = cfg.algo.effective_q(cfg.q);
+    let local = q - 1;
+    let rounds = cfg.total_steps.div_ceil(q);
+    let (n, m, d) = (cfg.n, cfg.m, cfg.d);
+    let p = model.p();
+    let sched = LrSchedule::new(cfg.alpha0);
+
+    let mut theta = init_thetas(cfg.seed, n, &model);
+    let mut samplers: Vec<NodeSampler> =
+        (0..n).map(|i| NodeSampler::new(cfg.seed, i, m)).collect();
+    let mut lx = vec![0.0f32; n * local * m * d];
+    let mut ly = vec![0.0f32; n * local * m];
+    let mut cx = vec![0.0f32; n * m * d];
+    let mut cy = vec![0.0f32; n * m];
+
+    let mut evals = vec![compute.eval_full(&theta, &asm.ds.shards).unwrap()];
+    for round in 1..=rounds {
+        let lrs = sched.local_lrs(round, q, local);
+        for (i, s) in samplers.iter_mut().enumerate() {
+            s.batches(
+                &asm.ds.shards[i],
+                local,
+                &mut lx[i * local * m * d..(i + 1) * local * m * d],
+                &mut ly[i * local * m..(i + 1) * local * m],
+            );
+        }
+        theta = compute.local_steps_all(&theta, &lx, &ly, &lrs).unwrap().0;
+        for (i, s) in samplers.iter_mut().enumerate() {
+            s.batch(
+                &asm.ds.shards[i],
+                &mut cx[i * m * d..(i + 1) * m * d],
+                &mut cy[i * m..(i + 1) * m],
+            );
+        }
+        theta = compute
+            .dsgd_round(&wf, &theta, &cx, &cy, sched.comm_lr(round, q))
+            .unwrap()
+            .0;
+        evals.push(compute.eval_full(&theta, &asm.ds.shards).unwrap());
+    }
+
+    assert_eq!(engine_log.rows.len(), evals.len(), "eval_every=1 logs every round");
+    for (row, (loss, acc, stat, cons)) in engine_log.rows.iter().zip(&evals) {
+        assert_eq!(row.loss.to_bits(), loss.to_bits(), "round {}", row.comm_rounds);
+        assert_eq!(row.accuracy.to_bits(), acc.to_bits(), "round {}", row.comm_rounds);
+        assert_eq!(row.stationarity.to_bits(), stat.to_bits(), "round {}", row.comm_rounds);
+        assert_eq!(row.consensus.to_bits(), cons.to_bits(), "round {}", row.comm_rounds);
     }
 }
 
