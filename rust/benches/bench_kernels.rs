@@ -1,0 +1,141 @@
+//! EXP-P3: kernel + gossip microbenches for the zero-allocation refactor.
+//!
+//! Three tiers, matching the §Perf claims in DESIGN.md:
+//!
+//! 1. **grad kernel** — allocating `loss_and_grad` vs workspace-reusing
+//!    `loss_and_grad_into` (cache-blocked either way; the delta is pure
+//!    allocator traffic).
+//! 2. **combine** — dense n-length row scan vs degree-sparse `(nbr, w)`
+//!    lists over a sparse (knn) hospital graph at n ∈ {10, 200, 1000}: the
+//!    O(n·p) → O(deg·p) drop that makes large cohorts feasible.
+//! 3. **full round** — one fused FD-DSGD round (local phase + gossip
+//!    update) through the double-buffered `_into` path, the number the
+//!    ≥ 2× acceptance bar tracks; recorded to BENCH_3.json.
+//!
+//!     cargo bench --bench bench_kernels
+//!     DECFL_BENCH_JSON=../BENCH_3.json cargo bench --bench bench_kernels
+//!
+//! `DECFL_SMOKE=1` shrinks sizes/budgets to a CI compile-and-run check.
+
+use decfl::algo::native::{NativeModel, Workspace};
+use decfl::benchutil::{bench, budget, report, section, smoke, Timing};
+use decfl::coordinator::compute::MixView;
+use decfl::coordinator::{Compute, NativeCompute};
+use decfl::graph::{Graph, Topology};
+use decfl::mixing::{self, Scheme, SparseW};
+use decfl::rng::Pcg64;
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn rand_labels(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect()
+}
+
+struct Row {
+    name: String,
+    t: Timing,
+}
+
+fn push(rows: &mut Vec<Row>, name: &str, t: Timing) {
+    report(name, &t);
+    rows.push(Row { name: name.into(), t });
+}
+
+fn main() -> anyhow::Result<()> {
+    let (d, h, m, local) = (42usize, 32usize, 20usize, 4usize);
+    let model = NativeModel::new(d, h);
+    let p = model.p();
+    println!("kernel/gossip microbenches, d={d} h={h} p={p} m={m}");
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---- 1. grad kernel: allocating vs workspace-reusing ----
+    section("grad kernel (one batch)");
+    let mut rng = Pcg64::seed(3);
+    let theta = rand_vec(&mut rng, p, 0.2);
+    let x = rand_vec(&mut rng, m * d, 1.0);
+    let y = rand_labels(&mut rng, m);
+    let t = bench(budget(0.5), || {
+        std::hint::black_box(model.loss_and_grad(&theta, &x, &y));
+    });
+    push(&mut rows, "loss_and_grad (alloc)", t);
+    let mut ws = Workspace::new();
+    let mut gbuf = vec![0.0f32; p];
+    let t = bench(budget(0.5), || {
+        std::hint::black_box(model.loss_and_grad_into(&theta, &x, &y, &mut gbuf, &mut ws));
+    });
+    push(&mut rows, "loss_and_grad_into (workspace)", t);
+
+    // ---- 2 + 3. combine dense-vs-sparse and the full round, per n ----
+    let sizes: &[usize] = if smoke() { &[10] } else { &[10, 200, 1000] };
+    for &n in sizes {
+        let mut rng = Pcg64::seed(7 + n as u64);
+        let g = Graph::build(&Topology::KNearest { k: 3 }, n, &mut rng)?;
+        let w = mixing::build(&g, Scheme::Metropolis);
+        let dense = mixing::to_f32(&w);
+        let sparse = SparseW::from_mat(&w);
+        let mean_deg = sparse.nnz() as f64 / n as f64 - 1.0;
+        let thetas = rand_vec(&mut rng, n * p, 0.3);
+
+        section(&format!("combine          n={n} (knn graph, mean deg {mean_deg:.1})"));
+        let i = n / 2;
+        let wrow = &dense[i * n..(i + 1) * n];
+        let (idx, val) = sparse.row(i);
+        let mut out = vec![0.0f32; p];
+        let t = bench(budget(0.5), || {
+            model.combine_into(wrow, &thetas, &mut out, &mut ws);
+            std::hint::black_box(&out);
+        });
+        push(&mut rows, &format!("combine dense n={n}"), t);
+        let t = bench(budget(0.5), || {
+            model.combine_sparse_into(idx, val, &thetas, &mut out, &mut ws);
+            std::hint::black_box(&out);
+        });
+        push(&mut rows, &format!("combine sparse n={n}"), t);
+
+        section(&format!("full fd-dsgd round n={n} ({local} local steps)"));
+        let compute = NativeCompute::new(d, h, n, m); // threads: auto
+        let serial = NativeCompute::new(d, h, n, m).with_threads(1);
+        let lrs: Vec<f32> = (1..=local).map(|r| 0.02 / (r as f32).sqrt()).collect();
+        let lx = rand_vec(&mut rng, n * local * m * d, 1.0);
+        let ly = rand_labels(&mut rng, n * local * m);
+        let cx = rand_vec(&mut rng, n * m * d, 1.0);
+        let cy = rand_labels(&mut rng, n * m);
+        let mix = MixView { dense: &dense, sparse: &sparse };
+        let mut front = thetas.clone();
+        let mut back = vec![0.0f32; n * p];
+        let mut local_losses = vec![0.0f64; n * local];
+        let mut comm_losses = vec![0.0f64; n];
+        for (label, c) in [("serial (threads=1)", &serial), ("threaded (auto)", &compute)] {
+            let t = bench(budget(1.0), || {
+                c.local_steps_all_into(&front, &lx, &ly, &lrs, &mut back, &mut local_losses)
+                    .unwrap();
+                std::mem::swap(&mut front, &mut back);
+                c.dsgd_round_into(&mix, &front, &cx, &cy, 0.02, &mut back, &mut comm_losses)
+                    .unwrap();
+                std::mem::swap(&mut front, &mut back);
+                std::hint::black_box(&front);
+            });
+            push(&mut rows, &format!("round n={n} {label}"), t);
+        }
+    }
+
+    // ---- optional JSON record (BENCH_3.json baseline) ----
+    if let Ok(path) = std::env::var("DECFL_BENCH_JSON") {
+        let mut out = String::from("{\n  \"bench\": \"bench_kernels\",\n  \"rows\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"p50_s\": {:.9}, \"per_sec\": {:.3}}}{}\n",
+                r.name,
+                r.t.p50_s,
+                r.t.per_sec(),
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(&path, out)?;
+        println!("\nwrote {} rows to {path}", rows.len());
+    }
+    Ok(())
+}

@@ -29,8 +29,19 @@ impl LrSchedule {
     /// Learning rates for the local phase of communication round `round`
     /// (1-based): global steps `(round-1)*q + 1 ..= (round-1)*q + count`.
     pub fn local_lrs(&self, round: usize, q: usize, count: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; count];
+        self.local_lrs_into(round, q, &mut out);
+        out
+    }
+
+    /// [`Self::local_lrs`] into a caller buffer (`out.len()` steps) — the
+    /// round engine reuses one buffer so steady-state rounds allocate
+    /// nothing.
+    pub fn local_lrs_into(&self, round: usize, q: usize, out: &mut [f32]) {
         let base = (round - 1) * q;
-        (1..=count).map(|k| self.lr(base + k)).collect()
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = self.lr(base + k + 1);
+        }
     }
 
     /// Learning rate for the communication update of round `round`

@@ -19,6 +19,63 @@
 
 use super::{axpy, l2_dist_sq, row_mean};
 
+/// Samples per cache tile of the blocked forward/backward kernels.  Inside a
+/// tile every `w1` row is loaded once and applied to all tile samples, so the
+/// weight matrix stays hot while the inner strides are all 1.  The value only
+/// moves work between loop levels — per-element f64 accumulation order is
+/// sample-ascending regardless, so results are bitwise-independent of it.
+pub const BATCH_BLOCK: usize = 16;
+
+/// Caller-owned scratch for the `_into` kernels (§Perf in DESIGN.md).
+///
+/// Owns every buffer the forward/backward/combine kernels need between the
+/// f32 inputs and f32 outputs: the f64 hidden slab for one batch tile, the
+/// f64 gradient and combine accumulators, and an f32 gradient staging buffer.
+/// Buffers grow on demand ([`Workspace::ensure`]) and are NEVER shrunk, so a
+/// workspace reused across rounds of one model performs zero allocations
+/// after its first use — the steady-state contract the allocation-counting
+/// test pins.  One workspace serves one thread; the threaded fan-out gives
+/// each worker its own.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// f64 hidden activations, one batch tile: `[BATCH_BLOCK, h]`.
+    hid: Vec<f64>,
+    /// f64 ∂loss/∂hidden for the tile: `[BATCH_BLOCK, h]`.
+    dhid: Vec<f64>,
+    /// f64 logits for the tile: `[BATCH_BLOCK]`.
+    z: Vec<f64>,
+    /// f64 gradient accumulator: `[p]`.
+    grad: Vec<f64>,
+    /// f64 combine accumulator: `[p]`.
+    acc: Vec<f64>,
+    /// f32 gradient staging for update kernels: `[p]`.
+    gbuf: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Grow every buffer to `model`'s sizes (no-op once sized — buffers only
+    /// ever grow, so alternating models reuses the larger allocation).
+    pub fn ensure(&mut self, model: &NativeModel) {
+        let (h, p) = (model.h, model.p());
+        grow(&mut self.hid, BATCH_BLOCK * h);
+        grow(&mut self.dhid, BATCH_BLOCK * h);
+        grow(&mut self.z, BATCH_BLOCK);
+        grow(&mut self.grad, p);
+        grow(&mut self.acc, p);
+        grow(&mut self.gbuf, p);
+    }
+}
+
+fn grow<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() < len {
+        v.resize(len, T::default());
+    }
+}
+
 /// Model dimensions (matches `ModelShapes` minus the artifact-bound fields).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct NativeModel {
@@ -54,88 +111,212 @@ impl NativeModel {
         theta
     }
 
-    /// Forward pass: logits for each of the `n` rows of `x` (row-major n×d).
-    pub fn logits(&self, theta: &[f32], x: &[f32]) -> Vec<f64> {
+    /// Hidden activations + logits for one batch tile (`blk <= BATCH_BLOCK`
+    /// rows of `x`): `hid[s,k] = tanh(b1_k + Σ_j x[s,j]·w1[j,k])`,
+    /// `z[s] = b2 + Σ_k hid[s,k]·w2[k]`.
+    ///
+    /// Tiled j-outer / k-inner: every inner stride is 1 (`w1[j*h..]` rows,
+    /// `hid[s*h..]` rows) and each `w1` row is loaded once per tile instead
+    /// of once per sample.  Per-(s,k) f64 accumulation is still j-ascending
+    /// and the z dot is k-ascending, so the numbers are bitwise-identical to
+    /// the pre-tiling per-sample kernel.
+    fn forward_tile(&self, theta: &[f32], x: &[f32], blk: usize, hid: &mut [f64], z: &mut [f64]) {
         let (d, h) = (self.d, self.h);
+        debug_assert!(blk <= BATCH_BLOCK && x.len() == blk * d);
+        let w1 = &theta[..d * h];
+        let b1 = &theta[d * h..d * h + h];
+        let w2 = &theta[d * h + h..d * h + 2 * h];
+        let b2 = theta[d * h + 2 * h] as f64;
+        for s in 0..blk {
+            let hs = &mut hid[s * h..(s + 1) * h];
+            for (hk, &bk) in hs.iter_mut().zip(b1) {
+                *hk = bk as f64;
+            }
+        }
+        for j in 0..d {
+            let w1j = &w1[j * h..(j + 1) * h];
+            for s in 0..blk {
+                let xj = x[s * d + j] as f64;
+                let hs = &mut hid[s * h..(s + 1) * h];
+                for (hk, &wk) in hs.iter_mut().zip(w1j) {
+                    *hk += xj * wk as f64;
+                }
+            }
+        }
+        for s in 0..blk {
+            let hs = &mut hid[s * h..(s + 1) * h];
+            let mut acc = b2;
+            for (hk, &wk) in hs.iter_mut().zip(w2) {
+                *hk = hk.tanh();
+                acc += *hk * wk as f64;
+            }
+            z[s] = acc;
+        }
+    }
+
+    /// Forward pass into a caller buffer: logits for each of the `n` rows of
+    /// `x` (row-major n×d) written to `out[n]`.
+    pub fn logits_into(&self, theta: &[f32], x: &[f32], out: &mut [f64], ws: &mut Workspace) {
+        let d = self.d;
         assert_eq!(theta.len(), self.p());
         let n = x.len() / d;
         assert_eq!(x.len(), n * d);
-        let w1 = &theta[..d * h];
-        let b1 = &theta[d * h..d * h + h];
-        let w2 = &theta[d * h + h..d * h + 2 * h];
-        let b2 = theta[d * h + 2 * h] as f64;
-        let mut out = Vec::with_capacity(n);
-        let mut hid = vec![0.0f64; h];
-        for i in 0..n {
-            let row = &x[i * d..(i + 1) * d];
-            for (k, hk) in hid.iter_mut().enumerate() {
-                let mut acc = b1[k] as f64;
-                // w1 is [d, h] row-major: w1[j*h + k]
-                for (j, &xj) in row.iter().enumerate() {
-                    acc += xj as f64 * w1[j * h + k] as f64;
-                }
-                *hk = acc.tanh();
-            }
-            let mut z = b2;
-            for (k, &hk) in hid.iter().enumerate() {
-                z += hk * w2[k] as f64;
-            }
-            out.push(z);
+        assert_eq!(out.len(), n);
+        ws.ensure(self);
+        let Workspace { hid, z, .. } = ws;
+        let mut i0 = 0;
+        while i0 < n {
+            let blk = (n - i0).min(BATCH_BLOCK);
+            self.forward_tile(theta, &x[i0 * d..(i0 + blk) * d], blk, hid, z);
+            out[i0..i0 + blk].copy_from_slice(&z[..blk]);
+            i0 += blk;
         }
+    }
+
+    /// Forward pass: logits for each of the `n` rows of `x` (row-major n×d).
+    /// Allocating wrapper over [`Self::logits_into`].
+    pub fn logits(&self, theta: &[f32], x: &[f32]) -> Vec<f64> {
+        let mut out = vec![0.0f64; x.len() / self.d];
+        self.logits_into(theta, x, &mut out, &mut Workspace::new());
         out
     }
 
-    /// Mean logistic loss (labels in {0,1}) and flat gradient — the
-    /// `grad_step` artifact's twin.
-    pub fn loss_and_grad(&self, theta: &[f32], x: &[f32], y: &[f32]) -> (f64, Vec<f32>) {
-        let (d, h) = (self.d, self.h);
+    /// The blocked forward+backward kernel behind `loss_and_grad[_into]` and
+    /// `local_steps[_into]`: mean logistic loss returned, flat f32 gradient
+    /// written to `grad_out[p]`.  The scratch slices come from a
+    /// [`Workspace`] (callers destructure it so `local_steps_into` can also
+    /// hold the f32 staging buffer).
+    ///
+    /// Per-element accumulation order across samples is ascending exactly as
+    /// in the pre-tiling kernel (within a sample each gradient element gets
+    /// one contribution), so outputs are bitwise-identical to it.
+    #[allow(clippy::too_many_arguments)]
+    fn loss_grad_kernel(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        y: &[f32],
+        grad_out: &mut [f32],
+        hid: &mut [f64],
+        dhid: &mut [f64],
+        z: &mut [f64],
+        gacc: &mut [f64],
+    ) -> f64 {
+        let (d, h, p) = (self.d, self.h, self.p());
         let n = y.len();
         assert_eq!(x.len(), n * d);
-        let w1 = &theta[..d * h];
-        let b1 = &theta[d * h..d * h + h];
+        assert_eq!(theta.len(), p);
+        assert_eq!(grad_out.len(), p);
         let w2 = &theta[d * h + h..d * h + 2 * h];
-        let b2 = theta[d * h + 2 * h] as f64;
-
-        let mut g = vec![0.0f64; self.p()];
-        let mut loss = 0.0f64;
-        let mut hid = vec![0.0f64; h];
-        let inv_n = 1.0 / n as f64;
-
-        for i in 0..n {
-            let row = &x[i * d..(i + 1) * d];
-            for (k, hk) in hid.iter_mut().enumerate() {
-                let mut acc = b1[k] as f64;
-                for (j, &xj) in row.iter().enumerate() {
-                    acc += xj as f64 * w1[j * h + k] as f64;
-                }
-                *hk = acc.tanh();
-            }
-            let mut z = b2;
-            for (k, &hk) in hid.iter().enumerate() {
-                z += hk * w2[k] as f64;
-            }
-            let yi = y[i] as f64;
-            // loss: log(1 + e^z) - y z, numerically stable
-            loss += if z > 0.0 { z + (-z).exp().ln_1p() } else { z.exp().ln_1p() } - yi * z;
-            // dL/dz = sigmoid(z) - y
-            let dz = 1.0 / (1.0 + (-z).exp()) - yi;
-            let gz = dz * inv_n;
-            // grads
-            g[d * h + 2 * h] += gz; // b2
-            for k in 0..h {
-                g[d * h + h + k] += gz * hid[k]; // w2
-                let dh = gz * w2[k] as f64 * (1.0 - hid[k] * hid[k]);
-                g[d * h + k] += dh; // b1
-                for (j, &xj) in row.iter().enumerate() {
-                    g[j * h + k] += dh * xj as f64;
-                }
-            }
+        let gacc = &mut gacc[..p];
+        for g in gacc.iter_mut() {
+            *g = 0.0;
         }
-        (loss * inv_n, g.into_iter().map(|v| v as f32).collect())
+        let inv_n = 1.0 / n as f64;
+        let mut loss = 0.0f64;
+        let mut i0 = 0;
+        while i0 < n {
+            let blk = (n - i0).min(BATCH_BLOCK);
+            let xb = &x[i0 * d..(i0 + blk) * d];
+            self.forward_tile(theta, xb, blk, hid, z);
+            for s in 0..blk {
+                let zs = z[s];
+                let yi = y[i0 + s] as f64;
+                // loss: log(1 + e^z) - y z, numerically stable
+                loss +=
+                    if zs > 0.0 { zs + (-zs).exp().ln_1p() } else { zs.exp().ln_1p() } - yi * zs;
+                // dL/dz = sigmoid(z) - y, pre-scaled by 1/n
+                let gz = (1.0 / (1.0 + (-zs).exp()) - yi) * inv_n;
+                gacc[d * h + 2 * h] += gz; // b2
+                let hs = &hid[s * h..(s + 1) * h];
+                let ds = &mut dhid[s * h..(s + 1) * h];
+                for (((dk, &hk), &wk), gw2) in
+                    ds.iter_mut().zip(hs).zip(w2).zip(&mut gacc[d * h + h..d * h + 2 * h])
+                {
+                    *gw2 += gz * hk; // w2
+                    *dk = gz * wk as f64 * (1.0 - hk * hk);
+                }
+                for (gb1, &dk) in gacc[d * h..d * h + h].iter_mut().zip(&*ds) {
+                    *gb1 += dk; // b1
+                }
+            }
+            // w1 gradient, tiled like the forward pass: j-outer so each
+            // `gacc` row streams once per tile with unit stride.
+            for j in 0..d {
+                let gj = &mut gacc[j * h..(j + 1) * h];
+                for s in 0..blk {
+                    let xj = xb[s * d + j] as f64;
+                    let ds = &dhid[s * h..(s + 1) * h];
+                    for (gk, &dk) in gj.iter_mut().zip(ds) {
+                        *gk += dk * xj;
+                    }
+                }
+            }
+            i0 += blk;
+        }
+        for (o, &g) in grad_out.iter_mut().zip(&*gacc) {
+            *o = g as f32;
+        }
+        loss * inv_n
+    }
+
+    /// Mean logistic loss (labels in {0,1}); flat gradient written to
+    /// `grad_out[p]` — the zero-allocation twin of [`Self::loss_and_grad`].
+    pub fn loss_and_grad_into(
+        &self,
+        theta: &[f32],
+        x: &[f32],
+        y: &[f32],
+        grad_out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        ws.ensure(self);
+        let Workspace { hid, dhid, z, grad, .. } = ws;
+        self.loss_grad_kernel(theta, x, y, grad_out, hid, dhid, z, grad)
+    }
+
+    /// Mean logistic loss (labels in {0,1}) and flat gradient — the
+    /// `grad_step` artifact's twin.  Allocating wrapper over
+    /// [`Self::loss_and_grad_into`].
+    pub fn loss_and_grad(&self, theta: &[f32], x: &[f32], y: &[f32]) -> (f64, Vec<f32>) {
+        let mut grad = vec![0.0f32; self.p()];
+        let loss = self.loss_and_grad_into(theta, x, y, &mut grad, &mut Workspace::new());
+        (loss, grad)
+    }
+
+    /// `count` eq.-4 SGD steps on pre-sampled batches, per-step losses
+    /// written to `losses[count]` — the zero-allocation `local_steps` twin.
+    pub fn local_steps_into(
+        &self,
+        theta: &mut [f32],
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+        losses: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let count = lrs.len();
+        assert_eq!(losses.len(), count);
+        if count == 0 {
+            return;
+        }
+        let m = by.len() / count;
+        assert_eq!(bx.len(), count * m * self.d);
+        ws.ensure(self);
+        let p = self.p();
+        let Workspace { hid, dhid, z, grad, gbuf, .. } = ws;
+        let gbuf = &mut gbuf[..p];
+        for (qi, (&lr, loss)) in lrs.iter().zip(losses.iter_mut()).enumerate() {
+            let x = &bx[qi * m * self.d..(qi + 1) * m * self.d];
+            let yb = &by[qi * m..(qi + 1) * m];
+            *loss = self.loss_grad_kernel(theta, x, yb, gbuf, hid, dhid, z, grad);
+            axpy(theta, -lr, gbuf);
+        }
     }
 
     /// `count` eq.-4 SGD steps on pre-sampled batches — `local_steps` twin.
     /// `bx` is `[count, m, d]`, `by` `[count, m]`, `lrs` `[count]`.
+    /// Allocating wrapper over [`Self::local_steps_into`].
     pub fn local_steps(
         &self,
         theta: &mut Vec<f32>,
@@ -143,38 +324,85 @@ impl NativeModel {
         by: &[f32],
         lrs: &[f32],
     ) -> Vec<f64> {
-        let count = lrs.len();
-        if count == 0 {
-            return Vec::new();
-        }
-        let m = by.len() / count;
-        assert_eq!(bx.len(), count * m * self.d);
-        let mut losses = Vec::with_capacity(count);
-        for qi in 0..count {
-            let x = &bx[qi * m * self.d..(qi + 1) * m * self.d];
-            let yb = &by[qi * m..(qi + 1) * m];
-            let (loss, grad) = self.loss_and_grad(theta, x, yb);
-            axpy(theta, -lrs[qi], &grad);
-            losses.push(loss);
-        }
+        let mut losses = vec![0.0f64; lrs.len()];
+        self.local_steps_into(theta, bx, by, lrs, &mut losses, &mut Workspace::new());
         losses
     }
 
-    /// `Σ_j w_j θ_j` over stacked `thetas` (n×p) — `combine` twin.
-    pub fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Vec<f32> {
+    /// Dense combine into a caller buffer: `Σ_j w_j θ_j` over stacked
+    /// `thetas` (n×p), skipping zero weights.  The skip makes the dense loop
+    /// visit exactly the nonzero entries in ascending-j order — the same
+    /// visit order as [`Self::combine_sparse_into`], which is why the two
+    /// are bitwise-identical.
+    pub fn combine_into(
+        &self,
+        wrow: &[f32],
+        thetas: &[f32],
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) {
         let p = self.p();
         let n = wrow.len();
         assert_eq!(thetas.len(), n * p);
-        let mut out = vec![0.0f64; p];
+        assert_eq!(out.len(), p);
+        ws.ensure(self);
+        let acc = &mut ws.acc[..p];
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
         for (j, &wj) in wrow.iter().enumerate() {
             if wj == 0.0 {
                 continue;
             }
-            for (o, &t) in out.iter_mut().zip(&thetas[j * p..(j + 1) * p]) {
-                *o += wj as f64 * t as f64;
+            for (a, &t) in acc.iter_mut().zip(&thetas[j * p..(j + 1) * p]) {
+                *a += wj as f64 * t as f64;
             }
         }
-        out.into_iter().map(|v| v as f32).collect()
+        for (o, &a) in out.iter_mut().zip(&*acc) {
+            *o = a as f32;
+        }
+    }
+
+    /// Degree-sparse combine into a caller buffer: `Σ_k val[k]·θ_{idx[k]}`
+    /// over the `(neighbor, weight)` pairs of one mixing-matrix row, `idx`
+    /// ascending and nonzeros only (`graph::schedule::NetView::sparse_row` /
+    /// `mixing::SparseW`).  Visits the same nonzero entries in the same
+    /// order as the zero-skipping dense loop, so the result is
+    /// bitwise-identical to [`Self::combine_into`] while the per-node cost
+    /// drops from O(n·p) to O(deg·p).
+    pub fn combine_sparse_into(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        thetas: &[f32],
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        let p = self.p();
+        assert_eq!(idx.len(), val.len());
+        assert_eq!(out.len(), p);
+        ws.ensure(self);
+        let acc = &mut ws.acc[..p];
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        for (&j, &wj) in idx.iter().zip(val) {
+            let j = j as usize;
+            for (a, &t) in acc.iter_mut().zip(&thetas[j * p..(j + 1) * p]) {
+                *a += wj as f64 * t as f64;
+            }
+        }
+        for (o, &a) in out.iter_mut().zip(&*acc) {
+            *o = a as f32;
+        }
+    }
+
+    /// `Σ_j w_j θ_j` over stacked `thetas` (n×p) — `combine` twin.
+    /// Allocating wrapper over [`Self::combine_into`].
+    pub fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.p()];
+        self.combine_into(wrow, thetas, &mut out, &mut Workspace::new());
+        out
     }
 
     /// Node `i`'s eq.-2 update given the whole stacked Θ: `(W Θ)_i − lr ∇g_i`
@@ -219,6 +447,65 @@ impl NativeModel {
         axpy(&mut y_next, 1.0, &grad);
         axpy(&mut y_next, -1.0, g_i);
         (t_next, y_next, grad, loss)
+    }
+
+    /// Eq.-2 node update over a degree-sparse W row, written into `out[p]`;
+    /// returns the node loss.  Bitwise-identical to [`Self::dsgd_node`] on
+    /// the dense row whose nonzeros are `(idx, val)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgd_node_into(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        theta: &[f32],
+        theta_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        self.combine_sparse_into(idx, val, theta, out, ws);
+        let p = self.p();
+        let Workspace { hid, dhid, z, grad, gbuf, .. } = ws;
+        let gbuf = &mut gbuf[..p];
+        let loss = self.loss_grad_kernel(theta_i, bx_i, by_i, gbuf, hid, dhid, z, grad);
+        axpy(out, -lr, gbuf);
+        loss
+    }
+
+    /// Eq.-3 node update over a degree-sparse W row, written into
+    /// `t_out`/`y_out`/`g_out` (each `[p]`, disjoint); returns the node
+    /// loss.  Bitwise-identical to [`Self::dsgt_node`] on the dense row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgt_node_into(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        theta: &[f32],
+        y_tr: &[f32],
+        y_i: &[f32],
+        g_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        t_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        self.combine_sparse_into(idx, val, theta, t_out, ws);
+        axpy(t_out, -lr, y_i);
+        let loss = {
+            let p = self.p();
+            let Workspace { hid, dhid, z, grad, .. } = &mut *ws;
+            debug_assert_eq!(g_out.len(), p);
+            self.loss_grad_kernel(t_out, bx_i, by_i, g_out, hid, dhid, z, grad)
+        };
+        self.combine_sparse_into(idx, val, y_tr, y_out, ws);
+        axpy(y_out, 1.0, g_out);
+        axpy(y_out, -1.0, g_i);
+        loss
     }
 
     /// Node `i`'s eval partial: (loss, grad, correct, total) on its shard.
@@ -543,6 +830,118 @@ mod tests {
         let (_, acc, _, cons) = m.eval_full(&theta, &[shard.clone(), shard.clone(), shard]);
         assert!(cons < 1e-12, "{cons}");
         assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn into_kernels_bitwise_equal_allocating_wrappers_property() {
+        // one Workspace reused across every case (different d/h/n shapes)
+        // exercises the grow-only buffer contract as well
+        let mut ws = Workspace::new();
+        testutil::check("into == wrappers", 12, 11, |rng| {
+            let d = rng.range(1, 20);
+            let h = rng.range(1, 12);
+            let m = NativeModel::new(d, h);
+            let n = rng.range(1, 3 * BATCH_BLOCK); // crosses tile boundaries
+            let theta = rand_vec(rng, m.p(), 0.3);
+            let x = rand_vec(rng, n * d, 1.0);
+            let y = rand_labels(rng, n);
+
+            let a = m.logits(&theta, &x);
+            let mut b = vec![0.0f64; n];
+            m.logits_into(&theta, &x, &mut b, &mut ws);
+            if a != b {
+                return Err("logits_into differs from logits".into());
+            }
+
+            let (l1, g1) = m.loss_and_grad(&theta, &x, &y);
+            let mut g2 = vec![0.0f32; m.p()];
+            let l2 = m.loss_and_grad_into(&theta, &x, &y, &mut g2, &mut ws);
+            if l1.to_bits() != l2.to_bits() || g1 != g2 {
+                return Err("loss_and_grad_into differs from loss_and_grad".into());
+            }
+
+            let q = rng.range(1, 4);
+            let bx = rand_vec(rng, q * n * d, 1.0);
+            let by = rand_labels(rng, q * n);
+            let lrs: Vec<f32> = (1..=q).map(|r| 0.05 / (r as f32).sqrt()).collect();
+            let mut ta = theta.clone();
+            let la = m.local_steps(&mut ta, &bx, &by, &lrs);
+            let mut tb = theta.clone();
+            let mut lb = vec![0.0f64; q];
+            m.local_steps_into(&mut tb, &bx, &by, &lrs, &mut lb, &mut ws);
+            if ta != tb || la != lb {
+                return Err("local_steps_into differs from local_steps".into());
+            }
+
+            let nn = rng.range(1, 8);
+            let thetas = rand_vec(rng, nn * m.p(), 0.5);
+            let wrow: Vec<f32> =
+                (0..nn).map(|_| if rng.bernoulli(0.6) { rng.next_f32() } else { 0.0 }).collect();
+            let dense = m.combine(&wrow, &thetas);
+            let mut out = vec![0.0f32; m.p()];
+            m.combine_into(&wrow, &thetas, &mut out, &mut ws);
+            if dense != out {
+                return Err("combine_into differs from combine".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_node_updates_bitwise_equal_dense_property() {
+        testutil::check("sparse node == dense node", 12, 17, |rng| {
+            let m = model();
+            let p = m.p();
+            let n = rng.range(3, 10);
+            let batch = 5;
+            let g = crate::graph::Graph::build(&crate::graph::Topology::Ring, n, rng)
+                .map_err(|e| e.to_string())?;
+            let w =
+                crate::mixing::to_f32(&crate::mixing::build(&g, crate::mixing::Scheme::Metropolis));
+            let theta = rand_vec(rng, n * p, 0.3);
+            let y_tr = rand_vec(rng, n * p, 0.1);
+            let g_old = rand_vec(rng, n * p, 0.1);
+            let bx = rand_vec(rng, n * batch * m.d, 1.0);
+            let by = rand_labels(rng, n * batch);
+            let mut ws = Workspace::new();
+            for i in 0..n {
+                let wrow = &w[i * n..(i + 1) * n];
+                let mut idx = Vec::new();
+                let mut val = Vec::new();
+                for (j, &wj) in wrow.iter().enumerate() {
+                    if wj != 0.0 {
+                        idx.push(j as u32);
+                        val.push(wj);
+                    }
+                }
+                let (bx_i, by_i) =
+                    (&bx[i * batch * m.d..(i + 1) * batch * m.d], &by[i * batch..(i + 1) * batch]);
+                let theta_i = &theta[i * p..(i + 1) * p];
+
+                let (td, ld) = m.dsgd_node(wrow, &theta, theta_i, bx_i, by_i, 0.05);
+                let mut ts = vec![0.0f32; p];
+                let ls = m.dsgd_node_into(
+                    &idx, &val, &theta, theta_i, bx_i, by_i, 0.05, &mut ts, &mut ws,
+                );
+                if td != ts || ld.to_bits() != ls.to_bits() {
+                    return Err(format!("dsgd node {i} differs"));
+                }
+
+                let (y_i, g_i) = (&y_tr[i * p..(i + 1) * p], &g_old[i * p..(i + 1) * p]);
+                let (t1, y1, g1, l1) =
+                    m.dsgt_node(wrow, &theta, &y_tr, y_i, g_i, bx_i, by_i, 0.05);
+                let (mut t2, mut y2, mut g2) =
+                    (vec![0.0f32; p], vec![0.0f32; p], vec![0.0f32; p]);
+                let l2 = m.dsgt_node_into(
+                    &idx, &val, &theta, &y_tr, y_i, g_i, bx_i, by_i, 0.05, &mut t2, &mut y2,
+                    &mut g2, &mut ws,
+                );
+                if t1 != t2 || y1 != y2 || g1 != g2 || l1.to_bits() != l2.to_bits() {
+                    return Err(format!("dsgt node {i} differs"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //! the round's network view from the shared `(seed, round)`-keyed
 //! [`NetworkSchedule`], broadcasts θ (and ϑ for DSGT) to that round's
 //! *active* neighbors, gathers the neighborhood, applies the eq.-2/3 update
-//! through the `combine` kernel with the round's `W` row, and advances its
+//! through the degree-sparse `combine` kernel with the round's `(neighbor,
+//! weight)` row (bitwise-equal to the dense row, §Perf), and advances its
 //! causal clock.  Channels are wired over the schedule's union graph (a
 //! superset of any round's edges), so a time-varying plan only changes who
 //! a node talks to, never the plumbing.  A node that the churn plan takes
@@ -101,7 +102,8 @@ impl NodeTask {
             net_key: None,
             online_now: true,
             nbrs: Vec::new(),
-            wrow: Vec::new(),
+            widx: Vec::new(),
+            wval: Vec::new(),
         };
         eng.run(&mut driver)?;
         Ok(driver.theta)
@@ -127,12 +129,17 @@ struct NodeDriver<'a> {
     by: Vec<f32>,
     stacked: Vec<f32>,
     /// Cached slice of the current round's network view (own online flag,
-    /// active neighbors, f32 W row), refreshed when the schedule's view key
-    /// changes — built once for static plans, once per epoch for rewire.
+    /// active neighbors, degree-sparse W row), refreshed when the schedule's
+    /// view key changes — built once for static plans, once per epoch for
+    /// rewire.
     net_key: Option<u64>,
     online_now: bool,
     nbrs: Vec<usize>,
-    wrow: Vec<f32>,
+    /// This round's gossip row as `(neighbor, weight)` pairs, ascending,
+    /// nonzeros only (self included) — combining over it is bitwise-equal to
+    /// the dense row while touching only `deg + 1` stack rows.
+    widx: Vec<u32>,
+    wval: Vec<f32>,
 }
 
 impl NodeDriver<'_> {
@@ -147,7 +154,9 @@ impl NodeDriver<'_> {
         let id = self.task.id;
         self.online_now = view.online[id];
         self.nbrs = view.active_neighbors(id);
-        self.wrow = view.w.row(id).iter().map(|&x| x as f32).collect();
+        let (widx, wval) = view.sparse_row(id);
+        self.widx = widx;
+        self.wval = wval;
         self.net_key = Some(key);
         Ok(())
     }
@@ -200,25 +209,27 @@ impl engine::Driver for NodeDriver<'_> {
             None
         };
 
+        // The sparse combine reads only the rows named in `widx` — self plus
+        // this round's active neighbors, every one of which is overwritten
+        // below before combining — so the stack is never re-zeroed; stale
+        // rows from earlier rounds are unreachable by construction.
         let got = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Params)?;
-        self.stacked.iter_mut().for_each(|v| *v = 0.0);
         self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.theta);
         for (from, pl) in &got {
             self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
         }
-        let mixed = self.compute.combine(&self.wrow, &self.stacked)?;
+        let mixed = self.compute.combine_sparse(&self.widx, &self.wval, &self.stacked)?;
 
         // ---- eq. 2 / eq. 3 update ----
         self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
         if self.task.use_tracker {
             let got_y = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Tracker)?;
-            self.stacked.iter_mut().for_each(|v| *v = 0.0);
             self.stacked[id * p..(id + 1) * p]
                 .copy_from_slice(tracker_payload.as_ref().unwrap());
             for (from, pl) in &got_y {
                 self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
             }
-            let mixed_y = self.compute.combine(&self.wrow, &self.stacked)?;
+            let mixed_y = self.compute.combine_sparse(&self.widx, &self.wval, &self.stacked)?;
             // θ^{r+1} = Σ W θ − α ϑ_i (own tracker)
             let mut theta_next = mixed;
             axpy(&mut theta_next, -lr, &self.y_tr);

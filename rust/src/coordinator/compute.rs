@@ -6,10 +6,20 @@
 //! pure-rust twin (`algo::native`) for shape-free sweeps, property tests,
 //! and as the numerical oracle the integration tests compare PJRT against.
 
-use crate::algo::native::NativeModel;
+use crate::algo::native::{NativeModel, Workspace};
 use crate::data::Shard;
+use crate::mixing::SparseW;
 use crate::runtime::Engine;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
+
+/// One communication round's mixing matrix in both forms the backends
+/// consume: row-major dense `[n, n]` (the AOT artifacts' input) and the
+/// degree-sparse CSR rows (what the native kernels gossip over).  The two
+/// must describe the same matrix; drivers build both once per network view.
+pub struct MixView<'a> {
+    pub dense: &'a [f32],
+    pub sparse: &'a SparseW,
+}
 
 /// Artifact-level compute operations over flat f32 buffers.
 pub trait Compute {
@@ -40,6 +50,15 @@ pub trait Compute {
     ) -> Result<(Vec<f32>, Vec<f64>)> {
         let (_, _, p) = self.dims();
         let n = big_theta.len() / p;
+        if n == 0 {
+            // guard the n-divisions below: silently proceeding would panic
+            // on divide-by-zero far from the actual mistake
+            bail!(
+                "local_steps_all on an empty Θ stack (theta len {} < p = {p}); \
+                 every trainer owns at least one stack row",
+                big_theta.len()
+            );
+        }
         let (bxn, byn) = (bx.len() / n, by.len() / n);
         let mut theta_out = Vec::with_capacity(big_theta.len());
         let mut losses = Vec::new();
@@ -56,12 +75,69 @@ pub trait Compute {
         Ok((theta_out, losses))
     }
 
+    /// [`Compute::local_steps_all`] into caller-owned slabs: θ′ →
+    /// `theta_out[n·p]`, per-step losses → `losses[n·lrs.len()]`.  Default:
+    /// delegate to the allocating op and copy; zero-allocation backends
+    /// override (§Perf).
+    fn local_steps_all_into(
+        &self,
+        big_theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (t, l) = self.local_steps_all(big_theta, bx, by, lrs)?;
+        theta_out.copy_from_slice(&t);
+        losses.copy_from_slice(&l);
+        Ok(())
+    }
+
     /// One node's gossip combine `Σ_j w_j θ_j` over stacked `[n,p]` params.
     fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Result<Vec<f32>>;
+
+    /// One node's gossip combine over its degree-sparse W row: `(idx, val)`
+    /// pairs, ascending, nonzeros only — bitwise-equal to [`Compute::combine`]
+    /// on the dense row with those nonzeros.  Default: scatter the row dense
+    /// and call `combine` (artifact backends take dense W); the native
+    /// backend overrides with the O(deg·p) kernel.
+    fn combine_sparse(&self, idx: &[u32], val: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
+        let (_, _, p) = self.dims();
+        ensure!(p > 0 && thetas.len() % p == 0, "thetas not a multiple of p");
+        let n = thetas.len() / p;
+        let mut wrow = vec![0.0f32; n];
+        for (&j, &v) in idx.iter().zip(val) {
+            wrow[j as usize] = v;
+        }
+        self.combine(&wrow, thetas)
+    }
 
     /// Whole-network eq. 2 round → (Θ′ `[n,p]`, losses `[n]`).
     fn dsgd_round(&self, w: &[f32], theta: &[f32], bx: &[f32], by: &[f32], lr: f32)
         -> Result<(Vec<f32>, Vec<f64>)>;
+
+    /// [`Compute::dsgd_round`] into caller-owned slabs (θ′ → `theta_out`,
+    /// per-node losses → `losses[n]`), taking the round's W in both dense
+    /// and sparse form.  Default: delegate to the dense allocating op and
+    /// copy; the native backend overrides with the degree-sparse
+    /// zero-allocation path.
+    #[allow(clippy::too_many_arguments)]
+    fn dsgd_round_into(
+        &self,
+        w: &MixView,
+        theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (t, l) = self.dsgd_round(w.dense, theta, bx, by, lr)?;
+        theta_out.copy_from_slice(&t);
+        losses.copy_from_slice(&l);
+        Ok(())
+    }
 
     /// Whole-network eq. 3 round → (Θ′, Y′, G′, losses).
     #[allow(clippy::too_many_arguments)]
@@ -75,6 +151,32 @@ pub trait Compute {
         by: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>)>;
+
+    /// [`Compute::dsgt_round`] into caller-owned slabs (Θ′/Y′/G′ →
+    /// `[n·p]` each, per-node losses → `losses[n]`).  Default: delegate to
+    /// the dense allocating op and copy; overridden by the native backend.
+    #[allow(clippy::too_many_arguments)]
+    fn dsgt_round_into(
+        &self,
+        w: &MixView,
+        theta: &[f32],
+        y_tr: &[f32],
+        g_old: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (t, y, g, l) = self.dsgt_round(w.dense, theta, y_tr, g_old, bx, by, lr)?;
+        theta_out.copy_from_slice(&t);
+        y_out.copy_from_slice(&y);
+        g_out.copy_from_slice(&g);
+        losses.copy_from_slice(&l);
+        Ok(())
+    }
 
     /// Full-shard metrics → (loss, accuracy, stationarity, consensus).
     fn eval_full(&self, theta: &[f32], shards: &[Shard]) -> Result<(f64, f64, f64, f64)>;
@@ -196,6 +298,19 @@ impl Compute for PjrtCompute {
         Ok((theta_next, y_next, g_new, losses))
     }
 
+    /// Full-shard metrics through the `eval_full` artifact.
+    ///
+    /// **Cycle-padding bias**: the artifact is specialized to `s.shard` rows
+    /// per node, so a shard with `sh.n < s.shard` rows is cycle-padded
+    /// (row `i % sh.n`).  When `s.shard % sh.n != 0`, the first
+    /// `s.shard % sh.n` rows appear one extra time, so their loss/accuracy
+    /// contributions are over-weighted: the artifact reports the mean over
+    /// the *padded* rows, not the true shard mean.  This is the deliberate
+    /// price of fixed artifact shapes; `NativeCompute::eval_full` evaluates
+    /// the exact shards and is the unbiased reference oracle (the
+    /// `cycle_padding_bias_*` test below demonstrates the bias arithmetic
+    /// and the oracle's exactness; pjrt-vs-native comparisons use full-size
+    /// shards).
     fn eval_full(&self, theta: &[f32], shards: &[Shard]) -> Result<(f64, f64, f64, f64)> {
         let s = self.engine.shapes();
         if shards.len() != s.n {
@@ -241,33 +356,64 @@ impl Compute for PjrtCompute {
 
 // -------------------------------------------------------------- native ----
 
-/// Deterministic parallel map over node indices: node `i`'s result is
-/// computed on whichever worker owns its chunk, then reassembled in index
-/// order.  Because every node's work reads shared inputs and produces an
-/// independent value, the output is bitwise-identical at every thread
-/// count — parallelism never reorders a floating-point reduction.
-fn par_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+/// Deterministic parallel fan-out over per-node tasks.  Each task carries
+/// its own disjoint `&mut` output views (rows of the caller's slabs), so
+/// workers write results **in place** — no `Vec<Option<T>>`
+/// collect-then-reassemble, no cross-thread reduction, and on the serial
+/// path (`threads <= 1`) no allocation at all: the task iterator is
+/// consumed directly.  Tasks are assigned to workers in contiguous index
+/// chunks; results are bitwise-independent of thread count because every
+/// task writes only through its own views.
+fn par_each<T, I, F>(threads: usize, tasks: I, f: F)
 where
     T: Send,
-    F: Fn(usize) -> T + Sync,
+    I: ExactSizeIterator<Item = T>,
+    F: Fn(usize, T) + Sync,
 {
+    let n = tasks.len();
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        for (i, t) in tasks.enumerate() {
+            f(i, t);
+        }
+        return;
     }
     let chunk = n.div_ceil(threads);
-    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
-    out.resize_with(n, || None);
+    let mut it = tasks;
+    let mut batches: Vec<Vec<T>> = Vec::with_capacity(threads);
+    loop {
+        let batch: Vec<T> = it.by_ref().take(chunk).collect();
+        if batch.is_empty() {
+            break;
+        }
+        batches.push(batch);
+    }
     std::thread::scope(|s| {
-        for (ti, slot) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
+        let f = &f;
+        for (bi, batch) in batches.into_iter().enumerate() {
+            let base = bi * chunk;
             s.spawn(move || {
-                for (k, o) in slot.iter_mut().enumerate() {
-                    *o = Some(f(ti * chunk + k));
+                for (k, t) in batch.into_iter().enumerate() {
+                    f(base + k, t);
                 }
             });
         }
     });
-    out.into_iter().map(|o| o.expect("par_map: every slot filled")).collect()
+}
+
+thread_local! {
+    /// Per-thread kernel workspace: allocated lazily on a worker's first
+    /// kernel call, then reused for every later call on that thread.  The
+    /// serial path runs on the caller's (long-lived) thread, so steady-state
+    /// rounds touch no allocator at all — the contract the
+    /// `alloc_free` integration test pins.  Threaded fan-out workers are
+    /// round-scoped, so they pay one O(p) workspace each per round (still
+    /// far below the former n·O(p) fresh-`Vec` traffic).
+    static KERNEL_WS: std::cell::RefCell<Workspace> = std::cell::RefCell::new(Workspace::new());
+}
+
+/// Run `f` with the calling thread's kernel workspace.
+fn with_ws<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    KERNEL_WS.with(|w| f(&mut w.borrow_mut()))
 }
 
 /// Pure-rust backend (oracle / sweeps). `q_local` bounds nothing — any
@@ -343,31 +489,64 @@ impl Compute for NativeCompute {
     ) -> Result<(Vec<f32>, Vec<f64>)> {
         let p = self.model.p();
         let nodes = big_theta.len() / p;
-        if nodes == 0 || lrs.is_empty() {
-            return Ok((big_theta.to_vec(), Vec::new()));
+        let mut theta_out = vec![0.0f32; big_theta.len()];
+        let mut losses = vec![0.0f64; nodes * lrs.len()];
+        self.local_steps_all_into(big_theta, bx, by, lrs, &mut theta_out, &mut losses)?;
+        Ok((theta_out, losses))
+    }
+
+    fn local_steps_all_into(
+        &self,
+        big_theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let p = self.model.p();
+        let nodes = big_theta.len() / p;
+        if nodes == 0 {
+            bail!(
+                "local_steps_all on an empty Θ stack (theta len {} < p = {p})",
+                big_theta.len()
+            );
+        }
+        ensure!(theta_out.len() == big_theta.len(), "theta_out size mismatch");
+        ensure!(losses.len() == nodes * lrs.len(), "losses slab size mismatch");
+        theta_out.copy_from_slice(big_theta);
+        if lrs.is_empty() {
+            return Ok(());
         }
         let (bxn, byn) = (bx.len() / nodes, by.len() / nodes);
-        let per = par_map(self.pool(nodes), nodes, |i| {
-            let mut t = big_theta[i * p..(i + 1) * p].to_vec();
-            let losses = self.model.local_steps(
-                &mut t,
-                &bx[i * bxn..(i + 1) * bxn],
-                &by[i * byn..(i + 1) * byn],
-                lrs,
-            );
-            (t, losses)
-        });
-        let mut theta_out = Vec::with_capacity(nodes * p);
-        let mut losses = Vec::with_capacity(nodes * lrs.len());
-        for (t, l) in per {
-            theta_out.extend_from_slice(&t);
-            losses.extend_from_slice(&l);
-        }
-        Ok((theta_out, losses))
+        let model = &self.model;
+        par_each(
+            self.pool(nodes),
+            theta_out.chunks_mut(p).zip(losses.chunks_mut(lrs.len())),
+            |i, (t, l)| {
+                with_ws(|ws| {
+                    model.local_steps_into(
+                        t,
+                        &bx[i * bxn..(i + 1) * bxn],
+                        &by[i * byn..(i + 1) * byn],
+                        lrs,
+                        l,
+                        ws,
+                    )
+                });
+            },
+        );
+        Ok(())
     }
 
     fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
         Ok(self.model.combine(wrow, thetas))
+    }
+
+    fn combine_sparse(&self, idx: &[u32], val: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.model.p()];
+        with_ws(|ws| self.model.combine_sparse_into(idx, val, thetas, &mut out, ws));
+        Ok(out)
     }
 
     fn dsgd_round(
@@ -378,24 +557,58 @@ impl Compute for NativeCompute {
         by: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f64>)> {
-        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
-        let per = par_map(self.pool(n), n, |i| {
-            self.model.dsgd_node(
-                &w[i * n..(i + 1) * n],
-                theta,
-                &theta[i * p..(i + 1) * p],
-                &bx[i * m * d..(i + 1) * m * d],
-                &by[i * m..(i + 1) * m],
-                lr,
-            )
-        });
-        let mut out = Vec::with_capacity(n * p);
-        let mut losses = Vec::with_capacity(n);
-        for (t, loss) in per {
-            out.extend_from_slice(&t);
-            losses.push(loss);
-        }
+        let (n, p) = (self.n, self.model.p());
+        let sparse = SparseW::from_dense(n, w);
+        let mut out = vec![0.0f32; n * p];
+        let mut losses = vec![0.0f64; n];
+        self.dsgd_round_into(
+            &MixView { dense: w, sparse: &sparse },
+            theta,
+            bx,
+            by,
+            lr,
+            &mut out,
+            &mut losses,
+        )?;
         Ok((out, losses))
+    }
+
+    fn dsgd_round_into(
+        &self,
+        w: &MixView,
+        theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
+        ensure!(w.sparse.n() == n, "sparse W is {}x, compute wants n={n}", w.sparse.n());
+        ensure!(theta_out.len() == n * p && losses.len() == n, "output slab size mismatch");
+        let model = &self.model;
+        let sparse = w.sparse;
+        par_each(
+            self.pool(n),
+            theta_out.chunks_mut(p).zip(losses.iter_mut()),
+            |i, (out, loss)| {
+                let (idx, val) = sparse.row(i);
+                *loss = with_ws(|ws| {
+                    model.dsgd_node_into(
+                        idx,
+                        val,
+                        theta,
+                        &theta[i * p..(i + 1) * p],
+                        &bx[i * m * d..(i + 1) * m * d],
+                        &by[i * m..(i + 1) * m],
+                        lr,
+                        out,
+                        ws,
+                    )
+                });
+            },
+        );
+        Ok(())
     }
 
     fn dsgt_round(
@@ -408,32 +621,82 @@ impl Compute for NativeCompute {
         by: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>)> {
-        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
-        // node i depends only on row i of Y/G plus shared Θ/Y — the whole
-        // eq.-3 round fans out per node with no cross-node ordering
-        let per = par_map(self.pool(n), n, |i| {
-            self.model.dsgt_node(
-                &w[i * n..(i + 1) * n],
-                theta,
-                y_tr,
-                &y_tr[i * p..(i + 1) * p],
-                &g_old[i * p..(i + 1) * p],
-                &bx[i * m * d..(i + 1) * m * d],
-                &by[i * m..(i + 1) * m],
-                lr,
-            )
-        });
-        let mut theta_next = Vec::with_capacity(n * p);
-        let mut y_out = Vec::with_capacity(n * p);
-        let mut g_new = Vec::with_capacity(n * p);
-        let mut losses = Vec::with_capacity(n);
-        for (t, y, g, loss) in per {
-            theta_next.extend_from_slice(&t);
-            y_out.extend_from_slice(&y);
-            g_new.extend_from_slice(&g);
-            losses.push(loss);
-        }
+        let (n, p) = (self.n, self.model.p());
+        let sparse = SparseW::from_dense(n, w);
+        let mut theta_next = vec![0.0f32; n * p];
+        let mut y_out = vec![0.0f32; n * p];
+        let mut g_new = vec![0.0f32; n * p];
+        let mut losses = vec![0.0f64; n];
+        self.dsgt_round_into(
+            &MixView { dense: w, sparse: &sparse },
+            theta,
+            y_tr,
+            g_old,
+            bx,
+            by,
+            lr,
+            &mut theta_next,
+            &mut y_out,
+            &mut g_new,
+            &mut losses,
+        )?;
         Ok((theta_next, y_out, g_new, losses))
+    }
+
+    fn dsgt_round_into(
+        &self,
+        w: &MixView,
+        theta: &[f32],
+        y_tr: &[f32],
+        g_old: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
+        ensure!(w.sparse.n() == n, "sparse W is {}x, compute wants n={n}", w.sparse.n());
+        ensure!(
+            theta_out.len() == n * p && y_out.len() == n * p && g_out.len() == n * p
+                && losses.len() == n,
+            "output slab size mismatch"
+        );
+        let model = &self.model;
+        let sparse = w.sparse;
+        // node i depends only on row i of Y/G plus shared Θ/Y — the whole
+        // eq.-3 round fans out per node, each writing its own slab rows
+        par_each(
+            self.pool(n),
+            theta_out
+                .chunks_mut(p)
+                .zip(y_out.chunks_mut(p))
+                .zip(g_out.chunks_mut(p))
+                .zip(losses.iter_mut()),
+            |i, (((t, y), g), loss)| {
+                let (idx, val) = sparse.row(i);
+                *loss = with_ws(|ws| {
+                    model.dsgt_node_into(
+                        idx,
+                        val,
+                        theta,
+                        y_tr,
+                        &y_tr[i * p..(i + 1) * p],
+                        &g_old[i * p..(i + 1) * p],
+                        &bx[i * m * d..(i + 1) * m * d],
+                        &by[i * m..(i + 1) * m],
+                        lr,
+                        t,
+                        y,
+                        g,
+                        ws,
+                    )
+                });
+            },
+        );
+        Ok(())
     }
 
     fn eval_full(&self, theta: &[f32], shards: &[Shard]) -> Result<(f64, f64, f64, f64)> {
@@ -442,10 +705,14 @@ impl Compute for NativeCompute {
         if theta.len() != n * p {
             bail!("eval_full: theta len {} vs {} shards x p={p}", theta.len(), n);
         }
-        // per-node partials in parallel; the reduction runs serially in node
-        // order inside eval_reduce → bitwise-equal to the serial twin
-        let per = par_map(self.pool(n), n, |i| {
-            self.model.eval_node(&theta[i * p..(i + 1) * p], &shards[i])
+        // per-node partials written into preassigned slots in parallel; the
+        // reduction runs serially in node order inside eval_reduce →
+        // bitwise-equal to the serial twin
+        let mut per: Vec<(f64, Vec<f32>, usize, usize)> = Vec::with_capacity(n);
+        per.resize_with(n, || (0.0, Vec::new(), 0, 0));
+        let model = &self.model;
+        par_each(self.pool(n), shards.iter().zip(per.iter_mut()), |i, (shard, slot)| {
+            *slot = model.eval_node(&theta[i * p..(i + 1) * p], shard);
         });
         Ok(self.model.eval_reduce(theta, &per))
     }
@@ -459,6 +726,192 @@ impl Compute for NativeCompute {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
+
+    #[test]
+    fn local_steps_all_bails_on_empty_theta() {
+        let c = NativeCompute::new(6, 4, 3, 5);
+        // the Compute-trait default and the native override must both bail
+        // loudly instead of dividing by n = 0 downstream
+        let err = c.local_steps_all(&[], &[], &[], &[0.1]).unwrap_err();
+        assert!(err.to_string().contains("empty Θ"), "{err}");
+        struct DefaultOnly(NativeCompute);
+        impl Compute for DefaultOnly {
+            fn dims(&self) -> (usize, usize, usize) {
+                self.0.dims()
+            }
+            fn local_steps_len(&self) -> Option<usize> {
+                None
+            }
+            fn grad_step(&self, t: &[f32], x: &[f32], y: &[f32]) -> Result<(f64, Vec<f32>)> {
+                self.0.grad_step(t, x, y)
+            }
+            fn local_steps(
+                &self,
+                t: &[f32],
+                bx: &[f32],
+                by: &[f32],
+                lrs: &[f32],
+            ) -> Result<(Vec<f32>, Vec<f64>)> {
+                self.0.local_steps(t, bx, by, lrs)
+            }
+            fn combine(&self, w: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+                self.0.combine(w, t)
+            }
+            fn dsgd_round(
+                &self,
+                w: &[f32],
+                t: &[f32],
+                bx: &[f32],
+                by: &[f32],
+                lr: f32,
+            ) -> Result<(Vec<f32>, Vec<f64>)> {
+                self.0.dsgd_round(w, t, bx, by, lr)
+            }
+            fn dsgt_round(
+                &self,
+                w: &[f32],
+                t: &[f32],
+                y: &[f32],
+                g: &[f32],
+                bx: &[f32],
+                by: &[f32],
+                lr: f32,
+            ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>)> {
+                self.0.dsgt_round(w, t, y, g, bx, by, lr)
+            }
+            fn eval_full(&self, t: &[f32], s: &[Shard]) -> Result<(f64, f64, f64, f64)> {
+                self.0.eval_full(t, s)
+            }
+            fn predict(&self, t: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+                self.0.predict(t, x)
+            }
+        }
+        let d = DefaultOnly(c);
+        let err = d.local_steps_all(&[], &[], &[], &[0.1]).unwrap_err();
+        assert!(err.to_string().contains("empty Θ"), "{err}");
+    }
+
+    #[test]
+    fn cycle_padding_biases_eval_metrics_native_oracle_is_exact() {
+        // PjrtCompute::eval_full cycle-pads a shard with sh.n < s.shard rows
+        // by row index i % sh.n (see its doc-comment).  Demonstrate the bias
+        // arithmetic on the native oracle: pad a 3-row shard to 8 rows —
+        // rows 0 and 1 appear 3x, row 2 only 2x — and the padded mean loss
+        // is exactly the over-weighted mean (3·l0 + 3·l1 + 2·l2)/8, which
+        // differs from the true shard mean (l0 + l1 + l2)/3.  The native
+        // backend evaluates the exact shard and is the unbiased reference.
+        let model = NativeModel::new(6, 4);
+        let mut rng = Pcg64::seed(21);
+        let theta = model.init(&mut rng);
+        let d = model.d;
+        // three well-separated rows so the per-row losses genuinely differ
+        let mut x = vec![1.0f32; 3 * d];
+        x[d..2 * d].iter_mut().for_each(|v| *v = -1.0);
+        x[2 * d..].iter_mut().for_each(|v| *v = 3.0);
+        let y = vec![1.0f32, 0.0, 1.0];
+
+        // per-row losses
+        let per_row: Vec<f64> = (0..3)
+            .map(|i| model.loss_and_grad(&theta, &x[i * d..(i + 1) * d], &y[i..=i]).0)
+            .collect();
+        let true_mean = per_row.iter().sum::<f64>() / 3.0;
+
+        // cycle-pad to 8 rows exactly as the artifact path does
+        let (mut px, mut py) = (Vec::new(), Vec::new());
+        for i in 0..8 {
+            px.extend_from_slice(&x[(i % 3) * d..(i % 3 + 1) * d]);
+            py.push(y[i % 3]);
+        }
+        let padded = model.loss_and_grad(&theta, &px, &py).0;
+        let weighted = (3.0 * per_row[0] + 3.0 * per_row[1] + 2.0 * per_row[2]) / 8.0;
+        assert!((padded - weighted).abs() < 1e-9, "padded {padded} vs weighted {weighted}");
+        assert!(
+            (padded - true_mean).abs() > 1e-6,
+            "rows differ, so the padded mean must be biased: {padded} vs {true_mean}"
+        );
+    }
+
+    #[test]
+    fn double_buffered_rounds_bitwise_equal_fresh_vec_path() {
+        // run several rounds through the `_into` slabs with swapping (the
+        // engine's steady-state path) and through the allocating ops; the
+        // trajectories must be bitwise-identical
+        let (d, h, n, m, rounds) = (11, 6, 5, 4, 4);
+        let c = NativeCompute::new(d, h, n, m).with_threads(1);
+        let p = c.dims().2;
+        let mut rng = Pcg64::seed(33);
+        let mut vec_of = |len: usize, s: f64| -> Vec<f32> {
+            (0..len).map(|_| (rng.normal() * s) as f32).collect()
+        };
+        let theta0 = vec_of(n * p, 0.3);
+        let y0 = vec_of(n * p, 0.1);
+        let g0 = vec_of(n * p, 0.1);
+        let batches: Vec<(Vec<f32>, Vec<f32>)> = (0..rounds)
+            .map(|r| {
+                let bx = vec_of(n * m * d, 1.0);
+                let by = (0..n * m).map(|i| ((i + r) % 2) as f32).collect();
+                (bx, by)
+            })
+            .collect();
+        let w = {
+            let g = crate::graph::Graph::build(
+                &crate::graph::Topology::Ring,
+                n,
+                &mut Pcg64::seed(1),
+            )
+            .unwrap();
+            crate::mixing::to_f32(&crate::mixing::build(&g, crate::mixing::Scheme::Metropolis))
+        };
+        let sparse = SparseW::from_dense(n, &w);
+        let mix = MixView { dense: &w, sparse: &sparse };
+
+        // DSGD: fresh-Vec vs double-buffered slabs
+        let mut ta = theta0.clone();
+        for (bx, by) in &batches {
+            ta = c.dsgd_round(&w, &ta, bx, by, 0.05).unwrap().0;
+        }
+        let mut front = theta0.clone();
+        let mut back = vec![0.0f32; n * p];
+        let mut losses = vec![0.0f64; n];
+        for (bx, by) in &batches {
+            c.dsgd_round_into(&mix, &front, bx, by, 0.05, &mut back, &mut losses).unwrap();
+            std::mem::swap(&mut front, &mut back);
+        }
+        assert_eq!(ta, front, "dsgd double-buffered trajectory differs");
+
+        // DSGT: three double-buffered stacks
+        let (mut ta, mut ya, mut ga) = (theta0.clone(), y0.clone(), g0.clone());
+        for (bx, by) in &batches {
+            let (t, y, g, _) = c.dsgt_round(&w, &ta, &ya, &ga, bx, by, 0.05).unwrap();
+            (ta, ya, ga) = (t, y, g);
+        }
+        let (mut tf, mut yf, mut gf) = (theta0.clone(), y0, g0);
+        let (mut tb, mut yb, mut gb) =
+            (vec![0.0f32; n * p], vec![0.0f32; n * p], vec![0.0f32; n * p]);
+        for (bx, by) in &batches {
+            c.dsgt_round_into(
+                &mix, &tf, &yf, &gf, bx, by, 0.05, &mut tb, &mut yb, &mut gb, &mut losses,
+            )
+            .unwrap();
+            std::mem::swap(&mut tf, &mut tb);
+            std::mem::swap(&mut yf, &mut yb);
+            std::mem::swap(&mut gf, &mut gb);
+        }
+        assert_eq!(ta, tf, "dsgt θ trajectory differs");
+        assert_eq!(ya, yf, "dsgt tracker trajectory differs");
+        assert_eq!(ga, gf, "dsgt gradient trajectory differs");
+
+        // local phase slabs round-trip too
+        let lrs = vec![0.03f32, 0.02];
+        let lx: Vec<f32> = (0..n * 2 * m * d).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+        let ly: Vec<f32> = (0..n * 2 * m).map(|i| (i % 2) as f32).collect();
+        let (t1, l1) = c.local_steps_all(&theta0, &lx, &ly, &lrs).unwrap();
+        let mut t2 = vec![0.0f32; n * p];
+        let mut l2 = vec![0.0f64; n * lrs.len()];
+        c.local_steps_all_into(&theta0, &lx, &ly, &lrs, &mut t2, &mut l2).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(l1, l2);
+    }
 
     #[test]
     fn native_compute_roundtrip() {

@@ -12,23 +12,38 @@ use crate::rng::Pcg64;
 pub struct NodeSampler {
     rng: Pcg64,
     m: usize,
+    /// Reusable index scratch (partial Fisher–Yates permutation) — batch
+    /// draws are allocation-free once its capacity settles (§Perf).
+    perm: Vec<usize>,
 }
 
 impl NodeSampler {
     /// Stream is keyed by (seed, node id) only — independent of driver.
     pub fn new(seed: u64, node: usize, m: usize) -> Self {
-        NodeSampler { rng: Pcg64::new(seed, 0xBA7C4 + node as u64), m }
+        NodeSampler { rng: Pcg64::new(seed, 0xBA7C4 + node as u64), m, perm: Vec::new() }
     }
 
     /// Sample one batch into `x_out [m*d]`, `y_out [m]`.
     pub fn batch(&mut self, shard: &Shard, x_out: &mut [f32], y_out: &mut [f32]) {
-        let idx = if shard.n >= self.m {
-            self.rng.sample_indices(shard.n, self.m)
+        let m = self.m;
+        let (rng, perm) = (&mut self.rng, &mut self.perm);
+        perm.clear();
+        if shard.n >= m {
+            // identical draw sequence and results as `Pcg64::sample_indices`
+            // (partial Fisher–Yates), minus its per-call allocation
+            perm.extend(0..shard.n);
+            for i in 0..m {
+                let j = rng.range(i, shard.n);
+                perm.swap(i, j);
+            }
         } else {
             // tiny shard: sample with replacement
-            (0..self.m).map(|_| self.rng.range(0, shard.n)).collect()
-        };
-        shard.gather(&idx, x_out, y_out);
+            for _ in 0..m {
+                let i = rng.range(0, shard.n);
+                perm.push(i);
+            }
+        }
+        shard.gather(&perm[..m], x_out, y_out);
     }
 
     /// Sample `count` consecutive batches into flat `[count*m*d]` buffers.

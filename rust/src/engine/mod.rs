@@ -40,6 +40,7 @@ use crate::algo::native::NativeModel;
 use crate::algo::{LrSchedule, RoundPlan};
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::coordinator::compute::Compute;
+use crate::mixing::SparseW;
 use crate::coordinator::sampler::{init_theta, init_thetas, NodeSampler};
 use crate::data::{FederatedDataset, Shard};
 use crate::graph::{Graph, NetworkSchedule};
@@ -78,11 +79,14 @@ impl RoundEngine {
 
     /// THE round loop.  `begin` → per round: local phase (Q−1 steps),
     /// communication phase (1 step), observation on the eval cadence.
+    /// The lr buffer is allocated once and refilled per round, so the loop
+    /// itself adds nothing to the steady-state allocation count (§Perf).
     pub fn run<D: Driver>(&self, driver: &mut D) -> Result<()> {
         driver.begin()?;
+        let mut lrs = vec![0.0f32; self.plan.local_per_round];
         for round in 1..=self.rounds {
             if self.plan.local_per_round > 0 {
-                let lrs = self.sched.local_lrs(round, self.q, self.plan.local_per_round);
+                self.sched.local_lrs_into(round, self.q, &mut lrs);
                 driver.local_phase(round, &lrs)?;
             }
             driver.comm_phase(round, self.sched.comm_lr(round, self.q))?;
@@ -123,6 +127,9 @@ pub struct EngineState<'a> {
     pub m: usize,
     /// Stacked parameters `[n, p]`.
     pub theta: Vec<f32>,
+    /// Back buffer for the θ stack: whole-network `_into` calls write here,
+    /// then the buffers swap — double-buffered rounds never allocate.
+    pub theta_back: Vec<f32>,
     /// Per-row batch samplers — streams keyed by (seed, row) only, so every
     /// driver — and every network plan — draws identical batches (the
     /// determinism contract).
@@ -136,6 +143,9 @@ pub struct EngineState<'a> {
     /// Communication-step batch scratch `[n, m, d]` / `[n, m]`.
     pub cx: Vec<f32>,
     pub cy: Vec<f32>,
+    /// Loss slabs the `_into` ops write into: `[n, local]` and `[n]`.
+    pub local_losses: Vec<f64>,
+    pub comm_losses: Vec<f64>,
 }
 
 impl<'a> EngineState<'a> {
@@ -154,6 +164,7 @@ impl<'a> EngineState<'a> {
             d,
             p,
             m,
+            theta_back: vec![0.0f32; theta.len()],
             theta,
             samplers: (0..n).map(|i| NodeSampler::new(cfg.seed, i, m)).collect(),
             shards,
@@ -161,6 +172,8 @@ impl<'a> EngineState<'a> {
             ly: vec![0.0f32; n * local * m],
             cx: vec![0.0f32; n * m * d],
             cy: vec![0.0f32; n * m],
+            local_losses: vec![0.0f64; n * local],
+            comm_losses: vec![0.0f64; n],
         }
     }
 
@@ -206,8 +219,10 @@ pub struct SyncDriver<'a> {
     compute_s_per_step: f64,
     /// Per-round network schedule (gossip strategies only).
     net: Option<NetworkSchedule>,
-    /// Cached view of the current round: f32 W, online mask, active edges.
+    /// Cached view of the current round: f32 W (dense + degree-sparse),
+    /// online mask, active edges.
     wf: Vec<f32>,
+    wsp: SparseW,
     online: Vec<bool>,
     round_edges: u64,
     wf_key: Option<u64>,
@@ -393,6 +408,7 @@ impl<'a> SyncDriver<'a> {
             compute_s_per_step: cfg.compute_s_per_step,
             net,
             wf: Vec::new(),
+            wsp: SparseW::from_dense(0, &[]),
             online: vec![true; n],
             round_edges: 0,
             wf_key: None,
@@ -413,6 +429,7 @@ impl<'a> SyncDriver<'a> {
         }
         let view = net.view(round)?;
         self.wf = view.wf();
+        self.wsp = SparseW::from_dense(self.st.n, &self.wf);
         self.round_edges = view.active_directed_edges();
         self.online = view.online.into_owned();
         self.wf_key = Some(key);
@@ -452,8 +469,17 @@ impl Driver for SyncDriver<'_> {
                 &mut st.ly[i * local * m..(i + 1) * local * m],
             );
         }
-        let (t_next, _losses) = self.compute.local_steps_all(&st.theta, &st.lx, &st.ly, lrs)?;
-        st.theta = t_next;
+        // double-buffered: the whole-network op writes the back slab, then
+        // the stacks swap — no allocation in the steady state
+        self.compute.local_steps_all_into(
+            &st.theta,
+            &st.lx,
+            &st.ly,
+            lrs,
+            &mut st.theta_back,
+            &mut st.local_losses,
+        )?;
+        std::mem::swap(&mut st.theta, &mut st.theta_back);
         if let Some(acct) = self.acct.as_mut() {
             acct.local_compute(local as u64, self.compute_s_per_step);
         }
@@ -465,7 +491,7 @@ impl Driver for SyncDriver<'_> {
         self.strategy.comm_update(
             &mut self.st,
             self.compute,
-            &RoundNet { w: &self.wf, online: &self.online },
+            &RoundNet { w: &self.wf, sparse: &self.wsp, online: &self.online },
             lr,
         )?;
         if let Some(acct) = self.acct.as_mut() {

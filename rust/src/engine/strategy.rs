@@ -16,7 +16,8 @@
 use super::EngineState;
 use crate::algo::axpy;
 use crate::algo::native::NativeModel;
-use crate::coordinator::compute::Compute;
+use crate::coordinator::compute::{Compute, MixView};
+use crate::mixing::SparseW;
 use anyhow::Result;
 
 /// What one communication round costs on the wire (drives the analytic
@@ -38,6 +39,9 @@ pub struct RoundNet<'a> {
     /// Row-major f32 mixing matrix `[n, n]` for this round (doubly
     /// stochastic; offline rows are identity under churn).
     pub w: &'a [f32],
+    /// Degree-sparse CSR view of the same matrix (per-node `(neighbor,
+    /// weight)` rows, ascending) — what the native gossip kernels consume.
+    pub sparse: &'a SparseW,
     /// Per-node participation mask (all `true` except under node churn).
     pub online: &'a [bool],
 }
@@ -45,6 +49,11 @@ pub struct RoundNet<'a> {
 impl RoundNet<'_> {
     pub fn all_online(&self) -> bool {
         self.online.iter().all(|&b| b)
+    }
+
+    /// Both W forms, packaged for the compute layer.
+    pub fn mix(&self) -> MixView<'_> {
+        MixView { dense: self.w, sparse: self.sparse }
     }
 }
 
@@ -119,11 +128,19 @@ impl CommStrategy for DsgdStrategy {
         // keyed by (seed, row) alone (§7), independent of the network plan;
         // offline rows discard theirs below.
         st.draw_comm_batches();
-        let (mut t_next, _losses) = compute.dsgd_round(net.w, &st.theta, &st.cx, &st.cy, lr)?;
+        compute.dsgd_round_into(
+            &net.mix(),
+            &st.theta,
+            &st.cx,
+            &st.cy,
+            lr,
+            &mut st.theta_back,
+            &mut st.comm_losses,
+        )?;
         if !net.all_online() {
-            restore_offline_rows(&mut t_next, &st.theta, net.online, st.p);
+            restore_offline_rows(&mut st.theta_back, &st.theta, net.online, st.p);
         }
-        st.theta = t_next;
+        std::mem::swap(&mut st.theta, &mut st.theta_back);
         Ok(())
     }
 }
@@ -132,18 +149,22 @@ impl CommStrategy for DsgdStrategy {
 
 /// Eq. 3 with gradient tracking: mixes θ and the tracker ϑ, then refreshes
 /// the tracker with the gradient difference (covers DSGT and FD-DSGT).
-/// Offline rounds leave a node's θ, ϑ, and G untouched.
+/// Offline rounds leave a node's θ, ϑ, and G untouched.  The tracker and
+/// gradient stacks are double-buffered like the engine's θ stack, so a
+/// steady-state round allocates nothing.
 pub struct DsgtStrategy {
-    /// Tracker stack Y `[n, p]`.
+    /// Tracker stack Y `[n, p]` + its back buffer.
     y: Vec<f32>,
-    /// Previous-gradient stack G `[n, p]`.
+    y_back: Vec<f32>,
+    /// Previous-gradient stack G `[n, p]` + its back buffer.
     g: Vec<f32>,
+    g_back: Vec<f32>,
 }
 
 impl DsgtStrategy {
     #[allow(clippy::new_without_default)]
     pub fn new() -> Self {
-        DsgtStrategy { y: Vec::new(), g: Vec::new() }
+        DsgtStrategy { y: Vec::new(), y_back: Vec::new(), g: Vec::new(), g_back: Vec::new() }
     }
 }
 
@@ -163,6 +184,8 @@ impl CommStrategy for DsgtStrategy {
         }
         self.y = g0.clone();
         self.g = g0;
+        self.y_back = vec![0.0f32; n * p];
+        self.g_back = vec![0.0f32; n * p];
         Ok(())
     }
 
@@ -174,16 +197,27 @@ impl CommStrategy for DsgtStrategy {
         lr: f32,
     ) -> Result<()> {
         st.draw_comm_batches();
-        let (mut t_next, mut y_next, mut g_next, _losses) =
-            compute.dsgt_round(net.w, &st.theta, &self.y, &self.g, &st.cx, &st.cy, lr)?;
+        compute.dsgt_round_into(
+            &net.mix(),
+            &st.theta,
+            &self.y,
+            &self.g,
+            &st.cx,
+            &st.cy,
+            lr,
+            &mut st.theta_back,
+            &mut self.y_back,
+            &mut self.g_back,
+            &mut st.comm_losses,
+        )?;
         if !net.all_online() {
-            restore_offline_rows(&mut t_next, &st.theta, net.online, st.p);
-            restore_offline_rows(&mut y_next, &self.y, net.online, st.p);
-            restore_offline_rows(&mut g_next, &self.g, net.online, st.p);
+            restore_offline_rows(&mut st.theta_back, &st.theta, net.online, st.p);
+            restore_offline_rows(&mut self.y_back, &self.y, net.online, st.p);
+            restore_offline_rows(&mut self.g_back, &self.g, net.online, st.p);
         }
-        st.theta = t_next;
-        self.y = y_next;
-        self.g = g_next;
+        std::mem::swap(&mut st.theta, &mut st.theta_back);
+        std::mem::swap(&mut self.y, &mut self.y_back);
+        std::mem::swap(&mut self.g, &mut self.g_back);
         Ok(())
     }
 }

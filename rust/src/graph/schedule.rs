@@ -137,6 +137,26 @@ impl NetView<'_> {
         mixing::to_f32(self.w.as_ref())
     }
 
+    /// Node `i`'s degree-sparse gossip row: `(neighbor index, f32 weight)`
+    /// pairs in ascending index order, keeping exactly the entries that are
+    /// nonzero *after* the f64→f32 conversion — the same entries, in the
+    /// same order, that the dense zero-skipping combine visits, so sparse
+    /// and dense gossip are bitwise-identical (self weight included;
+    /// offline/dropped neighbors carry weight 0 and are excluded).
+    pub fn sparse_row(&self, i: usize) -> (Vec<u32>, Vec<f32>) {
+        let w: &Mat = self.w.as_ref();
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (j, &x) in w.row(i).iter().enumerate() {
+            let v = x as f32;
+            if v != 0.0 {
+                idx.push(j as u32);
+                val.push(v);
+            }
+        }
+        (idx, val)
+    }
+
     /// This round's gossip partners of node `i`: graph neighbors that are
     /// online — empty when `i` itself is offline.
     pub fn active_neighbors(&self, i: usize) -> Vec<usize> {

@@ -1,0 +1,106 @@
+//! Integration: steady-state training rounds are allocation-free.
+//!
+//! The perf refactor (§Perf in DESIGN.md) promises that once a run is warm —
+//! slabs sized, workspaces grown, network view cached — a serial
+//! (`threads = 1`) fused round performs ZERO heap allocations across the
+//! kernel/gossip path: batch sampling, the local phase, and the
+//! communication update.  This test pins that with a counting global
+//! allocator.
+//!
+//! The counter is **per-thread** (a `const`-initialized `thread_local`
+//! `Cell`, which itself never allocates), so concurrently running tests in
+//! this binary cannot pollute the measurement; the measured region runs
+//! entirely on this test's thread because the compute is built with
+//! `threads = 1`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use decfl::config::{AlgoKind, Backend, ExperimentConfig};
+use decfl::coordinator::{assemble, NativeCompute};
+use decfl::engine::{Driver, RoundEngine, SyncDriver};
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+fn steady_round_allocs(algo: AlgoKind) -> u64 {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 6;
+    cfg.d = 42;
+    cfg.hidden = 8;
+    cfg.m = 8;
+    cfg.q = 4;
+    cfg.algo = algo;
+    cfg.total_steps = 40;
+    cfg.eval_every = 1000; // observe() is cadence work, not round work
+    cfg.backend = Backend::Native;
+    cfg.threads = 1;
+    cfg.records_per_hospital = 60;
+    let asm = assemble(&cfg).unwrap();
+    let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m).with_threads(1);
+    let engine = RoundEngine::from_config(&cfg);
+    let mut driver =
+        SyncDriver::decentralized(&cfg, &compute, &asm.ds, &asm.graph, &asm.w).unwrap();
+    driver.begin().unwrap();
+
+    // warm-up round: sizes the sampler scratch, the thread's kernel
+    // workspace, and the cached (static) network view
+    let local = engine.plan.local_per_round;
+    let lrs1 = engine.sched.local_lrs(1, engine.q, local);
+    driver.local_phase(1, &lrs1).unwrap();
+    driver.comm_phase(1, engine.sched.comm_lr(1, engine.q)).unwrap();
+
+    // steady-state rounds: must not touch the allocator at all
+    let lrs2 = engine.sched.local_lrs(2, engine.q, local);
+    let lrs3 = engine.sched.local_lrs(3, engine.q, local);
+    let before = allocs_here();
+    driver.local_phase(2, &lrs2).unwrap();
+    driver.comm_phase(2, engine.sched.comm_lr(2, engine.q)).unwrap();
+    driver.local_phase(3, &lrs3).unwrap();
+    driver.comm_phase(3, engine.sched.comm_lr(3, engine.q)).unwrap();
+    allocs_here() - before
+}
+
+#[test]
+fn steady_state_dsgd_round_is_allocation_free() {
+    let n = steady_round_allocs(AlgoKind::FdDsgd);
+    assert_eq!(n, 0, "fd-dsgd steady round performed {n} heap allocations");
+}
+
+#[test]
+fn steady_state_dsgt_round_is_allocation_free() {
+    let n = steady_round_allocs(AlgoKind::FdDsgt);
+    assert_eq!(n, 0, "fd-dsgt steady round performed {n} heap allocations");
+}

@@ -176,11 +176,20 @@ fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
     }
 
     assert_eq!(engine_log.rows.len(), evals.len(), "eval_every=1 logs every round");
-    for (row, (loss, acc, stat, cons)) in engine_log.rows.iter().zip(&evals) {
-        assert_eq!(row.loss.to_bits(), loss.to_bits(), "round {}", row.comm_rounds);
-        assert_eq!(row.accuracy.to_bits(), acc.to_bits(), "round {}", row.comm_rounds);
-        assert_eq!(row.stationarity.to_bits(), stat.to_bits(), "round {}", row.comm_rounds);
-        assert_eq!(row.consensus.to_bits(), cons.to_bits(), "round {}", row.comm_rounds);
+    // Tolerance, not bitwise: the engine path runs the cache-blocked `_into`
+    // kernels and degree-sparse gossip (PR 3), and future kernel loop
+    // reorders may legally shift f32 summation order relative to this
+    // hand-rolled pre-refactor replica.  The replica pins the ROUND
+    // STRUCTURE (schedule, sampler streams, update sequence), so a tight
+    // tolerance is the right contract here — while fused==actors above
+    // stays strictly bitwise, because both drivers share whatever kernels
+    // exist.
+    let tol = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+    for (row, &(loss, acc, stat, cons)) in engine_log.rows.iter().zip(&evals) {
+        assert!(tol(row.loss, loss), "round {}: {} vs {loss}", row.comm_rounds, row.loss);
+        assert!(tol(row.accuracy, acc), "round {}: accuracy", row.comm_rounds);
+        assert!(tol(row.stationarity, stat), "round {}: stationarity", row.comm_rounds);
+        assert!(tol(row.consensus, cons), "round {}: consensus", row.comm_rounds);
     }
 }
 

@@ -1,0 +1,109 @@
+//! Integration: degree-sparse gossip is bitwise-equal to dense gossip.
+//!
+//! The perf refactor (§Perf in DESIGN.md) replaced the dense n-length
+//! combine scan with per-node `(neighbor, weight)` lists.  These pins hold
+//! the whole claim together: for every topology family × mixing scheme, and
+//! for every network plan's per-round views, the sparse representation
+//! names exactly the nonzero entries of the dense f32 row in ascending
+//! order, and combining over it is bitwise-identical to the zero-skipping
+//! dense loop.
+
+use decfl::algo::native::{NativeModel, Workspace};
+use decfl::config::ExperimentConfig;
+use decfl::graph::{Graph, NetworkSchedule, Topology};
+use decfl::mixing::{self, Scheme, SparseW};
+use decfl::rng::Pcg64;
+
+fn rand_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn families(n: usize) -> Vec<Topology> {
+    let mut out = vec![
+        Topology::Ring,
+        Topology::Path,
+        Topology::Complete,
+        Topology::Star,
+        Topology::Torus { rows: 0, cols: 0 },
+        Topology::ErdosRenyi { p: 0.3 },
+        Topology::RandomGeometric { radius: 0.35 },
+        Topology::KNearest { k: 3 },
+    ];
+    if n > 5 {
+        out.push(Topology::SmallWorld { k: 4, beta: 0.2 });
+    }
+    out
+}
+
+#[test]
+fn sparse_combine_bitwise_equals_dense_for_every_family_and_scheme() {
+    let model = NativeModel::new(7, 5);
+    let p = model.p();
+    let mut ws = Workspace::new();
+    for (ti, topo) in families(12).iter().enumerate() {
+        for scheme in [Scheme::Metropolis, Scheme::LazyMetropolis, Scheme::MaxDegree] {
+            let n = 12;
+            let mut rng = Pcg64::seed(100 + ti as u64);
+            let g = Graph::build(topo, n, &mut rng).unwrap();
+            let w = mixing::build(&g, scheme);
+            let dense = mixing::to_f32(&w);
+            let sparse = SparseW::from_mat(&w);
+            assert_eq!(sparse.n(), n);
+            let thetas = rand_vec(&mut rng, n * p, 0.5);
+            for i in 0..n {
+                let (idx, val) = sparse.row(i);
+                // the sparse row is exactly the dense row's nonzeros, ascending
+                let expect: Vec<(u32, f32)> = dense[i * n..(i + 1) * n]
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(j, &v)| (j as u32, v))
+                    .collect();
+                let got: Vec<(u32, f32)> = idx.iter().copied().zip(val.iter().copied()).collect();
+                assert_eq!(got, expect, "{topo:?} {scheme:?} row {i}");
+                // gossip degree, not network size: self + graph neighbors
+                assert!(idx.len() <= g.degree(i) + 1, "{topo:?} {scheme:?} row {i}");
+
+                let a = model.combine(&dense[i * n..(i + 1) * n], &thetas);
+                let mut b = vec![0.0f32; p];
+                model.combine_sparse_into(idx, val, &thetas, &mut b, &mut ws);
+                assert_eq!(a, b, "{topo:?} {scheme:?} row {i}: sparse != dense");
+            }
+        }
+    }
+}
+
+#[test]
+fn schedule_sparse_rows_match_dense_views_for_every_plan() {
+    // every per-round view a NetworkSchedule emits must agree between its
+    // dense f32 form (SyncDriver) and its per-node sparse rows (actors)
+    for plan in ["static", "rewire", "edge-drop", "churn"] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 10;
+        cfg.topology = "er".into();
+        cfg.net_plan = plan.into();
+        cfg.rewire_every = 2;
+        cfg.edge_drop = 0.3;
+        cfg.churn = 0.3;
+        let mut rng = Pcg64::seed(5);
+        let g = Graph::build(&Topology::ErdosRenyi { p: 0.4 }, cfg.n, &mut rng).unwrap();
+        let w = mixing::build(&g, Scheme::Metropolis);
+        let sched = NetworkSchedule::from_config(&cfg, g, w).unwrap();
+        for round in 1..=8 {
+            let view = sched.view(round).unwrap();
+            let dense = view.wf();
+            let sparse = SparseW::from_dense(cfg.n, &dense);
+            for i in 0..cfg.n {
+                let (vi, vv) = view.sparse_row(i);
+                let (si, sv) = sparse.row(i);
+                assert_eq!(&vi[..], si, "{plan} round {round} row {i}: indices");
+                assert_eq!(&vv[..], sv, "{plan} round {round} row {i}: weights");
+                // offline nodes collapse to the identity row
+                if !view.online[i] {
+                    assert_eq!(vi, vec![i as u32], "{plan} round {round} row {i}");
+                    assert_eq!(vv, vec![1.0f32], "{plan} round {round} row {i}");
+                }
+            }
+        }
+    }
+}
