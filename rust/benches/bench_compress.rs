@@ -1,0 +1,72 @@
+//! EXP-C1 bench: round-engine throughput and wire cost under every gossip
+//! compressor — dense, identity (plumbing overhead), q8, q4, top-k — on one
+//! shared base network, fused mode, native backend.
+//!
+//!     cargo bench --bench bench_compress
+//!     DECFL_FULL=1  cargo bench --bench bench_compress   # paper-scale
+//!     DECFL_SMOKE=1 cargo bench --bench bench_compress   # CI compile+run check
+
+use decfl::benchutil::{bench, budget, full_scale, report, section, smoke};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+
+fn main() -> anyhow::Result<()> {
+    let (n, steps, q) = if full_scale() {
+        (20, 2_000, 50)
+    } else if smoke() {
+        (6, 30, 3)
+    } else {
+        (12, 240, 6)
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.algo = AlgoKind::FdDsgt; // two payload kinds — the expensive case
+    cfg.n = n;
+    cfg.hidden = 16;
+    cfg.m = 10;
+    cfg.q = q;
+    cfg.total_steps = steps;
+    cfg.eval_every = usize::MAX / 2; // final row only: time the rounds, not eval
+    cfg.records_per_hospital = 120;
+    cfg.topology = "er".into();
+
+    println!(
+        "gossip compression, fd-dsgt fused/native: n={n} steps={steps} q={q} ({} rounds)",
+        steps.div_ceil(q)
+    );
+
+    cfg.compress = "none".into();
+    let asm = assemble(&cfg)?; // shared base graph + cohort for every arm
+    let mut dense_bytes = 0u64;
+    for (comp, frac) in
+        [("none", 0.1), ("identity", 0.1), ("q8", 0.1), ("q4", 0.1), ("topk", 0.1), ("topk", 0.05)]
+    {
+        cfg.compress = comp.into();
+        cfg.topk_frac = frac;
+        let label = decfl::compress::Spec::parse(comp, frac)?.label();
+        let log = run_on(&cfg, &asm)?;
+        let last = log.rows.last().unwrap();
+        if comp == "none" {
+            dense_bytes = last.bytes;
+        }
+        section(&format!("compress {label}"));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(&cfg, &asm).unwrap());
+        });
+        report(&format!("{label} ({} rounds)", last.comm_rounds), &t);
+        let reduction =
+            if last.bytes > 0 { dense_bytes as f64 / last.bytes as f64 } else { 1.0 };
+        println!(
+            "wire: {:.2} MB ({:.1}x vs dense), {} msgs, sim {:.2}s | final loss {:.4} acc {:.3}",
+            last.bytes as f64 / 1e6,
+            reduction,
+            last.messages,
+            last.sim_time_s,
+            last.loss,
+            last.accuracy,
+        );
+    }
+    Ok(())
+}

@@ -56,7 +56,8 @@ fn main() -> anyhow::Result<()> {
             .into_iter()
             .map(|mut ep| {
                 std::thread::spawn(move || {
-                    let p = std::sync::Arc::new(vec![0.0f32; 1409]);
+                    let p =
+                        std::sync::Arc::new(decfl::netsim::Payload::Dense(vec![0.0f32; 1409]));
                     ep.broadcast(0, decfl::netsim::PayloadKind::Params, &p).unwrap();
                     ep.gather(0, decfl::netsim::PayloadKind::Params).unwrap().len()
                 })

@@ -12,10 +12,12 @@ pub mod native;
 /// The paper's diminishing step size `α_r = α₀ / √r` (§3: α₀ = 0.02).
 #[derive(Clone, Copy, Debug)]
 pub struct LrSchedule {
+    /// The scale α₀ of the diminishing schedule.
     pub alpha0: f64,
 }
 
 impl LrSchedule {
+    /// Schedule with scale `alpha0` (must be positive).
     pub fn new(alpha0: f64) -> Self {
         assert!(alpha0 > 0.0, "alpha0 must be positive");
         LrSchedule { alpha0 }
@@ -55,12 +57,14 @@ impl LrSchedule {
 /// `local_per_round` eq.-4 updates followed by one eq.-2/3 update.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RoundPlan {
+    /// Local period Q.
     pub q: usize,
     /// Q − 1 (0 when Q = 1, i.e. classic DSGD/DSGT).
     pub local_per_round: usize,
 }
 
 impl RoundPlan {
+    /// Round structure for local period `q` (≥ 1).
     pub fn new(q: usize) -> Self {
         assert!(q >= 1);
         RoundPlan { q, local_per_round: q - 1 }
@@ -95,16 +99,35 @@ pub fn axpby(y: &mut [f32], a: f32, x: &[f32], b: f32) {
     }
 }
 
+/// `y += a − b` elementwise — the decoded-self correction of the
+/// difference-form compressed gossip update (DESIGN.md §10): the mixing
+/// term reads decoded values, so the node adds back `θ_i − x̂_i` to keep its
+/// own parameters at full precision.  When `a == b` bitwise (the identity
+/// compressor) every addend is exactly `+0.0`, which leaves `y` unchanged
+/// bit for bit for any `y` that carries no negative zeros — true of every
+/// combine output, whose f64 accumulator never produces `−0.0`; the
+/// lossless-plumbing pin relies on this.
+pub fn add_diff(y: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(y.len(), a.len());
+    assert_eq!(y.len(), b.len());
+    for ((yi, &ai), &bi) in y.iter_mut().zip(a).zip(b) {
+        *yi += ai - bi;
+    }
+}
+
+/// `y *= a`
 pub fn scale(y: &mut [f32], a: f32) {
     for yi in y.iter_mut() {
         *yi *= a;
     }
 }
 
+/// Euclidean norm with f64 accumulation.
 pub fn l2_norm(x: &[f32]) -> f64 {
     x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
 }
 
+/// Squared Euclidean distance with f64 accumulation.
 pub fn l2_dist_sq(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
     a.iter()
@@ -174,6 +197,20 @@ mod tests {
         assert_eq!(y, vec![3.0, 3.0]);
         assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
         assert_eq!(l2_dist_sq(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn add_diff_is_exact_noop_on_equal_inputs() {
+        let a = vec![1.5f32, -2.0, 0.0, -0.0];
+        let mut y = vec![7.0f32, 8.0, -9.0, 0.5];
+        let y0 = y.clone();
+        add_diff(&mut y, &a, &a);
+        // every addend is a − a = +0.0 → y unchanged bit for bit
+        for (before, after) in y0.iter().zip(&y) {
+            assert_eq!(before.to_bits(), after.to_bits());
+        }
+        add_diff(&mut y, &[2.0, 2.0, 2.0, 2.0], &[0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(y, vec![8.5, 9.5, -7.5, 2.0]);
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Empty workspace; buffers grow on first use.
     pub fn new() -> Self {
         Workspace::default()
     }
@@ -79,11 +80,14 @@ fn grow<T: Clone + Default>(v: &mut Vec<T>, len: usize) {
 /// Model dimensions (matches `ModelShapes` minus the artifact-bound fields).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct NativeModel {
+    /// Input feature dimension.
     pub d: usize,
+    /// Hidden-layer width.
     pub h: usize,
 }
 
 impl NativeModel {
+    /// Model with `d` input features and `h` hidden units (both positive).
     pub fn new(d: usize, h: usize) -> Self {
         assert!(d > 0 && h > 0);
         NativeModel { d, h }
@@ -471,6 +475,80 @@ impl NativeModel {
         let gbuf = &mut gbuf[..p];
         let loss = self.loss_grad_kernel(theta_i, bx_i, by_i, gbuf, hid, dhid, z, grad);
         axpy(out, -lr, gbuf);
+        loss
+    }
+
+    /// Eq.-2 node update under **compressed gossip** (difference form,
+    /// DESIGN.md §10): mix the *decoded* stack, add back the node's own
+    /// full-precision correction `θ_i − x̂_i`, then take the gradient step
+    /// at the true θ_i:
+    /// `θ′_i = (W X̂)_i + (θ_i − x̂_i) − lr ∇g_i(θ_i)`.
+    /// With the identity compressor (x̂ ≡ θ) this is bitwise-identical to
+    /// [`Self::dsgd_node_into`] — the correction adds exact `+0.0`s.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgd_node_compressed_into(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        xhat: &[f32],
+        xhat_i: &[f32],
+        theta_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        self.combine_sparse_into(idx, val, xhat, out, ws);
+        super::add_diff(out, theta_i, xhat_i);
+        let p = self.p();
+        let Workspace { hid, dhid, z, grad, gbuf, .. } = ws;
+        let gbuf = &mut gbuf[..p];
+        let loss = self.loss_grad_kernel(theta_i, bx_i, by_i, gbuf, hid, dhid, z, grad);
+        axpy(out, -lr, gbuf);
+        loss
+    }
+
+    /// Eq.-3 node update under **compressed gossip** (difference form):
+    /// both mixes read decoded stacks with the node's own full-precision
+    /// corrections added back:
+    /// `θ′_i = (W X̂)_i + (θ_i − x̂_i) − lr ϑ_i`,
+    /// `ϑ′_i = (W Ŷ)_i + (ϑ_i − ŷ_i) + ∇g(θ′_i) − ∇g(θ_i)`.
+    /// Identity-compressed runs are bitwise-identical to
+    /// [`Self::dsgt_node_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgt_node_compressed_into(
+        &self,
+        idx: &[u32],
+        val: &[f32],
+        xhat: &[f32],
+        yhat: &[f32],
+        xhat_i: &[f32],
+        yhat_i: &[f32],
+        theta_i: &[f32],
+        y_i: &[f32],
+        g_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        t_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        self.combine_sparse_into(idx, val, xhat, t_out, ws);
+        super::add_diff(t_out, theta_i, xhat_i);
+        axpy(t_out, -lr, y_i);
+        let loss = {
+            let p = self.p();
+            let Workspace { hid, dhid, z, grad, .. } = &mut *ws;
+            debug_assert_eq!(g_out.len(), p);
+            self.loss_grad_kernel(t_out, bx_i, by_i, g_out, hid, dhid, z, grad)
+        };
+        self.combine_sparse_into(idx, val, yhat, y_out, ws);
+        super::add_diff(y_out, y_i, yhat_i);
+        axpy(y_out, 1.0, g_out);
+        axpy(y_out, -1.0, g_i);
         loss
     }
 

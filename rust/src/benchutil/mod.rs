@@ -8,16 +8,23 @@
 
 use std::time::Instant;
 
+/// Timing summary of one benched closure.
 #[derive(Clone, Copy, Debug)]
 pub struct Timing {
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
 }
 
 impl Timing {
+    /// Median throughput (iterations per second).
     pub fn per_sec(&self) -> f64 {
         if self.p50_s > 0.0 {
             1.0 / self.p50_s
@@ -71,6 +78,7 @@ pub fn report(name: &str, t: &Timing) {
     );
 }
 
+/// Human-readable seconds (ns/µs/ms/s auto-scaling).
 pub fn fmt_s(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The leading subcommand, if any (`decfl train ...` → `train`).
     pub subcommand: Option<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -50,6 +51,7 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env() -> Result<Args> {
         Self::parse(std::env::args().skip(1))
     }
@@ -58,11 +60,13 @@ impl Args {
         self.consumed.borrow_mut().push(key.to_string());
     }
 
+    /// String option (`--key value`), `None` if absent.
     pub fn get_str(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.options.get(key).map(String::as_str)
     }
 
+    /// Non-negative integer option; errors on a malformed value.
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         self.mark(key);
         self.options
@@ -71,6 +75,7 @@ impl Args {
             .transpose()
     }
 
+    /// u64 option (seeds); errors on a malformed value.
     pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
         self.mark(key);
         self.options
@@ -79,6 +84,7 @@ impl Args {
             .transpose()
     }
 
+    /// Float option; errors on a malformed value.
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         self.mark(key);
         self.options
@@ -106,6 +112,7 @@ impl Args {
         }
     }
 
+    /// Comma-separated float list option (`--drops 0.2,0.4`).
     pub fn get_f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
         self.mark(key);
         match self.options.get(key) {
@@ -184,6 +191,15 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     if let Some(v) = args.get_f64("churn")? {
         cfg.churn = v;
     }
+    if let Some(v) = args.get_str("compress") {
+        cfg.compress = v.to_string();
+    }
+    if let Some(v) = args.get_f64("topk-frac")? {
+        cfg.topk_frac = v;
+    }
+    if args.has_flag("error-feedback") {
+        cfg.error_feedback = true;
+    }
     if let Some(v) = args.get_f64("drop-prob")? {
         cfg.drop_prob = v;
     }
@@ -257,6 +273,23 @@ mod tests {
         assert!((cfg.churn - 0.2).abs() < 1e-12);
         assert_eq!(cfg.rewire_every, 3);
         assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn compress_overrides_apply() {
+        let a = parse(&["train", "--compress", "topk", "--topk-frac", "0.05", "--error-feedback"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.compress, "topk");
+        assert!((cfg.topk_frac - 0.05).abs() < 1e-12);
+        assert!(cfg.error_feedback);
+        assert!(a.finish().is_ok());
+        // defaults untouched when the flags are absent
+        let b = parse(&["train"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&b, &mut cfg).unwrap();
+        assert_eq!(cfg.compress, "none");
+        assert!(!cfg.error_feedback);
     }
 
     #[test]

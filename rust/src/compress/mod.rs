@@ -1,0 +1,716 @@
+//! Lossy message compression for gossip rounds — quantization and top-k
+//! sparsification with error-feedback residuals.
+//!
+//! The paper's axis is communication *rounds*; this module attacks the
+//! complementary axis the FL communication surveys emphasize: the *bytes*
+//! each round moves.  Every gossip payload is a `p`-element f32 vector
+//! (θ, and the DSGT tracker ϑ).  A [`Compressor`] turns that vector into a
+//! compact wire message ([`Encoded`]) whose exact byte size both the channel
+//! netsim and the analytic accountant charge, and whose decoded value every
+//! participant reconstructs bit-for-bit:
+//!
+//! - [`Identity`] — a plain f32 copy (4p bytes).  Exists so the *entire*
+//!   compressed code path can be pinned bitwise against the uncompressed
+//!   fast path in tests.
+//! - [`QuantizeQ8`] / [`QuantizeQ4`] — absmax linear quantization to 8/4-bit
+//!   codes with **deterministic stochastic rounding**: the rounding offsets
+//!   come from a PCG stream keyed by `(seed, round, node, payload kind)`
+//!   ([`MsgKey`]), so the sender, every receiver, and both execution drivers
+//!   derive the identical codes with no coordination (§7 determinism).
+//! - [`TopK`] — magnitude sparsification: keep the `⌈frac·p⌉` largest-|v|
+//!   entries (ties broken by index, fully deterministic), shipped as
+//!   `(u32 index, f32 value)` pairs.
+//!
+//! **Convergence mechanism** — the drivers apply compressed messages
+//! through the CHOCO-style *difference form* (DESIGN.md §10):
+//! `θ′_i = θ_i + [(W X̂)_i − x̂_i] − α ∇g_i`.  A node's own parameters never
+//! pass through the compressor — only the consensus direction does — and
+//! under a doubly stochastic `W` the compression perturbations cancel in
+//! the network average exactly (`Σ_h [(W X̂)_h − x̂_h] = 0`), so lossy
+//! messages never bias the mean iterate, for unbiased quantizers and biased
+//! sparsifiers alike.  An **opt-in error-feedback residual**
+//! (`comm.error_feedback`) additionally error-compensates the outgoing
+//! message (`v = x + e`, `e ← v − D(C(v))`); it is off by default — the
+//! difference form already preserves the mean, and stacking EF on top
+//! destabilizes aggressive top-k (measured; see §10).  The residual slabs
+//! live with the engine state (fused driver) or the node actor — the
+//! compressor itself is stateless and pure.
+//!
+//! Wire-size contract: [`Compressor::wire_bytes`] is an exact function of
+//! `p`, and [`Encoded::wire_bytes`] of the actual message always agrees —
+//! that is what lets the fused driver's analytic accountant and the channel
+//! netsim charge identical byte totals (integration-tested).
+
+use crate::config::ExperimentConfig;
+use crate::netsim::PayloadKind;
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// RNG stream tag for quantization noise (disjoint from every other stream
+/// constant in the crate — see `graph::schedule`, `coordinator::sampler`).
+const STREAM_COMPRESS: u64 = 0xC0_4B12_55E0;
+
+/// splitmix64 finalizer — mixes `(round, node, kind)` into one stream id so
+/// distinct messages draw decorrelated rounding noise.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic identity of one gossip message: which run (`seed`), which
+/// communication round, which sending node, and which payload kind (θ or the
+/// DSGT tracker).  Quantizers derive their stochastic-rounding stream from
+/// this key alone, so any party — the sender, a receiver, the fused driver's
+/// whole-network loop, a test — reconstructs the identical encoded message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MsgKey {
+    /// Experiment seed (`cfg.seed`).
+    pub seed: u64,
+    /// 1-based communication round.
+    pub round: u64,
+    /// Sending node id.
+    pub node: u64,
+    /// Payload kind (θ vs tracker) — DSGT compresses two streams per round.
+    pub kind: PayloadKind,
+}
+
+impl MsgKey {
+    /// Build a key from the driver-side quantities.
+    pub fn new(seed: u64, round: usize, node: usize, kind: PayloadKind) -> Self {
+        MsgKey { seed, round: round as u64, node: node as u64, kind }
+    }
+
+    /// The keyed rounding-noise generator for this message.
+    pub fn rng(&self) -> Pcg64 {
+        let z = self
+            .round
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(self.node.wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            .wrapping_add(self.kind.tag() as u64);
+        Pcg64::new(self.seed, STREAM_COMPRESS ^ mix64(z))
+    }
+}
+
+/// One compressed gossip message — the exact wire format whose byte size the
+/// netsim and the analytic accountant charge.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Encoded {
+    /// Uncompressed f32 copy ([`Identity`]): `4·len` bytes.
+    Dense(Vec<f32>),
+    /// Magnitude top-k ([`TopK`]): ascending indices + their f32 values,
+    /// `8·k` bytes (u32 index + f32 value per kept entry).  `len` is the
+    /// decoded vector length (absent entries decode to zero).
+    TopK {
+        /// Decoded vector length `p`.
+        len: u32,
+        /// Kept indices, ascending.
+        idx: Vec<u32>,
+        /// Values parallel to `idx`.
+        val: Vec<f32>,
+    },
+    /// 8-bit absmax quantization ([`QuantizeQ8`]): one i8 code per element
+    /// (stored two's-complement in a `u8`), plus the f32 scale — `4 + len`
+    /// bytes.
+    Q8 {
+        /// Dequantization scale (absmax / 127; 0 for the zero vector).
+        scale: f32,
+        /// i8 codes in [-127, 127], one per element.
+        codes: Vec<u8>,
+    },
+    /// 4-bit absmax quantization ([`QuantizeQ4`]): two codes packed per byte
+    /// (low nibble first, nibble = code + 8), plus the f32 scale —
+    /// `4 + ⌈len/2⌉` bytes.
+    Q4 {
+        /// Dequantization scale (absmax / 7; 0 for the zero vector).
+        scale: f32,
+        /// Decoded vector length `p` (the last nibble may be padding).
+        len: u32,
+        /// Packed nibble codes.
+        codes: Vec<u8>,
+    },
+}
+
+impl Encoded {
+    /// Exact bytes this message occupies on the simulated wire.  Always
+    /// equals [`Compressor::wire_bytes`] of the compressor that produced it.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Encoded::Dense(v) => 4 * v.len() as u64,
+            Encoded::TopK { idx, .. } => 8 * idx.len() as u64,
+            Encoded::Q8 { codes, .. } => 4 + codes.len() as u64,
+            Encoded::Q4 { codes, .. } => 4 + codes.len() as u64,
+        }
+    }
+
+    /// Decoded vector length `p` of this message.
+    pub fn decoded_len(&self) -> usize {
+        match self {
+            Encoded::Dense(v) => v.len(),
+            Encoded::TopK { len, .. } => *len as usize,
+            Encoded::Q8 { codes, .. } => codes.len(),
+            Encoded::Q4 { len, .. } => *len as usize,
+        }
+    }
+}
+
+/// Decode a message into `out[p]` — a pure function of the wire bytes, so
+/// the sender (updating its residual), every receiver, and the fused driver
+/// all reconstruct the identical f32 vector.
+pub fn decode_into(enc: &Encoded, out: &mut [f32]) {
+    assert_eq!(out.len(), enc.decoded_len(), "decode buffer size mismatch");
+    match enc {
+        Encoded::Dense(v) => out.copy_from_slice(v),
+        Encoded::TopK { idx, val, .. } => {
+            out.fill(0.0);
+            for (&i, &v) in idx.iter().zip(val) {
+                out[i as usize] = v;
+            }
+        }
+        Encoded::Q8 { scale, codes } => {
+            for (o, &c) in out.iter_mut().zip(codes) {
+                *o = (c as i8) as f32 * scale;
+            }
+        }
+        Encoded::Q4 { scale, codes, .. } => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let nib = (codes[i / 2] >> ((i % 2) * 4)) & 0x0F;
+                *o = (nib as i32 - 8) as f32 * scale;
+            }
+        }
+    }
+}
+
+/// A lossy message compressor: a pure function from a `p`-element f32 vector
+/// (plus the deterministic [`MsgKey`]) to a compact wire message.
+///
+/// Contract (what the convergence and equivalence tests pin):
+/// - **Determinism** — `encode(v, key)` is a pure function: same vector and
+///   key → the identical [`Encoded`], across drivers, threads, and runs.
+/// - **Fixed wire size** — every message of length `p` occupies exactly
+///   [`Compressor::wire_bytes`]`(p)` bytes, so analytic accounting matches
+///   the channel netsim byte-for-byte.
+/// - **Unbiasedness / contraction** — quantizers are unbiased (stochastic
+///   rounding); top-k is a contraction. Either property combines with the
+///   mean-preserving difference-form update (see the module docs) to keep
+///   DSGD/DSGT convergent.
+///
+/// # Examples
+///
+/// ```
+/// use decfl::compress::{decode_into, Compressor, MsgKey, QuantizeQ8};
+/// use decfl::netsim::PayloadKind;
+///
+/// let c = QuantizeQ8;
+/// let v = vec![0.5f32, -1.0, 0.25, 0.0];
+/// let key = MsgKey::new(7, 3, 0, PayloadKind::Params);
+/// let enc = c.encode(&v, key);
+/// assert_eq!(enc.wire_bytes(), c.wire_bytes(v.len())); // exact wire size
+///
+/// let mut xhat = vec![0.0f32; 4];
+/// decode_into(&enc, &mut xhat); // every party reconstructs this bitwise
+/// assert_eq!(c.encode(&v, key), enc); // same key → identical message
+/// ```
+pub trait Compressor: Send + Sync {
+    /// Short display label (`q8`, `topk@0.10`, ...).
+    fn label(&self) -> String;
+
+    /// Exact encoded size in bytes of one `p`-element message.
+    fn wire_bytes(&self, p: usize) -> u64;
+
+    /// Encode `v` under `key` (pure: no internal state advances).
+    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded;
+}
+
+// ----------------------------------------------------------- identity ----
+
+/// The no-op compressor: ships the full f32 vector.  Routing a run through
+/// the compressed machinery with `Identity` must be bitwise-identical to the
+/// uncompressed fast path — the pin that proves the plumbing is lossless.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn label(&self) -> String {
+        "identity".into()
+    }
+
+    fn wire_bytes(&self, p: usize) -> u64 {
+        4 * p as u64
+    }
+
+    fn encode(&self, v: &[f32], _key: MsgKey) -> Encoded {
+        Encoded::Dense(v.to_vec())
+    }
+}
+
+// -------------------------------------------------------- quantization ----
+
+/// Stochastically round `x / scale` to an integer in `[-qmax, qmax]` using
+/// one uniform draw: `⌊x/scale + u⌋` is unbiased for `x/scale`.
+fn stoch_round(x: f32, scale: f32, qmax: i32, rng: &mut Pcg64) -> i32 {
+    let t = x as f64 / scale as f64 + rng.next_f64();
+    (t.floor() as i32).clamp(-qmax, qmax)
+}
+
+/// Largest |v| entry (the quantization range); 0 for an empty/zero vector.
+fn absmax(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+}
+
+/// 8-bit absmax quantizer: codes in [-127, 127], scale = absmax/127, with
+/// deterministic stochastic rounding keyed by the message's [`MsgKey`].
+/// Wire size `4 + p` bytes — ~4x below dense f32.
+pub struct QuantizeQ8;
+
+impl Compressor for QuantizeQ8 {
+    fn label(&self) -> String {
+        "q8".into()
+    }
+
+    fn wire_bytes(&self, p: usize) -> u64 {
+        4 + p as u64
+    }
+
+    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded {
+        let amax = absmax(v);
+        if amax == 0.0 {
+            return Encoded::Q8 { scale: 0.0, codes: vec![0u8; v.len()] };
+        }
+        let scale = amax / 127.0;
+        let mut rng = key.rng();
+        let codes = v.iter().map(|&x| stoch_round(x, scale, 127, &mut rng) as i8 as u8).collect();
+        Encoded::Q8 { scale, codes }
+    }
+}
+
+/// 4-bit absmax quantizer: codes in [-7, 7] packed two per byte, scale =
+/// absmax/7, deterministic stochastic rounding.  Wire size `4 + ⌈p/2⌉`
+/// bytes — ~8x below dense f32.
+pub struct QuantizeQ4;
+
+impl Compressor for QuantizeQ4 {
+    fn label(&self) -> String {
+        "q4".into()
+    }
+
+    fn wire_bytes(&self, p: usize) -> u64 {
+        4 + p.div_ceil(2) as u64
+    }
+
+    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded {
+        let len = v.len() as u32;
+        let amax = absmax(v);
+        if amax == 0.0 {
+            // nibble 8 encodes the code 0
+            return Encoded::Q4 { scale: 0.0, len, codes: vec![0x88u8; v.len().div_ceil(2)] };
+        }
+        let scale = amax / 7.0;
+        let mut rng = key.rng();
+        let mut codes = vec![0u8; v.len().div_ceil(2)];
+        for (i, &x) in v.iter().enumerate() {
+            let nib = (stoch_round(x, scale, 7, &mut rng) + 8) as u8;
+            codes[i / 2] |= nib << ((i % 2) * 4);
+        }
+        // pad a trailing odd nibble with code 0 (nibble 8) for a clean decode
+        if v.len() % 2 == 1 {
+            if let Some(last) = codes.last_mut() {
+                *last |= 0x80;
+            }
+        }
+        Encoded::Q4 { scale, len, codes }
+    }
+}
+
+// ------------------------------------------------------------- top-k -----
+
+/// Magnitude sparsification: keep the `⌈frac·p⌉` largest-|v| entries.
+/// Selection is fully deterministic — entries are ordered by `(|v| desc,
+/// index asc)` so ties cannot reorder across runs or drivers.  Wire size
+/// `8·k` bytes (u32 index + f32 value per kept entry).
+pub struct TopK {
+    /// Fraction of entries kept, in (0, 1].
+    pub frac: f64,
+}
+
+impl TopK {
+    /// Kept entries for a `p`-element message: `⌈frac·p⌉`, at least 1.
+    pub fn k(&self, p: usize) -> usize {
+        ((self.frac * p as f64).ceil() as usize).clamp(1, p.max(1))
+    }
+}
+
+impl Compressor for TopK {
+    fn label(&self) -> String {
+        format!("topk@{:.2}", self.frac)
+    }
+
+    fn wire_bytes(&self, p: usize) -> u64 {
+        8 * self.k(p) as u64
+    }
+
+    fn encode(&self, v: &[f32], _key: MsgKey) -> Encoded {
+        let p = v.len();
+        let k = self.k(p);
+        let mut order: Vec<u32> = (0..p as u32).collect();
+        // strict total order: |v| descending, index ascending on ties (and a
+        // total_cmp so non-finite values cannot panic the sort)
+        let by_mag = |&a: &u32, &b: &u32| {
+            v[b as usize]
+                .abs()
+                .total_cmp(&v[a as usize].abs())
+                .then(a.cmp(&b))
+        };
+        if k < p {
+            order.select_nth_unstable_by(k - 1, by_mag);
+            order.truncate(k);
+        }
+        order.sort_unstable();
+        let val = order.iter().map(|&i| v[i as usize]).collect();
+        Encoded::TopK { len: p as u32, idx: order, val }
+    }
+}
+
+// ----------------------------------------------------- error feedback ----
+
+/// `vbuf ← x + e`: the error-compensated message of EF-SGD/CHOCO-SGD.  Both
+/// drivers build the outgoing vector through this one helper so the f32
+/// arithmetic (and therefore the trajectory) is bitwise-identical.
+pub fn add_residual(x: &[f32], e: &[f32], vbuf: &mut [f32]) {
+    for ((o, &a), &b) in vbuf.iter_mut().zip(x).zip(e) {
+        *o = a + b;
+    }
+}
+
+/// `e_out ← v − x̂`: the residual the next round re-injects (the compression
+/// error that would otherwise be lost).  Shared by both drivers.
+pub fn residual_update(v: &[f32], xhat: &[f32], e_out: &mut [f32]) {
+    for ((o, &a), &b) in e_out.iter_mut().zip(v).zip(xhat) {
+        *o = a - b;
+    }
+}
+
+// ------------------------------------------------------------- config ----
+
+/// Parsed `comm.compress` config value — which compressor a run gossips
+/// through (`None` = the uncompressed fast path, zero new work per round).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Spec {
+    /// No compression: the pre-existing dense kernels, untouched.
+    None,
+    /// Ship dense f32 through the compressed machinery (test pin).
+    Identity,
+    /// 8-bit absmax quantization.
+    Q8,
+    /// 4-bit absmax quantization.
+    Q4,
+    /// Magnitude top-k with the given kept fraction.
+    TopK {
+        /// Fraction of entries kept, in (0, 1].
+        frac: f64,
+    },
+}
+
+impl Spec {
+    /// Parse a `comm.compress` / `--compress` value; `topk_frac` shapes the
+    /// top-k arm.
+    pub fn parse(name: &str, topk_frac: f64) -> Result<Spec> {
+        Ok(match name {
+            "none" => Spec::None,
+            "identity" => Spec::Identity,
+            "q8" => Spec::Q8,
+            "q4" => Spec::Q4,
+            "topk" | "top-k" => {
+                if !(topk_frac > 0.0 && topk_frac <= 1.0) {
+                    bail!("topk_frac must be in (0, 1], got {topk_frac}");
+                }
+                Spec::TopK { frac: topk_frac }
+            }
+            other => bail!("unknown compressor `{other}` (none|identity|q8|q4|topk)"),
+        })
+    }
+
+    /// Is this the uncompressed fast path?
+    pub fn is_none(&self) -> bool {
+        *self == Spec::None
+    }
+
+    /// Instantiate the compressor (`None` for the uncompressed fast path).
+    pub fn build(&self) -> Option<Box<dyn Compressor>> {
+        match self {
+            Spec::None => None,
+            Spec::Identity => Some(Box::new(Identity)),
+            Spec::Q8 => Some(Box::new(QuantizeQ8)),
+            Spec::Q4 => Some(Box::new(QuantizeQ4)),
+            Spec::TopK { frac } => Some(Box::new(TopK { frac: *frac })),
+        }
+    }
+
+    /// Display label (experiment tables, logs).
+    pub fn label(&self) -> String {
+        match self {
+            Spec::None => "none".into(),
+            other => other.build().unwrap().label(),
+        }
+    }
+}
+
+/// Per-run gossip-compression context a communication strategy (or a node
+/// actor) carries: the compressor, whether error feedback is on, and the run
+/// seed the message keys derive from.
+pub struct GossipComm {
+    /// The compressor, or `None` for the uncompressed fast path.
+    pub comp: Option<Box<dyn Compressor>>,
+    /// Opt-in error-feedback residuals (`comm.error_feedback`; default
+    /// false — see the module docs).
+    pub error_feedback: bool,
+    /// Run seed — [`MsgKey`]s are `(seed, round, node, kind)`.
+    pub seed: u64,
+}
+
+impl GossipComm {
+    /// Build from a validated config.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<GossipComm> {
+        Ok(GossipComm {
+            comp: Spec::parse(&cfg.compress, cfg.topk_frac)?.build(),
+            error_feedback: cfg.error_feedback,
+            seed: cfg.seed,
+        })
+    }
+
+    /// The uncompressed context (baseline strategies, tests).
+    pub fn none(seed: u64) -> GossipComm {
+        GossipComm { comp: None, error_feedback: false, seed }
+    }
+
+    /// Is a compressor active (i.e. must the compressed code path run)?
+    pub fn enabled(&self) -> bool {
+        self.comp.is_some()
+    }
+
+    /// Wire bytes of one `p`-element gossip message under this context
+    /// (dense f32 when uncompressed).
+    pub fn msg_bytes(&self, p: usize) -> u64 {
+        match &self.comp {
+            Some(c) => c.wire_bytes(p),
+            None => 4 * p as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(round: usize, node: usize) -> MsgKey {
+        MsgKey::new(7, round, node, PayloadKind::Params)
+    }
+
+    fn sample_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        (0..n).map(|_| (rng.normal() * 0.5) as f32).collect()
+    }
+
+    #[test]
+    fn identity_roundtrip_is_exact() {
+        let v = sample_vec(33, 1);
+        let enc = Identity.encode(&v, key(1, 0));
+        assert_eq!(enc.wire_bytes(), 4 * 33);
+        let mut out = vec![0.0f32; 33];
+        decode_into(&enc, &mut out);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn encode_is_deterministic_in_key_and_varies_across_keys() {
+        let v = sample_vec(64, 2);
+        for comp in [&QuantizeQ8 as &dyn Compressor, &QuantizeQ4, &TopK { frac: 0.2 }, &Identity] {
+            let a = comp.encode(&v, key(3, 1));
+            let b = comp.encode(&v, key(3, 1));
+            assert_eq!(a, b, "{}: same key must give the identical message", comp.label());
+        }
+        // quantizers draw rounding noise from the key: round/node/kind move it
+        let a = QuantizeQ8.encode(&v, key(3, 1));
+        assert_ne!(a, QuantizeQ8.encode(&v, key(4, 1)), "round must move the noise");
+        assert_ne!(a, QuantizeQ8.encode(&v, key(3, 2)), "node must move the noise");
+        let tk = MsgKey::new(7, 3, 1, PayloadKind::Tracker);
+        assert_ne!(a, QuantizeQ8.encode(&v, tk), "payload kind must move the noise");
+    }
+
+    #[test]
+    fn q8_error_bounded_by_one_step() {
+        let v = sample_vec(200, 3);
+        let enc = QuantizeQ8.encode(&v, key(1, 0));
+        let scale = match &enc {
+            Encoded::Q8 { scale, .. } => *scale,
+            _ => unreachable!(),
+        };
+        let mut out = vec![0.0f32; v.len()];
+        decode_into(&enc, &mut out);
+        for (&x, &xh) in v.iter().zip(&out) {
+            assert!((x - xh).abs() <= scale * 1.0001, "{x} vs {xh} (scale {scale})");
+        }
+    }
+
+    #[test]
+    fn q4_roundtrip_odd_and_even_lengths() {
+        for n in [1usize, 2, 7, 8, 33] {
+            let v = sample_vec(n, n as u64);
+            let enc = QuantizeQ4.encode(&v, key(2, 0));
+            assert_eq!(enc.wire_bytes(), QuantizeQ4.wire_bytes(n));
+            let scale = match &enc {
+                Encoded::Q4 { scale, .. } => *scale,
+                _ => unreachable!(),
+            };
+            let mut out = vec![0.0f32; n];
+            decode_into(&enc, &mut out);
+            for (&x, &xh) in v.iter().zip(&out) {
+                assert!((x - xh).abs() <= scale * 1.0001, "n={n}: {x} vs {xh}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased_on_average() {
+        // average the decode over many message keys: must approach the input
+        let v = sample_vec(16, 9);
+        let mut acc = vec![0.0f64; v.len()];
+        let rounds = 4000;
+        for r in 1..=rounds {
+            let enc = QuantizeQ8.encode(&v, key(r, 0));
+            let mut out = vec![0.0f32; v.len()];
+            decode_into(&enc, &mut out);
+            for (a, &x) in acc.iter_mut().zip(&out) {
+                *a += x as f64;
+            }
+        }
+        let amax = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let tol = 3.0 * (amax as f64 / 127.0) / (rounds as f64).sqrt() + 1e-6;
+        for (&x, &mean) in v.iter().zip(&acc) {
+            let m = mean / rounds as f64;
+            assert!((m - x as f64).abs() < tol, "{x} vs mean {m} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn topk_keeps_the_largest_magnitudes_ascending_indices() {
+        let v = vec![0.1f32, -5.0, 0.0, 3.0, -0.2, 3.0];
+        let c = TopK { frac: 0.5 };
+        assert_eq!(c.k(6), 3);
+        let enc = c.encode(&v, key(1, 0));
+        match &enc {
+            Encoded::TopK { idx, val, len } => {
+                assert_eq!(*len, 6);
+                // |−5| > |3| = |3| (tie → lower index wins)
+                assert_eq!(idx, &[1, 3, 5]);
+                assert_eq!(val, &[-5.0, 3.0, 3.0]);
+            }
+            _ => unreachable!(),
+        }
+        let mut out = vec![9.0f32; 6];
+        decode_into(&enc, &mut out);
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic_across_orderings() {
+        // all-equal magnitudes: the kept set must be the lowest indices
+        let v = vec![1.0f32; 10];
+        let enc = TopK { frac: 0.3 }.encode(&v, key(1, 0));
+        match enc {
+            Encoded::TopK { idx, .. } => assert_eq!(idx, vec![0, 1, 2]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn wire_bytes_contract_holds_for_every_compressor() {
+        for p in [1usize, 2, 31, 64, 1409] {
+            let v = sample_vec(p, p as u64);
+            let comps: Vec<Box<dyn Compressor>> = vec![
+                Box::new(Identity),
+                Box::new(QuantizeQ8),
+                Box::new(QuantizeQ4),
+                Box::new(TopK { frac: 0.1 }),
+                Box::new(TopK { frac: 1.0 }),
+            ];
+            for c in &comps {
+                let enc = c.encode(&v, key(1, 0));
+                assert_eq!(
+                    enc.wire_bytes(),
+                    c.wire_bytes(p),
+                    "{} at p={p}: encoded size must match the analytic size",
+                    c.label()
+                );
+                assert_eq!(enc.decoded_len(), p);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector_encodes_to_zero() {
+        let v = vec![0.0f32; 9];
+        for c in [&QuantizeQ8 as &dyn Compressor, &QuantizeQ4] {
+            let enc = c.encode(&v, key(1, 0));
+            let mut out = vec![1.0f32; 9];
+            decode_into(&enc, &mut out);
+            assert_eq!(out, v, "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn residual_helpers_do_the_ef_arithmetic() {
+        let x = vec![1.0f32, 2.0, -3.0];
+        let e = vec![0.5f32, -0.25, 0.0];
+        let mut v = vec![0.0f32; 3];
+        add_residual(&x, &e, &mut v);
+        assert_eq!(v, vec![1.5, 1.75, -3.0]);
+        let xhat = vec![1.0f32, 2.0, -3.0];
+        let mut e2 = vec![0.0f32; 3];
+        residual_update(&v, &xhat, &mut e2);
+        assert_eq!(e2, vec![0.5, -0.25, 0.0]);
+    }
+
+    #[test]
+    fn ef_recursion_identity_leaves_zero_residual() {
+        // with Identity the decode is exact, so the EF residual stays zero
+        let x = sample_vec(12, 4);
+        let e = vec![0.0f32; 12];
+        let mut v = vec![0.0f32; 12];
+        add_residual(&x, &e, &mut v);
+        let enc = Identity.encode(&v, key(1, 0));
+        let mut xhat = vec![0.0f32; 12];
+        decode_into(&enc, &mut xhat);
+        let mut e2 = vec![1.0f32; 12];
+        residual_update(&v, &xhat, &mut e2);
+        assert!(e2.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn spec_parse_build_and_labels() {
+        assert!(Spec::parse("none", 0.1).unwrap().is_none());
+        assert_eq!(Spec::parse("identity", 0.1).unwrap(), Spec::Identity);
+        assert_eq!(Spec::parse("q8", 0.1).unwrap(), Spec::Q8);
+        assert_eq!(Spec::parse("q4", 0.1).unwrap(), Spec::Q4);
+        assert_eq!(Spec::parse("topk", 0.05).unwrap(), Spec::TopK { frac: 0.05 });
+        assert_eq!(Spec::parse("topk", 0.05).unwrap().label(), "topk@0.05");
+        assert!(Spec::parse("topk", 0.0).is_err());
+        assert!(Spec::parse("topk", 1.5).is_err());
+        assert!(Spec::parse("gzip", 0.1).is_err());
+        assert!(Spec::parse("none", 0.1).unwrap().build().is_none());
+        assert_eq!(Spec::parse("q4", 0.1).unwrap().label(), "q4");
+    }
+
+    #[test]
+    fn gossip_comm_msg_bytes() {
+        let none = GossipComm::none(7);
+        assert!(!none.enabled());
+        assert_eq!(none.msg_bytes(100), 400);
+        let q4 = GossipComm { comp: Spec::Q4.build(), error_feedback: true, seed: 7 };
+        assert_eq!(q4.msg_bytes(100), 4 + 50);
+        // the headline reductions the compress experiment reports (p = 1409)
+        let p = 1409usize;
+        assert!(4 * p as u64 / QuantizeQ8.wire_bytes(p) >= 3);
+        assert!(4 * p as u64 / QuantizeQ4.wire_bytes(p) >= 7);
+        assert!(4 * p as u64 / TopK { frac: 0.05 }.wire_bytes(p) >= 9);
+    }
+}

@@ -30,6 +30,7 @@ pub enum AlgoKind {
 }
 
 impl AlgoKind {
+    /// Parse a CLI/TOML algorithm name.
     pub fn parse(s: &str) -> Result<AlgoKind> {
         Ok(match s {
             "dsgd" => AlgoKind::Dsgd,
@@ -42,6 +43,7 @@ impl AlgoKind {
         })
     }
 
+    /// Canonical display/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             AlgoKind::Dsgd => "dsgd",
@@ -77,6 +79,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a CLI/TOML backend name.
     pub fn parse(s: &str) -> Result<Backend> {
         Ok(match s {
             "pjrt" => Backend::Pjrt,
@@ -96,6 +99,7 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Parse a CLI/TOML execution-mode name.
     pub fn parse(s: &str) -> Result<Mode> {
         Ok(match s {
             "actors" => Mode::Actors,
@@ -109,15 +113,23 @@ impl Mode {
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     // -- model / artifact shapes (must match `make artifacts`) --
+    /// Hospital count N (stack rows).
     pub n: usize,
+    /// Input feature dimension (the EHR schema's 42).
     pub d: usize,
+    /// Hidden-layer width of the shallow MLP.
     pub hidden: usize,
+    /// Minibatch size m per node per step.
     pub m: usize,
+    /// Local period Q (eq.-4 steps between communication rounds).
     pub q: usize,
+    /// Records per shard the AOT eval artifact is specialized to.
     pub shard: usize,
+    /// Directory holding the AOT artifact set (`make artifacts`).
     pub artifacts_dir: String,
 
     // -- algorithm --
+    /// Which optimizer drives training.
     pub algo: AlgoKind,
     /// α_r = alpha0 / sqrt(r) (paper: 0.02).
     pub alpha0: f64,
@@ -125,10 +137,13 @@ pub struct ExperimentConfig {
     pub total_steps: usize,
     /// Evaluate metrics every this many *communication* rounds.
     pub eval_every: usize,
+    /// Execution driver: fused whole-network rounds or per-node actors.
     pub mode: Mode,
 
     // -- topology / mixing --
+    /// Hospital-graph family (`graph::Topology::parse`).
     pub topology: String,
+    /// Mixing-matrix scheme (`mixing::Scheme::parse`).
     pub mixing: String,
 
     // -- network schedule (time-varying topology; see graph::schedule) --
@@ -141,14 +156,31 @@ pub struct ExperimentConfig {
     /// Per-node offline probability per round (plan = churn).
     pub churn: f64,
 
+    // -- communication compression (see `compress`) --
+    /// Gossip-payload compressor: none|identity|q8|q4|topk.
+    pub compress: String,
+    /// Kept fraction for `compress = "topk"`, in (0, 1].
+    pub topk_frac: f64,
+    /// Opt-in error-feedback residuals on the compressed message streams.
+    /// Default off: the difference-form update already preserves the mean
+    /// iterate exactly, and stacking EF on top of it destabilizes
+    /// aggressive sparsifiers (DESIGN.md §10).
+    pub error_feedback: bool,
+
     // -- data --
+    /// Shard non-iidness in [0, 1] (Dirichlet mixing of site profiles).
     pub heterogeneity: f64,
+    /// Mean records per hospital shard.
     pub records_per_hospital: usize,
+    /// Global AD label prevalence of the synthetic cohort.
     pub ad_prevalence: f64,
 
     // -- network model --
+    /// One-way link latency per message, seconds.
     pub latency_s: f64,
+    /// Link bandwidth, bytes/second.
     pub bandwidth_bps: f64,
+    /// Frame-loss probability per link (actor mode only; frames retransmit).
     pub drop_prob: f64,
     /// Modeled per-local-step compute time (drives the simulated clock).
     pub compute_s_per_step: f64,
@@ -162,6 +194,7 @@ pub struct ExperimentConfig {
     /// at every thread count — nodes are disjoint `[i*p..(i+1)*p]` slices.
     pub threads: usize,
 
+    /// Root RNG seed every deterministic stream derives from.
     pub seed: u64,
     /// Optional JSON metrics dump path.
     pub out: Option<String>,
@@ -188,6 +221,9 @@ impl Default for ExperimentConfig {
             rewire_every: 5,
             edge_drop: 0.2,
             churn: 0.1,
+            compress: "none".into(),
+            topk_frac: 0.1,
+            error_feedback: false,
             heterogeneity: 0.6,
             records_per_hospital: 500,
             ad_prevalence: 0.21,
@@ -232,6 +268,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("net.rewire_every")? { self.rewire_every = v; }
         if let Some(v) = doc.get_f64("net.edge_drop")? { self.edge_drop = v; }
         if let Some(v) = doc.get_f64("net.churn")? { self.churn = v; }
+        if let Some(v) = doc.get_str("comm.compress") { self.compress = v.to_string(); }
+        if let Some(v) = doc.get_f64("comm.topk_frac")? { self.topk_frac = v; }
+        if let Some(v) = doc.get_bool("comm.error_feedback")? { self.error_feedback = v; }
         if let Some(v) = doc.get_f64("data.heterogeneity")? { self.heterogeneity = v; }
         if let Some(v) = doc.get_usize("data.records_per_hospital")? { self.records_per_hospital = v; }
         if let Some(v) = doc.get_f64("data.ad_prevalence")? { self.ad_prevalence = v; }
@@ -263,6 +302,7 @@ impl ExperimentConfig {
         crate::graph::Topology::parse(&self.topology)?;
         crate::mixing::Scheme::parse(&self.mixing)?;
         crate::graph::schedule::plan_from_config(self)?;
+        crate::compress::Spec::parse(&self.compress, self.topk_frac)?;
         Ok(())
     }
 
@@ -341,6 +381,37 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.net_plan = "edge-drop".into();
         c.edge_drop = 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn comm_compress_overlay_and_validation() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.compress, "none");
+        assert!((c.topk_frac - 0.1).abs() < 1e-12);
+        assert!(!c.error_feedback, "EF is opt-in (DESIGN.md §10)");
+        assert!(c.validate().is_ok());
+        let dir = std::env::temp_dir().join(format!("decfl_comm_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comm.toml");
+        std::fs::write(
+            &path,
+            "[comm]\ncompress = \"topk\"\ntopk_frac = 0.05\nerror_feedback = true\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.compress, "topk");
+        assert!((cfg.topk_frac - 0.05).abs() < 1e-12);
+        assert!(cfg.error_feedback);
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+        // bad compressor names and top-k fractions are rejected at validate
+        let mut c = ExperimentConfig::default();
+        c.compress = "gzip".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.compress = "topk".into();
+        c.topk_frac = 0.0;
         assert!(c.validate().is_err());
     }
 

@@ -11,9 +11,13 @@ use std::collections::BTreeMap;
 /// One parsed value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// Double-quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
 }
 
@@ -24,6 +28,7 @@ pub struct TomlDoc {
 }
 
 impl TomlDoc {
+    /// Parse a TOML-subset document from text.
     pub fn parse(text: &str) -> Result<TomlDoc> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -60,20 +65,24 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Parse a TOML-subset file from disk.
     pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
         Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Raw value at a flattened `section.key`, if present.
     pub fn get(&self, key: &str) -> Option<&TomlValue> {
         self.values.get(key)
     }
 
+    /// All flattened keys in the document.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.values.keys()
     }
 
+    /// String value at `key` (None if absent or another type).
     pub fn get_str(&self, key: &str) -> Option<&str> {
         match self.values.get(key) {
             Some(TomlValue::Str(s)) => Some(s),
@@ -81,6 +90,7 @@ impl TomlDoc {
         }
     }
 
+    /// Non-negative integer at `key`; errors on a type mismatch.
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         match self.values.get(key) {
             None => Ok(None),
@@ -89,6 +99,7 @@ impl TomlDoc {
         }
     }
 
+    /// Float (or integer) at `key`; errors on a type mismatch.
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         match self.values.get(key) {
             None => Ok(None),
@@ -98,6 +109,7 @@ impl TomlDoc {
         }
     }
 
+    /// Boolean at `key`; errors on a type mismatch.
     pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
         match self.values.get(key) {
             None => Ok(None),

@@ -15,7 +15,16 @@
 //! *active* neighbors, gathers the neighborhood, applies the eq.-2/3 update
 //! through the degree-sparse `combine` kernel with the round's `(neighbor,
 //! weight)` row (bitwise-equal to the dense row, §Perf), and advances its
-//! causal clock.  Channels are wired over the schedule's union graph (a
+//! causal clock.  When `comm.compress` is configured the node encodes its
+//! payloads under the `(seed, round, node, kind)` key before broadcasting,
+//! puts the *encoded* message on the wire (charged at its true size), keeps
+//! the decoded x̂ for its own mixing row, and applies the difference-form
+//! update — mix decoded values, add back its own full-precision correction
+//! (DESIGN.md §10) — with the opt-in EF residual compensating the outgoing
+//! message when enabled.  Every step uses the same helpers, in the same
+//! order, as the fused driver's whole-stack pass, so compressed
+//! trajectories stay bitwise-equal across drivers.  Channels are wired
+//! over the schedule's union graph (a
 //! superset of any round's edges), so a time-varying plan only changes who
 //! a node talks to, never the plumbing.  A node that the churn plan takes
 //! offline draws-and-discards its communication batch (keeping the sampler
@@ -35,15 +44,16 @@
 //! whole-network call) differ, which is exactly what pins driver
 //! equivalence, for static and dynamic network plans alike.
 
-use crate::algo::axpy;
+use crate::algo::{add_diff, axpy};
 use crate::algo::native::NativeModel;
+use crate::compress::{add_residual, decode_into, residual_update, GossipComm, MsgKey};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
 use crate::engine::{self, RoundEngine};
 use crate::graph::{Graph, NetworkSchedule};
 use crate::linalg::Mat;
 use crate::metrics::{round_metrics, RunLog};
-use crate::netsim::{self, LinkModel, PayloadKind};
+use crate::netsim::{self, LinkModel, Payload, PayloadKind};
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -84,6 +94,13 @@ impl NodeTask {
         let m = self.cfg.m;
         let n = self.net.n();
 
+        // gossip-compression context: identical derivation to the fused
+        // driver's strategies, so both sides key the same message streams
+        let comm = GossipComm::from_config(&self.cfg)?;
+        let compressing = comm.enabled();
+        let ef = compressing && comm.error_feedback;
+        let tracked = self.use_tracker;
+
         let mut driver = NodeDriver {
             task: self,
             compute,
@@ -99,6 +116,12 @@ impl NodeTask {
             bx: vec![0.0f32; m * d],
             by: vec![0.0f32; m],
             stacked: vec![0.0f32; n * p],
+            comm,
+            e_theta: vec![0.0f32; if ef { p } else { 0 }],
+            e_y: vec![0.0f32; if ef && tracked { p } else { 0 }],
+            vbuf: vec![0.0f32; if compressing { p } else { 0 }],
+            xhat_own: vec![0.0f32; if compressing { p } else { 0 }],
+            yhat_own: vec![0.0f32; if compressing && tracked { p } else { 0 }],
             net_key: None,
             online_now: true,
             nbrs: Vec::new(),
@@ -128,6 +151,18 @@ struct NodeDriver<'a> {
     bx: Vec<f32>,
     by: Vec<f32>,
     stacked: Vec<f32>,
+    /// Gossip-compression context (compressor + EF toggle + seed).
+    comm: GossipComm,
+    /// Error-feedback residuals for the θ / tracker streams (empty unless
+    /// compressing with EF).
+    e_theta: Vec<f32>,
+    e_y: Vec<f32>,
+    /// Encode scratch `[p]`: the error-compensated message v = x + e.
+    vbuf: Vec<f32>,
+    /// This node's own decoded x̂ / ŷ rows — what it contributes to its own
+    /// mix, matching what its neighbors decode from the wire.
+    xhat_own: Vec<f32>,
+    yhat_own: Vec<f32>,
     /// Cached slice of the current round's network view (own online flag,
     /// active neighbors, degree-sparse W row), refreshed when the schedule's
     /// view key changes — built once for static plans, once per epoch for
@@ -160,6 +195,43 @@ impl NodeDriver<'_> {
         self.net_key = Some(key);
         Ok(())
     }
+}
+
+/// One payload stream's encode-and-broadcast step of a compressed round:
+/// build the outgoing vector (error-compensated `v = x + e` when EF is on),
+/// encode it under the `(seed, round, node, kind)` key, keep the decoded x̂
+/// in `hat` (the node's own mix row — exactly what receivers decode),
+/// update the residual, and put the *encoded* message on the wire.  The
+/// per-stream twin of the fused driver's `ef_compress_stack` row step —
+/// both call the same `compress` helpers in the same order, which is what
+/// keeps DSGD's and DSGT's streams from ever diverging between drivers.
+#[allow(clippy::too_many_arguments)]
+fn ef_encode_send(
+    comp: &dyn crate::compress::Compressor,
+    ef: bool,
+    seed: u64,
+    round: usize,
+    id: usize,
+    kind: PayloadKind,
+    data: &[f32],
+    e: &mut [f32],
+    vbuf: &mut [f32],
+    hat: &mut [f32],
+    ep: &mut netsim::Endpoint,
+    nbrs: &[usize],
+) -> Result<()> {
+    if ef {
+        add_residual(data, e, vbuf);
+    } else {
+        vbuf.copy_from_slice(data);
+    }
+    let enc = comp.encode(vbuf, MsgKey::new(seed, round, id, kind));
+    decode_into(&enc, hat);
+    if ef {
+        residual_update(vbuf, hat, e);
+    }
+    ep.send_to(nbrs, round as u64, kind, &Arc::new(Payload::Compressed(enc)))?;
+    Ok(())
 }
 
 impl engine::Driver for NodeDriver<'_> {
@@ -199,24 +271,62 @@ impl engine::Driver for NodeDriver<'_> {
 
         // ---- gossip exchange over this round's active edges ----
         let round_tag = round as u64;
-        let payload = Arc::new(self.theta.clone());
-        self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Params, &payload)?;
-        let tracker_payload = if self.task.use_tracker {
-            let tp = Arc::new(self.y_tr.clone());
-            self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Tracker, &tp)?;
-            Some(tp)
+        let compressing = self.comm.enabled();
+        if let Some(comp) = &self.comm.comp {
+            let ef = self.comm.error_feedback;
+            ef_encode_send(
+                comp.as_ref(),
+                ef,
+                self.comm.seed,
+                round,
+                id,
+                PayloadKind::Params,
+                &self.theta,
+                &mut self.e_theta,
+                &mut self.vbuf,
+                &mut self.xhat_own,
+                &mut self.ep,
+                &self.nbrs,
+            )?;
+            if self.task.use_tracker {
+                ef_encode_send(
+                    comp.as_ref(),
+                    ef,
+                    self.comm.seed,
+                    round,
+                    id,
+                    PayloadKind::Tracker,
+                    &self.y_tr,
+                    &mut self.e_y,
+                    &mut self.vbuf,
+                    &mut self.yhat_own,
+                    &mut self.ep,
+                    &self.nbrs,
+                )?;
+            }
         } else {
-            None
-        };
+            let payload = Arc::new(Payload::Dense(self.theta.clone()));
+            self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Params, &payload)?;
+            if self.task.use_tracker {
+                let tp = Arc::new(Payload::Dense(self.y_tr.clone()));
+                self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Tracker, &tp)?;
+            }
+        }
 
         // The sparse combine reads only the rows named in `widx` — self plus
         // this round's active neighbors, every one of which is overwritten
         // below before combining — so the stack is never re-zeroed; stale
         // rows from earlier rounds are unreachable by construction.
         let got = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Params)?;
-        self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.theta);
+        // Own mix row: the decoded x̂ under compression — exactly what the
+        // neighbors decode from the wire — the true θ otherwise.
+        if compressing {
+            self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.xhat_own);
+        } else {
+            self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.theta);
+        }
         for (from, pl) in &got {
-            self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
+            pl.decode_into(&mut self.stacked[from * p..(from + 1) * p]);
         }
         let mixed = self.compute.combine_sparse(&self.widx, &self.wval, &self.stacked)?;
 
@@ -224,27 +334,41 @@ impl engine::Driver for NodeDriver<'_> {
         self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
         if self.task.use_tracker {
             let got_y = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Tracker)?;
-            self.stacked[id * p..(id + 1) * p]
-                .copy_from_slice(tracker_payload.as_ref().unwrap());
+            if compressing {
+                self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.yhat_own);
+            } else {
+                self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.y_tr);
+            }
             for (from, pl) in &got_y {
-                self.stacked[from * p..(from + 1) * p].copy_from_slice(pl);
+                pl.decode_into(&mut self.stacked[from * p..(from + 1) * p]);
             }
             let mixed_y = self.compute.combine_sparse(&self.widx, &self.wval, &self.stacked)?;
-            // θ^{r+1} = Σ W θ − α ϑ_i (own tracker)
+            // θ^{r+1} = Σ W θ̂ (+ own full-precision correction under
+            // compression, DESIGN.md §10) − α ϑ_i (own tracker)
             let mut theta_next = mixed;
+            if compressing {
+                add_diff(&mut theta_next, &self.theta, &self.xhat_own);
+            }
             axpy(&mut theta_next, -lr, &self.y_tr);
-            // ϑ^{r+1} = Σ W ϑ + ∇g(θ^{r+1}) − ∇g(θ^r)
+            // ϑ^{r+1} = Σ W ϑ̂ (+ correction) + ∇g(θ^{r+1}) − ∇g(θ^r)
             let (_, g_new) = self.compute.grad_step(&theta_next, &self.bx, &self.by)?;
             let mut y_next = mixed_y;
+            if compressing {
+                add_diff(&mut y_next, &self.y_tr, &self.yhat_own);
+            }
             axpy(&mut y_next, 1.0, &g_new);
             axpy(&mut y_next, -1.0, &self.g_prev);
             self.theta = theta_next;
             self.y_tr = y_next;
             self.g_prev = g_new;
         } else {
-            // θ^{r+1} = Σ W θ − α ∇g(θ^r): gradient at pre-mix θ
+            // θ^{r+1} = Σ W θ̂ (+ correction) − α ∇g(θ^r): gradient at
+            // pre-mix θ
             let (_, grad) = self.compute.grad_step(&self.theta, &self.bx, &self.by)?;
             let mut theta_next = mixed;
+            if compressing {
+                add_diff(&mut theta_next, &self.theta, &self.xhat_own);
+            }
             axpy(&mut theta_next, -lr, &grad);
             self.theta = theta_next;
         }

@@ -6,6 +6,7 @@
 //! pure-rust twin (`algo::native`) for shape-free sweeps, property tests,
 //! and as the numerical oracle the integration tests compare PJRT against.
 
+use crate::algo::{add_diff, axpy};
 use crate::algo::native::{NativeModel, Workspace};
 use crate::data::Shard;
 use crate::mixing::SparseW;
@@ -17,7 +18,9 @@ use anyhow::{bail, ensure, Result};
 /// degree-sparse CSR rows (what the native kernels gossip over).  The two
 /// must describe the same matrix; drivers build both once per network view.
 pub struct MixView<'a> {
+    /// Row-major dense `[n, n]` f32 mixing matrix.
     pub dense: &'a [f32],
+    /// Degree-sparse CSR rows of the same matrix.
     pub sparse: &'a SparseW,
 }
 
@@ -178,6 +181,109 @@ pub trait Compute {
         Ok(())
     }
 
+    /// Whole-network eq.-2 round under **compressed gossip** — the
+    /// difference form of DESIGN.md §10: the mixing term reads the decoded
+    /// stack `xhat` (what actually crossed the wire), each node adds back
+    /// its own full-precision correction `θ_i − x̂_i`, and the gradient is
+    /// taken at the true `θ_i`:
+    /// `θ′_i = (W X̂)_i + (θ_i − x̂_i) − lr ∇g_i(θ_i)`.
+    /// The correction makes compression exactly mean-preserving under a
+    /// doubly stochastic W — lossy messages perturb only the consensus
+    /// direction, never the average iterate.
+    ///
+    /// Default: per-node `combine_sparse` + `add_diff` + `grad_step` —
+    /// exactly the ops the actor driver's node loop issues, so any backend
+    /// stays bitwise-aligned with the actor path.  The native backend
+    /// overrides with the threaded zero-copy fan-out.
+    #[allow(clippy::too_many_arguments)]
+    fn dsgd_round_compressed_into(
+        &self,
+        w: &MixView,
+        xhat: &[f32],
+        theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (_, _, p) = self.dims();
+        let n = theta.len() / p;
+        ensure!(n > 0 && theta.len() == n * p, "theta stack not a multiple of p");
+        ensure!(xhat.len() == n * p, "decoded stack size mismatch");
+        ensure!(theta_out.len() == n * p && losses.len() == n, "output slab size mismatch");
+        let (m, md) = (by.len() / n, bx.len() / n);
+        for i in 0..n {
+            let (idx, val) = w.sparse.row(i);
+            let mixed = self.combine_sparse(idx, val, xhat)?;
+            let (loss, grad) = self.grad_step(
+                &theta[i * p..(i + 1) * p],
+                &bx[i * md..(i + 1) * md],
+                &by[i * m..(i + 1) * m],
+            )?;
+            let out = &mut theta_out[i * p..(i + 1) * p];
+            out.copy_from_slice(&mixed);
+            add_diff(out, &theta[i * p..(i + 1) * p], &xhat[i * p..(i + 1) * p]);
+            axpy(out, -lr, &grad);
+            losses[i] = loss;
+        }
+        Ok(())
+    }
+
+    /// Whole-network eq.-3 round under **compressed gossip** (difference
+    /// form): both mixes read decoded stacks with each node's own
+    /// full-precision corrections added back:
+    /// `θ′_i = (W X̂)_i + (θ_i − x̂_i) − lr ϑ_i`,
+    /// `ϑ′_i = (W Ŷ)_i + (ϑ_i − ŷ_i) + ∇g(θ′_i) − ∇g(θ_i)`.
+    /// Default mirrors the actor node ops; the native backend overrides
+    /// with the threaded fan-out.
+    #[allow(clippy::too_many_arguments)]
+    fn dsgt_round_compressed_into(
+        &self,
+        w: &MixView,
+        xhat: &[f32],
+        yhat: &[f32],
+        theta: &[f32],
+        y_tr: &[f32],
+        g_old: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (_, _, p) = self.dims();
+        let n = theta.len() / p;
+        ensure!(n > 0 && theta.len() == n * p, "theta stack not a multiple of p");
+        ensure!(xhat.len() == n * p && yhat.len() == n * p, "decoded stack size mismatch");
+        ensure!(
+            theta_out.len() == n * p && y_out.len() == n * p && g_out.len() == n * p
+                && losses.len() == n,
+            "output slab size mismatch"
+        );
+        let (m, md) = (by.len() / n, bx.len() / n);
+        for i in 0..n {
+            let row = i * p..(i + 1) * p;
+            let (idx, val) = w.sparse.row(i);
+            let mut t_next = self.combine_sparse(idx, val, xhat)?;
+            add_diff(&mut t_next, &theta[row.clone()], &xhat[row.clone()]);
+            axpy(&mut t_next, -lr, &y_tr[row.clone()]);
+            let (loss, g_new) =
+                self.grad_step(&t_next, &bx[i * md..(i + 1) * md], &by[i * m..(i + 1) * m])?;
+            let mut y_next = self.combine_sparse(idx, val, yhat)?;
+            add_diff(&mut y_next, &y_tr[row.clone()], &yhat[row.clone()]);
+            axpy(&mut y_next, 1.0, &g_new);
+            axpy(&mut y_next, -1.0, &g_old[row.clone()]);
+            theta_out[row.clone()].copy_from_slice(&t_next);
+            y_out[row.clone()].copy_from_slice(&y_next);
+            g_out[row].copy_from_slice(&g_new);
+            losses[i] = loss;
+        }
+        Ok(())
+    }
+
     /// Full-shard metrics → (loss, accuracy, stationarity, consensus).
     fn eval_full(&self, theta: &[f32], shards: &[Shard]) -> Result<(f64, f64, f64, f64)>;
 
@@ -193,14 +299,17 @@ pub struct PjrtCompute {
 }
 
 impl PjrtCompute {
+    /// Wrap an already-loaded PJRT engine.
     pub fn new(engine: Engine) -> Self {
         PjrtCompute { engine }
     }
 
+    /// Load the AOT artifact set from `dir` and build the engine.
     pub fn load(dir: &std::path::Path) -> Result<Self> {
         Ok(PjrtCompute { engine: Engine::load(dir)? })
     }
 
+    /// The underlying PJRT engine (manifest, shapes, raw execute).
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
@@ -426,14 +535,18 @@ fn with_ws<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
 /// bitwise-identical to the serial path (`threads = 1`).
 #[derive(Clone, Copy, Debug)]
 pub struct NativeCompute {
+    /// Model dimensions (the pure-rust twin of the artifact shapes).
     pub model: NativeModel,
+    /// Hospital count the whole-network ops fan over.
     pub n: usize,
+    /// Minibatch size per node per step.
     pub m: usize,
     /// Worker threads for whole-network ops: 0 = auto (one per core).
     pub threads: usize,
 }
 
 impl NativeCompute {
+    /// Backend for a `d`-feature, `h`-hidden model over `n` nodes, batch `m`.
     pub fn new(d: usize, h: usize, n: usize, m: usize) -> Self {
         NativeCompute { model: NativeModel::new(d, h), n, m, threads: 0 }
     }
@@ -683,6 +796,110 @@ impl Compute for NativeCompute {
                         val,
                         theta,
                         y_tr,
+                        &y_tr[i * p..(i + 1) * p],
+                        &g_old[i * p..(i + 1) * p],
+                        &bx[i * m * d..(i + 1) * m * d],
+                        &by[i * m..(i + 1) * m],
+                        lr,
+                        t,
+                        y,
+                        g,
+                        ws,
+                    )
+                });
+            },
+        );
+        Ok(())
+    }
+
+    fn dsgd_round_compressed_into(
+        &self,
+        w: &MixView,
+        xhat: &[f32],
+        theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
+        ensure!(w.sparse.n() == n, "sparse W is {}x, compute wants n={n}", w.sparse.n());
+        ensure!(xhat.len() == n * p, "decoded stack size mismatch");
+        ensure!(theta_out.len() == n * p && losses.len() == n, "output slab size mismatch");
+        let model = &self.model;
+        let sparse = w.sparse;
+        // identical math to the trait default (decoded-stack mix, own
+        // full-precision correction, gradient at the node's true row),
+        // fanned out over disjoint slab rows
+        par_each(
+            self.pool(n),
+            theta_out.chunks_mut(p).zip(losses.iter_mut()),
+            |i, (out, loss)| {
+                let (idx, val) = sparse.row(i);
+                *loss = with_ws(|ws| {
+                    model.dsgd_node_compressed_into(
+                        idx,
+                        val,
+                        xhat,
+                        &xhat[i * p..(i + 1) * p],
+                        &theta[i * p..(i + 1) * p],
+                        &bx[i * m * d..(i + 1) * m * d],
+                        &by[i * m..(i + 1) * m],
+                        lr,
+                        out,
+                        ws,
+                    )
+                });
+            },
+        );
+        Ok(())
+    }
+
+    fn dsgt_round_compressed_into(
+        &self,
+        w: &MixView,
+        xhat: &[f32],
+        yhat: &[f32],
+        theta: &[f32],
+        y_tr: &[f32],
+        g_old: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lr: f32,
+        theta_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (n, m, p, d) = (self.n, self.m, self.model.p(), self.model.d);
+        ensure!(w.sparse.n() == n, "sparse W is {}x, compute wants n={n}", w.sparse.n());
+        ensure!(xhat.len() == n * p && yhat.len() == n * p, "decoded stack size mismatch");
+        ensure!(
+            theta_out.len() == n * p && y_out.len() == n * p && g_out.len() == n * p
+                && losses.len() == n,
+            "output slab size mismatch"
+        );
+        let model = &self.model;
+        let sparse = w.sparse;
+        par_each(
+            self.pool(n),
+            theta_out
+                .chunks_mut(p)
+                .zip(y_out.chunks_mut(p))
+                .zip(g_out.chunks_mut(p))
+                .zip(losses.iter_mut()),
+            |i, (((t, y), g), loss)| {
+                let (idx, val) = sparse.row(i);
+                *loss = with_ws(|ws| {
+                    model.dsgt_node_compressed_into(
+                        idx,
+                        val,
+                        xhat,
+                        yhat,
+                        &xhat[i * p..(i + 1) * p],
+                        &yhat[i * p..(i + 1) * p],
+                        &theta[i * p..(i + 1) * p],
                         &y_tr[i * p..(i + 1) * p],
                         &g_old[i * p..(i + 1) * p],
                         &bx[i * m * d..(i + 1) * m * d],

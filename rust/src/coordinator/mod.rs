@@ -29,9 +29,13 @@ pub use compute::{Compute, NativeCompute, PjrtCompute};
 /// Everything `run` assembled, exposed for examples/benches that need the
 /// pieces (dataset for AUC, graph for reporting, ...).
 pub struct Assembled {
+    /// The synthetic federated cohort.
     pub ds: FederatedDataset,
+    /// The hospital gossip graph.
     pub graph: Graph,
+    /// Its validated mixing matrix (Assumption 1).
     pub w: crate::linalg::Mat,
+    /// `1 − |λ₂|` of `w` — the consensus-rate knob.
     pub spectral_gap: f64,
 }
 

@@ -29,7 +29,9 @@ pub enum FeatureKind {
 /// One feature's spec.
 #[derive(Clone, Copy, Debug)]
 pub struct FeatureSpec {
+    /// Column name (CSV export header).
     pub name: &'static str,
+    /// Raw distribution family.
     pub kind: FeatureKind,
     /// Teacher loading (standardized units).
     pub ad_weight: f64,

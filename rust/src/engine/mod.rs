@@ -24,10 +24,11 @@
 //! a `NetPlan` — never a fifth copy of the loop.
 //!
 //! Determinism contract: batch order per node-sampler stream, float-op order
-//! per node, eval cadence, and the `(seed, round)`-keyed network views are
+//! per node, eval cadence, the `(seed, round)`-keyed network views, and the
+//! `(seed, round, node, kind)`-keyed compression streams (`compress`) are
 //! identical across drivers and thread counts, so trajectories are
 //! bitwise-reproducible (pinned by the `driver_equivalence` integration
-//! test, for static and dynamic network plans alike).
+//! test, for static and dynamic network plans and every compressor alike).
 
 pub mod strategy;
 
@@ -57,14 +58,20 @@ use std::borrow::Cow;
 /// one per node thread; all nodes derive the identical schedule).
 #[derive(Clone, Copy, Debug)]
 pub struct RoundEngine {
+    /// Effective local period Q.
     pub q: usize,
+    /// Derived per-round step layout (Q−1 local + 1 communication).
     pub plan: RoundPlan,
+    /// The paper's α_r = α₀/√r learning-rate schedule.
     pub sched: LrSchedule,
+    /// Total communication rounds to run.
     pub rounds: usize,
+    /// Metric-eval cadence in communication rounds.
     pub eval_every: usize,
 }
 
 impl RoundEngine {
+    /// Derive the round schedule from a config.
     pub fn from_config(cfg: &ExperimentConfig) -> Self {
         let q = cfg.algo.effective_q(cfg.q);
         let plan = RoundPlan::new(q);
@@ -122,8 +129,11 @@ pub trait Driver {
 pub struct EngineState<'a> {
     /// Rows in the θ stack (hospitals; 1 for the centralized baseline).
     pub n: usize,
+    /// Input feature dimension.
     pub d: usize,
+    /// Flat parameter count per row.
     pub p: usize,
+    /// Minibatch size per row per step.
     pub m: usize,
     /// Stacked parameters `[n, p]`.
     pub theta: Vec<f32>,
@@ -137,18 +147,35 @@ pub struct EngineState<'a> {
     /// Data shard per row (borrowed federated shards, or the owned pooled
     /// cohort for the centralized baseline).
     pub shards: Cow<'a, [Shard]>,
-    /// Local-phase batch scratch `[n, local, m, d]` / `[n, local, m]`.
+    /// Local-phase batch scratch `[n, local, m, d]`.
     pub lx: Vec<f32>,
+    /// Local-phase label scratch `[n, local, m]`.
     pub ly: Vec<f32>,
-    /// Communication-step batch scratch `[n, m, d]` / `[n, m]`.
+    /// Communication-step batch scratch `[n, m, d]`.
     pub cx: Vec<f32>,
+    /// Communication-step label scratch `[n, m]`.
     pub cy: Vec<f32>,
-    /// Loss slabs the `_into` ops write into: `[n, local]` and `[n]`.
+    /// Per-step local-phase loss slab `[n, local]`.
     pub local_losses: Vec<f64>,
+    /// Per-node communication-step loss slab `[n]`.
     pub comm_losses: Vec<f64>,
+    /// Decoded gossip stack X̂ `[n, p]` — what compressed rounds mix
+    /// (empty when `comm.compress = "none"`).
+    pub xhat: Vec<f32>,
+    /// θ-stream error-feedback residuals `[n, p]` + back buffer, swapped
+    /// per round like the θ stack (empty unless compressing with EF).
+    pub ef_theta: Vec<f32>,
+    /// Back buffer for [`EngineState::ef_theta`].
+    pub ef_theta_back: Vec<f32>,
+    /// Per-row encode scratch `[p]` (the error-compensated message v).
+    pub vbuf: Vec<f32>,
 }
 
 impl<'a> EngineState<'a> {
+    /// Allocate every slab a run needs up front (θ stacks, batch scratch,
+    /// loss slabs, and — when `comm.compress` is active — the decoded
+    /// gossip stack and error-feedback residual slabs), so steady-state
+    /// rounds never touch the allocator.
     pub fn new(
         cfg: &ExperimentConfig,
         compute: &dyn Compute,
@@ -159,6 +186,8 @@ impl<'a> EngineState<'a> {
         let n = shards.len();
         let m = cfg.m;
         let local = RoundPlan::new(cfg.algo.effective_q(cfg.q)).local_per_round;
+        let compressing = cfg.compress != "none";
+        let ef = compressing && cfg.error_feedback;
         EngineState {
             n,
             d,
@@ -174,6 +203,10 @@ impl<'a> EngineState<'a> {
             cy: vec![0.0f32; n * m],
             local_losses: vec![0.0f64; n * local],
             comm_losses: vec![0.0f64; n],
+            xhat: vec![0.0f32; if compressing { n * p } else { 0 }],
+            ef_theta: vec![0.0f32; if ef { n * p } else { 0 }],
+            ef_theta_back: vec![0.0f32; if ef { n * p } else { 0 }],
+            vbuf: vec![0.0f32; if compressing { p } else { 0 }],
         }
     }
 
@@ -242,7 +275,7 @@ impl<'a> SyncDriver<'a> {
         graph: &Graph,
         w: &Mat,
     ) -> Result<Self> {
-        let (d, h, _p) = compute.dims();
+        let (d, h, p) = compute.dims();
         if d != ds.d {
             bail!("backend d={d} vs dataset d={}", ds.d);
         }
@@ -265,9 +298,15 @@ impl<'a> SyncDriver<'a> {
             );
         }
         let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
+        // compression context: the compressor, EF toggle, and seed the
+        // per-message keys derive from — identical in the actor driver
         let strategy: Box<dyn CommStrategy> = match cfg.algo {
-            AlgoKind::Dsgd | AlgoKind::FdDsgd => Box::new(DsgdStrategy::new()),
-            AlgoKind::Dsgt | AlgoKind::FdDsgt => Box::new(DsgtStrategy::new()),
+            AlgoKind::Dsgd | AlgoKind::FdDsgd => {
+                Box::new(DsgdStrategy::new(crate::compress::GossipComm::from_config(cfg)?, p))
+            }
+            AlgoKind::Dsgt | AlgoKind::FdDsgt => {
+                Box::new(DsgtStrategy::new(crate::compress::GossipComm::from_config(cfg)?, p))
+            }
             other => bail!("{other:?} is not a decentralized gossip algorithm"),
         };
         let model = NativeModel::new(d, h);
@@ -315,6 +354,14 @@ impl<'a> SyncDriver<'a> {
                  network and would silently ignore it; dynamic plans apply to gossip \
                  algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
                 cfg.net_plan
+            );
+        }
+        if cfg.compress != "none" {
+            bail!(
+                "compress `{}` requested, but the FedAvg baseline's star exchange is \
+                 outside the gossip compression subsystem and would silently ship dense \
+                 f32; compression applies to dsgd|dsgt|fd-dsgd|fd-dsgt",
+                cfg.compress
             );
         }
         let n = ds.n_hospitals();
@@ -371,6 +418,14 @@ impl<'a> SyncDriver<'a> {
                  at all and would silently ignore it; dynamic plans apply to gossip \
                  algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
                 cfg.net_plan
+            );
+        }
+        if cfg.compress != "none" {
+            bail!(
+                "compress `{}` requested, but the centralized baseline has no gossip \
+                 messages to compress and would silently ignore it; compression applies \
+                 to dsgd|dsgt|fd-dsgd|fd-dsgt",
+                cfg.compress
             );
         }
         let model = NativeModel::new(d, h);
@@ -492,13 +547,17 @@ impl Driver for SyncDriver<'_> {
             &mut self.st,
             self.compute,
             &RoundNet { w: &self.wf, sparse: &self.wsp, online: &self.online },
+            round,
             lr,
         )?;
         if let Some(acct) = self.acct.as_mut() {
             match self.strategy.cost() {
-                CommCost::Gossip { kinds } => {
+                CommCost::Gossip { kinds, kind_bytes } => {
                     acct.local_compute(1, self.compute_s_per_step);
-                    acct.comm_round(self.round_edges, self.st.p, kinds);
+                    // per-kind encoded sizes — compressed runs charge the
+                    // bytes that actually cross the wire, matching the
+                    // channel netsim message for message
+                    acct.comm_round(self.round_edges, &kind_bytes[..kinds as usize]);
                 }
                 CommCost::Star => {
                     acct.local_compute(1, self.compute_s_per_step);
@@ -675,6 +734,41 @@ mod tests {
             churn.rows.last().unwrap().bytes,
             stat.rows.last().unwrap().bytes
         );
+    }
+
+    #[test]
+    fn compressed_runs_train_and_charge_encoded_bytes() {
+        for (algo, compress) in [
+            (AlgoKind::FdDsgd, "q8"),
+            (AlgoKind::FdDsgd, "q4"),
+            (AlgoKind::FdDsgd, "topk"),
+            (AlgoKind::FdDsgt, "q8"),
+            (AlgoKind::FdDsgt, "topk"),
+        ] {
+            let (mut cfg, compute, ds, graph, w) = setup(algo);
+            cfg.total_steps = 60;
+            let (dense, _) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+            cfg.compress = compress.into();
+            cfg.topk_frac = 0.1;
+            let (comp, _) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+            let first = comp.rows.first().unwrap().loss;
+            let last = comp.rows.last().unwrap().loss;
+            assert!(last.is_finite() && last < first, "{algo:?}/{compress}: {first} -> {last}");
+            let (bd, bc) =
+                (dense.rows.last().unwrap().bytes, comp.rows.last().unwrap().bytes);
+            assert!(bc < bd / 3, "{algo:?}/{compress}: {bc} vs dense {bd}");
+        }
+    }
+
+    #[test]
+    fn baselines_reject_compression_loudly() {
+        let (mut cfg, compute, ds, ..) = setup(AlgoKind::FedAvg);
+        cfg.compress = "q8".into();
+        let err = train_fedavg(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("compress"), "{err}");
+        cfg.algo = AlgoKind::Centralized;
+        let err = train_centralized(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("compress"), "{err}");
     }
 
     #[test]

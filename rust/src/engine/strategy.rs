@@ -8,6 +8,15 @@
 //! the strategy a [`RoundNet`] — that round's mixing matrix and online mask
 //! from the `graph::schedule` layer — so time-varying topologies (rewire,
 //! edge dropout, node churn) flow through without the strategy changing.
+//! Gossip strategies also carry the run's [`GossipComm`] compression
+//! context: when a compressor is configured every outgoing row is encoded
+//! under its `(seed, round, node, kind)` key and the round applies the
+//! **difference-form** update — mix the *decoded* stack, then add back each
+//! node's own full-precision correction (DESIGN.md §10) — exactly mirroring
+//! what the actor driver puts on the channel netsim, so fused and actor
+//! trajectories stay bitwise-equal under every compressor.  The opt-in
+//! error-feedback residual (`comm.error_feedback`) additionally
+//! error-compensates the outgoing messages.
 //! What a strategy does NOT own: the round loop, the lr schedule, batch
 //! sampling streams, or metrics — those are engine machinery, identical for
 //! every algorithm.  Adding an algorithm = implementing this trait; the
@@ -16,8 +25,10 @@
 use super::EngineState;
 use crate::algo::axpy;
 use crate::algo::native::NativeModel;
+use crate::compress::{add_residual, decode_into, residual_update, Compressor, GossipComm, MsgKey};
 use crate::coordinator::compute::{Compute, MixView};
 use crate::mixing::SparseW;
+use crate::netsim::PayloadKind;
 use anyhow::Result;
 
 /// What one communication round costs on the wire (drives the analytic
@@ -25,9 +36,16 @@ use anyhow::Result;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommCost {
     /// Synchronous gossip over every *active* edge of the round's network
-    /// view, `kinds` payloads per edge (1 = θ only, 2 = θ and the DSGT
-    /// tracker ϑ).  The per-round edge count comes from the schedule.
-    Gossip { kinds: u32 },
+    /// view.  `kinds` payloads per edge (1 = θ only, 2 = θ and the DSGT
+    /// tracker ϑ); `kind_bytes[..kinds]` holds each payload's *encoded*
+    /// wire size, so compressed runs are charged at what actually crosses
+    /// the wire.  The per-round edge count comes from the schedule.
+    Gossip {
+        /// Payload kinds per edge (1 = θ, 2 = θ + ϑ).
+        kinds: u32,
+        /// Encoded bytes of each kind (entries past `kinds` are unused).
+        kind_bytes: [u64; 2],
+    },
     /// Star-network client↑/server↓ exchange (FedAvg).
     Star,
     /// No communication (fusion-center baseline).
@@ -47,6 +65,7 @@ pub struct RoundNet<'a> {
 }
 
 impl RoundNet<'_> {
+    /// Is every node participating this round (no churn)?
     pub fn all_online(&self) -> bool {
         self.online.iter().all(|&b| b)
     }
@@ -68,11 +87,87 @@ fn restore_offline_rows(next: &mut [f32], prev: &[f32], online: &[bool], p: usiz
     }
 }
 
+/// Error-feedback-compress one whole payload stack for this round: per
+/// *online* row `i`, build the error-compensated message `v = x_i + e_i`,
+/// encode it under the deterministic `(seed, round, i, kind)` key, decode
+/// the wire message into the `xhat` row (what neighbors — and the node
+/// itself — mix), and write the new residual `v − x̂` into the residual back
+/// slab.  Offline rows carry their residual forward untouched; their
+/// `xhat` row is left stale — online neighbors never mix it (absorbed
+/// weights are zero), and while the offline node's own kernel row does
+/// read it through its identity self-weight, that whole output row is
+/// discarded by `restore_offline_rows` right after the round.
+///
+/// This is the fused twin of the per-node EF step the actor driver runs
+/// before broadcasting — both call the same `compress::{add_residual,
+/// residual_update}` helpers and the same encode/decode, so the decoded
+/// stacks (and therefore the trajectories) agree bitwise.
+#[allow(clippy::too_many_arguments)]
+fn ef_compress_stack(
+    comp: &dyn Compressor,
+    ef: bool,
+    seed: u64,
+    round: usize,
+    kind: PayloadKind,
+    stack: &[f32],
+    online: &[bool],
+    p: usize,
+    e: &[f32],
+    e_back: &mut [f32],
+    xhat: &mut [f32],
+    vbuf: &mut [f32],
+) {
+    let n = stack.len() / p;
+    for i in 0..n {
+        let row = i * p..(i + 1) * p;
+        if !online[i] {
+            if ef {
+                e_back[row.clone()].copy_from_slice(&e[row]);
+            }
+            continue;
+        }
+        if ef {
+            add_residual(&stack[row.clone()], &e[row.clone()], vbuf);
+        } else {
+            vbuf.copy_from_slice(&stack[row.clone()]);
+        }
+        let enc = comp.encode(vbuf, MsgKey::new(seed, round, i, kind));
+        decode_into(&enc, &mut xhat[row.clone()]);
+        if ef {
+            residual_update(vbuf, &xhat[row.clone()], &mut e_back[row]);
+        }
+    }
+}
+
 /// The communication update of Algorithm 1 — eq. 2, eq. 3, a server
 /// average, or a plain SGD step — plus its wire cost and the metric eval.
 /// (The run-log label is the driver's concern — `cfg.algo.name()` — so
 /// strategies carry no display name.)
+///
+/// # Examples
+///
+/// Strategies are selected by the config's algorithm and run through the
+/// engine's entry points — a minimal end-to-end DSGD round sequence:
+///
+/// ```
+/// use decfl::config::{AlgoKind, Backend, ExperimentConfig};
+/// use decfl::coordinator::{assemble, run_on};
+///
+/// let mut cfg = ExperimentConfig::default();
+/// cfg.backend = Backend::Native;
+/// cfg.algo = AlgoKind::FdDsgd;   // → DsgdStrategy under the round engine
+/// cfg.n = 4;
+/// cfg.hidden = 8;
+/// cfg.m = 4;
+/// cfg.q = 2;
+/// cfg.total_steps = 4;           // two communication rounds
+/// cfg.records_per_hospital = 40;
+/// let asm = assemble(&cfg).unwrap();
+/// let log = run_on(&cfg, &asm).unwrap();
+/// assert!(log.rows.last().unwrap().loss.is_finite());
+/// ```
 pub trait CommStrategy {
+    /// Wire cost of one communication round (per-kind encoded sizes).
     fn cost(&self) -> CommCost;
 
     /// Pre-loop initialization (e.g. DSGT's Y⁰ = G⁰ = ∇g(θ⁰) on a fresh
@@ -81,13 +176,16 @@ pub trait CommStrategy {
         Ok(())
     }
 
-    /// Apply the communication update at learning rate `lr` over this
-    /// round's network view, consuming one gradient per stack row.
+    /// Apply the communication update of round `round` (1-based) at learning
+    /// rate `lr` over this round's network view, consuming one gradient per
+    /// stack row.  The round index keys the deterministic compression
+    /// streams (`compress::MsgKey`).
     fn comm_update(
         &mut self,
         st: &mut EngineState,
         compute: &dyn Compute,
         net: &RoundNet,
+        round: usize,
         lr: f32,
     ) -> Result<()>;
 
@@ -102,19 +200,24 @@ pub trait CommStrategy {
 
 /// Eq. 2: `θ_i ← Σ_j w_ij θ_j − α ∇g_i(θ_i)` (covers DSGD and FD-DSGD —
 /// the local period lives in the engine, not here; the round's `W` arrives
-/// through [`RoundNet`]).
-pub struct DsgdStrategy;
+/// through [`RoundNet`]).  With a configured compressor the round runs the
+/// difference-form update over the decoded stack (see the module docs).
+pub struct DsgdStrategy {
+    comm: GossipComm,
+    msg_bytes: u64,
+}
 
 impl DsgdStrategy {
-    #[allow(clippy::new_without_default)]
-    pub fn new() -> Self {
-        DsgdStrategy
+    /// Build for parameter size `p` under the given compression context.
+    pub fn new(comm: GossipComm, p: usize) -> Self {
+        let msg_bytes = comm.msg_bytes(p);
+        DsgdStrategy { comm, msg_bytes }
     }
 }
 
 impl CommStrategy for DsgdStrategy {
     fn cost(&self) -> CommCost {
-        CommCost::Gossip { kinds: 1 }
+        CommCost::Gossip { kinds: 1, kind_bytes: [self.msg_bytes, 0] }
     }
 
     fn comm_update(
@@ -122,21 +225,53 @@ impl CommStrategy for DsgdStrategy {
         st: &mut EngineState,
         compute: &dyn Compute,
         net: &RoundNet,
+        round: usize,
         lr: f32,
     ) -> Result<()> {
         // Every row draws its batch every round — the sampler streams stay
         // keyed by (seed, row) alone (§7), independent of the network plan;
         // offline rows discard theirs below.
         st.draw_comm_batches();
-        compute.dsgd_round_into(
-            &net.mix(),
-            &st.theta,
-            &st.cx,
-            &st.cy,
-            lr,
-            &mut st.theta_back,
-            &mut st.comm_losses,
-        )?;
+        if let Some(comp) = &self.comm.comp {
+            let ef = self.comm.error_feedback;
+            ef_compress_stack(
+                comp.as_ref(),
+                ef,
+                self.comm.seed,
+                round,
+                PayloadKind::Params,
+                &st.theta,
+                net.online,
+                st.p,
+                &st.ef_theta,
+                &mut st.ef_theta_back,
+                &mut st.xhat,
+                &mut st.vbuf,
+            );
+            if ef {
+                std::mem::swap(&mut st.ef_theta, &mut st.ef_theta_back);
+            }
+            compute.dsgd_round_compressed_into(
+                &net.mix(),
+                &st.xhat,
+                &st.theta,
+                &st.cx,
+                &st.cy,
+                lr,
+                &mut st.theta_back,
+                &mut st.comm_losses,
+            )?;
+        } else {
+            compute.dsgd_round_into(
+                &net.mix(),
+                &st.theta,
+                &st.cx,
+                &st.cy,
+                lr,
+                &mut st.theta_back,
+                &mut st.comm_losses,
+            )?;
+        }
         if !net.all_online() {
             restore_offline_rows(&mut st.theta_back, &st.theta, net.online, st.p);
         }
@@ -151,7 +286,10 @@ impl CommStrategy for DsgdStrategy {
 /// the tracker with the gradient difference (covers DSGT and FD-DSGT).
 /// Offline rounds leave a node's θ, ϑ, and G untouched.  The tracker and
 /// gradient stacks are double-buffered like the engine's θ stack, so a
-/// steady-state round allocates nothing.
+/// steady-state round allocates nothing.  Under compression both payload
+/// streams (θ and ϑ) are encoded independently, each with its own
+/// `(seed, round, node, kind)` noise stream, difference-form correction,
+/// and (when EF is opted in) residual slabs.
 pub struct DsgtStrategy {
     /// Tracker stack Y `[n, p]` + its back buffer.
     y: Vec<f32>,
@@ -159,18 +297,37 @@ pub struct DsgtStrategy {
     /// Previous-gradient stack G `[n, p]` + its back buffer.
     g: Vec<f32>,
     g_back: Vec<f32>,
+    /// Decoded tracker stack Ŷ `[n, p]` (compressed runs only).
+    yhat: Vec<f32>,
+    /// Tracker-stream EF residuals + back buffer (compressed + EF only).
+    ef_y: Vec<f32>,
+    ef_y_back: Vec<f32>,
+    comm: GossipComm,
+    msg_bytes: u64,
 }
 
 impl DsgtStrategy {
-    #[allow(clippy::new_without_default)]
-    pub fn new() -> Self {
-        DsgtStrategy { y: Vec::new(), y_back: Vec::new(), g: Vec::new(), g_back: Vec::new() }
+    /// Build for parameter size `p` under the given compression context.
+    pub fn new(comm: GossipComm, p: usize) -> Self {
+        let msg_bytes = comm.msg_bytes(p);
+        DsgtStrategy {
+            y: Vec::new(),
+            y_back: Vec::new(),
+            g: Vec::new(),
+            g_back: Vec::new(),
+            yhat: Vec::new(),
+            ef_y: Vec::new(),
+            ef_y_back: Vec::new(),
+            comm,
+            msg_bytes,
+        }
     }
 }
 
 impl CommStrategy for DsgtStrategy {
     fn cost(&self) -> CommCost {
-        CommCost::Gossip { kinds: 2 } // θ and ϑ
+        // θ and ϑ, each charged at its own encoded size
+        CommCost::Gossip { kinds: 2, kind_bytes: [self.msg_bytes, self.msg_bytes] }
     }
 
     fn init(&mut self, st: &mut EngineState, compute: &dyn Compute) -> Result<()> {
@@ -186,6 +343,13 @@ impl CommStrategy for DsgtStrategy {
         self.g = g0;
         self.y_back = vec![0.0f32; n * p];
         self.g_back = vec![0.0f32; n * p];
+        if self.comm.enabled() {
+            self.yhat = vec![0.0f32; n * p];
+            if self.comm.error_feedback {
+                self.ef_y = vec![0.0f32; n * p];
+                self.ef_y_back = vec![0.0f32; n * p];
+            }
+        }
         Ok(())
     }
 
@@ -194,22 +358,74 @@ impl CommStrategy for DsgtStrategy {
         st: &mut EngineState,
         compute: &dyn Compute,
         net: &RoundNet,
+        round: usize,
         lr: f32,
     ) -> Result<()> {
         st.draw_comm_batches();
-        compute.dsgt_round_into(
-            &net.mix(),
-            &st.theta,
-            &self.y,
-            &self.g,
-            &st.cx,
-            &st.cy,
-            lr,
-            &mut st.theta_back,
-            &mut self.y_back,
-            &mut self.g_back,
-            &mut st.comm_losses,
-        )?;
+        if let Some(comp) = &self.comm.comp {
+            let ef = self.comm.error_feedback;
+            ef_compress_stack(
+                comp.as_ref(),
+                ef,
+                self.comm.seed,
+                round,
+                PayloadKind::Params,
+                &st.theta,
+                net.online,
+                st.p,
+                &st.ef_theta,
+                &mut st.ef_theta_back,
+                &mut st.xhat,
+                &mut st.vbuf,
+            );
+            ef_compress_stack(
+                comp.as_ref(),
+                ef,
+                self.comm.seed,
+                round,
+                PayloadKind::Tracker,
+                &self.y,
+                net.online,
+                st.p,
+                &self.ef_y,
+                &mut self.ef_y_back,
+                &mut self.yhat,
+                &mut st.vbuf,
+            );
+            if ef {
+                std::mem::swap(&mut st.ef_theta, &mut st.ef_theta_back);
+                std::mem::swap(&mut self.ef_y, &mut self.ef_y_back);
+            }
+            compute.dsgt_round_compressed_into(
+                &net.mix(),
+                &st.xhat,
+                &self.yhat,
+                &st.theta,
+                &self.y,
+                &self.g,
+                &st.cx,
+                &st.cy,
+                lr,
+                &mut st.theta_back,
+                &mut self.y_back,
+                &mut self.g_back,
+                &mut st.comm_losses,
+            )?;
+        } else {
+            compute.dsgt_round_into(
+                &net.mix(),
+                &st.theta,
+                &self.y,
+                &self.g,
+                &st.cx,
+                &st.cy,
+                lr,
+                &mut st.theta_back,
+                &mut self.y_back,
+                &mut self.g_back,
+                &mut st.comm_losses,
+            )?;
+        }
         if !net.all_online() {
             restore_offline_rows(&mut st.theta_back, &st.theta, net.online, st.p);
             restore_offline_rows(&mut self.y_back, &self.y, net.online, st.p);
@@ -231,6 +447,7 @@ impl CommStrategy for DsgtStrategy {
 pub struct FedAvgStrategy;
 
 impl FedAvgStrategy {
+    /// The (stateless) FedAvg update.
     #[allow(clippy::new_without_default)]
     pub fn new() -> Self {
         FedAvgStrategy
@@ -247,6 +464,7 @@ impl CommStrategy for FedAvgStrategy {
         st: &mut EngineState,
         compute: &dyn Compute,
         _net: &RoundNet,
+        _round: usize,
         lr: f32,
     ) -> Result<()> {
         let (n, p) = (st.n, st.p);
@@ -290,6 +508,7 @@ pub struct CentralizedStrategy {
 }
 
 impl CentralizedStrategy {
+    /// Fusion-center SGD evaluated through the given native twin.
     pub fn new(model: NativeModel) -> Self {
         CentralizedStrategy { model }
     }
@@ -305,6 +524,7 @@ impl CommStrategy for CentralizedStrategy {
         st: &mut EngineState,
         compute: &dyn Compute,
         _net: &RoundNet,
+        _round: usize,
         lr: f32,
     ) -> Result<()> {
         st.draw_comm_batches();
@@ -322,13 +542,28 @@ impl CommStrategy for CentralizedStrategy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Spec;
 
     #[test]
-    fn costs_match_payload_kinds() {
-        assert_eq!(DsgdStrategy::new().cost(), CommCost::Gossip { kinds: 1 });
-        assert_eq!(DsgtStrategy::new().cost(), CommCost::Gossip { kinds: 2 });
+    fn costs_match_payload_kinds_at_encoded_sizes() {
+        let p = 100usize;
+        let dsgd = DsgdStrategy::new(GossipComm::none(0), p);
+        assert_eq!(dsgd.cost(), CommCost::Gossip { kinds: 1, kind_bytes: [400, 0] });
+        let dsgt = DsgtStrategy::new(GossipComm::none(0), p);
+        assert_eq!(dsgt.cost(), CommCost::Gossip { kinds: 2, kind_bytes: [400, 400] });
         assert_eq!(FedAvgStrategy::new().cost(), CommCost::Star);
         assert_eq!(CentralizedStrategy::new(NativeModel::new(4, 2)).cost(), CommCost::None);
+        // compressed strategies charge the encoded wire size per kind
+        let q4 = GossipComm { comp: Spec::Q4.build(), error_feedback: true, seed: 0 };
+        let dsgd_q4 = DsgdStrategy::new(q4, p);
+        assert_eq!(dsgd_q4.cost(), CommCost::Gossip { kinds: 1, kind_bytes: [54, 0] });
+        let tk = GossipComm {
+            comp: Spec::TopK { frac: 0.1 }.build(),
+            error_feedback: true,
+            seed: 0,
+        };
+        let dsgt_tk = DsgtStrategy::new(tk, p);
+        assert_eq!(dsgt_tk.cost(), CommCost::Gossip { kinds: 2, kind_bytes: [80, 80] });
     }
 
     #[test]
@@ -337,5 +572,30 @@ mod tests {
         let mut next = vec![9.0f32, 9.0, 8.0, 8.0, 7.0, 7.0];
         restore_offline_rows(&mut next, &prev, &[true, false, true], 2);
         assert_eq!(next, vec![9.0, 9.0, 2.0, 2.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn ef_compress_stack_identity_reconstructs_and_zeroes_residual() {
+        use crate::compress::Identity;
+        let (n, p) = (3usize, 4usize);
+        let stack: Vec<f32> = (0..n * p).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let online = vec![true, false, true];
+        let e: Vec<f32> = vec![0.5f32; n * p];
+        let mut e_back = vec![0.0f32; n * p];
+        let mut xhat = vec![0.0f32; n * p];
+        let mut vbuf = vec![0.0f32; p];
+        ef_compress_stack(
+            &Identity, true, 7, 2, PayloadKind::Params, &stack, &online, p, &e, &mut e_back,
+            &mut xhat, &mut vbuf,
+        );
+        // online rows: x̂ = θ + e exactly, residual collapses to zero
+        for i in [0usize, 2] {
+            for j in 0..p {
+                assert_eq!(xhat[i * p + j], stack[i * p + j] + 0.5);
+                assert_eq!(e_back[i * p + j], 0.0);
+            }
+        }
+        // offline row: residual carried forward untouched
+        assert!(e_back[p..2 * p].iter().all(|&r| r == 0.5));
     }
 }

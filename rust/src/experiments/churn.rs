@@ -15,13 +15,20 @@ use crate::graph::Topology;
 use crate::jsonl::{self, Json};
 use anyhow::Result;
 
+/// One network plan's outcome on the shared base network.
 #[derive(Clone, Debug)]
 pub struct ChurnRow {
+    /// Plan label (`static`, `rewire@5`, `edge-drop 0.30`, ...).
     pub plan: String,
+    /// Final training loss.
     pub final_loss: f64,
+    /// Final consensus error.
     pub final_consensus: f64,
+    /// Communication rounds run.
     pub comm_rounds: u64,
+    /// Total bytes on the wire.
     pub bytes: u64,
+    /// Simulated wall time, seconds.
     pub sim_time_s: f64,
 }
 
@@ -77,6 +84,7 @@ pub fn run(cfg: &ExperimentConfig, drops: &[f64], churns: &[f64]) -> Result<Vec<
     Ok(rows)
 }
 
+/// Print the plan-vs-static table.
 pub fn print_table(rows: &[ChurnRow]) {
     println!("EXP-N1 — time-varying networks vs the static baseline (shared base graph)");
     println!(
@@ -121,6 +129,7 @@ pub fn findings(rows: &[ChurnRow]) -> Vec<String> {
     out
 }
 
+/// JSON dump of the sweep.
 pub fn rows_json(rows: &[ChurnRow]) -> Json {
     Json::Arr(
         rows.iter()

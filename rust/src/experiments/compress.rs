@@ -1,0 +1,230 @@
+//! EXP-C1: the accuracy-vs-bytes frontier — gossip compressors × topologies
+//! on ONE shared cohort per topology.
+//!
+//! Every row trains the same algorithm, schedule, and seed; only the
+//! compressor (and the base topology) varies, so the table isolates what
+//! lossy messaging costs in final loss/accuracy against what it saves on the
+//! wire.  The `none` row of each topology is the dense-f32 anchor the
+//! reduction factors and accuracy deltas are measured against.  Byte counts
+//! are the analytic accountant's *encoded* charges, which match the channel
+//! netsim message for message (pinned by `tests/driver_equivalence.rs`).
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{assemble, run_on};
+use crate::jsonl::{self, Json};
+use anyhow::Result;
+
+/// One (topology, compressor) cell of the frontier.
+#[derive(Clone, Debug)]
+pub struct CompressRow {
+    /// Base topology of this arm.
+    pub topology: String,
+    /// Compressor label (`none`, `q8`, `q4`, `topk@0.05`, ...).
+    pub compressor: String,
+    /// Final training loss.
+    pub final_loss: f64,
+    /// Final training accuracy.
+    pub final_acc: f64,
+    /// Final consensus error.
+    pub final_consensus: f64,
+    /// Communication rounds run.
+    pub comm_rounds: u64,
+    /// Total bytes on the wire (encoded sizes).
+    pub bytes: u64,
+    /// Dense-f32 bytes of the same topology's `none` row (the anchor).
+    pub dense_bytes: u64,
+}
+
+impl CompressRow {
+    /// Bytes-on-wire reduction factor vs the dense anchor (1.0 for `none`).
+    pub fn reduction(&self) -> f64 {
+        if self.bytes == 0 {
+            return 1.0;
+        }
+        self.dense_bytes as f64 / self.bytes as f64
+    }
+}
+
+fn run_one(
+    cfg: &ExperimentConfig,
+    topology: &str,
+    compressor: &str,
+    topk_frac: f64,
+) -> Result<CompressRow> {
+    let mut c = cfg.clone();
+    c.topology = topology.to_string();
+    c.compress = compressor.to_string();
+    c.topk_frac = topk_frac;
+    c.validate()?;
+    let asm = assemble(&c)?;
+    let log = run_on(&c, &asm)?;
+    let last = log.rows.last().expect("run produced no metric rows");
+    let label = crate::compress::Spec::parse(&c.compress, c.topk_frac)?.label();
+    Ok(CompressRow {
+        topology: topology.to_string(),
+        compressor: label,
+        final_loss: last.loss,
+        final_acc: last.accuracy,
+        final_consensus: last.consensus,
+        comm_rounds: last.comm_rounds,
+        bytes: last.bytes,
+        dense_bytes: 0, // filled by the caller from the `none` anchor
+    })
+}
+
+/// Sweep `compressors` (plus one top-k arm per entry of `fracs`) against the
+/// dense baseline on every topology of `topos`.  The same cohort, seed, and
+/// round schedule back every row of one topology.
+pub fn run(
+    cfg: &ExperimentConfig,
+    compressors: &[String],
+    fracs: &[f64],
+    topos: &[String],
+) -> Result<Vec<CompressRow>> {
+    let mut rows = Vec::new();
+    for topo in topos {
+        let anchor = run_one(cfg, topo, "none", cfg.topk_frac)?;
+        let dense_bytes = anchor.bytes;
+        let mut topo_rows = vec![anchor];
+        for comp in compressors {
+            if comp == "none" {
+                continue; // the anchor row already covers it
+            }
+            if comp == "topk" || comp == "top-k" {
+                continue; // the --fracs axis owns the top-k arms
+            }
+            topo_rows.push(run_one(cfg, topo, comp, cfg.topk_frac)?);
+        }
+        for &frac in fracs {
+            topo_rows.push(run_one(cfg, topo, "topk", frac)?);
+        }
+        for r in &mut topo_rows {
+            r.dense_bytes = dense_bytes;
+        }
+        rows.extend(topo_rows);
+    }
+    Ok(rows)
+}
+
+/// Print the frontier table.
+pub fn print_table(rows: &[CompressRow]) {
+    println!("EXP-C1 — accuracy-vs-bytes frontier (shared cohort per topology)");
+    println!(
+        "{:<10} {:<12} {:>10} {:>9} {:>14} {:>10} {:>10}",
+        "topology", "compressor", "final_loss", "final_acc", "consensus", "MBytes", "reduction"
+    );
+    for r in rows {
+        println!(
+            "{:<10} {:<12} {:>10.4} {:>9.3} {:>14.4e} {:>10.2} {:>9.1}x",
+            r.topology,
+            r.compressor,
+            r.final_loss,
+            r.final_acc,
+            r.final_consensus,
+            r.bytes as f64 / 1e6,
+            r.reduction()
+        );
+    }
+}
+
+/// Human-readable observations: per compressor, the wire savings and the
+/// accuracy cost relative to the same topology's dense anchor.
+pub fn findings(rows: &[CompressRow]) -> Vec<String> {
+    let mut out = Vec::new();
+    for r in rows.iter().filter(|r| r.compressor != "none") {
+        let Some(anchor) = rows
+            .iter()
+            .find(|a| a.compressor == "none" && a.topology == r.topology)
+        else {
+            continue;
+        };
+        let acc_delta = 100.0 * (r.final_acc - anchor.final_acc);
+        out.push(format!(
+            "{} on {}: {:.1}x fewer bytes, accuracy {:+.2}% vs uncompressed",
+            r.compressor,
+            r.topology,
+            r.reduction(),
+            acc_delta
+        ));
+    }
+    out
+}
+
+/// JSON dump of the frontier.
+pub fn rows_json(rows: &[CompressRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                jsonl::obj(vec![
+                    ("topology", jsonl::s(&r.topology)),
+                    ("compressor", jsonl::s(&r.compressor)),
+                    ("final_loss", jsonl::num(r.final_loss)),
+                    ("final_acc", jsonl::num(r.final_acc)),
+                    ("final_consensus", jsonl::num(r.final_consensus)),
+                    ("comm_rounds", jsonl::num(r.comm_rounds as f64)),
+                    ("bytes", jsonl::num(r.bytes as f64)),
+                    ("reduction", jsonl::num(r.reduction())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Backend, Mode};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.mode = Mode::Fused;
+        cfg.algo = AlgoKind::FdDsgd;
+        cfg.n = 5;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 4;
+        cfg.total_steps = 32;
+        cfg.eval_every = 4;
+        cfg.records_per_hospital = 60;
+        cfg
+    }
+
+    #[test]
+    fn frontier_covers_compressors_and_topologies() {
+        let rows = run(
+            &tiny_cfg(),
+            &["q8".into(), "q4".into()],
+            &[0.1],
+            &["ring".into(), "er".into()],
+        )
+        .unwrap();
+        // per topology: none + q8 + q4 + topk@0.1
+        assert_eq!(rows.len(), 8);
+        for topo in ["ring", "er"] {
+            let anchor = rows
+                .iter()
+                .find(|r| r.topology == topo && r.compressor == "none")
+                .unwrap();
+            assert_eq!(anchor.reduction(), 1.0);
+            for r in rows.iter().filter(|r| r.topology == topo && r.compressor != "none") {
+                assert!(r.final_loss.is_finite(), "{}/{}", r.topology, r.compressor);
+                assert!(r.bytes < anchor.bytes, "{}/{}", r.topology, r.compressor);
+                assert!(r.reduction() > 3.0, "{}/{}: {}", r.topology, r.compressor, r.reduction());
+                assert_eq!(r.comm_rounds, anchor.comm_rounds);
+            }
+        }
+        // findings: one line per compressed row
+        assert_eq!(findings(&rows).len(), 6);
+    }
+
+    #[test]
+    fn topk_fracs_drive_the_frontier_ends() {
+        let rows = run(&tiny_cfg(), &[], &[0.1, 0.05], &["ring".into()]).unwrap();
+        assert_eq!(rows.len(), 3);
+        let r10 = rows.iter().find(|r| r.compressor == "topk@0.10").unwrap();
+        let r05 = rows.iter().find(|r| r.compressor == "topk@0.05").unwrap();
+        assert!(r05.bytes < r10.bytes, "sparser top-k ships fewer bytes");
+        assert!(r05.reduction() >= 8.0, "top-k 5% crosses the 8x mark: {}", r05.reduction());
+    }
+}

@@ -17,15 +17,23 @@ use anyhow::Result;
 
 /// Fig. 1 left: the hospital network.
 pub struct GraphReport {
+    /// The generated hospital graph.
     pub graph: Graph,
+    /// Force-directed 2-d layout, one point per node.
     pub coords: Vec<(f64, f64)>,
+    /// Graphviz DOT export.
     pub dot: String,
+    /// Per-node degrees.
     pub degrees: Vec<usize>,
+    /// Graph diameter.
     pub diameter: usize,
+    /// `|λ₂|` of the Metropolis mixing matrix.
     pub second_eig: f64,
+    /// `1 − |λ₂|`.
     pub spectral_gap: f64,
 }
 
+/// Build the Fig. 1L network report from a config.
 pub fn hospital_graph(cfg: &ExperimentConfig) -> Result<GraphReport> {
     let topo = Topology::parse(&cfg.topology)?;
     let mut rng = Pcg64::new(cfg.seed, 0x6EA9);
@@ -46,6 +54,7 @@ pub fn hospital_graph(cfg: &ExperimentConfig) -> Result<GraphReport> {
 }
 
 impl GraphReport {
+    /// JSON dump (edges, layout, spectra) for re-plotting.
     pub fn to_json(&self) -> Json {
         jsonl::obj(vec![
             ("n", jsonl::num(self.graph.n() as f64)),
@@ -69,6 +78,7 @@ impl GraphReport {
         ])
     }
 
+    /// Human-readable summary (degrees, diameter, spectra).
     pub fn print_summary(&self) {
         let g = &self.graph;
         println!("Fig.1L — hospital network ({} nodes, {} edges)", g.n(), g.edge_count());
@@ -83,12 +93,17 @@ impl GraphReport {
 
 /// Fig. 1 right: t-SNE of `hospitals` (default 3) × `per_hospital` samples.
 pub struct TsneReport {
+    /// 2-d embedding, one row per sample.
     pub embedding: Mat,
+    /// Hospital index of each embedded sample.
     pub labels: Vec<usize>,
+    /// Silhouette score of the hospital clusters.
     pub silhouette: f64,
+    /// The hospitals that were embedded.
     pub hospitals: Vec<usize>,
 }
 
+/// Build the Fig. 1R t-SNE report.
 pub fn tsne_hospitals(
     cfg: &ExperimentConfig,
     hospitals: &[usize],
@@ -123,6 +138,7 @@ pub fn tsne_hospitals(
 }
 
 impl TsneReport {
+    /// JSON dump (points, labels, silhouette) for re-plotting.
     pub fn to_json(&self) -> Json {
         jsonl::obj(vec![
             ("hospitals", jsonl::arr_f64(&self.hospitals.iter().map(|&h| h as f64).collect::<Vec<_>>())),
@@ -141,6 +157,7 @@ impl TsneReport {
         ])
     }
 
+    /// Human-readable summary with the silhouette verdict.
     pub fn print_summary(&self) {
         println!(
             "Fig.1R — t-SNE of hospitals {:?}: {} points, silhouette {:.3} \

@@ -18,8 +18,11 @@ use anyhow::Result;
 pub const FIG2_ALGOS: [AlgoKind; 4] =
     [AlgoKind::Dsgd, AlgoKind::Dsgt, AlgoKind::FdDsgd, AlgoKind::FdDsgt];
 
+/// The four Fig. 2 curves plus the shared network's spectral gap.
 pub struct Fig2Result {
+    /// One metric log per algorithm, in [`FIG2_ALGOS`] order.
     pub logs: Vec<RunLog>,
+    /// `1 − |λ₂|` of the shared mixing matrix.
     pub spectral_gap: f64,
 }
 
@@ -31,6 +34,7 @@ pub fn run(cfg: &ExperimentConfig) -> Result<Fig2Result> {
     run_with(cfg, &asm)
 }
 
+/// Run the Fig. 2 comparison on pre-assembled pieces (shared cohort).
 pub fn run_with(cfg: &ExperimentConfig, asm: &Assembled) -> Result<Fig2Result> {
     let mut logs = Vec::with_capacity(FIG2_ALGOS.len());
     for algo in FIG2_ALGOS {
@@ -48,6 +52,7 @@ pub fn run_with(cfg: &ExperimentConfig, asm: &Assembled) -> Result<Fig2Result> {
 }
 
 impl Fig2Result {
+    /// JSON dump of all four curves.
     pub fn to_json(&self) -> Json {
         jsonl::obj(vec![
             ("spectral_gap", jsonl::num(self.spectral_gap)),

@@ -1,8 +1,10 @@
 //! Experiment harnesses — one per paper figure/claim (DESIGN.md §5).
-//! Filled by the fig1/fig2/speedup/sweep modules; each produces both a
-//! human-readable table on stdout and a JSON dump for re-plotting.
+//! Filled by the fig1/fig2/speedup/sweep/churn/compress modules; each
+//! produces both a human-readable table on stdout and a JSON dump for
+//! re-plotting.
 
 pub mod churn;
+pub mod compress;
 pub mod fig1;
 pub mod fig2;
 pub mod speedup;

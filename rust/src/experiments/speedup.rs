@@ -13,20 +13,29 @@ use crate::coordinator::{assemble, run_on};
 use crate::jsonl::{self, Json};
 use anyhow::Result;
 
+/// One N's outcome in the Theorem-1 linear-speedup sweep.
 #[derive(Clone, Debug)]
 pub struct SpeedupRow {
+    /// Node count N.
     pub n: usize,
+    /// Seed-averaged final stationarity gap.
     pub gap: f64,
+    /// `gap × N` — flat under linear speedup.
     pub gap_times_n: f64,
+    /// Seed-averaged final loss.
     pub loss: f64,
     /// Variance of the N-node mean stochastic gradient at a fixed point —
     /// the sigma^2/N mechanism behind Theorem 1, measured directly.
     pub grad_var: f64,
+    /// `grad_var × N` — flat when the σ²/N mechanism holds.
     pub grad_var_times_n: f64,
 }
 
+/// The full sweep over N.
 pub struct SpeedupResult {
+    /// Local-iteration budget shared by every N.
     pub t_steps: usize,
+    /// One row per swept N.
     pub rows: Vec<SpeedupRow>,
 }
 
@@ -137,6 +146,7 @@ fn mean_grad_variance(n: usize, seed: u64) -> Result<f64> {
 }
 
 impl SpeedupResult {
+    /// Print the N-sweep table with the mechanism note.
     pub fn print_table(&self) {
         println!("Theorem 1 — linear speedup of DSGT (Q=1, T={})", self.t_steps);
         println!(
@@ -156,6 +166,7 @@ impl SpeedupResult {
         );
     }
 
+    /// JSON dump of the sweep.
     pub fn to_json(&self) -> Json {
         jsonl::obj(vec![
             ("t_steps", jsonl::num(self.t_steps as f64)),

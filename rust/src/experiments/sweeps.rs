@@ -19,12 +19,18 @@ fn sweep_base() -> ExperimentConfig {
 
 // -------------------------------------------------------------- EXP-A1 ----
 
+/// One Q's outcome in the local-period sweep.
 #[derive(Clone, Debug)]
 pub struct QRow {
+    /// Local period Q.
     pub q: usize,
+    /// Final training loss.
     pub final_loss: f64,
+    /// Communication rounds spent.
     pub comm_rounds: u64,
+    /// Total bytes on the wire.
     pub bytes: u64,
+    /// First round reaching the target loss (None = never).
     pub rounds_to_target: Option<u64>,
 }
 
@@ -51,6 +57,7 @@ pub fn q_sweep(qs: &[usize], total_steps: usize, target_loss: f64, seed: u64) ->
     Ok(rows)
 }
 
+/// Print the Q-sweep table.
 pub fn print_q_table(rows: &[QRow], target: f64) {
     println!("EXP-A1 — local period Q (FD-DSGT, equal local-step budget)");
     println!("{:>6} {:>12} {:>12} {:>12} {:>18}", "Q", "final_loss", "comm_rounds", "MBytes", format!("rounds→loss≤{target}"));
@@ -68,11 +75,16 @@ pub fn print_q_table(rows: &[QRow], target: f64) {
 
 // -------------------------------------------------------------- EXP-A2 ----
 
+/// One topology's outcome in the spectral-gap sweep.
 #[derive(Clone, Debug)]
 pub struct TopologyRow {
+    /// Topology family name.
     pub topology: String,
+    /// `1 − |λ₂|` of its mixing matrix.
     pub spectral_gap: f64,
+    /// Final consensus error.
     pub final_consensus: f64,
+    /// Final training loss.
     pub final_loss: f64,
 }
 
@@ -100,6 +112,7 @@ pub fn topology_sweep(topologies: &[&str], total_steps: usize, seed: u64) -> Res
     Ok(rows)
 }
 
+/// Print the topology-sweep table.
 pub fn print_topology_table(rows: &[TopologyRow]) {
     println!("EXP-A2 — topology / spectral gap (FD-DSGT)");
     println!("{:<12} {:>13} {:>16} {:>12}", "topology", "spectral_gap", "final_consensus", "final_loss");
@@ -113,12 +126,18 @@ pub fn print_topology_table(rows: &[TopologyRow]) {
 
 // -------------------------------------------------------------- EXP-A3 ----
 
+/// One heterogeneity level's DSGD-vs-DSGT outcome.
 #[derive(Clone, Debug)]
 pub struct HeteroRow {
+    /// The swept non-iidness level in [0, 1].
     pub heterogeneity: f64,
+    /// Seed-averaged DSGD tail optimality gap.
     pub dsgd_gap: f64,
+    /// Seed-averaged DSGT tail optimality gap.
     pub dsgt_gap: f64,
+    /// Seed-averaged DSGD tail consensus error.
     pub dsgd_consensus: f64,
+    /// Seed-averaged DSGT tail consensus error.
     pub dsgt_consensus: f64,
     /// consensus-error ratio DSGD/DSGT; > 1 means gradient tracking wins.
     /// (The gap's stationarity term is shared noise — the tracker's win is
@@ -172,6 +191,7 @@ pub fn hetero_sweep(hets: &[f64], total_steps: usize, seeds: &[u64]) -> Result<V
     Ok(rows)
 }
 
+/// Print the heterogeneity-sweep table.
 pub fn print_hetero_table(rows: &[HeteroRow]) {
     println!("EXP-A3 — heterogeneity: DSGD vs DSGT (Q=1)");
     println!(
@@ -188,11 +208,16 @@ pub fn print_hetero_table(rows: &[HeteroRow]) {
 
 // -------------------------------------------------------------- EXP-A4 ----
 
+/// One algorithm's outcome in the baseline comparison.
 #[derive(Clone, Debug)]
 pub struct BaselineRow {
+    /// Algorithm name.
     pub algo: String,
+    /// Final training loss.
     pub final_loss: f64,
+    /// Total bytes on the wire.
     pub bytes: u64,
+    /// Simulated wall time, seconds.
     pub sim_time_s: f64,
 }
 
@@ -219,6 +244,7 @@ pub fn baseline_compare(total_steps: usize, q: usize, seed: u64) -> Result<Vec<B
     Ok(rows)
 }
 
+/// Print the baseline-comparison table.
 pub fn print_baseline_table(rows: &[BaselineRow]) {
     println!("EXP-A4 — decentralized vs star vs fusion center (equal step budget)");
     println!("{:<12} {:>12} {:>12} {:>12}", "algo", "final_loss", "MBytes", "sim_time_s");
@@ -238,6 +264,7 @@ pub fn rows_to_json<T, F: Fn(&T) -> Json>(rows: &[T], f: F) -> Json {
     Json::Arr(rows.iter().map(f).collect())
 }
 
+/// JSON shape of one [`QRow`].
 pub fn q_row_json(r: &QRow) -> Json {
     jsonl::obj(vec![
         ("q", jsonl::num(r.q as f64)),

@@ -68,6 +68,7 @@ impl Topology {
         )
     }
 
+    /// Parse a CLI/TOML topology name into its default-parameter family.
     pub fn parse(name: &str) -> Result<Topology> {
         Ok(match name {
             "ring" => Topology::Ring,
@@ -85,26 +86,32 @@ impl Topology {
 }
 
 impl Graph {
+    /// Edgeless graph over `n` nodes.
     pub fn empty(n: usize) -> Self {
         Graph { n, adj: vec![Vec::new(); n] }
     }
 
+    /// Node count.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Sorted neighbor list of node `i`.
     pub fn neighbors(&self, i: usize) -> &[usize] {
         &self.adj[i]
     }
 
+    /// Degree of node `i`.
     pub fn degree(&self, i: usize) -> usize {
         self.adj[i].len()
     }
 
+    /// Is `{i, j}` an edge?
     pub fn has_edge(&self, i: usize, j: usize) -> bool {
         self.adj[i].binary_search(&j).is_ok()
     }
 
+    /// Insert the undirected edge `{i, j}` (idempotent; `i != j`).
     pub fn add_edge(&mut self, i: usize, j: usize) {
         assert!(i < self.n && j < self.n && i != j, "bad edge ({i},{j})");
         if let Err(pos) = self.adj[i].binary_search(&j) {
@@ -128,6 +135,7 @@ impl Graph {
         out
     }
 
+    /// Undirected edge count.
     pub fn edge_count(&self) -> usize {
         self.adj.iter().map(Vec::len).sum::<usize>() / 2
     }

@@ -13,17 +13,24 @@ use anyhow::{anyhow, bail, Context, Result};
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number, held as f64.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ---- accessors ----
 
+    /// Object member `key`; errors on non-objects or a missing key.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key `{key}`")),
@@ -31,6 +38,7 @@ impl Json {
         }
     }
 
+    /// Numeric value; errors otherwise.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -38,6 +46,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value; errors otherwise.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -46,6 +55,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// String value; errors otherwise.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -53,6 +63,7 @@ impl Json {
         }
     }
 
+    /// Array value; errors otherwise.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -60,6 +71,7 @@ impl Json {
         }
     }
 
+    /// Object value; errors otherwise.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -79,6 +91,7 @@ impl Json {
 
     // ---- parsing ----
 
+    /// Parse a complete JSON document from text.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -90,6 +103,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON file from disk.
     pub fn parse_file(path: &std::path::Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -98,6 +112,8 @@ impl Json {
 
     // ---- writing ----
 
+    /// Serialize to compact JSON text.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -147,14 +163,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Array of numbers.
 pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
+/// A number.
 pub fn num(x: f64) -> Json {
     Json::Num(x)
 }
 
+/// A string.
 pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }

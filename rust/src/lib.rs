@@ -19,9 +19,12 @@
 //!
 //! Quickstart: `make artifacts && cargo run --release -- train --algo fd-dsgt`.
 
+#![warn(missing_docs)]
+
 pub mod algo;
 pub mod benchutil;
 pub mod cli;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod data;

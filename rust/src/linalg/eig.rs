@@ -12,6 +12,7 @@ use super::Mat;
 /// `values` are sorted ascending; `vectors.col(k)` is the k-th eigenvector.
 #[derive(Clone, Debug)]
 pub struct SymEig {
+    /// Eigenvalues, ascending.
     pub values: Vec<f64>,
     /// Column k is the eigenvector for values[k].
     pub vectors: Mat,

@@ -14,16 +14,21 @@ pub use eig::{sym_eig, SymEig};
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, length `rows * cols`.
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zero `rows x cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Identity matrix of size `n`.
     pub fn eye(n: usize) -> Self {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -32,6 +37,7 @@ impl Mat {
         m
     }
 
+    /// Build from a list of equal-length rows.
     pub fn from_rows(rows: &[Vec<f64>]) -> Self {
         let r = rows.len();
         let c = if r == 0 { 0 } else { rows[0].len() };
@@ -39,19 +45,23 @@ impl Mat {
         Mat { rows: r, cols: c, data: rows.concat() }
     }
 
+    /// Wrap a flat row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "size mismatch");
         Mat { rows, cols, data }
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Mutable row `i`.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Transpose.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -62,6 +72,7 @@ impl Mat {
         out
     }
 
+    /// Matrix product `self * other`.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -82,6 +93,7 @@ impl Mat {
         out
     }
 
+    /// Matrix-vector product.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len(), "matvec shape mismatch");
         (0..self.rows)
@@ -89,6 +101,7 @@ impl Mat {
             .collect()
     }
 
+    /// Scalar multiple.
     pub fn scale(&self, s: f64) -> Mat {
         Mat {
             rows: self.rows,
@@ -97,6 +110,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise sum.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -106,6 +120,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise difference.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat {
@@ -115,10 +130,12 @@ impl Mat {
         }
     }
 
+    /// Frobenius norm.
     pub fn frob_norm(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
 
+    /// Is the matrix symmetric to within `tol`?
     pub fn is_symmetric(&self, tol: f64) -> bool {
         if self.rows != self.cols {
             return false;
@@ -187,20 +204,24 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 
 // ---- vector helpers ----
 
+/// Dot product.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// Euclidean norm.
 pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
+/// Euclidean distance.
 pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+/// Arithmetic mean (0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -208,6 +229,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Population variance.
 pub fn variance(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

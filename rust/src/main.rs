@@ -6,7 +6,7 @@
 use anyhow::{bail, Result};
 use decfl::cli::{apply_common_overrides, Args};
 use decfl::config::{AlgoKind, ExperimentConfig};
-use decfl::experiments::{churn, fig1, fig2, speedup, sweeps};
+use decfl::experiments::{churn, compress, fig1, fig2, speedup, sweeps};
 
 const HELP: &str = "\
 decfl — fully decentralized federated learning for electronic health records
@@ -26,6 +26,9 @@ SUBCOMMANDS
   baselines   EXP-A4: FD-DSGT vs FedAvg vs centralized
   churn       EXP-N1: time-varying networks (rewire / edge-drop / churn)
               vs the static baseline (--drops, --churns, --rewire-every)
+  compress    EXP-C1: accuracy-vs-bytes frontier — gossip compressors
+              (q8 / q4 / top-k, difference-form update) × topologies
+              (--compressors, --fracs, --topos)
   export-data write the synthetic cohort as per-hospital CSVs
   info        print artifact manifest + config summary
   help        this text
@@ -48,6 +51,12 @@ COMMON OPTIONS (train + experiments)
   --churn <p>             per-node offline prob per round (default 0.1)
   --drop-prob <p>         frame-loss prob on every link (actors mode only;
                           lost frames are retransmitted)
+  --compress <c>          gossip payload compressor: none|identity|q8|q4|topk
+                          (default none; gossip algorithms only; the update
+                          uses the mean-preserving difference form)
+  --topk-frac <f>         kept fraction for --compress topk (default 0.1)
+  --error-feedback        opt-in EF residuals on the message streams
+                          (experimental; destabilizes aggressive top-k)
   --heterogeneity <h>     data non-iidness in [0,1] (default 0.6)
   --seed <s>              RNG seed (default 7)
   --threads <k>           native-backend worker threads, 0 = one per core
@@ -59,8 +68,10 @@ COMMON OPTIONS (train + experiments)
 EXAMPLES
   decfl train --algo fd-dsgt --steps 10000 --q 100
   decfl train --backend native --net-plan churn --churn 0.2 --steps 2000
+  decfl train --backend native --compress q8 --steps 2000
   decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
   decfl churn --backend native --steps 2000 --q 50 --drops 0.2,0.4
+  decfl compress --backend native --steps 2000 --q 50 --fracs 0.1,0.05
   decfl speedup --ns 4,8,16,32 --steps 400
 ";
 
@@ -217,6 +228,49 @@ fn real_main() -> Result<()> {
             }
             dump(&cfg.out, &churn::rows_json(&rows))?;
         }
+        "compress" => {
+            let compressors = args
+                .get_str("compressors")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| vec!["q8".into(), "q4".into()]);
+            let fracs = args.get_f64_list("fracs")?.unwrap_or_else(|| vec![0.1, 0.05]);
+            let topos = args
+                .get_str("topos")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| vec![cfg.topology.clone()]);
+            args.finish()?;
+            if matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+                bail!(
+                    "`decfl compress` sweeps gossip compressors, but `{}` has no gossip \
+                     messages; pick dsgd|dsgt|fd-dsgd|fd-dsgt",
+                    cfg.algo.name()
+                );
+            }
+            // the sweep owns the compressor axis — these would be overwritten
+            for key in ["compress", "topk-frac"] {
+                if args.provided(key) {
+                    bail!(
+                        "--{key} was passed, but `decfl compress` sweeps the compressor \
+                         axis itself and would silently ignore it; shape the sweep with \
+                         --compressors / --fracs / --topos instead"
+                    );
+                }
+            }
+            if cfg.compress != "none" {
+                bail!(
+                    "the config sets comm.compress = `{}`, but `decfl compress` sweeps \
+                     the compressor axis itself and would silently ignore it; shape the \
+                     sweep with --compressors / --fracs / --topos instead",
+                    cfg.compress
+                );
+            }
+            let rows = compress::run(&cfg, &compressors, &fracs, &topos)?;
+            compress::print_table(&rows);
+            for f in compress::findings(&rows) {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &compress::rows_json(&rows))?;
+        }
         "export-data" => {
             reject_plan_flags(&args, &cfg, "export-data")?;
             let dir = args.get_str("dir").unwrap_or("out/cohort").to_string();
@@ -251,9 +305,10 @@ fn real_main() -> Result<()> {
 }
 
 /// The sweep/report subcommands build their own per-run configs and would
-/// silently run static networks no matter what plan settings arrived — fail
-/// loudly, whether the plan came as a CLI flag or through `--config` TOML,
-/// and point at the subcommands that do honor them.
+/// silently run static uncompressed networks no matter what plan or
+/// compression settings arrived — fail loudly, whether the setting came as a
+/// CLI flag or through `--config` TOML, and point at the subcommands that do
+/// honor them.
 fn reject_plan_flags(args: &Args, cfg: &ExperimentConfig, sub: &str) -> Result<()> {
     for key in ["net-plan", "rewire-every", "edge-drop", "churn"] {
         if args.provided(key) {
@@ -272,6 +327,23 @@ fn reject_plan_flags(args: &Args, cfg: &ExperimentConfig, sub: &str) -> Result<(
             cfg.net_plan
         );
     }
+    for key in ["compress", "topk-frac", "error-feedback"] {
+        if args.provided(key) {
+            bail!(
+                "--{key} was passed, but `decfl {sub}` builds its own per-run configs \
+                 and would silently gossip dense f32; compression applies to \
+                 `decfl train`, `decfl fig2`, `decfl churn`, and `decfl compress`"
+            );
+        }
+    }
+    if cfg.compress != "none" {
+        bail!(
+            "the config sets comm.compress = `{}`, but `decfl {sub}` builds its own \
+             per-run configs and would silently gossip dense f32; compression applies \
+             to `decfl train`, `decfl fig2`, `decfl churn`, and `decfl compress`",
+            cfg.compress
+        );
+    }
     Ok(())
 }
 
@@ -287,7 +359,17 @@ fn reject_ignored_network_flags(args: &Args, cfg: &ExperimentConfig) -> Result<(
         AlgoKind::FedAvg => "a fixed star network",
         _ => "a fusion center with no gossip network",
     };
-    for key in ["topology", "mixing", "net-plan", "rewire-every", "edge-drop", "churn"] {
+    for key in [
+        "topology",
+        "mixing",
+        "net-plan",
+        "rewire-every",
+        "edge-drop",
+        "churn",
+        "compress",
+        "topk-frac",
+        "error-feedback",
+    ] {
         if args.provided(key) {
             bail!(
                 "--{key} was passed, but `{}` runs {what} and would silently ignore it; \

@@ -18,15 +18,21 @@ pub struct RoundMetrics {
     pub comm_rounds: u64,
     /// Local SGD iterations completed so far (total across the schedule).
     pub local_steps: u64,
+    /// Mean training loss over nodes.
     pub loss: f64,
+    /// Mean training accuracy over nodes.
     pub accuracy: f64,
     /// `|| (1/N) Σ_i ∇f_i(θ_i) ||²` on full shards.
     pub stationarity: f64,
     /// `(1/N) Σ_i ||θ_i − θ̄||²`.
     pub consensus: f64,
+    /// Cumulative bytes on the wire (encoded sizes).
     pub bytes: u64,
+    /// Cumulative messages sent.
     pub messages: u64,
+    /// Simulated wall time, seconds.
     pub sim_time_s: f64,
+    /// Real wall time since the run started, seconds.
     pub wall_time_s: f64,
 }
 
@@ -40,19 +46,24 @@ impl RoundMetrics {
 /// Metric log for one training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
+    /// Algorithm display name.
     pub algo: String,
+    /// One row per evaluated round.
     pub rows: Vec<RoundMetrics>,
 }
 
 impl RunLog {
+    /// Empty log for `algo`.
     pub fn new(algo: &str) -> Self {
         RunLog { algo: algo.to_string(), rows: Vec::new() }
     }
 
+    /// Append an evaluation row.
     pub fn push(&mut self, m: RoundMetrics) {
         self.rows.push(m);
     }
 
+    /// Last evaluation row, if any.
     pub fn last(&self) -> Option<&RoundMetrics> {
         self.rows.last()
     }
@@ -68,6 +79,7 @@ impl RunLog {
         self.rows.iter().map(RoundMetrics::optimality_gap).fold(f64::INFINITY, f64::min)
     }
 
+    /// Column-oriented JSON dump.
     pub fn to_json(&self) -> Json {
         let col = |f: &dyn Fn(&RoundMetrics) -> f64| {
             jsonl::arr_f64(&self.rows.iter().map(|r| f(r)).collect::<Vec<_>>())
@@ -109,6 +121,7 @@ impl RunLog {
         out
     }
 
+    /// Write the JSON dump to `path`.
     pub fn save_json(&self, path: &std::path::Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())

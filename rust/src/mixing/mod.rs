@@ -27,6 +27,7 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Parse a CLI/TOML mixing-scheme name.
     pub fn parse(name: &str) -> Result<Scheme> {
         Ok(match name {
             "metropolis" => Scheme::Metropolis,
@@ -78,14 +79,20 @@ pub fn build(g: &Graph, scheme: Scheme) -> Mat {
 /// Validation report for Assumption 1.
 #[derive(Clone, Debug)]
 pub struct Validation {
+    /// Is `W` symmetric?
     pub symmetric: bool,
+    /// Does every row sum to 1?
     pub rows_stochastic: bool,
+    /// Are all entries non-negative?
     pub nonnegative: bool,
+    /// `|λ₂|` — the consensus contraction factor.
     pub second_eig: f64,
+    /// `1 − |λ₂|`.
     pub spectral_gap: f64,
 }
 
 impl Validation {
+    /// Does Assumption 1 hold?
     pub fn holds(&self) -> bool {
         self.symmetric && self.rows_stochastic && self.nonnegative && self.second_eig < 1.0
     }
@@ -161,6 +168,7 @@ impl SparseW {
         Self::from_dense(w.rows, &to_f32(w))
     }
 
+    /// Matrix dimension n.
     pub fn n(&self) -> usize {
         self.n
     }

@@ -4,10 +4,13 @@
 //! so no real messages flow — but the experiment still needs the exact
 //! communication cost a deployment would pay.  This accountant charges the
 //! same quantities the channel-based netsim measures: per directed edge and
-//! payload kind, one message of `payload_bytes`; per round, simulated time
-//! advances by the local-compute phase plus the slowest link transfer
+//! payload kind, one message at that kind's *encoded* wire size (dense f32,
+//! or whatever the configured `compress` scheme ships); per round, simulated
+//! time advances by the local-compute phase plus the slowest link transfer
 //! (synchronous gossip = max over edges), with payload kinds pipelined
-//! sequentially (DSGT sends θ then ϑ).
+//! sequentially (DSGT sends θ then ϑ).  Kinds are charged individually —
+//! DSGT's two payloads each at their own true size — never as
+//! `payload × kinds` flat.
 //!
 //! The network is a per-round quantity (`graph::schedule`), so the caller
 //! passes each round's directed active-edge count — the accountant holds no
@@ -25,6 +28,7 @@ pub struct Accountant {
 }
 
 impl Accountant {
+    /// Fresh accountant over the given link model (zero counters).
     pub fn new(link: LinkModel) -> Self {
         Accountant { link, snap: NetSnapshot::default() }
     }
@@ -35,17 +39,20 @@ impl Accountant {
         self.snap.sim_time_s += steps as f64 * secs_per_step;
     }
 
-    /// Charge one synchronous gossip round: `directed_edges` messages per
-    /// payload kind (both directions of every active edge this round), each
-    /// carrying `payload_elems` f32, `kinds` payload kinds pipelined.
-    pub fn comm_round(&mut self, directed_edges: u64, payload_elems: usize, kinds: u32) {
-        let bytes = (payload_elems * std::mem::size_of::<f32>()) as u64;
-        let msgs = directed_edges * kinds as u64;
-        self.snap.messages += msgs;
-        self.snap.bytes += msgs * bytes;
+    /// Charge one synchronous gossip round: for each payload kind,
+    /// `directed_edges` messages (both directions of every active edge this
+    /// round) at that kind's *encoded* wire size — `kind_bytes` holds one
+    /// entry per kind (DSGT passes `[θ_bytes, ϑ_bytes]`), so differently
+    /// encoded payloads are each charged at their true size, and kinds
+    /// pipeline sequentially on the simulated clock.
+    pub fn comm_round(&mut self, directed_edges: u64, kind_bytes: &[u64]) {
+        for &bytes in kind_bytes {
+            self.snap.messages += directed_edges;
+            self.snap.bytes += directed_edges * bytes;
+            self.snap.sim_time_s +=
+                self.link.latency_s + bytes as f64 / self.link.bandwidth_bps;
+        }
         self.snap.rounds += 1;
-        let per_kind = self.link.latency_s + bytes as f64 / self.link.bandwidth_bps;
-        self.snap.sim_time_s += per_kind * kinds as f64;
     }
 
     /// Charge a star-network round (FedAvg): every client uploads and
@@ -60,6 +67,7 @@ impl Accountant {
         self.snap.sim_time_s += 2.0 * (self.link.latency_s + bytes as f64 / self.link.bandwidth_bps);
     }
 
+    /// Plain-data copy of the counters so far.
     pub fn snapshot(&self) -> NetSnapshot {
         self.snap
     }
@@ -83,7 +91,8 @@ mod tests {
             .into_iter()
             .map(|mut ep| {
                 std::thread::spawn(move || {
-                    let p = std::sync::Arc::new(vec![0.0f32; 128]);
+                    let p =
+                        std::sync::Arc::new(super::super::Payload::Dense(vec![0.0f32; 128]));
                     ep.broadcast(0, super::super::PayloadKind::Params, &p).unwrap();
                     ep.gather(0, super::super::PayloadKind::Params).unwrap();
                 })
@@ -96,7 +105,7 @@ mod tests {
         let real = stats.snapshot();
 
         let mut acct = Accountant::new(link);
-        acct.comm_round(2 * g.edge_count() as u64, payload, 1);
+        acct.comm_round(2 * g.edge_count() as u64, &[4 * payload as u64]);
         let model = acct.snapshot();
 
         assert_eq!(model.messages, real.messages);
@@ -110,19 +119,39 @@ mod tests {
         let edges = 2 * g.edge_count() as u64;
         let mut a = Accountant::new(LinkModel::default());
         let mut b = Accountant::new(LinkModel::default());
-        a.comm_round(edges, 100, 1);
-        b.comm_round(edges, 100, 2);
+        a.comm_round(edges, &[400]);
+        b.comm_round(edges, &[400, 400]);
         assert_eq!(b.snapshot().bytes, 2 * a.snapshot().bytes);
         assert!(b.snapshot().sim_time_s > a.snapshot().sim_time_s);
+    }
+
+    #[test]
+    fn kinds_are_charged_at_their_own_encoded_sizes() {
+        // regression for the old `payload_elems × kinds` flat charge: two
+        // payload kinds with different wire sizes (dense θ, compressed ϑ)
+        // must be billed individually, not as 2× either size
+        let mut a = Accountant::new(LinkModel::default());
+        a.comm_round(4, &[1000, 24]);
+        let s = a.snapshot();
+        assert_eq!(s.messages, 8, "one message per edge per kind");
+        assert_eq!(s.bytes, 4 * 1000 + 4 * 24);
+        assert_eq!(s.rounds, 1);
+        // and the flat model would have been wrong in both directions
+        assert_ne!(s.bytes, 2 * 4 * 1000);
+        assert_ne!(s.bytes, 2 * 4 * 24);
+        // sim time pipelines the kinds sequentially
+        let link = LinkModel::default();
+        let expect = 2.0 * link.latency_s + (1000.0 + 24.0) / link.bandwidth_bps;
+        assert!((s.sim_time_s - expect).abs() < 1e-12);
     }
 
     #[test]
     fn per_round_edge_counts_accumulate() {
         // a churn-style schedule: 8, then 4, then 8 directed edges
         let mut a = Accountant::new(LinkModel::default());
-        a.comm_round(8, 100, 1);
-        a.comm_round(4, 100, 1);
-        a.comm_round(8, 100, 1);
+        a.comm_round(8, &[400]);
+        a.comm_round(4, &[400]);
+        a.comm_round(8, &[400]);
         let s = a.snapshot();
         assert_eq!(s.messages, 20);
         assert_eq!(s.bytes, 20 * 400);

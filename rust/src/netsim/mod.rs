@@ -13,11 +13,17 @@
 //!   frame costs extra bytes + latency but the round still completes —
 //!   synchronous gossip cannot tolerate silent loss).
 //!
+//! Messages carry a typed [`Payload`]: either a dense f32 vector or a
+//! compressed message from the `compress` subsystem (top-k indices+values,
+//! packed u8/u4 quantization codes), and every message is charged at its
+//! *encoded* wire size — so turning compression on changes the byte
+//! accounting exactly as it would change a deployment's NIC counters.
 //! Every payload byte is accounted even though in-process delivery shares an
 //! `Arc` — the simulator charges what a real NIC would move.
 
 pub mod analytic;
 
+use crate::compress::Encoded;
 use crate::graph::Graph;
 use crate::rng::Pcg64;
 use anyhow::{bail, Context, Result};
@@ -53,13 +59,68 @@ pub enum PayloadKind {
     Tracker,
 }
 
+impl PayloadKind {
+    /// Stable small integer tag (mailbox routing keys, compression keys).
+    pub fn tag(self) -> u8 {
+        match self {
+            PayloadKind::Params => 0,
+            PayloadKind::Tracker => 1,
+        }
+    }
+}
+
+/// The body of one gossip message — what actually crosses the simulated
+/// wire, charged at its encoded size.
+pub enum Payload {
+    /// Uncompressed f32 vector: `4·len` bytes.
+    Dense(Vec<f32>),
+    /// Compressed message (`compress::Encoded`): charged at the encoding's
+    /// exact wire size (top-k indices+values, packed u8/u4 codes, ...).
+    Compressed(Encoded),
+}
+
+impl Payload {
+    /// Exact bytes this payload occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::Dense(v) => (v.len() * std::mem::size_of::<f32>()) as u64,
+            Payload::Compressed(e) => e.wire_bytes(),
+        }
+    }
+
+    /// Decoded f32 length of this payload.
+    pub fn decoded_len(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Compressed(e) => e.decoded_len(),
+        }
+    }
+
+    /// Reconstruct the carried vector into `out` (copy or decode) — the
+    /// receiver side of the deterministic decode every party shares.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        match self {
+            Payload::Dense(v) => out.copy_from_slice(v),
+            Payload::Compressed(e) => crate::compress::decode_into(e, out),
+        }
+    }
+
+    /// Borrow the dense vector (None for compressed payloads).
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Dense(v) => Some(v),
+            Payload::Compressed(_) => None,
+        }
+    }
+}
+
 /// One in-flight message.
 struct Msg {
     from: usize,
     round: u64,
     kind: PayloadKind,
     /// Shared payload; bytes are charged per edge regardless of sharing.
-    payload: Arc<Vec<f32>>,
+    payload: Arc<Payload>,
     /// Sender's causal clock at arrival time (send clock + link delay).
     arrival_time: f64,
 }
@@ -67,15 +128,20 @@ struct Msg {
 /// Network-wide counters (shared across node threads).
 #[derive(Default)]
 pub struct NetStats {
+    /// Messages sent (per directed edge, per payload kind).
     pub messages: AtomicU64,
+    /// Bytes moved, at encoded wire size, including retransmissions.
     pub bytes: AtomicU64,
+    /// Frames that were lost and resent (lossy links only).
     pub retransmissions: AtomicU64,
+    /// Completed gossip rounds (bumped by the driver).
     pub rounds: AtomicU64,
     /// max causal clock over nodes, in microseconds (atomic max).
     sim_time_us: AtomicU64,
 }
 
 impl NetStats {
+    /// Plain-data copy of the counters at this instant.
     pub fn snapshot(&self) -> NetSnapshot {
         NetSnapshot {
             messages: self.messages.load(Ordering::Relaxed),
@@ -95,16 +161,23 @@ impl NetStats {
 /// Plain-data view of [`NetStats`].
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct NetSnapshot {
+    /// Messages sent so far.
     pub messages: u64,
+    /// Bytes moved so far (encoded wire size, retransmissions included).
     pub bytes: u64,
+    /// Frames lost and resent so far.
     pub retransmissions: u64,
+    /// Completed gossip rounds.
     pub rounds: u64,
+    /// Simulated wall time (max causal clock over nodes), seconds.
     pub sim_time_s: f64,
 }
 
 /// One node's handle onto the network.
 pub struct Endpoint {
+    /// This node's id (graph vertex).
     pub id: usize,
+    /// Wired neighbors (the union graph's adjacency).
     pub neighbors: Vec<usize>,
     link: LinkModel,
     senders: BTreeMap<usize, Sender<Msg>>,
@@ -117,32 +190,26 @@ pub struct Endpoint {
     pub clock_s: f64,
 }
 
-fn kind_tag(k: PayloadKind) -> u8 {
-    match k {
-        PayloadKind::Params => 0,
-        PayloadKind::Tracker => 1,
-    }
-}
-
 impl Endpoint {
     /// Send `payload` to every wired neighbor, tagged with the gossip round.
     /// Returns the per-edge transmission delay applied.
-    pub fn broadcast(&mut self, round: u64, kind: PayloadKind, payload: &Arc<Vec<f32>>) -> Result<f64> {
+    pub fn broadcast(&mut self, round: u64, kind: PayloadKind, payload: &Arc<Payload>) -> Result<f64> {
         let neighbor_ids: Vec<usize> = self.neighbors.clone();
         self.send_to(&neighbor_ids, round, kind, payload)
     }
 
     /// Send `payload` to a subset of the wired neighbors — the per-round
-    /// neighbor mask of a time-varying network (`graph::schedule`).
+    /// neighbor mask of a time-varying network (`graph::schedule`).  Each
+    /// message is charged at the payload's *encoded* wire size.
     /// Returns the per-edge transmission delay applied.
     pub fn send_to(
         &mut self,
         targets: &[usize],
         round: u64,
         kind: PayloadKind,
-        payload: &Arc<Vec<f32>>,
+        payload: &Arc<Payload>,
     ) -> Result<f64> {
-        let bytes = (payload.len() * std::mem::size_of::<f32>()) as u64;
+        let bytes = payload.wire_bytes();
         let mut max_delay = 0.0f64;
         for &nb in targets {
             // retransmission loop: deterministic count from this node's rng
@@ -178,7 +245,7 @@ impl Endpoint {
     /// Block until one `(round, kind)` message from *every* wired neighbor
     /// has arrived; returns them ordered by sender id.  Out-of-order
     /// messages (future rounds, other kinds) are buffered, not lost.
-    pub fn gather(&mut self, round: u64, kind: PayloadKind) -> Result<Vec<(usize, Arc<Vec<f32>>)>> {
+    pub fn gather(&mut self, round: u64, kind: PayloadKind) -> Result<Vec<(usize, Arc<Payload>)>> {
         let want: Vec<usize> = self.neighbors.clone();
         self.gather_from(&want, round, kind)
     }
@@ -191,8 +258,8 @@ impl Endpoint {
         sources: &[usize],
         round: u64,
         kind: PayloadKind,
-    ) -> Result<Vec<(usize, Arc<Vec<f32>>)>> {
-        let tag = kind_tag(kind);
+    ) -> Result<Vec<(usize, Arc<Payload>)>> {
+        let tag = kind.tag();
         let mut have: BTreeMap<usize, Msg> = BTreeMap::new();
 
         // drain previously-buffered matches
@@ -212,10 +279,10 @@ impl Endpoint {
                 .inbox
                 .recv()
                 .map_err(|_| anyhow::anyhow!("network shut down while node {} waits", self.id))?;
-            if msg.round == round && kind_tag(msg.kind) == tag && sources.contains(&msg.from) {
+            if msg.round == round && msg.kind.tag() == tag && sources.contains(&msg.from) {
                 have.insert(msg.from, msg);
             } else {
-                self.held.insert((msg.round, kind_tag(msg.kind), msg.from), msg);
+                self.held.insert((msg.round, msg.kind.tag(), msg.from), msg);
             }
         }
 
@@ -285,12 +352,12 @@ mod tests {
             .into_iter()
             .map(|mut ep| {
                 std::thread::spawn(move || {
-                    let payload = Arc::new(vec![ep.id as f32; 4]);
+                    let payload = Arc::new(Payload::Dense(vec![ep.id as f32; 4]));
                     ep.broadcast(0, PayloadKind::Params, &payload).unwrap();
                     let got = ep.gather(0, PayloadKind::Params).unwrap();
-                    let mut acc = payload[0];
+                    let mut acc = ep.id as f32;
                     for (_, p) in &got {
-                        acc += p[0];
+                        acc += p.as_dense().unwrap()[0];
                     }
                     acc / (got.len() + 1) as f32
                 })
@@ -351,8 +418,8 @@ mod tests {
         let mut e2 = eps.pop().unwrap();
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
-        let p0 = Arc::new(vec![1.0f32]);
-        let p1 = Arc::new(vec![2.0f32]);
+        let p0 = Arc::new(Payload::Dense(vec![1.0f32]));
+        let p1 = Arc::new(Payload::Dense(vec![2.0f32]));
         e0.broadcast(0, PayloadKind::Params, &p0).unwrap();
         e0.broadcast(1, PayloadKind::Params, &p1).unwrap();
         e2.broadcast(0, PayloadKind::Params, &p0).unwrap();
@@ -360,9 +427,9 @@ mod tests {
         // node 1 neighbors are {0, 2}: both rounds complete, in order
         let r0 = e1.gather(0, PayloadKind::Params).unwrap();
         assert_eq!(r0.len(), 2);
-        assert_eq!(*r0[0].1, vec![1.0]);
+        assert_eq!(r0[0].1.as_dense().unwrap(), &[1.0]);
         let r1 = e1.gather(1, PayloadKind::Params).unwrap();
-        assert_eq!(*r1[0].1, vec![2.0]);
+        assert_eq!(r1[0].1.as_dense().unwrap(), &[2.0]);
     }
 
     #[test]
@@ -372,16 +439,42 @@ mod tests {
         let mut e2 = eps.pop().unwrap();
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
-        let theta = Arc::new(vec![1.0f32]);
-        let tracker = Arc::new(vec![9.0f32]);
+        let theta = Arc::new(Payload::Dense(vec![1.0f32]));
+        let tracker = Arc::new(Payload::Dense(vec![9.0f32]));
         e0.broadcast(0, PayloadKind::Tracker, &tracker).unwrap();
         e0.broadcast(0, PayloadKind::Params, &theta).unwrap();
         e2.broadcast(0, PayloadKind::Tracker, &tracker).unwrap();
         e2.broadcast(0, PayloadKind::Params, &theta).unwrap();
         let params = e1.gather(0, PayloadKind::Params).unwrap();
-        assert!(params.iter().all(|(_, p)| p[0] == 1.0));
+        assert!(params.iter().all(|(_, p)| p.as_dense().unwrap()[0] == 1.0));
         let trackers = e1.gather(0, PayloadKind::Tracker).unwrap();
-        assert!(trackers.iter().all(|(_, p)| p[0] == 9.0));
+        assert!(trackers.iter().all(|(_, p)| p.as_dense().unwrap()[0] == 9.0));
+    }
+
+    #[test]
+    fn compressed_payloads_charge_encoded_bytes_and_decode_on_receive() {
+        use crate::compress::{Compressor, MsgKey, TopK};
+        let g = ring(3);
+        let (mut eps, stats) = build(&g, LinkModel::default(), 0);
+        let e2 = eps.pop().unwrap();
+        let mut e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        drop(e2);
+        // 10 elements, keep 2: wire size is 2·8 = 16 bytes, not 40
+        let v: Vec<f32> = (0..10).map(|i| if i == 3 { 5.0 } else { 0.25 }).collect();
+        let comp = TopK { frac: 0.2 };
+        let enc = comp.encode(&v, MsgKey::new(7, 1, 0, PayloadKind::Params));
+        let payload = Arc::new(Payload::Compressed(enc));
+        assert_eq!(payload.wire_bytes(), 16);
+        assert_eq!(payload.decoded_len(), 10);
+        e0.send_to(&[1], 1, PayloadKind::Params, &payload).unwrap();
+        e1.send_to(&[0], 1, PayloadKind::Params, &payload).unwrap();
+        let got = e1.gather_from(&[0], 1, PayloadKind::Params).unwrap();
+        let mut out = vec![9.0f32; 10];
+        got[0].1.decode_into(&mut out);
+        assert_eq!(out[3], 5.0, "kept entry survives the wire");
+        assert_eq!(out[1], 0.0, "dropped entries decode to zero");
+        assert_eq!(stats.snapshot().bytes, 2 * 16, "charged at encoded size");
     }
 
     #[test]
@@ -392,7 +485,7 @@ mod tests {
         let e2 = eps.pop().unwrap();
         let mut e1 = eps.pop().unwrap();
         let mut e0 = eps.pop().unwrap();
-        let p = Arc::new(vec![5.0f32, 6.0]);
+        let p = Arc::new(Payload::Dense(vec![5.0f32, 6.0]));
         e0.send_to(&[1], 0, PayloadKind::Params, &p).unwrap();
         e1.send_to(&[0], 0, PayloadKind::Params, &p).unwrap();
         let got = e0.gather_from(&[1], 0, PayloadKind::Params).unwrap();
@@ -423,7 +516,7 @@ mod tests {
             .into_iter()
             .map(|mut ep| {
                 std::thread::spawn(move || {
-                    let payload = Arc::new(vec![ep.id as f32]);
+                    let payload = Arc::new(Payload::Dense(vec![ep.id as f32]));
                     ep.broadcast(0, PayloadKind::Params, &payload).unwrap();
                     ep.gather(0, PayloadKind::Params).unwrap().len()
                 })

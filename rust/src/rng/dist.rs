@@ -5,16 +5,20 @@ use super::Pcg64;
 /// Normal distribution with fixed mean and standard deviation.
 #[derive(Clone, Copy, Debug)]
 pub struct Normal {
+    /// Mean.
     pub mean: f64,
+    /// Standard deviation.
     pub std: f64,
 }
 
 impl Normal {
+    /// Normal with the given moments.
     pub fn new(mean: f64, std: f64) -> Self {
         assert!(std >= 0.0, "negative std");
         Normal { mean, std }
     }
 
+    /// Draw one value.
     pub fn sample(&self, rng: &mut Pcg64) -> f64 {
         rng.normal_ms(self.mean, self.std)
     }
@@ -30,20 +34,24 @@ impl Normal {
 /// small alpha → highly non-identical shards, large alpha → near-iid).
 #[derive(Clone, Debug)]
 pub struct Dirichlet {
+    /// Concentration parameters (all positive).
     pub alpha: Vec<f64>,
 }
 
 impl Dirichlet {
+    /// Symmetric Dirichlet over `k` categories.
     pub fn symmetric(k: usize, alpha: f64) -> Self {
         assert!(k > 0 && alpha > 0.0);
         Dirichlet { alpha: vec![alpha; k] }
     }
 
+    /// Dirichlet with the given concentrations.
     pub fn new(alpha: Vec<f64>) -> Self {
         assert!(!alpha.is_empty() && alpha.iter().all(|&a| a > 0.0));
         Dirichlet { alpha }
     }
 
+    /// Draw one probability vector.
     pub fn sample(&self, rng: &mut Pcg64) -> Vec<f64> {
         let gs: Vec<f64> = self.alpha.iter().map(|&a| rng.gamma(a).max(1e-300)).collect();
         let total: f64 = gs.iter().sum();

@@ -23,11 +23,17 @@ use std::path::{Path, PathBuf};
 /// Shapes the artifacts were specialized to (manifest `config` block).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelShapes {
+    /// Hospital count N.
     pub n: usize,
+    /// Input feature dimension.
     pub d: usize,
+    /// Hidden-layer width.
     pub hidden: usize,
+    /// Minibatch size per step.
     pub m: usize,
+    /// Local period Q the scan was lowered for.
     pub q: usize,
+    /// Records per shard for the eval/predict artifacts.
     pub shard: usize,
     /// Flat parameter count.
     pub p: usize,
@@ -36,21 +42,29 @@ pub struct ModelShapes {
 /// One artifact's interface.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// HLO-text filename inside the artifact dir.
     pub file: String,
+    /// Input shapes, in call order.
     pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in result order.
     pub outputs: Vec<Vec<usize>>,
 }
 
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifact directory.
     pub dir: PathBuf,
+    /// The specialization shapes.
     pub shapes: ModelShapes,
+    /// Artifact interfaces by name.
     pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Golden input/output vectors for the runtime self-test.
     pub goldens: Json,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::parse_file(&dir.join("manifest.json")).with_context(|| {
             format!(
@@ -90,6 +104,7 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), shapes, artifacts, goldens: j.get("goldens")?.clone() })
     }
 
+    /// Interface of artifact `name`.
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)
@@ -112,10 +127,12 @@ impl Engine {
         Ok(Engine { client, manifest, exes: RefCell::new(BTreeMap::new()) })
     }
 
+    /// The specialization shapes.
     pub fn shapes(&self) -> ModelShapes {
         self.manifest.shapes
     }
 
+    /// The parsed manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -17,11 +17,15 @@ use anyhow::{bail, Result};
 /// t-SNE hyperparameters.
 #[derive(Clone, Debug)]
 pub struct TsneConfig {
+    /// Target perplexity of the conditional distributions.
     pub perplexity: f64,
+    /// Gradient-descent iterations.
     pub iterations: usize,
+    /// Gradient-descent step size.
     pub learning_rate: f64,
     /// Early-exaggeration factor applied for the first quarter of iterations.
     pub exaggeration: f64,
+    /// RNG seed for the initialization jitter.
     pub seed: u64,
 }
 

@@ -18,10 +18,14 @@ fn help_lists_subcommands() {
     let out = decfl(&["help"]);
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for sub in ["train", "fig2", "graph", "tsne", "speedup", "qsweep", "baselines", "churn"] {
+    for sub in
+        ["train", "fig2", "graph", "tsne", "speedup", "qsweep", "baselines", "churn", "compress"]
+    {
         assert!(text.contains(sub), "help missing `{sub}`");
     }
-    for flag in ["--net-plan", "--rewire-every", "--edge-drop", "--churn"] {
+    for flag in
+        ["--net-plan", "--rewire-every", "--edge-drop", "--churn", "--compress", "--topk-frac"]
+    {
         assert!(text.contains(flag), "help missing `{flag}`");
     }
 }
@@ -148,6 +152,57 @@ fn baselines_reject_network_flags_loudly() {
     assert!(!out.status.success(), "centralized --net-plan must fail");
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("--net-plan"), "{err}");
+}
+
+#[test]
+fn compressed_train_runs_natively() {
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fd-dsgd", "--steps", "40",
+        "--q", "10", "--eval-every", "2", "--compress", "q8",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).starts_with("comm_rounds,"));
+}
+
+#[test]
+fn compress_subcommand_sweeps_the_frontier() {
+    let out = decfl(&[
+        "compress", "--backend", "native", "--steps", "40", "--q", "10",
+        "--eval-every", "2", "--compressors", "q8,q4", "--fracs", "0.1",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for label in ["none", "q8", "q4", "topk@0.10", "reduction"] {
+        assert!(text.contains(label), "frontier table missing `{label}`:\n{text}");
+    }
+    assert!(text.contains("finding:"), "{text}");
+}
+
+#[test]
+fn compress_subcommand_rejects_compressor_axis_flags() {
+    let out = decfl(&["compress", "--backend", "native", "--steps", "20", "--compress", "q8"]);
+    assert!(!out.status.success(), "compress --compress must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--compressors"), "{err}");
+
+    let out = decfl(&["compress", "--backend", "native", "--steps", "20", "--algo", "fedavg"]);
+    assert!(!out.status.success(), "compress --algo fedavg must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("gossip"));
+}
+
+#[test]
+fn sweeps_and_baselines_reject_compression_flags() {
+    // sweeps build their own configs: compression flags would be ignored
+    let out = decfl(&["qsweep", "--steps", "20", "--compress", "q8"]);
+    assert!(!out.status.success(), "qsweep --compress must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--compress"));
+    // FedAvg has no gossip messages to compress
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fedavg", "--steps", "20",
+        "--compress", "q8",
+    ]);
+    assert!(!out.status.success(), "fedavg --compress must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--compress"));
 }
 
 #[test]

@@ -1,0 +1,184 @@
+//! Integration: compressed-gossip correctness pins.
+//!
+//! Three contracts from DESIGN.md §10:
+//! 1. **Lossless plumbing** — routing a run through the full compressed
+//!    machinery with the `identity` compressor (EF on or off) is
+//!    bitwise-identical to the uncompressed fast path, so the compressed
+//!    code path provably adds no numerics of its own.
+//! 2. **Difference-form convergence** — lossy compressors (q8, q4, top-k)
+//!    under the mean-preserving difference update reach the uncompressed
+//!    run's final loss/accuracy to a tight tolerance on the synthetic
+//!    cohort, while shipping a fraction of the bytes.
+//! 3. **Determinism** — a compressed run is exactly reproducible: the
+//!    stochastic-rounding noise is keyed by `(seed, round, node, kind)`,
+//!    never by call order or wall clock.
+
+use decfl::config::{AlgoKind, Backend, ExperimentConfig};
+use decfl::coordinator::{assemble, run_on};
+use decfl::metrics::RunLog;
+
+fn cfg_with(algo: AlgoKind, compress: &str, steps: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 5;
+    cfg.d = 42;
+    cfg.hidden = 8;
+    cfg.m = 8;
+    cfg.q = 4;
+    cfg.algo = algo;
+    cfg.total_steps = steps;
+    cfg.eval_every = 2;
+    cfg.backend = Backend::Native;
+    cfg.records_per_hospital = 60;
+    cfg.heterogeneity = 0.5;
+    cfg.topology = "ring".into();
+    cfg.compress = compress.into();
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> RunLog {
+    run_on(cfg, &assemble(cfg).unwrap()).unwrap()
+}
+
+#[test]
+fn identity_compressor_bitwise_equals_uncompressed_fast_path() {
+    for algo in [AlgoKind::FdDsgd, AlgoKind::FdDsgt] {
+        let dense = run(&cfg_with(algo, "none", 24));
+        for ef in [true, false] {
+            let mut c = cfg_with(algo, "identity", 24);
+            c.error_feedback = ef;
+            let ident = run(&c);
+            assert_eq!(dense.rows.len(), ident.rows.len(), "{algo:?} ef={ef}");
+            for (rd, ri) in dense.rows.iter().zip(&ident.rows) {
+                assert_eq!(
+                    rd.loss.to_bits(),
+                    ri.loss.to_bits(),
+                    "{algo:?} ef={ef} round {}: identity must be a lossless no-op",
+                    rd.comm_rounds
+                );
+                assert_eq!(rd.accuracy.to_bits(), ri.accuracy.to_bits(), "{algo:?} ef={ef}");
+                assert_eq!(rd.consensus.to_bits(), ri.consensus.to_bits(), "{algo:?} ef={ef}");
+                assert_eq!(
+                    rd.stationarity.to_bits(),
+                    ri.stationarity.to_bits(),
+                    "{algo:?} ef={ef}"
+                );
+            }
+            // identity ships dense f32, so the byte accounting agrees too
+            assert_eq!(
+                dense.rows.last().unwrap().bytes,
+                ident.rows.last().unwrap().bytes,
+                "{algo:?} ef={ef}"
+            );
+        }
+    }
+}
+
+#[test]
+fn difference_form_keeps_compressed_dsgd_at_the_uncompressed_loss() {
+    // the acceptance pin: lossy compressors under the mean-preserving
+    // difference update reach the uncompressed final accuracy (q8: within
+    // 1 point) while shipping far fewer bytes
+    let dense = run(&cfg_with(AlgoKind::FdDsgd, "none", 400));
+    let dl = dense.rows.last().unwrap();
+    // (compressor, topk_frac, min bytes reduction, accuracy tol, rel loss tol)
+    // — q8 carries the headline "within 1% of uncompressed" pin; the
+    // aggressive biased sparsifiers get a wider band (their perturbation is
+    // mean-zero but consensus-noisy; see DESIGN.md §10)
+    for (compress, frac, min_reduction, acc_tol, loss_tol) in [
+        ("q8", 0.1, 3.5, 0.01, 0.05),
+        ("q4", 0.1, 7.0, 0.02, 0.12),
+        ("topk", 0.1, 4.5, 0.04, 0.25),
+        ("topk", 0.05, 8.0, 0.04, 0.25),
+    ] {
+        let mut c = cfg_with(AlgoKind::FdDsgd, compress, 400);
+        c.topk_frac = frac;
+        let comp = run(&c);
+        let cl = comp.rows.last().unwrap();
+        assert!(
+            (cl.accuracy - dl.accuracy).abs() <= acc_tol + 1e-12,
+            "{compress}@{frac}: accuracy {} vs uncompressed {}",
+            cl.accuracy,
+            dl.accuracy
+        );
+        assert!(
+            (cl.loss - dl.loss).abs() <= loss_tol * dl.loss.abs() + 1e-3,
+            "{compress}@{frac}: loss {} vs uncompressed {}",
+            cl.loss,
+            dl.loss
+        );
+        let reduction = dl.bytes as f64 / cl.bytes as f64;
+        assert!(
+            reduction >= min_reduction,
+            "{compress}@{frac}: only {reduction:.1}x fewer bytes (want >= {min_reduction})"
+        );
+    }
+}
+
+#[test]
+fn compressed_dsgt_stays_convergent() {
+    // DSGT compresses two payload streams (θ and ϑ), each with its own
+    // difference-form correction — both must stay convergent
+    let dense = run(&cfg_with(AlgoKind::FdDsgt, "none", 400));
+    let dl = dense.rows.last().unwrap();
+    let comp = run(&cfg_with(AlgoKind::FdDsgt, "q8", 400));
+    let cl = comp.rows.last().unwrap();
+    assert!(
+        (cl.accuracy - dl.accuracy).abs() <= 0.01 + 1e-12,
+        "q8 dsgt: accuracy {} vs uncompressed {}",
+        cl.accuracy,
+        dl.accuracy
+    );
+    assert!(cl.loss.is_finite() && cl.loss < comp.rows.first().unwrap().loss);
+}
+
+#[test]
+fn compressed_runs_are_exactly_reproducible() {
+    for compress in ["q8", "q4", "topk"] {
+        let a = run(&cfg_with(AlgoKind::FdDsgd, compress, 40));
+        let b = run(&cfg_with(AlgoKind::FdDsgd, compress, 40));
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{compress}");
+            assert_eq!(ra.consensus.to_bits(), rb.consensus.to_bits(), "{compress}");
+        }
+        assert_eq!(a.rows.last().unwrap().bytes, b.rows.last().unwrap().bytes, "{compress}");
+    }
+}
+
+#[test]
+fn compressed_threaded_training_bitwise_equal_serial() {
+    // the EF pass runs on the driver thread; the compressed round kernels
+    // fan out — thread count must not move a single bit
+    let mut cfg = cfg_with(AlgoKind::FdDsgt, "q4", 32);
+    cfg.threads = 1;
+    let serial = run(&cfg);
+    cfg.threads = 4;
+    let threaded = run(&cfg);
+    for (rs, rt) in serial.rows.iter().zip(&threaded.rows) {
+        assert_eq!(rs.loss.to_bits(), rt.loss.to_bits());
+        assert_eq!(rs.consensus.to_bits(), rt.consensus.to_bits());
+    }
+}
+
+#[test]
+fn enabling_error_feedback_changes_the_trajectory_but_not_the_bytes() {
+    // the opt-in EF residual is a numerics knob, not a wire-format knob
+    let mut with_ef = cfg_with(AlgoKind::FdDsgd, "q8", 60);
+    with_ef.error_feedback = true;
+    let a = run(&with_ef);
+    let mut no_ef = with_ef.clone();
+    no_ef.error_feedback = false;
+    let b = run(&no_ef);
+    assert_eq!(
+        a.rows.last().unwrap().bytes,
+        b.rows.last().unwrap().bytes,
+        "EF must not change what crosses the wire"
+    );
+    assert_ne!(
+        a.rows.last().unwrap().loss.to_bits(),
+        b.rows.last().unwrap().loss.to_bits(),
+        "EF must change the numerics under a lossy compressor"
+    );
+    // with an unbiased quantizer EF stays benign — both converge
+    assert!(a.rows.last().unwrap().loss.is_finite());
+    assert!(b.rows.last().unwrap().loss.is_finite());
+}

@@ -122,6 +122,80 @@ fn dynamic_plans_fused_and_actor_drivers_bitwise_identical() {
 }
 
 #[test]
+fn compressed_gossip_fused_and_actor_drivers_bitwise_identical() {
+    // every compressor, both algorithm families: the fused driver's
+    // whole-stack EF pass and the actor driver's per-node EF step must
+    // produce the identical decoded stacks — and therefore bitwise-equal
+    // trajectories — with the analytic accountant matching the channel
+    // netsim's *encoded* byte charges message for message.
+    for (algo, compress, frac, ef) in [
+        (AlgoKind::FdDsgd, "identity", 0.1, false),
+        (AlgoKind::FdDsgd, "q8", 0.1, false),
+        (AlgoKind::FdDsgd, "q8", 0.1, true), // opt-in EF residual path
+        (AlgoKind::FdDsgd, "q4", 0.1, false),
+        (AlgoKind::FdDsgd, "topk", 0.1, false),
+        (AlgoKind::FdDsgt, "identity", 0.1, true),
+        (AlgoKind::FdDsgt, "q8", 0.1, false),
+        (AlgoKind::FdDsgt, "q8", 0.1, true),
+        (AlgoKind::FdDsgt, "q4", 0.1, false),
+        (AlgoKind::FdDsgt, "topk", 0.05, false),
+    ] {
+        let mut cfg = native_cfg(algo, 3, 18);
+        cfg.compress = compress.into();
+        cfg.topk_frac = frac;
+        cfg.error_feedback = ef;
+        let asm = assemble(&cfg).unwrap();
+
+        cfg.mode = Mode::Fused;
+        let fused = run_on(&cfg, &asm).unwrap();
+        cfg.mode = Mode::Actors;
+        let actors = run_on(&cfg, &asm).unwrap();
+
+        assert_eq!(fused.rows.len(), actors.rows.len(), "{algo:?}/{compress}");
+        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
+            assert_eq!(
+                rf.loss.to_bits(),
+                ra.loss.to_bits(),
+                "{algo:?}/{compress} round {}: fused {} vs actors {}",
+                rf.comm_rounds,
+                rf.loss,
+                ra.loss
+            );
+            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{algo:?}/{compress}");
+            assert_eq!(
+                rf.stationarity.to_bits(),
+                ra.stationarity.to_bits(),
+                "{algo:?}/{compress}"
+            );
+        }
+        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
+        assert_eq!(ff.bytes, fa.bytes, "{algo:?}/{compress}: encoded byte accounting");
+        assert_eq!(ff.messages, fa.messages, "{algo:?}/{compress}: message accounting");
+    }
+}
+
+#[test]
+fn compressed_gossip_under_churn_drivers_bitwise_identical() {
+    // compression composes with a dynamic plan: offline nodes skip the EF
+    // step entirely (residuals carry), and both drivers must agree on it
+    let mut cfg = native_cfg(AlgoKind::FdDsgd, 3, 24);
+    cfg.net_plan = "churn".into();
+    cfg.churn = 0.3;
+    cfg.compress = "q8".into();
+    let asm = assemble(&cfg).unwrap();
+    cfg.mode = Mode::Fused;
+    let fused = run_on(&cfg, &asm).unwrap();
+    cfg.mode = Mode::Actors;
+    let actors = run_on(&cfg, &asm).unwrap();
+    for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
+        assert_eq!(rf.loss.to_bits(), ra.loss.to_bits(), "round {}", rf.comm_rounds);
+        assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits());
+    }
+    let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
+    assert_eq!(ff.bytes, fa.bytes, "churn + compression byte accounting");
+}
+
+#[test]
 fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
     // Hand-rolled replica of the pre-schedule trainer: W captured once as
     // f32, the same round structure inlined, no NetworkSchedule anywhere.
