@@ -119,12 +119,15 @@ def lower_artifacts(n: int, d: int, h: int, m: int, q: int, shard: int):
         [[n, n], [n, p], [n, p], [n, p], [n, m, d], [n, m], []],
         [[n, p], [n, p], [n, p], [n]],
     )
+    # masked eval: the 4th input flags real (1.0) vs cycle-padded (0.0) rows,
+    # so uneven shards evaluate exactly (record-weighted loss/accuracy; see
+    # rust PjrtCompute::eval_full)
     arts["eval_full"] = (
         jl(
-            lambda th, xs, ys: model.eval_full(th, xs, ys, d, h),
-            spec(n, p), spec(n, shard, d), spec(n, shard),
+            lambda th, xs, ys, mask: model.eval_full(th, xs, ys, mask, d, h),
+            spec(n, p), spec(n, shard, d), spec(n, shard), spec(n, shard),
         ),
-        [[n, p], [n, shard, d], [n, shard]],
+        [[n, p], [n, shard, d], [n, shard], [n, shard]],
         [[], [], [], []],
     )
     arts["predict"] = (

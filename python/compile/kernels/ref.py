@@ -93,23 +93,36 @@ def ref_dsgt_round(w, big_theta, y_tr, g_old, bx, by, lr, d: int, h: int):
     return theta_next, y_next, g_new, jnp.stack(losses)
 
 
-def ref_eval_full(big_theta, xs, ys, d: int, h: int):
-    """(mean loss, accuracy, stationarity gap, consensus error)."""
+def ref_eval_full(big_theta, xs, ys, mask, d: int, h: int):
+    """(record-weighted loss, record-weighted accuracy, stationarity gap,
+    consensus error).
+
+    The straightforward oracle for the masked artifact: per node, keep only
+    the rows whose ``mask`` entry is 1.0 (concrete boolean indexing — this
+    runs outside jit), take that node's exact mean loss/gradient, then weight
+    loss and accuracy by true record counts while the Theorem-1 terms stay
+    node means.
+    """
     n = big_theta.shape[0]
-    losses, grads, accs = [], [], []
+    losses, grads, corrects, counts = [], [], [], []
     for i in range(n):
-        loss, g = ref_loss_and_grad(big_theta[i], xs[i], ys[i], d, h)
-        z = ref_logits(big_theta[i], xs[i], d, h)
-        accs.append(jnp.mean(((z > 0).astype(jnp.float32) == ys[i]).astype(jnp.float32)))
+        keep = mask[i] > 0.0
+        xi, yi = xs[i][keep], ys[i][keep]
+        loss, g = ref_loss_and_grad(big_theta[i], xi, yi, d, h)
+        z = ref_logits(big_theta[i], xi, d, h)
+        corrects.append(jnp.sum(((z > 0).astype(jnp.float32) == yi).astype(jnp.float32)))
+        counts.append(yi.shape[0])
         losses.append(loss)
         grads.append(g)
+    counts = jnp.asarray(counts, dtype=jnp.float32)
+    total = jnp.sum(counts)
     mean_grad = jnp.mean(jnp.stack(grads), axis=0)
     stat = jnp.sum(mean_grad**2)
     theta_bar = jnp.mean(big_theta, axis=0)
     cons = jnp.mean(jnp.sum((big_theta - theta_bar) ** 2, axis=1))
     return (
-        jnp.mean(jnp.stack(losses)),
-        jnp.mean(jnp.stack(accs)),
+        jnp.sum(jnp.stack(losses) * counts) / total,
+        jnp.sum(jnp.stack(corrects)) / total,
         stat,
         cons,
     )

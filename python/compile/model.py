@@ -168,18 +168,47 @@ def dsgt_round(w, big_theta, y_tr, g_old, bx, by, lr, d: int, h: int):
     return theta_next, y_next, g_new, losses
 
 
-def eval_full(big_theta, xs, ys, d: int, h: int):
-    """Full-shard metrics: (mean loss, accuracy, stationarity, consensus).
+def _masked_loss_sum_all(big_theta, xs, ys, mask, d: int, h: int):
+    """Sum over nodes of per-node *masked-mean* losses (aux: per-node losses,
+    logits, row counts).
+
+    ``mask [N,S]`` carries 1.0 for real rows and 0.0 for padded ones, so each
+    node's mean runs over exactly its real records; grad of the sum w.r.t.
+    the stacked params is the stack of per-node gradients of those exact
+    means — the padded rows contribute nothing to loss or gradient.
+    """
+    counts = jnp.sum(mask, axis=1)
+    z = logits_all(big_theta, xs, d, h)
+    per = jnp.sum((jnp.logaddexp(0.0, z) - ys * z) * mask, axis=1) / counts
+    return jnp.sum(per), (per, z, counts)
+
+
+def eval_full(big_theta, xs, ys, mask, d: int, h: int):
+    """Full-shard metrics: (loss, accuracy, stationarity, consensus).
+
+    ``mask [N,S]`` is 1.0 on real rows, 0.0 on padded ones — the host side
+    cycle-pads uneven shards up to the specialized row count and the mask
+    makes the reduction exact (no over-weighted prefix rows).
+
+    Loss and accuracy are **record-weighted** over the real rows: each
+    node's mean is weighted by its true record count, so both metrics
+    describe the same population (the pooled records).  The Theorem-1 terms
+    keep their node-mean form:
 
     stationarity = || (1/N) sum_i grad f_i(theta_i) ||^2   (Theorem 1 LHS, term 1)
     consensus    = (1/N) sum_i || theta_i - theta_bar ||^2 (Theorem 1 LHS, term 2)
     """
     # single fused batched pass: losses, logits and per-node grads together
     # (§Perf L2 optimization — no recomputed forward, no vmap)
-    losses, zs, grads = loss_and_grad_all(big_theta, xs, ys, d, h)
-    acc = jnp.mean(((zs > 0).astype(jnp.float32) == ys).astype(jnp.float32))
+    (_, (per, zs, counts)), grads = jax.value_and_grad(
+        lambda t: _masked_loss_sum_all(t, xs, ys, mask, d, h), has_aux=True
+    )(big_theta)
+    total = jnp.sum(counts)
+    loss = jnp.sum(per * counts) / total
+    correct = ((zs > 0).astype(jnp.float32) == ys).astype(jnp.float32) * mask
+    acc = jnp.sum(correct) / total
     mean_grad = jnp.mean(grads, axis=0)
     stat = jnp.sum(mean_grad**2)
     theta_bar = jnp.mean(big_theta, axis=0)
     cons = jnp.mean(jnp.sum((big_theta - theta_bar) ** 2, axis=1))
-    return jnp.mean(losses), acc, stat, cons
+    return loss, acc, stat, cons

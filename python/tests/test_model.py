@@ -159,15 +159,75 @@ class TestRounds:
         )
 
     def test_eval_full_matches_ref(self):
-        out_p = model.eval_full(self.theta, self.bx, self.by, D, H)
-        out_r = ref.ref_eval_full(self.theta, self.bx, self.by, D, H)
+        ones = jnp.ones((self.n, self.m), dtype=jnp.float32)
+        out_p = model.eval_full(self.theta, self.bx, self.by, ones, D, H)
+        out_r = ref.ref_eval_full(self.theta, self.bx, self.by, np.asarray(ones), D, H)
         for a, b in zip(out_p, out_r):
             np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
 
     def test_eval_consensus_zero_at_consensus(self):
         same = jnp.tile(self.theta[0][None, :], (self.n, 1))
-        _, _, _, cons = model.eval_full(same, self.bx, self.by, D, H)
+        ones = jnp.ones((self.n, self.m), dtype=jnp.float32)
+        _, _, _, cons = model.eval_full(same, self.bx, self.by, ones, D, H)
         assert float(cons) < 1e-8
+
+    def test_eval_full_mask_makes_cycle_padding_exact(self):
+        # shard of k real rows cycle-padded to m (the rust host-side layout):
+        # the masked eval must equal the eval of the exact k-row shards —
+        # the old unmasked artifact over-weighted the first m % k rows
+        k = 5  # real rows per node; padded up to self.m = 8
+        bx = np.asarray(self.bx).copy()
+        by = np.asarray(self.by).copy()
+        mask = np.zeros((self.n, self.m), dtype=np.float32)
+        for i in range(self.n):
+            for s in range(self.m):
+                bx[i, s] = bx[i, s % k]
+                by[i, s] = by[i, s % k]
+            mask[i, :k] = 1.0
+        out_masked = model.eval_full(
+            self.theta, jnp.asarray(bx), jnp.asarray(by), jnp.asarray(mask), D, H
+        )
+        exact_ones = jnp.ones((self.n, k), dtype=jnp.float32)
+        out_exact = model.eval_full(
+            self.theta,
+            jnp.asarray(bx[:, :k]),
+            jnp.asarray(by[:, :k]),
+            exact_ones,
+            D,
+            H,
+        )
+        for a, b in zip(out_masked, out_exact):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+        # and the padded rows would have biased the unmasked mean
+        full_ones = jnp.ones((self.n, self.m), dtype=jnp.float32)
+        biased = model.eval_full(
+            self.theta, jnp.asarray(bx), jnp.asarray(by), full_ones, D, H
+        )
+        assert abs(float(biased[0]) - float(out_exact[0])) > 1e-7
+
+    def test_eval_full_loss_is_record_weighted(self):
+        # nodes with different real-row counts: global loss must be the
+        # record mean sum(n_i * loss_i) / sum(n_i), not the node mean
+        counts = [2, 8, 5, 8, 3, 8]
+        mask = np.zeros((self.n, self.m), dtype=np.float32)
+        for i, k in enumerate(counts):
+            mask[i, :k] = 1.0
+        loss, acc, _, _ = model.eval_full(
+            self.theta, self.bx, self.by, jnp.asarray(mask), D, H
+        )
+        per, corr = [], 0.0
+        for i, k in enumerate(counts):
+            per.append(float(ref.ref_loss(self.theta[i], self.bx[i, :k], self.by[i, :k], D, H)))
+            z = ref.ref_logits(self.theta[i], self.bx[i, :k], D, H)
+            corr += float(
+                jnp.sum(((z > 0).astype(jnp.float32) == self.by[i, :k]).astype(jnp.float32))
+            )
+        total = float(sum(counts))
+        expect = sum(p * k for p, k in zip(per, counts)) / total
+        np.testing.assert_allclose(float(loss), expect, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(acc), corr / total, rtol=1e-6)
+        node_mean = sum(per) / self.n
+        assert abs(float(loss) - node_mean) > 1e-7, "weighting must differ from node mean"
 
 
 @settings(max_examples=15, deadline=None)

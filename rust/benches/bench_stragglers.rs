@@ -1,0 +1,65 @@
+//! EXP-S1 bench: round-engine throughput, true local work, and
+//! straggler-aware simulated time under every compute plan — uniform,
+//! fixed tiers, lognormal speeds, dropout preemption — on one shared base
+//! network, fused mode, native backend.
+//!
+//!     cargo bench --bench bench_stragglers
+//!     DECFL_FULL=1  cargo bench --bench bench_stragglers   # paper-scale
+//!     DECFL_SMOKE=1 cargo bench --bench bench_stragglers   # CI compile+run check
+
+use decfl::benchutil::{bench, budget, full_scale, report, section, smoke};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+
+fn main() -> anyhow::Result<()> {
+    let (n, steps, q) = if full_scale() {
+        (20, 2_000, 50)
+    } else if smoke() {
+        (6, 30, 3)
+    } else {
+        (12, 240, 6)
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.algo = AlgoKind::FdDsgt;
+    cfg.n = n;
+    cfg.hidden = 16;
+    cfg.m = 10;
+    cfg.q = q;
+    cfg.total_steps = steps;
+    cfg.eval_every = usize::MAX / 2; // final row only: time the rounds, not eval
+    cfg.records_per_hospital = 120;
+    cfg.topology = "er".into();
+    cfg.compute_tiers = "1.0,0.5,0.25".into();
+    cfg.compute_sigma = 0.6;
+    cfg.slow_frac = 0.3;
+
+    println!(
+        "straggler compute plans, fd-dsgt fused/native: n={n} steps={steps} q={q} ({} rounds)",
+        steps.div_ceil(q)
+    );
+
+    cfg.compute_plan = "uniform".into();
+    let asm = assemble(&cfg)?; // shared base graph + cohort for every plan
+    for plan in ["uniform", "fixed-tiers", "lognormal", "dropout"] {
+        cfg.compute_plan = plan.into();
+        let log = run_on(&cfg, &asm)?;
+        let last = log.rows.last().unwrap();
+        section(&format!("plan {plan}"));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(&cfg, &asm).unwrap());
+        });
+        report(&format!("{plan} ({} rounds)", last.comm_rounds), &t);
+        println!(
+            "work: {} local steps/node, sim {:.2}s | wire {:.2} MB | final loss {:.4} acc {:.3}",
+            last.local_steps,
+            last.sim_time_s,
+            last.bytes as f64 / 1e6,
+            last.loss,
+            last.accuracy
+        );
+    }
+    Ok(())
+}

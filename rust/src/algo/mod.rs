@@ -115,6 +115,22 @@ pub fn add_diff(y: &mut [f32], a: &[f32], b: &[f32]) {
     }
 }
 
+/// `next = prev + s·(next − prev)` elementwise — the FedNova-style τ-weighted
+/// rescale of one node's local-phase displacement under a heterogeneous
+/// compute plan (`engine::stragglers`): a node that ran `L_i` local steps has
+/// its displacement scaled to represent the round's mean local work `L̄`, so
+/// gossip mixes unbiased contributions.  Callers skip the call entirely when
+/// `s == 1.0` (uniform plans, or `L_i == L̄`): `prev + 1.0·(next − prev)` is
+/// NOT a bitwise identity in f32, and the determinism contract requires the
+/// fused and actor drivers to take the identical branch — both derive `s`
+/// from the same `ComputeSchedule`, so they do.
+pub fn scale_displacement(next: &mut [f32], prev: &[f32], s: f32) {
+    assert_eq!(next.len(), prev.len());
+    for (n, &p) in next.iter_mut().zip(prev) {
+        *n = p + s * (*n - p);
+    }
+}
+
 /// `y *= a`
 pub fn scale(y: &mut [f32], a: f32) {
     for yi in y.iter_mut() {
@@ -211,6 +227,18 @@ mod tests {
         }
         add_diff(&mut y, &[2.0, 2.0, 2.0, 2.0], &[0.5, 0.5, 0.5, 0.5]);
         assert_eq!(y, vec![8.5, 9.5, -7.5, 2.0]);
+    }
+
+    #[test]
+    fn scale_displacement_rescales_the_delta() {
+        let prev = vec![1.0f32, -2.0, 0.5];
+        let mut next = vec![3.0f32, -2.0, -0.5];
+        scale_displacement(&mut next, &prev, 0.5);
+        assert_eq!(next, vec![2.0, -2.0, 0.0]);
+        // s = 0 collapses to the pre-phase parameters exactly
+        let mut next = vec![3.0f32, -2.0, -0.5];
+        scale_displacement(&mut next, &prev, 0.0);
+        assert_eq!(next, prev);
     }
 
     #[test]

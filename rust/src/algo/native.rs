@@ -671,9 +671,9 @@ impl NativeModel {
     }
 
     /// Full-shard metrics — `eval_full` twin:
-    /// (mean loss, accuracy, `||mean grad||²`, consensus).
-    /// A straight loop over [`Self::eval_node`] followed by the node-order
-    /// reduction in [`Self::eval_reduce`].
+    /// (record-weighted loss, record-weighted accuracy, `||mean grad||²`,
+    /// consensus).  A straight loop over [`Self::eval_node`] followed by the
+    /// node-order reduction in [`Self::eval_reduce`].
     pub fn eval_full(&self, theta: &[f32], shards: &[crate::data::Shard]) -> (f64, f64, f64, f64) {
         let p = self.p();
         let n = shards.len();
@@ -689,6 +689,14 @@ impl NativeModel {
     /// Reduce per-node eval partials in node order (the ONLY eval reduction —
     /// serial and threaded `eval_full` both call it, so the metric formulas
     /// exist once and cannot desync).
+    ///
+    /// Global loss and accuracy are **record-weighted**: each node's mean is
+    /// weighted by its shard size, so both metrics describe the same
+    /// population — the pooled records — and a 1-record shard cannot swing
+    /// the global loss the way the old unweighted node-mean let it (under
+    /// even shards the two weightings coincide).  Stationarity and consensus
+    /// stay node-mean quantities exactly as Theorem 1 defines them: the
+    /// theorem's bounds are over `(1/N) Σ_i`, not over records.
     pub fn eval_reduce(
         &self,
         theta: &[f32],
@@ -697,11 +705,11 @@ impl NativeModel {
         let p = self.p();
         let n = per.len();
         let mut mean_grad = vec![0.0f64; p];
-        let mut loss_sum = 0.0;
+        let mut loss_wsum = 0.0;
         let mut correct = 0usize;
         let mut total = 0usize;
         for (loss, grad, c, t) in per {
-            loss_sum += loss;
+            loss_wsum += loss * *t as f64;
             for (acc, &g) in mean_grad.iter_mut().zip(grad) {
                 *acc += g as f64;
             }
@@ -714,7 +722,12 @@ impl NativeModel {
             .map(|i| l2_dist_sq(&theta[i * p..(i + 1) * p], &theta_bar))
             .sum::<f64>()
             / n as f64;
-        (loss_sum / n as f64, correct as f64 / total.max(1) as f64, stat, cons)
+        (
+            loss_wsum / total.max(1) as f64,
+            correct as f64 / total.max(1) as f64,
+            stat,
+            cons,
+        )
     }
 
     /// `P(AD|x)` per row — `predict` twin.
@@ -888,6 +901,46 @@ mod tests {
         let by = rand_labels(&mut rng, n * batch);
         let (next, _) = m.dsgd_round(&w, &theta, &bx, &by, 0.0, n, batch);
         testutil::assert_close(&next, &theta, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn eval_loss_is_the_record_mean_on_skewed_shards() {
+        // the archetype bugfix: shard sizes 1 and 999 with different
+        // per-record losses must reduce to the RECORD mean, not the node
+        // mean — and loss and accuracy must weight the same population
+        let m = model();
+        let mut rng = Pcg64::seed(13);
+        let t0 = m.init(&mut rng);
+        let t1 = m.init(&mut rng);
+        let mut theta = t0.clone();
+        theta.extend_from_slice(&t1);
+        let tiny = crate::data::Shard {
+            n: 1,
+            d: m.d,
+            x: rand_vec(&mut rng, m.d, 2.0),
+            y: vec![1.0],
+        };
+        let big = crate::data::Shard {
+            n: 999,
+            d: m.d,
+            x: rand_vec(&mut rng, 999 * m.d, 1.0),
+            y: rand_labels(&mut rng, 999),
+        };
+        let (l_tiny, _) = m.loss_and_grad(&t0, &tiny.x, &tiny.y);
+        let (l_big, _) = m.loss_and_grad(&t1, &big.x, &big.y);
+        let (loss, acc, _, _) = m.eval_full(&theta, &[tiny.clone(), big.clone()]);
+        let record_mean = (l_tiny * 1.0 + l_big * 999.0) / 1000.0;
+        assert_eq!(loss.to_bits(), record_mean.to_bits(), "{loss} vs {record_mean}");
+        let node_mean = (l_tiny + l_big) / 2.0;
+        assert!(
+            (loss - node_mean).abs() > 1e-9,
+            "shards differ, so record and node means must differ: {loss} vs {node_mean}"
+        );
+        // accuracy uses the identical population: correct / 1000
+        let (_, _, c0, t0n) = m.eval_node(&t0, &tiny);
+        let (_, _, c1, t1n) = m.eval_node(&t1, &big);
+        assert_eq!(t0n + t1n, 1000);
+        assert_eq!(acc, (c0 + c1) as f64 / 1000.0);
     }
 
     #[test]

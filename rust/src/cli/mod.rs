@@ -191,6 +191,18 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     if let Some(v) = args.get_f64("churn")? {
         cfg.churn = v;
     }
+    if let Some(v) = args.get_str("compute-plan") {
+        cfg.compute_plan = v.to_string();
+    }
+    if let Some(v) = args.get_str("tiers") {
+        cfg.compute_tiers = v.to_string();
+    }
+    if let Some(v) = args.get_f64("slow-frac")? {
+        cfg.slow_frac = v;
+    }
+    if let Some(v) = args.get_f64("sigma")? {
+        cfg.compute_sigma = v;
+    }
     if let Some(v) = args.get_str("compress") {
         cfg.compress = v.to_string();
     }
@@ -273,6 +285,26 @@ mod tests {
         assert!((cfg.churn - 0.2).abs() < 1e-12);
         assert_eq!(cfg.rewire_every, 3);
         assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn compute_plan_overrides_apply() {
+        let a = parse(&[
+            "train", "--compute-plan", "fixed-tiers", "--tiers", "1.0,0.25",
+            "--slow-frac", "0.3", "--sigma", "0.9",
+        ]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.compute_plan, "fixed-tiers");
+        assert_eq!(cfg.compute_tiers, "1.0,0.25");
+        assert!((cfg.slow_frac - 0.3).abs() < 1e-12);
+        assert!((cfg.compute_sigma - 0.9).abs() < 1e-12);
+        assert!(a.finish().is_ok());
+        // defaults untouched when the flags are absent
+        let b = parse(&["train"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&b, &mut cfg).unwrap();
+        assert_eq!(cfg.compute_plan, "uniform");
     }
 
     #[test]

@@ -156,6 +156,17 @@ pub struct ExperimentConfig {
     /// Per-node offline probability per round (plan = churn).
     pub churn: f64,
 
+    // -- heterogeneous compute (per-node local work; see engine::stragglers) --
+    /// Per-round local-work plan: uniform|fixed-tiers|lognormal|dropout.
+    pub compute_plan: String,
+    /// Comma-separated tier speeds in (0, 1] (plan = fixed-tiers); node `i`
+    /// runs at `tiers[i % len]`.
+    pub compute_tiers: String,
+    /// Per-round preemption probability in [0, 1) (plan = dropout).
+    pub slow_frac: f64,
+    /// Lognormal σ of the per-round speed draw (plan = lognormal).
+    pub compute_sigma: f64,
+
     // -- communication compression (see `compress`) --
     /// Gossip-payload compressor: none|identity|q8|q4|topk.
     pub compress: String,
@@ -221,6 +232,10 @@ impl Default for ExperimentConfig {
             rewire_every: 5,
             edge_drop: 0.2,
             churn: 0.1,
+            compute_plan: "uniform".into(),
+            compute_tiers: "1.0,0.5".into(),
+            slow_frac: 0.25,
+            compute_sigma: 0.5,
             compress: "none".into(),
             topk_frac: 0.1,
             error_feedback: false,
@@ -268,6 +283,10 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("net.rewire_every")? { self.rewire_every = v; }
         if let Some(v) = doc.get_f64("net.edge_drop")? { self.edge_drop = v; }
         if let Some(v) = doc.get_f64("net.churn")? { self.churn = v; }
+        if let Some(v) = doc.get_str("compute.plan") { self.compute_plan = v.to_string(); }
+        if let Some(v) = doc.get_str("compute.tiers") { self.compute_tiers = v.to_string(); }
+        if let Some(v) = doc.get_f64("compute.slow_frac")? { self.slow_frac = v; }
+        if let Some(v) = doc.get_f64("compute.sigma")? { self.compute_sigma = v; }
         if let Some(v) = doc.get_str("comm.compress") { self.compress = v.to_string(); }
         if let Some(v) = doc.get_f64("comm.topk_frac")? { self.topk_frac = v; }
         if let Some(v) = doc.get_bool("comm.error_feedback")? { self.error_feedback = v; }
@@ -302,6 +321,7 @@ impl ExperimentConfig {
         crate::graph::Topology::parse(&self.topology)?;
         crate::mixing::Scheme::parse(&self.mixing)?;
         crate::graph::schedule::plan_from_config(self)?;
+        crate::engine::stragglers::plan_from_config(self)?;
         crate::compress::Spec::parse(&self.compress, self.topk_frac)?;
         Ok(())
     }
@@ -412,6 +432,40 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.compress = "topk".into();
         c.topk_frac = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn compute_plan_overlay_and_validation() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.compute_plan, "uniform");
+        assert!(c.validate().is_ok());
+        let dir = std::env::temp_dir().join(format!("decfl_comp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("compute.toml");
+        std::fs::write(
+            &path,
+            "[compute]\nplan = \"fixed-tiers\"\ntiers = \"1.0,0.25\"\nslow_frac = 0.4\nsigma = 0.8\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.compute_plan, "fixed-tiers");
+        assert_eq!(cfg.compute_tiers, "1.0,0.25");
+        assert!((cfg.slow_frac - 0.4).abs() < 1e-12);
+        assert!((cfg.compute_sigma - 0.8).abs() < 1e-12);
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+        // bad plans / parameters are rejected at validate
+        let mut c = ExperimentConfig::default();
+        c.compute_plan = "bogus".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.compute_plan = "dropout".into();
+        c.slow_frac = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.compute_plan = "fixed-tiers".into();
+        c.compute_tiers = "0.5,2.0".into();
         assert!(c.validate().is_err());
     }
 

@@ -30,6 +30,14 @@
 //! offline draws-and-discards its communication batch (keeping the sampler
 //! stream aligned across drivers and plans, §7) and skips the exchange.
 //! Byte/latency accounting comes from the netsim itself.
+//! Under a heterogeneous compute plan (`engine::stragglers`) each node
+//! derives its own `(seed, round, node)`-keyed τ_i, runs only its first
+//! τ_i − 1 local steps (batches beyond that are drawn but unused, keeping
+//! the sampler streams plan-independent), rescales its displacement by the
+//! shared FedNova-style τ-weight, and advances its causal clock at its own
+//! speed — the gossip gather then makes every round as slow as its slowest
+//! participant, which is exactly what the fused driver's analytic
+//! accountant charges.
 //!
 //! Each node caches its slice of the view under the schedule's view key
 //! (once for static, once per epoch for rewire).  Edge-drop/churn views
@@ -44,12 +52,12 @@
 //! whole-network call) differ, which is exactly what pins driver
 //! equivalence, for static and dynamic network plans alike.
 
-use crate::algo::{add_diff, axpy};
+use crate::algo::{add_diff, axpy, scale_displacement};
 use crate::algo::native::NativeModel;
 use crate::compress::{add_residual, decode_into, residual_update, GossipComm, MsgKey};
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
-use crate::engine::{self, RoundEngine};
+use crate::engine::{self, ComputeSchedule, RoundEngine};
 use crate::graph::{Graph, NetworkSchedule};
 use crate::linalg::Mat;
 use crate::metrics::{round_metrics, RunLog};
@@ -100,6 +108,9 @@ impl NodeTask {
         let compressing = comm.enabled();
         let ef = compressing && comm.error_feedback;
         let tracked = self.use_tracker;
+        // per-node local-work schedule — every node derives the identical
+        // (seed, round, node)-keyed plan, exactly like the network schedule
+        let csched = ComputeSchedule::from_config(&self.cfg)?;
 
         let mut driver = NodeDriver {
             task: self,
@@ -122,6 +133,7 @@ impl NodeTask {
             vbuf: vec![0.0f32; if compressing { p } else { 0 }],
             xhat_own: vec![0.0f32; if compressing { p } else { 0 }],
             yhat_own: vec![0.0f32; if compressing && tracked { p } else { 0 }],
+            csched,
             net_key: None,
             online_now: true,
             nbrs: Vec::new(),
@@ -153,6 +165,9 @@ struct NodeDriver<'a> {
     stacked: Vec<f32>,
     /// Gossip-compression context (compressor + EF toggle + seed).
     comm: GossipComm,
+    /// Per-round local-work schedule (`engine::stragglers`); uniform plans
+    /// keep the legacy phase bodies byte for byte.
+    csched: ComputeSchedule,
     /// Error-feedback residuals for the θ / tracker streams (empty unless
     /// compressing with EF).
     e_theta: Vec<f32>,
@@ -247,11 +262,45 @@ impl engine::Driver for NodeDriver<'_> {
         Ok(())
     }
 
-    fn local_phase(&mut self, _round: usize, lrs: &[f32]) -> Result<()> {
+    fn local_phase(&mut self, round: usize, lrs: &[f32]) -> Result<()> {
+        // full Q−1 batches drawn whatever the compute plan — stragglers use
+        // only their prefix, keeping sampler streams plan-independent (§7)
         self.sampler.batches(&self.task.shard, lrs.len(), &mut self.lx, &mut self.ly);
-        let (t2, _) = self.compute.local_steps(&self.theta, &self.lx, &self.ly, lrs)?;
-        self.theta = t2;
-        self.ep.spend_compute(lrs.len() as f64 * self.task.cfg.compute_s_per_step);
+        if self.csched.is_uniform() {
+            let (t2, _) = self.compute.local_steps(&self.theta, &self.lx, &self.ly, lrs)?;
+            self.theta = t2;
+            self.ep.spend_compute(lrs.len() as f64 * self.task.cfg.compute_s_per_step);
+            return Ok(());
+        }
+        // straggler round: τ_i − 1 truncated local steps on the batch
+        // prefix, then the FedNova-style τ-weighted displacement rescale —
+        // the per-node twin of the fused driver's whole-stack pass, using
+        // the same kernels and the same schedule-derived weight, so the
+        // drivers stay bitwise-equal
+        let id = self.task.id;
+        let (d, _, _) = self.compute.dims();
+        let m = self.task.cfg.m;
+        let li = (self.csched.tau(round, id) - 1).min(lrs.len());
+        if li > 0 {
+            let (t2, _) = self.compute.local_steps(
+                &self.theta,
+                &self.lx[..li * m * d],
+                &self.ly[..li * m],
+                &lrs[..li],
+            )?;
+            let w = self.csched.tau_weight(round, id);
+            if w != 1.0 {
+                let prev = std::mem::replace(&mut self.theta, t2);
+                scale_displacement(&mut self.theta, &prev, w);
+            } else {
+                self.theta = t2;
+            }
+        }
+        // this node's own clock runs at its own speed — the causal clocks
+        // make the round complete when the slowest participant arrives
+        self.ep.spend_compute(
+            li as f64 * self.task.cfg.compute_s_per_step / self.csched.speed(round, id),
+        );
         Ok(())
     }
 
@@ -372,7 +421,13 @@ impl engine::Driver for NodeDriver<'_> {
             axpy(&mut theta_next, -lr, &grad);
             self.theta = theta_next;
         }
-        self.ep.spend_compute(self.task.cfg.compute_s_per_step);
+        // the communication gradient runs at this node's round speed too
+        let s = self.task.cfg.compute_s_per_step;
+        if self.csched.is_uniform() {
+            self.ep.spend_compute(s);
+        } else {
+            self.ep.spend_compute(s / self.csched.speed(round, self.task.id));
+        }
         Ok(())
     }
 
@@ -405,6 +460,8 @@ where
     // (seed, round)-keyed schedule
     let eng = RoundEngine::from_config(cfg);
     let q = eng.q;
+    let csched = ComputeSchedule::from_config(cfg)?;
+    csched.ensure_runnable(n, eval_compute.local_steps_len())?;
     let net = Arc::new(NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?);
     // channels are wired over the union of every round's gossip graph
     let union = net.union_graph(eng.rounds)?;
@@ -455,6 +512,10 @@ where
         log.push(round_metrics(0, 0, eval0, stats.snapshot(), started.elapsed().as_secs_f64()));
 
         let mut pending: std::collections::BTreeMap<u64, (usize, Vec<f32>)> = Default::default();
+        // true local-work counter for heterogeneous plans: Σ_r Σ_i τ_i(r),
+        // accumulated over every round up to the observed one (rounds
+        // complete in order — each node snapshots in round order)
+        let (mut work, mut work_round) = (0u64, 0u64);
         while let Ok(snap) = snap_rx.recv() {
             let entry = pending
                 .entry(snap.round)
@@ -465,9 +526,18 @@ where
                 let (_, stacked) = pending.remove(&snap.round).unwrap();
                 stats.rounds.store(snap.round, std::sync::atomic::Ordering::Relaxed);
                 let eval = eval_compute.eval_full(&stacked, &ds.shards)?;
+                let steps = if csched.is_uniform() {
+                    snap.round * q as u64
+                } else {
+                    while work_round < snap.round {
+                        work_round += 1;
+                        work += csched.local_work(work_round as usize);
+                    }
+                    work / n as u64
+                };
                 log.push(round_metrics(
                     snap.round,
-                    snap.round * q as u64,
+                    steps,
                     eval,
                     stats.snapshot(),
                     started.elapsed().as_secs_f64(),
@@ -606,6 +676,28 @@ mod tests {
             churn_log.rows.last().unwrap().bytes,
             static_log.rows.last().unwrap().bytes
         );
+    }
+
+    #[test]
+    fn actor_straggler_plans_train_over_real_channels() {
+        for plan in ["fixed-tiers", "dropout"] {
+            let (mut cfg, ds, graph, w) = setup(AlgoKind::FdDsgd, 4, 32);
+            cfg.compute_plan = plan.into();
+            cfg.compute_tiers = "1.0,0.5".into();
+            cfg.slow_frac = 0.4;
+            let eval = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+            let factory = native_factory(&cfg);
+            let log = train(&cfg, &factory, &eval, &ds, &graph, &w).unwrap();
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last < first, "{plan}: loss {first} -> {last}");
+            // straggler rounds report their true (reduced) local work
+            let final_row = log.rows.last().unwrap();
+            assert!(
+                final_row.local_steps <= final_row.comm_rounds * cfg.q as u64,
+                "{plan}"
+            );
+        }
     }
 
     #[test]

@@ -97,6 +97,67 @@ pub trait Compute {
         Ok(())
     }
 
+    /// Whole-network local phase under a **heterogeneous compute plan**
+    /// (`engine::stragglers`): node `i` runs only its first
+    /// `min(taus[i] − 1, lrs.len())` eq.-4 steps, consuming the *prefix* of
+    /// its pre-sampled batches and of the shared lr buffer (batches beyond a
+    /// straggler's count are drawn but unused, keeping sampler streams
+    /// plan-independent — §7).  Rows with zero local steps copy through
+    /// unchanged; loss-slab entries past a node's step count are zeroed.
+    /// Default: per-node `local_steps` on truncated slices — exactly the
+    /// call sequence the actor driver issues, so any backend stays
+    /// bitwise-aligned with the actor path.  The native backend overrides
+    /// with the threaded zero-copy fan-out.
+    #[allow(clippy::too_many_arguments)]
+    fn local_steps_hetero_into(
+        &self,
+        big_theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+        taus: &[usize],
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let (_, _, p) = self.dims();
+        let n = big_theta.len() / p;
+        if n == 0 {
+            bail!(
+                "local_steps_hetero on an empty Θ stack (theta len {} < p = {p})",
+                big_theta.len()
+            );
+        }
+        ensure!(taus.len() == n, "τ schedule covers {} rows, stack has {n}", taus.len());
+        ensure!(theta_out.len() == big_theta.len(), "theta_out size mismatch");
+        ensure!(losses.len() == n * lrs.len(), "losses slab size mismatch");
+        let (bxn, byn) = (bx.len() / n, by.len() / n);
+        let local = lrs.len();
+        let (bxs, bys) = (bxn / local.max(1), byn / local.max(1));
+        for i in 0..n {
+            let li = taus[i].saturating_sub(1).min(local);
+            let lrow = &mut losses[i * local..(i + 1) * local];
+            if li == 0 {
+                theta_out[i * p..(i + 1) * p].copy_from_slice(&big_theta[i * p..(i + 1) * p]);
+                for l in lrow.iter_mut() {
+                    *l = 0.0;
+                }
+                continue;
+            }
+            let (t, l) = self.local_steps(
+                &big_theta[i * p..(i + 1) * p],
+                &bx[i * bxn..i * bxn + li * bxs],
+                &by[i * byn..i * byn + li * bys],
+                &lrs[..li],
+            )?;
+            theta_out[i * p..(i + 1) * p].copy_from_slice(&t);
+            lrow[..li].copy_from_slice(&l);
+            for l in lrow[li..].iter_mut() {
+                *l = 0.0;
+            }
+        }
+        Ok(())
+    }
+
     /// One node's gossip combine `Σ_j w_j θ_j` over stacked `[n,p]` params.
     fn combine(&self, wrow: &[f32], thetas: &[f32]) -> Result<Vec<f32>>;
 
@@ -407,37 +468,61 @@ impl Compute for PjrtCompute {
         Ok((theta_next, y_next, g_new, losses))
     }
 
-    /// Full-shard metrics through the `eval_full` artifact.
+    /// Full-shard metrics through the **masked** `eval_full` artifact —
+    /// exact on uneven shards.
     ///
-    /// **Cycle-padding bias**: the artifact is specialized to `s.shard` rows
-    /// per node, so a shard with `sh.n < s.shard` rows is cycle-padded
-    /// (row `i % sh.n`).  When `s.shard % sh.n != 0`, the first
-    /// `s.shard % sh.n` rows appear one extra time, so their loss/accuracy
-    /// contributions are over-weighted: the artifact reports the mean over
-    /// the *padded* rows, not the true shard mean.  This is the deliberate
-    /// price of fixed artifact shapes; `NativeCompute::eval_full` evaluates
-    /// the exact shards and is the unbiased reference oracle (the
-    /// `cycle_padding_bias_*` test below demonstrates the bias arithmetic
-    /// and the oracle's exactness; pjrt-vs-native comparisons use full-size
-    /// shards).
+    /// The artifact is specialized to `s.shard` rows per node, so a shard
+    /// with `sh.n < s.shard` rows is cycle-padded (row `i % sh.n`) — but the
+    /// padded rows are shipped with a 0.0 entry in the per-row mask input,
+    /// so the artifact's reduction ignores them entirely: per-node means run
+    /// over exactly the real rows, and the global loss/accuracy are
+    /// record-weighted over the true record counts, matching
+    /// `NativeCompute::eval_full` (the reference oracle) on uneven shards.
+    /// (The pre-mask artifact reported the mean over the *padded* rows,
+    /// over-weighting the first `s.shard % sh.n` rows; the
+    /// `cycle_padding_bias_*` test below keeps that bias arithmetic as
+    /// documentation of what the mask eliminates.)  Shards *larger* than the
+    /// artifact's capacity cannot be masked into shape and are rejected
+    /// loudly rather than silently truncated.
     fn eval_full(&self, theta: &[f32], shards: &[Shard]) -> Result<(f64, f64, f64, f64)> {
         let s = self.engine.shapes();
         if shards.len() != s.n {
             bail!("eval_full wants {} shards, got {}", s.n, shards.len());
         }
-        // the artifact is specialized to `shard` rows per node: cycle-pad
+        let spec = self.engine.manifest().spec("eval_full")?;
+        if spec.inputs.len() < 4 {
+            bail!(
+                "this artifact set's eval_full predates masked evaluation ({} inputs): \
+                 its cycle-padded reduction over-weights the first shard%n rows of an \
+                 uneven shard; re-run `make artifacts` to regenerate the masked artifact",
+                spec.inputs.len()
+            );
+        }
+        // cycle-pad to the specialized row count; the mask zeroes the pad
         let mut xs = Vec::with_capacity(s.n * s.shard * s.d);
         let mut ys = Vec::with_capacity(s.n * s.shard);
+        let mut mask = Vec::with_capacity(s.n * s.shard);
         for sh in shards {
             if sh.n == 0 {
                 bail!("empty shard in eval_full");
             }
+            if sh.n > s.shard {
+                bail!(
+                    "shard has {} records but the eval_full artifact is specialized to \
+                     {} rows; evaluating a truncation would bias the metrics — re-run \
+                     `make artifacts` with shard >= {}",
+                    sh.n,
+                    s.shard,
+                    sh.n
+                );
+            }
             for i in 0..s.shard {
                 xs.extend_from_slice(sh.row(i % sh.n));
                 ys.push(sh.y[i % sh.n]);
+                mask.push(if i < sh.n { 1.0f32 } else { 0.0 });
             }
         }
-        let out = self.engine.execute("eval_full", &[theta, &xs, &ys])?;
+        let out = self.engine.execute("eval_full", &[theta, &xs, &ys, &mask])?;
         Ok((out[0][0] as f64, out[1][0] as f64, out[2][0] as f64, out[3][0] as f64))
     }
 
@@ -644,6 +729,65 @@ impl Compute for NativeCompute {
                         &by[i * byn..(i + 1) * byn],
                         lrs,
                         l,
+                        ws,
+                    )
+                });
+            },
+        );
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn local_steps_hetero_into(
+        &self,
+        big_theta: &[f32],
+        bx: &[f32],
+        by: &[f32],
+        lrs: &[f32],
+        taus: &[usize],
+        theta_out: &mut [f32],
+        losses: &mut [f64],
+    ) -> Result<()> {
+        let p = self.model.p();
+        let nodes = big_theta.len() / p;
+        if nodes == 0 {
+            bail!(
+                "local_steps_hetero on an empty Θ stack (theta len {} < p = {p})",
+                big_theta.len()
+            );
+        }
+        ensure!(taus.len() == nodes, "τ schedule covers {} rows, stack has {nodes}", taus.len());
+        ensure!(theta_out.len() == big_theta.len(), "theta_out size mismatch");
+        ensure!(losses.len() == nodes * lrs.len(), "losses slab size mismatch");
+        theta_out.copy_from_slice(big_theta);
+        let local = lrs.len();
+        if local == 0 {
+            return Ok(());
+        }
+        let (bxn, byn) = (bx.len() / nodes, by.len() / nodes);
+        let (bxs, bys) = (bxn / local, byn / local);
+        let model = &self.model;
+        // per-node prefix truncation of the same kernel the uniform fan-out
+        // runs — a node's first li steps are bitwise what the actor driver's
+        // truncated `local_steps` call computes
+        par_each(
+            self.pool(nodes),
+            theta_out.chunks_mut(p).zip(losses.chunks_mut(local)),
+            |i, (t, l)| {
+                let li = taus[i].saturating_sub(1).min(local);
+                for tail in l[li..].iter_mut() {
+                    *tail = 0.0;
+                }
+                if li == 0 {
+                    return;
+                }
+                with_ws(|ws| {
+                    model.local_steps_into(
+                        t,
+                        &bx[i * bxn..i * bxn + li * bxs],
+                        &by[i * byn..i * byn + li * bys],
+                        &lrs[..li],
+                        &mut l[..li],
                         ws,
                     )
                 });

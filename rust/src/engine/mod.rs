@@ -21,24 +21,32 @@
 //! [`RoundEngine::run`] is the only round loop in the crate.  It is
 //! deliberately tiny: schedule + cadence, nothing else, so a new scenario
 //! (stragglers, checkpointing) is a new `CommStrategy`, a `Driver` hook, or
-//! a `NetPlan` — never a fifth copy of the loop.
+//! a `NetPlan` — never a fifth copy of the loop.  The straggler scenario
+//! landed exactly that way: per-node local work is a scheduled quantity
+//! ([`stragglers::ComputeSchedule`], `(seed, round, node)`-keyed like the
+//! network schedule) consulted by the drivers' phase bodies, and the loop
+//! itself never changed.
 //!
 //! Determinism contract: batch order per node-sampler stream, float-op order
-//! per node, eval cadence, the `(seed, round)`-keyed network views, and the
+//! per node, eval cadence, the `(seed, round)`-keyed network views, the
+//! `(seed, round, node)`-keyed compute schedule (`stragglers`), and the
 //! `(seed, round, node, kind)`-keyed compression streams (`compress`) are
 //! identical across drivers and thread counts, so trajectories are
 //! bitwise-reproducible (pinned by the `driver_equivalence` integration
-//! test, for static and dynamic network plans and every compressor alike).
+//! test, for static and dynamic network plans, every compressor, and every
+//! straggler plan alike).
 
+pub mod stragglers;
 pub mod strategy;
 
+pub use stragglers::{ComputePlan, ComputeSchedule};
 pub use strategy::{
     CentralizedStrategy, CommCost, CommStrategy, DsgdStrategy, DsgtStrategy, FedAvgStrategy,
     RoundNet,
 };
 
 use crate::algo::native::NativeModel;
-use crate::algo::{LrSchedule, RoundPlan};
+use crate::algo::{scale_displacement, LrSchedule, RoundPlan};
 use crate::config::{AlgoKind, ExperimentConfig};
 use crate::coordinator::compute::Compute;
 use crate::mixing::SparseW;
@@ -250,6 +258,16 @@ pub struct SyncDriver<'a> {
     st: EngineState<'a>,
     acct: Option<Accountant>,
     compute_s_per_step: f64,
+    /// Per-round, per-node local-work schedule (`engine::stragglers`).
+    /// Uniform plans take the legacy code paths verbatim.
+    csched: ComputeSchedule,
+    /// Per-round τ scratch `[n]` (non-uniform plans only).
+    taus: Vec<usize>,
+    /// Per-round τ-weight scratch `[n]` (non-uniform plans only).
+    tau_ws: Vec<f32>,
+    /// Cumulative Σ_i τ_i over completed rounds (non-uniform plans only) —
+    /// the true local-work counter behind `RoundMetrics::local_steps`.
+    work_done: u64,
     /// Per-round network schedule (gossip strategies only).
     net: Option<NetworkSchedule>,
     /// Cached view of the current round: f32 W (dense + degree-sparse),
@@ -297,6 +315,8 @@ impl<'a> SyncDriver<'a> {
                 cfg.drop_prob
             );
         }
+        let csched = ComputeSchedule::from_config(cfg)?;
+        csched.ensure_runnable(ds.n_hospitals(), compute.local_steps_len())?;
         let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
         // compression context: the compressor, EF toggle, and seed the
         // per-message keys derive from — identical in the actor driver
@@ -325,6 +345,7 @@ impl<'a> SyncDriver<'a> {
             strategy,
             Some(acct),
             Some(net),
+            csched,
             cfg.algo.name(),
         ))
     }
@@ -364,6 +385,14 @@ impl<'a> SyncDriver<'a> {
                 cfg.compress
             );
         }
+        if cfg.compute_plan != "uniform" {
+            bail!(
+                "compute plan `{}` requested, but the FedAvg baseline runs the paper's \
+                 synchronous server rounds and would silently ignore it; straggler \
+                 plans apply to gossip algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.compute_plan
+            );
+        }
         let n = ds.n_hospitals();
         let model = NativeModel::new(d, h);
         // server init = node-0 init (a shared broadcast start, as FedAvg assumes)
@@ -397,6 +426,7 @@ impl<'a> SyncDriver<'a> {
             Box::new(FedAvgStrategy::new()),
             Some(acct),
             None,
+            ComputeSchedule::from_config(cfg)?,
             "fedavg",
         ))
     }
@@ -428,6 +458,15 @@ impl<'a> SyncDriver<'a> {
                 cfg.compress
             );
         }
+        if cfg.compute_plan != "uniform" {
+            bail!(
+                "compute plan `{}` requested, but the centralized baseline is a single \
+                 fusion center with no per-node fleet to straggle and would silently \
+                 ignore it; straggler plans apply to gossip algorithms \
+                 (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.compute_plan
+            );
+        }
         let model = NativeModel::new(d, h);
         let theta = init_theta(cfg.seed, 0, &model);
         Ok(Self::build(
@@ -438,6 +477,7 @@ impl<'a> SyncDriver<'a> {
             Box::new(CentralizedStrategy::new(model)),
             None,
             None,
+            ComputeSchedule::from_config(cfg)?,
             "centralized",
         ))
     }
@@ -451,6 +491,7 @@ impl<'a> SyncDriver<'a> {
         strategy: Box<dyn CommStrategy + 'a>,
         acct: Option<Accountant>,
         net: Option<NetworkSchedule>,
+        csched: ComputeSchedule,
         name: &str,
     ) -> Self {
         let st = EngineState::new(cfg, compute, shards, theta);
@@ -461,6 +502,10 @@ impl<'a> SyncDriver<'a> {
             st,
             acct,
             compute_s_per_step: cfg.compute_s_per_step,
+            taus: vec![0; if csched.is_uniform() { 0 } else { n }],
+            tau_ws: vec![0.0; if csched.is_uniform() { 0 } else { n }],
+            csched,
+            work_done: 0,
             net,
             wf: Vec::new(),
             wsp: SparseW::from_dense(0, &[]),
@@ -512,10 +557,13 @@ impl Driver for SyncDriver<'_> {
         Ok(())
     }
 
-    fn local_phase(&mut self, _round: usize, lrs: &[f32]) -> Result<()> {
+    fn local_phase(&mut self, round: usize, lrs: &[f32]) -> Result<()> {
         let st = &mut self.st;
-        let (m, d, local) = (st.m, st.d, lrs.len());
+        let (m, d, local, n, p) = (st.m, st.d, lrs.len(), st.n, st.p);
         let shards = &st.shards;
+        // Every row draws its full Q−1 batches regardless of the compute
+        // plan — stragglers use only their prefix, so the (seed, row)-keyed
+        // sampler streams stay plan-independent (§7).
         for (i, s) in st.samplers.iter_mut().enumerate() {
             s.batches(
                 &shards[i],
@@ -524,20 +572,50 @@ impl Driver for SyncDriver<'_> {
                 &mut st.ly[i * local * m..(i + 1) * local * m],
             );
         }
-        // double-buffered: the whole-network op writes the back slab, then
-        // the stacks swap — no allocation in the steady state
-        self.compute.local_steps_all_into(
+        if self.csched.is_uniform() {
+            // legacy path, byte for byte: the whole-network op writes the
+            // back slab, then the stacks swap — no allocation in the steady
+            // state
+            self.compute.local_steps_all_into(
+                &st.theta,
+                &st.lx,
+                &st.ly,
+                lrs,
+                &mut st.theta_back,
+                &mut st.local_losses,
+            )?;
+            std::mem::swap(&mut st.theta, &mut st.theta_back);
+            if let Some(acct) = self.acct.as_mut() {
+                acct.local_compute(local as u64, self.compute_s_per_step);
+            }
+            return Ok(());
+        }
+        // heterogeneous plan: per-node τ-truncated local steps, then the
+        // FedNova-style τ-weighted displacement rescale (stragglers.rs) so
+        // the gossip fixed point stays unbiased; the round's compute time is
+        // charged once in comm_phase (slowest participant).
+        self.csched.taus_into(round, &mut self.taus);
+        self.compute.local_steps_hetero_into(
             &st.theta,
             &st.lx,
             &st.ly,
             lrs,
+            &self.taus,
             &mut st.theta_back,
             &mut st.local_losses,
         )?;
-        std::mem::swap(&mut st.theta, &mut st.theta_back);
-        if let Some(acct) = self.acct.as_mut() {
-            acct.local_compute(local as u64, self.compute_s_per_step);
+        self.csched.tau_weights_into(&self.taus, &mut self.tau_ws);
+        for i in 0..n {
+            let w = self.tau_ws[i];
+            if w != 1.0 {
+                scale_displacement(
+                    &mut st.theta_back[i * p..(i + 1) * p],
+                    &st.theta[i * p..(i + 1) * p],
+                    w,
+                );
+            }
         }
+        std::mem::swap(&mut st.theta, &mut st.theta_back);
         Ok(())
     }
 
@@ -550,10 +628,32 @@ impl Driver for SyncDriver<'_> {
             round,
             lr,
         )?;
+        if !self.csched.is_uniform() {
+            // true per-node local work of this round (drives the
+            // `local_steps` metric; the uniform path keeps the engine's
+            // legacy round·Q accounting untouched).  The τ scratch was
+            // filled for this round by local_phase — non-uniform plans
+            // always have a local phase (Q ≥ 2 enforced) — so the sum needs
+            // no fresh schedule draws.
+            self.work_done += self.taus.iter().map(|&t| t as u64).sum::<u64>();
+        }
         if let Some(acct) = self.acct.as_mut() {
             match self.strategy.cost() {
                 CommCost::Gossip { kinds, kind_bytes } => {
-                    acct.local_compute(1, self.compute_s_per_step);
+                    if self.csched.is_uniform() {
+                        acct.local_compute(1, self.compute_s_per_step);
+                    } else {
+                        // synchronous gossip waits for the slowest
+                        // participant: charge the round's whole compute
+                        // phase (local steps + comm gradient) at the
+                        // straggler-aware maximum, reusing this round's τ
+                        // scratch
+                        acct.compute_seconds(self.csched.round_compute_s_from(
+                            round,
+                            &self.taus,
+                            self.compute_s_per_step,
+                        ));
+                    }
                     // per-kind encoded sizes — compressed runs charge the
                     // bytes that actually cross the wire, matching the
                     // channel netsim message for message
@@ -572,9 +672,17 @@ impl Driver for SyncDriver<'_> {
     fn observe(&mut self, round: u64, local_steps: u64) -> Result<()> {
         let eval = self.strategy.eval(&self.st, self.compute)?;
         let net = self.net_snapshot();
+        // Heterogeneous plans report the TRUE mean per-node work done
+        // (Σ_r Σ_i τ_i(r) / n) instead of the engine's uniform round·Q —
+        // Fig.-1-style x-axes stay correct when stragglers contribute less.
+        let steps = if self.csched.is_uniform() {
+            local_steps
+        } else {
+            self.work_done / self.csched.n() as u64
+        };
         self.log.push(round_metrics(
             round,
-            local_steps,
+            steps,
             eval,
             net,
             self.started.elapsed().as_secs_f64(),
@@ -758,6 +866,83 @@ mod tests {
                 (dense.rows.last().unwrap().bytes, comp.rows.last().unwrap().bytes);
             assert!(bc < bd / 3, "{algo:?}/{compress}: {bc} vs dense {bd}");
         }
+    }
+
+    #[test]
+    fn straggler_plans_train_end_to_end() {
+        for (plan, algo) in [
+            ("fixed-tiers", AlgoKind::FdDsgd),
+            ("lognormal", AlgoKind::FdDsgt),
+            ("dropout", AlgoKind::FdDsgt),
+        ] {
+            let (mut cfg, compute, ds, graph, w) = setup(algo);
+            cfg.compute_plan = plan.into();
+            cfg.compute_tiers = "1.0,0.5,0.25".into();
+            cfg.compute_sigma = 0.6;
+            cfg.slow_frac = 0.4;
+            cfg.total_steps = 80;
+            let (log, theta) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+            let first = log.rows.first().unwrap().loss;
+            let last = log.rows.last().unwrap().loss;
+            assert!(last.is_finite() && last < first, "{plan}: loss {first} -> {last}");
+            assert!(theta.iter().all(|v| v.is_finite()), "{plan}");
+            // straggler rounds did strictly less local work than uniform Q
+            let rows = &log.rows;
+            let uniform_steps = rows.last().unwrap().comm_rounds * cfg.q as u64;
+            assert!(
+                rows.last().unwrap().local_steps <= uniform_steps,
+                "{plan}: {} > uniform {uniform_steps}",
+                rows.last().unwrap().local_steps
+            );
+            if plan == "dropout" {
+                assert!(
+                    rows.last().unwrap().local_steps < uniform_steps,
+                    "{plan}: slow_frac=0.4 must shave off local work"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_single_tier_is_bitwise_uniform() {
+        // tiers = "1.0" routes through the heterogeneous code path (hetero
+        // kernel + τ-weights), but every τ = Q and every weight is exactly
+        // 1.0 — the trajectory must match the legacy uniform path bit for
+        // bit (sim_time is charged through a different arithmetic path and
+        // is exempt)
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt);
+        let (uni, theta_u) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let mut tiers = cfg.clone();
+        tiers.compute_plan = "fixed-tiers".into();
+        tiers.compute_tiers = "1.0".into();
+        let (tier, theta_t) = train_decentralized(&tiers, &compute, &ds, &graph, &w).unwrap();
+        assert_eq!(theta_u, theta_t, "θ stacks diverged");
+        assert_eq!(uni.rows.len(), tier.rows.len());
+        for (a, b) in uni.rows.iter().zip(&tier.rows) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(a.local_steps, b.local_steps);
+        }
+    }
+
+    #[test]
+    fn baselines_reject_compute_plans_loudly() {
+        let (mut cfg, compute, ds, ..) = setup(AlgoKind::FedAvg);
+        cfg.compute_plan = "dropout".into();
+        let err = train_fedavg(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("synchronous"), "{err}");
+        cfg.algo = AlgoKind::Centralized;
+        let err = train_centralized(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("fusion center"), "{err}");
+    }
+
+    #[test]
+    fn classic_q1_rejects_straggler_plans() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::Dsgd);
+        cfg.compute_plan = "dropout".into();
+        let err = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap_err();
+        assert!(err.to_string().contains("local phase"), "{err}");
     }
 
     #[test]

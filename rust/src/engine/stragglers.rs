@@ -1,0 +1,609 @@
+//! Heterogeneous compute & stragglers: the per-round, per-node local-work
+//! schedule τ_i(r).
+//!
+//! The paper's Algorithm 1 assumes every hospital performs exactly Q local
+//! eq.-4 updates between communication rounds — a synchronous, homogeneous
+//! fleet.  Real hospital networks are compute-heterogeneous: sites run on
+//! different hardware, share machines with clinical workloads, and get
+//! preempted.  DeceFL (Yuan et al.) and the communication-perspective survey
+//! (Le et al.) both flag stragglers and unequal local work as the dominant
+//! practical deviation from the synchronous model.  This module turns the
+//! local-step count from a global constant into a first-class scheduled
+//! quantity, exactly as `graph::schedule` did for the network: a
+//! [`ComputeSchedule`] yields a deterministic per-node gradient-step count
+//! τ_i(r) ∈ [1, Q] for every communication round, derived purely from
+//! `(seed, round, node)` so every driver — and every node thread of the
+//! actor driver — reconstructs the identical schedule independently (the
+//! §7 determinism contract).
+//!
+//! Plans:
+//!
+//! - [`ComputePlan::Uniform`] — today's behavior: τ_i = Q for everyone.
+//!   The drivers keep their legacy code paths byte for byte, so the default
+//!   is bitwise-identical to the pre-straggler engine.
+//! - [`ComputePlan::FixedTiers`] — a static speed tier per node (node `i`
+//!   gets `speeds[i % speeds.len()]` ∈ (0, 1]); a tier-`s` node completes
+//!   `clamp(round(Q·s), 2, Q)` gradient steps inside the round deadline.
+//!   Models a fleet with known hardware classes.
+//! - [`ComputePlan::Lognormal`] — each `(round, node)` draws a lognormal
+//!   speed `min(1, exp(σ·z))`, `z ~ N(0,1)`; τ_i = `clamp(⌊Q·speed⌋, 2, Q)`.
+//!   Models transient slowdowns (shared machines, preemption) with a heavy
+//!   straggler tail.
+//! - [`ComputePlan::Dropout`] — with probability `slow_frac` a node is
+//!   preempted for the round and contributes only one local step plus the
+//!   communication gradient (τ_i = 2); otherwise it runs the full Q.  The
+//!   classic straggler-dropout model.
+//!
+//! Non-uniform plans emit τ_i ∈ [2, Q], never 1: the τ-weighted rescale
+//! below normalizes the *local-phase displacement*, and a node with zero
+//! local steps has nothing to rescale — its missing contribution would
+//! permanently bias the consensus fixed point away from its shard (FedNova
+//! likewise requires every participant to take at least one normalizable
+//! step; validated numerically — with a τ=1 tier the fixed-point bias
+//! plateaus at `L̄·‖c̄−c_slow‖ / (L̄(N−1)+N)` instead of vanishing with α_r).
+//!
+//! **τ-weighted gossip (FedNova-style normalization).**  With unequal τ_i a
+//! plain eq.-2/3 round is biased toward fast nodes: the consensus fixed
+//! point drifts toward the minimizers of whoever took the most local steps.
+//! Following FedNova (Wang et al., 2020), each node's local-phase
+//! *displacement* is rescaled before gossip: node `i` with `L_i = τ_i − 1`
+//! local steps applies `θ_i ← θ_i^pre + (L̄/L_i)·(θ_i^post − θ_i^pre)`,
+//! where `L̄ = (1/N) Σ_j L_j` is the round's mean local work.  Every
+//! participating node then contributes the same *effective* number of local
+//! steps L̄, which removes the fast-node bias while preserving the total
+//! represented work.  Under the uniform plan every weight is exactly 1 and
+//! the rescale is skipped entirely — no float op is ever applied, keeping
+//! the default bitwise-identical.  The communication-step gradient (the one
+//! eq. 2/3 consumes) is never rescaled: every node always takes exactly one.
+//!
+//! **Latency model.**  A tier-`s` node spends `s_per_step / s` simulated
+//! seconds per gradient step, so its round compute time is `τ_i·s_step/s_i`.
+//! A synchronous gossip round completes when the slowest participant
+//! arrives, so the fused driver charges `max_i τ_i·s_step/speed_i` per round
+//! ([`ComputeSchedule::round_compute_s`]) — wall-clock-vs-accuracy curves
+//! are honest about what stragglers cost.  (Dropout preemption is modeled
+//! as the node being taken off the job, not as a slow CPU: the straggler's
+//! two steps run at nominal speed.)
+//!
+//! Sampler streams stay plan-independent: nodes draw the full Q−1 local
+//! batches every round and a straggler simply *uses* only its first
+//! `τ_i − 1` of them, mirroring how churn's offline nodes draw-and-discard
+//! their communication batch (§7).
+
+use crate::config::ExperimentConfig;
+use crate::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// RNG stream tag for per-(round, node) compute draws (disjoint from the
+/// graph/schedule/sampler/init/netsim streams, which all live below 2³²).
+const STREAM_COMPUTE: u64 = 0x7A_0C09_717E_0000;
+/// Odd multiplier decorrelating the round index inside the stream tag.
+const ROUND_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// How much local work each node performs per communication round.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ComputePlan {
+    /// Every node runs the full Q gradient steps every round (the paper's
+    /// synchronous model; the engine's legacy code path, bitwise-unchanged).
+    Uniform,
+    /// Static per-node speed tiers: node `i` runs at `speeds[i % len]`.
+    FixedTiers {
+        /// Relative speeds in (0, 1], one per tier.
+        speeds: Vec<f64>,
+    },
+    /// Per-(round, node) lognormal speed `min(1, exp(σ·z))`, `z ~ N(0,1)`.
+    Lognormal {
+        /// Lognormal σ of the per-round speed draw (> 0).
+        sigma: f64,
+    },
+    /// Each round each node is preempted with probability `slow_frac` and
+    /// contributes only one local step plus the communication gradient
+    /// (τ = 2 — see the module docs for why never 1).
+    Dropout {
+        /// Per-round preemption probability in [0, 1).
+        slow_frac: f64,
+    },
+}
+
+impl ComputePlan {
+    /// Short display label (experiment tables, logs).
+    pub fn label(&self) -> String {
+        match self {
+            ComputePlan::Uniform => "uniform".into(),
+            ComputePlan::FixedTiers { speeds } => {
+                let tiers: Vec<String> = speeds.iter().map(|s| format!("{s:.2}")).collect();
+                format!("tiers[{}]", tiers.join(","))
+            }
+            ComputePlan::Lognormal { sigma } => format!("lognormal σ={sigma:.2}"),
+            ComputePlan::Dropout { slow_frac } => format!("dropout {slow_frac:.2}"),
+        }
+    }
+}
+
+/// Parse the `compute.*` section of a config (shared by
+/// `ExperimentConfig::validate` and [`ComputeSchedule::from_config`]).
+pub fn plan_from_config(cfg: &ExperimentConfig) -> Result<ComputePlan> {
+    match cfg.compute_plan.as_str() {
+        "uniform" => Ok(ComputePlan::Uniform),
+        "fixed-tiers" | "tiers" => {
+            let speeds: Vec<f64> = cfg
+                .compute_tiers
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("compute.tiers: bad entry `{t}`"))
+                })
+                .collect::<Result<_>>()?;
+            if speeds.is_empty() {
+                bail!("compute.tiers must name at least one speed");
+            }
+            for &s in &speeds {
+                if s.is_nan() || s <= 0.0 || s > 1.0 {
+                    bail!("compute.tiers entries must be in (0, 1], got {s}");
+                }
+            }
+            Ok(ComputePlan::FixedTiers { speeds })
+        }
+        "lognormal" | "lognormal-speed" => {
+            if !cfg.compute_sigma.is_finite() || cfg.compute_sigma <= 0.0 {
+                bail!("compute.sigma must be > 0, got {}", cfg.compute_sigma);
+            }
+            Ok(ComputePlan::Lognormal { sigma: cfg.compute_sigma })
+        }
+        "dropout" | "dropout-straggler" => {
+            if !(0.0..1.0).contains(&cfg.slow_frac) {
+                bail!("compute.slow_frac must be in [0, 1), got {}", cfg.slow_frac);
+            }
+            Ok(ComputePlan::Dropout { slow_frac: cfg.slow_frac })
+        }
+        other => bail!(
+            "unknown compute plan `{other}` (uniform|fixed-tiers|lognormal|dropout)"
+        ),
+    }
+}
+
+/// Deterministic per-round local-work schedule over `n` nodes with local
+/// period `q`.  Pure function of `(seed, round, node)`: every caller — the
+/// sync driver, each actor node thread, the metrics observer, a test —
+/// derives the identical τ, speed, and τ-weight values.
+///
+/// # Examples
+///
+/// ```
+/// use decfl::engine::{ComputePlan, ComputeSchedule};
+///
+/// let sched = ComputeSchedule::new(
+///     ComputePlan::Dropout { slow_frac: 0.5 }, 8, 5, 7,
+/// ).unwrap();
+/// let tau = sched.tau(3, 2);                 // pure in (seed, round, node)
+/// assert!(tau == 2 || tau == 5);             // preempted or full Q
+/// assert_eq!(tau, sched.tau(3, 2));          // any caller re-derives it
+/// assert!(sched.local_work(3) >= 16);        // Σ_i τ_i: every node takes ≥ 2
+/// ```
+#[derive(Clone, Debug)]
+pub struct ComputeSchedule {
+    plan: ComputePlan,
+    n: usize,
+    q: usize,
+    seed: u64,
+}
+
+impl ComputeSchedule {
+    /// Schedule for `n` nodes at local period `q` under `plan`; `seed` keys
+    /// every per-round draw.  Non-uniform plans require `q >= 2`: with
+    /// `q = 1` there is no local phase to vary, and silently degenerating to
+    /// uniform would misreport the scenario.
+    pub fn new(plan: ComputePlan, n: usize, q: usize, seed: u64) -> Result<Self> {
+        if n == 0 {
+            bail!("compute schedule over zero nodes");
+        }
+        if q == 0 {
+            bail!("local period q must be >= 1");
+        }
+        if plan != ComputePlan::Uniform && q < 2 {
+            bail!(
+                "compute plan `{}` varies the local phase, but Q=1 (classic \
+                 dsgd/dsgt) has no local phase — every node would silently run \
+                 the identical single step; use an fd-* algorithm with Q >= 2",
+                plan.label()
+            );
+        }
+        Ok(ComputeSchedule { plan, n, q, seed })
+    }
+
+    /// Build from a config's `compute.*` section (n, effective Q, seed).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        let plan = plan_from_config(cfg)?;
+        ComputeSchedule::new(plan, cfg.n, cfg.algo.effective_q(cfg.q), cfg.seed)
+    }
+
+    /// Driver precondition, shared by the fused and actor paths: a
+    /// non-uniform plan cannot run on a backend whose local phase is a
+    /// fixed-length scan (`fixed_scan` = `Compute::local_steps_len()`, Some
+    /// for the AOT artifacts), and the schedule must cover exactly the
+    /// dataset's nodes.  One source of truth so the two drivers' error
+    /// behavior can never desync.
+    pub fn ensure_runnable(&self, n_hospitals: usize, fixed_scan: Option<usize>) -> Result<()> {
+        if !self.is_uniform() && fixed_scan.is_some() {
+            bail!(
+                "compute plan `{}` varies per-node local steps, but the AOT artifacts \
+                 are specialized to a fixed Q-step scan; straggler plans need \
+                 `--backend native`",
+                self.plan.label()
+            );
+        }
+        if self.n != n_hospitals {
+            bail!("compute schedule covers {} nodes, dataset has {n_hospitals}", self.n);
+        }
+        Ok(())
+    }
+
+    /// The configured plan.
+    pub fn plan(&self) -> &ComputePlan {
+        &self.plan
+    }
+
+    /// Node count the schedule covers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Local period Q the plan truncates against.
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Does every node run the full Q every round (the legacy fast path)?
+    pub fn is_uniform(&self) -> bool {
+        self.plan == ComputePlan::Uniform
+    }
+
+    /// Fresh RNG for node `i`'s draw of round `round` — one short-lived
+    /// stream per `(seed, round, node)`, like the schedule streams of
+    /// `graph::schedule`.
+    fn draw_rng(&self, round: usize, i: usize) -> Pcg64 {
+        let stream = STREAM_COMPUTE
+            ^ (round as u64).wrapping_mul(ROUND_MIX)
+            ^ ((i as u64) << 1);
+        Pcg64::new(self.seed, stream)
+    }
+
+    /// Node `i`'s relative speed in round `round`, in (0, 1].  Uniform and
+    /// dropout nodes run at nominal speed (dropout models preemption, not a
+    /// slow CPU); tiers are static per node; lognormal redraws per round.
+    pub fn speed(&self, round: usize, i: usize) -> f64 {
+        match &self.plan {
+            ComputePlan::Uniform | ComputePlan::Dropout { .. } => 1.0,
+            ComputePlan::FixedTiers { speeds } => speeds[i % speeds.len()],
+            ComputePlan::Lognormal { sigma } => {
+                let z = self.draw_rng(round, i).normal();
+                (sigma * z).exp().min(1.0)
+            }
+        }
+    }
+
+    /// Total gradient evaluations node `i` performs in round `round`
+    /// (1-based): `τ_i − 1` local eq.-4 steps plus the one communication
+    /// gradient every node always takes.  Uniform plans return Q;
+    /// non-uniform plans clamp to `[2, Q]` so every participant has at
+    /// least one local step for the τ-weighted rescale to normalize (see
+    /// the module docs — a τ=1 node would bias the fixed point).
+    pub fn tau(&self, round: usize, i: usize) -> usize {
+        match &self.plan {
+            ComputePlan::Uniform => self.q,
+            ComputePlan::FixedTiers { speeds } => {
+                let s = speeds[i % speeds.len()];
+                ((self.q as f64 * s).round() as usize).clamp(2, self.q)
+            }
+            ComputePlan::Lognormal { .. } => {
+                let s = self.speed(round, i);
+                ((self.q as f64 * s).floor() as usize).clamp(2, self.q)
+            }
+            ComputePlan::Dropout { slow_frac } => {
+                if self.draw_rng(round, i).bernoulli(*slow_frac) {
+                    2
+                } else {
+                    self.q
+                }
+            }
+        }
+    }
+
+    /// τ for every node of `round`, written into `out[n]`.
+    pub fn taus_into(&self, round: usize, out: &mut [usize]) {
+        assert_eq!(out.len(), self.n);
+        for (i, t) in out.iter_mut().enumerate() {
+            *t = self.tau(round, i);
+        }
+    }
+
+    /// Σ_i τ_i of `round` — the true summed local work the metrics report
+    /// (the legacy accounting assumed a uniform `n·Q` per round).
+    pub fn local_work(&self, round: usize) -> u64 {
+        (0..self.n).map(|i| self.tau(round, i) as u64).sum()
+    }
+
+    /// One node's weight from the round's exact local-step sum (`Σ_j L_j`
+    /// as an integer — no float-order dependence) and its own `L_i`.
+    fn weight_from(&self, total_l: u64, li: usize) -> f32 {
+        if li == 0 {
+            return 1.0;
+        }
+        let lbar = total_l as f64 / self.n as f64;
+        (lbar / li as f64) as f32
+    }
+
+    /// FedNova-style τ-weight of node `i` in `round`: `L̄ / L_i` over the
+    /// local-step counts `L_j = τ_j − 1`, computed with an exact integer sum
+    /// so every driver derives the identical f32.  Exactly 1.0 under the
+    /// uniform plan, for nodes with no local steps this round (nothing to
+    /// rescale), and whenever `L_i` happens to equal `L̄` — callers skip the
+    /// rescale on 1.0, so degenerate plans stay bitwise-clean.  (The actor
+    /// driver's per-node O(n) call; the fused driver batches the sum once
+    /// through [`Self::tau_weights_into`].)
+    pub fn tau_weight(&self, round: usize, i: usize) -> f32 {
+        if self.is_uniform() {
+            return 1.0;
+        }
+        let li = self.tau(round, i) - 1;
+        let total: u64 = (0..self.n).map(|j| (self.tau(round, j) - 1) as u64).sum();
+        self.weight_from(total, li)
+    }
+
+    /// Whole-network τ-weights from the round's already-derived `taus`
+    /// (what [`Self::taus_into`] filled): one O(n) integer sum instead of
+    /// the O(n²) per-node recomputation, bitwise-identical to calling
+    /// [`Self::tau_weight`] per node because τ is a pure function and the
+    /// sum is integer-exact.
+    pub fn tau_weights_into(&self, taus: &[usize], out: &mut [f32]) {
+        assert_eq!(taus.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        if self.is_uniform() {
+            for w in out.iter_mut() {
+                *w = 1.0;
+            }
+            return;
+        }
+        let total: u64 = taus.iter().map(|&t| (t - 1) as u64).sum();
+        for (w, &t) in out.iter_mut().zip(taus) {
+            *w = self.weight_from(total, t - 1);
+        }
+    }
+
+    /// Round `round`'s compute time on the simulated clock: the slowest
+    /// participant's `τ_i · s_per_step / speed_i`.  A synchronous gossip
+    /// round cannot complete before its slowest node finishes.
+    pub fn round_compute_s(&self, round: usize, s_per_step: f64) -> f64 {
+        (0..self.n)
+            .map(|i| self.tau(round, i) as f64 * s_per_step / self.speed(round, i))
+            .fold(0.0, f64::max)
+    }
+
+    /// [`Self::round_compute_s`] over the round's already-derived `taus`
+    /// (what [`Self::taus_into`] filled) — skips re-deriving τ per node on
+    /// the fused driver's hot path; identical result because τ is pure.
+    pub fn round_compute_s_from(&self, round: usize, taus: &[usize], s_per_step: f64) -> f64 {
+        assert_eq!(taus.len(), self.n);
+        taus.iter()
+            .enumerate()
+            .map(|(i, &t)| t as f64 * s_per_step / self.speed(round, i))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(plan: ComputePlan, n: usize, q: usize, seed: u64) -> ComputeSchedule {
+        ComputeSchedule::new(plan, n, q, seed).unwrap()
+    }
+
+    fn plans() -> Vec<ComputePlan> {
+        vec![
+            ComputePlan::Uniform,
+            ComputePlan::FixedTiers { speeds: vec![1.0, 0.5, 0.25] },
+            ComputePlan::Lognormal { sigma: 0.6 },
+            ComputePlan::Dropout { slow_frac: 0.4 },
+        ]
+    }
+
+    #[test]
+    fn taus_are_deterministic_and_in_range() {
+        for plan in plans() {
+            let a = sched(plan.clone(), 9, 8, 42);
+            let b = sched(plan.clone(), 9, 8, 42);
+            for round in 1..=12 {
+                for i in 0..9 {
+                    let t = a.tau(round, i);
+                    assert!((2..=8).contains(&t), "{} τ={t}", plan.label());
+                    assert_eq!(t, b.tau(round, i), "{}", plan.label());
+                    assert!(a.speed(round, i) > 0.0 && a.speed(round, i) <= 1.0);
+                }
+                assert_eq!(a.local_work(round), b.local_work(round));
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_is_full_q_with_unit_weights() {
+        let s = sched(ComputePlan::Uniform, 5, 7, 3);
+        assert!(s.is_uniform());
+        for round in 1..=5 {
+            for i in 0..5 {
+                assert_eq!(s.tau(round, i), 7);
+                assert_eq!(s.tau_weight(round, i), 1.0);
+            }
+            assert_eq!(s.local_work(round), 35);
+            assert!((s.round_compute_s(round, 1e-3) - 7e-3).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn fixed_tiers_map_nodes_round_robin_and_are_static() {
+        let s = sched(ComputePlan::FixedTiers { speeds: vec![1.0, 0.5] }, 4, 10, 1);
+        for round in 1..=6 {
+            assert_eq!(s.tau(round, 0), 10);
+            assert_eq!(s.tau(round, 1), 5);
+            assert_eq!(s.tau(round, 2), 10);
+            assert_eq!(s.tau(round, 3), 5);
+        }
+        // slow tier pays the same wall time per round: 5 steps at half speed
+        let c = s.round_compute_s(1, 1e-3);
+        assert!((c - 10e-3).abs() < 1e-15, "{c}");
+    }
+
+    #[test]
+    fn dropout_preempts_some_rounds_but_never_below_two_steps() {
+        // τ = 2, never 1: a preempted node still has one local step for the
+        // τ-weighted rescale to normalize (module docs)
+        let s = sched(ComputePlan::Dropout { slow_frac: 0.5 }, 6, 8, 11);
+        let (mut slow, mut fulls) = (0, 0);
+        for round in 1..=20 {
+            for i in 0..6 {
+                match s.tau(round, i) {
+                    2 => slow += 1,
+                    8 => fulls += 1,
+                    t => panic!("dropout τ must be 2 or Q, got {t}"),
+                }
+            }
+        }
+        assert!(slow > 20 && fulls > 20, "slow={slow} fulls={fulls}");
+    }
+
+    #[test]
+    fn lognormal_produces_a_straggler_tail() {
+        let s = sched(ComputePlan::Lognormal { sigma: 0.8 }, 10, 20, 5);
+        let mut below_full = 0;
+        for round in 1..=10 {
+            for i in 0..10 {
+                if s.tau(round, i) < 20 {
+                    below_full += 1;
+                }
+            }
+        }
+        assert!(below_full > 20, "σ=0.8 produced almost no stragglers: {below_full}");
+    }
+
+    #[test]
+    fn tau_weights_preserve_total_represented_work() {
+        // Σ_i w_i·L_i == n·L̄ == Σ_i L_i for every non-degenerate plan/round
+        for plan in plans().into_iter().skip(1) {
+            let s = sched(plan.clone(), 8, 12, 9);
+            for round in 1..=6 {
+                let total: f64 = (0..8).map(|i| (s.tau(round, i) - 1) as f64).sum();
+                let weighted: f64 = (0..8)
+                    .map(|i| s.tau_weight(round, i) as f64 * (s.tau(round, i) - 1) as f64)
+                    .sum();
+                assert!(
+                    (weighted - total).abs() < 1e-3 * total.max(1.0),
+                    "{} round {round}: {weighted} vs {total}",
+                    plan.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_weights_match_per_node_weights_bitwise() {
+        // the fused driver's O(n) batched path and the actor driver's
+        // per-node path must derive the identical f32 weights
+        for plan in plans() {
+            let s = sched(plan.clone(), 7, 9, 21);
+            let mut taus = vec![0usize; 7];
+            let mut ws = vec![0.0f32; 7];
+            for round in 1..=6 {
+                s.taus_into(round, &mut taus);
+                s.tau_weights_into(&taus, &mut ws);
+                for i in 0..7 {
+                    assert_eq!(
+                        ws[i].to_bits(),
+                        s.tau_weight(round, i).to_bits(),
+                        "{} round {round} node {i}",
+                        plan.label()
+                    );
+                }
+                // the scratch-reusing latency path is identical too
+                assert_eq!(
+                    s.round_compute_s_from(round, &taus, 1e-3).to_bits(),
+                    s.round_compute_s(round, 1e-3).to_bits(),
+                    "{} round {round}",
+                    plan.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_runnable_gates_fixed_scan_backends_and_node_counts() {
+        let s = sched(ComputePlan::Dropout { slow_frac: 0.3 }, 5, 8, 1);
+        assert!(s.ensure_runnable(5, None).is_ok());
+        let err = s.ensure_runnable(5, Some(7)).unwrap_err();
+        assert!(err.to_string().contains("--backend native"), "{err}");
+        let err = s.ensure_runnable(6, None).unwrap_err();
+        assert!(err.to_string().contains("6"), "{err}");
+        // uniform plans run on fixed-scan backends unchanged
+        let u = sched(ComputePlan::Uniform, 5, 8, 1);
+        assert!(u.ensure_runnable(5, Some(7)).is_ok());
+    }
+
+    #[test]
+    fn round_compute_is_the_slowest_participant() {
+        let s = sched(ComputePlan::FixedTiers { speeds: vec![1.0, 0.25] }, 2, 8, 2);
+        // node 1: τ=2 steps at speed 0.25 → 8·s; node 0: τ=8 at 1.0 → 8·s
+        let c = s.round_compute_s(1, 1e-3);
+        let expect = (0..2)
+            .map(|i| s.tau(1, i) as f64 * 1e-3 / s.speed(1, i))
+            .fold(0.0, f64::max);
+        assert_eq!(c, expect);
+        // dropout: preempted nodes cost two nominal steps; survivors full Q
+        let d = sched(ComputePlan::Dropout { slow_frac: 0.3 }, 6, 8, 2);
+        for round in 1..=8 {
+            let c = d.round_compute_s(round, 1e-3);
+            let any_full = (0..6).any(|i| d.tau(round, i) == 8);
+            if any_full {
+                assert!((c - 8e-3).abs() < 1e-15, "round {round}: {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_parsing_from_config() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(plan_from_config(&cfg).unwrap(), ComputePlan::Uniform);
+        cfg.compute_plan = "fixed-tiers".into();
+        cfg.compute_tiers = "1.0, 0.5,0.25".into();
+        assert_eq!(
+            plan_from_config(&cfg).unwrap(),
+            ComputePlan::FixedTiers { speeds: vec![1.0, 0.5, 0.25] }
+        );
+        cfg.compute_plan = "lognormal".into();
+        cfg.compute_sigma = 0.7;
+        assert_eq!(plan_from_config(&cfg).unwrap(), ComputePlan::Lognormal { sigma: 0.7 });
+        cfg.compute_plan = "dropout".into();
+        cfg.slow_frac = 0.3;
+        assert_eq!(plan_from_config(&cfg).unwrap(), ComputePlan::Dropout { slow_frac: 0.3 });
+        cfg.compute_plan = "bogus".into();
+        assert!(plan_from_config(&cfg).is_err());
+        cfg.compute_plan = "dropout".into();
+        cfg.slow_frac = 1.0;
+        assert!(plan_from_config(&cfg).is_err());
+        cfg.compute_plan = "fixed-tiers".into();
+        cfg.compute_tiers = "0.5,1.5".into();
+        assert!(plan_from_config(&cfg).is_err());
+        cfg.compute_tiers = "".into();
+        assert!(plan_from_config(&cfg).is_err());
+        cfg.compute_plan = "lognormal".into();
+        cfg.compute_sigma = 0.0;
+        assert!(plan_from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn non_uniform_plans_reject_classic_q1() {
+        let err =
+            ComputeSchedule::new(ComputePlan::Dropout { slow_frac: 0.2 }, 4, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("local phase"), "{err}");
+        assert!(ComputeSchedule::new(ComputePlan::Uniform, 4, 1, 0).is_ok());
+    }
+}

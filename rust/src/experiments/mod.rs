@@ -8,4 +8,5 @@ pub mod compress;
 pub mod fig1;
 pub mod fig2;
 pub mod speedup;
+pub mod stragglers;
 pub mod sweeps;

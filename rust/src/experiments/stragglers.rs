@@ -1,0 +1,215 @@
+//! EXP-S1: heterogeneous compute / stragglers — the accuracy-vs-sim-time
+//! frontier across straggler plans × topologies.
+//!
+//! Every run on one topology shares the same dataset, base graph, mixing
+//! matrix, seed, and round schedule; only `compute.plan` varies, so each
+//! block isolates what compute heterogeneity costs (or doesn't): final
+//! loss/accuracy, the true local work performed, and the straggler-aware
+//! simulated wall time (every round as slow as its slowest participant —
+//! `engine::stragglers`).  The interesting read is the *frontier*: dropout
+//! stragglers shave local work but a synchronous round still waits out its
+//! deadline, so accuracy-per-sim-second degrades — exactly the deviation
+//! DeceFL and the communication-perspective survey flag.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{assemble, run_on, Assembled};
+use crate::jsonl::{self, Json};
+use anyhow::{bail, Result};
+
+/// One (plan, topology) cell of the EXP-S1 frontier.
+#[derive(Clone, Debug)]
+pub struct StragglerRow {
+    /// Compute-plan label (`uniform`, `tiers[…]`, `lognormal σ=…`, …).
+    pub plan: String,
+    /// Base topology the block ran on.
+    pub topology: String,
+    /// Final record-weighted training loss.
+    pub final_loss: f64,
+    /// Final record-weighted training accuracy.
+    pub final_accuracy: f64,
+    /// Final consensus error.
+    pub final_consensus: f64,
+    /// Communication rounds run.
+    pub comm_rounds: u64,
+    /// True mean per-node local work performed (Σ_r Σ_i τ_i / N).
+    pub local_steps: u64,
+    /// Total bytes on the wire.
+    pub bytes: u64,
+    /// Straggler-aware simulated wall time, seconds.
+    pub sim_time_s: f64,
+}
+
+fn run_one(cfg: &ExperimentConfig, asm: &Assembled, topo: &str) -> Result<StragglerRow> {
+    cfg.validate()?;
+    let label = crate::engine::stragglers::plan_from_config(cfg)?.label();
+    let log = run_on(cfg, asm)?;
+    let last = log.rows.last().expect("run produced no metric rows");
+    Ok(StragglerRow {
+        plan: label,
+        topology: topo.to_string(),
+        final_loss: last.loss,
+        final_accuracy: last.accuracy,
+        final_consensus: last.consensus,
+        comm_rounds: last.comm_rounds,
+        local_steps: last.local_steps,
+        bytes: last.bytes,
+        sim_time_s: last.sim_time_s,
+    })
+}
+
+/// Sweep straggler plans × topologies against the uniform baseline.  The
+/// tier speeds, lognormal σ, and dropout fraction come from the config's
+/// `compute.*` knobs; each topology gets its own assembled base network and
+/// always leads with its uniform row.
+pub fn run(cfg: &ExperimentConfig, plans: &[String], topos: &[String]) -> Result<Vec<StragglerRow>> {
+    if plans.iter().any(|p| p == "uniform") {
+        bail!("the uniform baseline row is always included; list only straggler plans");
+    }
+    let mut rows = Vec::new();
+    for topo in topos {
+        let mut base = cfg.clone();
+        base.topology = topo.clone();
+        base.compute_plan = "uniform".into();
+        base.validate()?;
+        let asm = assemble(&base)?;
+        rows.push(run_one(&base, &asm, topo)?);
+        for plan in plans {
+            let mut c = base.clone();
+            c.compute_plan = plan.clone();
+            rows.push(run_one(&c, &asm, topo)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Print the frontier table.
+pub fn print_table(rows: &[StragglerRow]) {
+    println!("EXP-S1 — straggler plans × topologies (accuracy / sim-time frontier)");
+    println!(
+        "{:<22} {:<10} {:>10} {:>8} {:>12} {:>12} {:>10} {:>12}",
+        "plan", "topology", "final_loss", "acc", "local_steps", "comm_rounds", "MBytes", "sim_time_s"
+    );
+    for r in rows {
+        println!(
+            "{:<22} {:<10} {:>10.4} {:>8.3} {:>12} {:>12} {:>10.2} {:>12.2}",
+            r.plan,
+            r.topology,
+            r.final_loss,
+            r.final_accuracy,
+            r.local_steps,
+            r.comm_rounds,
+            r.bytes as f64 / 1e6,
+            r.sim_time_s
+        );
+    }
+}
+
+/// Human-readable observations relative to each topology's uniform row.
+pub fn findings(rows: &[StragglerRow]) -> Vec<String> {
+    let mut out = Vec::new();
+    for r in rows.iter().filter(|r| r.plan != "uniform") {
+        let Some(uni) = rows
+            .iter()
+            .find(|u| u.plan == "uniform" && u.topology == r.topology)
+        else {
+            continue;
+        };
+        let acc_pts = 100.0 * (r.final_accuracy - uni.final_accuracy);
+        let work_pct = if uni.local_steps > 0 {
+            100.0 * (r.local_steps as f64 - uni.local_steps as f64) / uni.local_steps as f64
+        } else {
+            0.0
+        };
+        let time_pct = if uni.sim_time_s > 0.0 {
+            100.0 * (r.sim_time_s - uni.sim_time_s) / uni.sim_time_s
+        } else {
+            0.0
+        };
+        out.push(format!(
+            "{} on {}: accuracy {acc_pts:+.1} pts vs uniform, local work {work_pct:+.1}%, \
+             sim time {time_pct:+.1}%",
+            r.plan, r.topology
+        ));
+    }
+    out
+}
+
+/// JSON dump of the sweep.
+pub fn rows_json(rows: &[StragglerRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                jsonl::obj(vec![
+                    ("plan", jsonl::s(&r.plan)),
+                    ("topology", jsonl::s(&r.topology)),
+                    ("final_loss", jsonl::num(r.final_loss)),
+                    ("final_accuracy", jsonl::num(r.final_accuracy)),
+                    ("final_consensus", jsonl::num(r.final_consensus)),
+                    ("comm_rounds", jsonl::num(r.comm_rounds as f64)),
+                    ("local_steps", jsonl::num(r.local_steps as f64)),
+                    ("bytes", jsonl::num(r.bytes as f64)),
+                    ("sim_time_s", jsonl::num(r.sim_time_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Backend, Mode};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.mode = Mode::Fused;
+        cfg.algo = AlgoKind::FdDsgt;
+        cfg.n = 5;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 4;
+        cfg.total_steps = 32;
+        cfg.eval_every = 2;
+        cfg.records_per_hospital = 60;
+        cfg.compute_tiers = "1.0,0.5".into();
+        cfg.slow_frac = 0.4;
+        cfg.compute_sigma = 0.6;
+        cfg
+    }
+
+    #[test]
+    fn sweep_covers_plans_with_uniform_baseline_per_topology() {
+        let plans = vec!["fixed-tiers".to_string(), "dropout".to_string()];
+        let topos = vec!["ring".to_string(), "er".to_string()];
+        let rows = run(&tiny_cfg(), &plans, &topos).unwrap();
+        assert_eq!(rows.len(), 6);
+        for topo in ["ring", "er"] {
+            let block: Vec<_> = rows.iter().filter(|r| r.topology == topo).collect();
+            assert_eq!(block.len(), 3, "{topo}");
+            assert_eq!(block[0].plan, "uniform", "{topo} leads with uniform");
+            for r in &block {
+                assert!(r.final_loss.is_finite(), "{}/{}", r.plan, topo);
+                assert!(r.bytes > 0);
+                assert_eq!(r.comm_rounds, 8);
+            }
+            // straggler plans do less (or equal) local work than uniform
+            for r in &block[1..] {
+                assert!(
+                    r.local_steps <= block[0].local_steps,
+                    "{}: {} > uniform {}",
+                    r.plan,
+                    r.local_steps,
+                    block[0].local_steps
+                );
+            }
+        }
+        assert_eq!(findings(&rows).len(), 4);
+    }
+
+    #[test]
+    fn uniform_in_plan_list_is_rejected() {
+        let err = run(&tiny_cfg(), &["uniform".to_string()], &["ring".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("baseline"), "{err}");
+    }
+}

@@ -6,7 +6,7 @@
 use anyhow::{bail, Result};
 use decfl::cli::{apply_common_overrides, Args};
 use decfl::config::{AlgoKind, ExperimentConfig};
-use decfl::experiments::{churn, compress, fig1, fig2, speedup, sweeps};
+use decfl::experiments::{churn, compress, fig1, fig2, speedup, stragglers, sweeps};
 
 const HELP: &str = "\
 decfl — fully decentralized federated learning for electronic health records
@@ -29,6 +29,10 @@ SUBCOMMANDS
   compress    EXP-C1: accuracy-vs-bytes frontier — gossip compressors
               (q8 / q4 / top-k, difference-form update) × topologies
               (--compressors, --fracs, --topos)
+  stragglers  EXP-S1: heterogeneous compute — straggler plans (fixed-tiers /
+              lognormal / dropout, τ-weighted gossip) × topologies vs the
+              uniform baseline (--plans, --topos, --tiers, --slow-frac,
+              --sigma)
   export-data write the synthetic cohort as per-hospital CSVs
   info        print artifact manifest + config summary
   help        this text
@@ -51,6 +55,14 @@ COMMON OPTIONS (train + experiments)
   --churn <p>             per-node offline prob per round (default 0.1)
   --drop-prob <p>         frame-loss prob on every link (actors mode only;
                           lost frames are retransmitted)
+  --compute-plan <p>      uniform|fixed-tiers|lognormal|dropout — per-node
+                          local work per round (default uniform; gossip
+                          algorithms + native backend only; non-uniform
+                          plans use τ-weighted FedNova-style gossip)
+  --tiers <list>          tier speeds in (0,1] for fixed-tiers
+                          (default 1.0,0.5; node i runs at tiers[i mod len])
+  --slow-frac <p>         per-round preemption prob for dropout (default .25)
+  --sigma <s>             lognormal σ of the per-round speed (default 0.5)
   --compress <c>          gossip payload compressor: none|identity|q8|q4|topk
                           (default none; gossip algorithms only; the update
                           uses the mean-preserving difference form)
@@ -69,6 +81,8 @@ EXAMPLES
   decfl train --algo fd-dsgt --steps 10000 --q 100
   decfl train --backend native --net-plan churn --churn 0.2 --steps 2000
   decfl train --backend native --compress q8 --steps 2000
+  decfl train --backend native --compute-plan dropout --slow-frac 0.3 --steps 2000
+  decfl stragglers --backend native --steps 2000 --q 50 --topos ring,er
   decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
   decfl churn --backend native --steps 2000 --q 50 --drops 0.2,0.4
   decfl compress --backend native --steps 2000 --q 50 --fracs 0.1,0.05
@@ -271,6 +285,48 @@ fn real_main() -> Result<()> {
             }
             dump(&cfg.out, &compress::rows_json(&rows))?;
         }
+        "stragglers" => {
+            let plans = args
+                .get_str("plans")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| {
+                    vec!["fixed-tiers".into(), "lognormal".into(), "dropout".into()]
+                });
+            let topos = args
+                .get_str("topos")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| vec![cfg.topology.clone()]);
+            args.finish()?;
+            if matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+                bail!(
+                    "`decfl stragglers` sweeps gossip compute plans, but `{}` runs the \
+                     paper's synchronous baseline; pick dsgd|dsgt|fd-dsgd|fd-dsgt",
+                    cfg.algo.name()
+                );
+            }
+            // the sweep owns the plan axis — this would be silently overwritten
+            if args.provided("compute-plan") {
+                bail!(
+                    "--compute-plan was passed, but `decfl stragglers` sweeps the plan \
+                     axis itself and would silently ignore it; shape the sweep with \
+                     --plans / --tiers / --slow-frac / --sigma instead"
+                );
+            }
+            if cfg.compute_plan != "uniform" {
+                bail!(
+                    "the config sets compute.plan = `{}`, but `decfl stragglers` sweeps \
+                     the plan axis itself and would silently ignore it; shape the sweep \
+                     with --plans / --tiers / --slow-frac / --sigma instead",
+                    cfg.compute_plan
+                );
+            }
+            let rows = stragglers::run(&cfg, &plans, &topos)?;
+            stragglers::print_table(&rows);
+            for f in stragglers::findings(&rows) {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &stragglers::rows_json(&rows))?;
+        }
         "export-data" => {
             reject_plan_flags(&args, &cfg, "export-data")?;
             let dir = args.get_str("dir").unwrap_or("out/cohort").to_string();
@@ -344,6 +400,24 @@ fn reject_plan_flags(args: &Args, cfg: &ExperimentConfig, sub: &str) -> Result<(
             cfg.compress
         );
     }
+    for key in ["compute-plan", "tiers", "slow-frac", "sigma"] {
+        if args.provided(key) {
+            bail!(
+                "--{key} was passed, but `decfl {sub}` builds its own per-run configs \
+                 and would silently run every node at uniform Q; straggler plans apply \
+                 to `decfl train`, `decfl churn`, `decfl compress`, and `decfl stragglers`"
+            );
+        }
+    }
+    if cfg.compute_plan != "uniform" {
+        bail!(
+            "the config sets compute.plan = `{}`, but `decfl {sub}` builds its own \
+             per-run configs and would silently run every node at uniform Q; straggler \
+             plans apply to `decfl train`, `decfl churn`, `decfl compress`, and \
+             `decfl stragglers`",
+            cfg.compute_plan
+        );
+    }
     Ok(())
 }
 
@@ -369,6 +443,10 @@ fn reject_ignored_network_flags(args: &Args, cfg: &ExperimentConfig) -> Result<(
         "compress",
         "topk-frac",
         "error-feedback",
+        "compute-plan",
+        "tiers",
+        "slow-frac",
+        "sigma",
     ] {
         if args.provided(key) {
             bail!(

@@ -16,11 +16,16 @@ use anyhow::Result;
 pub struct RoundMetrics {
     /// Communication rounds completed so far (Fig. 2 x-axis).
     pub comm_rounds: u64,
-    /// Local SGD iterations completed so far (total across the schedule).
+    /// Local SGD iterations completed so far, per node: `round · Q` under
+    /// the uniform compute plan; under a straggler plan
+    /// (`engine::stragglers`) the TRUE mean work `Σ_r Σ_i τ_i(r) / N`, so
+    /// Fig.-1-style x-axes stay honest when stragglers contribute less.
     pub local_steps: u64,
-    /// Mean training loss over nodes.
+    /// Record-weighted training loss over the pooled records (each node's
+    /// mean loss weighted by its shard size — same population as
+    /// [`RoundMetrics::accuracy`]).
     pub loss: f64,
-    /// Mean training accuracy over nodes.
+    /// Record-weighted training accuracy (correct / total records).
     pub accuracy: f64,
     /// `|| (1/N) Σ_i ∇f_i(θ_i) ||²` on full shards.
     pub stationarity: f64,

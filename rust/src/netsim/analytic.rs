@@ -39,6 +39,14 @@ impl Accountant {
         self.snap.sim_time_s += steps as f64 * secs_per_step;
     }
 
+    /// Charge raw compute seconds — the straggler path: a heterogeneous
+    /// round costs the slowest participant's `τ_i · s_step / speed_i`
+    /// (`engine::stragglers::ComputeSchedule::round_compute_s`), not a
+    /// uniform per-step count.
+    pub fn compute_seconds(&mut self, secs: f64) {
+        self.snap.sim_time_s += secs;
+    }
+
     /// Charge one synchronous gossip round: for each payload kind,
     /// `directed_edges` messages (both directions of every active edge this
     /// round) at that kind's *encoded* wire size — `kind_bytes` holds one

@@ -23,11 +23,21 @@ fn help_lists_subcommands() {
     {
         assert!(text.contains(sub), "help missing `{sub}`");
     }
-    for flag in
-        ["--net-plan", "--rewire-every", "--edge-drop", "--churn", "--compress", "--topk-frac"]
-    {
+    for flag in [
+        "--net-plan",
+        "--rewire-every",
+        "--edge-drop",
+        "--churn",
+        "--compress",
+        "--topk-frac",
+        "--compute-plan",
+        "--tiers",
+        "--slow-frac",
+        "--sigma",
+    ] {
         assert!(text.contains(flag), "help missing `{flag}`");
     }
+    assert!(text.contains("stragglers"), "help missing `stragglers`");
 }
 
 #[test]
@@ -152,6 +162,73 @@ fn baselines_reject_network_flags_loudly() {
     assert!(!out.status.success(), "centralized --net-plan must fail");
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("--net-plan"), "{err}");
+}
+
+#[test]
+fn straggler_train_runs_natively() {
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fd-dsgd", "--steps", "40",
+        "--q", "10", "--eval-every", "2", "--compute-plan", "dropout", "--slow-frac", "0.3",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).starts_with("comm_rounds,"));
+}
+
+#[test]
+fn stragglers_subcommand_sweeps_the_frontier() {
+    let out = decfl(&[
+        "stragglers", "--backend", "native", "--steps", "40", "--q", "10",
+        "--eval-every", "2", "--plans", "fixed-tiers,dropout", "--tiers", "1.0,0.5",
+        "--slow-frac", "0.4",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for label in ["uniform", "tiers[1.00,0.50]", "dropout 0.40", "sim_time_s"] {
+        assert!(text.contains(label), "frontier table missing `{label}`:\n{text}");
+    }
+    assert!(text.contains("finding:"), "{text}");
+}
+
+#[test]
+fn stragglers_subcommand_rejects_plan_axis_flags() {
+    let out = decfl(&[
+        "stragglers", "--backend", "native", "--steps", "20", "--compute-plan", "dropout",
+    ]);
+    assert!(!out.status.success(), "stragglers --compute-plan must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--plans"), "{err}");
+
+    let out = decfl(&["stragglers", "--backend", "native", "--steps", "20", "--algo", "fedavg"]);
+    assert!(!out.status.success(), "stragglers --algo fedavg must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("gossip"), "no gossip hint");
+}
+
+#[test]
+fn sweeps_and_baselines_reject_compute_plan_flags() {
+    // sweeps build their own configs: straggler flags would be ignored
+    let out = decfl(&["qsweep", "--steps", "20", "--compute-plan", "dropout"]);
+    assert!(!out.status.success(), "qsweep --compute-plan must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--compute-plan"), "{err}");
+    assert!(err.contains("uniform Q"), "{err}");
+    // FedAvg runs the synchronous baseline: no fleet to straggle
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fedavg", "--steps", "20",
+        "--compute-plan", "dropout",
+    ]);
+    assert!(!out.status.success(), "fedavg --compute-plan must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--compute-plan"));
+    // the same plan arriving through --config TOML is caught too
+    let toml = std::env::temp_dir().join(format!("decfl_cplan_{}.toml", std::process::id()));
+    std::fs::write(&toml, "[compute]\nplan = \"dropout\"\n").unwrap();
+    let out = decfl(&["baselines", "--steps", "20", "--config", toml.to_str().unwrap()]);
+    assert!(!out.status.success(), "baselines with TOML compute.plan must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("compute.plan"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_file(&toml).ok();
 }
 
 #[test]

@@ -196,6 +196,105 @@ fn compressed_gossip_under_churn_drivers_bitwise_identical() {
 }
 
 #[test]
+fn straggler_plans_fused_and_actor_drivers_bitwise_identical() {
+    // every straggler ComputePlan through both drivers, DSGD and DSGT
+    // flavors: per-node τ-truncated local phases and the FedNova-style
+    // τ-weighted rescale must agree bit for bit, and stragglers never
+    // change gossip participation, so bytes/messages match exactly too
+    for (plan, algo) in [
+        ("fixed-tiers", AlgoKind::FdDsgd),
+        ("fixed-tiers", AlgoKind::FdDsgt),
+        ("lognormal", AlgoKind::FdDsgd),
+        ("lognormal", AlgoKind::FdDsgt),
+        ("dropout", AlgoKind::FdDsgd),
+        ("dropout", AlgoKind::FdDsgt),
+    ] {
+        let mut cfg = native_cfg(algo, 4, 32);
+        cfg.compute_plan = plan.into();
+        cfg.compute_tiers = "1.0,0.5,0.25".into();
+        cfg.compute_sigma = 0.7;
+        cfg.slow_frac = 0.4;
+        let asm = assemble(&cfg).unwrap();
+
+        cfg.mode = Mode::Fused;
+        let fused = run_on(&cfg, &asm).unwrap();
+        cfg.mode = Mode::Actors;
+        let actors = run_on(&cfg, &asm).unwrap();
+
+        assert_eq!(fused.rows.len(), actors.rows.len(), "{plan}/{algo:?}: row count");
+        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
+            assert_eq!(rf.comm_rounds, ra.comm_rounds, "{plan}/{algo:?}");
+            assert_eq!(
+                rf.loss.to_bits(),
+                ra.loss.to_bits(),
+                "{plan}/{algo:?} round {}: fused loss {} vs actor loss {}",
+                rf.comm_rounds,
+                rf.loss,
+                ra.loss
+            );
+            assert_eq!(rf.accuracy.to_bits(), ra.accuracy.to_bits(), "{plan}/{algo:?}");
+            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{plan}/{algo:?}");
+            assert_eq!(rf.stationarity.to_bits(), ra.stationarity.to_bits(), "{plan}/{algo:?}");
+            // both drivers report the same schedule-derived true local work
+            assert_eq!(rf.local_steps, ra.local_steps, "{plan}/{algo:?}: work accounting");
+        }
+        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
+        assert_eq!(ff.bytes, fa.bytes, "{plan}/{algo:?}: byte accounting");
+        assert_eq!(ff.messages, fa.messages, "{plan}/{algo:?}: message accounting");
+    }
+}
+
+#[test]
+fn straggler_plan_composed_with_churn_and_compression_bitwise_identical() {
+    // the three scenario axes compose: a dropout compute plan under node
+    // churn with q8-compressed gossip — both drivers must still agree bit
+    // for bit (offline nodes skip comm, stragglers truncate local work,
+    // and the compression streams stay (seed, round, node, kind)-keyed)
+    for algo in [AlgoKind::FdDsgd, AlgoKind::FdDsgt] {
+        let mut cfg = native_cfg(algo, 3, 24);
+        cfg.compute_plan = "dropout".into();
+        cfg.slow_frac = 0.3;
+        cfg.net_plan = "churn".into();
+        cfg.churn = 0.3;
+        cfg.compress = "q8".into();
+        let asm = assemble(&cfg).unwrap();
+        cfg.mode = Mode::Fused;
+        let fused = run_on(&cfg, &asm).unwrap();
+        cfg.mode = Mode::Actors;
+        let actors = run_on(&cfg, &asm).unwrap();
+        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
+            assert_eq!(rf.loss.to_bits(), ra.loss.to_bits(), "{algo:?} round {}", rf.comm_rounds);
+            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{algo:?}");
+        }
+        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
+        assert_eq!(ff.bytes, fa.bytes, "{algo:?}: dropout+churn+q8 byte accounting");
+    }
+}
+
+#[test]
+fn uniform_compute_plan_is_the_legacy_path_bitwise() {
+    // zero behavior change by default: an explicit `uniform` plan and the
+    // untouched default config produce identical logs through both drivers
+    for mode in [Mode::Fused, Mode::Actors] {
+        let mut cfg = native_cfg(AlgoKind::FdDsgt, 4, 24);
+        cfg.mode = mode;
+        assert_eq!(cfg.compute_plan, "uniform", "default plan is uniform");
+        let asm = assemble(&cfg).unwrap();
+        let default_log = run_on(&cfg, &asm).unwrap();
+        let mut explicit = cfg.clone();
+        explicit.compute_plan = "uniform".into();
+        let explicit_log = run_on(&explicit, &asm).unwrap();
+        assert_eq!(default_log.rows.len(), explicit_log.rows.len());
+        for (a, b) in default_log.rows.iter().zip(&explicit_log.rows) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{mode:?}");
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "{mode:?}");
+            assert_eq!(a.local_steps, b.local_steps, "{mode:?}");
+            assert_eq!(a.bytes, b.bytes, "{mode:?}");
+        }
+    }
+}
+
+#[test]
 fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
     // Hand-rolled replica of the pre-schedule trainer: W captured once as
     // f32, the same round structure inlined, no NetworkSchedule anywhere.

@@ -137,3 +137,42 @@ fn eval_and_predict_agree() {
     let probs_n = native.predict(&theta[..p], &ds.test.x[..s.shard.min(ds.test.n) * s.d]).unwrap();
     common::assert_close(&probs_p, &probs_n, 1e-4, "predict");
 }
+
+#[test]
+fn eval_agrees_on_uneven_shards() {
+    // The masked eval_full pin: shards SMALLER than the artifact's
+    // specialized row count are cycle-padded on the host but masked in the
+    // artifact, so PJRT must match the native oracle's exact record-weighted
+    // metrics — the pre-mask artifact was biased here (its padded mean
+    // over-weighted the first shard%n rows).
+    let Some((pjrt, native)) = backends() else { return };
+    let (_, _, p) = pjrt.dims();
+    let s = pjrt.engine().shapes();
+    if pjrt.engine().manifest().spec("eval_full").unwrap().inputs.len() < 4 {
+        eprintln!("skipping: artifact set predates the masked eval_full (re-run `make artifacts`)");
+        return;
+    }
+    let mut rng = Pcg64::seed(9);
+    // jittered cohort: every shard strictly below the artifact capacity,
+    // sizes differing across nodes (the record-weighting matters)
+    let base = s.shard - s.shard.div_ceil(4);
+    let ds = decfl::data::generate(&decfl::data::DataConfig {
+        n_hospitals: s.n,
+        records_per_hospital: base,
+        records_jitter: s.shard / 10,
+        ..decfl::data::DataConfig::default()
+    })
+    .unwrap();
+    assert!(ds.shards.iter().all(|sh| sh.n < s.shard), "shards must need padding");
+    assert!(
+        ds.shards.iter().any(|sh| sh.n != ds.shards[0].n),
+        "shards must be uneven for the weighting to matter"
+    );
+    let theta = rand_vec(&mut rng, s.n * p, 0.3);
+    let ep = pjrt.eval_full(&theta, &ds.shards).unwrap();
+    let en = native.eval_full(&theta, &ds.shards).unwrap();
+    assert!((ep.0 - en.0).abs() < 1e-4 * (1.0 + en.0.abs()), "loss {} vs {}", ep.0, en.0);
+    assert!((ep.1 - en.1).abs() < 1e-6, "acc {} vs {}", ep.1, en.1);
+    assert!((ep.2 - en.2).abs() < 1e-5 * (1.0 + en.2.abs()), "stat {} vs {}", ep.2, en.2);
+    assert!((ep.3 - en.3).abs() < 1e-4 * (1.0 + en.3.abs()), "cons {} vs {}", ep.3, en.3);
+}

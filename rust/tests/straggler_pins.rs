@@ -1,0 +1,173 @@
+//! Integration: straggler-scenario regressions — the honest-clock pin
+//! (per-round `sim_time_s` = slowest participant's compute + link time),
+//! convergence under every plan, and the τ-weighted work accounting.
+
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+use decfl::engine::ComputeSchedule;
+
+fn straggler_cfg(algo: AlgoKind, plan: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 5;
+    cfg.d = 42;
+    cfg.hidden = 8;
+    cfg.m = 8;
+    cfg.q = 4;
+    cfg.algo = algo;
+    cfg.total_steps = 32;
+    cfg.eval_every = 1;
+    cfg.mode = Mode::Fused;
+    cfg.backend = Backend::Native;
+    cfg.records_per_hospital = 60;
+    cfg.heterogeneity = 0.5;
+    cfg.topology = "ring".into();
+    cfg.compute_plan = plan.into();
+    cfg.compute_tiers = "1.0,0.5,0.25".into();
+    cfg.compute_sigma = 0.7;
+    cfg.slow_frac = 0.4;
+    cfg
+}
+
+#[test]
+fn sim_time_per_round_is_slowest_participant_plus_link_time() {
+    // fused analytic accounting: with eval_every = 1, consecutive rows
+    // bracket exactly one round, whose sim-time delta must equal the
+    // schedule's max_i τ_i·s/speed_i plus one link transfer per payload
+    // kind (DSGD ships θ; DSGT ships θ and the tracker ϑ)
+    for (algo, kinds) in [(AlgoKind::FdDsgd, 1u32), (AlgoKind::FdDsgt, 2u32)] {
+        for plan in ["fixed-tiers", "lognormal", "dropout"] {
+            let cfg = straggler_cfg(algo, plan);
+            let csched = ComputeSchedule::from_config(&cfg).unwrap();
+            let asm = assemble(&cfg).unwrap();
+            let log = run_on(&cfg, &asm).unwrap();
+            let p = decfl::algo::native::NativeModel::new(cfg.d, cfg.hidden).p();
+            let link_s = (cfg.latency_s + 4.0 * p as f64 / cfg.bandwidth_bps) * kinds as f64;
+            assert!(log.rows.len() >= 3, "{plan}/{algo:?}");
+            for pair in log.rows.windows(2) {
+                let round = pair[1].comm_rounds as usize;
+                let delta = pair[1].sim_time_s - pair[0].sim_time_s;
+                let expect = csched.round_compute_s(round, cfg.compute_s_per_step) + link_s;
+                assert!(
+                    (delta - expect).abs() < 1e-9 * (1.0 + expect),
+                    "{plan}/{algo:?} round {round}: sim-time delta {delta} vs \
+                     max-participant {expect}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn straggler_runs_converge_and_report_reduced_work() {
+    for plan in ["fixed-tiers", "lognormal", "dropout"] {
+        let mut cfg = straggler_cfg(AlgoKind::FdDsgt, plan);
+        cfg.total_steps = 80;
+        let asm = assemble(&cfg).unwrap();
+        let log = run_on(&cfg, &asm).unwrap();
+        let first = log.rows.first().unwrap();
+        let last = log.rows.last().unwrap();
+        assert!(last.loss.is_finite() && last.loss < first.loss, "{plan}");
+        // the work axis reflects the schedule, not a uniform round·Q
+        let csched = ComputeSchedule::from_config(&cfg).unwrap();
+        let expect: u64 = (1..=last.comm_rounds as usize)
+            .map(|r| csched.local_work(r))
+            .sum::<u64>()
+            / cfg.n as u64;
+        assert_eq!(last.local_steps, expect, "{plan}: work accounting");
+        assert!(last.local_steps <= last.comm_rounds * cfg.q as u64, "{plan}");
+    }
+}
+
+#[test]
+fn tau_weighted_gossip_tracks_the_uniform_fixed_point() {
+    // unbiasedness sanity: a fixed-tiers run must land in the same loss
+    // neighborhood as the uniform run (τ-weighting re-centers the fixed
+    // point), not diverge toward the fast nodes' private minimizers
+    let mut uni = straggler_cfg(AlgoKind::FdDsgd, "uniform");
+    uni.total_steps = 200;
+    let asm = assemble(&uni).unwrap();
+    let log_u = run_on(&uni, &asm).unwrap();
+    let mut tiers = uni.clone();
+    tiers.compute_plan = "fixed-tiers".into();
+    let log_t = run_on(&tiers, &asm).unwrap();
+    let (lu, lt) = (log_u.rows.last().unwrap().loss, log_t.rows.last().unwrap().loss);
+    assert!(lt.is_finite());
+    // stragglers do less work, so some loss gap is expected — but bounded
+    assert!(
+        (lt - lu).abs() < 0.25 * (1.0 + lu.abs()),
+        "tiers fixed point drifted: uniform {lu} vs tiers {lt}"
+    );
+}
+
+#[test]
+fn pjrt_backend_rejects_straggler_plans_loudly() {
+    // AOT artifacts scan a fixed Q−1 steps; a straggler plan cannot run on
+    // them and must be rejected before training starts.  The bail fires in
+    // the engine's driver constructor, so it needs no artifacts on disk —
+    // a mock compute with a fixed local_steps_len stands in for PJRT.
+    use anyhow::Result;
+    use decfl::coordinator::Compute;
+    use decfl::data::Shard;
+
+    struct FixedScan(decfl::coordinator::NativeCompute);
+    impl Compute for FixedScan {
+        fn dims(&self) -> (usize, usize, usize) {
+            self.0.dims()
+        }
+        fn local_steps_len(&self) -> Option<usize> {
+            Some(3) // artifact specialized to Q−1 = 3
+        }
+        fn grad_step(&self, t: &[f32], x: &[f32], y: &[f32]) -> Result<(f64, Vec<f32>)> {
+            self.0.grad_step(t, x, y)
+        }
+        fn local_steps(
+            &self,
+            t: &[f32],
+            bx: &[f32],
+            by: &[f32],
+            lrs: &[f32],
+        ) -> Result<(Vec<f32>, Vec<f64>)> {
+            self.0.local_steps(t, bx, by, lrs)
+        }
+        fn combine(&self, w: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+            self.0.combine(w, t)
+        }
+        fn dsgd_round(
+            &self,
+            w: &[f32],
+            t: &[f32],
+            bx: &[f32],
+            by: &[f32],
+            lr: f32,
+        ) -> Result<(Vec<f32>, Vec<f64>)> {
+            self.0.dsgd_round(w, t, bx, by, lr)
+        }
+        fn dsgt_round(
+            &self,
+            w: &[f32],
+            t: &[f32],
+            y: &[f32],
+            g: &[f32],
+            bx: &[f32],
+            by: &[f32],
+            lr: f32,
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f64>)> {
+            self.0.dsgt_round(w, t, y, g, bx, by, lr)
+        }
+        fn eval_full(&self, t: &[f32], s: &[Shard]) -> Result<(f64, f64, f64, f64)> {
+            self.0.eval_full(t, s)
+        }
+        fn predict(&self, t: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+            self.0.predict(t, x)
+        }
+    }
+
+    let cfg = straggler_cfg(AlgoKind::FdDsgd, "dropout");
+    let asm = assemble(&cfg).unwrap();
+    let mock = FixedScan(decfl::coordinator::NativeCompute::new(
+        cfg.d, cfg.hidden, cfg.n, cfg.m,
+    ));
+    let err = decfl::engine::train_decentralized(&cfg, &mock, &asm.ds, &asm.graph, &asm.w)
+        .unwrap_err();
+    assert!(err.to_string().contains("--backend native"), "{err}");
+}
