@@ -65,6 +65,51 @@ fn main() -> anyhow::Result<()> {
         println!("speedup: {:.2}x", ts.p50_s / tp.p50_s);
     }
 
+    // network-axis case: a full dsgd gossip round at n = 10⁴ through the
+    // sparse-only MixView (dense: None) — no n×n buffer exists; this is the
+    // shape BENCH_6.json tracks.  Schedule refresh included: every round
+    // derives a fresh edge-drop view from the grow-only scratch.
+    {
+        let n = if smoke() { 1_000 } else { 10_000 };
+        let m_net = 4usize; // smaller batch: the axis under test is n, not m
+        let mut rng = Pcg64::seed(23);
+        let g = decfl::graph::Graph::build(
+            &decfl::graph::Topology::KNearest { k: 3 },
+            n,
+            &mut rng,
+        )?;
+        let w = decfl::mixing::build_sparse(&g, decfl::mixing::Scheme::Metropolis);
+        let mut cfg = decfl::config::ExperimentConfig::default();
+        cfg.n = n;
+        cfg.net_plan = "edge-drop".into();
+        cfg.edge_drop = 0.05;
+        let sched = decfl::graph::NetworkSchedule::from_config(&cfg, g, w)?;
+        let mut scratch = decfl::graph::ViewScratch::new();
+
+        let serial = NativeCompute::new(d, h, n, m_net).with_threads(1);
+        let threaded = NativeCompute::new(d, h, n, m_net);
+        let p = serial.dims().2;
+        let theta = rand_vec(&mut rng, n * p, 0.2);
+        let cx = rand_vec(&mut rng, n * m_net * d, 1.0);
+        let cy = rand_labels(&mut rng, n * m_net);
+        let mut out = vec![0.0f32; n * p];
+        let mut losses = vec![0.0f64; n];
+        section(&format!("sparse gossip round n={n} (knn graph, edge-drop views)"));
+        let mut round = 0usize;
+        let mut run = |c: &NativeCompute| {
+            round += 1;
+            let v = sched.view_into(round, &mut scratch).unwrap();
+            let mix = decfl::coordinator::compute::MixView { dense: None, sparse: v.w };
+            c.dsgd_round_into(&mix, &theta, &cx, &cy, 0.02, &mut out, &mut losses).unwrap();
+            std::hint::black_box(&out);
+        };
+        let ts = bench(budget(1.0), || run(&serial));
+        let tp = bench(budget(1.0), || run(&threaded));
+        report("serial (threads=1)", &ts);
+        report(&format!("threaded (auto, {cores} cores)"), &tp);
+        println!("speedup: {:.2}x", ts.p50_s / tp.p50_s);
+    }
+
     // eval_full over real shards at one representative size
     let n = if smoke() { 10 } else { 50 };
     let ds = decfl::data::generate(&decfl::data::DataConfig {

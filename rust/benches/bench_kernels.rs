@@ -11,6 +11,9 @@
 //! 3. **full round** — one fused FD-DSGD round (local phase + gossip
 //!    update) through the double-buffered `_into` path, the number the
 //!    ≥ 2× acceptance bar tracks; recorded to BENCH_3.json.
+//! 4. **sparse network stack** — graph build, CSR-first W construction,
+//!    power-iteration λ₂, and per-round dynamic views at n = 10⁴ without
+//!    any n×n array (BENCH_6.json tracks this tier).
 //!
 //!     cargo bench --bench bench_kernels
 //!     DECFL_BENCH_JSON=../BENCH_3.json cargo bench --bench bench_kernels
@@ -102,7 +105,7 @@ fn main() -> anyhow::Result<()> {
         let ly = rand_labels(&mut rng, n * local * m);
         let cx = rand_vec(&mut rng, n * m * d, 1.0);
         let cy = rand_labels(&mut rng, n * m);
-        let mix = MixView { dense: &dense, sparse: &sparse };
+        let mix = MixView { dense: Some(&dense), sparse: &sparse };
         let mut front = thetas.clone();
         let mut back = vec![0.0f32; n * p];
         let mut local_losses = vec![0.0f64; n * local];
@@ -119,6 +122,48 @@ fn main() -> anyhow::Result<()> {
             });
             push(&mut rows, &format!("round n={n} {label}"), t);
         }
+    }
+
+    // ---- 4. sparse network stack: the graph/W/schedule axis at scale ----
+    // No n×n array exists anywhere in this tier (Mat::zeros would trip its
+    // debug guard): CSR-first W construction, power-iteration λ₂, and
+    // per-round view derivation all run in O(E).
+    {
+        let n = if smoke() { 1_000 } else { 10_000 };
+        section(&format!("sparse network stack n={n} (knn graph)"));
+        let mut rng = Pcg64::seed(41);
+        let t = bench(budget(1.0), || {
+            let mut r = Pcg64::seed(41);
+            std::hint::black_box(Graph::build(&Topology::KNearest { k: 3 }, n, &mut r).unwrap());
+        });
+        push(&mut rows, &format!("graph build knn n={n}"), t);
+
+        let g = Graph::build(&Topology::KNearest { k: 3 }, n, &mut rng)?;
+        let mut w = SparseW::empty();
+        let t = bench(budget(1.0), || {
+            mixing::build_sparse_into(&g, Scheme::Metropolis, &mut w);
+            std::hint::black_box(&w);
+        });
+        push(&mut rows, &format!("build_sparse n={n}"), t);
+
+        let t = bench(budget(1.0), || {
+            std::hint::black_box(w.second_eig_magnitude());
+        });
+        push(&mut rows, &format!("lambda2 power-iter n={n}"), t);
+
+        let mut cfg = decfl::config::ExperimentConfig::default();
+        cfg.n = n;
+        cfg.net_plan = "edge-drop".into();
+        cfg.edge_drop = 0.05;
+        let sched = decfl::graph::NetworkSchedule::from_config(&cfg, g, w.clone())?;
+        let mut scratch = decfl::graph::ViewScratch::new();
+        let mut round = 0usize;
+        let t = bench(budget(1.0), || {
+            round += 1;
+            let v = sched.view_into(round, &mut scratch).unwrap();
+            std::hint::black_box(v.active_directed_edges());
+        });
+        push(&mut rows, &format!("edge-drop view n={n}"), t);
     }
 
     // ---- optional JSON record (BENCH_3.json baseline) ----

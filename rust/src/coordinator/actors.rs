@@ -58,9 +58,9 @@ use crate::compress::{add_residual, decode_into, residual_update, GossipComm, Ms
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
 use crate::engine::{self, ComputeSchedule, RoundEngine};
-use crate::graph::{Graph, NetworkSchedule};
-use crate::linalg::Mat;
+use crate::graph::{Graph, NetworkSchedule, ViewScratch};
 use crate::metrics::{round_metrics, RunLog};
+use crate::mixing::SparseW;
 use crate::netsim::{self, LinkModel, Payload, PayloadKind};
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::mpsc::channel;
@@ -135,6 +135,7 @@ impl NodeTask {
             yhat_own: vec![0.0f32; if compressing && tracked { p } else { 0 }],
             csched,
             net_key: None,
+            scratch: ViewScratch::new(),
             online_now: true,
             nbrs: Vec::new(),
             widx: Vec::new(),
@@ -183,6 +184,10 @@ struct NodeDriver<'a> {
     /// view key changes — built once for static plans, once per epoch for
     /// rewire.
     net_key: Option<u64>,
+    /// Grow-only workspace per-round views materialize into.  Per-node
+    /// scratch is O(base nnz) each — the actor driver is the small-n
+    /// fidelity path, so n copies are cheap; the fused driver holds one.
+    scratch: ViewScratch,
     online_now: bool,
     nbrs: Vec<usize>,
     /// This round's gossip row as `(neighbor, weight)` pairs, ascending,
@@ -200,13 +205,18 @@ impl NodeDriver<'_> {
         if self.net_key == Some(key) {
             return Ok(());
         }
-        let view = self.task.net.view(round)?;
+        let view = self.task.net.view_into(round, &mut self.scratch)?;
         let id = self.task.id;
         self.online_now = view.online[id];
-        self.nbrs = view.active_neighbors(id);
+        view.active_neighbors_into(id, &mut self.nbrs);
+        // copy the borrowed CSR row into the node's cache (the scratch is
+        // overwritten by the next refresh); grow-only, so warm refreshes
+        // into same-or-smaller rows never allocate
         let (widx, wval) = view.sparse_row(id);
-        self.widx = widx;
-        self.wval = wval;
+        self.widx.clear();
+        self.widx.extend_from_slice(widx);
+        self.wval.clear();
+        self.wval.extend_from_slice(wval);
         self.net_key = Some(key);
         Ok(())
     }
@@ -446,7 +456,7 @@ pub fn train<F>(
     eval_compute: &dyn Compute,
     ds: &FederatedDataset,
     graph: &Graph,
-    w: &Mat,
+    w: &SparseW,
 ) -> Result<RunLog>
 where
     F: Fn(usize) -> Result<Box<dyn Compute>> + Sync,
@@ -559,10 +569,14 @@ mod tests {
     use crate::coordinator::compute::NativeCompute;
     use crate::data::{generate, DataConfig};
     use crate::graph::Topology;
-    use crate::mixing::{build as build_w, Scheme};
+    use crate::mixing::{build_sparse, Scheme};
     use crate::rng::Pcg64;
 
-    fn setup(algo: AlgoKind, q: usize, steps: usize) -> (ExperimentConfig, FederatedDataset, Graph, Mat) {
+    fn setup(
+        algo: AlgoKind,
+        q: usize,
+        steps: usize,
+    ) -> (ExperimentConfig, FederatedDataset, Graph, SparseW) {
         let mut cfg = ExperimentConfig::default();
         cfg.n = 4;
         cfg.hidden = 8;
@@ -583,7 +597,7 @@ mod tests {
         })
         .unwrap();
         let graph = Graph::build(&Topology::Ring, cfg.n, &mut Pcg64::seed(1)).unwrap();
-        let w = build_w(&graph, Scheme::Metropolis);
+        let w = build_sparse(&graph, Scheme::Metropolis);
         (cfg, ds, graph, w)
     }
 

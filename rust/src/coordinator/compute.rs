@@ -13,14 +13,18 @@ use crate::mixing::SparseW;
 use crate::runtime::Engine;
 use anyhow::{bail, ensure, Result};
 
-/// One communication round's mixing matrix in both forms the backends
-/// consume: row-major dense `[n, n]` (the AOT artifacts' input) and the
-/// degree-sparse CSR rows (what the native kernels gossip over).  The two
-/// must describe the same matrix; drivers build both once per network view.
+/// One communication round's mixing matrix in the forms the backends
+/// consume: the degree-sparse CSR rows (what the native kernels gossip
+/// over), plus an optional row-major dense `[n, n]` scatter (the AOT
+/// artifacts' input).  When present, the two must describe the same matrix.
+/// Drivers materialize the dense form only for backends that report
+/// [`Compute::wants_dense_w`] — at 10⁵ nodes an n×n buffer is 40 GB, so the
+/// sparse-native path never builds it.
 pub struct MixView<'a> {
-    /// Row-major dense `[n, n]` f32 mixing matrix.
-    pub dense: &'a [f32],
-    /// Degree-sparse CSR rows of the same matrix.
+    /// Row-major dense `[n, n]` f32 mixing matrix, if the backend asked for
+    /// it ([`Compute::wants_dense_w`]); `None` on the sparse-native path.
+    pub dense: Option<&'a [f32]>,
+    /// Degree-sparse CSR rows of the mixing matrix (always present).
     pub sparse: &'a SparseW,
 }
 
@@ -32,6 +36,15 @@ pub trait Compute {
     /// Number of scan steps the `local_steps` op performs per call
     /// (Q−1 for the artifact set; arbitrary for the native backend).
     fn local_steps_len(&self) -> Option<usize>;
+
+    /// Does this backend need the dense `[n, n]` mixing matrix in its
+    /// [`MixView`]?  Defaults to `true` (the AOT artifacts take dense W);
+    /// sparse-native backends override to `false` so drivers never scatter —
+    /// or even allocate — an n×n buffer, which is what lets the network axis
+    /// scale to 10⁵–10⁶ nodes.
+    fn wants_dense_w(&self) -> bool {
+        true
+    }
 
     /// One stochastic gradient: → (loss, grad[p]).
     fn grad_step(&self, theta: &[f32], x: &[f32], y: &[f32]) -> Result<(f64, Vec<f32>)>;
@@ -197,7 +210,13 @@ pub trait Compute {
         theta_out: &mut [f32],
         losses: &mut [f64],
     ) -> Result<()> {
-        let (t, l) = self.dsgd_round(w.dense, theta, bx, by, lr)?;
+        let Some(dense) = w.dense else {
+            bail!(
+                "this backend's dsgd_round consumes dense W (wants_dense_w), \
+                 but the driver supplied a sparse-only MixView"
+            );
+        };
+        let (t, l) = self.dsgd_round(dense, theta, bx, by, lr)?;
         theta_out.copy_from_slice(&t);
         losses.copy_from_slice(&l);
         Ok(())
@@ -234,7 +253,13 @@ pub trait Compute {
         g_out: &mut [f32],
         losses: &mut [f64],
     ) -> Result<()> {
-        let (t, y, g, l) = self.dsgt_round(w.dense, theta, y_tr, g_old, bx, by, lr)?;
+        let Some(dense) = w.dense else {
+            bail!(
+                "this backend's dsgt_round consumes dense W (wants_dense_w), \
+                 but the driver supplied a sparse-only MixView"
+            );
+        };
+        let (t, y, g, l) = self.dsgt_round(dense, theta, y_tr, g_old, bx, by, lr)?;
         theta_out.copy_from_slice(&t);
         y_out.copy_from_slice(&y);
         g_out.copy_from_slice(&g);
@@ -662,6 +687,10 @@ impl Compute for NativeCompute {
         None // any length accepted
     }
 
+    fn wants_dense_w(&self) -> bool {
+        false // every native kernel gossips over the CSR rows
+    }
+
     fn grad_step(&self, theta: &[f32], x: &[f32], y: &[f32]) -> Result<(f64, Vec<f32>)> {
         Ok(self.model.loss_and_grad(theta, x, y))
     }
@@ -819,7 +848,7 @@ impl Compute for NativeCompute {
         let mut out = vec![0.0f32; n * p];
         let mut losses = vec![0.0f64; n];
         self.dsgd_round_into(
-            &MixView { dense: w, sparse: &sparse },
+            &MixView { dense: Some(w), sparse: &sparse },
             theta,
             bx,
             by,
@@ -885,7 +914,7 @@ impl Compute for NativeCompute {
         let mut g_new = vec![0.0f32; n * p];
         let mut losses = vec![0.0f64; n];
         self.dsgt_round_into(
-            &MixView { dense: w, sparse: &sparse },
+            &MixView { dense: Some(w), sparse: &sparse },
             theta,
             y_tr,
             g_old,
@@ -1224,7 +1253,7 @@ mod tests {
             crate::mixing::to_f32(&crate::mixing::build(&g, crate::mixing::Scheme::Metropolis))
         };
         let sparse = SparseW::from_dense(n, &w);
-        let mix = MixView { dense: &w, sparse: &sparse };
+        let mix = MixView { dense: Some(&w), sparse: &sparse };
 
         // DSGD: fresh-Vec vs double-buffered slabs
         let mut ta = theta0.clone();

@@ -13,8 +13,8 @@ use crate::config::ExperimentConfig;
 use crate::data::FederatedDataset;
 use crate::engine;
 use crate::graph::Graph;
-use crate::linalg::Mat;
 use crate::metrics::RunLog;
+use crate::mixing::SparseW;
 use anyhow::Result;
 
 use super::compute::Compute;
@@ -27,7 +27,7 @@ pub fn train(
     compute: &dyn Compute,
     ds: &FederatedDataset,
     graph: &Graph,
-    w: &Mat,
+    w: &SparseW,
 ) -> Result<RunLog> {
     let (log, _theta) = engine::train_decentralized(cfg, compute, ds, graph, w)?;
     Ok(log)
@@ -41,7 +41,7 @@ pub fn train_returning_params(
     compute: &dyn Compute,
     ds: &FederatedDataset,
     graph: &Graph,
-    w: &Mat,
+    w: &SparseW,
 ) -> Result<(RunLog, Vec<f32>)> {
     engine::train_decentralized(cfg, compute, ds, graph, w)
 }
@@ -53,14 +53,14 @@ mod tests {
     use crate::coordinator::compute::NativeCompute;
     use crate::data::{generate, DataConfig};
     use crate::graph::Topology;
-    use crate::mixing::{build as build_w, Scheme};
+    use crate::mixing::{build_sparse, Scheme};
     use crate::rng::Pcg64;
 
     fn tiny_setup(
         algo: AlgoKind,
         q: usize,
         steps: usize,
-    ) -> (ExperimentConfig, NativeCompute, FederatedDataset, Graph, Mat) {
+    ) -> (ExperimentConfig, NativeCompute, FederatedDataset, Graph, SparseW) {
         let mut cfg = ExperimentConfig::default();
         cfg.n = 5;
         cfg.d = 42;
@@ -82,7 +82,7 @@ mod tests {
         })
         .unwrap();
         let graph = Graph::build(&Topology::Ring, cfg.n, &mut Pcg64::seed(1)).unwrap();
-        let w = build_w(&graph, Scheme::Metropolis);
+        let w = build_sparse(&graph, Scheme::Metropolis);
         let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
         (cfg, compute, ds, graph, w)
     }

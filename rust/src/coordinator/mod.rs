@@ -33,8 +33,9 @@ pub struct Assembled {
     pub ds: FederatedDataset,
     /// The hospital gossip graph.
     pub graph: Graph,
-    /// Its validated mixing matrix (Assumption 1).
-    pub w: crate::linalg::Mat,
+    /// Its validated mixing matrix (Assumption 1), stored sparse (CSR) so
+    /// assembly never materializes an n×n array.
+    pub w: crate::mixing::SparseW,
     /// `1 − |λ₂|` of `w` — the consensus-rate knob.
     pub spectral_gap: f64,
 }
@@ -57,8 +58,8 @@ pub fn assemble(cfg: &ExperimentConfig) -> Result<Assembled> {
     if !graph.is_connected() {
         bail!("generated graph is disconnected — Assumption 1 violated");
     }
-    let w = mixing::build(&graph, Scheme::parse(&cfg.mixing)?);
-    let v = mixing::validate(&w);
+    let w = mixing::build_sparse(&graph, Scheme::parse(&cfg.mixing)?);
+    let v = mixing::validate_sparse(&w);
     if !v.holds() {
         bail!("mixing matrix violates Assumption 1: {v:?}");
     }

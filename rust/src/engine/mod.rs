@@ -52,8 +52,7 @@ use crate::coordinator::compute::Compute;
 use crate::mixing::SparseW;
 use crate::coordinator::sampler::{init_theta, init_thetas, NodeSampler};
 use crate::data::{FederatedDataset, Shard};
-use crate::graph::{Graph, NetworkSchedule};
-use crate::linalg::Mat;
+use crate::graph::{Graph, NetworkSchedule, ViewScratch};
 use crate::metrics::{round_metrics, RunLog};
 use crate::netsim::{analytic::Accountant, LinkModel};
 use anyhow::{bail, Result};
@@ -270,8 +269,13 @@ pub struct SyncDriver<'a> {
     work_done: u64,
     /// Per-round network schedule (gossip strategies only).
     net: Option<NetworkSchedule>,
-    /// Cached view of the current round: f32 W (dense + degree-sparse),
-    /// online mask, active edges.
+    /// Grow-only workspace the schedule materializes per-round views into
+    /// (CSR edits in place — steady-state refreshes allocate nothing).
+    scratch: ViewScratch,
+    /// Cached view of the current round: degree-sparse CSR W, online mask,
+    /// active edges.  `wf` is the dense scatter of the same matrix, built
+    /// only for backends that report `wants_dense_w` (the AOT artifacts) —
+    /// the sparse-native path leaves it empty at any n.
     wf: Vec<f32>,
     wsp: SparseW,
     online: Vec<bool>,
@@ -291,7 +295,7 @@ impl<'a> SyncDriver<'a> {
         compute: &'a dyn Compute,
         ds: &'a FederatedDataset,
         graph: &Graph,
-        w: &Mat,
+        w: &SparseW,
     ) -> Result<Self> {
         let (d, h, p) = compute.dims();
         if d != ds.d {
@@ -507,8 +511,9 @@ impl<'a> SyncDriver<'a> {
             csched,
             work_done: 0,
             net,
+            scratch: ViewScratch::new(),
             wf: Vec::new(),
-            wsp: SparseW::from_dense(0, &[]),
+            wsp: SparseW::empty(),
             online: vec![true; n],
             round_edges: 0,
             wf_key: None,
@@ -519,6 +524,9 @@ impl<'a> SyncDriver<'a> {
 
     /// Refresh the cached network view for `round` (no-op while the
     /// schedule's view key is unchanged — every round for static plans).
+    /// The view is materialized into the driver's grow-only scratch and
+    /// copied into the reusable CSR cache, so warm refreshes never allocate;
+    /// the dense scatter happens only for `wants_dense_w` backends.
     fn refresh_net(&mut self, round: usize) -> Result<()> {
         let Some(net) = &self.net else {
             return Ok(());
@@ -527,11 +535,17 @@ impl<'a> SyncDriver<'a> {
         if self.wf_key == Some(key) {
             return Ok(());
         }
-        let view = net.view(round)?;
-        self.wf = view.wf();
-        self.wsp = SparseW::from_dense(self.st.n, &self.wf);
+        // per-round nnz never exceeds the base matrix (drop/churn only
+        // remove entries), so one reservation keeps every later copy warm
+        self.wsp.reserve_rows_nnz(net.n(), net.base_nnz());
+        let view = net.view_into(round, &mut self.scratch)?;
+        self.wsp.copy_from(view.w);
         self.round_edges = view.active_directed_edges();
-        self.online = view.online.into_owned();
+        self.online.clear();
+        self.online.extend_from_slice(view.online);
+        if self.compute.wants_dense_w() {
+            self.wf = view.wf(); // gated small-n conversion (AOT artifacts)
+        }
         self.wf_key = Some(key);
         Ok(())
     }
@@ -621,10 +635,11 @@ impl Driver for SyncDriver<'_> {
 
     fn comm_phase(&mut self, round: usize, lr: f32) -> Result<()> {
         self.refresh_net(round)?;
+        let dense_w = if self.wf.is_empty() { None } else { Some(&self.wf[..]) };
         self.strategy.comm_update(
             &mut self.st,
             self.compute,
-            &RoundNet { w: &self.wf, sparse: &self.wsp, online: &self.online },
+            &RoundNet { w: dense_w, sparse: &self.wsp, online: &self.online },
             round,
             lr,
         )?;
@@ -700,7 +715,7 @@ pub fn train_decentralized(
     compute: &dyn Compute,
     ds: &FederatedDataset,
     graph: &Graph,
-    w: &Mat,
+    w: &SparseW,
 ) -> Result<(RunLog, Vec<f32>)> {
     let engine = RoundEngine::from_config(cfg);
     let mut driver = SyncDriver::decentralized(cfg, compute, ds, graph, w)?;
@@ -739,10 +754,12 @@ mod tests {
     use crate::coordinator::compute::NativeCompute;
     use crate::data::{generate, DataConfig};
     use crate::graph::Topology;
-    use crate::mixing::{build as build_w, Scheme};
+    use crate::mixing::{build_sparse, Scheme};
     use crate::rng::Pcg64;
 
-    fn setup(algo: AlgoKind) -> (ExperimentConfig, NativeCompute, FederatedDataset, Graph, Mat) {
+    fn setup(
+        algo: AlgoKind,
+    ) -> (ExperimentConfig, NativeCompute, FederatedDataset, Graph, SparseW) {
         let mut cfg = ExperimentConfig::default();
         cfg.n = 4;
         cfg.d = 42;
@@ -764,7 +781,7 @@ mod tests {
         })
         .unwrap();
         let graph = Graph::build(&Topology::Ring, cfg.n, &mut Pcg64::seed(1)).unwrap();
-        let w = build_w(&graph, Scheme::Metropolis);
+        let w = build_sparse(&graph, Scheme::Metropolis);
         let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
         (cfg, compute, ds, graph, w)
     }

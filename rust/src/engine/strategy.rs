@@ -54,11 +54,13 @@ pub enum CommCost {
 
 /// The network of ONE communication round, as the schedule emitted it.
 pub struct RoundNet<'a> {
-    /// Row-major f32 mixing matrix `[n, n]` for this round (doubly
-    /// stochastic; offline rows are identity under churn).
-    pub w: &'a [f32],
-    /// Degree-sparse CSR view of the same matrix (per-node `(neighbor,
-    /// weight)` rows, ascending) — what the native gossip kernels consume.
+    /// Row-major dense f32 mixing matrix `[n, n]` for this round — present
+    /// only when the backend asked for it (`Compute::wants_dense_w`); the
+    /// sparse-native path never materializes it (n×n is 40 GB at n = 10⁵).
+    pub w: Option<&'a [f32]>,
+    /// Degree-sparse CSR view of the round's mixing matrix (per-node
+    /// `(neighbor, weight)` rows, ascending) — always present; what the
+    /// native gossip kernels consume.
     pub sparse: &'a SparseW,
     /// Per-node participation mask (all `true` except under node churn).
     pub online: &'a [bool],

@@ -38,8 +38,8 @@ pub fn hospital_graph(cfg: &ExperimentConfig) -> Result<GraphReport> {
     let topo = Topology::parse(&cfg.topology)?;
     let mut rng = Pcg64::new(cfg.seed, 0x6EA9);
     let graph = Graph::build(&topo, cfg.n, &mut rng)?;
-    let w = mixing::build(&graph, Scheme::parse(&cfg.mixing)?);
-    let v = mixing::validate(&w);
+    let w = mixing::build_sparse(&graph, Scheme::parse(&cfg.mixing)?);
+    let v = mixing::validate_sparse(&w);
     let coords = layout(&graph, &mut rng, 300);
     let degrees = (0..graph.n()).map(|i| graph.degree(i)).collect();
     Ok(GraphReport {

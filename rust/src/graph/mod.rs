@@ -11,11 +11,86 @@
 pub mod layout;
 pub mod schedule;
 
-pub use schedule::{NetPlan, NetView, NetworkSchedule};
+pub use schedule::{NetPlan, NetView, NetworkSchedule, ViewScratch};
 
 use crate::linalg::Mat;
 use crate::rng::Pcg64;
 use anyhow::{bail, Result};
+
+/// Size gate for the dense / quadratic debugging helpers
+/// ([`Graph::diameter`], [`Graph::adjacency`], [`Graph::to_dot`], dense
+/// mixing matrices).  Past this node count they would silently dominate
+/// runtime or memory, so they refuse loudly instead — the sparse-native
+/// stack (`mixing::build_sparse`, `NetworkSchedule::view_into`, power
+/// iteration) is the only path that scales beyond it.
+pub const SMALL_N_LIMIT: usize = 4096;
+
+/// Disjoint-set union (union by size, path halving) with a live component
+/// counter.  `reset` re-initializes in O(n) without allocating once the
+/// buffers have grown, so generator resample loops and per-round schedule
+/// retries can test connectivity incrementally instead of re-running a
+/// whole-graph BFS per try.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    comps: usize,
+}
+
+impl UnionFind {
+    /// Fresh forest of `n` singleton components.
+    pub fn new(n: usize) -> Self {
+        let mut uf = UnionFind { parent: Vec::new(), size: Vec::new(), comps: 0 };
+        uf.reset(n);
+        uf
+    }
+
+    /// Re-initialize to `n` singletons, reusing the existing buffers.
+    pub fn reset(&mut self, n: usize) {
+        assert!(n <= u32::MAX as usize, "UnionFind indexes nodes with u32");
+        self.parent.clear();
+        self.parent.extend(0..n as u32);
+        self.size.clear();
+        self.size.resize(n, 1);
+        self.comps = n;
+    }
+
+    /// Representative of `x`'s component (halves paths as it walks).
+    pub fn find(&mut self, mut x: usize) -> usize {
+        loop {
+            let p = self.parent[x] as usize;
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p];
+            self.parent[x] = gp;
+            x = gp as usize;
+        }
+    }
+
+    /// Merge the components of `a` and `b`; returns false if already merged.
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (big, small) = if self.size[ra] >= self.size[rb] { (ra, rb) } else { (rb, ra) };
+        self.parent[small] = big as u32;
+        self.size[big] += self.size[small];
+        self.comps -= 1;
+        true
+    }
+
+    /// Are `a` and `b` in the same component?
+    pub fn connected(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Live component count (n minus successful unions).
+    pub fn components(&self) -> usize {
+        self.comps
+    }
+}
 
 /// An undirected simple graph over nodes `0..n`.
 #[derive(Clone, Debug)]
@@ -161,8 +236,20 @@ impl Graph {
         count == self.n
     }
 
-    /// Graph diameter via repeated BFS (n is small).
+    /// Dense/quadratic helpers exist for small-n debugging and reporting
+    /// only; refuse loudly instead of silently burning O(n²)+ at scale.
+    fn assert_small_n(&self, what: &str) {
+        assert!(
+            self.n <= SMALL_N_LIMIT,
+            "Graph::{what} is O(n²)+ and gated to n <= {SMALL_N_LIMIT} (got n = {}); \
+             it is a small-n debug/reporting helper — use the sparse-native stack at scale",
+            self.n
+        );
+    }
+
+    /// Graph diameter via repeated BFS.  Small-n only (gated): O(n·E).
     pub fn diameter(&self) -> usize {
+        self.assert_small_n("diameter");
         let mut best = 0;
         for s in 0..self.n {
             let mut dist = vec![usize::MAX; self.n];
@@ -181,8 +268,9 @@ impl Graph {
         best
     }
 
-    /// 0/1 adjacency matrix.
+    /// 0/1 adjacency matrix.  Small-n only (gated): materializes n×n.
     pub fn adjacency(&self) -> Mat {
+        self.assert_small_n("adjacency");
         let mut a = Mat::zeros(self.n, self.n);
         for (i, j) in self.edges() {
             a[(i, j)] = 1.0;
@@ -251,17 +339,22 @@ impl Graph {
                 g
             }
             Topology::ErdosRenyi { p } => {
-                // resample until connected (expected O(1) tries above the threshold)
+                // resample until connected (expected O(1) tries above the
+                // threshold); union-find tracks connectivity as edges land,
+                // so each failed try costs O(E α(n)) instead of a BFS pass
+                let mut uf = UnionFind::new(n);
                 for _ in 0..1000 {
                     let mut g = Graph::empty(n);
+                    uf.reset(n);
                     for i in 0..n {
                         for j in (i + 1)..n {
                             if rng.bernoulli(*p) {
                                 g.add_edge(i, j);
+                                uf.union(i, j);
                             }
                         }
                     }
-                    if g.is_connected() {
+                    if uf.components() == 1 {
                         return Ok(g);
                     }
                 }
@@ -270,22 +363,31 @@ impl Graph {
             Topology::RandomGeometric { radius } => {
                 let pts: Vec<(f64, f64)> =
                     (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+                // grow radius until connected — incrementally: each pass adds
+                // only the edges in the new annulus (prev_r, r] to the same
+                // graph and union-find, so the accumulated edge set equals a
+                // fresh rebuild at radius r without per-try rebuild + BFS
+                let mut g = Graph::empty(n);
+                let mut uf = UnionFind::new(n);
                 let mut r = *radius;
+                let mut prev_r = f64::NEG_INFINITY;
                 loop {
-                    let mut g = Graph::empty(n);
                     for i in 0..n {
                         for j in (i + 1)..n {
                             let dx = pts[i].0 - pts[j].0;
                             let dy = pts[i].1 - pts[j].1;
-                            if (dx * dx + dy * dy).sqrt() <= r {
+                            let d = (dx * dx + dy * dy).sqrt();
+                            if d <= r && d > prev_r {
                                 g.add_edge(i, j);
+                                uf.union(i, j);
                             }
                         }
                     }
-                    if g.is_connected() {
+                    if uf.components() == 1 {
                         return Ok(g);
                     }
-                    r *= 1.2; // grow radius until connected
+                    prev_r = r;
+                    r *= 1.2;
                     if r > 2.0 {
                         bail!("RGG failed to connect");
                     }
@@ -331,37 +433,15 @@ impl Graph {
                 let k = (*k).max(1).min(n.saturating_sub(1)).max(1);
                 let pts: Vec<(f64, f64)> =
                     (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
-                let d2 = |a: usize, b: usize| {
-                    let dx = pts[a].0 - pts[b].0;
-                    let dy = pts[a].1 - pts[b].1;
-                    dx * dx + dy * dy
-                };
-                let mut g = Graph::empty(n);
-                for i in 0..n {
-                    let mut others: Vec<usize> = (0..n).filter(|&j| j != i).collect();
-                    others.sort_by(|&a, &b| d2(i, a).partial_cmp(&d2(i, b)).unwrap());
-                    for &j in others.iter().take(k) {
-                        g.add_edge(i, j);
-                    }
+                // both paths are exact and select the same neighbors (the
+                // grid path's (d², j) order matches the stable sort's
+                // ascending-j tie-break), so the switch is invisible; the
+                // exact path is kept verbatim as the small-n oracle
+                if n <= KNN_GRID_THRESHOLD {
+                    build_knn_sort(&pts, k)
+                } else {
+                    build_knn_grid(&pts, k)
                 }
-                // stitch components via their closest inter-component pair
-                while !g.is_connected() && n > 1 {
-                    let comp = g.components();
-                    let mut best: Option<(usize, usize, f64)> = None;
-                    for i in 0..n {
-                        for j in (i + 1)..n {
-                            if comp[i] != comp[j] {
-                                let d = d2(i, j);
-                                if best.map(|(_, _, bd)| d < bd).unwrap_or(true) {
-                                    best = Some((i, j, d));
-                                }
-                            }
-                        }
-                    }
-                    let (i, j, _) = best.expect("disconnected graph must have a cross pair");
-                    g.add_edge(i, j);
-                }
-                g
             }
         };
         Ok(g)
@@ -399,8 +479,9 @@ impl Graph {
         }
     }
 
-    /// Graphviz DOT export (Fig. 1L artifact).
+    /// Graphviz DOT export (Fig. 1L artifact).  Small-n only (gated).
     pub fn to_dot(&self, labels: Option<&[String]>) -> String {
+        self.assert_small_n("to_dot");
         let mut out = String::from("graph hospitals {\n  node [shape=circle];\n");
         for i in 0..self.n {
             let label = labels.map(|l| l[i].as_str()).unwrap_or("");
@@ -428,6 +509,261 @@ fn best_torus_dims(n: usize) -> Result<(usize, usize)> {
         Some((1, _)) if n > 2 => bail!("torus needs a composite node count, got prime {n}"),
         Some(dims) => Ok(dims),
         None => bail!("torus needs n >= 1"),
+    }
+}
+
+/// Above this node count the kNN generator switches from the O(n² log n)
+/// sort-based construction to the grid-bucketed exact search.  Both are
+/// exact; the threshold only bounds where the quadratic path may run.
+const KNN_GRID_THRESHOLD: usize = 2048;
+
+/// Sort-based exact kNN + quadratic stitching — the original small-n path,
+/// kept verbatim as the oracle the grid path is property-tested against.
+fn build_knn_sort(pts: &[(f64, f64)], k: usize) -> Graph {
+    let n = pts.len();
+    let d2 = |a: usize, b: usize| {
+        let dx = pts[a].0 - pts[b].0;
+        let dy = pts[a].1 - pts[b].1;
+        dx * dx + dy * dy
+    };
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        let mut others: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+        others.sort_by(|&a, &b| d2(i, a).partial_cmp(&d2(i, b)).unwrap());
+        for &j in others.iter().take(k) {
+            g.add_edge(i, j);
+        }
+    }
+    // stitch components via their closest inter-component pair
+    while !g.is_connected() && n > 1 {
+        let comp = g.components();
+        let mut best: Option<(usize, usize, f64)> = None;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if comp[i] != comp[j] {
+                    let d = d2(i, j);
+                    if best.map(|(_, _, bd)| d < bd).unwrap_or(true) {
+                        best = Some((i, j, d));
+                    }
+                }
+            }
+        }
+        let (i, j, _) = best.expect("disconnected graph must have a cross pair");
+        g.add_edge(i, j);
+    }
+    g
+}
+
+/// Uniform cell grid over the unit square with CSR-style buckets: ~2 points
+/// per cell, so an expanding Chebyshev-ring scan visits O(k) candidates per
+/// query in expectation.
+struct CellGrid {
+    /// Cells per side.
+    cps: usize,
+    /// Cell width (1 / cps).
+    cell: f64,
+    /// Bucket offsets, length `cps² + 1`.
+    start: Vec<u32>,
+    /// Node ids grouped by cell.
+    items: Vec<u32>,
+}
+
+impl CellGrid {
+    fn new(pts: &[(f64, f64)]) -> Self {
+        let n = pts.len();
+        let cps = ((n as f64 / 2.0).sqrt().ceil() as usize).max(1);
+        let at = |x: f64| (((x * cps as f64) as usize).min(cps - 1)) as u32;
+        let mut start = vec![0u32; cps * cps + 1];
+        for &(x, y) in pts {
+            start[(at(y) as usize) * cps + at(x) as usize + 1] += 1;
+        }
+        for c in 1..start.len() {
+            start[c] += start[c - 1];
+        }
+        let mut fill: Vec<u32> = start[..cps * cps].to_vec();
+        let mut items = vec![0u32; n];
+        for (i, &(x, y)) in pts.iter().enumerate() {
+            let c = (at(y) as usize) * cps + at(x) as usize;
+            items[fill[c] as usize] = i as u32;
+            fill[c] += 1;
+        }
+        CellGrid { cps, cell: 1.0 / cps as f64, start, items }
+    }
+
+    fn cell_of(&self, p: (f64, f64)) -> (usize, usize) {
+        let at = |x: f64| ((x * self.cps as f64) as usize).min(self.cps - 1);
+        (at(p.0), at(p.1))
+    }
+
+    fn bucket(&self, c: usize) -> &[u32] {
+        &self.items[self.start[c] as usize..self.start[c + 1] as usize]
+    }
+
+    /// Cell indices of the Chebyshev ring at distance `r` around `(cx, cy)`,
+    /// clipped to the grid; returns false once the whole ring falls outside
+    /// (at which point every larger ring is outside too).
+    fn ring_cells(&self, cx: usize, cy: usize, r: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        let cps = self.cps as i64;
+        let (cx, cy, r) = (cx as i64, cy as i64, r as i64);
+        if r == 0 {
+            out.push((cy * cps + cx) as u32);
+            return true;
+        }
+        for x in (cx - r).max(0)..=(cx + r).min(cps - 1) {
+            if cy - r >= 0 {
+                out.push(((cy - r) * cps + x) as u32);
+            }
+            if cy + r < cps {
+                out.push(((cy + r) * cps + x) as u32);
+            }
+        }
+        for y in (cy - r + 1).max(0)..=(cy + r - 1).min(cps - 1) {
+            if cx - r >= 0 {
+                out.push((y * cps + (cx - r)) as u32);
+            }
+            if cx + r < cps {
+                out.push((y * cps + (cx + r)) as u32);
+            }
+        }
+        !out.is_empty()
+    }
+}
+
+/// Keep the k lexicographically-smallest `(d², j)` candidates, matching the
+/// stable sort's tie-break (equal distances resolve to the smaller index).
+fn knn_insert_best(best: &mut Vec<(f64, u32)>, k: usize, cand: (f64, u32)) {
+    let pos = best
+        .iter()
+        .position(|&(d, j)| cand.0 < d || (cand.0 == d && cand.1 < j));
+    match pos {
+        Some(p) => {
+            if best.len() == k {
+                best.pop();
+            }
+            best.insert(p, cand);
+        }
+        None => {
+            if best.len() < k {
+                best.push(cand);
+            }
+        }
+    }
+}
+
+/// Grid-bucketed exact kNN: expanding Chebyshev rings until the k-th best
+/// distance is strictly inside the scanned radius.  Selects the identical
+/// neighbor set as [`build_knn_sort`] and stitches components through the
+/// same closest-cross-pair rule, found per-node on the grid with union-find
+/// tracking connectivity — O(n·k) expected instead of O(n² log n).
+fn build_knn_grid(pts: &[(f64, f64)], k: usize) -> Graph {
+    let n = pts.len();
+    let grid = CellGrid::new(pts);
+    let mut g = Graph::empty(n);
+    let mut uf = UnionFind::new(n);
+    let mut best: Vec<(f64, u32)> = Vec::with_capacity(k);
+    let mut cells: Vec<u32> = Vec::new();
+    for i in 0..n {
+        best.clear();
+        let (cx, cy) = grid.cell_of(pts[i]);
+        let mut r = 0usize;
+        loop {
+            let any = grid.ring_cells(cx, cy, r, &mut cells);
+            for &c in &cells {
+                for &ju in grid.bucket(c as usize) {
+                    let j = ju as usize;
+                    if j == i {
+                        continue;
+                    }
+                    let dx = pts[i].0 - pts[j].0;
+                    let dy = pts[i].1 - pts[j].1;
+                    knn_insert_best(&mut best, k, (dx * dx + dy * dy, ju));
+                }
+            }
+            // every point not yet scanned sits in a ring >= r+1, hence at
+            // least r·cell away; once the k-th candidate is strictly closer
+            // than that, no unseen point can enter (or tie into) the top k
+            let guard = r as f64 * grid.cell;
+            if best.len() == k && best[k - 1].0 < guard * guard {
+                break;
+            }
+            if !any && r > 0 {
+                break; // grid exhausted
+            }
+            r += 1;
+        }
+        for &(_, j) in &best {
+            g.add_edge(i, j as usize);
+            uf.union(i, j as usize);
+        }
+    }
+    // stitch components via their closest inter-component pair: the sort
+    // path's full scan picks the (d², i, j)-lexicographic minimum, so we
+    // reproduce exactly that via per-node grid searches
+    while uf.components() > 1 && n > 1 {
+        let mut gbest: Option<(f64, usize, usize)> = None;
+        for i in 0..n {
+            if let Some((d, j)) = nearest_cross_component(&grid, pts, &mut uf, i, &mut cells) {
+                let better = match gbest {
+                    None => true,
+                    Some((bd, bi, bj)) => d < bd || (d == bd && (i, j) < (bi, bj)),
+                };
+                if better {
+                    gbest = Some((d, i, j));
+                }
+            }
+        }
+        let (_, i, j) = gbest.expect("disconnected graph must have a cross pair");
+        g.add_edge(i, j);
+        uf.union(i, j);
+    }
+    g
+}
+
+/// Nearest node to `i` in a different union-find component, by `(d², j)`
+/// lexicographic order; expanding-ring search with the same strict guard as
+/// the kNN scan.
+fn nearest_cross_component(
+    grid: &CellGrid,
+    pts: &[(f64, f64)],
+    uf: &mut UnionFind,
+    i: usize,
+    cells: &mut Vec<u32>,
+) -> Option<(f64, usize)> {
+    let ci = uf.find(i);
+    let (cx, cy) = grid.cell_of(pts[i]);
+    let mut best: Option<(f64, usize)> = None;
+    let mut r = 0usize;
+    loop {
+        let any = grid.ring_cells(cx, cy, r, cells);
+        for &c in cells.iter() {
+            for &ju in grid.bucket(c as usize) {
+                let j = ju as usize;
+                if j == i || uf.find(j) == ci {
+                    continue;
+                }
+                let dx = pts[i].0 - pts[j].0;
+                let dy = pts[i].1 - pts[j].1;
+                let d = dx * dx + dy * dy;
+                let better = match best {
+                    None => true,
+                    Some((bd, bj)) => d < bd || (d == bd && j < bj),
+                };
+                if better {
+                    best = Some((d, j));
+                }
+            }
+        }
+        let guard = r as f64 * grid.cell;
+        if let Some((bd, _)) = best {
+            if bd < guard * guard {
+                return best;
+            }
+        }
+        if !any && r > 0 {
+            return best;
+        }
+        r += 1;
     }
 }
 
@@ -596,5 +932,117 @@ mod tests {
             assert!(Topology::parse(name).is_ok(), "{name}");
         }
         assert!(Topology::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn union_find_counts_components_and_resets() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.components(), 5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0), "re-union must be a no-op");
+        assert_eq!(uf.components(), 3);
+        assert!(uf.connected(0, 1));
+        assert!(!uf.connected(0, 2));
+        uf.reset(4);
+        assert_eq!(uf.components(), 4);
+        assert!(!uf.connected(0, 1));
+    }
+
+    #[test]
+    fn union_find_connectivity_matches_bfs_across_generators_and_seeds() {
+        // satellite pin: DSU over the edge list agrees with BFS on both the
+        // full generated graph and on random edge-dropped subgraphs
+        let fams = [
+            Topology::Ring,
+            Topology::Path,
+            Topology::Complete,
+            Topology::Star,
+            Topology::Torus { rows: 4, cols: 5 },
+            Topology::ErdosRenyi { p: 0.25 },
+            Topology::RandomGeometric { radius: 0.3 },
+            Topology::SmallWorld { k: 4, beta: 0.2 },
+            Topology::KNearest { k: 3 },
+        ];
+        for (ti, topo) in fams.iter().enumerate() {
+            for seed in 0..4u64 {
+                let mut r = Pcg64::seed(1000 + 10 * ti as u64 + seed);
+                let g = Graph::build(topo, 20, &mut r).unwrap();
+                let mut uf = UnionFind::new(g.n());
+                for (i, j) in g.edges() {
+                    uf.union(i, j);
+                }
+                assert_eq!(uf.components() == 1, g.is_connected(), "{topo:?} seed {seed}");
+                // drop ~40% of edges and compare component structure too
+                let mut sub = Graph::empty(g.n());
+                uf.reset(g.n());
+                for (i, j) in g.edges() {
+                    if !r.bernoulli(0.4) {
+                        sub.add_edge(i, j);
+                        uf.union(i, j);
+                    }
+                }
+                let labels = sub.components();
+                let n_comp = labels.iter().max().map(|m| m + 1).unwrap_or(0);
+                assert_eq!(uf.components(), n_comp, "{topo:?} seed {seed}: subgraph");
+                assert_eq!(uf.components() == 1, sub.is_connected(), "{topo:?} seed {seed}");
+                for i in 0..g.n() {
+                    for j in 0..g.n() {
+                        assert_eq!(
+                            uf.connected(i, j),
+                            labels[i] == labels[j],
+                            "{topo:?} seed {seed}: pair ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_knn_matches_sort_knn() {
+        // the grid path must produce the identical edge set as the sort
+        // oracle, including stitching, at sizes with nontrivial cell layouts
+        for (n, k, seed) in [(150usize, 3usize, 1u64), (400, 3, 2), (400, 5, 3), (701, 2, 4)] {
+            let mut r = Pcg64::seed(seed);
+            let pts: Vec<(f64, f64)> = (0..n).map(|_| (r.next_f64(), r.next_f64())).collect();
+            let a = build_knn_sort(&pts, k);
+            let b = build_knn_grid(&pts, k);
+            assert_eq!(a.edges(), b.edges(), "n={n} k={k} seed={seed}");
+            assert!(b.is_connected(), "n={n} k={k} seed={seed}");
+        }
+    }
+
+    #[test]
+    fn large_knn_builds_sparse_and_connected() {
+        // exercises the grid path well past the sort threshold
+        let n = 3000;
+        let mut r = Pcg64::seed(9);
+        let g = Graph::build(&Topology::KNearest { k: 3 }, n, &mut r).unwrap();
+        let mut uf = UnionFind::new(n);
+        for (i, j) in g.edges() {
+            uf.union(i, j);
+        }
+        assert_eq!(uf.components(), 1);
+        let mean_deg = 2.0 * g.edge_count() as f64 / n as f64;
+        assert!((3.0..=6.5).contains(&mean_deg), "mean degree {mean_deg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "gated")]
+    fn diameter_gated_at_large_n() {
+        let _ = Graph::empty(SMALL_N_LIMIT + 1).diameter();
+    }
+
+    #[test]
+    #[should_panic(expected = "gated")]
+    fn adjacency_gated_at_large_n() {
+        let _ = Graph::empty(SMALL_N_LIMIT + 1).adjacency();
+    }
+
+    #[test]
+    #[should_panic(expected = "gated")]
+    fn to_dot_gated_at_large_n() {
+        let _ = Graph::empty(SMALL_N_LIMIT + 1).to_dot(None);
     }
 }

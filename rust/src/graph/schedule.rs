@@ -16,7 +16,7 @@
 //!   pre-schedule single-graph loop.
 //! - [`NetPlan::Rewire`] — resample the topology family every `every`
 //!   rounds (epoch 0 keeps the base graph, so short runs match `Static`);
-//!   `W` is rebuilt with the configured mixing scheme.
+//!   `W` is rebuilt CSR-first with the configured mixing scheme.
 //! - [`NetPlan::EdgeDropout`] — every round each base edge drops with
 //!   probability `p`; dropped weights are absorbed into both endpoints'
 //!   self-weights, which keeps `W` symmetric and doubly stochastic.
@@ -30,14 +30,19 @@
 //! nodes — is connected, so [`NetView::validation`] holds for every emitted
 //! view; if no admissible mask is found the round falls back to the fully
 //! static view, never to a broken one.
+//!
+//! Sparse-native (§12 in DESIGN.md): the schedule stores `W` in CSR form
+//! ([`SparseW`]) and materializes per-round views by editing CSR rows inside
+//! a caller-owned [`ViewScratch`] — connectivity retries run on an
+//! incremental union-find, absorption walks each row once, and nothing n×n
+//! is ever allocated, so a 10⁵-node federation's schedule costs O(E) per
+//! round.
 
 use crate::config::ExperimentConfig;
-use crate::graph::{Graph, Topology};
-use crate::linalg::Mat;
-use crate::mixing::{self, Scheme, Validation};
+use crate::graph::{Graph, Topology, UnionFind};
+use crate::mixing::{self, Scheme, SparseW, Validation};
 use crate::rng::Pcg64;
 use anyhow::{bail, Result};
-use std::borrow::Cow;
 
 /// RNG stream tags (disjoint from the graph/sampler/init/netsim streams).
 const STREAM_REWIRE: u64 = 0x52E1_17E0;
@@ -108,25 +113,93 @@ pub fn plan_from_config(cfg: &ExperimentConfig) -> Result<NetPlan> {
     }
 }
 
-/// One round's network: the gossip graph, its mixing matrix, and which nodes
-/// participate.  Borrows the schedule's base for static rounds (zero-copy);
-/// owns resampled structures otherwise.
-pub struct NetView<'a> {
-    /// The gossip graph of this round.  Under [`NetPlan::EdgeDropout`] this
-    /// is the kept subgraph; under [`NetPlan::NodeChurn`] it stays the base
-    /// graph and `online` masks participation.
-    pub graph: Cow<'a, Graph>,
-    /// Mixing matrix over all n nodes, symmetric and doubly stochastic
-    /// (offline rows collapse to identity under churn).
-    pub w: Cow<'a, Mat>,
-    /// Per-node participation mask (all `true` except under churn).
-    pub online: Cow<'a, [bool]>,
+/// Grow-only workspace for [`NetworkSchedule::view_into`].  Per-round views
+/// are materialized into these buffers (CSR rows edited in place, retries on
+/// an incremental union-find), so steady-state rounds allocate nothing once
+/// the buffers have reached the base network's size: per-round W is always a
+/// subset of the base entries (dropped/offline weights move onto diagonals),
+/// hence reserving the base nnz bounds every later round.
+#[derive(Clone, Debug)]
+pub struct ViewScratch {
+    /// Resampled topology (rewire epochs only; allocates per epoch).
+    graph: Graph,
+    /// The round's mixing matrix when it differs from the base.
+    w: SparseW,
+    /// Participation mask (churn rounds).
+    online: Vec<bool>,
+    /// Per-directed-adjacency-slot drop marks (edge-drop rounds), parallel
+    /// to the base graph's flattened neighbor lists.
+    dropped: Vec<bool>,
+    /// Prefix offsets of the base graph's neighbor lists into `dropped`.
+    adj_off: Vec<usize>,
+    /// Incremental connectivity for mask retries.
+    dsu: UnionFind,
 }
 
-impl NetView<'_> {
+impl ViewScratch {
+    /// Empty workspace; buffers grow to the base network's size on first
+    /// use and are reused ever after.
+    pub fn new() -> Self {
+        ViewScratch {
+            graph: Graph::empty(0),
+            w: SparseW::empty(),
+            online: Vec::new(),
+            dropped: Vec::new(),
+            adj_off: Vec::new(),
+            dsu: UnionFind::new(0),
+        }
+    }
+
+    /// (Re)build the flattened-adjacency offsets for `g` if its shape
+    /// changed; no-op (and allocation-free) otherwise.
+    fn ensure_adjacency(&mut self, g: &Graph) {
+        let n = g.n();
+        let total: usize = (0..n).map(|i| g.degree(i)).sum();
+        if self.adj_off.len() == n + 1 && self.adj_off[n] == total {
+            return;
+        }
+        self.adj_off.clear();
+        self.adj_off.reserve(n + 1);
+        let mut acc = 0usize;
+        self.adj_off.push(0);
+        for i in 0..n {
+            acc += g.degree(i);
+            self.adj_off.push(acc);
+        }
+        self.dropped.reserve(total.saturating_sub(self.dropped.len()));
+    }
+}
+
+impl Default for ViewScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One round's network: the gossip topology, its CSR mixing matrix, and
+/// which nodes participate.  Every field is borrowed — from the schedule's
+/// base for static rounds (zero-copy) or from the caller's [`ViewScratch`]
+/// for materialized rounds — so reading a view allocates nothing.
+///
+/// The effective gossip structure lives in `w`: dropped edges and offline
+/// neighbors simply have no CSR entry, so [`NetView::sparse_row`] and
+/// [`NetView::active_neighbors_into`] read participation straight off the
+/// rows.  `graph` is the round's base topology (rewire epochs swap it) and
+/// is *not* pruned per round.
+pub struct NetView<'a> {
+    /// The gossip topology this round's `W` was derived from.
+    pub graph: &'a Graph,
+    /// Mixing matrix over all n nodes in CSR form, symmetric and doubly
+    /// stochastic (offline rows collapse to identity under churn).
+    pub w: &'a SparseW,
+    /// Per-node participation mask (all `true` except under churn).
+    pub online: &'a [bool],
+}
+
+impl<'a> NetView<'a> {
     /// Node count.
     pub fn n(&self) -> usize {
-        self.graph.n()
+        self.w.n()
     }
 
     /// Is every node participating this round (no churn)?
@@ -134,50 +207,46 @@ impl NetView<'_> {
         self.online.iter().all(|&b| b)
     }
 
-    /// Row-major f32 copy of `W` (what the compute kernels consume).
+    /// Row-major dense f32 copy of `W` (what the PJRT-style kernels
+    /// consume).  Small-n only (gated) — the debug/test conversion.
     pub fn wf(&self) -> Vec<f32> {
-        mixing::to_f32(self.w.as_ref())
+        self.w.to_dense()
     }
 
     /// Node `i`'s degree-sparse gossip row: `(neighbor index, f32 weight)`
-    /// pairs in ascending index order, keeping exactly the entries that are
-    /// nonzero *after* the f64→f32 conversion — the same entries, in the
-    /// same order, that the dense zero-skipping combine visits, so sparse
-    /// and dense gossip are bitwise-identical (self weight included;
-    /// offline/dropped neighbors carry weight 0 and are excluded).
-    pub fn sparse_row(&self, i: usize) -> (Vec<u32>, Vec<f32>) {
-        let w: &Mat = self.w.as_ref();
-        let mut idx = Vec::new();
-        let mut val = Vec::new();
-        for (j, &x) in w.row(i).iter().enumerate() {
-            let v = x as f32;
-            if v != 0.0 {
-                idx.push(j as u32);
-                val.push(v);
-            }
-        }
-        (idx, val)
+    /// slices in ascending index order, keeping exactly the entries that are
+    /// nonzero after the f64→f32 conversion — the same entries, in the same
+    /// order, that the dense zero-skipping combine visits, so sparse and
+    /// dense gossip are bitwise-identical (self weight included;
+    /// offline/dropped neighbors have no entry).  Borrowed straight from the
+    /// CSR storage: zero-copy, zero-allocation.
+    pub fn sparse_row(&self, i: usize) -> (&'a [u32], &'a [f32]) {
+        self.w.row(i)
     }
 
-    /// This round's gossip partners of node `i`: graph neighbors that are
-    /// online — empty when `i` itself is offline.
-    pub fn active_neighbors(&self, i: usize) -> Vec<usize> {
+    /// Fill `out` with this round's gossip partners of node `i` — the
+    /// surviving off-diagonal entries of its `W` row — empty when `i` itself
+    /// is offline.  Caller-provided scratch; no allocation once `out` has
+    /// capacity.
+    pub fn active_neighbors_into(&self, i: usize, out: &mut Vec<usize>) {
+        out.clear();
         if !self.online[i] {
-            return Vec::new();
+            return;
         }
-        self.graph.neighbors(i).iter().copied().filter(|&j| self.online[j]).collect()
+        let (idx, _) = self.w.row(i);
+        out.extend(idx.iter().map(|&j| j as usize).filter(|&j| j != i));
     }
 
     /// Directed messages per payload kind this round: both directions of
-    /// every kept edge whose endpoints are both online.
+    /// every surviving edge between online endpoints.
     pub fn active_directed_edges(&self) -> u64 {
-        let g: &Graph = self.graph.as_ref();
         let mut count = 0u64;
-        for i in 0..g.n() {
+        for i in 0..self.n() {
             if !self.online[i] {
                 continue;
             }
-            count += g.neighbors(i).iter().filter(|&&j| self.online[j]).count() as u64;
+            let (idx, _) = self.w.row(i);
+            count += idx.iter().filter(|&&j| j as usize != i).count() as u64;
         }
         count
     }
@@ -185,20 +254,37 @@ impl NetView<'_> {
     /// Assumption-1 check of the round's *effective* mixing: the full `W`
     /// when everyone is online, the online principal submatrix under churn
     /// (offline nodes sit out the round as identity rows by construction).
+    /// Test/debug path — allocates.
     pub fn validation(&self) -> Validation {
         if self.all_online() {
-            return mixing::validate(self.w.as_ref());
+            return mixing::validate_sparse(self.w);
         }
-        let w: &Mat = self.w.as_ref();
-        let online: Vec<usize> = (0..self.n()).filter(|&i| self.online[i]).collect();
-        let k = online.len();
-        let mut sub = Mat::zeros(k, k);
-        for (a, &i) in online.iter().enumerate() {
-            for (b, &j) in online.iter().enumerate() {
-                sub[(a, b)] = w[(i, j)];
+        // relabel online nodes densely (order-preserving, so CSR columns
+        // stay ascending) and validate the principal submatrix
+        let n = self.n();
+        let mut relabel = vec![usize::MAX; n];
+        let mut k = 0usize;
+        for (i, slot) in relabel.iter_mut().enumerate() {
+            if self.online[i] {
+                *slot = k;
+                k += 1;
             }
         }
-        mixing::validate(&sub)
+        let mut sub = SparseW::empty();
+        sub.reset(k);
+        for i in 0..n {
+            if !self.online[i] {
+                continue;
+            }
+            let (idx, val) = self.w.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                if self.online[j as usize] {
+                    sub.push_entry(relabel[j as usize] as u32, v);
+                }
+            }
+            sub.seal_row();
+        }
+        mixing::validate_sparse(&sub)
     }
 }
 
@@ -208,7 +294,7 @@ impl NetView<'_> {
 #[derive(Clone, Debug)]
 pub struct NetworkSchedule {
     graph: Graph,
-    w: Mat,
+    w: SparseW,
     plan: NetPlan,
     scheme: Scheme,
     seed: u64,
@@ -218,10 +304,28 @@ pub struct NetworkSchedule {
 impl NetworkSchedule {
     /// Schedule over a validated base `(graph, w)` pair under `plan`;
     /// `scheme` rebuilds W for resampled topologies, `seed` keys every
-    /// per-round draw.
-    pub fn new(graph: Graph, w: Mat, plan: NetPlan, scheme: Scheme, seed: u64) -> Result<Self> {
-        if w.rows != graph.n() || w.cols != graph.n() {
-            bail!("W is {}x{} but the graph has {} nodes", w.rows, w.cols, graph.n());
+    /// per-round draw.  Every off-diagonal entry of `w` must sit on a graph
+    /// edge (the per-round absorption walks rows and adjacency in lockstep).
+    pub fn new(graph: Graph, w: SparseW, plan: NetPlan, scheme: Scheme, seed: u64) -> Result<Self> {
+        if w.n() != graph.n() {
+            bail!("W is {0}x{0} but the graph has {1} nodes", w.n(), graph.n());
+        }
+        for i in 0..graph.n() {
+            let (idx, _) = w.row(i);
+            let nbrs = graph.neighbors(i);
+            let mut p = 0usize;
+            for &j in idx {
+                let j = j as usize;
+                if j == i {
+                    continue;
+                }
+                while p < nbrs.len() && nbrs[p] < j {
+                    p += 1;
+                }
+                if p >= nbrs.len() || nbrs[p] != j {
+                    bail!("W row {i} has weight on ({i},{j}) but the graph has no such edge");
+                }
+            }
         }
         if let NetPlan::Rewire { every, .. } = &plan {
             if *every == 0 {
@@ -243,7 +347,7 @@ impl NetworkSchedule {
     }
 
     /// Build from a config's `net.*` section over an assembled base network.
-    pub fn from_config(cfg: &ExperimentConfig, graph: Graph, w: Mat) -> Result<Self> {
+    pub fn from_config(cfg: &ExperimentConfig, graph: Graph, w: SparseW) -> Result<Self> {
         let plan = plan_from_config(cfg)?;
         let scheme = Scheme::parse(&cfg.mixing)?;
         NetworkSchedule::new(graph, w, plan, scheme, cfg.seed)
@@ -264,6 +368,13 @@ impl NetworkSchedule {
         self.plan == NetPlan::Static
     }
 
+    /// Base mixing matrix nonzero count — what a caller should reserve for
+    /// per-round W copies (every materialized round's nnz is ≤ this, except
+    /// rewire epochs which rebuild from a fresh graph).
+    pub fn base_nnz(&self) -> usize {
+        self.w.nnz()
+    }
+
     /// Cache key for per-round views: rounds with equal keys see the
     /// identical view, so drivers can skip rebuilding `W`.
     pub fn view_key(&self, round: usize) -> u64 {
@@ -275,36 +386,41 @@ impl NetworkSchedule {
     }
 
     fn base_view(&self) -> NetView<'_> {
-        NetView {
-            graph: Cow::Borrowed(&self.graph),
-            w: Cow::Borrowed(&self.w),
-            online: Cow::Borrowed(&self.all_online[..]),
-        }
+        NetView { graph: &self.graph, w: &self.w, online: &self.all_online[..] }
     }
 
     /// The network of communication round `round` (1-based; round 0 /
     /// initialization always sees the base view).  Deterministic in
-    /// `(seed, round)` — no internal state advances.
+    /// `(seed, round)` — no internal state advances; `scratch` is pure
+    /// workspace whose prior contents never influence the result.  Static
+    /// rounds borrow the base untouched; materialized rounds borrow
+    /// `scratch`.
     ///
     /// # Examples
     ///
     /// ```
-    /// use decfl::graph::{Graph, NetPlan, NetworkSchedule, Topology};
-    /// use decfl::mixing::{build, Scheme};
+    /// use decfl::graph::{Graph, NetPlan, NetworkSchedule, Topology, ViewScratch};
+    /// use decfl::mixing::{build_sparse, Scheme};
     /// use decfl::rng::Pcg64;
     ///
     /// let g = Graph::build(&Topology::Ring, 6, &mut Pcg64::seed(1)).unwrap();
-    /// let w = build(&g, Scheme::Metropolis);
+    /// let w = build_sparse(&g, Scheme::Metropolis);
     /// let sched = NetworkSchedule::new(
     ///     g, w, NetPlan::EdgeDropout { p: 0.3 }, Scheme::Metropolis, 7,
     /// ).unwrap();
     ///
-    /// let view = sched.view(3).unwrap();       // pure in (seed, round)
-    /// assert!(view.validation().holds());      // per-round Assumption 1
-    /// let again = sched.view(3).unwrap();      // any caller re-derives it
-    /// assert_eq!(view.w.data, again.w.data);
+    /// let mut scratch = ViewScratch::new();
+    /// let view = sched.view_into(3, &mut scratch).unwrap(); // pure in (seed, round)
+    /// assert!(view.validation().holds());                   // per-round Assumption 1
+    /// let w3 = view.w.clone();
+    /// let mut other = ViewScratch::new();                   // any caller re-derives it
+    /// assert_eq!(&w3, sched.view_into(3, &mut other).unwrap().w);
     /// ```
-    pub fn view(&self, round: usize) -> Result<NetView<'_>> {
+    pub fn view_into<'s>(
+        &'s self,
+        round: usize,
+        scratch: &'s mut ViewScratch,
+    ) -> Result<NetView<'s>> {
         let n = self.graph.n();
         match &self.plan {
             NetPlan::Static => Ok(self.base_view()),
@@ -314,38 +430,94 @@ impl NetworkSchedule {
                     return Ok(self.base_view());
                 }
                 let mut rng = Pcg64::new(self.seed, STREAM_REWIRE + epoch as u64);
-                let g = Graph::build(family, n, &mut rng)?;
-                let w = mixing::build(&g, self.scheme);
+                scratch.graph = Graph::build(family, n, &mut rng)?;
+                mixing::build_sparse_into(&scratch.graph, self.scheme, &mut scratch.w);
                 Ok(NetView {
-                    graph: Cow::Owned(g),
-                    w: Cow::Owned(w),
-                    online: Cow::Borrowed(&self.all_online[..]),
+                    graph: &scratch.graph,
+                    w: &scratch.w,
+                    online: &self.all_online[..],
                 })
             }
             NetPlan::EdgeDropout { p } => {
                 let mut rng = Pcg64::new(self.seed, STREAM_DROP + round as u64);
-                let edges = self.graph.edges();
+                scratch.ensure_adjacency(&self.graph);
                 for _try in 0..MAX_TRIES {
-                    let mut kept = Graph::empty(n);
-                    let mut dropped = Vec::new();
-                    for &(i, j) in &edges {
-                        if rng.bernoulli(*p) {
-                            dropped.push((i, j));
-                        } else {
-                            kept.add_edge(i, j);
+                    scratch.dsu.reset(n);
+                    scratch.dropped.clear();
+                    scratch.dropped.resize(scratch.adj_off[n], false);
+                    let mut any_dropped = false;
+                    // same draw order as the base edge list: i asc, j asc, i < j
+                    for i in 0..n {
+                        for (pos, &j) in self.graph.neighbors(i).iter().enumerate() {
+                            if i >= j {
+                                continue;
+                            }
+                            if rng.bernoulli(*p) {
+                                any_dropped = true;
+                                scratch.dropped[scratch.adj_off[i] + pos] = true;
+                                let rev = self
+                                    .graph
+                                    .neighbors(j)
+                                    .binary_search(&i)
+                                    .expect("adjacency is symmetric");
+                                scratch.dropped[scratch.adj_off[j] + rev] = true;
+                            } else {
+                                scratch.dsu.union(i, j);
+                            }
                         }
                     }
-                    if dropped.is_empty() {
+                    if !any_dropped {
                         return Ok(self.base_view());
                     }
-                    if !kept.is_connected() {
+                    if scratch.dsu.components() != 1 {
                         continue; // redraw: the round must satisfy Assumption 1
                     }
-                    let w = absorb_edges(&self.w, &dropped);
+                    // rebuild W row by row: dropped entries removed, their
+                    // weight f64-absorbed into the diagonal (ascending order,
+                    // matching the dense absorption's per-row accumulation)
+                    scratch.w.reset(n);
+                    scratch.w.reserve_rows_nnz(n, self.w.nnz());
+                    for i in 0..n {
+                        let (bidx, bval) = self.w.row(i);
+                        let nbrs = self.graph.neighbors(i);
+                        let mut absorbed = 0.0f64;
+                        let mut diag = 0.0f64;
+                        let mut p_adj = 0usize;
+                        for (&j, &v) in bidx.iter().zip(bval) {
+                            let j = j as usize;
+                            if j == i {
+                                diag = v as f64;
+                                continue;
+                            }
+                            while nbrs[p_adj] < j {
+                                p_adj += 1;
+                            }
+                            if scratch.dropped[scratch.adj_off[i] + p_adj] {
+                                absorbed += v as f64;
+                            }
+                        }
+                        let new_diag = (diag + absorbed) as f32;
+                        let mut p_adj = 0usize;
+                        for (&j, &v) in bidx.iter().zip(bval) {
+                            let ju = j;
+                            let j = j as usize;
+                            if j == i {
+                                scratch.w.push_entry(ju, new_diag);
+                                continue;
+                            }
+                            while nbrs[p_adj] < j {
+                                p_adj += 1;
+                            }
+                            if !scratch.dropped[scratch.adj_off[i] + p_adj] {
+                                scratch.w.push_entry(ju, v);
+                            }
+                        }
+                        scratch.w.seal_row();
+                    }
                     return Ok(NetView {
-                        graph: Cow::Owned(kept),
-                        w: Cow::Owned(w),
-                        online: Cow::Borrowed(&self.all_online[..]),
+                        graph: &self.graph,
+                        w: &scratch.w,
+                        online: &self.all_online[..],
                     });
                 }
                 Ok(self.base_view()) // no connected subgraph found: full round
@@ -353,19 +525,68 @@ impl NetworkSchedule {
             NetPlan::NodeChurn { p_offline } => {
                 let mut rng = Pcg64::new(self.seed, STREAM_CHURN + round as u64);
                 for _try in 0..MAX_TRIES {
-                    let online: Vec<bool> = (0..n).map(|_| !rng.bernoulli(*p_offline)).collect();
-                    let n_online = online.iter().filter(|&&b| b).count();
+                    scratch.online.clear();
+                    scratch.online.extend((0..n).map(|_| !rng.bernoulli(*p_offline)));
+                    let n_online = scratch.online.iter().filter(|&&b| b).count();
                     if n_online == n {
                         return Ok(self.base_view());
                     }
-                    if n_online < 2 || !induced_connected(&self.graph, &online) {
+                    if n_online < 2 {
                         continue; // redraw: online subnetwork must be connected
                     }
-                    let w = absorb_offline(&self.w, &online);
+                    scratch.dsu.reset(n);
+                    for i in 0..n {
+                        if !scratch.online[i] {
+                            continue;
+                        }
+                        for &j in self.graph.neighbors(i) {
+                            if i < j && scratch.online[j] {
+                                scratch.dsu.union(i, j);
+                            }
+                        }
+                    }
+                    // online nodes form one component; offline are singletons
+                    if scratch.dsu.components() != n - n_online + 1 {
+                        continue;
+                    }
+                    // rebuild W row by row: offline rows collapse to identity,
+                    // online rows drop offline entries and f64-absorb their
+                    // weight into the diagonal (ascending order)
+                    scratch.w.reset(n);
+                    scratch.w.reserve_rows_nnz(n, self.w.nnz());
+                    for u in 0..n {
+                        if !scratch.online[u] {
+                            scratch.w.push_entry(u as u32, 1.0);
+                            scratch.w.seal_row();
+                            continue;
+                        }
+                        let (bidx, bval) = self.w.row(u);
+                        let mut absorbed = 0.0f64;
+                        let mut diag = 0.0f64;
+                        for (&j, &v) in bidx.iter().zip(bval) {
+                            let j = j as usize;
+                            if j == u {
+                                diag = v as f64;
+                            } else if !scratch.online[j] {
+                                absorbed += v as f64;
+                            }
+                        }
+                        let new_diag = (diag + absorbed) as f32;
+                        for (&j, &v) in bidx.iter().zip(bval) {
+                            let ju = j;
+                            let j = j as usize;
+                            if j == u {
+                                scratch.w.push_entry(ju, new_diag);
+                            } else if scratch.online[j] {
+                                scratch.w.push_entry(ju, v);
+                            }
+                        }
+                        scratch.w.seal_row();
+                    }
                     return Ok(NetView {
-                        graph: Cow::Borrowed(&self.graph),
-                        w: Cow::Owned(w),
-                        online: Cow::Owned(online),
+                        graph: &self.graph,
+                        w: &scratch.w,
+                        online: &scratch.online[..],
                     });
                 }
                 Ok(self.base_view()) // no admissible mask: everyone online
@@ -381,9 +602,10 @@ impl NetworkSchedule {
         match &self.plan {
             NetPlan::Rewire { every, .. } => {
                 let mut union = self.graph.clone();
+                let mut scratch = ViewScratch::new();
                 // one representative round per epoch: views are constant inside
                 for round in (1..=rounds).step_by((*every).max(1)) {
-                    let v = self.view(round)?;
+                    let v = self.view_into(round, &mut scratch)?;
                     for (i, j) in v.graph.edges() {
                         union.add_edge(i, j);
                     }
@@ -395,77 +617,14 @@ impl NetworkSchedule {
     }
 }
 
-/// Zero the dropped edges of `w` and absorb their weight into both
-/// endpoints' self-weights — symmetry and double stochasticity preserved.
-fn absorb_edges(w: &Mat, dropped: &[(usize, usize)]) -> Mat {
-    let mut out = w.clone();
-    for &(i, j) in dropped {
-        let wij = out[(i, j)];
-        out[(i, i)] += wij;
-        out[(j, j)] += wij;
-        out[(i, j)] = 0.0;
-        out[(j, i)] = 0.0;
-    }
-    out
-}
-
-/// Collapse offline rows/columns of `w` to identity: each online neighbor
-/// absorbs the lost weight into its self-weight, and the offline row becomes
-/// exactly `e_u` — symmetry and double stochasticity preserved.
-fn absorb_offline(w: &Mat, online: &[bool]) -> Mat {
-    let n = w.rows;
-    let mut out = w.clone();
-    for u in 0..n {
-        if online[u] {
-            continue;
-        }
-        for v in 0..n {
-            if v == u {
-                continue;
-            }
-            let wvu = out[(v, u)];
-            if online[v] && wvu != 0.0 {
-                out[(v, v)] += wvu;
-            }
-            out[(v, u)] = 0.0;
-            out[(u, v)] = 0.0;
-        }
-        out[(u, u)] = 1.0;
-    }
-    out
-}
-
-/// Is the subgraph induced by the online nodes connected?
-fn induced_connected(g: &Graph, online: &[bool]) -> bool {
-    let n = g.n();
-    let total = online.iter().filter(|&&b| b).count();
-    let Some(start) = (0..n).find(|&i| online[i]) else {
-        return false;
-    };
-    let mut seen = vec![false; n];
-    let mut queue = std::collections::VecDeque::from([start]);
-    seen[start] = true;
-    let mut count = 1;
-    while let Some(u) = queue.pop_front() {
-        for &v in g.neighbors(u) {
-            if online[v] && !seen[v] {
-                seen[v] = true;
-                count += 1;
-                queue.push_back(v);
-            }
-        }
-    }
-    count == total
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::Topology;
 
-    fn base(n: usize, seed: u64, topo: &Topology) -> (Graph, Mat) {
+    fn base(n: usize, seed: u64, topo: &Topology) -> (Graph, SparseW) {
         let g = Graph::build(topo, n, &mut Pcg64::new(seed, 0x6EA9)).unwrap();
-        let w = mixing::build(&g, Scheme::Metropolis);
+        let w = mixing::build_sparse(&g, Scheme::Metropolis);
         (g, w)
     }
 
@@ -483,13 +642,30 @@ mod tests {
         ]
     }
 
+    /// The round's surviving gossip edges, read off the CSR off-diagonals.
+    fn active_edges(v: &NetView) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in 0..v.n() {
+            let (idx, _) = v.sparse_row(i);
+            for &j in idx {
+                let j = j as usize;
+                if i < j {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
     #[test]
     fn static_view_is_the_base_network_every_round() {
         let s = schedule(NetPlan::Static, 12, 7);
+        let mut scratch = ViewScratch::new();
         for round in [1usize, 2, 17, 100] {
-            let v = s.view(round).unwrap();
-            assert_eq!(v.graph.edges(), s.graph.edges());
-            assert_eq!(v.w.data, s.w.data);
+            let v = s.view_into(round, &mut scratch).unwrap();
+            // zero-copy: the static view *is* the base, not a clone of it
+            assert!(std::ptr::eq(v.graph, &s.graph));
+            assert!(std::ptr::eq(v.w, &s.w));
             assert!(v.all_online());
             assert_eq!(s.view_key(round), 0);
         }
@@ -500,41 +676,40 @@ mod tests {
         for seed in [1u64, 7, 23] {
             for plan in plans() {
                 let s = schedule(plan.clone(), 12, seed);
+                let mut scratch = ViewScratch::new();
                 for round in 1..=12 {
-                    let v = s.view(round).unwrap();
+                    let v = s.view_into(round, &mut scratch).unwrap();
                     let val = v.validation();
                     assert!(
                         val.holds(),
                         "{} seed {seed} round {round}: {val:?}",
                         plan.label()
                     );
-                    // the full-n W stays symmetric + doubly stochastic too
-                    let w: &Mat = v.w.as_ref();
-                    assert!(w.is_symmetric(1e-12), "{} round {round}", plan.label());
-                    for i in 0..v.n() {
-                        let sum: f64 = w.row(i).iter().sum();
-                        assert!(
-                            (sum - 1.0).abs() < 1e-9,
-                            "{} round {round} row {i} sums to {sum}",
-                            plan.label()
-                        );
-                    }
+                    // the full-n W stays symmetric + row-stochastic too
+                    let full = mixing::validate_sparse(v.w);
+                    assert!(full.symmetric, "{} round {round}", plan.label());
+                    assert!(full.rows_stochastic, "{} round {round}", plan.label());
+                    assert!(full.nonnegative, "{} round {round}", plan.label());
                 }
             }
         }
     }
 
     #[test]
-    fn views_are_deterministic_in_seed_and_round() {
+    fn views_are_deterministic_in_seed_and_round_and_scratch_history() {
         for plan in plans() {
             let s = schedule(plan.clone(), 10, 42);
             let s2 = schedule(plan.clone(), 10, 42);
+            // one reused scratch vs a fresh scratch every round: prior
+            // contents must never leak into the emitted view
+            let mut reused = ViewScratch::new();
             for round in 1..=8 {
-                let a = s.view(round).unwrap();
-                let b = s2.view(round).unwrap();
+                let a = s.view_into(round, &mut reused).unwrap();
+                let mut fresh = ViewScratch::new();
+                let b = s2.view_into(round, &mut fresh).unwrap();
                 assert_eq!(a.graph.edges(), b.graph.edges(), "{}", plan.label());
-                assert_eq!(a.w.data, b.w.data, "{}", plan.label());
-                assert_eq!(&a.online[..], &b.online[..], "{}", plan.label());
+                assert_eq!(a.w, b.w, "{}", plan.label());
+                assert_eq!(a.online, b.online, "{}", plan.label());
             }
         }
     }
@@ -546,19 +721,21 @@ mod tests {
             12,
             7,
         );
+        let mut scratch = ViewScratch::new();
         // epoch 0 (rounds 1..=3) is the base graph
         for round in 1..=3 {
-            assert_eq!(s.view(round).unwrap().graph.edges(), s.graph.edges());
+            let v = s.view_into(round, &mut scratch).unwrap();
+            assert_eq!(v.graph.edges(), s.graph.edges());
         }
         // inside an epoch the view is constant; across epochs it may change
-        let e1a = s.view(4).unwrap();
-        let e1b = s.view(6).unwrap();
-        assert_eq!(e1a.graph.edges(), e1b.graph.edges());
+        let e1a = s.view_into(4, &mut scratch).unwrap().graph.edges();
+        let e1b = s.view_into(6, &mut scratch).unwrap().graph.edges();
+        assert_eq!(e1a, e1b);
         assert_eq!(s.view_key(4), s.view_key(6));
         assert_ne!(s.view_key(3), s.view_key(4));
         let mut any_differs = false;
         for round in 4..=24 {
-            if s.view(round).unwrap().graph.edges() != s.graph.edges() {
+            if s.view_into(round, &mut scratch).unwrap().graph.edges() != s.graph.edges() {
                 any_differs = true;
             }
         }
@@ -569,27 +746,36 @@ mod tests {
     fn edge_dropout_emits_connected_subgraphs_with_absorbed_weight() {
         let s = schedule(NetPlan::EdgeDropout { p: 0.4 }, 12, 3);
         let base_edges = s.graph.edge_count();
+        let base_diag = |i: usize| {
+            let (idx, val) = s.w.row(i);
+            val[idx.binary_search(&(i as u32)).unwrap()]
+        };
+        let mut scratch = ViewScratch::new();
         let mut any_dropped = false;
         for round in 1..=10 {
-            let v = s.view(round).unwrap();
-            assert!(v.graph.is_connected(), "round {round}");
-            assert!(v.graph.edge_count() <= base_edges);
-            // kept subgraph only contains base edges
-            for (i, j) in v.graph.edges() {
+            let v = s.view_into(round, &mut scratch).unwrap();
+            let kept = active_edges(&v);
+            assert!(kept.len() <= base_edges);
+            // the surviving edges form a connected graph over base edges only
+            let mut uf = UnionFind::new(v.n());
+            for &(i, j) in &kept {
                 assert!(s.graph.has_edge(i, j), "round {round}: phantom edge ({i},{j})");
+                uf.union(i, j);
             }
-            if v.graph.edge_count() < base_edges {
+            assert_eq!(uf.components(), 1, "round {round}");
+            if kept.len() < base_edges {
                 any_dropped = true;
-                // dropped edges have zero weight; diagonal absorbed the mass
-                let w: &Mat = v.w.as_ref();
+                // dropped edges have no entry; the diagonal absorbed the mass
                 for (i, j) in s.graph.edges() {
-                    if !v.graph.has_edge(i, j) {
-                        assert_eq!(w[(i, j)], 0.0);
-                        assert!(w[(i, i)] > s.w[(i, i)]);
+                    if !kept.contains(&(i, j)) {
+                        let (idx, val) = v.sparse_row(i);
+                        assert!(idx.binary_search(&(j as u32)).is_err(), "round {round}");
+                        let diag = val[idx.binary_search(&(i as u32)).unwrap()];
+                        assert!(diag > base_diag(i), "round {round} node {i}");
                     }
                 }
             }
-            assert_eq!(v.active_directed_edges(), 2 * v.graph.edge_count() as u64);
+            assert_eq!(v.active_directed_edges(), 2 * kept.len() as u64);
         }
         assert!(any_dropped, "p=0.4 never dropped an edge in 10 rounds");
     }
@@ -597,27 +783,29 @@ mod tests {
     #[test]
     fn churn_collapses_offline_rows_to_identity() {
         let s = schedule(NetPlan::NodeChurn { p_offline: 0.3 }, 12, 5);
+        let mut scratch = ViewScratch::new();
+        let mut nbrs = Vec::new();
         let mut any_offline = false;
         for round in 1..=12 {
-            let v = s.view(round).unwrap();
-            let w: &Mat = v.w.as_ref();
+            let v = s.view_into(round, &mut scratch).unwrap();
             for i in 0..v.n() {
+                let (idx, val) = v.sparse_row(i);
                 if !v.online[i] {
                     any_offline = true;
-                    assert_eq!(w[(i, i)], 1.0, "round {round} node {i}");
-                    for j in 0..v.n() {
-                        if j != i {
-                            assert_eq!(w[(i, j)], 0.0);
-                            assert_eq!(w[(j, i)], 0.0);
-                        }
+                    assert_eq!(idx, &[i as u32], "round {round} node {i}");
+                    assert_eq!(val, &[1.0f32], "round {round} node {i}");
+                    v.active_neighbors_into(i, &mut nbrs);
+                    assert!(nbrs.is_empty());
+                } else {
+                    // online rows never reference an offline neighbor
+                    for &j in idx {
+                        assert!(v.online[j as usize], "round {round} edge ({i},{j})");
                     }
-                    assert!(v.active_neighbors(i).is_empty());
-                }
-            }
-            // active edges never touch an offline endpoint
-            for i in 0..v.n() {
-                for j in v.active_neighbors(i) {
-                    assert!(v.online[i] && v.online[j]);
+                    v.active_neighbors_into(i, &mut nbrs);
+                    for &j in &nbrs {
+                        assert!(v.online[i] && v.online[j]);
+                        assert!(s.graph.has_edge(i, j));
+                    }
                 }
             }
         }
@@ -629,8 +817,10 @@ mod tests {
         for plan in plans() {
             let s = schedule(plan.clone(), 10, 11);
             let union = s.union_graph(20).unwrap();
+            let mut scratch = ViewScratch::new();
             for round in 1..=20 {
-                for (i, j) in s.view(round).unwrap().graph.edges() {
+                let v = s.view_into(round, &mut scratch).unwrap();
+                for (i, j) in active_edges(&v) {
                     assert!(
                         union.has_edge(i, j),
                         "{} round {round}: edge ({i},{j}) missing from union",
@@ -643,16 +833,26 @@ mod tests {
 
     #[test]
     fn degenerate_probabilities_fall_back_to_static() {
+        let mut scratch = ViewScratch::new();
         let s = schedule(NetPlan::EdgeDropout { p: 0.0 }, 8, 7);
-        let v = s.view(3).unwrap();
-        assert_eq!(v.graph.edges(), s.graph.edges());
+        let v = s.view_into(3, &mut scratch).unwrap();
+        assert!(std::ptr::eq(v.w, &s.w));
         let s = schedule(NetPlan::NodeChurn { p_offline: 0.0 }, 8, 7);
-        assert!(s.view(3).unwrap().all_online());
+        assert!(s.view_into(3, &mut scratch).unwrap().all_online());
         // p ~ 1 never finds an admissible mask → full static round
         let s = schedule(NetPlan::EdgeDropout { p: 0.999 }, 8, 7);
-        let v = s.view(1).unwrap();
-        assert!(v.graph.is_connected());
+        let v = s.view_into(1, &mut scratch).unwrap();
         assert!(v.validation().holds());
+    }
+
+    #[test]
+    fn inconsistent_base_w_is_rejected() {
+        let (g, _) = base(8, 1, &Topology::Ring);
+        // W built over a *different* graph has entries off the ring's edges
+        let (g2, w2) = base(8, 2, &Topology::ErdosRenyi { p: 0.5 });
+        drop(g2);
+        let err = NetworkSchedule::new(g, w2, NetPlan::Static, Scheme::Metropolis, 1);
+        assert!(err.is_err());
     }
 
     #[test]

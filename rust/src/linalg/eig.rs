@@ -123,6 +123,67 @@ pub fn second_eigenvalue_magnitude(w: &Mat) -> f64 {
     vals.into_iter().map(f64::abs).fold(0.0, f64::max)
 }
 
+/// Power-iteration estimate of [`second_eigenvalue_magnitude`] needing only
+/// a matvec `apply(x, out)` (out = W·x) — the large-n path where Jacobi's
+/// O(n³) dense sweeps are unaffordable.  The consensus mode is deflated by
+/// subtracting the mean after every application (1/√n is the known
+/// eigenvector of a symmetric doubly stochastic W), and the iteration runs
+/// on W² so negative eigenvalues cannot cancel: the Rayleigh quotient
+/// converges to λ₂² and the result is its square root.  Deterministic
+/// (fixed-seed start vector, residual-based stop); agreement with the Jacobi
+/// oracle is pinned to 1e-9 for n ≤ 200 in the property tests.
+pub fn second_eig_magnitude_power(n: usize, mut apply: impl FnMut(&[f64], &mut [f64])) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    let deflate = |v: &mut [f64]| {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        for e in v.iter_mut() {
+            *e -= mean;
+        }
+    };
+    let mut rng = crate::rng::Pcg64::seed(0x5EC0_0E16);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    deflate(&mut x);
+    let nx = x.iter().map(|e| e * e).sum::<f64>().sqrt();
+    if nx <= f64::MIN_POSITIVE {
+        return 0.0;
+    }
+    for e in x.iter_mut() {
+        *e /= nx;
+    }
+    let mut tmp = vec![0.0; n];
+    let mut y = vec![0.0; n];
+    let mut rho = 0.0;
+    const MAX_ITERS: usize = 200_000;
+    for _ in 0..MAX_ITERS {
+        apply(&x, &mut tmp);
+        deflate(&mut tmp);
+        apply(&tmp, &mut y);
+        deflate(&mut y); // re-deflate: guards f64 drift back into consensus
+        // Rayleigh quotient of W² at the unit vector x
+        rho = x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>();
+        let res = x
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (b - rho * a) * (b - rho * a))
+            .sum::<f64>()
+            .sqrt();
+        let ny = y.iter().map(|e| e * e).sum::<f64>().sqrt();
+        if ny <= 1e-150 {
+            return 0.0; // W² annihilates the deflated space (λ₂ = 0)
+        }
+        for (xi, yi) in x.iter_mut().zip(&y) {
+            *xi = yi / ny;
+        }
+        // |ρ - λ₂²| ≤ residual for symmetric operators
+        if res <= 1e-13 * rho.abs().max(1e-6) {
+            break;
+        }
+    }
+    rho.max(0.0).sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,7 +9,7 @@
 
 pub mod eig;
 
-pub use eig::{sym_eig, SymEig};
+pub use eig::{second_eig_magnitude_power, sym_eig, SymEig};
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -24,7 +24,16 @@ pub struct Mat {
 
 impl Mat {
     /// All-zero `rows x cols` matrix.
+    ///
+    /// Debug builds refuse huge *square* allocations: an n×n matrix at
+    /// network scale is always a bug (the sparse-native stack never
+    /// materializes one), while tall-skinny record matrices stay legal.
     pub fn zeros(rows: usize, cols: usize) -> Self {
+        debug_assert!(
+            !(rows == cols && rows > 8192),
+            "Mat::zeros({rows}, {cols}): dense square matrices this large are gated — \
+             the network axis must stay sparse (SparseW / power iteration)"
+        );
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 

@@ -8,8 +8,12 @@
 //! consensus-rate knob the topology ablation (EXP-A2) sweeps.
 
 use crate::graph::Graph;
-use crate::linalg::{eig::second_eigenvalue_magnitude, Mat};
+use crate::linalg::{eig::second_eigenvalue_magnitude, second_eig_magnitude_power, Mat};
 use anyhow::{bail, Result};
+
+/// Below this n, [`validate_sparse`] cross-checks |λ₂| with the dense Jacobi
+/// oracle; above it, only the sparse power iteration runs.
+const JACOBI_ORACLE_MAX_N: usize = 256;
 
 /// Weighting schemes for building `W` from a graph.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +102,73 @@ impl Validation {
     }
 }
 
+/// Build the mixing matrix directly in CSR form, skipping the dense `Mat`.
+/// Entry-for-entry bitwise identical to `SparseW::from_mat(&build(g, s))`
+/// (same f64 op order per row, same f64→f32 cast, same nonzero filter) —
+/// pinned by the property tests — but O(E) in time and memory, so it is the
+/// only W constructor usable at 10⁵⁺ nodes.
+pub fn build_sparse(g: &Graph, scheme: Scheme) -> SparseW {
+    let mut out = SparseW::empty();
+    build_sparse_into(g, scheme, &mut out);
+    out
+}
+
+/// [`build_sparse`] into caller-owned storage (grow-only; no allocation once
+/// `out`'s buffers have reached the graph's size).
+pub fn build_sparse_into(g: &Graph, scheme: Scheme, out: &mut SparseW) {
+    let n = g.n();
+    out.reset(n);
+    out.reserve_rows_nnz(n, 2 * g.edge_count() + n);
+    // per row: f64 weights in the dense build's exact op order (ascending
+    // neighbors; diagonal = 1 - sum), diagonal merged into sorted position,
+    // each entry cast to f32 and kept iff nonzero — matching `from_dense`
+    match scheme {
+        Scheme::Metropolis | Scheme::LazyMetropolis => {
+            let lazy = scheme == Scheme::LazyMetropolis;
+            for i in 0..n {
+                let di = g.degree(i);
+                let mut off_sum = 0.0f64;
+                for &j in g.neighbors(i) {
+                    off_sum += 1.0 / (1.0 + di.max(g.degree(j)) as f64);
+                }
+                let diag = if lazy { (1.0 - off_sum) * 0.5 + 0.5 } else { 1.0 - off_sum };
+                let mut placed = false;
+                for &j in g.neighbors(i) {
+                    if !placed && j > i {
+                        out.push_entry(i as u32, diag as f32);
+                        placed = true;
+                    }
+                    let w = 1.0 / (1.0 + di.max(g.degree(j)) as f64);
+                    out.push_entry(j as u32, if lazy { (w * 0.5) as f32 } else { w as f32 });
+                }
+                if !placed {
+                    out.push_entry(i as u32, diag as f32);
+                }
+                out.seal_row();
+            }
+        }
+        Scheme::MaxDegree => {
+            let dmax = (0..n).map(|i| g.degree(i)).max().unwrap_or(0) as f64;
+            let wij = 1.0 / (1.0 + dmax);
+            for i in 0..n {
+                let diag = 1.0 - g.degree(i) as f64 * wij;
+                let mut placed = false;
+                for &j in g.neighbors(i) {
+                    if !placed && j > i {
+                        out.push_entry(i as u32, diag as f32);
+                        placed = true;
+                    }
+                    out.push_entry(j as u32, wij as f32);
+                }
+                if !placed {
+                    out.push_entry(i as u32, diag as f32);
+                }
+                out.seal_row();
+            }
+        }
+    }
+}
+
 /// Check `W` against Assumption 1: symmetric, `W 1 = 1`, `|λ₂| < 1`.
 pub fn validate(w: &Mat) -> Validation {
     let n = w.rows;
@@ -105,6 +176,49 @@ pub fn validate(w: &Mat) -> Validation {
     let rows_stochastic = (0..n).all(|i| (w.row(i).iter().sum::<f64>() - 1.0).abs() < 1e-9);
     let nonnegative = w.data.iter().all(|&x| x >= -1e-12);
     let second_eig = second_eigenvalue_magnitude(w);
+    Validation {
+        symmetric,
+        rows_stochastic,
+        nonnegative,
+        second_eig,
+        spectral_gap: 1.0 - second_eig,
+    }
+}
+
+/// Check a CSR `W` against Assumption 1 without densifying: symmetry by
+/// binary-searching the transposed entry (weights must match exactly — both
+/// sides cast from the same f64 formula), row sums in f64 with an
+/// entry-count-scaled f32 tolerance, and |λ₂| from the Jacobi oracle below
+/// [`JACOBI_ORACLE_MAX_N`] or sparse power iteration above it.
+pub fn validate_sparse(w: &SparseW) -> Validation {
+    let n = w.n();
+    let mut symmetric = true;
+    let mut rows_stochastic = true;
+    let mut nonnegative = true;
+    for i in 0..n {
+        let (idx, val) = w.row(i);
+        let mut sum = 0.0f64;
+        for (&j, &v) in idx.iter().zip(val) {
+            sum += v as f64;
+            if (v as f64) < -1e-12 {
+                nonnegative = false;
+            }
+            let (jid, jval) = w.row(j as usize);
+            match jid.binary_search(&(i as u32)) {
+                Ok(p) if jval[p] == v => {}
+                _ => symmetric = false,
+            }
+        }
+        // f32 weights: each entry carries ~2⁻²⁴ relative rounding
+        if (sum - 1.0).abs() > 1e-6 + idx.len() as f64 * 1e-7 {
+            rows_stochastic = false;
+        }
+    }
+    let second_eig = if n <= JACOBI_ORACLE_MAX_N {
+        second_eigenvalue_magnitude(&w.to_mat())
+    } else {
+        w.second_eig_magnitude()
+    };
     Validation {
         symmetric,
         rows_stochastic,
@@ -182,6 +296,110 @@ impl SparseW {
     pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
         let (a, b) = (self.off[i] as usize, self.off[i + 1] as usize);
         (&self.idx[a..b], &self.val[a..b])
+    }
+
+    /// Empty 0×0 matrix, ready for [`SparseW::reset`] row-by-row building.
+    pub fn empty() -> Self {
+        SparseW { n: 0, off: vec![0], idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Start over as an n×n matrix with no rows sealed yet (grow-only: the
+    /// existing buffers are reused).
+    pub(crate) fn reset(&mut self, n: usize) {
+        assert!(n <= u32::MAX as usize, "SparseW indexes rows with u32");
+        self.n = n;
+        self.off.clear();
+        self.off.push(0);
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Pre-size the buffers for `n` rows / `nnz` entries so subsequent
+    /// builds stay allocation-free.
+    pub(crate) fn reserve_rows_nnz(&mut self, n: usize, nnz: usize) {
+        self.off.reserve((n + 1).saturating_sub(self.off.len()));
+        self.idx.reserve(nnz.saturating_sub(self.idx.len()));
+        self.val.reserve(nnz.saturating_sub(self.val.len()));
+    }
+
+    /// Append one entry to the row under construction; zeros are dropped to
+    /// match the `from_dense` nonzero filter.  Columns must arrive ascending.
+    pub(crate) fn push_entry(&mut self, j: u32, v: f32) {
+        if v != 0.0 {
+            self.idx.push(j);
+            self.val.push(v);
+        }
+    }
+
+    /// Close the row under construction.
+    pub(crate) fn seal_row(&mut self) {
+        self.off.push(self.idx.len() as u32);
+    }
+
+    /// Overwrite self with `src`'s contents, reusing capacity (no allocation
+    /// once the buffers have grown to `src`'s size).
+    pub(crate) fn copy_from(&mut self, src: &SparseW) {
+        self.n = src.n;
+        self.off.clear();
+        self.off.extend_from_slice(&src.off);
+        self.idx.clear();
+        self.idx.extend_from_slice(&src.idx);
+        self.val.clear();
+        self.val.extend_from_slice(&src.val);
+    }
+
+    /// Scatter to a dense row-major f32 matrix.  Small-n only (gated): this
+    /// is the debug/test conversion, never the hot path.
+    pub fn to_dense(&self) -> Vec<f32> {
+        assert!(
+            self.n <= crate::graph::SMALL_N_LIMIT,
+            "SparseW::to_dense is gated to n <= {} (got n = {})",
+            crate::graph::SMALL_N_LIMIT,
+            self.n
+        );
+        let mut out = vec![0.0f32; self.n * self.n];
+        for i in 0..self.n {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                out[i * self.n + j as usize] = v;
+            }
+        }
+        out
+    }
+
+    /// Lift to the f64 `Mat` the dense analysis substrates consume — entries
+    /// are the stored f32 weights, exactly.  Small-n only (gated).
+    pub fn to_mat(&self) -> Mat {
+        assert!(
+            self.n <= crate::graph::SMALL_N_LIMIT,
+            "SparseW::to_mat is gated to n <= {} (got n = {})",
+            crate::graph::SMALL_N_LIMIT,
+            self.n
+        );
+        let mut out = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                out[(i, j as usize)] = v as f64;
+            }
+        }
+        out
+    }
+
+    /// |λ₂| via sparse power iteration (f64 matvec over the f32 weights):
+    /// the large-n spectral-gap path.  For the Jacobi-oracle comparison use
+    /// `second_eigenvalue_magnitude(&w.to_mat())` at small n.
+    pub fn second_eig_magnitude(&self) -> f64 {
+        second_eig_magnitude_power(self.n, |x, out| {
+            for i in 0..self.n {
+                let (idx, val) = self.row(i);
+                let mut acc = 0.0f64;
+                for (&j, &v) in idx.iter().zip(val) {
+                    acc += v as f64 * x[j as usize];
+                }
+                out[i] = acc;
+            }
+        })
     }
 }
 
@@ -345,5 +563,108 @@ mod tests {
         assert_eq!(Scheme::parse("lazy").unwrap(), Scheme::LazyMetropolis);
         assert_eq!(Scheme::parse("maxdeg").unwrap(), Scheme::MaxDegree);
         assert!(Scheme::parse("nope").is_err());
+    }
+
+    #[test]
+    fn csr_build_bitwise_equals_dense_build_across_families_and_schemes() {
+        // satellite pin: the sparse-native constructor is entry-for-entry
+        // bitwise identical to densify-then-sparsify, for every family ×
+        // scheme pair (SparseW derives PartialEq over off/idx/val)
+        let fams = [
+            Topology::Ring,
+            Topology::Path,
+            Topology::Complete,
+            Topology::Star,
+            Topology::Torus { rows: 4, cols: 5 },
+            Topology::ErdosRenyi { p: 0.3 },
+            Topology::RandomGeometric { radius: 0.35 },
+            Topology::SmallWorld { k: 4, beta: 0.2 },
+            Topology::KNearest { k: 3 },
+        ];
+        for (ti, topo) in fams.iter().enumerate() {
+            for scheme in [Scheme::Metropolis, Scheme::LazyMetropolis, Scheme::MaxDegree] {
+                for seed in 0..3 {
+                    let g = build_graph(topo, 20, 50 + 10 * ti as u64 + seed);
+                    let via_dense = SparseW::from_mat(&build(&g, scheme));
+                    let direct = build_sparse(&g, scheme);
+                    assert_eq!(direct, via_dense, "{topo:?} {scheme:?} seed {seed}");
+                    // and the into-variant reuses storage without divergence
+                    let mut reused = SparseW::empty();
+                    build_sparse_into(&g, scheme, &mut reused);
+                    build_sparse_into(&g, scheme, &mut reused);
+                    assert_eq!(reused, via_dense, "{topo:?} {scheme:?} seed {seed}: reuse");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_sparse_agrees_with_dense_validate() {
+        for scheme in [Scheme::Metropolis, Scheme::LazyMetropolis, Scheme::MaxDegree] {
+            let g = build_graph(&Topology::ErdosRenyi { p: 0.3 }, 20, 7);
+            let w = build(&g, scheme);
+            let sp = build_sparse(&g, scheme);
+            let vd = validate(&w);
+            let vs = validate_sparse(&sp);
+            assert!(vs.holds(), "{scheme:?}: {vs:?}");
+            assert!(vs.symmetric && vs.rows_stochastic && vs.nonnegative);
+            // λ₂ agrees up to the f64→f32 weight rounding
+            assert!(
+                (vs.second_eig - vd.second_eig).abs() < 1e-6,
+                "{scheme:?}: sparse {} vs dense {}",
+                vs.second_eig,
+                vd.second_eig
+            );
+        }
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi_oracle_to_1e9() {
+        // satellite pin: sparse power iteration within 1e-9 of the Jacobi
+        // oracle on the same f32-weight matrix, for n up to 200
+        let cases = [
+            (Topology::Ring, 50),
+            (Topology::Ring, 200),
+            (Topology::Star, 64),
+            (Topology::Torus { rows: 0, cols: 0 }, 100),
+            (Topology::ErdosRenyi { p: 0.08 }, 150),
+            (Topology::KNearest { k: 3 }, 200),
+        ];
+        for (ti, (topo, n)) in cases.iter().enumerate() {
+            for scheme in [Scheme::Metropolis, Scheme::LazyMetropolis, Scheme::MaxDegree] {
+                let g = build_graph(topo, *n, 80 + ti as u64);
+                let sp = build_sparse(&g, scheme);
+                let power = sp.second_eig_magnitude();
+                let jacobi = second_eigenvalue_magnitude(&sp.to_mat());
+                assert!(
+                    (power - jacobi).abs() < 1e-9,
+                    "{topo:?} {scheme:?} n={n}: power {power} vs jacobi {jacobi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrips_to_dense_and_mat() {
+        let g = build_graph(&Topology::KNearest { k: 3 }, 20, 3);
+        let w = build(&g, Scheme::Metropolis);
+        let sp = build_sparse(&g, Scheme::Metropolis);
+        assert_eq!(sp.to_dense(), to_f32(&w));
+        let m = sp.to_mat();
+        for i in 0..20 {
+            for j in 0..20 {
+                assert_eq!(m[(i, j)], to_f32(&w)[i * 20 + j] as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn copy_from_reuses_capacity() {
+        let g = build_graph(&Topology::Ring, 10, 0);
+        let src = build_sparse(&g, Scheme::Metropolis);
+        let mut dst = SparseW::empty();
+        dst.reserve_rows_nnz(src.n(), src.nnz());
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
     }
 }

@@ -55,7 +55,7 @@ fn allocs_here() -> u64 {
     ALLOCS.with(|c| c.get())
 }
 
-fn steady_round_allocs(algo: AlgoKind) -> u64 {
+fn steady_round_allocs(algo: AlgoKind, net_plan: &str) -> u64 {
     let mut cfg = ExperimentConfig::default();
     cfg.n = 6;
     cfg.d = 42;
@@ -68,6 +68,9 @@ fn steady_round_allocs(algo: AlgoKind) -> u64 {
     cfg.backend = Backend::Native;
     cfg.threads = 1;
     cfg.records_per_hospital = 60;
+    cfg.net_plan = net_plan.into();
+    cfg.edge_drop = if net_plan == "edge-drop" { 0.25 } else { 0.0 };
+    cfg.churn = if net_plan == "churn" { 0.25 } else { 0.0 };
     let asm = assemble(&cfg).unwrap();
     let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m).with_threads(1);
     let engine = RoundEngine::from_config(&cfg);
@@ -95,12 +98,28 @@ fn steady_round_allocs(algo: AlgoKind) -> u64 {
 
 #[test]
 fn steady_state_dsgd_round_is_allocation_free() {
-    let n = steady_round_allocs(AlgoKind::FdDsgd);
+    let n = steady_round_allocs(AlgoKind::FdDsgd, "static");
     assert_eq!(n, 0, "fd-dsgd steady round performed {n} heap allocations");
 }
 
 #[test]
 fn steady_state_dsgt_round_is_allocation_free() {
-    let n = steady_round_allocs(AlgoKind::FdDsgt);
+    let n = steady_round_allocs(AlgoKind::FdDsgt, "static");
     assert_eq!(n, 0, "fd-dsgt steady round performed {n} heap allocations");
+}
+
+// The sparse network stack's warm-path claim: even when every round derives
+// a FRESH view (edge dropout / node churn re-absorb CSR rows each round),
+// the grow-only ViewScratch + reserved CSR cache keep steady rounds off the
+// allocator entirely — the round-1 warm-up sizes everything once.
+#[test]
+fn steady_state_rounds_under_edge_dropout_are_allocation_free() {
+    let n = steady_round_allocs(AlgoKind::FdDsgd, "edge-drop");
+    assert_eq!(n, 0, "edge-drop steady round performed {n} heap allocations");
+}
+
+#[test]
+fn steady_state_rounds_under_node_churn_are_allocation_free() {
+    let n = steady_round_allocs(AlgoKind::FdDsgt, "churn");
+    assert_eq!(n, 0, "churn steady round performed {n} heap allocations");
 }

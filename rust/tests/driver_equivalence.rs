@@ -306,7 +306,7 @@ fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
 
     let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
     let model = decfl::algo::native::NativeModel::new(cfg.d, cfg.hidden);
-    let wf: Vec<f32> = decfl::mixing::to_f32(&asm.w); // captured once, pre-refactor style
+    let wf: Vec<f32> = asm.w.to_dense(); // captured once, pre-refactor style
     let q = cfg.algo.effective_q(cfg.q);
     let local = q - 1;
     let rounds = cfg.total_steps.div_ceil(q);

@@ -10,7 +10,7 @@
 
 use decfl::algo::native::{NativeModel, Workspace};
 use decfl::config::ExperimentConfig;
-use decfl::graph::{Graph, NetworkSchedule, Topology};
+use decfl::graph::{Graph, NetworkSchedule, Topology, ViewScratch};
 use decfl::mixing::{self, Scheme, SparseW};
 use decfl::rng::Pcg64;
 
@@ -49,6 +49,8 @@ fn sparse_combine_bitwise_equals_dense_for_every_family_and_scheme() {
             let dense = mixing::to_f32(&w);
             let sparse = SparseW::from_mat(&w);
             assert_eq!(sparse.n(), n);
+            // the CSR-first builder must agree bitwise with the dense route
+            assert_eq!(mixing::build_sparse(&g, scheme), sparse, "{topo:?} {scheme:?}");
             let thetas = rand_vec(&mut rng, n * p, 0.5);
             for i in 0..n {
                 let (idx, val) = sparse.row(i);
@@ -87,21 +89,22 @@ fn schedule_sparse_rows_match_dense_views_for_every_plan() {
         cfg.churn = 0.3;
         let mut rng = Pcg64::seed(5);
         let g = Graph::build(&Topology::ErdosRenyi { p: 0.4 }, cfg.n, &mut rng).unwrap();
-        let w = mixing::build(&g, Scheme::Metropolis);
+        let w = mixing::build_sparse(&g, Scheme::Metropolis);
         let sched = NetworkSchedule::from_config(&cfg, g, w).unwrap();
+        let mut scratch = ViewScratch::new();
         for round in 1..=8 {
-            let view = sched.view(round).unwrap();
+            let view = sched.view_into(round, &mut scratch).unwrap();
             let dense = view.wf();
             let sparse = SparseW::from_dense(cfg.n, &dense);
             for i in 0..cfg.n {
                 let (vi, vv) = view.sparse_row(i);
                 let (si, sv) = sparse.row(i);
-                assert_eq!(&vi[..], si, "{plan} round {round} row {i}: indices");
-                assert_eq!(&vv[..], sv, "{plan} round {round} row {i}: weights");
+                assert_eq!(vi, si, "{plan} round {round} row {i}: indices");
+                assert_eq!(vv, sv, "{plan} round {round} row {i}: weights");
                 // offline nodes collapse to the identity row
                 if !view.online[i] {
-                    assert_eq!(vi, vec![i as u32], "{plan} round {round} row {i}");
-                    assert_eq!(vv, vec![1.0f32], "{plan} round {round} row {i}");
+                    assert_eq!(vi, &[i as u32][..], "{plan} round {round} row {i}");
+                    assert_eq!(vv, &[1.0f32][..], "{plan} round {round} row {i}");
                 }
             }
         }
