@@ -1,0 +1,107 @@
+//! EXP-AS1 bench: the wall-clock-vs-accuracy frontier — synchronous barrier
+//! vs asynchronous event-driven gossip under a lognormal straggler plan, one
+//! shared base network, fused mode, native backend.
+//!
+//! Reports each driver's *simulated* time to the sync oracle's final
+//! accuracy − 1 point (the BENCH_7.json quantity) and the host wall-clock
+//! per run.  Async runs under the matched simulated-time budget
+//! (`sim_budget_s = sync.sim_time_s`): the barrier-free driver gets the
+//! wall-clock the barriered run spent and spends it on more, cheaper,
+//! stale-mixed cycles.  The structural claim is asserted, not just printed:
+//! async must reach the target strictly inside the horizon the sync run
+//! needed to produce it — the barrier pays Σ_r max_i (every round as slow
+//! as its slowest participant) while the event clock pays each node only
+//! its own work.
+//!
+//!     cargo bench --bench bench_async
+//!     DECFL_FULL=1  cargo bench --bench bench_async   # acceptance scale, n=200
+//!     DECFL_SMOKE=1 cargo bench --bench bench_async   # CI compile+run check
+
+use decfl::benchutil::{bench, budget, full_scale, report, section, smoke};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+use decfl::experiments::asynchrony;
+
+fn main() -> anyhow::Result<()> {
+    let (n, steps, q) = if full_scale() {
+        (200, 3_200, 32) // the n ≥ 200 acceptance frontier (100 rounds)
+    } else if smoke() {
+        (6, 384, 32)
+    } else {
+        (48, 1_920, 32)
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.algo = AlgoKind::FdDsgd;
+    cfg.n = n;
+    cfg.hidden = 16;
+    cfg.m = 10;
+    cfg.q = q;
+    cfg.total_steps = steps;
+    cfg.eval_every = 1; // per-checkpoint accuracy: the time-to-target axis
+    cfg.records_per_hospital = 120;
+    cfg.topology = "er".into();
+    cfg.compute_plan = "lognormal".into();
+    // q·s_step (32 ms) dominates delivery latency and σ=1.5 gives the
+    // lognormal tail real weight — the regime where the barrier bites
+    // (DESIGN.md §13)
+    cfg.compute_sigma = 1.5;
+
+    println!(
+        "sync barrier vs async event clock, fd-dsgd fused/native, lognormal σ={}: \
+         n={n} steps={steps} q={q} ({} rounds)",
+        cfg.compute_sigma,
+        steps.div_ceil(q)
+    );
+
+    // ---- the frontier itself (shared cohort, shared base network) ----
+    let rows = asynchrony::run(&cfg, &[0.0], &[cfg.topology.clone()])?;
+    asynchrony::print_table(&rows);
+    for f in asynchrony::findings(&rows) {
+        println!("finding: {f}");
+    }
+    let (sync_row, async_row) = (&rows[0], &rows[1]);
+    assert!(
+        async_row.t_to_target_s < sync_row.sim_time_s,
+        "async {}s must reach sync-final − 1pt inside the sync run's {}s horizon",
+        async_row.t_to_target_s,
+        sync_row.sim_time_s
+    );
+    assert!(
+        async_row.final_accuracy >= sync_row.final_accuracy - 0.0151,
+        "async final accuracy {} fell more than 1.5pt below sync's {}",
+        async_row.final_accuracy,
+        sync_row.final_accuracy
+    );
+    println!(
+        "matched-budget frontier: async hits the target {:.2}x inside sync's horizon \
+         (async {:.2}s vs sync run {:.2}s; sync's own time-to-target {:.2}s)",
+        sync_row.sim_time_s / async_row.t_to_target_s,
+        async_row.t_to_target_s,
+        sync_row.sim_time_s,
+        sync_row.t_to_target_s
+    );
+
+    // ---- host wall-clock per driver (event-queue overhead check) ----
+    let asm = assemble(&cfg)?;
+    for driver in ["sync", "async"] {
+        let mut c = cfg.clone();
+        c.driver = driver.into();
+        c.eval_every = usize::MAX / 2; // time the rounds, not eval
+        section(&format!("driver {driver}"));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(&c, &asm).unwrap());
+        });
+        report(&format!("{driver} full run ({} rounds)", steps.div_ceil(q)), &t);
+    }
+
+    // optional frozen-baseline dump (BENCH_7.json convention)
+    if let Ok(path) = std::env::var("DECFL_BENCH_JSON") {
+        let json = asynchrony::rows_json(&rows);
+        std::fs::write(&path, json.to_string())?;
+        println!("wrote frontier rows to {path}");
+    }
+    Ok(())
+}

@@ -161,6 +161,18 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     if let Some(v) = args.get_str("mode") {
         cfg.mode = crate::config::Mode::parse(v)?;
     }
+    if let Some(v) = args.get_str("driver") {
+        cfg.driver = v.to_string();
+    }
+    if let Some(v) = args.get_f64("staleness-s")? {
+        cfg.staleness_s = v;
+    }
+    if let Some(v) = args.get_f64("sim-budget-s")? {
+        cfg.sim_budget_s = v;
+    }
+    if let Some(v) = args.get_str("net-validate") {
+        cfg.net_validate = v.to_string();
+    }
     if let Some(v) = args.get_str("backend") {
         cfg.backend = crate::config::Backend::parse(v)?;
     }
@@ -274,6 +286,21 @@ mod tests {
         assert!(a.provided("topology"));
         assert!(a.provided("verbose"));
         assert!(!a.provided("mixing"));
+    }
+
+    #[test]
+    fn driver_overrides_apply() {
+        let a = parse(&[
+            "train", "--driver", "async", "--staleness-s", "0.25", "--net-validate", "approx",
+            "--sim-budget-s", "1.5",
+        ]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.driver, "async");
+        assert!((cfg.staleness_s - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.net_validate, "approx");
+        assert!((cfg.sim_budget_s - 1.5).abs() < 1e-12);
+        assert!(a.finish().is_ok());
     }
 
     #[test]

@@ -140,6 +140,28 @@ pub struct ExperimentConfig {
     /// Execution driver: fused whole-network rounds or per-node actors.
     pub mode: Mode,
 
+    // -- round driver (see engine::asynchrony) --
+    /// `sync` (the pinned oracle: global round barrier) or `async`
+    /// (event-driven: each node gossips on its own simulated clock,
+    /// applying possibly-stale neighbor states — AD-PSGD-style).
+    pub driver: String,
+    /// Async staleness cap in simulated seconds: a cached neighbor state
+    /// older than this at apply time is dropped (its mixing weight folds
+    /// into the receiver's self-weight).  0 = uncapped, the AD-PSGD default.
+    pub staleness_s: f64,
+    /// Async simulated-time budget in seconds: when > 0, nodes keep cycling
+    /// until the *next* cycle would finish past this virtual-clock horizon
+    /// (instead of stopping after `total_steps / q` cycles).  This is the
+    /// matched-wall-clock frontier comparison: give the barrier-free driver
+    /// the same simulated time the barriered run spent, not the same cycle
+    /// count.  0 = cycle-count budget (the default).
+    pub sim_budget_s: f64,
+    /// Assumption-1 validation effort at assembly: full|approx|skip
+    /// (`mixing::ValidateLevel`).  Exact symmetry / row-sum / non-negativity
+    /// checks run at every level; only the |λ₂| estimate is budgeted or
+    /// skipped — the BENCH_6 large-n construction cost.
+    pub net_validate: String,
+
     // -- topology / mixing --
     /// Hospital-graph family (`graph::Topology::parse`).
     pub topology: String,
@@ -226,6 +248,10 @@ impl Default for ExperimentConfig {
             total_steps: 10_000,
             eval_every: 1,
             mode: Mode::Fused,
+            driver: "sync".into(),
+            staleness_s: 0.0,
+            sim_budget_s: 0.0,
+            net_validate: "full".into(),
             topology: "knn".into(),
             mixing: "metropolis".into(),
             net_plan: "static".into(),
@@ -277,6 +303,10 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize("algo.total_steps")? { self.total_steps = v; }
         if let Some(v) = doc.get_usize("algo.eval_every")? { self.eval_every = v; }
         if let Some(v) = doc.get_str("algo.mode") { self.mode = Mode::parse(v)?; }
+        if let Some(v) = doc.get_str("run.driver") { self.driver = v.to_string(); }
+        if let Some(v) = doc.get_f64("run.staleness_s")? { self.staleness_s = v; }
+        if let Some(v) = doc.get_f64("run.sim_budget_s")? { self.sim_budget_s = v; }
+        if let Some(v) = doc.get_str("net.validate") { self.net_validate = v.to_string(); }
         if let Some(v) = doc.get_str("graph.topology") { self.topology = v.to_string(); }
         if let Some(v) = doc.get_str("graph.mixing") { self.mixing = v.to_string(); }
         if let Some(v) = doc.get_str("net.plan") { self.net_plan = v.to_string(); }
@@ -318,8 +348,22 @@ impl ExperimentConfig {
         if self.q == 0 {
             bail!("q must be >= 1");
         }
+        match self.driver.as_str() {
+            "sync" | "async" => {}
+            other => bail!("unknown run.driver `{other}` (sync|async)"),
+        }
+        if !self.staleness_s.is_finite() || self.staleness_s < 0.0 {
+            bail!("staleness_s must be a finite value >= 0 (0 = uncapped)");
+        }
+        if !self.sim_budget_s.is_finite() || self.sim_budget_s < 0.0 {
+            bail!("sim_budget_s must be a finite value >= 0 (0 = cycle-count budget)");
+        }
+        if self.sim_budget_s > 0.0 && self.driver != "async" {
+            bail!("sim_budget_s only applies to run.driver = async (the sync oracle is round-bounded)");
+        }
         crate::graph::Topology::parse(&self.topology)?;
         crate::mixing::Scheme::parse(&self.mixing)?;
+        crate::mixing::ValidateLevel::parse(&self.net_validate)?;
         crate::graph::schedule::plan_from_config(self)?;
         crate::engine::stragglers::plan_from_config(self)?;
         crate::compress::Spec::parse(&self.compress, self.topk_frac)?;
@@ -467,6 +511,47 @@ mod tests {
         c.compute_plan = "fixed-tiers".into();
         c.compute_tiers = "0.5,2.0".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn driver_and_validate_overlay_and_defaults() {
+        // defaults: the pinned sync oracle, uncapped staleness, full checks
+        let c = ExperimentConfig::default();
+        assert_eq!(c.driver, "sync");
+        assert_eq!(c.staleness_s, 0.0);
+        assert_eq!(c.net_validate, "full");
+        assert!(c.validate().is_ok());
+        let dir = std::env::temp_dir().join(format!("decfl_drv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("drv.toml");
+        std::fs::write(
+            &path,
+            "[run]\ndriver = \"async\"\nstaleness_s = 0.5\n[net]\nvalidate = \"approx\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.driver, "async");
+        assert!((cfg.staleness_s - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.net_validate, "approx");
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+        // bad values are rejected at validate
+        let mut c = ExperimentConfig::default();
+        c.driver = "turbo".into();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.staleness_s = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.net_validate = "fast".into();
+        assert!(c.validate().is_err());
+        // a time budget is an async-driver knob; silently ignoring it on the
+        // sync oracle would misreport the frontier
+        let mut c = ExperimentConfig::default();
+        c.sim_budget_s = 1.0;
+        assert!(c.validate().is_err());
+        c.driver = "async".into();
+        assert!(c.validate().is_ok());
     }
 
     #[test]

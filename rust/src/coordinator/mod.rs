@@ -36,7 +36,8 @@ pub struct Assembled {
     /// Its validated mixing matrix (Assumption 1), stored sparse (CSR) so
     /// assembly never materializes an n×n array.
     pub w: crate::mixing::SparseW,
-    /// `1 − |λ₂|` of `w` — the consensus-rate knob.
+    /// `1 − |λ₂|` of `w` — the consensus-rate knob.  NaN when the config
+    /// set `net.validate = skip` (the spectrum was never estimated).
     pub spectral_gap: f64,
 }
 
@@ -59,7 +60,8 @@ pub fn assemble(cfg: &ExperimentConfig) -> Result<Assembled> {
         bail!("generated graph is disconnected — Assumption 1 violated");
     }
     let w = mixing::build_sparse(&graph, Scheme::parse(&cfg.mixing)?);
-    let v = mixing::validate_sparse(&w);
+    let level = mixing::ValidateLevel::parse(&cfg.net_validate)?;
+    let v = mixing::validate_sparse_with(&w, level);
     if !v.holds() {
         bail!("mixing matrix violates Assumption 1: {v:?}");
     }
@@ -93,8 +95,19 @@ pub fn run(cfg: &ExperimentConfig) -> Result<RunLog> {
 pub fn run_on(cfg: &ExperimentConfig, asm: &Assembled) -> Result<RunLog> {
     let eval_compute = make_compute(cfg)?;
     match cfg.algo {
+        AlgoKind::Centralized | AlgoKind::FedAvg if cfg.driver == "async" => {
+            bail!(
+                "`{}` runs the synchronous baseline protocol and has no async \
+                 gossip driver; drop --driver async or pick a gossip algorithm \
+                 (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.algo.name()
+            )
+        }
         AlgoKind::Centralized => baselines::centralized(cfg, eval_compute.as_ref(), &asm.ds),
         AlgoKind::FedAvg => baselines::fedavg(cfg, eval_compute.as_ref(), &asm.ds),
+        _ if cfg.driver == "async" => {
+            crate::engine::asynchrony::train(cfg, eval_compute.as_ref(), &asm.ds, &asm.graph, &asm.w)
+        }
         _ => match cfg.mode {
             Mode::Fused => fused::train(cfg, eval_compute.as_ref(), &asm.ds, &asm.graph, &asm.w),
             Mode::Actors => {

@@ -1,0 +1,1065 @@
+//! Asynchronous event-driven gossip runtime — training without the global
+//! round barrier (DESIGN.md §13).
+//!
+//! The synchronous engine advances every hospital in lockstep: round `r`
+//! cannot start until the slowest participant of round `r − 1` arrives, so
+//! under heterogeneous compute the whole fleet pays `max_i τ_i·s/speed_i`
+//! per round.  This module drops that barrier.  Each node runs on its own
+//! simulated clock: after finishing its τ_i local steps it *gossips and
+//! moves on* — it broadcasts its current θ (and the DSGT tracker ϑ) to the
+//! neighbors its round-`g` network view names, applies whatever neighbor
+//! states have already *arrived* (possibly stale, AD-PSGD-style), and
+//! immediately starts its next cycle.  Nobody ever waits for anybody.
+//!
+//! **Virtual-time event queue.**  The runtime is a discrete-event simulator:
+//! a binary min-heap of events keyed by `(t_us, node, seq)` where `t_us` is
+//! integer microseconds of virtual time, `node` the acting/receiving node,
+//! and `seq` a globally monotone sequence number assigned in deterministic
+//! push order.  The integer key makes the ordering total (no f64 ties), and
+//! the seq tie-break makes replays *bitwise*-deterministic: the same seed
+//! pops the same events in the same order, so the same f32 arithmetic runs
+//! in the same sequence — across runs and across native-backend thread
+//! counts alike (pinned by `tests/async_driver.rs`).
+//!
+//! **Clock model.**  Node `i`'s cycle `g` (1-based, the async analogue of a
+//! communication round) occupies `τ_i(g)·s_step/speed_i(g)` virtual seconds
+//! of compute — the same `(seed, round, node)`-keyed [`ComputeSchedule`]
+//! quantities the sync drivers consult, so a plan means the same thing under
+//! either driver.  A message put on the wire at `t` arrives at
+//! `t + latency + wire_bytes/bandwidth`: per-message delivery latency from
+//! the same [`LinkModel`] the analytic accountant charges.  Bytes and
+//! message counts come from the accountant's new per-message charge path
+//! ([`Accountant::comm_message`]); the *reported* `sim_time_s` is the event
+//! clock itself (links run in parallel; the accountant's serialized
+//! link-occupancy total is not wall-clock here).
+//!
+//! **Staleness semantics.**  A receiver keeps only the latest message per
+//! neighbor.  At mix time the compacted CSR row is re-weighted: neighbors
+//! whose newest state is missing or older than `run.staleness_s` fold their
+//! weight into the receiver's self-weight — exactly how churn's offline rows
+//! collapse to identity — so every applied row stays row-stochastic and the
+//! fixed point stays a consensus.  `staleness_s = 0` (the default) means
+//! uncapped: any received state is usable.  The update equations are the
+//! sync strategies' own (eq. 2/3 with the CHOCO difference form under
+//! compression), with two deliberate differences.  First, there is **no
+//! FedNova τ-reweighting** — τ-weights normalize per-*round* displacement
+//! against a shared barrier, and without a barrier each node's clock already
+//! charges its true work (DESIGN.md §13 discusses why reweighting is moot
+//! here).  Second, the **learning rate keys on the AD-PSGD global iteration
+//! counter** (`fleet cycles done / n + 1`), not the node's own cycle count:
+//! a per-node schedule lets a rare heavy-tail straggler hold α near α₀
+//! forever and re-inject fresh-start gradient noise into an otherwise
+//! converged fleet.  Under uniform compute the two counters coincide
+//! exactly (lockstep completion, node-order tie-break), so this only
+//! changes heterogeneous runs.
+//!
+//! **Cycle budget vs time budget.**  By default every node runs
+//! `total_steps / q` cycles — the sync round count, the apples-to-apples
+//! *per-cycle* comparison.  With `run.sim_budget_s > 0` nodes instead keep
+//! cycling until the *next* cycle would finish past that virtual-clock
+//! horizon.  This is the matched-wall-clock frontier (EXP-AS1): give the
+//! barrier-free driver the simulated time the barriered run spent and let
+//! it spend the window on more, cheaper, stale-mixed cycles.  Per-cycle
+//! async progress is *worse* than a sync round's (stale neighbor states
+//! propagate gradient information late); the barrier-free clock buys back
+//! more than the difference when q·s_step dominates delivery latency and
+//! the straggler tail is heavy — and not otherwise, which is why the
+//! frontier experiment pins the regime explicitly.
+//!
+//! **What is pinned, what is movable.**  The synchronous engine remains the
+//! oracle: `run.driver = "sync"` (the default) never routes through this
+//! module, and every default trajectory stays bitwise-identical.  The async
+//! axis composes with the net plan (per-cycle views by `view_key`), the
+//! compression subsystem (`(seed, cycle, node, kind)`-keyed messages,
+//! error feedback included), and the compute plan (per-cycle τ and speed).
+//! Evaluation samples the *whole fleet's* θ stack at virtual-time
+//! checkpoints: when the minimum completed-cycle count crosses the eval
+//! cadence — the async analogue of "round r finished everywhere".
+
+use crate::algo::native::NativeModel;
+use crate::algo::{add_diff, axpy};
+use crate::compress::{add_residual, decode_into, residual_update, GossipComm, MsgKey};
+use crate::config::{ExperimentConfig, Mode};
+use crate::coordinator::compute::Compute;
+use crate::coordinator::sampler::{init_theta, NodeSampler};
+use crate::data::FederatedDataset;
+use crate::graph::{Graph, NetworkSchedule, ViewScratch};
+use crate::metrics::{round_metrics, RunLog};
+use crate::mixing::SparseW;
+use crate::netsim::{analytic::Accountant, LinkModel, PayloadKind};
+use anyhow::{bail, Result};
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::rc::Rc;
+
+use super::{ComputeSchedule, RoundEngine};
+
+/// Virtual seconds → integer microseconds (the heap's total-order clock).
+fn to_us(s: f64) -> u64 {
+    (s * 1e6).round() as u64
+}
+
+// ------------------------------------------------------------- events ----
+
+/// What an event does when it fires.
+enum Action {
+    /// Node `node` finishes its next cycle's compute: run the local steps,
+    /// mix whatever neighbor states have arrived, update, and broadcast.
+    Cycle,
+    /// A gossip message from `from` arrives at `node`.
+    Deliver {
+        /// Sending node.
+        from: usize,
+        /// Decoded θ payload (what every receiver would decode from the
+        /// wire — x̂ under compression, the true θ otherwise).  `Rc` so one
+        /// broadcast allocates once, not once per neighbor.
+        theta: Rc<Vec<f32>>,
+        /// Decoded tracker payload (DSGT only).
+        tracker: Option<Rc<Vec<f32>>>,
+        /// Virtual send time — staleness is measured from here.
+        sent_us: u64,
+    },
+}
+
+/// One heap entry.  Ordering is on `(t_us, node, seq)` only — `seq` is
+/// assigned in deterministic single-threaded push order, so ties at equal
+/// virtual time break identically on every replay.
+struct Event {
+    t_us: u64,
+    node: u32,
+    seq: u64,
+    action: Action,
+}
+
+impl Event {
+    fn key(&self) -> (u64, u32, u64) {
+        (self.t_us, self.node, self.seq)
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    /// Reversed: `BinaryHeap` is a max-heap, we want earliest-first.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.key().cmp(&self.key())
+    }
+}
+
+// -------------------------------------------------------------- nodes ----
+
+/// Latest state received from one neighbor (newer sends replace older).
+struct InMsg {
+    theta: Rc<Vec<f32>>,
+    tracker: Option<Rc<Vec<f32>>>,
+    sent_us: u64,
+}
+
+/// One hospital's training state on its own clock.
+struct Node {
+    theta: Vec<f32>,
+    /// DSGT tracker ϑ and previous gradient (empty for DSGD).
+    y_tr: Vec<f32>,
+    g_prev: Vec<f32>,
+    sampler: NodeSampler,
+    /// Error-feedback residuals (empty unless compressing with EF).
+    e_theta: Vec<f32>,
+    e_y: Vec<f32>,
+    /// Cycles completed so far; the next cycle is `done + 1`.
+    done: u64,
+    /// Newest message per sending neighbor.
+    inbox: BTreeMap<usize, InMsg>,
+    /// Cached slice of the node's current network view (same caching as the
+    /// sync drivers' `refresh_net`, keyed per node because nodes sit in
+    /// different rounds).
+    net_key: Option<u64>,
+    online_now: bool,
+    nbrs: Vec<usize>,
+    widx: Vec<u32>,
+    wval: Vec<f32>,
+}
+
+/// Everything [`train`] returns plus the replay/staleness instrumentation
+/// the determinism and staleness-bound tests pin.
+pub struct AsyncReport {
+    /// The metric log (what [`train`] returns).
+    pub log: RunLog,
+    /// Final θ stack `[n, p]`.
+    pub theta: Vec<f32>,
+    /// Running FNV-style hash over every popped event key `(t_us, node,
+    /// seq)` — two runs that pop the same events in the same order agree.
+    pub trace_hash: u64,
+    /// Oldest neighbor state ever applied, in virtual µs (0 if none).
+    pub max_applied_age_us: u64,
+    /// Neighbor states applied across all cycles.
+    pub applied: u64,
+    /// Row entries folded into self-weight (missing or over the cap).
+    pub folded: u64,
+    /// Virtual time of the last completed cycle, µs.
+    pub final_t_us: u64,
+}
+
+// ---------------------------------------------------------- simulator ----
+
+/// Reusable per-event scratch (one copy for the whole fleet — the event
+/// loop is single-threaded, so nothing here is per-node).
+struct Scratch {
+    lrs: Vec<f32>,
+    lx: Vec<f32>,
+    ly: Vec<f32>,
+    bx: Vec<f32>,
+    by: Vec<f32>,
+    /// Stacked neighbor states `[n, p]` the sparse combine reads.
+    stacked: Vec<f32>,
+    /// Per-row-entry keep flags for the current compaction.
+    keep: Vec<bool>,
+    /// The compacted (fresh-neighbors-only) mixing row.
+    cw_idx: Vec<u32>,
+    cw_val: Vec<f32>,
+    vbuf: Vec<f32>,
+    xhat_own: Vec<f32>,
+    yhat_own: Vec<f32>,
+    view: ViewScratch,
+    eval_stack: Vec<f32>,
+}
+
+struct Sim<'a> {
+    cfg: &'a ExperimentConfig,
+    compute: &'a dyn Compute,
+    ds: &'a FederatedDataset,
+    net: NetworkSchedule,
+    csched: ComputeSchedule,
+    comm: GossipComm,
+    acct: Accountant,
+    nodes: Vec<Node>,
+    scratch: Scratch,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    n: usize,
+    p: usize,
+    q: usize,
+    local: usize,
+    rounds: u64,
+    eval_every: u64,
+    use_tracker: bool,
+    sched: crate::algo::LrSchedule,
+    /// Per-kind encoded wire sizes (θ, and ϑ for DSGT).
+    kind_bytes: Vec<u64>,
+    /// Staleness cap in virtual µs (`None` = uncapped).
+    cap_us: Option<u64>,
+    /// Simulated-time budget in virtual µs (`None` = cycle-count budget).
+    budget_us: Option<u64>,
+    /// Fleet-total completed cycles — the AD-PSGD global iteration counter
+    /// that keys the learning-rate schedule (`events / n + 1`).  Under
+    /// uniform compute every node's `events / n + 1` equals its own cycle
+    /// count exactly (lockstep completion, node-order tie-break), so the
+    /// global counter is bitwise-identical to per-node counting there; it
+    /// only diverges under heterogeneous plans, where it stops rare slow
+    /// nodes from re-injecting α₀-scale gradient noise forever.
+    events: u64,
+    // --- checkpointing ---
+    min_done: u64,
+    at_min: usize,
+    /// Σ_{g ≤ min_done} Σ_i τ_i(g) — the hetero `local_steps` metric.
+    work_through: u64,
+    log: RunLog,
+    started: std::time::Instant,
+    // --- instrumentation ---
+    trace_hash: u64,
+    max_applied_age_us: u64,
+    applied: u64,
+    folded: u64,
+    final_t_us: u64,
+}
+
+impl Sim<'_> {
+    /// Refresh node `i`'s cached view for its cycle `round` (no-op while the
+    /// schedule's view key is unchanged — the per-node twin of the sync
+    /// drivers' `refresh_net`).
+    fn refresh_net(&mut self, i: usize, round: usize) -> Result<()> {
+        let key = self.net.view_key(round);
+        if self.nodes[i].net_key == Some(key) {
+            return Ok(());
+        }
+        let view = self.net.view_into(round, &mut self.scratch.view)?;
+        let node = &mut self.nodes[i];
+        node.online_now = view.online[i];
+        view.active_neighbors_into(i, &mut node.nbrs);
+        let (widx, wval) = view.sparse_row(i);
+        node.widx.clear();
+        node.widx.extend_from_slice(widx);
+        node.wval.clear();
+        node.wval.extend_from_slice(wval);
+        node.net_key = Some(key);
+        Ok(())
+    }
+
+    /// Virtual seconds node `i`'s cycle `g` spends computing: τ gradient
+    /// steps at the node's scheduled speed — the per-node quantity whose
+    /// *maximum* a synchronous round charges.
+    fn cycle_s(&self, g: usize, i: usize) -> f64 {
+        self.csched.tau(g, i) as f64 * self.cfg.compute_s_per_step / self.csched.speed(g, i)
+    }
+
+    fn push(&mut self, t_us: u64, node: usize, action: Action) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { t_us, node: node as u32, seq, action });
+    }
+
+    /// Evaluate the whole fleet at virtual time `t_us`, logged as checkpoint
+    /// `m` (the cycle count every node has completed).
+    fn eval_at(&mut self, m: u64, t_us: u64) -> Result<()> {
+        let p = self.p;
+        for (i, node) in self.nodes.iter().enumerate() {
+            self.scratch.eval_stack[i * p..(i + 1) * p].copy_from_slice(&node.theta);
+        }
+        let eval = self.compute.eval_full(&self.scratch.eval_stack, &self.ds.shards)?;
+        let mut snap = self.acct.snapshot();
+        // the event clock IS the wall clock here; the accountant's
+        // serialized total is link occupancy (see the module docs)
+        snap.sim_time_s = t_us as f64 / 1e6;
+        let steps = if self.csched.is_uniform() {
+            m * self.q as u64
+        } else {
+            self.work_through / self.n as u64
+        };
+        self.log.push(round_metrics(m, steps, eval, snap, self.started.elapsed().as_secs_f64()));
+        Ok(())
+    }
+
+    /// Advance the fleet-minimum cycle counter after node `i` finished a
+    /// cycle at `t_us`, firing eval checkpoints for every cadence crossing.
+    fn advance_min(&mut self, old_done: u64, t_us: u64) -> Result<()> {
+        if old_done != self.min_done {
+            return Ok(());
+        }
+        self.at_min -= 1;
+        while self.at_min == 0 && self.min_done < self.rounds {
+            self.min_done += 1;
+            if !self.csched.is_uniform() {
+                self.work_through += self.csched.local_work(self.min_done as usize);
+            }
+            if self.min_done % self.eval_every == 0 || self.min_done == self.rounds {
+                self.eval_at(self.min_done, t_us)?;
+                self.final_t_us = t_us;
+            }
+            let m = self.min_done;
+            self.at_min = self.nodes.iter().filter(|nd| nd.done == m).count();
+        }
+        Ok(())
+    }
+
+    /// Encode one outgoing payload stream of cycle `g` and return what the
+    /// wire delivers.  Under compression this is the per-stream twin of the
+    /// sync drivers' encode step — same helpers, same `(seed, cycle, node,
+    /// kind)` key — writing the node's own mix row into `hat`; uncompressed
+    /// sends ship the raw vector.
+    #[allow(clippy::too_many_arguments)]
+    fn encode_stream(
+        comm: &GossipComm,
+        g: usize,
+        i: usize,
+        kind: PayloadKind,
+        data: &[f32],
+        e: &mut [f32],
+        vbuf: &mut [f32],
+        hat: &mut [f32],
+    ) -> Rc<Vec<f32>> {
+        match &comm.comp {
+            Some(comp) => {
+                if comm.error_feedback {
+                    add_residual(data, e, vbuf);
+                } else {
+                    vbuf.copy_from_slice(data);
+                }
+                let enc = comp.encode(vbuf, MsgKey::new(comm.seed, g, i, kind));
+                decode_into(&enc, hat);
+                if comm.error_feedback {
+                    residual_update(vbuf, hat, e);
+                }
+                Rc::new(hat.to_vec())
+            }
+            None => Rc::new(data.to_vec()),
+        }
+    }
+
+    /// Node `i` finishes cycle `g = done + 1` at virtual time `t_us`:
+    /// local steps → mix arrived neighbor states → eq. 2/3 update →
+    /// fire-and-forget broadcast → schedule the next cycle.
+    fn cycle(&mut self, i: usize, t_us: u64) -> Result<()> {
+        let m = self.cfg.m;
+        let d = self.ds.d;
+        let g = (self.nodes[i].done + 1) as usize;
+        // learning rate keys on the *global* iteration counter (AD-PSGD);
+        // samplers, τ/speed, net views and message keys stay per-node `g`
+        let g_lr = (self.events / self.n as u64) as usize + 1;
+        self.events += 1;
+
+        // ---- local phase: the same Q−1 batches every driver draws ----
+        if self.local > 0 {
+            self.sched.local_lrs_into(g_lr, self.q, &mut self.scratch.lrs);
+            let node = &mut self.nodes[i];
+            node.sampler.batches(
+                &self.ds.shards[i],
+                self.local,
+                &mut self.scratch.lx,
+                &mut self.scratch.ly,
+            );
+            // stragglers use only their τ_i − 1 prefix (sampler streams stay
+            // plan-independent, §7); no τ-weight rescale — each node's clock
+            // already charges its true work (module docs)
+            let li = if self.csched.is_uniform() {
+                self.local
+            } else {
+                (self.csched.tau(g, i) - 1).min(self.local)
+            };
+            if li > 0 {
+                let (t2, _) = self.compute.local_steps(
+                    &node.theta,
+                    &self.scratch.lx[..li * m * d],
+                    &self.scratch.ly[..li * m],
+                    &self.scratch.lrs[..li],
+                )?;
+                self.nodes[i].theta = t2;
+            }
+        }
+
+        self.refresh_net(i, g)?;
+        let lr = self.sched.comm_lr(g_lr, self.q);
+
+        if !self.nodes[i].online_now {
+            // offline this cycle (node churn): draw-and-discard the comm
+            // batch so the (seed, row)-keyed sampler stream stays aligned
+            // with every other driver and plan (§7), skip the exchange
+            let node = &mut self.nodes[i];
+            node.sampler.batch(&self.ds.shards[i], &mut self.scratch.bx, &mut self.scratch.by);
+        } else {
+            self.exchange(i, g, t_us, lr)?;
+        }
+
+        // ---- bookkeeping: cycle done, checkpoint, next cycle ----
+        let old_done = self.nodes[i].done;
+        self.nodes[i].done = old_done + 1;
+        self.advance_min(old_done, t_us)?;
+        let next = t_us + to_us(self.cycle_s(g + 1, i));
+        let more = match self.budget_us {
+            // matched-time frontier: cycle while the next completion still
+            // lands inside the simulated-time budget
+            Some(b) => next <= b,
+            None => self.nodes[i].done < self.rounds,
+        };
+        if more {
+            self.push(next, i, Action::Cycle);
+        }
+        Ok(())
+    }
+
+    /// The online communication step of cycle `g`: encode/broadcast, fold
+    /// stale-or-missing neighbors into the self-weight, mix through the
+    /// compacted CSR row, and apply the eq. 2/3 update (difference form
+    /// under compression) — the sync strategies' arithmetic, verbatim.
+    fn exchange(&mut self, i: usize, g: usize, t_us: u64, lr: f32) -> Result<()> {
+        let p = self.p;
+        let compressing = self.comm.enabled();
+
+        // ---- encode the outgoing payloads (own mix rows under compression) ----
+        let (theta_pl, tracker_pl) = {
+            let node = &mut self.nodes[i];
+            let theta_pl = Self::encode_stream(
+                &self.comm,
+                g,
+                i,
+                PayloadKind::Params,
+                &node.theta,
+                &mut node.e_theta,
+                &mut self.scratch.vbuf,
+                &mut self.scratch.xhat_own,
+            );
+            let tracker_pl = if self.use_tracker {
+                Some(Self::encode_stream(
+                    &self.comm,
+                    g,
+                    i,
+                    PayloadKind::Tracker,
+                    &node.y_tr,
+                    &mut node.e_y,
+                    &mut self.scratch.vbuf,
+                    &mut self.scratch.yhat_own,
+                ))
+            } else {
+                None
+            };
+            (theta_pl, tracker_pl)
+        };
+
+        // ---- compact the row: stale/missing neighbors fold into self ----
+        {
+            let node = &self.nodes[i];
+            let row_len = node.widx.len();
+            self.scratch.keep.clear();
+            self.scratch.keep.resize(row_len, false);
+            let mut self_w = 0.0f32;
+            for (k, &ju) in node.widx.iter().enumerate() {
+                let j = ju as usize;
+                if j == i {
+                    self_w += node.wval[k];
+                    continue;
+                }
+                let fresh = node
+                    .inbox
+                    .get(&j)
+                    .map_or(false, |msg| self.cap_us.map_or(true, |cap| t_us - msg.sent_us <= cap));
+                if fresh {
+                    self.scratch.keep[k] = true;
+                } else {
+                    self_w += node.wval[k];
+                    self.folded += 1;
+                }
+            }
+            self.scratch.cw_idx.clear();
+            self.scratch.cw_val.clear();
+            let mut pushed_self = false;
+            for (k, &ju) in node.widx.iter().enumerate() {
+                let j = ju as usize;
+                if j == i {
+                    self.scratch.cw_idx.push(ju);
+                    self.scratch.cw_val.push(self_w);
+                    pushed_self = true;
+                    continue;
+                }
+                if !pushed_self && j > i {
+                    self.scratch.cw_idx.push(i as u32);
+                    self.scratch.cw_val.push(self_w);
+                    pushed_self = true;
+                }
+                if self.scratch.keep[k] {
+                    self.scratch.cw_idx.push(ju);
+                    self.scratch.cw_val.push(node.wval[k]);
+                    let msg = &node.inbox[&j];
+                    self.scratch.stacked[j * p..(j + 1) * p].copy_from_slice(&msg.theta);
+                    let age = t_us - msg.sent_us;
+                    self.max_applied_age_us = self.max_applied_age_us.max(age);
+                    self.applied += 1;
+                }
+            }
+            if !pushed_self {
+                self.scratch.cw_idx.push(i as u32);
+                self.scratch.cw_val.push(self_w);
+            }
+            // own mix row: the decoded x̂ under compression (what the
+            // neighbors decode from the wire), the true θ otherwise
+            if compressing {
+                self.scratch.stacked[i * p..(i + 1) * p].copy_from_slice(&self.scratch.xhat_own);
+            } else {
+                self.scratch.stacked[i * p..(i + 1) * p].copy_from_slice(&self.nodes[i].theta);
+            }
+        }
+        let mixed =
+            self.compute.combine_sparse(&self.scratch.cw_idx, &self.scratch.cw_val, &self.scratch.stacked)?;
+
+        // ---- eq. 2 / eq. 3 update (the sync strategies' arithmetic) ----
+        {
+            let node = &mut self.nodes[i];
+            node.sampler.batch(&self.ds.shards[i], &mut self.scratch.bx, &mut self.scratch.by);
+        }
+        if self.use_tracker {
+            // second combine over the SAME compacted row: tracker rows
+            {
+                let node = &self.nodes[i];
+                for &ju in self.scratch.cw_idx.iter() {
+                    let j = ju as usize;
+                    if j == i {
+                        continue;
+                    }
+                    let msg = &node.inbox[&j];
+                    let tr = msg.tracker.as_ref().expect("DSGT peers always ship a tracker");
+                    self.scratch.stacked[j * p..(j + 1) * p].copy_from_slice(tr);
+                }
+                if compressing {
+                    self.scratch.stacked[i * p..(i + 1) * p].copy_from_slice(&self.scratch.yhat_own);
+                } else {
+                    self.scratch.stacked[i * p..(i + 1) * p].copy_from_slice(&node.y_tr);
+                }
+            }
+            let mixed_y = self.compute.combine_sparse(
+                &self.scratch.cw_idx,
+                &self.scratch.cw_val,
+                &self.scratch.stacked,
+            )?;
+            let node = &mut self.nodes[i];
+            // θ⁺ = Σ W θ̂ (+ own full-precision correction, §10) − α ϑ
+            let mut theta_next = mixed;
+            if compressing {
+                add_diff(&mut theta_next, &node.theta, &self.scratch.xhat_own);
+            }
+            axpy(&mut theta_next, -lr, &node.y_tr);
+            // ϑ⁺ = Σ W ϑ̂ (+ correction) + ∇g(θ⁺) − ∇g(θ)
+            let (_, g_new) =
+                self.compute.grad_step(&theta_next, &self.scratch.bx, &self.scratch.by)?;
+            let mut y_next = mixed_y;
+            if compressing {
+                add_diff(&mut y_next, &node.y_tr, &self.scratch.yhat_own);
+            }
+            axpy(&mut y_next, 1.0, &g_new);
+            axpy(&mut y_next, -1.0, &node.g_prev);
+            node.theta = theta_next;
+            node.y_tr = y_next;
+            node.g_prev = g_new;
+        } else {
+            let node = &mut self.nodes[i];
+            // θ⁺ = Σ W θ̂ (+ correction) − α ∇g(θ): gradient at pre-mix θ
+            let (_, grad) = self.compute.grad_step(&node.theta, &self.scratch.bx, &self.scratch.by)?;
+            let mut theta_next = mixed;
+            if compressing {
+                add_diff(&mut theta_next, &node.theta, &self.scratch.xhat_own);
+            }
+            axpy(&mut theta_next, -lr, &grad);
+            node.theta = theta_next;
+        }
+
+        // ---- fire-and-forget broadcast: one Deliver event per neighbor ----
+        // each directed edge is its own link, so deliveries run in parallel;
+        // the accountant charges every message's bytes and occupancy
+        let nbrs = std::mem::take(&mut self.nodes[i].nbrs);
+        for &j in &nbrs {
+            let dt = self.acct.comm_message(&self.kind_bytes, self.cfg.latency_s);
+            self.push(
+                t_us + to_us(dt),
+                j,
+                Action::Deliver {
+                    from: i,
+                    theta: Rc::clone(&theta_pl),
+                    tracker: tracker_pl.as_ref().map(Rc::clone),
+                    sent_us: t_us,
+                },
+            );
+        }
+        self.nodes[i].nbrs = nbrs;
+        Ok(())
+    }
+}
+
+/// FNV-style fold for the event-trace hash.
+fn fold(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// Run the asynchronous driver and return the full report (log + final θ +
+/// replay/staleness instrumentation).  [`train`] is the coordinator-facing
+/// wrapper that keeps only the log.
+pub fn train_report(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+    graph: &Graph,
+    w: &SparseW,
+) -> Result<AsyncReport> {
+    let (d, h, p) = compute.dims();
+    if d != ds.d {
+        bail!("backend d={d} vs dataset d={}", ds.d);
+    }
+    let n = ds.n_hospitals();
+    if graph.n() != n {
+        bail!("graph has {} nodes, dataset has {n}", graph.n());
+    }
+    if matches!(cfg.mode, Mode::Actors) {
+        bail!(
+            "run.driver=async is its own virtual-time event loop and would silently \
+             ignore `--mode actors`; drop the mode flag (the sync driver keeps both modes)"
+        );
+    }
+    if cfg.drop_prob > 0.0 {
+        bail!(
+            "drop_prob={} requested, but async delivery is charged analytically over \
+             lossless links; use `--mode actors` with the sync driver for loss injection",
+            cfg.drop_prob
+        );
+    }
+    let eng = RoundEngine::from_config(cfg);
+    if let Some(want) = compute.local_steps_len() {
+        if eng.plan.local_per_round > 0 && eng.plan.local_per_round != want {
+            bail!(
+                "artifacts were lowered for Q={} (local phase {want}), config wants Q={}; \
+                 re-run `make artifacts Q={}` or use --backend native",
+                want + 1,
+                eng.q,
+                eng.q
+            );
+        }
+    }
+    let csched = ComputeSchedule::from_config(cfg)?;
+    csched.ensure_runnable(n, compute.local_steps_len())?;
+    let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
+    let comm = GossipComm::from_config(cfg)?;
+    let use_tracker = cfg.algo.uses_tracker();
+    let kinds = if use_tracker { 2 } else { 1 };
+    let kind_bytes = vec![comm.msg_bytes(p); kinds];
+    let compressing = comm.enabled();
+    let ef = compressing && comm.error_feedback;
+    let link = LinkModel {
+        latency_s: cfg.latency_s,
+        bandwidth_bps: cfg.bandwidth_bps,
+        drop_prob: 0.0, // enforced lossless above
+    };
+    let model = NativeModel::new(d, h);
+    let local = eng.plan.local_per_round;
+    let m = cfg.m;
+
+    let nodes: Vec<Node> = (0..n)
+        .map(|i| Node {
+            theta: init_theta(cfg.seed, i, &model),
+            y_tr: Vec::new(),
+            g_prev: Vec::new(),
+            sampler: NodeSampler::new(cfg.seed, i, m),
+            e_theta: vec![0.0f32; if ef { p } else { 0 }],
+            e_y: vec![0.0f32; if ef && use_tracker { p } else { 0 }],
+            done: 0,
+            inbox: BTreeMap::new(),
+            net_key: None,
+            online_now: true,
+            nbrs: Vec::new(),
+            widx: Vec::new(),
+            wval: Vec::new(),
+        })
+        .collect();
+
+    let mut sim = Sim {
+        cfg,
+        compute,
+        ds,
+        net,
+        csched,
+        comm,
+        acct: Accountant::new(link),
+        nodes,
+        scratch: Scratch {
+            lrs: vec![0.0f32; local],
+            lx: vec![0.0f32; local * m * d],
+            ly: vec![0.0f32; local * m],
+            bx: vec![0.0f32; m * d],
+            by: vec![0.0f32; m],
+            stacked: vec![0.0f32; n * p],
+            keep: Vec::new(),
+            cw_idx: Vec::new(),
+            cw_val: Vec::new(),
+            vbuf: vec![0.0f32; if compressing { p } else { 0 }],
+            xhat_own: vec![0.0f32; if compressing { p } else { 0 }],
+            yhat_own: vec![0.0f32; if compressing && use_tracker { p } else { 0 }],
+            view: ViewScratch::new(),
+            eval_stack: vec![0.0f32; n * p],
+        },
+        heap: BinaryHeap::new(),
+        seq: 0,
+        n,
+        p,
+        q: eng.q,
+        local,
+        rounds: if cfg.sim_budget_s > 0.0 { u64::MAX } else { eng.rounds as u64 },
+        eval_every: eng.eval_every as u64,
+        use_tracker,
+        sched: eng.sched,
+        kind_bytes,
+        cap_us: if cfg.staleness_s > 0.0 { Some(to_us(cfg.staleness_s)) } else { None },
+        budget_us: if cfg.sim_budget_s > 0.0 { Some(to_us(cfg.sim_budget_s)) } else { None },
+        events: 0,
+        min_done: 0,
+        at_min: n,
+        work_through: 0,
+        log: RunLog::new(cfg.algo.name()),
+        started: std::time::Instant::now(),
+        trace_hash: 0xCBF2_9CE4_8422_2325, // FNV offset basis
+        max_applied_age_us: 0,
+        applied: 0,
+        folded: 0,
+        final_t_us: 0,
+    };
+
+    // DSGT init: Y⁰ = G⁰ = ∇g(θ⁰) on a fresh batch, same stream position as
+    // every other driver
+    if use_tracker {
+        for i in 0..n {
+            let node = &mut sim.nodes[i];
+            node.sampler.batch(&ds.shards[i], &mut sim.scratch.bx, &mut sim.scratch.by);
+            let (_, g0) = compute.grad_step(&node.theta, &sim.scratch.bx, &sim.scratch.by)?;
+            sim.nodes[i].y_tr = g0.clone();
+            sim.nodes[i].g_prev = g0;
+        }
+    }
+
+    // round-0 observation (virtual time 0), then seed every node's first
+    // cycle-completion event in node order — the deterministic tie-break
+    sim.eval_at(0, 0)?;
+    if sim.rounds > 0 {
+        for i in 0..n {
+            let t = to_us(sim.cycle_s(1, i));
+            sim.push(t, i, Action::Cycle);
+        }
+        let mut last_cycle_us = 0u64;
+        while let Some(ev) = sim.heap.pop() {
+            sim.trace_hash = fold(fold(fold(sim.trace_hash, ev.t_us), ev.node as u64), ev.seq);
+            match ev.action {
+                Action::Cycle => {
+                    last_cycle_us = ev.t_us;
+                    sim.cycle(ev.node as usize, ev.t_us)?;
+                }
+                Action::Deliver { from, theta, tracker, sent_us } => {
+                    let inbox = &mut sim.nodes[ev.node as usize].inbox;
+                    // keep only the newest state per neighbor (equal-size
+                    // messages can't reorder, but the guard costs nothing)
+                    let newer = inbox.get(&from).map_or(true, |old| old.sent_us <= sent_us);
+                    if newer {
+                        inbox.insert(from, InMsg { theta, tracker, sent_us });
+                    }
+                }
+            }
+        }
+        // time-budget runs stop by the clock, not a round count, so the
+        // final fleet state needs its own observation (the cadence only
+        // fires on fleet-min crossings)
+        if sim.budget_us.is_some() && last_cycle_us > sim.final_t_us {
+            let m = sim.min_done;
+            sim.eval_at(m, last_cycle_us)?;
+            sim.final_t_us = last_cycle_us;
+        }
+    }
+
+    let mut theta = vec![0.0f32; n * p];
+    for (i, node) in sim.nodes.iter().enumerate() {
+        theta[i * p..(i + 1) * p].copy_from_slice(&node.theta);
+    }
+    Ok(AsyncReport {
+        log: sim.log,
+        theta,
+        trace_hash: sim.trace_hash,
+        max_applied_age_us: sim.max_applied_age_us,
+        applied: sim.applied,
+        folded: sim.folded,
+        final_t_us: sim.final_t_us,
+    })
+}
+
+/// Train a gossip algorithm through the asynchronous event-driven driver
+/// (`run.driver = "async"`); returns the metric log.
+pub fn train(
+    cfg: &ExperimentConfig,
+    compute: &dyn Compute,
+    ds: &FederatedDataset,
+    graph: &Graph,
+    w: &SparseW,
+) -> Result<RunLog> {
+    train_report(cfg, compute, ds, graph, w).map(|r| r.log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+    use crate::coordinator::compute::NativeCompute;
+    use crate::data::{generate, DataConfig};
+    use crate::graph::Topology;
+    use crate::mixing::{build_sparse, Scheme};
+    use crate::rng::Pcg64;
+
+    fn setup(
+        algo: AlgoKind,
+        q: usize,
+        steps: usize,
+    ) -> (ExperimentConfig, NativeCompute, FederatedDataset, Graph, SparseW) {
+        let mut cfg = ExperimentConfig::default();
+        cfg.n = 5;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = q;
+        cfg.algo = algo;
+        cfg.total_steps = steps;
+        cfg.eval_every = 2;
+        cfg.backend = Backend::Native;
+        cfg.driver = "async".into();
+        cfg.records_per_hospital = 60;
+        let ds = generate(&DataConfig {
+            n_hospitals: cfg.n,
+            records_per_hospital: 60,
+            records_jitter: 0,
+            heterogeneity: 0.5,
+            ..DataConfig::default()
+        })
+        .unwrap();
+        let graph = Graph::build(&Topology::Ring, cfg.n, &mut Pcg64::seed(1)).unwrap();
+        let w = build_sparse(&graph, Scheme::Metropolis);
+        let compute = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+        (cfg, compute, ds, graph, w)
+    }
+
+    #[test]
+    fn event_heap_pops_in_time_node_seq_order() {
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        // pushed out of order, including full ties on t and (t, node)
+        for (t, node, seq) in [(5u64, 1u32, 9u64), (5, 0, 8), (3, 2, 7), (5, 0, 2), (3, 2, 1)] {
+            heap.push(Event { t_us: t, node, seq, action: Action::Cycle });
+        }
+        let mut keys = Vec::new();
+        while let Some(e) = heap.pop() {
+            keys.push(e.key());
+        }
+        assert_eq!(keys, vec![(3, 2, 1), (3, 2, 7), (5, 0, 2), (5, 0, 8), (5, 1, 9)]);
+    }
+
+    #[test]
+    fn async_trains_dsgd_and_dsgt() {
+        for (algo, q, steps) in [(AlgoKind::FdDsgd, 4, 48), (AlgoKind::FdDsgt, 4, 48)] {
+            let (cfg, compute, ds, graph, w) = setup(algo, q, steps);
+            let rep = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+            let first = rep.log.rows.first().unwrap().loss;
+            let last = rep.log.rows.last().unwrap().loss;
+            assert!(last < first, "{algo:?}: loss {first} -> {last}");
+            assert!(rep.log.rows.last().unwrap().bytes > 0, "{algo:?}");
+            assert!(rep.applied > 0, "{algo:?}: neighbor states never applied");
+            // virtual time advanced and was reported as sim_time
+            assert!(rep.log.rows.last().unwrap().sim_time_s > 0.0, "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn async_replay_is_bitwise_deterministic() {
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt, 4, 48);
+        let a = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let b = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert_eq!(a.trace_hash, b.trace_hash, "event order diverged");
+        assert_eq!(a.theta, b.theta, "final θ diverged");
+        assert_eq!(a.log.rows.len(), b.log.rows.len());
+        for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+            assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits());
+            assert_eq!(ra.bytes, rb.bytes);
+        }
+    }
+
+    #[test]
+    fn staleness_cap_bounds_applied_age_and_folds_the_rest() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd, 4, 48);
+        // uncapped run applies whatever arrived
+        let free = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert!(free.applied > 0);
+        // a cap tighter than one cycle folds everything stale into self
+        cfg.staleness_s = 1e-9;
+        let capped = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert!(capped.max_applied_age_us <= to_us(1e-9));
+        assert!(capped.folded > free.folded, "cap must fold more entries");
+    }
+
+    #[test]
+    fn async_mode_actors_and_drop_prob_bail_loudly() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd, 4, 24);
+        cfg.mode = Mode::Actors;
+        let err = train_report(&cfg, &compute, &ds, &graph, &w).unwrap_err();
+        assert!(err.to_string().contains("actors"), "{err}");
+        cfg.mode = Mode::Fused;
+        cfg.drop_prob = 0.1;
+        let err = train_report(&cfg, &compute, &ds, &graph, &w).unwrap_err();
+        assert!(err.to_string().contains("lossless"), "{err}");
+    }
+
+    #[test]
+    fn async_composes_with_net_compression_and_compute_plans() {
+        for (net_plan, compress, compute_plan) in [
+            ("churn", "none", "uniform"),
+            ("rewire", "q8", "uniform"),
+            ("static", "topk", "lognormal"),
+            ("edge-drop", "none", "dropout"),
+        ] {
+            let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt, 4, 48);
+            cfg.net_plan = net_plan.into();
+            cfg.rewire_every = 2;
+            cfg.edge_drop = 0.3;
+            cfg.churn = 0.3;
+            cfg.compress = compress.into();
+            cfg.topk_frac = 0.2;
+            cfg.compute_plan = compute_plan.into();
+            cfg.compute_sigma = 0.6;
+            cfg.slow_frac = 0.4;
+            let rep = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+            let first = rep.log.rows.first().unwrap().loss;
+            let last = rep.log.rows.last().unwrap().loss;
+            assert!(
+                last.is_finite() && last < first,
+                "{net_plan}/{compress}/{compute_plan}: loss {first} -> {last}"
+            );
+            assert!(rep.theta.iter().all(|v| v.is_finite()), "{net_plan}/{compress}/{compute_plan}");
+        }
+    }
+
+    #[test]
+    fn virtual_clock_beats_the_synchronous_barrier_under_stragglers() {
+        // async finishes when the slowest node's OWN work is done; sync waits
+        // out every round's slowest participant — async must be strictly
+        // faster on the simulated clock under a lognormal straggler plan
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt, 4, 64);
+        cfg.compute_plan = "lognormal".into();
+        cfg.compute_sigma = 0.8;
+        let rep = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let t_async = rep.log.rows.last().unwrap().sim_time_s;
+        let mut sync_cfg = cfg.clone();
+        sync_cfg.driver = "sync".into();
+        let (sync_log, _) =
+            crate::engine::train_decentralized(&sync_cfg, &compute, &ds, &graph, &w).unwrap();
+        let t_sync = sync_log.rows.last().unwrap().sim_time_s;
+        assert!(
+            t_async < t_sync,
+            "async sim time {t_async} must beat the sync barrier {t_sync}"
+        );
+        // same rounds, same per-round byte totals: the frontier is time-only
+        assert_eq!(
+            rep.log.rows.last().unwrap().comm_rounds,
+            sync_log.rows.last().unwrap().comm_rounds
+        );
+    }
+
+    #[test]
+    fn sim_budget_extends_cycles_to_the_virtual_horizon() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt, 4, 48);
+        cfg.compute_plan = "lognormal".into();
+        cfg.compute_sigma = 1.0;
+        let counted = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let t_counted = counted.log.rows.last().unwrap().sim_time_s;
+        // give the fleet 3x the cycle-counted horizon: it must keep cycling
+        // past steps/q cycles, stay inside the budget, and log a final
+        // observation at the true end of the run
+        cfg.sim_budget_s = 3.0 * t_counted;
+        let budgeted = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let last = budgeted.log.rows.last().unwrap();
+        assert!(
+            last.comm_rounds > counted.log.rows.last().unwrap().comm_rounds,
+            "budget run stopped at {} fleet-min cycles",
+            last.comm_rounds
+        );
+        assert!(last.sim_time_s <= cfg.sim_budget_s + 1e-9);
+        assert!(last.sim_time_s > t_counted, "budget run ended at {}", last.sim_time_s);
+        assert!(last.loss.is_finite());
+        // and the budget replay is as deterministic as the counted one
+        let again = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert_eq!(budgeted.trace_hash, again.trace_hash);
+        assert_eq!(budgeted.theta, again.theta);
+    }
+
+    #[test]
+    fn compressed_async_charges_encoded_bytes() {
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd, 4, 48);
+        let dense = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let mut c = cfg.clone();
+        c.compress = "q8".into();
+        let comp = train_report(&c, &compute, &ds, &graph, &w).unwrap();
+        let (bd, bc) =
+            (dense.log.rows.last().unwrap().bytes, comp.log.rows.last().unwrap().bytes);
+        assert!(bc < bd / 3, "q8 bytes {bc} vs dense {bd}");
+    }
+}

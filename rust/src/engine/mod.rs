@@ -36,6 +36,7 @@
 //! test, for static and dynamic network plans, every compressor, and every
 //! straggler plan alike).
 
+pub mod asynchrony;
 pub mod stragglers;
 pub mod strategy;
 

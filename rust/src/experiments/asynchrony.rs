@@ -1,0 +1,277 @@
+//! EXP-AS1: the wall-clock-vs-accuracy frontier — synchronous barrier vs
+//! asynchronous event-driven gossip under straggler compute plans.
+//!
+//! Every block on one topology shares the same dataset, base graph, mixing
+//! matrix, seed, and compute plan; only `run.driver` (and the async
+//! staleness cap) varies.  The sync row is the pinned oracle: its final
+//! accuracy minus one point defines the *target*, and its total simulated
+//! time defines the *budget* — each async row runs with
+//! `sim_budget_s = sync.sim_time_s`, i.e. the barrier-free driver gets the
+//! same simulated wall-clock the barriered run spent, not the same cycle
+//! count.  That is the fair frontier: under a lognormal straggler plan the
+//! synchronous barrier pays every round's slowest participant (Σ_r max_i)
+//! while an async node only pays its own work, so in the same window the
+//! fleet completes more (stale-mixed) cycles.  Each row reports the
+//! simulated time at which its trajectory first reaches the target; the
+//! headline comparison is that time against the sync run's full horizon
+//! (matching accuracy with time to spare), with the ratio to sync's own
+//! time-to-target reported alongside.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{assemble, run_on, Assembled};
+use crate::jsonl::{self, Json};
+use anyhow::{bail, Result};
+
+/// One (driver, staleness, topology) cell of the EXP-AS1 frontier.
+#[derive(Clone, Debug)]
+pub struct AsyncRow {
+    /// Driver label (`sync`, or `async s=<cap>` / `async uncapped`).
+    pub driver: String,
+    /// Async staleness cap in simulated seconds (0 = uncapped; 0 for sync).
+    pub staleness_s: f64,
+    /// Base topology the block ran on.
+    pub topology: String,
+    /// Final record-weighted training loss.
+    pub final_loss: f64,
+    /// Final record-weighted training accuracy.
+    pub final_accuracy: f64,
+    /// Final consensus error.
+    pub final_consensus: f64,
+    /// Communication rounds (sync) or fleet-min cycles (async) completed.
+    pub comm_rounds: u64,
+    /// Total bytes on the wire.
+    pub bytes: u64,
+    /// Simulated wall-clock at the end of the run, seconds.
+    pub sim_time_s: f64,
+    /// First simulated time at which accuracy reached the sync oracle's
+    /// final accuracy − 1 point (NaN if the trajectory never got there).
+    pub t_to_target_s: f64,
+}
+
+/// Driver label for a row.
+fn label(driver: &str, staleness_s: f64) -> String {
+    match driver {
+        "sync" => "sync".into(),
+        _ if staleness_s > 0.0 => format!("async s={staleness_s:.2}"),
+        _ => "async uncapped".into(),
+    }
+}
+
+/// Earliest `sim_time_s` whose checkpoint accuracy reaches `target`.
+fn time_to(log: &crate::metrics::RunLog, target: f64) -> f64 {
+    log.rows
+        .iter()
+        .find(|r| r.accuracy >= target)
+        .map_or(f64::NAN, |r| r.sim_time_s)
+}
+
+fn run_one(
+    cfg: &ExperimentConfig,
+    asm: &Assembled,
+    topo: &str,
+    target: Option<f64>,
+) -> Result<(AsyncRow, crate::metrics::RunLog)> {
+    cfg.validate()?;
+    let log = run_on(cfg, asm)?;
+    let last = log.rows.last().expect("run produced no metric rows");
+    let row = AsyncRow {
+        driver: label(&cfg.driver, cfg.staleness_s),
+        staleness_s: if cfg.driver == "sync" { 0.0 } else { cfg.staleness_s },
+        topology: topo.to_string(),
+        final_loss: last.loss,
+        final_accuracy: last.accuracy,
+        final_consensus: last.consensus,
+        comm_rounds: last.comm_rounds,
+        bytes: last.bytes,
+        sim_time_s: last.sim_time_s,
+        t_to_target_s: target.map_or(f64::NAN, |t| time_to(&log, t)),
+    };
+    Ok((row, log))
+}
+
+/// Sweep the driver axis: one sync oracle row per topology, then one async
+/// row per staleness cap (seconds; 0 = uncapped), all sharing the assembled
+/// base network, seed, and the config's compute plan.  Async rows run under
+/// the matched simulated-time budget (`sim_budget_s = sync.sim_time_s`).
+/// `t_to_target_s` is measured against each topology's own sync final
+/// accuracy − 1 point (including for the sync row itself, so the speedup
+/// reads off directly).
+pub fn run(cfg: &ExperimentConfig, stalenesses: &[f64], topos: &[String]) -> Result<Vec<AsyncRow>> {
+    if stalenesses.is_empty() {
+        bail!("need at least one async staleness cap (0 = uncapped)");
+    }
+    let mut rows = Vec::new();
+    for topo in topos {
+        let mut base = cfg.clone();
+        base.topology = topo.clone();
+        base.driver = "sync".into();
+        base.staleness_s = 0.0;
+        base.validate()?;
+        let asm = assemble(&base)?;
+        // oracle first: its final accuracy − 1 point is the shared target,
+        // and its own t_to_target comes from the same (single) run's log
+        let (mut sync_row, sync_log) = run_one(&base, &asm, topo, None)?;
+        let target = sync_row.final_accuracy - 0.01;
+        sync_row.t_to_target_s = time_to(&sync_log, target);
+        let budget = sync_row.sim_time_s;
+        rows.push(sync_row);
+        for &s in stalenesses {
+            let mut c = base.clone();
+            c.driver = "async".into();
+            c.staleness_s = s;
+            c.sim_budget_s = budget;
+            rows.push(run_one(&c, &asm, topo, Some(target))?.0);
+        }
+    }
+    Ok(rows)
+}
+
+/// Print the frontier table.
+pub fn print_table(rows: &[AsyncRow]) {
+    println!("EXP-AS1 — sync barrier vs async event-driven gossip (wall-clock frontier)");
+    println!(
+        "{:<16} {:<10} {:>10} {:>8} {:>8} {:>10} {:>12} {:>14}",
+        "driver", "topology", "final_loss", "acc", "rounds", "MBytes", "sim_time_s", "t_to_target_s"
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:<10} {:>10.4} {:>8.3} {:>8} {:>10.2} {:>12.2} {:>14.2}",
+            r.driver,
+            r.topology,
+            r.final_loss,
+            r.final_accuracy,
+            r.comm_rounds,
+            r.bytes as f64 / 1e6,
+            r.sim_time_s,
+            r.t_to_target_s
+        );
+    }
+}
+
+/// Human-readable observations relative to each topology's sync oracle row.
+pub fn findings(rows: &[AsyncRow]) -> Vec<String> {
+    let mut out = Vec::new();
+    for r in rows.iter().filter(|r| r.driver != "sync") {
+        let Some(sync) = rows.iter().find(|s| s.driver == "sync" && s.topology == r.topology)
+        else {
+            continue;
+        };
+        let acc_pts = 100.0 * (r.final_accuracy - sync.final_accuracy);
+        if r.t_to_target_s.is_nan() {
+            out.push(format!(
+                "{} on {}: never reached sync final accuracy − 1 pt within the matched \
+                 time budget (accuracy {acc_pts:+.1} pts at the end)",
+                r.driver, r.topology
+            ));
+            continue;
+        }
+        let vs_horizon = sync.sim_time_s / r.t_to_target_s;
+        let vs_target = sync.t_to_target_s / r.t_to_target_s;
+        out.push(format!(
+            "{} on {}: sync-final−1pt accuracy at sim {:.2}s — {vs_horizon:.2}x inside \
+             sync's {:.2}s horizon ({vs_target:.2}x sync's own time-to-target), final \
+             accuracy {acc_pts:+.1} pts",
+            r.driver, r.topology, r.t_to_target_s, sync.sim_time_s
+        ));
+    }
+    out
+}
+
+/// JSON dump of the sweep.
+pub fn rows_json(rows: &[AsyncRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                jsonl::obj(vec![
+                    ("driver", jsonl::s(&r.driver)),
+                    ("staleness_s", jsonl::num(r.staleness_s)),
+                    ("topology", jsonl::s(&r.topology)),
+                    ("final_loss", jsonl::num(r.final_loss)),
+                    ("final_accuracy", jsonl::num(r.final_accuracy)),
+                    ("final_consensus", jsonl::num(r.final_consensus)),
+                    ("comm_rounds", jsonl::num(r.comm_rounds as f64)),
+                    ("bytes", jsonl::num(r.bytes as f64)),
+                    ("sim_time_s", jsonl::num(r.sim_time_s)),
+                    ("t_to_target_s", jsonl::num(r.t_to_target_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Backend, Mode};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.mode = Mode::Fused;
+        cfg.algo = AlgoKind::FdDsgt;
+        cfg.n = 6;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        // cycle compute (q·s_step = 32 ms) must dominate delivery latency
+        // (~20 ms for DSGT) or staleness drag swamps the barrier saving —
+        // the regime DESIGN.md §13 calls out
+        cfg.q = 32;
+        cfg.total_steps = 768; // 24 sync rounds
+        cfg.eval_every = 1;
+        cfg.records_per_hospital = 60;
+        cfg.compute_plan = "lognormal".into();
+        cfg.compute_sigma = 1.5;
+        cfg
+    }
+
+    #[test]
+    fn sweep_leads_with_sync_and_async_beats_it_to_target() {
+        let rows = run(&tiny_cfg(), &[0.0], &["ring".to_string()]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].driver, "sync");
+        assert_eq!(rows[1].driver, "async uncapped");
+        for r in &rows {
+            assert!(r.final_loss.is_finite(), "{}", r.driver);
+            assert!(r.bytes > 0, "{}", r.driver);
+        }
+        assert_eq!(rows[0].comm_rounds, 24);
+        // matched-time budget: the async fleet keeps cycling through sync's
+        // whole horizon, so it completes at least as many (cheaper) cycles
+        assert!(rows[1].comm_rounds >= rows[0].comm_rounds, "async {} cycles", rows[1].comm_rounds);
+        assert!(rows[1].sim_time_s <= rows[0].sim_time_s + 1e-6);
+        // the acceptance criterion in miniature: async matches the sync
+        // oracle's final accuracy (±1 pt) and reaches sync-final−1pt
+        // strictly inside the simulated time sync needed for its full run
+        assert!(!rows[1].t_to_target_s.is_nan(), "async never reached target");
+        assert!(
+            rows[1].t_to_target_s < rows[0].sim_time_s,
+            "async {} vs sync horizon {}",
+            rows[1].t_to_target_s,
+            rows[0].sim_time_s
+        );
+        assert!(
+            rows[1].final_accuracy >= rows[0].final_accuracy - 0.0101,
+            "async final {} vs sync {}",
+            rows[1].final_accuracy,
+            rows[0].final_accuracy
+        );
+        let f = findings(&rows);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].contains("inside"), "{}", f[0]);
+    }
+
+    #[test]
+    fn staleness_axis_adds_one_row_per_cap() {
+        let rows = run(&tiny_cfg(), &[0.0, 0.5], &["ring".to_string()]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1].driver, "async uncapped");
+        assert_eq!(rows[2].driver, "async s=0.50");
+        assert!((rows[2].staleness_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_staleness_list_is_rejected() {
+        let err = run(&tiny_cfg(), &[], &["ring".to_string()]).unwrap_err();
+        assert!(err.to_string().contains("staleness"), "{err}");
+    }
+}

@@ -3,6 +3,7 @@
 //! produces both a human-readable table on stdout and a JSON dump for
 //! re-plotting.
 
+pub mod asynchrony;
 pub mod churn;
 pub mod compress;
 pub mod fig1;

@@ -9,7 +9,9 @@
 
 pub mod eig;
 
-pub use eig::{second_eig_magnitude_power, sym_eig, SymEig};
+pub use eig::{
+    second_eig_magnitude_power, second_eig_magnitude_power_opts, sym_eig, PowerIterOpts, SymEig,
+};
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]

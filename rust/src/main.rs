@@ -6,7 +6,7 @@
 use anyhow::{bail, Result};
 use decfl::cli::{apply_common_overrides, Args};
 use decfl::config::{AlgoKind, ExperimentConfig};
-use decfl::experiments::{churn, compress, fig1, fig2, speedup, stragglers, sweeps};
+use decfl::experiments::{asynchrony, churn, compress, fig1, fig2, speedup, stragglers, sweeps};
 
 const HELP: &str = "\
 decfl — fully decentralized federated learning for electronic health records
@@ -33,6 +33,9 @@ SUBCOMMANDS
               lognormal / dropout, τ-weighted gossip) × topologies vs the
               uniform baseline (--plans, --topos, --tiers, --slow-frac,
               --sigma)
+  async       EXP-AS1: wall-clock-vs-accuracy frontier — sync barrier vs
+              asynchronous event-driven gossip under straggler plans
+              (--stalenesses, --topos; compute plan defaults to lognormal)
   export-data write the synthetic cohort as per-hospital CSVs
   info        print artifact manifest + config summary
   help        this text
@@ -42,6 +45,18 @@ COMMON OPTIONS (train + experiments)
                           m=20, Q=100, alpha0=0.02, d=42)
   --algo <name>           dsgd|dsgt|fd-dsgd|fd-dsgt|fedavg|centralized
   --mode <m>              fused|actors          (default fused)
+  --driver <d>            sync|async — global round barrier (the pinned
+                          oracle) or the event-driven virtual-time runtime
+                          (default sync; gossip algorithms only)
+  --staleness-s <s>       async staleness cap in simulated seconds: older
+                          neighbor states fold into the self-weight
+                          (default 0 = uncapped)
+  --sim-budget-s <s>      async simulated-time budget: keep cycling until the
+                          virtual clock passes this horizon instead of
+                          stopping after steps/q cycles (default 0 = off)
+  --net-validate <l>      Assumption-1 spectral-check effort at assembly:
+                          full|approx|skip (default full; symmetry/row-sum
+                          checks always run)
   --backend <b>           pjrt|native           (default pjrt)
   --steps <T>             total local iterations (default 10000)
   --q <Q>                 local period          (default 100)
@@ -83,6 +98,8 @@ EXAMPLES
   decfl train --backend native --compress q8 --steps 2000
   decfl train --backend native --compute-plan dropout --slow-frac 0.3 --steps 2000
   decfl stragglers --backend native --steps 2000 --q 50 --topos ring,er
+  decfl train --backend native --driver async --compute-plan lognormal --steps 2000
+  decfl async --backend native --steps 2000 --q 50 --sigma 0.8 --out frontier.json
   decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
   decfl churn --backend native --steps 2000 --q 50 --drops 0.2,0.4
   decfl compress --backend native --steps 2000 --q 50 --fracs 0.1,0.05
@@ -327,6 +344,50 @@ fn real_main() -> Result<()> {
             }
             dump(&cfg.out, &stragglers::rows_json(&rows))?;
         }
+        "async" => {
+            let stalenesses = args.get_f64_list("stalenesses")?.unwrap_or_else(|| vec![0.0]);
+            let topos = args
+                .get_str("topos")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| vec![cfg.topology.clone()]);
+            let plan_shaped = args.provided("compute-plan");
+            args.finish()?;
+            if matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+                bail!(
+                    "`decfl async` compares gossip drivers, but `{}` runs the paper's \
+                     synchronous baseline protocol; pick dsgd|dsgt|fd-dsgd|fd-dsgt",
+                    cfg.algo.name()
+                );
+            }
+            // the sweep owns the driver axis — these would be overwritten
+            for key in ["driver", "staleness-s", "sim-budget-s"] {
+                if args.provided(key) {
+                    bail!(
+                        "--{key} was passed, but `decfl async` sweeps the driver axis \
+                         itself and would silently ignore it; shape the sweep with \
+                         --stalenesses / --topos instead"
+                    );
+                }
+            }
+            if cfg.driver != "sync" || cfg.staleness_s != 0.0 || cfg.sim_budget_s != 0.0 {
+                bail!(
+                    "the config sets run.driver/staleness, but `decfl async` sweeps the \
+                     driver axis itself and would silently ignore it; shape the sweep \
+                     with --stalenesses / --topos instead"
+                );
+            }
+            // the frontier is only interesting under heterogeneous compute:
+            // default the plan to lognormal unless the user shaped it
+            if !plan_shaped && cfg.compute_plan == "uniform" {
+                cfg.compute_plan = "lognormal".into();
+            }
+            let rows = asynchrony::run(&cfg, &stalenesses, &topos)?;
+            asynchrony::print_table(&rows);
+            for f in asynchrony::findings(&rows) {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &asynchrony::rows_json(&rows))?;
+        }
         "export-data" => {
             reject_plan_flags(&args, &cfg, "export-data")?;
             let dir = args.get_str("dir").unwrap_or("out/cohort").to_string();
@@ -409,6 +470,23 @@ fn reject_plan_flags(args: &Args, cfg: &ExperimentConfig, sub: &str) -> Result<(
             );
         }
     }
+    for key in ["driver", "staleness-s", "sim-budget-s"] {
+        if args.provided(key) {
+            bail!(
+                "--{key} was passed, but `decfl {sub}` builds its own per-run configs \
+                 and would silently run the synchronous driver; the async runtime \
+                 applies to `decfl train` and `decfl async`"
+            );
+        }
+    }
+    if cfg.driver != "sync" {
+        bail!(
+            "the config sets run.driver = `{}`, but `decfl {sub}` builds its own \
+             per-run configs and would silently run the synchronous driver; the async \
+             runtime applies to `decfl train` and `decfl async`",
+            cfg.driver
+        );
+    }
     if cfg.compute_plan != "uniform" {
         bail!(
             "the config sets compute.plan = `{}`, but `decfl {sub}` builds its own \
@@ -447,6 +525,9 @@ fn reject_ignored_network_flags(args: &Args, cfg: &ExperimentConfig) -> Result<(
         "tiers",
         "slow-frac",
         "sigma",
+        "driver",
+        "staleness-s",
+        "sim-budget-s",
     ] {
         if args.provided(key) {
             bail!(

@@ -8,7 +8,10 @@
 //! consensus-rate knob the topology ablation (EXP-A2) sweeps.
 
 use crate::graph::Graph;
-use crate::linalg::{eig::second_eigenvalue_magnitude, second_eig_magnitude_power, Mat};
+use crate::linalg::{
+    eig::{second_eigenvalue_magnitude, PowerIterOpts},
+    second_eig_magnitude_power_opts, Mat,
+};
 use anyhow::{bail, Result};
 
 /// Below this n, [`validate_sparse`] cross-checks |λ₂| with the dense Jacobi
@@ -80,6 +83,38 @@ pub fn build(g: &Graph, scheme: Scheme) -> Mat {
     w
 }
 
+/// How much of Assumption 1 to verify when building a schedule.  The exact
+/// structural checks (symmetry, row sums, non-negativity) are O(E) and run
+/// at *every* level; only the spectral-gap estimate — 581 s of power
+/// iteration at n = 10⁵ per BENCH_6 — is negotiable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValidateLevel {
+    /// Structural checks + |λ₂| at full precision (Jacobi oracle below
+    /// [`JACOBI_ORACLE_MAX_N`], tight power iteration above).  The default.
+    Full,
+    /// Structural checks + a budgeted power iteration
+    /// ([`PowerIterOpts::approx`]) — enough digits to decide λ₂ < 1 and
+    /// report a usable gap, orders of magnitude cheaper at large n.
+    Approx,
+    /// Structural checks only; `second_eig`/`spectral_gap` are NaN and
+    /// [`Validation::holds`] no longer gates on the spectrum.  For large-n
+    /// schedule construction where the scheme guarantees λ₂ < 1 on a
+    /// connected graph by construction.
+    Skip,
+}
+
+impl ValidateLevel {
+    /// Parse a CLI/TOML validation-level name.
+    pub fn parse(name: &str) -> Result<ValidateLevel> {
+        Ok(match name {
+            "full" => ValidateLevel::Full,
+            "approx" => ValidateLevel::Approx,
+            "skip" => ValidateLevel::Skip,
+            other => bail!("unknown net.validate level `{other}` (full|approx|skip)"),
+        })
+    }
+}
+
 /// Validation report for Assumption 1.
 #[derive(Clone, Debug)]
 pub struct Validation {
@@ -89,16 +124,26 @@ pub struct Validation {
     pub rows_stochastic: bool,
     /// Are all entries non-negative?
     pub nonnegative: bool,
-    /// `|λ₂|` — the consensus contraction factor.
+    /// `|λ₂|` — the consensus contraction factor.  NaN when the spectral
+    /// check was skipped ([`ValidateLevel::Skip`]).
     pub second_eig: f64,
-    /// `1 − |λ₂|`.
+    /// `1 − |λ₂|`.  NaN when the spectral check was skipped.
     pub spectral_gap: f64,
+    /// Was |λ₂| actually estimated?  False only under
+    /// [`ValidateLevel::Skip`], where [`Validation::holds`] gates on the
+    /// structural checks alone.
+    pub spectral_checked: bool,
 }
 
 impl Validation {
-    /// Does Assumption 1 hold?
+    /// Does Assumption 1 hold?  (Structural checks always; the spectral
+    /// condition only when it was computed — note `NaN < 1.0` is false, so
+    /// gating on a skipped estimate would reject every matrix.)
     pub fn holds(&self) -> bool {
-        self.symmetric && self.rows_stochastic && self.nonnegative && self.second_eig < 1.0
+        self.symmetric
+            && self.rows_stochastic
+            && self.nonnegative
+            && (!self.spectral_checked || self.second_eig < 1.0)
     }
 }
 
@@ -182,6 +227,7 @@ pub fn validate(w: &Mat) -> Validation {
         nonnegative,
         second_eig,
         spectral_gap: 1.0 - second_eig,
+        spectral_checked: true,
     }
 }
 
@@ -190,7 +236,18 @@ pub fn validate(w: &Mat) -> Validation {
 /// sides cast from the same f64 formula), row sums in f64 with an
 /// entry-count-scaled f32 tolerance, and |λ₂| from the Jacobi oracle below
 /// [`JACOBI_ORACLE_MAX_N`] or sparse power iteration above it.
+///
+/// This is [`validate_sparse_with`] at [`ValidateLevel::Full`] — the default
+/// everywhere a config does not say otherwise.
 pub fn validate_sparse(w: &SparseW) -> Validation {
+    validate_sparse_with(w, ValidateLevel::Full)
+}
+
+/// [`validate_sparse`] with an explicit effort level for the spectral part
+/// (`net.validate`): the exact symmetry / row-sum / non-negativity scan
+/// always runs; `level` picks the |λ₂| budget or skips it (see
+/// [`ValidateLevel`]).
+pub fn validate_sparse_with(w: &SparseW, level: ValidateLevel) -> Validation {
     let n = w.n();
     let mut symmetric = true;
     let mut rows_stochastic = true;
@@ -214,10 +271,18 @@ pub fn validate_sparse(w: &SparseW) -> Validation {
             rows_stochastic = false;
         }
     }
-    let second_eig = if n <= JACOBI_ORACLE_MAX_N {
-        second_eigenvalue_magnitude(&w.to_mat())
-    } else {
-        w.second_eig_magnitude()
+    let (second_eig, spectral_checked) = match level {
+        ValidateLevel::Full => {
+            let l2 = if n <= JACOBI_ORACLE_MAX_N {
+                second_eigenvalue_magnitude(&w.to_mat())
+            } else {
+                w.second_eig_magnitude()
+            };
+            (l2, true)
+        }
+        // budgeted power iteration at any n — never the O(n³) oracle
+        ValidateLevel::Approx => (w.second_eig_magnitude_opts(PowerIterOpts::approx()), true),
+        ValidateLevel::Skip => (f64::NAN, false),
     };
     Validation {
         symmetric,
@@ -225,6 +290,7 @@ pub fn validate_sparse(w: &SparseW) -> Validation {
         nonnegative,
         second_eig,
         spectral_gap: 1.0 - second_eig,
+        spectral_checked,
     }
 }
 
@@ -390,7 +456,15 @@ impl SparseW {
     /// the large-n spectral-gap path.  For the Jacobi-oracle comparison use
     /// `second_eigenvalue_magnitude(&w.to_mat())` at small n.
     pub fn second_eig_magnitude(&self) -> f64 {
-        second_eig_magnitude_power(self.n, |x, out| {
+        self.second_eig_magnitude_opts(PowerIterOpts::default())
+    }
+
+    /// [`SparseW::second_eig_magnitude`] under an explicit iteration budget —
+    /// the `net.validate = approx` path, where large-n schedule construction
+    /// trades spectral digits for wall-clock (BENCH_6: 581 s at n = 10⁵ under
+    /// the default budget).
+    pub fn second_eig_magnitude_opts(&self, opts: PowerIterOpts) -> f64 {
+        second_eig_magnitude_power_opts(self.n, opts, |x, out| {
             for i in 0..self.n {
                 let (idx, val) = self.row(i);
                 let mut acc = 0.0f64;
@@ -656,6 +730,56 @@ mod tests {
                 assert_eq!(m[(i, j)], to_f32(&w)[i * 20 + j] as f64);
             }
         }
+    }
+
+    #[test]
+    fn validate_level_parse() {
+        assert_eq!(ValidateLevel::parse("full").unwrap(), ValidateLevel::Full);
+        assert_eq!(ValidateLevel::parse("approx").unwrap(), ValidateLevel::Approx);
+        assert_eq!(ValidateLevel::parse("skip").unwrap(), ValidateLevel::Skip);
+        assert!(ValidateLevel::parse("fast").is_err());
+    }
+
+    #[test]
+    fn validate_levels_agree_on_structure_and_gap() {
+        let g = build_graph(&Topology::KNearest { k: 4 }, 60, 11);
+        let sp = build_sparse(&g, Scheme::Metropolis);
+        let full = validate_sparse_with(&sp, ValidateLevel::Full);
+        let approx = validate_sparse_with(&sp, ValidateLevel::Approx);
+        let skip = validate_sparse_with(&sp, ValidateLevel::Skip);
+        for v in [&full, &approx, &skip] {
+            assert!(v.symmetric && v.rows_stochastic && v.nonnegative);
+            assert!(v.holds(), "{v:?}");
+        }
+        assert!(full.spectral_checked && approx.spectral_checked);
+        assert!((full.second_eig - approx.second_eig).abs() < 1e-3);
+        // skip never touches the spectrum — NaN sentinel, holds() ungated
+        assert!(!skip.spectral_checked);
+        assert!(skip.second_eig.is_nan() && skip.spectral_gap.is_nan());
+    }
+
+    #[test]
+    fn structural_checks_run_at_every_level() {
+        // an asymmetric matrix must fail even when the spectrum is skipped
+        let bad = SparseW::from_dense(
+            2,
+            &[0.5, 0.5, /* row 1 breaks symmetry: */ 0.25, 0.75],
+        );
+        for level in [ValidateLevel::Full, ValidateLevel::Approx, ValidateLevel::Skip] {
+            let v = validate_sparse_with(&bad, level);
+            assert!(!v.symmetric, "{level:?}");
+            assert!(!v.holds(), "{level:?}");
+        }
+    }
+
+    #[test]
+    fn validate_sparse_is_full_level() {
+        let g = build_graph(&Topology::Ring, 12, 0);
+        let sp = build_sparse(&g, Scheme::Metropolis);
+        let a = validate_sparse(&sp);
+        let b = validate_sparse_with(&sp, ValidateLevel::Full);
+        assert_eq!(a.second_eig.to_bits(), b.second_eig.to_bits());
+        assert!(a.spectral_checked);
     }
 
     #[test]

@@ -34,10 +34,14 @@ fn help_lists_subcommands() {
         "--tiers",
         "--slow-frac",
         "--sigma",
+        "--driver",
+        "--staleness-s",
+        "--net-validate",
     ] {
         assert!(text.contains(flag), "help missing `{flag}`");
     }
     assert!(text.contains("stragglers"), "help missing `stragglers`");
+    assert!(text.contains("async"), "help missing `async`");
 }
 
 #[test]
@@ -201,6 +205,44 @@ fn stragglers_subcommand_rejects_plan_axis_flags() {
     let out = decfl(&["stragglers", "--backend", "native", "--steps", "20", "--algo", "fedavg"]);
     assert!(!out.status.success(), "stragglers --algo fedavg must fail");
     assert!(String::from_utf8_lossy(&out.stderr).contains("gossip"), "no gossip hint");
+}
+
+#[test]
+fn async_subcommand_sweeps_the_driver_frontier() {
+    let out = decfl(&[
+        "async", "--backend", "native", "--steps", "64", "--q", "16",
+        "--eval-every", "1", "--topology", "ring", "--stalenesses", "0,0.5",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for label in ["sync", "async uncapped", "async s=0.50", "t_to_target_s"] {
+        assert!(text.contains(label), "frontier table missing `{label}`:\n{text}");
+    }
+    assert!(text.contains("finding:"), "{text}");
+}
+
+#[test]
+fn async_subcommand_owns_the_driver_axis() {
+    let out = decfl(&[
+        "async", "--backend", "native", "--steps", "20", "--driver", "async",
+    ]);
+    assert!(!out.status.success(), "async --driver must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--stalenesses"), "{err}");
+
+    let out = decfl(&["async", "--backend", "native", "--steps", "20", "--algo", "fedavg"]);
+    assert!(!out.status.success(), "async --algo fedavg must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("gossip"), "no gossip hint");
+}
+
+#[test]
+fn train_routes_the_async_driver() {
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fd-dsgd", "--driver", "async",
+        "--steps", "40", "--q", "10", "--eval-every", "2", "--compute-plan", "lognormal",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).starts_with("comm_rounds,"));
 }
 
 #[test]
