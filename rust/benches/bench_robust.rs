@@ -1,0 +1,77 @@
+//! EXP-R1 bench: round-engine throughput under the adversarial axes —
+//! honest baseline, sign-flip attack screened by each robust combine rule,
+//! and the DP clip+noise layer — on one shared base network, fused mode,
+//! native backend.  Shows what each defense costs in wall time relative to
+//! the pinned plain-mean path.
+//!
+//!     cargo bench --bench bench_robust
+//!     DECFL_FULL=1  cargo bench --bench bench_robust   # paper-scale
+//!     DECFL_SMOKE=1 cargo bench --bench bench_robust   # CI compile+run check
+
+use decfl::benchutil::{bench, budget, full_scale, report, section, smoke};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+
+fn main() -> anyhow::Result<()> {
+    let (n, steps, q) = if full_scale() {
+        (20, 2_000, 50)
+    } else if smoke() {
+        (8, 32, 4)
+    } else {
+        (12, 240, 6)
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.algo = AlgoKind::FdDsgt;
+    cfg.n = n;
+    cfg.hidden = 16;
+    cfg.m = 10;
+    cfg.q = q;
+    cfg.total_steps = steps;
+    cfg.eval_every = usize::MAX / 2; // final row only: time the rounds, not eval
+    cfg.records_per_hospital = 120;
+    cfg.topology = "er".into();
+
+    println!(
+        "adversarial axes, fd-dsgt fused/native: n={n} steps={steps} q={q} ({} rounds)",
+        steps.div_ceil(q)
+    );
+
+    let asm = assemble(&cfg)?; // shared base graph + cohort for every cell
+    let cells: Vec<(&str, ExperimentConfig)> = {
+        let mut v = vec![("honest mean (pinned)", cfg.clone())];
+        for rule in ["mean", "trimmed-mean", "median", "krum"] {
+            let mut c = cfg.clone();
+            c.attack_plan = "sign-flip".into();
+            c.attack_frac = 0.25;
+            c.robust_rule = rule.into();
+            v.push(("under sign-flip f=0.25", c));
+        }
+        let mut c = cfg.clone();
+        c.dp = "gaussian".into();
+        c.dp_clip = 10.0;
+        v.push(("dp gaussian clip=10", c));
+        v
+    };
+
+    for (what, c) in &cells {
+        let log = run_on(c, &asm)?;
+        let last = log.rows.last().unwrap();
+        section(&format!("{} · {what}", c.robust_rule));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(c, &asm).unwrap());
+        });
+        report(&format!("{} · {what} ({} rounds)", c.robust_rule, last.comm_rounds), &t);
+        println!(
+            "wire {:.2} MB | quarantined {} | dp_eps {:.3} | final loss {:.4} acc {:.3}",
+            last.bytes as f64 / 1e6,
+            last.quarantined,
+            last.dp_epsilon,
+            last.loss,
+            last.accuracy
+        );
+    }
+    Ok(())
+}

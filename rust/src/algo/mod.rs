@@ -9,6 +9,74 @@
 
 pub mod native;
 
+use anyhow::{bail, Result};
+
+/// How a node aggregates its neighborhood's gossip payloads (its CSR row
+/// of W) into the mixing term of eq. 2/3.
+///
+/// `Mean` is the paper's update — the W-weighted average — and keeps the
+/// doubly-stochastic mean-preservation contract (DESIGN.md §14): it is the
+/// pinned default, bitwise-identical to the pre-robust engine.  The robust
+/// rules deliberately forfeit that contract to buy Byzantine tolerance:
+/// they ignore the mixing weights (an attacker's weight is exactly what
+/// must not matter) and aggregate the neighborhood as an unweighted sample,
+/// so the network average is no longer invariant under gossip.  All three
+/// are deterministic, so non-mean runs stay replay-identical.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RobustRule {
+    /// W-weighted mean — the paper's combine, the pinned honest default.
+    Mean,
+    /// Coordinate-wise trimmed mean: drop the `⌊trim·k⌋` largest and
+    /// smallest values per coordinate over the row's k participants, then
+    /// average the rest.
+    TrimmedMean {
+        /// Fraction trimmed from *each* end, in [0, 0.5).
+        trim: f64,
+    },
+    /// Coordinate-wise median over the row's participants (even counts
+    /// average the two middle values).
+    Median,
+    /// Krum-style neighbor screening: score each participant by its summed
+    /// squared distance to its closest peers, drop the `⌈trim·k⌉` highest
+    /// scorers (the outliers), and average the survivors.
+    Krum {
+        /// Assumed attacker fraction to screen out, in [0, 0.5).
+        trim: f64,
+    },
+}
+
+impl RobustRule {
+    /// Parse a `robust.rule` config string with its `robust.trim` knob.
+    pub fn parse(rule: &str, trim: f64) -> Result<Self> {
+        let needs_trim = matches!(rule, "trimmed-mean" | "trimmed" | "krum");
+        if needs_trim && !(0.0..0.5).contains(&trim) {
+            bail!("robust.trim must be in [0, 0.5), got {trim}");
+        }
+        match rule {
+            "mean" => Ok(RobustRule::Mean),
+            "trimmed-mean" | "trimmed" => Ok(RobustRule::TrimmedMean { trim }),
+            "median" => Ok(RobustRule::Median),
+            "krum" => Ok(RobustRule::Krum { trim }),
+            other => bail!("unknown robust rule `{other}` (mean|trimmed-mean|median|krum)"),
+        }
+    }
+
+    /// Short display label (experiment tables, logs).
+    pub fn label(&self) -> String {
+        match self {
+            RobustRule::Mean => "mean".into(),
+            RobustRule::TrimmedMean { trim } => format!("trimmed {trim:.2}"),
+            RobustRule::Median => "median".into(),
+            RobustRule::Krum { trim } => format!("krum {trim:.2}"),
+        }
+    }
+
+    /// Is this the pinned W-weighted mean (the legacy bitwise path)?
+    pub fn is_mean(&self) -> bool {
+        matches!(self, RobustRule::Mean)
+    }
+}
+
 /// The paper's diminishing step size `α_r = α₀ / √r` (§3: α₀ = 0.02).
 #[derive(Clone, Copy, Debug)]
 pub struct LrSchedule {
@@ -245,5 +313,21 @@ mod tests {
     fn row_mean_small() {
         let flat = [1.0f32, 2.0, 3.0, 5.0];
         assert_eq!(row_mean(&flat, 2, 2), vec![2.0, 3.5]);
+    }
+
+    #[test]
+    fn robust_rule_parsing() {
+        assert_eq!(RobustRule::parse("mean", 0.0).unwrap(), RobustRule::Mean);
+        assert!(RobustRule::parse("mean", 0.0).unwrap().is_mean());
+        assert_eq!(
+            RobustRule::parse("trimmed-mean", 0.2).unwrap(),
+            RobustRule::TrimmedMean { trim: 0.2 }
+        );
+        assert_eq!(RobustRule::parse("median", 0.2).unwrap(), RobustRule::Median);
+        assert_eq!(RobustRule::parse("krum", 0.25).unwrap(), RobustRule::Krum { trim: 0.25 });
+        assert!(RobustRule::parse("trimmed-mean", 0.5).is_err());
+        assert!(RobustRule::parse("krum", -0.1).is_err());
+        assert!(RobustRule::parse("bogus", 0.0).is_err());
+        assert!(!RobustRule::parse("median", 0.0).unwrap().is_mean());
     }
 }

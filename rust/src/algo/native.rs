@@ -17,7 +17,7 @@
 //! system is *testable and sweepable*, mirroring what e.g. a CPU-reference
 //! backend is to a TPU runtime.
 
-use super::{axpy, l2_dist_sq, row_mean};
+use super::{axpy, l2_dist_sq, row_mean, RobustRule};
 
 /// Samples per cache tile of the blocked forward/backward kernels.  Inside a
 /// tile every `w1` row is loaded once and applied to all tile samples, so the
@@ -50,6 +50,14 @@ pub struct Workspace {
     acc: Vec<f64>,
     /// f32 gradient staging for update kernels: `[p]`.
     gbuf: Vec<f32>,
+    /// Robust-combine coordinate gather: `[k]` row participants (grown on
+    /// demand by the robust rules only — the default mean path never
+    /// touches it, preserving the zero-alloc steady-state pin).
+    rvals: Vec<f64>,
+    /// Krum scratch: pairwise squared distances `[k·k]`, then scores.
+    rdist: Vec<f64>,
+    /// Krum scratch: participant order by (score, index).
+    rord: Vec<usize>,
 }
 
 impl Workspace {
@@ -409,6 +417,164 @@ impl NativeModel {
         out
     }
 
+    /// Rule-dispatched combine over one degree-sparse row (DESIGN.md §14).
+    /// [`RobustRule::Mean`] routes to [`Self::combine_sparse_into`] — the
+    /// identical code path, so mean-rule runs stay bitwise-pinned.  The
+    /// robust rules aggregate the row's participants as an *unweighted*
+    /// sample (a Byzantine neighbor's mixing weight is exactly what must
+    /// not matter) and therefore forfeit mean preservation:
+    ///
+    /// - `TrimmedMean`: per coordinate, sort the k participant values, drop
+    ///   `min(⌊trim·k⌋, ⌊(k−1)/2⌋)` from each end, average the rest.
+    /// - `Median`: per coordinate, the middle value (even k averages the
+    ///   two middles) — the trim-to-the-limit special case.
+    /// - `Krum`: screen whole vectors, not coordinates — score participant
+    ///   `j` by the sum of its `max(1, k−f−2)` smallest squared distances
+    ///   to the other participants (`f = ⌈trim·k⌉` assumed attackers),
+    ///   drop the `f` highest-scoring, and average the survivors.  Ties
+    ///   break by participant index, so the screen is deterministic.
+    ///
+    /// Rows with fewer than 3 participants (`self_col` names the node's
+    /// own stack row) keep their own value under every non-mean rule: a
+    /// 2-participant sample is 50% attacker-capturable — no screen can
+    /// tell self from adversary — so the only robust combine is no
+    /// combine.  Churn-compacted k = 1 rows hit the same path.
+    ///
+    /// All accumulation is f64, like the mean path.
+    pub fn combine_rule_into(
+        &self,
+        rule: RobustRule,
+        self_col: u32,
+        idx: &[u32],
+        val: &[f32],
+        stacked: &[f32],
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        let k = idx.len();
+        if !rule.is_mean() && k < 3 {
+            let p = self.p();
+            debug_assert!(idx.contains(&self_col), "row must include its own node");
+            out.copy_from_slice(&stacked[self_col as usize * p..(self_col as usize + 1) * p]);
+            return;
+        }
+        match rule {
+            RobustRule::Mean => self.combine_sparse_into(idx, val, stacked, out, ws),
+            RobustRule::TrimmedMean { trim } => {
+                let t = ((trim * k as f64).floor() as usize).min((k - 1) / 2);
+                self.combine_trimmed_into(idx, stacked, t, out, ws);
+            }
+            RobustRule::Median => {
+                self.combine_trimmed_into(idx, stacked, (k - 1) / 2, out, ws);
+            }
+            RobustRule::Krum { trim } => {
+                self.combine_krum_into(idx, stacked, trim, out, ws);
+            }
+        }
+    }
+
+    /// Coordinate-wise t-trimmed unweighted mean over the row participants
+    /// (`t` from each end; `t = ⌊(k−1)/2⌋` is the coordinate-wise median:
+    /// odd k leaves the middle value, even k averages the two middles).
+    fn combine_trimmed_into(
+        &self,
+        idx: &[u32],
+        stacked: &[f32],
+        t: usize,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        let p = self.p();
+        let k = idx.len();
+        assert!(k >= 1, "trimmed combine over an empty row");
+        assert_eq!(out.len(), p);
+        assert!(2 * t < k);
+        grow(&mut ws.rvals, k);
+        let vals = &mut ws.rvals[..k];
+        for (c, o) in out.iter_mut().enumerate() {
+            for (v, &j) in vals.iter_mut().zip(idx) {
+                *v = stacked[j as usize * p + c] as f64;
+            }
+            vals.sort_unstable_by(f64::total_cmp);
+            let kept = &vals[t..k - t];
+            *o = (kept.iter().sum::<f64>() / kept.len() as f64) as f32;
+        }
+    }
+
+    /// Krum-style screening over whole participant vectors (see
+    /// [`Self::combine_rule_into`] for the scoring rule).
+    fn combine_krum_into(
+        &self,
+        idx: &[u32],
+        stacked: &[f32],
+        trim: f64,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) {
+        let p = self.p();
+        let k = idx.len();
+        assert!(k >= 1, "krum combine over an empty row");
+        assert_eq!(out.len(), p);
+        ws.ensure(self);
+        let f = ((trim * k as f64).ceil() as usize).min(k - 1);
+        grow(&mut ws.rdist, k * k + k);
+        grow(&mut ws.rord, k);
+        let (dist, scores) = ws.rdist.split_at_mut(k * k);
+        let scores = &mut scores[..k];
+        let row = |j: usize| {
+            let b = idx[j] as usize * p;
+            &stacked[b..b + p]
+        };
+        for a in 0..k {
+            dist[a * k + a] = 0.0;
+            for b in (a + 1)..k {
+                let d = crate::algo::l2_dist_sq(row(a), row(b));
+                dist[a * k + b] = d;
+                dist[b * k + a] = d;
+            }
+        }
+        let closest = (k.saturating_sub(f + 2)).max(1).min(k.saturating_sub(1));
+        for a in 0..k {
+            if k == 1 {
+                scores[a] = 0.0;
+                continue;
+            }
+            // a's distances to the other k−1 participants, smallest first
+            let others = &mut ws.rord[..k - 1];
+            let mut w = 0;
+            for b in 0..k {
+                if b != a {
+                    others[w] = b;
+                    w += 1;
+                }
+            }
+            others.sort_unstable_by(|&x, &y| {
+                dist[a * k + x].total_cmp(&dist[a * k + y]).then(x.cmp(&y))
+            });
+            scores[a] = others[..closest].iter().map(|&b| dist[a * k + b]).sum();
+        }
+        // survivors: the k − f lowest-scoring participants (ties by index)
+        let ord = &mut ws.rord[..k];
+        for (o, v) in ord.iter_mut().enumerate() {
+            *v = o;
+        }
+        ord.sort_unstable_by(|&x, &y| scores[x].total_cmp(&scores[y]).then(x.cmp(&y)));
+        let survivors = &ord[..k - f];
+        let acc = &mut ws.acc[..p];
+        for a in acc.iter_mut() {
+            *a = 0.0;
+        }
+        for &s in survivors {
+            for (a, &v) in acc.iter_mut().zip(row(s)) {
+                *a += v as f64;
+            }
+        }
+        let inv = 1.0 / survivors.len() as f64;
+        for (o, &a) in out.iter_mut().zip(&*acc) {
+            *o = (a * inv) as f32;
+        }
+    }
+
     /// Node `i`'s eq.-2 update given the whole stacked Θ: `(W Θ)_i − lr ∇g_i`
     /// → (θ′_i, loss).  The ONLY implementation of the DSGD node update —
     /// the serial round below and the threaded `NativeCompute` fan-out both
@@ -581,6 +747,155 @@ impl NativeModel {
             self.loss_grad_kernel(t_out, bx_i, by_i, g_out, hid, dhid, z, grad)
         };
         self.combine_sparse_into(idx, val, y_tr, y_out, ws);
+        axpy(y_out, 1.0, g_out);
+        axpy(y_out, -1.0, g_i);
+        loss
+    }
+
+    /// [`Self::dsgd_node_into`] with a rule-dispatched mixing term:
+    /// `combine_rule(row) − lr ∇g_i(θ_i)`.  [`RobustRule::Mean`] delegates
+    /// to the pinned kernel, so the dispatch itself costs no bits.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgd_node_rule_into(
+        &self,
+        rule: RobustRule,
+        self_col: u32,
+        idx: &[u32],
+        val: &[f32],
+        theta: &[f32],
+        theta_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        if rule.is_mean() {
+            return self.dsgd_node_into(idx, val, theta, theta_i, bx_i, by_i, lr, out, ws);
+        }
+        self.combine_rule_into(rule, self_col, idx, val, theta, out, ws);
+        let p = self.p();
+        let Workspace { hid, dhid, z, grad, gbuf, .. } = ws;
+        let gbuf = &mut gbuf[..p];
+        let loss = self.loss_grad_kernel(theta_i, bx_i, by_i, gbuf, hid, dhid, z, grad);
+        axpy(out, -lr, gbuf);
+        loss
+    }
+
+    /// [`Self::dsgd_node_compressed_into`] with a rule-dispatched mixing
+    /// term over the decoded stack X̂.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgd_node_compressed_rule_into(
+        &self,
+        rule: RobustRule,
+        self_col: u32,
+        idx: &[u32],
+        val: &[f32],
+        xhat: &[f32],
+        xhat_i: &[f32],
+        theta_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        if rule.is_mean() {
+            return self.dsgd_node_compressed_into(
+                idx, val, xhat, xhat_i, theta_i, bx_i, by_i, lr, out, ws,
+            );
+        }
+        self.combine_rule_into(rule, self_col, idx, val, xhat, out, ws);
+        super::add_diff(out, theta_i, xhat_i);
+        let p = self.p();
+        let Workspace { hid, dhid, z, grad, gbuf, .. } = ws;
+        let gbuf = &mut gbuf[..p];
+        let loss = self.loss_grad_kernel(theta_i, bx_i, by_i, gbuf, hid, dhid, z, grad);
+        axpy(out, -lr, gbuf);
+        loss
+    }
+
+    /// [`Self::dsgt_node_into`] with rule-dispatched mixing terms for both
+    /// the parameter and the tracker rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgt_node_rule_into(
+        &self,
+        rule: RobustRule,
+        self_col: u32,
+        idx: &[u32],
+        val: &[f32],
+        theta: &[f32],
+        y_tr: &[f32],
+        y_i: &[f32],
+        g_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        t_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        if rule.is_mean() {
+            return self.dsgt_node_into(
+                idx, val, theta, y_tr, y_i, g_i, bx_i, by_i, lr, t_out, y_out, g_out, ws,
+            );
+        }
+        self.combine_rule_into(rule, self_col, idx, val, theta, t_out, ws);
+        axpy(t_out, -lr, y_i);
+        let loss = {
+            let p = self.p();
+            let Workspace { hid, dhid, z, grad, .. } = &mut *ws;
+            debug_assert_eq!(g_out.len(), p);
+            self.loss_grad_kernel(t_out, bx_i, by_i, g_out, hid, dhid, z, grad)
+        };
+        self.combine_rule_into(rule, self_col, idx, val, y_tr, y_out, ws);
+        axpy(y_out, 1.0, g_out);
+        axpy(y_out, -1.0, g_i);
+        loss
+    }
+
+    /// [`Self::dsgt_node_compressed_into`] with rule-dispatched mixing
+    /// terms over the decoded stacks X̂ and Ŷ.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dsgt_node_compressed_rule_into(
+        &self,
+        rule: RobustRule,
+        self_col: u32,
+        idx: &[u32],
+        val: &[f32],
+        xhat: &[f32],
+        yhat: &[f32],
+        xhat_i: &[f32],
+        yhat_i: &[f32],
+        theta_i: &[f32],
+        y_i: &[f32],
+        g_i: &[f32],
+        bx_i: &[f32],
+        by_i: &[f32],
+        lr: f32,
+        t_out: &mut [f32],
+        y_out: &mut [f32],
+        g_out: &mut [f32],
+        ws: &mut Workspace,
+    ) -> f64 {
+        if rule.is_mean() {
+            return self.dsgt_node_compressed_into(
+                idx, val, xhat, yhat, xhat_i, yhat_i, theta_i, y_i, g_i, bx_i, by_i, lr, t_out,
+                y_out, g_out, ws,
+            );
+        }
+        self.combine_rule_into(rule, self_col, idx, val, xhat, t_out, ws);
+        super::add_diff(t_out, theta_i, xhat_i);
+        axpy(t_out, -lr, y_i);
+        let loss = {
+            let p = self.p();
+            let Workspace { hid, dhid, z, grad, .. } = &mut *ws;
+            debug_assert_eq!(g_out.len(), p);
+            self.loss_grad_kernel(t_out, bx_i, by_i, g_out, hid, dhid, z, grad)
+        };
+        self.combine_rule_into(rule, self_col, idx, val, yhat, y_out, ws);
+        super::add_diff(y_out, y_i, yhat_i);
         axpy(y_out, 1.0, g_out);
         axpy(y_out, -1.0, g_i);
         loss
@@ -1073,6 +1388,185 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn robust_combines_have_the_expected_fixed_points() {
+        // four participants with constant rows 1, 2, 3, 100 (one outlier),
+        // uniform weights — every rule's output is a constant vector whose
+        // value we can compute by hand
+        let m = model();
+        let p = m.p();
+        let mut stacked = vec![0.0f32; 4 * p];
+        for (j, c) in [1.0f32, 2.0, 3.0, 100.0].iter().enumerate() {
+            stacked[j * p..(j + 1) * p].fill(*c);
+        }
+        let idx: Vec<u32> = (0..4).collect();
+        let val = vec![0.25f32; 4];
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; p];
+        let run = |rule: RobustRule, out: &mut Vec<f32>, ws: &mut Workspace| {
+            m.combine_rule_into(rule, 0, &idx, &val, &stacked, out, ws);
+            out[0]
+        };
+        assert_eq!(run(RobustRule::Mean, &mut out, &mut ws), 26.5);
+        assert!(out.iter().all(|&v| v == 26.5));
+        // t = ⌊0.25·4⌋ = 1 from each end → mean(2, 3)
+        assert_eq!(run(RobustRule::TrimmedMean { trim: 0.25 }, &mut out, &mut ws), 2.5);
+        // even k: median averages the two middles
+        assert_eq!(run(RobustRule::Median, &mut out, &mut ws), 2.5);
+        // f = ⌈0.25·4⌉ = 1: the outlier scores worst and is screened out
+        assert_eq!(run(RobustRule::Krum { trim: 0.25 }, &mut out, &mut ws), 2.0);
+
+        // odd k: median picks the middle value exactly
+        let idx3: Vec<u32> = (0..3).collect();
+        m.combine_rule_into(RobustRule::Median, 0, &idx3, &val[..3], &stacked, &mut out, &mut ws);
+        assert!(out.iter().all(|&v| v == 2.0));
+
+        // an isolated row (k = 1) passes through under every rule
+        let solo = [2u32];
+        for rule in [
+            RobustRule::TrimmedMean { trim: 0.4 },
+            RobustRule::Median,
+            RobustRule::Krum { trim: 0.4 },
+        ] {
+            m.combine_rule_into(rule, 2, &solo, &val[..1], &stacked, &mut out, &mut ws);
+            assert!(out.iter().all(|&v| v == 3.0), "{rule:?}");
+        }
+
+        // a 2-participant row is 50% attacker-capturable — no screen can
+        // tell self from adversary, so the row keeps its own value (and a
+        // pendant node whose only neighbor is Byzantine trains solo
+        // instead of averaging with poison)
+        let pair = [0u32, 3];
+        for rule in [
+            RobustRule::TrimmedMean { trim: 0.4 },
+            RobustRule::Median,
+            RobustRule::Krum { trim: 0.4 },
+        ] {
+            m.combine_rule_into(rule, 0, &pair, &val[..2], &stacked, &mut out, &mut ws);
+            assert!(out.iter().all(|&v| v == 1.0), "{rule:?} must keep self");
+            m.combine_rule_into(rule, 3, &pair, &val[..2], &stacked, &mut out, &mut ws);
+            assert!(out.iter().all(|&v| v == 100.0), "{rule:?} must keep self");
+        }
+        // ... while the mean path still averages a 2-participant row
+        m.combine_rule_into(RobustRule::Mean, 0, &pair, &val[..2], &stacked, &mut out, &mut ws);
+        assert!(out.iter().all(|&v| v == 0.25 * (1.0 + 100.0)));
+    }
+
+    #[test]
+    fn mean_rule_kernels_bitwise_equal_pinned_kernels_property() {
+        // RobustRule::Mean must route through the identical code paths —
+        // the robust dispatch costs no bits on the pinned default
+        testutil::check("rule mean == pinned", 10, 23, |rng| {
+            let m = model();
+            let p = m.p();
+            let n = rng.range(3, 8);
+            let batch = 5;
+            let g = crate::graph::Graph::build(&crate::graph::Topology::Ring, n, rng)
+                .map_err(|e| e.to_string())?;
+            let w =
+                crate::mixing::to_f32(&crate::mixing::build(&g, crate::mixing::Scheme::Metropolis));
+            let theta = rand_vec(rng, n * p, 0.3);
+            let y_tr = rand_vec(rng, n * p, 0.1);
+            let g_old = rand_vec(rng, n * p, 0.1);
+            let bx = rand_vec(rng, n * batch * m.d, 1.0);
+            let by = rand_labels(rng, n * batch);
+            let mut ws = Workspace::new();
+            for i in 0..n {
+                let wrow = &w[i * n..(i + 1) * n];
+                let (mut idx, mut val) = (Vec::new(), Vec::new());
+                for (j, &wj) in wrow.iter().enumerate() {
+                    if wj != 0.0 {
+                        idx.push(j as u32);
+                        val.push(wj);
+                    }
+                }
+                let (bx_i, by_i) =
+                    (&bx[i * batch * m.d..(i + 1) * batch * m.d], &by[i * batch..(i + 1) * batch]);
+                let theta_i = &theta[i * p..(i + 1) * p];
+
+                let (mut a, mut b) = (vec![0.0f32; p], vec![0.0f32; p]);
+                m.combine_sparse_into(&idx, &val, &theta, &mut a, &mut ws);
+                m.combine_rule_into(RobustRule::Mean, i as u32, &idx, &val, &theta, &mut b, &mut ws);
+                if a != b {
+                    return Err(format!("combine rule-mean differs at node {i}"));
+                }
+
+                let la = m.dsgd_node_into(
+                    &idx, &val, &theta, theta_i, bx_i, by_i, 0.05, &mut a, &mut ws,
+                );
+                let lb = m.dsgd_node_rule_into(
+                    RobustRule::Mean, i as u32, &idx, &val, &theta, theta_i, bx_i, by_i, 0.05, &mut b,
+                    &mut ws,
+                );
+                if a != b || la.to_bits() != lb.to_bits() {
+                    return Err(format!("dsgd rule-mean differs at node {i}"));
+                }
+
+                let (y_i, g_i) = (&y_tr[i * p..(i + 1) * p], &g_old[i * p..(i + 1) * p]);
+                let (mut t1, mut y1, mut g1) =
+                    (vec![0.0f32; p], vec![0.0f32; p], vec![0.0f32; p]);
+                let (mut t2, mut y2, mut g2) =
+                    (vec![0.0f32; p], vec![0.0f32; p], vec![0.0f32; p]);
+                let l1 = m.dsgt_node_into(
+                    &idx, &val, &theta, &y_tr, y_i, g_i, bx_i, by_i, 0.05, &mut t1, &mut y1,
+                    &mut g1, &mut ws,
+                );
+                let l2 = m.dsgt_node_rule_into(
+                    RobustRule::Mean, i as u32, &idx, &val, &theta, &y_tr, y_i, g_i, bx_i, by_i, 0.05,
+                    &mut t2, &mut y2, &mut g2, &mut ws,
+                );
+                if t1 != t2 || y1 != y2 || g1 != g2 || l1.to_bits() != l2.to_bits() {
+                    return Err(format!("dsgt rule-mean differs at node {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn robust_rules_shrug_off_a_poisoned_row() {
+        // one Byzantine participant broadcasts a huge row; mean is dragged
+        // away while trimmed/median/krum stay near the honest values
+        let m = model();
+        let p = m.p();
+        let mut rng = Pcg64::seed(31);
+        let n = 5;
+        let mut stacked = rand_vec(&mut rng, n * p, 0.3);
+        for v in &mut stacked[2 * p..3 * p] {
+            *v = 1e4;
+        }
+        let idx: Vec<u32> = (0..n as u32).collect();
+        let val = vec![1.0 / n as f32; n];
+        let mut ws = Workspace::new();
+        let mut honest = vec![0.0f32; p];
+        // honest reference: unweighted mean of the four clean rows
+        for c in 0..p {
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                if j != 2 {
+                    acc += stacked[j * p + c] as f64;
+                }
+            }
+            honest[c] = (acc / 4.0) as f32;
+        }
+        let mut out = vec![0.0f32; p];
+        m.combine_rule_into(RobustRule::Mean, 0, &idx, &val, &stacked, &mut out, &mut ws);
+        let mean_err = crate::algo::l2_dist_sq(&out, &honest).sqrt();
+        assert!(mean_err > 100.0, "mean should be dragged: {mean_err}");
+        for rule in [
+            RobustRule::TrimmedMean { trim: 0.2 },
+            RobustRule::Median,
+            RobustRule::Krum { trim: 0.2 },
+        ] {
+            m.combine_rule_into(rule, 0, &idx, &val, &stacked, &mut out, &mut ws);
+            let err = crate::algo::l2_dist_sq(&out, &honest).sqrt();
+            // trimmed/median re-center within the honest sample's spread
+            // (~O(1) over p coords); krum recovers the honest mean exactly
+            assert!(err < 5.0, "{rule:?} dragged by the outlier: {err}");
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
     }
 
     #[test]

@@ -224,6 +224,36 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     if args.has_flag("error-feedback") {
         cfg.error_feedback = true;
     }
+    if let Some(v) = args.get_str("attack-plan") {
+        cfg.attack_plan = v.to_string();
+    }
+    if let Some(v) = args.get_f64("attack-frac")? {
+        cfg.attack_frac = v;
+    }
+    if let Some(v) = args.get_f64("attack-scale")? {
+        cfg.attack_scale = v;
+    }
+    if let Some(v) = args.get_usize("attack-age")? {
+        cfg.attack_age = v;
+    }
+    if let Some(v) = args.get_str("robust-rule") {
+        cfg.robust_rule = v.to_string();
+    }
+    if let Some(v) = args.get_f64("robust-trim")? {
+        cfg.robust_trim = v;
+    }
+    if let Some(v) = args.get_str("dp") {
+        cfg.dp = v.to_string();
+    }
+    if let Some(v) = args.get_f64("dp-clip")? {
+        cfg.dp_clip = v;
+    }
+    if let Some(v) = args.get_f64("dp-sigma")? {
+        cfg.dp_sigma = v;
+    }
+    if let Some(v) = args.get_f64("dp-delta")? {
+        cfg.dp_delta = v;
+    }
     if let Some(v) = args.get_f64("drop-prob")? {
         cfg.drop_prob = v;
     }
@@ -349,6 +379,36 @@ mod tests {
         super::apply_common_overrides(&b, &mut cfg).unwrap();
         assert_eq!(cfg.compress, "none");
         assert!(!cfg.error_feedback);
+    }
+
+    #[test]
+    fn adversary_robust_dp_overrides_apply() {
+        let a = parse(&[
+            "train", "--attack-plan", "scaled-noise", "--attack-frac", "0.1",
+            "--attack-scale", "5.0", "--attack-age", "3", "--robust-rule", "krum",
+            "--robust-trim", "0.3", "--dp", "gaussian", "--dp-clip", "0.5",
+            "--dp-sigma", "1.2", "--dp-delta", "1e-6",
+        ]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.attack_plan, "scaled-noise");
+        assert!((cfg.attack_frac - 0.1).abs() < 1e-12);
+        assert!((cfg.attack_scale - 5.0).abs() < 1e-12);
+        assert_eq!(cfg.attack_age, 3);
+        assert_eq!(cfg.robust_rule, "krum");
+        assert!((cfg.robust_trim - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.dp, "gaussian");
+        assert!((cfg.dp_clip - 0.5).abs() < 1e-12);
+        assert!((cfg.dp_sigma - 1.2).abs() < 1e-12);
+        assert!((cfg.dp_delta - 1e-6).abs() < 1e-18);
+        assert!(a.finish().is_ok());
+        // honest defaults untouched when the flags are absent
+        let b = parse(&["train"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&b, &mut cfg).unwrap();
+        assert_eq!(cfg.attack_plan, "none");
+        assert_eq!(cfg.robust_rule, "mean");
+        assert_eq!(cfg.dp, "off");
     }
 
     #[test]

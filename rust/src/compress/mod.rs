@@ -44,7 +44,7 @@
 use crate::config::ExperimentConfig;
 use crate::netsim::PayloadKind;
 use crate::rng::Pcg64;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// RNG stream tag for quantization noise (disjoint from every other stream
 /// constant in the crate — see `graph::schedule`, `coordinator::sampler`).
@@ -152,33 +152,95 @@ impl Encoded {
             Encoded::Q4 { len, .. } => *len as usize,
         }
     }
+
+    /// Does every value this message decodes to come out finite?  Exact
+    /// without decoding: quantized codes are bounded integers, so finiteness
+    /// is carried entirely by the f32 scale (q8/q4) or by the kept values
+    /// (top-k/dense).  The ingest quarantine (DESIGN.md §14) uses this to
+    /// classify a neighbor payload as poisoned at the same semantics as a
+    /// scan of the decoded vector, one payload-sized pass cheaper.
+    pub fn is_finite(&self) -> bool {
+        match self {
+            Encoded::Dense(v) => v.iter().all(|x| x.is_finite()),
+            Encoded::TopK { val, .. } => val.iter().all(|x| x.is_finite()),
+            Encoded::Q8 { scale, .. } => scale.is_finite(),
+            Encoded::Q4 { scale, .. } => scale.is_finite(),
+        }
+    }
 }
 
 /// Decode a message into `out[p]` — a pure function of the wire bytes, so
 /// the sender (updating its residual), every receiver, and the fused driver
 /// all reconstruct the identical f32 vector.
-pub fn decode_into(enc: &Encoded, out: &mut [f32]) {
-    assert_eq!(out.len(), enc.decoded_len(), "decode buffer size mismatch");
+///
+/// Adversarial bytes exist on the wire (DESIGN.md §14), so a malformed
+/// message — truncated code buffers, index/value length skew, out-of-range
+/// or unsorted top-k indices — is a **loud error**, never a panic or a
+/// silent garbage read.  On error `out` may be partially written; callers
+/// must treat the buffer as poisoned and drop the message.  Non-finite
+/// *values* (a NaN/Inf scale or payload) are structurally well-formed and
+/// decode successfully — classifying and quarantining them is the ingest
+/// guard's job ([`Encoded::is_finite`]), because an attacked-but-honest
+/// pipeline must survive them, not abort.
+pub fn decode_into(enc: &Encoded, out: &mut [f32]) -> Result<()> {
+    ensure!(
+        out.len() == enc.decoded_len(),
+        "decode buffer holds {} elements, message decodes to {}",
+        out.len(),
+        enc.decoded_len()
+    );
     match enc {
         Encoded::Dense(v) => out.copy_from_slice(v),
-        Encoded::TopK { idx, val, .. } => {
+        Encoded::TopK { len, idx, val } => {
+            ensure!(
+                idx.len() == val.len(),
+                "top-k message carries {} indices but {} values",
+                idx.len(),
+                val.len()
+            );
+            ensure!(
+                idx.len() <= *len as usize,
+                "top-k message keeps {} of only {len} entries",
+                idx.len()
+            );
+            let mut prev: Option<u32> = None;
+            for &i in idx {
+                ensure!(i < *len, "top-k index {i} out of range for length {len}");
+                if let Some(p) = prev {
+                    ensure!(i > p, "top-k indices must be strictly ascending ({p} then {i})");
+                }
+                prev = Some(i);
+            }
             out.fill(0.0);
             for (&i, &v) in idx.iter().zip(val) {
                 out[i as usize] = v;
             }
         }
         Encoded::Q8 { scale, codes } => {
+            ensure!(
+                codes.len() == out.len(),
+                "q8 message carries {} codes for {} elements",
+                codes.len(),
+                out.len()
+            );
             for (o, &c) in out.iter_mut().zip(codes) {
                 *o = (c as i8) as f32 * scale;
             }
         }
-        Encoded::Q4 { scale, codes, .. } => {
+        Encoded::Q4 { scale, len, codes } => {
+            ensure!(
+                codes.len() == (*len as usize).div_ceil(2),
+                "q4 message carries {} code bytes for length {len} (want {})",
+                codes.len(),
+                (*len as usize).div_ceil(2)
+            );
             for (i, o) in out.iter_mut().enumerate() {
                 let nib = (codes[i / 2] >> ((i % 2) * 4)) & 0x0F;
                 *o = (nib as i32 - 8) as f32 * scale;
             }
         }
     }
+    Ok(())
 }
 
 /// A lossy message compressor: a pure function from a `p`-element f32 vector
@@ -208,7 +270,7 @@ pub fn decode_into(enc: &Encoded, out: &mut [f32]) {
 /// assert_eq!(enc.wire_bytes(), c.wire_bytes(v.len())); // exact wire size
 ///
 /// let mut xhat = vec![0.0f32; 4];
-/// decode_into(&enc, &mut xhat); // every party reconstructs this bitwise
+/// decode_into(&enc, &mut xhat).unwrap(); // every party reconstructs this bitwise
 /// assert_eq!(c.encode(&v, key), enc); // same key → identical message
 /// ```
 pub trait Compressor: Send + Sync {
@@ -516,7 +578,7 @@ mod tests {
         let enc = Identity.encode(&v, key(1, 0));
         assert_eq!(enc.wire_bytes(), 4 * 33);
         let mut out = vec![0.0f32; 33];
-        decode_into(&enc, &mut out);
+        decode_into(&enc, &mut out).unwrap();
         assert_eq!(out, v);
     }
 
@@ -545,7 +607,7 @@ mod tests {
             _ => unreachable!(),
         };
         let mut out = vec![0.0f32; v.len()];
-        decode_into(&enc, &mut out);
+        decode_into(&enc, &mut out).unwrap();
         for (&x, &xh) in v.iter().zip(&out) {
             assert!((x - xh).abs() <= scale * 1.0001, "{x} vs {xh} (scale {scale})");
         }
@@ -562,7 +624,7 @@ mod tests {
                 _ => unreachable!(),
             };
             let mut out = vec![0.0f32; n];
-            decode_into(&enc, &mut out);
+            decode_into(&enc, &mut out).unwrap();
             for (&x, &xh) in v.iter().zip(&out) {
                 assert!((x - xh).abs() <= scale * 1.0001, "n={n}: {x} vs {xh}");
             }
@@ -578,7 +640,7 @@ mod tests {
         for r in 1..=rounds {
             let enc = QuantizeQ8.encode(&v, key(r, 0));
             let mut out = vec![0.0f32; v.len()];
-            decode_into(&enc, &mut out);
+            decode_into(&enc, &mut out).unwrap();
             for (a, &x) in acc.iter_mut().zip(&out) {
                 *a += x as f64;
             }
@@ -607,7 +669,7 @@ mod tests {
             _ => unreachable!(),
         }
         let mut out = vec![9.0f32; 6];
-        decode_into(&enc, &mut out);
+        decode_into(&enc, &mut out).unwrap();
         assert_eq!(out, vec![0.0, -5.0, 0.0, 3.0, 0.0, 3.0]);
     }
 
@@ -652,8 +714,112 @@ mod tests {
         for c in [&QuantizeQ8 as &dyn Compressor, &QuantizeQ4] {
             let enc = c.encode(&v, key(1, 0));
             let mut out = vec![1.0f32; 9];
-            decode_into(&enc, &mut out);
+            decode_into(&enc, &mut out).unwrap();
             assert_eq!(out, v, "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn malformed_messages_error_loudly_instead_of_panicking() {
+        let mut out = vec![0.0f32; 8];
+        // wrong decode-buffer length for every variant
+        let v = sample_vec(9, 1);
+        for c in
+            [&Identity as &dyn Compressor, &QuantizeQ8, &QuantizeQ4, &TopK { frac: 0.5 }]
+        {
+            let enc = c.encode(&v, key(1, 0));
+            assert!(decode_into(&enc, &mut out).is_err(), "{}: buffer mismatch", c.label());
+        }
+        // top-k: out-of-range index, unsorted/duplicate indices, idx/val skew,
+        // and a kept count above the decoded length
+        let bad = [
+            Encoded::TopK { len: 8, idx: vec![0, 8], val: vec![1.0, 2.0] },
+            Encoded::TopK { len: 8, idx: vec![3, 1], val: vec![1.0, 2.0] },
+            Encoded::TopK { len: 8, idx: vec![2, 2], val: vec![1.0, 2.0] },
+            Encoded::TopK { len: 8, idx: vec![0, 1], val: vec![1.0] },
+            Encoded::TopK { len: 8, idx: (0..9).collect(), val: vec![1.0; 9] },
+        ];
+        for enc in &bad {
+            assert!(decode_into(enc, &mut out).is_err(), "{enc:?} must be rejected");
+        }
+        // quantizers: truncated code buffers
+        assert!(decode_into(&Encoded::Q8 { scale: 1.0, codes: vec![0; 7] }, &mut out).is_err());
+        assert!(
+            decode_into(&Encoded::Q4 { scale: 1.0, len: 8, codes: vec![0x88; 3] }, &mut out)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn non_finite_payloads_decode_but_classify_as_poisoned() {
+        // a NaN/Inf scale is well-formed wire data (an attacked q8 message
+        // produces exactly this): decode must succeed — the ingest guard, not
+        // the decoder, quarantines it — and is_finite() must flag it without
+        // decoding
+        let mut out = vec![0.0f32; 8];
+        let q8 = Encoded::Q8 { scale: f32::NAN, codes: vec![1; 8] };
+        assert!(!q8.is_finite());
+        decode_into(&q8, &mut out).unwrap();
+        assert!(out.iter().all(|v| !v.is_finite()));
+        let q4 = Encoded::Q4 { scale: f32::INFINITY, len: 8, codes: vec![0x11; 4] };
+        assert!(!q4.is_finite());
+        decode_into(&q4, &mut out).unwrap();
+        assert!(out.iter().any(|v| !v.is_finite()));
+        let tk = Encoded::TopK { len: 8, idx: vec![2], val: vec![f32::NEG_INFINITY] };
+        assert!(!tk.is_finite());
+        decode_into(&tk, &mut out).unwrap();
+        assert!(out[2].is_infinite() && out[0] == 0.0);
+        assert!(!Encoded::Dense(vec![0.0, f32::NAN]).is_finite());
+        // and the payload-level check agrees with the decoded-vector scan on
+        // honest messages too
+        let v = sample_vec(8, 5);
+        for c in [&Identity as &dyn Compressor, &QuantizeQ8, &QuantizeQ4, &TopK { frac: 0.5 }] {
+            let enc = c.encode(&v, key(1, 0));
+            assert!(enc.is_finite(), "{}", c.label());
+        }
+    }
+
+    #[test]
+    fn mutated_wire_buffers_never_panic_property() {
+        // adversarial fuzz: take honest messages and mutate one structural
+        // field at a time — every decode must return (Ok or Err), not panic
+        let mut rng = Pcg64::seed(99);
+        for trial in 0..200u64 {
+            let p = 1 + (rng.next_u64() % 40) as usize;
+            let v = sample_vec(p, trial);
+            let comps: [&dyn Compressor; 4] =
+                [&Identity, &QuantizeQ8, &QuantizeQ4, &TopK { frac: 0.3 }];
+            let c = comps[(rng.next_u64() % 4) as usize];
+            let mut enc = c.encode(&v, key(trial as usize + 1, 0));
+            match &mut enc {
+                Encoded::Dense(d) => {
+                    if !d.is_empty() {
+                        d.truncate(d.len() - 1);
+                    }
+                }
+                Encoded::TopK { len, idx, val } => match rng.next_u64() % 4 {
+                    0 => {
+                        if let Some(i) = idx.last_mut() {
+                            *i = *len + (rng.next_u64() % 5) as u32;
+                        }
+                    }
+                    1 => idx.reverse(),
+                    2 => val.push(0.0),
+                    _ => *len = len.saturating_sub(1),
+                },
+                Encoded::Q8 { scale, codes } => match rng.next_u64() % 3 {
+                    0 => codes.truncate(codes.len().saturating_sub(1)),
+                    1 => codes.push(0),
+                    _ => *scale = f32::NAN,
+                },
+                Encoded::Q4 { scale, len, codes } => match rng.next_u64() % 3 {
+                    0 => codes.push(0),
+                    1 => *len += 3,
+                    _ => *scale = f32::INFINITY,
+                },
+            }
+            let mut out = vec![0.0f32; p];
+            let _ = decode_into(&enc, &mut out); // must not panic
         }
     }
 
@@ -679,7 +845,7 @@ mod tests {
         add_residual(&x, &e, &mut v);
         let enc = Identity.encode(&v, key(1, 0));
         let mut xhat = vec![0.0f32; 12];
-        decode_into(&enc, &mut xhat);
+        decode_into(&enc, &mut xhat).unwrap();
         let mut e2 = vec![1.0f32; 12];
         residual_update(&v, &xhat, &mut e2);
         assert!(e2.iter().all(|&r| r == 0.0));

@@ -200,6 +200,33 @@ pub struct ExperimentConfig {
     /// aggressive sparsifiers (DESIGN.md §10).
     pub error_feedback: bool,
 
+    // -- adversary / robustness / privacy (see engine::adversary, DESIGN.md §14) --
+    /// Attack plan Byzantine senders follow: none|sign-flip|scaled-noise|
+    /// stale-replay.  Applied at the message-encode boundary, so it composes
+    /// with compression, churn, stragglers, and the async driver.
+    pub attack_plan: String,
+    /// Fraction of nodes that are Byzantine, in (0, 1] when a plan is active
+    /// (membership is static per run, sampled from the seed).
+    pub attack_frac: f64,
+    /// Noise magnitude multiplier for `attack.plan = "scaled-noise"`.
+    pub attack_scale: f64,
+    /// Replay age in rounds for `attack.plan = "stale-replay"` (>= 2).
+    pub attack_age: usize,
+    /// Gossip aggregation rule: mean|trimmed-mean|median|krum.  `mean` is
+    /// the pinned mixing-weighted combine; the robust rules screen the CSR
+    /// neighborhood and forfeit mean preservation (DESIGN.md §14).
+    pub robust_rule: String,
+    /// Trim / screening fraction for trimmed-mean and krum, in [0, 0.5).
+    pub robust_trim: f64,
+    /// Differential-privacy mode on outgoing messages: off|gaussian.
+    pub dp: String,
+    /// L2 clipping bound C on each outgoing message (dp = gaussian).
+    pub dp_clip: f64,
+    /// Gaussian noise multiplier σ — noise stddev is σ·C per coordinate.
+    pub dp_sigma: f64,
+    /// Target δ the (ε, δ)-accountant reports ε at.
+    pub dp_delta: f64,
+
     // -- data --
     /// Shard non-iidness in [0, 1] (Dirichlet mixing of site profiles).
     pub heterogeneity: f64,
@@ -265,6 +292,16 @@ impl Default for ExperimentConfig {
             compress: "none".into(),
             topk_frac: 0.1,
             error_feedback: false,
+            attack_plan: "none".into(),
+            attack_frac: 0.0,
+            attack_scale: 3.0,
+            attack_age: 5,
+            robust_rule: "mean".into(),
+            robust_trim: 0.2,
+            dp: "off".into(),
+            dp_clip: 1.0,
+            dp_sigma: 1.0,
+            dp_delta: 1e-5,
             heterogeneity: 0.6,
             records_per_hospital: 500,
             ad_prevalence: 0.21,
@@ -320,6 +357,16 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_str("comm.compress") { self.compress = v.to_string(); }
         if let Some(v) = doc.get_f64("comm.topk_frac")? { self.topk_frac = v; }
         if let Some(v) = doc.get_bool("comm.error_feedback")? { self.error_feedback = v; }
+        if let Some(v) = doc.get_str("attack.plan") { self.attack_plan = v.to_string(); }
+        if let Some(v) = doc.get_f64("attack.frac")? { self.attack_frac = v; }
+        if let Some(v) = doc.get_f64("attack.scale")? { self.attack_scale = v; }
+        if let Some(v) = doc.get_usize("attack.age")? { self.attack_age = v; }
+        if let Some(v) = doc.get_str("robust.rule") { self.robust_rule = v.to_string(); }
+        if let Some(v) = doc.get_f64("robust.trim")? { self.robust_trim = v; }
+        if let Some(v) = doc.get_str("dp.mode") { self.dp = v.to_string(); }
+        if let Some(v) = doc.get_f64("dp.clip")? { self.dp_clip = v; }
+        if let Some(v) = doc.get_f64("dp.sigma")? { self.dp_sigma = v; }
+        if let Some(v) = doc.get_f64("dp.delta")? { self.dp_delta = v; }
         if let Some(v) = doc.get_f64("data.heterogeneity")? { self.heterogeneity = v; }
         if let Some(v) = doc.get_usize("data.records_per_hospital")? { self.records_per_hospital = v; }
         if let Some(v) = doc.get_f64("data.ad_prevalence")? { self.ad_prevalence = v; }
@@ -367,6 +414,9 @@ impl ExperimentConfig {
         crate::graph::schedule::plan_from_config(self)?;
         crate::engine::stragglers::plan_from_config(self)?;
         crate::compress::Spec::parse(&self.compress, self.topk_frac)?;
+        crate::engine::adversary::plan_from_config(self)?;
+        crate::engine::adversary::dp_from_config(self)?;
+        crate::algo::RobustRule::parse(&self.robust_rule, self.robust_trim)?;
         Ok(())
     }
 
@@ -552,6 +602,59 @@ mod tests {
         assert!(c.validate().is_err());
         c.driver = "async".into();
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn adversary_robust_dp_overlay_and_validation() {
+        // honest defaults: no attack, mean combine, DP off (the pinned path)
+        let c = ExperimentConfig::default();
+        assert_eq!(c.attack_plan, "none");
+        assert_eq!(c.attack_frac, 0.0);
+        assert_eq!(c.robust_rule, "mean");
+        assert_eq!(c.dp, "off");
+        assert!(c.validate().is_ok());
+        let dir = std::env::temp_dir().join(format!("decfl_adv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("adv.toml");
+        std::fs::write(
+            &path,
+            "[attack]\nplan = \"sign-flip\"\nfrac = 0.2\n\
+             [robust]\nrule = \"trimmed-mean\"\ntrim = 0.25\n\
+             [dp]\nmode = \"gaussian\"\nclip = 0.5\nsigma = 2.0\ndelta = 1e-6\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.attack_plan, "sign-flip");
+        assert!((cfg.attack_frac - 0.2).abs() < 1e-12);
+        assert_eq!(cfg.robust_rule, "trimmed-mean");
+        assert!((cfg.robust_trim - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.dp, "gaussian");
+        assert!((cfg.dp_clip - 0.5).abs() < 1e-12);
+        assert!((cfg.dp_sigma - 2.0).abs() < 1e-12);
+        assert!((cfg.dp_delta - 1e-6).abs() < 1e-18);
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+        // bad values are rejected at validate
+        let c = ExperimentConfig { attack_plan: "emp".into(), ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            attack_plan: "sign-flip".into(),
+            attack_frac: 0.0,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "an active plan needs attackers");
+        let c = ExperimentConfig { robust_rule: "geometric".into(), ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig {
+            robust_rule: "trimmed-mean".into(),
+            robust_trim: 0.5,
+            ..Default::default()
+        };
+        assert!(c.validate().is_err(), "trim must stay below 0.5");
+        let c = ExperimentConfig { dp: "laplace".into(), ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ExperimentConfig { dp: "gaussian".into(), dp_sigma: 0.0, ..Default::default() };
+        assert!(c.validate().is_err());
     }
 
     #[test]

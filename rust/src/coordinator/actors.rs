@@ -104,7 +104,15 @@ impl NodeTask {
 
         // gossip-compression context: identical derivation to the fused
         // driver's strategies, so both sides key the same message streams
-        let comm = GossipComm::from_config(&self.cfg)?;
+        let mut comm = GossipComm::from_config(&self.cfg)?;
+        // adversarial/DP perturbation lives at the encode boundary, so a
+        // perturbed run with no compressor configured routes through
+        // `Identity` — same dense bytes on the wire, same decoded values,
+        // and the same routing decision the fused driver makes
+        let perturb = engine::MsgPerturb::from_config(&self.cfg)?;
+        if perturb.is_some() && comm.comp.is_none() {
+            comm.comp = Some(Box::new(crate::compress::Identity));
+        }
         let compressing = comm.enabled();
         let ef = compressing && comm.error_feedback;
         let tracked = self.use_tracker;
@@ -133,6 +141,7 @@ impl NodeTask {
             vbuf: vec![0.0f32; if compressing { p } else { 0 }],
             xhat_own: vec![0.0f32; if compressing { p } else { 0 }],
             yhat_own: vec![0.0f32; if compressing && tracked { p } else { 0 }],
+            perturb,
             csched,
             net_key: None,
             scratch: ViewScratch::new(),
@@ -166,6 +175,10 @@ struct NodeDriver<'a> {
     stacked: Vec<f32>,
     /// Gossip-compression context (compressor + EF toggle + seed).
     comm: GossipComm,
+    /// Attack/DP perturbation pipeline (`engine::adversary`), applied to
+    /// this node's outgoing messages at the encode boundary — `None` on the
+    /// pinned honest path.
+    perturb: Option<engine::MsgPerturb>,
     /// Per-round local-work schedule (`engine::stragglers`); uniform plans
     /// keep the legacy phase bodies byte for byte.
     csched: ComputeSchedule,
@@ -224,11 +237,14 @@ impl NodeDriver<'_> {
 
 /// One payload stream's encode-and-broadcast step of a compressed round:
 /// build the outgoing vector (error-compensated `v = x + e` when EF is on),
-/// encode it under the `(seed, round, node, kind)` key, keep the decoded x̂
-/// in `hat` (the node's own mix row — exactly what receivers decode),
-/// update the residual, and put the *encoded* message on the wire.  The
-/// per-stream twin of the fused driver's `ef_compress_stack` row step —
-/// both call the same `compress` helpers in the same order, which is what
+/// apply the attack/DP perturbation when one is active (the adversary
+/// corrupts what actually hits the wire — and the sender's own mix row, so
+/// an attacker drinks its own poison exactly like the fused driver), encode
+/// it under the `(seed, round, node, kind)` key, keep the decoded x̂ in
+/// `hat` (the node's own mix row — exactly what receivers decode), update
+/// the residual, and put the *encoded* message on the wire.  The per-stream
+/// twin of the fused driver's `ef_compress_stack` row step — both call the
+/// same `compress`/`adversary` helpers in the same order, which is what
 /// keeps DSGD's and DSGT's streams from ever diverging between drivers.
 #[allow(clippy::too_many_arguments)]
 fn ef_encode_send(
@@ -244,14 +260,18 @@ fn ef_encode_send(
     hat: &mut [f32],
     ep: &mut netsim::Endpoint,
     nbrs: &[usize],
+    perturb: Option<&mut engine::MsgPerturb>,
 ) -> Result<()> {
     if ef {
         add_residual(data, e, vbuf);
     } else {
         vbuf.copy_from_slice(data);
     }
+    if let Some(pb) = perturb {
+        pb.apply(round, id, kind.tag(), vbuf);
+    }
     let enc = comp.encode(vbuf, MsgKey::new(seed, round, id, kind));
-    decode_into(&enc, hat);
+    decode_into(&enc, hat)?;
     if ef {
         residual_update(vbuf, hat, e);
     }
@@ -346,6 +366,7 @@ impl engine::Driver for NodeDriver<'_> {
                 &mut self.xhat_own,
                 &mut self.ep,
                 &self.nbrs,
+                self.perturb.as_mut(),
             )?;
             if self.task.use_tracker {
                 ef_encode_send(
@@ -361,9 +382,17 @@ impl engine::Driver for NodeDriver<'_> {
                     &mut self.yhat_own,
                     &mut self.ep,
                     &self.nbrs,
+                    self.perturb.as_mut(),
                 )?;
             }
         } else {
+            // the perturbation pipeline requires the encode path; run()
+            // installs an Identity compressor whenever one is active, so an
+            // unperturbed dense broadcast is the only way to reach here
+            anyhow::ensure!(
+                self.perturb.is_none(),
+                "perturbation pipeline active without a compressor — node {id} misrouted",
+            );
             let payload = Arc::new(Payload::Dense(self.theta.clone()));
             self.ep.send_to(&self.nbrs, round_tag, PayloadKind::Params, &payload)?;
             if self.task.use_tracker {
@@ -377,6 +406,72 @@ impl engine::Driver for NodeDriver<'_> {
         // below before combining — so the stack is never re-zeroed; stale
         // rows from earlier rounds are unreachable by construction.
         let got = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Params)?;
+        // DSGT's quarantine is kind-coupled — a sender non-finite in either
+        // stream is folded out of both mixes — so the tracker gather happens
+        // before the first combine (nothing between the two gathers touches
+        // the simulated clock, so honest rounds are unaffected).
+        let got_y = if self.task.use_tracker {
+            self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Tracker)?
+        } else {
+            Vec::new()
+        };
+
+        // ---- non-finite ingest guard (DESIGN.md §14) ----
+        // Classify each neighbor payload before anything is mixed; a bad
+        // sender's weight folds into the self-weight.  `bad` stays empty —
+        // and nothing below allocates — on the honest path.
+        let mut bad: Vec<usize> = Vec::new();
+        for (from, pl) in got.iter().chain(got_y.iter()) {
+            if !pl.is_finite() && !bad.contains(from) {
+                bad.push(*from);
+            }
+        }
+        let mut qidx: Vec<u32> = Vec::new();
+        let mut qval: Vec<f32> = Vec::new();
+        let (widx, wval): (&[u32], &[f32]) = if bad.is_empty() {
+            (&self.widx, &self.wval)
+        } else {
+            // Fold the quarantined neighbors' weights into the self-weight
+            // in CSR (ascending-column) order, materializing a missing
+            // diagonal and dropping exact-zero entries — the identical
+            // arithmetic, in the identical order, as the fused driver's
+            // `quarantine_compact`, so the fused==actors bitwise pin
+            // survives an active quarantine.
+            let mut folded = 0.0f32;
+            let mut dropped = 0u64;
+            for (&j, &v) in self.widx.iter().zip(&self.wval) {
+                if j as usize != id && bad.contains(&(j as usize)) {
+                    folded += v;
+                    dropped += 1;
+                }
+            }
+            let mut push = |j: u32, v: f32| {
+                if v != 0.0 {
+                    qidx.push(j);
+                    qval.push(v);
+                }
+            };
+            let mut diag_done = false;
+            for (&j, &v) in self.widx.iter().zip(&self.wval) {
+                let ju = j as usize;
+                if !diag_done && ju > id {
+                    push(id as u32, folded);
+                    diag_done = true;
+                }
+                if ju == id {
+                    push(j, v + folded);
+                    diag_done = true;
+                } else if !bad.contains(&ju) {
+                    push(j, v);
+                }
+            }
+            if !diag_done {
+                push(id as u32, folded);
+            }
+            self.ep.report_quarantine(dropped);
+            (&qidx, &qval)
+        };
+
         // Own mix row: the decoded x̂ under compression — exactly what the
         // neighbors decode from the wire — the true θ otherwise.
         if compressing {
@@ -385,23 +480,32 @@ impl engine::Driver for NodeDriver<'_> {
             self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.theta);
         }
         for (from, pl) in &got {
-            pl.decode_into(&mut self.stacked[from * p..(from + 1) * p]);
+            pl.decode_into(&mut self.stacked[from * p..(from + 1) * p])?;
         }
-        let mixed = self.compute.combine_sparse(&self.widx, &self.wval, &self.stacked)?;
+        let mixed = self.compute.combine_sparse(id as u32, widx, wval, &self.stacked)?;
 
         // ---- eq. 2 / eq. 3 update ----
+        // Byzantine nodes broadcast poison but don't follow the update
+        // rule: an attacker computes the round like everyone else (keeping
+        // the sampler and compressor streams aligned across drivers) and
+        // then discards the result, ending the round at its post-local
+        // state — the actors-side image of the fused driver's
+        // `restore_attacker_rows`.
+        let byzantine = self
+            .perturb
+            .as_ref()
+            .is_some_and(|pb| pb.attack.active() && pb.attack.is_attacker(id));
         self.sampler.batch(&self.task.shard, &mut self.bx, &mut self.by);
         if self.task.use_tracker {
-            let got_y = self.ep.gather_from(&self.nbrs, round_tag, PayloadKind::Tracker)?;
             if compressing {
                 self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.yhat_own);
             } else {
                 self.stacked[id * p..(id + 1) * p].copy_from_slice(&self.y_tr);
             }
             for (from, pl) in &got_y {
-                pl.decode_into(&mut self.stacked[from * p..(from + 1) * p]);
+                pl.decode_into(&mut self.stacked[from * p..(from + 1) * p])?;
             }
-            let mixed_y = self.compute.combine_sparse(&self.widx, &self.wval, &self.stacked)?;
+            let mixed_y = self.compute.combine_sparse(id as u32, widx, wval, &self.stacked)?;
             // θ^{r+1} = Σ W θ̂ (+ own full-precision correction under
             // compression, DESIGN.md §10) − α ϑ_i (own tracker)
             let mut theta_next = mixed;
@@ -417,9 +521,11 @@ impl engine::Driver for NodeDriver<'_> {
             }
             axpy(&mut y_next, 1.0, &g_new);
             axpy(&mut y_next, -1.0, &self.g_prev);
-            self.theta = theta_next;
-            self.y_tr = y_next;
-            self.g_prev = g_new;
+            if !byzantine {
+                self.theta = theta_next;
+                self.y_tr = y_next;
+                self.g_prev = g_new;
+            }
         } else {
             // θ^{r+1} = Σ W θ̂ (+ correction) − α ∇g(θ^r): gradient at
             // pre-mix θ
@@ -429,7 +535,9 @@ impl engine::Driver for NodeDriver<'_> {
                 add_diff(&mut theta_next, &self.theta, &self.xhat_own);
             }
             axpy(&mut theta_next, -lr, &grad);
-            self.theta = theta_next;
+            if !byzantine {
+                self.theta = theta_next;
+            }
         }
         // the communication gradient runs at this node's round speed too
         let s = self.task.cfg.compute_s_per_step;
@@ -471,6 +579,14 @@ where
     let eng = RoundEngine::from_config(cfg);
     let q = eng.q;
     let csched = ComputeSchedule::from_config(cfg)?;
+    // the observer mirrors the fused driver's (ε, δ) accounting: one DP
+    // release per payload kind per communication round (an upper bound
+    // under churn — offline rounds release nothing)
+    let dp = engine::adversary::dp_from_config(cfg)?;
+    let dp_kinds: u64 = if cfg.algo.uses_tracker() { 2 } else { 1 };
+    // under an active attack the observer reports honest-sub-fleet metrics
+    // (engine::strategy::eval_honest_subset, DESIGN.md §14), same as fused
+    let attack = engine::adversary::AttackSchedule::from_config(cfg)?;
     csched.ensure_runnable(n, eval_compute.local_steps_len())?;
     let net = Arc::new(NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?);
     // channels are wired over the union of every round's gossip graph
@@ -518,7 +634,8 @@ where
         let model = NativeModel::new(d_e, h_e);
         let theta0 = init_thetas(cfg.seed, n, &model);
         let mut log = RunLog::new(cfg.algo.name());
-        let eval0 = eval_compute.eval_full(&theta0, &ds.shards)?;
+        let eval0 =
+            engine::strategy::eval_honest_subset(Some(&attack), &theta0, &ds.shards, p, eval_compute)?;
         log.push(round_metrics(0, 0, eval0, stats.snapshot(), started.elapsed().as_secs_f64()));
 
         let mut pending: std::collections::BTreeMap<u64, (usize, Vec<f32>)> = Default::default();
@@ -535,7 +652,13 @@ where
             if entry.0 == n {
                 let (_, stacked) = pending.remove(&snap.round).unwrap();
                 stats.rounds.store(snap.round, std::sync::atomic::Ordering::Relaxed);
-                let eval = eval_compute.eval_full(&stacked, &ds.shards)?;
+                let eval = engine::strategy::eval_honest_subset(
+                    Some(&attack),
+                    &stacked,
+                    &ds.shards,
+                    p,
+                    eval_compute,
+                )?;
                 let steps = if csched.is_uniform() {
                     snap.round * q as u64
                 } else {
@@ -545,13 +668,15 @@ where
                     }
                     work / n as u64
                 };
-                log.push(round_metrics(
+                let mut row = round_metrics(
                     snap.round,
                     steps,
                     eval,
                     stats.snapshot(),
                     started.elapsed().as_secs_f64(),
-                ));
+                );
+                row.dp_epsilon = dp.epsilon(dp_kinds * snap.round);
+                log.push(row);
             }
         }
 
@@ -711,6 +836,85 @@ mod tests {
                 final_row.local_steps <= final_row.comm_rounds * cfg.q as u64,
                 "{plan}"
             );
+        }
+    }
+
+    #[test]
+    fn actor_matches_fused_under_attack_and_dp() {
+        // the adversarial encode boundary must not break driver equivalence:
+        // attacked and DP'd runs stay trajectory-identical between the
+        // actor and fused drivers, and their (ε, δ) accounting agrees bitwise
+        for (algo, plan, dp) in [
+            (AlgoKind::Dsgd, "sign-flip", "off"),
+            (AlgoKind::Dsgt, "sign-flip", "off"),
+            (AlgoKind::Dsgd, "stale-replay", "off"),
+            (AlgoKind::Dsgd, "none", "gaussian"),
+        ] {
+            let (mut cfg, ds, graph, w) = setup(algo, 1, 10);
+            cfg.eval_every = 1;
+            cfg.attack_plan = plan.into();
+            cfg.attack_frac = 0.25;
+            cfg.dp = dp.into();
+            cfg.dp_clip = 50.0;
+            let eval = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+            let factory = native_factory(&cfg);
+            let log_a = train(&cfg, &factory, &eval, &ds, &graph, &w).unwrap();
+            let log_f = crate::coordinator::fused::train(&cfg, &eval, &ds, &graph, &w).unwrap();
+            assert_eq!(log_a.rows.len(), log_f.rows.len(), "{algo:?}/{plan}/{dp}");
+            for (ra, rf) in log_a.rows.iter().zip(&log_f.rows) {
+                assert!(
+                    (ra.loss - rf.loss).abs() < 1e-9,
+                    "{algo:?}/{plan}/{dp} round {}: {} vs {}",
+                    ra.comm_rounds,
+                    ra.loss,
+                    rf.loss
+                );
+                assert!((ra.consensus - rf.consensus).abs() < 1e-9, "{algo:?}/{plan}/{dp}");
+                assert_eq!(
+                    ra.dp_epsilon.to_bits(),
+                    rf.dp_epsilon.to_bits(),
+                    "{algo:?}/{plan}/{dp} ε accounting must agree bitwise"
+                );
+            }
+            let (ba, bf) = (log_a.rows.last().unwrap().bytes, log_f.rows.last().unwrap().bytes);
+            assert_eq!(ba, bf, "{algo:?}/{plan}/{dp} byte accounting");
+            if dp == "gaussian" {
+                assert!(log_a.rows.last().unwrap().dp_epsilon > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn actor_quarantine_matches_fused() {
+        // an attack hot enough to overflow f32 produces non-finite payloads;
+        // both drivers must fold the attacker out (same arithmetic, same
+        // order) and report the same quarantine counts
+        for algo in [AlgoKind::Dsgd, AlgoKind::Dsgt] {
+            let (mut cfg, ds, graph, w) = setup(algo, 1, 8);
+            cfg.eval_every = 1;
+            cfg.attack_plan = "scaled-noise".into();
+            cfg.attack_frac = 0.25;
+            cfg.attack_scale = 1e39; // overflows f32 → Inf on the wire
+            let eval = NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m);
+            let factory = native_factory(&cfg);
+            let log_a = train(&cfg, &factory, &eval, &ds, &graph, &w).unwrap();
+            let log_f = crate::coordinator::fused::train(&cfg, &eval, &ds, &graph, &w).unwrap();
+            let (qa, qf) = (
+                log_a.rows.last().unwrap().quarantined,
+                log_f.rows.last().unwrap().quarantined,
+            );
+            assert!(qa > 0, "{algo:?}: the poisoned payloads must be quarantined");
+            assert_eq!(qa, qf, "{algo:?}: quarantine counts must agree across drivers");
+            // the quarantined trajectories agree too (NaN-safe: compare bits
+            // of the consensus, which stays finite for honest majorities)
+            for (ra, rf) in log_a.rows.iter().zip(&log_f.rows) {
+                let (ca, cf) = (ra.consensus, rf.consensus);
+                assert!(
+                    (ca.is_nan() && cf.is_nan()) || (ca - cf).abs() < 1e-9,
+                    "{algo:?} round {}: consensus {ca} vs {cf}",
+                    ra.comm_rounds
+                );
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! pure-rust twin (`algo::native`) for shape-free sweeps, property tests,
 //! and as the numerical oracle the integration tests compare PJRT against.
 
-use crate::algo::{add_diff, axpy};
+use crate::algo::{add_diff, axpy, RobustRule};
 use crate::algo::native::{NativeModel, Workspace};
 use crate::data::Shard;
 use crate::mixing::SparseW;
@@ -176,10 +176,12 @@ pub trait Compute {
 
     /// One node's gossip combine over its degree-sparse W row: `(idx, val)`
     /// pairs, ascending, nonzeros only — bitwise-equal to [`Compute::combine`]
-    /// on the dense row with those nonzeros.  Default: scatter the row dense
-    /// and call `combine` (artifact backends take dense W); the native
-    /// backend overrides with the O(deg·p) kernel.
-    fn combine_sparse(&self, idx: &[u32], val: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
+    /// on the dense row with those nonzeros.  `node` names the row's owner
+    /// (always a participant): the robust rules need it for the k < 3
+    /// keep-self guard; the mean path ignores it.  Default: scatter the row
+    /// dense and call `combine` (artifact backends take dense W); the
+    /// native backend overrides with the O(deg·p) kernel.
+    fn combine_sparse(&self, _node: u32, idx: &[u32], val: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
         let (_, _, p) = self.dims();
         ensure!(p > 0 && thetas.len() % p == 0, "thetas not a multiple of p");
         let n = thetas.len() / p;
@@ -301,7 +303,7 @@ pub trait Compute {
         let (m, md) = (by.len() / n, bx.len() / n);
         for i in 0..n {
             let (idx, val) = w.sparse.row(i);
-            let mixed = self.combine_sparse(idx, val, xhat)?;
+            let mixed = self.combine_sparse(i as u32, idx, val, xhat)?;
             let (loss, grad) = self.grad_step(
                 &theta[i * p..(i + 1) * p],
                 &bx[i * md..(i + 1) * md],
@@ -353,12 +355,12 @@ pub trait Compute {
         for i in 0..n {
             let row = i * p..(i + 1) * p;
             let (idx, val) = w.sparse.row(i);
-            let mut t_next = self.combine_sparse(idx, val, xhat)?;
+            let mut t_next = self.combine_sparse(i as u32, idx, val, xhat)?;
             add_diff(&mut t_next, &theta[row.clone()], &xhat[row.clone()]);
             axpy(&mut t_next, -lr, &y_tr[row.clone()]);
             let (loss, g_new) =
                 self.grad_step(&t_next, &bx[i * md..(i + 1) * md], &by[i * m..(i + 1) * m])?;
-            let mut y_next = self.combine_sparse(idx, val, yhat)?;
+            let mut y_next = self.combine_sparse(i as u32, idx, val, yhat)?;
             add_diff(&mut y_next, &y_tr[row.clone()], &yhat[row.clone()]);
             axpy(&mut y_next, 1.0, &g_new);
             axpy(&mut y_next, -1.0, &g_old[row.clone()]);
@@ -653,17 +655,30 @@ pub struct NativeCompute {
     pub m: usize,
     /// Worker threads for whole-network ops: 0 = auto (one per core).
     pub threads: usize,
+    /// How gossip rows aggregate their neighborhoods (DESIGN.md §14).
+    /// [`RobustRule::Mean`] — the default — routes every combine through
+    /// the pinned legacy kernels bit for bit; the robust rules screen
+    /// Byzantine payloads at the cost of mean preservation.
+    pub rule: RobustRule,
 }
 
 impl NativeCompute {
     /// Backend for a `d`-feature, `h`-hidden model over `n` nodes, batch `m`.
     pub fn new(d: usize, h: usize, n: usize, m: usize) -> Self {
-        NativeCompute { model: NativeModel::new(d, h), n, m, threads: 0 }
+        NativeCompute { model: NativeModel::new(d, h), n, m, threads: 0, rule: RobustRule::Mean }
     }
 
     /// Set the worker-thread count (builder style); 0 = auto, 1 = serial.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Set the gossip combine rule (builder style); every round kernel and
+    /// `combine_sparse` dispatches through it, so the fused, actor, and
+    /// async drivers all aggregate identically.
+    pub fn with_robust_rule(mut self, rule: RobustRule) -> Self {
+        self.rule = rule;
         self
     }
 
@@ -829,9 +844,9 @@ impl Compute for NativeCompute {
         Ok(self.model.combine(wrow, thetas))
     }
 
-    fn combine_sparse(&self, idx: &[u32], val: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
+    fn combine_sparse(&self, node: u32, idx: &[u32], val: &[f32], thetas: &[f32]) -> Result<Vec<f32>> {
         let mut out = vec![0.0f32; self.model.p()];
-        with_ws(|ws| self.model.combine_sparse_into(idx, val, thetas, &mut out, ws));
+        with_ws(|ws| self.model.combine_rule_into(self.rule, node, idx, val, thetas, &mut out, ws));
         Ok(out)
     }
 
@@ -873,6 +888,7 @@ impl Compute for NativeCompute {
         ensure!(w.sparse.n() == n, "sparse W is {}x, compute wants n={n}", w.sparse.n());
         ensure!(theta_out.len() == n * p && losses.len() == n, "output slab size mismatch");
         let model = &self.model;
+        let rule = self.rule;
         let sparse = w.sparse;
         par_each(
             self.pool(n),
@@ -880,7 +896,9 @@ impl Compute for NativeCompute {
             |i, (out, loss)| {
                 let (idx, val) = sparse.row(i);
                 *loss = with_ws(|ws| {
-                    model.dsgd_node_into(
+                    model.dsgd_node_rule_into(
+                        rule,
+                        i as u32,
                         idx,
                         val,
                         theta,
@@ -951,6 +969,7 @@ impl Compute for NativeCompute {
             "output slab size mismatch"
         );
         let model = &self.model;
+        let rule = self.rule;
         let sparse = w.sparse;
         // node i depends only on row i of Y/G plus shared Θ/Y — the whole
         // eq.-3 round fans out per node, each writing its own slab rows
@@ -964,7 +983,9 @@ impl Compute for NativeCompute {
             |i, (((t, y), g), loss)| {
                 let (idx, val) = sparse.row(i);
                 *loss = with_ws(|ws| {
-                    model.dsgt_node_into(
+                    model.dsgt_node_rule_into(
+                        rule,
+                        i as u32,
                         idx,
                         val,
                         theta,
@@ -1001,6 +1022,7 @@ impl Compute for NativeCompute {
         ensure!(xhat.len() == n * p, "decoded stack size mismatch");
         ensure!(theta_out.len() == n * p && losses.len() == n, "output slab size mismatch");
         let model = &self.model;
+        let rule = self.rule;
         let sparse = w.sparse;
         // identical math to the trait default (decoded-stack mix, own
         // full-precision correction, gradient at the node's true row),
@@ -1011,7 +1033,9 @@ impl Compute for NativeCompute {
             |i, (out, loss)| {
                 let (idx, val) = sparse.row(i);
                 *loss = with_ws(|ws| {
-                    model.dsgd_node_compressed_into(
+                    model.dsgd_node_compressed_rule_into(
+                        rule,
+                        i as u32,
                         idx,
                         val,
                         xhat,
@@ -1054,6 +1078,7 @@ impl Compute for NativeCompute {
             "output slab size mismatch"
         );
         let model = &self.model;
+        let rule = self.rule;
         let sparse = w.sparse;
         par_each(
             self.pool(n),
@@ -1065,7 +1090,9 @@ impl Compute for NativeCompute {
             |i, (((t, y), g), loss)| {
                 let (idx, val) = sparse.row(i);
                 *loss = with_ws(|ws| {
-                    model.dsgt_node_compressed_into(
+                    model.dsgt_node_compressed_rule_into(
+                        rule,
+                        i as u32,
                         idx,
                         val,
                         xhat,

@@ -70,13 +70,28 @@ pub fn assemble(cfg: &ExperimentConfig) -> Result<Assembled> {
 
 /// Build the configured compute backend.  The native backend fans its
 /// whole-network ops over `cfg.threads` workers (0 = auto) with
-/// bitwise-deterministic results.
+/// bitwise-deterministic results and carries the configured robust combine
+/// rule (`robust.rule`); the PJRT artifacts lower the plain-mean kernels
+/// only, so any adversarial axis on that backend is a loud error.
 pub fn make_compute(cfg: &ExperimentConfig) -> Result<Box<dyn Compute>> {
+    let rule = crate::algo::RobustRule::parse(&cfg.robust_rule, cfg.robust_trim)?;
     match cfg.backend {
         Backend::Native => Ok(Box::new(
-            NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m).with_threads(cfg.threads),
+            NativeCompute::new(cfg.d, cfg.hidden, cfg.n, cfg.m)
+                .with_threads(cfg.threads)
+                .with_robust_rule(rule),
         )),
         Backend::Pjrt => {
+            if crate::engine::adversary::perturb_active(cfg) || !rule.is_mean() {
+                bail!(
+                    "adversarial settings (attack.plan={}, robust.rule={}, dp={}) requested, \
+                     but the PJRT artifacts lower the plain-mean gossip kernels only and \
+                     would silently ignore them; rerun with --backend native",
+                    cfg.attack_plan,
+                    cfg.robust_rule,
+                    cfg.dp
+                );
+            }
             let c = PjrtCompute::load(std::path::Path::new(&cfg.artifacts_dir))
                 .context("loading PJRT artifacts")?;
             c.engine().check_config(cfg.n, cfg.d, cfg.hidden, cfg.m, cfg.q)?;
@@ -161,6 +176,25 @@ mod tests {
             let last = log.rows.last().unwrap().loss;
             assert!(last < first, "{algo:?}: loss {first} -> {last}");
             assert!(last.is_finite());
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_rejects_adversarial_axes_loudly() {
+        // the bail fires before any artifact loading, so no artifacts needed
+        for (attack, rule, dp) in [
+            ("sign-flip", "mean", "off"),
+            ("none", "median", "off"),
+            ("none", "mean", "gaussian"),
+        ] {
+            let mut cfg = native_cfg();
+            cfg.backend = Backend::Pjrt;
+            cfg.attack_plan = attack.into();
+            cfg.attack_frac = if attack == "none" { 0.0 } else { 0.2 };
+            cfg.robust_rule = rule.into();
+            cfg.dp = dp.into();
+            let err = make_compute(&cfg).unwrap_err().to_string();
+            assert!(err.contains("backend native"), "{attack}/{rule}/{dp}: {err}");
         }
     }
 

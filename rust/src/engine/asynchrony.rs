@@ -92,6 +92,7 @@ use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap};
 use std::rc::Rc;
 
+use super::adversary::{dp_from_config, DpPlan, MsgPerturb};
 use super::{ComputeSchedule, RoundEngine};
 
 /// Virtual seconds → integer microseconds (the heap's total-order clock).
@@ -239,6 +240,13 @@ struct Sim<'a> {
     net: NetworkSchedule,
     csched: ComputeSchedule,
     comm: GossipComm,
+    /// Attack/DP perturbation pipeline (`engine::adversary`), applied at the
+    /// encode boundary — `None` on the pinned honest path.
+    perturb: Option<MsgPerturb>,
+    /// DP accountant inputs: the (ε, δ) plan and releases per cycle (2 for
+    /// DSGT's θ+ϑ streams, 1 otherwise).
+    dp: DpPlan,
+    dp_kinds: u64,
     acct: Accountant,
     nodes: Vec<Node>,
     scratch: Scratch,
@@ -323,7 +331,15 @@ impl Sim<'_> {
         for (i, node) in self.nodes.iter().enumerate() {
             self.scratch.eval_stack[i * p..(i + 1) * p].copy_from_slice(&node.theta);
         }
-        let eval = self.compute.eval_full(&self.scratch.eval_stack, &self.ds.shards)?;
+        // honest-sub-fleet metrics under an active attack (DESIGN.md §14),
+        // same masking as the sync drivers
+        let eval = crate::engine::strategy::eval_honest_subset(
+            self.perturb.as_ref().map(|pb| &pb.attack),
+            &self.scratch.eval_stack,
+            &self.ds.shards,
+            p,
+            self.compute,
+        )?;
         let mut snap = self.acct.snapshot();
         // the event clock IS the wall clock here; the accountant's
         // serialized total is link occupancy (see the module docs)
@@ -333,7 +349,13 @@ impl Sim<'_> {
         } else {
             self.work_through / self.n as u64
         };
-        self.log.push(round_metrics(m, steps, eval, snap, self.started.elapsed().as_secs_f64()));
+        let mut row = round_metrics(m, steps, eval, snap, self.started.elapsed().as_secs_f64());
+        // (ε, δ) upper bound at this checkpoint: without a barrier the
+        // fleet's release counts diverge, so report the *fastest* node's
+        // (kinds × its completed cycles) — conservative for every node
+        let max_done = self.nodes.iter().map(|nd| nd.done).max().unwrap_or(0);
+        row.dp_epsilon = self.dp.epsilon(self.dp_kinds * max_done);
+        self.log.push(row);
         Ok(())
     }
 
@@ -362,11 +384,15 @@ impl Sim<'_> {
     /// Encode one outgoing payload stream of cycle `g` and return what the
     /// wire delivers.  Under compression this is the per-stream twin of the
     /// sync drivers' encode step — same helpers, same `(seed, cycle, node,
-    /// kind)` key — writing the node's own mix row into `hat`; uncompressed
-    /// sends ship the raw vector.
+    /// kind)` key, and the same attack/DP perturbation applied to the
+    /// message before encoding (so an attacker's own mix row drinks its own
+    /// poison here too) — writing the node's own mix row into `hat`;
+    /// uncompressed sends ship the raw vector (only reachable unperturbed:
+    /// [`train_report`] routes perturbed runs through `Identity`).
     #[allow(clippy::too_many_arguments)]
     fn encode_stream(
         comm: &GossipComm,
+        perturb: Option<&mut MsgPerturb>,
         g: usize,
         i: usize,
         kind: PayloadKind,
@@ -374,7 +400,7 @@ impl Sim<'_> {
         e: &mut [f32],
         vbuf: &mut [f32],
         hat: &mut [f32],
-    ) -> Rc<Vec<f32>> {
+    ) -> Result<Rc<Vec<f32>>> {
         match &comm.comp {
             Some(comp) => {
                 if comm.error_feedback {
@@ -382,14 +408,23 @@ impl Sim<'_> {
                 } else {
                     vbuf.copy_from_slice(data);
                 }
+                if let Some(pb) = perturb {
+                    pb.apply(g, i, kind.tag(), vbuf);
+                }
                 let enc = comp.encode(vbuf, MsgKey::new(comm.seed, g, i, kind));
-                decode_into(&enc, hat);
+                decode_into(&enc, hat)?;
                 if comm.error_feedback {
                     residual_update(vbuf, hat, e);
                 }
-                Rc::new(hat.to_vec())
+                Ok(Rc::new(hat.to_vec()))
             }
-            None => Rc::new(data.to_vec()),
+            None => {
+                anyhow::ensure!(
+                    perturb.is_none(),
+                    "perturbation pipeline active without a compressor — node {i} misrouted",
+                );
+                Ok(Rc::new(data.to_vec()))
+            }
         }
     }
 
@@ -477,6 +512,7 @@ impl Sim<'_> {
             let node = &mut self.nodes[i];
             let theta_pl = Self::encode_stream(
                 &self.comm,
+                self.perturb.as_mut(),
                 g,
                 i,
                 PayloadKind::Params,
@@ -484,10 +520,11 @@ impl Sim<'_> {
                 &mut node.e_theta,
                 &mut self.scratch.vbuf,
                 &mut self.scratch.xhat_own,
-            );
+            )?;
             let tracker_pl = if self.use_tracker {
                 Some(Self::encode_stream(
                     &self.comm,
+                    self.perturb.as_mut(),
                     g,
                     i,
                     PayloadKind::Tracker,
@@ -495,7 +532,7 @@ impl Sim<'_> {
                     &mut node.e_y,
                     &mut self.scratch.vbuf,
                     &mut self.scratch.yhat_own,
-                ))
+                )?)
             } else {
                 None
             };
@@ -565,9 +602,18 @@ impl Sim<'_> {
             }
         }
         let mixed =
-            self.compute.combine_sparse(&self.scratch.cw_idx, &self.scratch.cw_val, &self.scratch.stacked)?;
+            self.compute.combine_sparse(i as u32, &self.scratch.cw_idx, &self.scratch.cw_val, &self.scratch.stacked)?;
 
         // ---- eq. 2 / eq. 3 update (the sync strategies' arithmetic) ----
+        // Byzantine nodes broadcast poison but don't follow the update
+        // rule: an attacker runs the cycle like everyone else (keeping the
+        // sampler and compressor streams aligned) and then discards the
+        // result, ending the cycle at its post-local state — the async
+        // image of the sync drivers' `restore_attacker_rows`.
+        let byzantine = self
+            .perturb
+            .as_ref()
+            .is_some_and(|pb| pb.attack.active() && pb.attack.is_attacker(i));
         {
             let node = &mut self.nodes[i];
             node.sampler.batch(&self.ds.shards[i], &mut self.scratch.bx, &mut self.scratch.by);
@@ -592,6 +638,7 @@ impl Sim<'_> {
                 }
             }
             let mixed_y = self.compute.combine_sparse(
+                i as u32,
                 &self.scratch.cw_idx,
                 &self.scratch.cw_val,
                 &self.scratch.stacked,
@@ -612,9 +659,11 @@ impl Sim<'_> {
             }
             axpy(&mut y_next, 1.0, &g_new);
             axpy(&mut y_next, -1.0, &node.g_prev);
-            node.theta = theta_next;
-            node.y_tr = y_next;
-            node.g_prev = g_new;
+            if !byzantine {
+                node.theta = theta_next;
+                node.y_tr = y_next;
+                node.g_prev = g_new;
+            }
         } else {
             let node = &mut self.nodes[i];
             // θ⁺ = Σ W θ̂ (+ correction) − α ∇g(θ): gradient at pre-mix θ
@@ -624,7 +673,9 @@ impl Sim<'_> {
                 add_diff(&mut theta_next, &node.theta, &self.scratch.xhat_own);
             }
             axpy(&mut theta_next, -lr, &grad);
-            node.theta = theta_next;
+            if !byzantine {
+                node.theta = theta_next;
+            }
         }
 
         // ---- fire-and-forget broadcast: one Deliver event per neighbor ----
@@ -700,7 +751,15 @@ pub fn train_report(
     let csched = ComputeSchedule::from_config(cfg)?;
     csched.ensure_runnable(n, compute.local_steps_len())?;
     let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
-    let comm = GossipComm::from_config(cfg)?;
+    let mut comm = GossipComm::from_config(cfg)?;
+    // adversarial/DP perturbation lives at the encode boundary: a perturbed
+    // run with no compressor routes through Identity (same dense bytes,
+    // same decoded values) — the same routing every other driver makes
+    let perturb = MsgPerturb::from_config(cfg)?;
+    if perturb.is_some() && comm.comp.is_none() {
+        comm.comp = Some(Box::new(crate::compress::Identity));
+    }
+    let dp = dp_from_config(cfg)?;
     let use_tracker = cfg.algo.uses_tracker();
     let kinds = if use_tracker { 2 } else { 1 };
     let kind_bytes = vec![comm.msg_bytes(p); kinds];
@@ -740,6 +799,9 @@ pub fn train_report(
         net,
         csched,
         comm,
+        perturb,
+        dp,
+        dp_kinds: kinds as u64,
         acct: Accountant::new(link),
         nodes,
         scratch: Scratch {
@@ -813,12 +875,27 @@ pub fn train_report(
                     sim.cycle(ev.node as usize, ev.t_us)?;
                 }
                 Action::Deliver { from, theta, tracker, sent_us } => {
+                    // non-finite ingest guard (DESIGN.md §14): a poisoned
+                    // payload never enters the inbox, and any state already
+                    // banked from the same sender is evicted — at mix time
+                    // the sender's weight then folds into the receiver's
+                    // self-weight (the same compaction stale entries take)
+                    // until a clean message arrives
+                    let poisoned = theta.iter().any(|v| !v.is_finite())
+                        || tracker
+                            .as_ref()
+                            .is_some_and(|tr| tr.iter().any(|v| !v.is_finite()));
                     let inbox = &mut sim.nodes[ev.node as usize].inbox;
-                    // keep only the newest state per neighbor (equal-size
-                    // messages can't reorder, but the guard costs nothing)
-                    let newer = inbox.get(&from).map_or(true, |old| old.sent_us <= sent_us);
-                    if newer {
-                        inbox.insert(from, InMsg { theta, tracker, sent_us });
+                    if poisoned {
+                        inbox.remove(&from);
+                        sim.acct.report_quarantine(1);
+                    } else {
+                        // keep only the newest state per neighbor (equal-size
+                        // messages can't reorder, but the guard costs nothing)
+                        let newer = inbox.get(&from).map_or(true, |old| old.sent_us <= sent_us);
+                        if newer {
+                            inbox.insert(from, InMsg { theta, tracker, sent_us });
+                        }
                     }
                 }
             }
@@ -1049,6 +1126,58 @@ mod tests {
         let again = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
         assert_eq!(budgeted.trace_hash, again.trace_hash);
         assert_eq!(budgeted.theta, again.theta);
+    }
+
+    #[test]
+    fn async_attack_and_dp_replay_bitwise_and_report_epsilon() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd, 4, 48);
+        let honest = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        cfg.attack_plan = "sign-flip".into();
+        cfg.attack_frac = 0.2;
+        cfg.dp = "gaussian".into();
+        cfg.dp_clip = 50.0;
+        let a = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let b = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        // the adversarial axis keeps the event-driven replay bitwise
+        assert_eq!(a.trace_hash, b.trace_hash, "event order diverged under attack");
+        assert_eq!(a.theta, b.theta, "final θ diverged under attack");
+        // ...while actually moving the trajectory off the honest one
+        assert_ne!(a.theta, honest.theta, "attack + DP must move the trajectory");
+        // bytes unchanged: the Identity routing ships the same dense f32s
+        assert_eq!(
+            a.log.rows.last().unwrap().bytes,
+            honest.log.rows.last().unwrap().bytes
+        );
+        // the (ε, δ) accountant reports a growing, positive ε; honest runs 0
+        let eps: Vec<f64> = a.log.rows.iter().map(|r| r.dp_epsilon).collect();
+        assert_eq!(eps[0], 0.0);
+        assert!(*eps.last().unwrap() > 0.0);
+        assert!(eps.windows(2).all(|w| w[0] <= w[1]), "ε must be monotone: {eps:?}");
+        assert!(honest.log.rows.iter().all(|r| r.dp_epsilon == 0.0));
+    }
+
+    #[test]
+    fn async_quarantines_poisoned_deliveries() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgt, 4, 48);
+        cfg.attack_plan = "scaled-noise".into();
+        cfg.attack_frac = 0.2;
+        cfg.attack_scale = 1e39; // overflows f32 → Inf payloads on the wire
+        let rep = train_report(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert!(
+            rep.log.rows.last().unwrap().quarantined > 0,
+            "poisoned deliveries must be quarantined"
+        );
+        // every honest node's final θ stays finite — the poison never mixed
+        let sched = crate::engine::AttackSchedule::from_config(&cfg).unwrap();
+        let p = rep.theta.len() / cfg.n;
+        for i in 0..cfg.n {
+            if !sched.is_attacker(i) {
+                assert!(
+                    rep.theta[i * p..(i + 1) * p].iter().all(|v| v.is_finite()),
+                    "honest node {i} was poisoned"
+                );
+            }
+        }
     }
 
     #[test]

@@ -36,10 +36,12 @@
 //! test, for static and dynamic network plans, every compressor, and every
 //! straggler plan alike).
 
+pub mod adversary;
 pub mod asynchrony;
 pub mod stragglers;
 pub mod strategy;
 
+pub use adversary::{AttackPlan, AttackSchedule, DpPlan, MsgPerturb};
 pub use stragglers::{ComputePlan, ComputeSchedule};
 pub use strategy::{
     CentralizedStrategy, CommCost, CommStrategy, DsgdStrategy, DsgtStrategy, FedAvgStrategy,
@@ -194,7 +196,10 @@ impl<'a> EngineState<'a> {
         let n = shards.len();
         let m = cfg.m;
         let local = RoundPlan::new(cfg.algo.effective_q(cfg.q)).local_per_round;
-        let compressing = cfg.compress != "none";
+        // perturbed runs (attack/DP) route through the encode path even when
+        // no compressor is configured (the driver installs Identity), so the
+        // decoded-stack slabs must exist for them too
+        let compressing = cfg.compress != "none" || adversary::perturb_active(cfg);
         let ef = compressing && cfg.error_feedback;
         EngineState {
             n,
@@ -282,6 +287,17 @@ pub struct SyncDriver<'a> {
     online: Vec<bool>,
     round_edges: u64,
     wf_key: Option<u64>,
+    /// The run's DP plan — drives the per-row (ε, δ) report (`DpPlan::off()`
+    /// for non-gossip baselines and honest runs: ε ≡ 0).
+    dp: DpPlan,
+    /// Gaussian releases per node per round (1 for DSGD's θ, 2 for DSGT's
+    /// θ + ϑ).  The reported ε after round r composes `dp_kinds · r`
+    /// releases — an upper bound under churn, where offline rounds release
+    /// nothing (documented in DESIGN.md §14).
+    dp_kinds: u64,
+    /// Quarantine events already forwarded to the accountant (the strategy
+    /// counter is cumulative; the accountant wants per-round deltas).
+    q_reported: u64,
     log: RunLog,
     started: std::time::Instant,
 }
@@ -323,14 +339,25 @@ impl<'a> SyncDriver<'a> {
         let csched = ComputeSchedule::from_config(cfg)?;
         csched.ensure_runnable(ds.n_hospitals(), compute.local_steps_len())?;
         let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
+        // adversarial axis: the perturbation pipeline (attack and/or DP) is
+        // None on the pinned honest defaults; when active the run is routed
+        // through the encode path (Identity compressor if none configured,
+        // bitwise-equal to dense and charged at the same 4p wire bytes) so
+        // the pipeline always sits at the message-encode boundary
+        let perturb = MsgPerturb::from_config(cfg)?;
+        let dp = adversary::dp_from_config(cfg)?;
+        let mut comm = crate::compress::GossipComm::from_config(cfg)?;
+        if perturb.is_some() && comm.comp.is_none() {
+            comm.comp = Some(Box::new(crate::compress::Identity));
+        }
         // compression context: the compressor, EF toggle, and seed the
         // per-message keys derive from — identical in the actor driver
         let strategy: Box<dyn CommStrategy> = match cfg.algo {
             AlgoKind::Dsgd | AlgoKind::FdDsgd => {
-                Box::new(DsgdStrategy::new(crate::compress::GossipComm::from_config(cfg)?, p))
+                Box::new(DsgdStrategy::new(comm, p).with_perturb(perturb))
             }
             AlgoKind::Dsgt | AlgoKind::FdDsgt => {
-                Box::new(DsgtStrategy::new(crate::compress::GossipComm::from_config(cfg)?, p))
+                Box::new(DsgtStrategy::new(comm, p).with_perturb(perturb))
             }
             other => bail!("{other:?} is not a decentralized gossip algorithm"),
         };
@@ -342,7 +369,7 @@ impl<'a> SyncDriver<'a> {
             drop_prob: 0.0, // enforced lossless above
         };
         let acct = Accountant::new(link);
-        Ok(Self::build(
+        let mut driver = Self::build(
             cfg,
             compute,
             Cow::Borrowed(&ds.shards[..]),
@@ -352,7 +379,11 @@ impl<'a> SyncDriver<'a> {
             Some(net),
             csched,
             cfg.algo.name(),
-        ))
+        );
+        driver.dp = dp;
+        driver.dp_kinds =
+            if matches!(cfg.algo, AlgoKind::Dsgt | AlgoKind::FdDsgt) { 2 } else { 1 };
+        Ok(driver)
     }
 
     /// Star-network FedAvg baseline: every row of the stack starts from the
@@ -396,6 +427,17 @@ impl<'a> SyncDriver<'a> {
                  synchronous server rounds and would silently ignore it; straggler \
                  plans apply to gossip algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
                 cfg.compute_plan
+            );
+        }
+        if adversary::perturb_active(cfg) || cfg.robust_rule != "mean" {
+            bail!(
+                "adversarial settings (attack.plan={}, robust.rule={}, dp={}) requested, \
+                 but the FedAvg baseline has no gossip messages to attack, screen, or \
+                 privatize and would silently ignore them; the adversarial axis applies \
+                 to gossip algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.attack_plan,
+                cfg.robust_rule,
+                cfg.dp
             );
         }
         let n = ds.n_hospitals();
@@ -472,6 +514,17 @@ impl<'a> SyncDriver<'a> {
                 cfg.compute_plan
             );
         }
+        if adversary::perturb_active(cfg) || cfg.robust_rule != "mean" {
+            bail!(
+                "adversarial settings (attack.plan={}, robust.rule={}, dp={}) requested, \
+                 but the centralized baseline is a single fusion center with no neighbors \
+                 to attack, screen, or privatize and would silently ignore them; the \
+                 adversarial axis applies to gossip algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.attack_plan,
+                cfg.robust_rule,
+                cfg.dp
+            );
+        }
         let model = NativeModel::new(d, h);
         let theta = init_theta(cfg.seed, 0, &model);
         Ok(Self::build(
@@ -518,6 +571,9 @@ impl<'a> SyncDriver<'a> {
             online: vec![true; n],
             round_edges: 0,
             wf_key: None,
+            dp: DpPlan::off(),
+            dp_kinds: 1,
+            q_reported: 0,
             log: RunLog::new(name),
             started: std::time::Instant::now(),
         }
@@ -644,6 +700,16 @@ impl Driver for SyncDriver<'_> {
             round,
             lr,
         )?;
+        // forward this round's quarantine events (non-finite ingest guard,
+        // DESIGN.md §14) to the accountant — the strategy counter is
+        // cumulative, the accountant wants the delta
+        let q_total = self.strategy.quarantined();
+        if q_total > self.q_reported {
+            if let Some(acct) = self.acct.as_mut() {
+                acct.report_quarantine(q_total - self.q_reported);
+            }
+            self.q_reported = q_total;
+        }
         if !self.csched.is_uniform() {
             // true per-node local work of this round (drives the
             // `local_steps` metric; the uniform path keeps the engine's
@@ -696,13 +762,12 @@ impl Driver for SyncDriver<'_> {
         } else {
             self.work_done / self.csched.n() as u64
         };
-        self.log.push(round_metrics(
-            round,
-            steps,
-            eval,
-            net,
-            self.started.elapsed().as_secs_f64(),
-        ));
+        let mut m =
+            round_metrics(round, steps, eval, net, self.started.elapsed().as_secs_f64());
+        // (ε, δ) so far: dp_kinds releases per node per round, composed by
+        // the analytic Gaussian accountant (0 when DP is off)
+        m.dp_epsilon = self.dp.epsilon(self.dp_kinds * round);
+        self.log.push(m);
         Ok(())
     }
 }
@@ -972,6 +1037,107 @@ mod tests {
         cfg.algo = AlgoKind::Centralized;
         let err = train_centralized(&cfg, &compute, &ds).unwrap_err();
         assert!(err.to_string().contains("compress"), "{err}");
+    }
+
+    #[test]
+    fn baselines_reject_adversarial_axes_loudly() {
+        let (mut cfg, compute, ds, ..) = setup(AlgoKind::FedAvg);
+        cfg.attack_plan = "sign-flip".into();
+        cfg.attack_frac = 0.25;
+        let err = train_fedavg(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("gossip"), "{err}");
+        cfg.attack_plan = "none".into();
+        cfg.attack_frac = 0.0;
+        cfg.dp = "gaussian".into();
+        let err = train_fedavg(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("dp=gaussian"), "{err}");
+        cfg.dp = "off".into();
+        cfg.robust_rule = "median".into();
+        cfg.algo = AlgoKind::Centralized;
+        let err = train_centralized(&cfg, &compute, &ds).unwrap_err();
+        assert!(err.to_string().contains("fusion center"), "{err}");
+    }
+
+    #[test]
+    fn attacked_runs_replay_bitwise_and_move_the_trajectory() {
+        let (cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd);
+        let (honest, _) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        let mut acfg = cfg.clone();
+        acfg.attack_plan = "sign-flip".into();
+        acfg.attack_frac = 0.25;
+        let (a, ta) = train_decentralized(&acfg, &compute, &ds, &graph, &w).unwrap();
+        let (_b, tb) = train_decentralized(&acfg, &compute, &ds, &graph, &w).unwrap();
+        assert_eq!(ta, tb, "attacked runs must replay bitwise");
+        assert_ne!(
+            a.rows.last().unwrap().loss.to_bits(),
+            honest.rows.last().unwrap().loss.to_bits(),
+            "a 25% sign-flip adversary must move the trajectory"
+        );
+        // wire accounting is untouched by the Identity routing: same bytes
+        assert_eq!(a.rows.last().unwrap().bytes, honest.rows.last().unwrap().bytes);
+    }
+
+    #[test]
+    fn dp_runs_report_a_growing_epsilon() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd);
+        cfg.dp = "gaussian".into();
+        cfg.dp_clip = 50.0;
+        cfg.dp_sigma = 1.0;
+        let (log, theta) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert!(theta.iter().all(|v| v.is_finite()));
+        let rows = &log.rows;
+        assert_eq!(rows[0].dp_epsilon, 0.0, "round 0 releases nothing");
+        let eps: Vec<f64> = rows[1..].iter().map(|r| r.dp_epsilon).collect();
+        assert!(eps.iter().all(|&e| e > 0.0), "{eps:?}");
+        assert!(eps.windows(2).all(|w| w[1] > w[0]), "ε must compose upward: {eps:?}");
+        // and it matches the plan's accountant exactly (1 release/round for DSGD)
+        let plan = DpPlan { on: true, clip: 50.0, sigma: 1.0, delta: cfg.dp_delta };
+        let last = rows.last().unwrap();
+        assert_eq!(last.dp_epsilon, plan.epsilon(last.comm_rounds));
+        // honest rows report ε ≡ 0
+        let (h, _) = train_decentralized(
+            &{
+                let mut c = cfg.clone();
+                c.dp = "off".into();
+                c
+            },
+            &compute,
+            &ds,
+            &graph,
+            &w,
+        )
+        .unwrap();
+        assert!(h.rows.iter().all(|r| r.dp_epsilon == 0.0));
+    }
+
+    #[test]
+    fn non_finite_payloads_are_quarantined_not_mixed() {
+        let (mut cfg, compute, ds, graph, w) = setup(AlgoKind::FdDsgd);
+        cfg.attack_plan = "scaled-noise".into();
+        cfg.attack_frac = 0.25;
+        cfg.attack_scale = 1e39; // overflows f32 → ±Inf payload rows
+        let (log, theta) = train_decentralized(&cfg, &compute, &ds, &graph, &w).unwrap();
+        assert!(
+            log.rows.last().unwrap().quarantined > 0,
+            "Inf payloads must be counted as quarantined"
+        );
+        // every honest node's parameters stay finite — the poison never mixed
+        let sched = AttackSchedule::new(
+            AttackPlan::ScaledNoise { scale: 1e39 },
+            0.25,
+            cfg.n,
+            cfg.seed,
+        )
+        .unwrap();
+        let p = theta.len() / cfg.n;
+        for i in 0..cfg.n {
+            if !sched.is_attacker(i) {
+                assert!(
+                    theta[i * p..(i + 1) * p].iter().all(|v| v.is_finite()),
+                    "honest row {i} was poisoned"
+                );
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod churn;
 pub mod compress;
 pub mod fig1;
 pub mod fig2;
+pub mod robust;
 pub mod speedup;
 pub mod stragglers;
 pub mod sweeps;

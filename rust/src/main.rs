@@ -6,7 +6,9 @@
 use anyhow::{bail, Result};
 use decfl::cli::{apply_common_overrides, Args};
 use decfl::config::{AlgoKind, ExperimentConfig};
-use decfl::experiments::{asynchrony, churn, compress, fig1, fig2, speedup, stragglers, sweeps};
+use decfl::experiments::{
+    asynchrony, churn, compress, fig1, fig2, robust, speedup, stragglers, sweeps,
+};
 
 const HELP: &str = "\
 decfl — fully decentralized federated learning for electronic health records
@@ -36,6 +38,11 @@ SUBCOMMANDS
   async       EXP-AS1: wall-clock-vs-accuracy frontier — sync barrier vs
               asynchronous event-driven gossip under straggler plans
               (--stalenesses, --topos; compute plan defaults to lognormal)
+  robust      EXP-R1: Byzantine robustness — accuracy vs attacker fraction
+              × combine rule × topology, with an attack-free plain-mean
+              baseline per topology (--rules, --fracs, --topos; the attack
+              plan defaults to sign-flip, shape it with --attack-plan /
+              --attack-scale / --attack-age, layer DP with --dp-*)
   export-data write the synthetic cohort as per-hospital CSVs
   info        print artifact manifest + config summary
   help        this text
@@ -78,6 +85,23 @@ COMMON OPTIONS (train + experiments)
                           (default 1.0,0.5; node i runs at tiers[i mod len])
   --slow-frac <p>         per-round preemption prob for dropout (default .25)
   --sigma <s>             lognormal σ of the per-round speed (default 0.5)
+  --attack-plan <p>       none|sign-flip|scaled-noise|stale-replay — Byzantine
+                          message perturbation at the encode boundary
+                          (default none; gossip algorithms + native backend)
+  --attack-frac <f>       attacker fraction in [0,1); the attacker set is
+                          pure in (seed, round, node) (default 0)
+  --attack-scale <s>      noise multiplier for scaled-noise (default 3.0)
+  --attack-age <r>        replay age in rounds for stale-replay (default 5)
+  --robust-rule <r>       mean|trimmed-mean|median|krum — neighbor combine
+                          rule (default mean, the paper's pinned combine)
+  --robust-trim <t>       trim fraction in [0,0.5) for trimmed-mean / krum
+                          (default 0.2)
+  --dp <d>                off|gaussian — per-message L2 clip + calibrated
+                          noise with an (ε, δ) accountant reported per eval
+                          row (default off)
+  --dp-clip <c>           DP L2 clip bound (default 1.0)
+  --dp-sigma <s>          DP noise multiplier σ (default 1.0)
+  --dp-delta <d>          DP accountant δ (default 1e-5)
   --compress <c>          gossip payload compressor: none|identity|q8|q4|topk
                           (default none; gossip algorithms only; the update
                           uses the mean-preserving difference form)
@@ -100,6 +124,10 @@ EXAMPLES
   decfl stragglers --backend native --steps 2000 --q 50 --topos ring,er
   decfl train --backend native --driver async --compute-plan lognormal --steps 2000
   decfl async --backend native --steps 2000 --q 50 --sigma 0.8 --out frontier.json
+  decfl train --backend native --attack-plan sign-flip --attack-frac 0.2 \\
+              --robust-rule trimmed-mean --steps 2000
+  decfl robust --backend native --steps 2000 --q 50 --fracs 0.1,0.2
+  decfl train --backend native --dp gaussian --dp-clip 0.5 --steps 2000
   decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
   decfl churn --backend native --steps 2000 --q 50 --drops 0.2,0.4
   decfl compress --backend native --steps 2000 --q 50 --fracs 0.1,0.05
@@ -388,6 +416,65 @@ fn real_main() -> Result<()> {
             }
             dump(&cfg.out, &asynchrony::rows_json(&rows))?;
         }
+        "robust" => {
+            let rules = args
+                .get_str("rules")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| {
+                    vec!["mean".into(), "trimmed-mean".into(), "median".into()]
+                });
+            let fracs = args.get_f64_list("fracs")?.unwrap_or_else(|| vec![0.1, 0.2]);
+            let topos = args
+                .get_str("topos")
+                .map(|v| v.split(',').map(|s| s.trim().to_string()).collect::<Vec<_>>())
+                .unwrap_or_else(|| vec!["er".into(), "ring".into()]);
+            let trim_shaped = args.provided("robust-trim");
+            args.finish()?;
+            if matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+                bail!(
+                    "`decfl robust` sweeps gossip combine rules, but `{}` has no gossip \
+                     combine; pick dsgd|dsgt|fd-dsgd|fd-dsgt",
+                    cfg.algo.name()
+                );
+            }
+            // the sweep owns the attacker-fraction and rule axes — these
+            // would be silently overwritten
+            for key in ["attack-frac", "robust-rule"] {
+                if args.provided(key) {
+                    bail!(
+                        "--{key} was passed, but `decfl robust` sweeps that axis itself \
+                         and would silently ignore it; shape the sweep with \
+                         --rules / --fracs / --topos instead"
+                    );
+                }
+            }
+            if cfg.attack_frac != 0.0 || cfg.robust_rule != "mean" {
+                bail!(
+                    "the config sets attack.frac = {} / robust.rule = `{}`, but \
+                     `decfl robust` sweeps those axes itself and would silently \
+                     ignore them; shape the sweep with --rules / --fracs / --topos",
+                    cfg.attack_frac,
+                    cfg.robust_rule
+                );
+            }
+            // the frontier needs an adversary: default to sign-flip unless
+            // the user shaped the attack
+            if cfg.attack_plan == "none" {
+                cfg.attack_plan = "sign-flip".into();
+            }
+            // ⌊trim·k⌋ trims nothing below trim = 1/3 on degree-2 rows
+            // (ring rows mix k = 3 participants): default the trim high
+            // enough to engage everywhere unless the user shaped it
+            if !trim_shaped && cfg.robust_trim == 0.2 {
+                cfg.robust_trim = 0.4;
+            }
+            let rows = robust::run(&cfg, &rules, &fracs, &topos)?;
+            robust::print_table(&rows);
+            for f in robust::findings(&rows) {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &robust::rows_json(&rows))?;
+        }
         "export-data" => {
             reject_plan_flags(&args, &cfg, "export-data")?;
             let dir = args.get_str("dir").unwrap_or("out/cohort").to_string();
@@ -496,6 +583,37 @@ fn reject_plan_flags(args: &Args, cfg: &ExperimentConfig, sub: &str) -> Result<(
             cfg.compute_plan
         );
     }
+    for key in [
+        "attack-plan",
+        "attack-frac",
+        "attack-scale",
+        "attack-age",
+        "robust-rule",
+        "robust-trim",
+        "dp",
+        "dp-clip",
+        "dp-sigma",
+        "dp-delta",
+    ] {
+        if args.provided(key) {
+            bail!(
+                "--{key} was passed, but `decfl {sub}` builds its own per-run configs \
+                 and would silently run honest plain-mean gossip; the adversarial and \
+                 DP axes apply to `decfl train` and `decfl robust`"
+            );
+        }
+    }
+    if cfg.attack_plan != "none" || cfg.robust_rule != "mean" || cfg.dp != "off" {
+        bail!(
+            "the config sets attack.plan/robust.rule/dp = `{}`/`{}`/`{}`, but \
+             `decfl {sub}` builds its own per-run configs and would silently run \
+             honest plain-mean gossip; the adversarial and DP axes apply to \
+             `decfl train` and `decfl robust`",
+            cfg.attack_plan,
+            cfg.robust_rule,
+            cfg.dp
+        );
+    }
     Ok(())
 }
 
@@ -528,6 +646,16 @@ fn reject_ignored_network_flags(args: &Args, cfg: &ExperimentConfig) -> Result<(
         "driver",
         "staleness-s",
         "sim-budget-s",
+        "attack-plan",
+        "attack-frac",
+        "attack-scale",
+        "attack-age",
+        "robust-rule",
+        "robust-trim",
+        "dp",
+        "dp-clip",
+        "dp-sigma",
+        "dp-delta",
     ] {
         if args.provided(key) {
             bail!(

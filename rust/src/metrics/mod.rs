@@ -39,6 +39,12 @@ pub struct RoundMetrics {
     pub sim_time_s: f64,
     /// Real wall time since the run started, seconds.
     pub wall_time_s: f64,
+    /// Cumulative neighbor payloads quarantined at ingest — malformed or
+    /// non-finite messages folded into the self-weight (DESIGN.md §14).
+    pub quarantined: u64,
+    /// Privacy spent so far: the (ε, δ)-accountant's ε at the configured δ
+    /// (`dp.delta`); 0 when the DP layer is off.
+    pub dp_epsilon: f64,
 }
 
 impl RoundMetrics {
@@ -100,17 +106,19 @@ impl RunLog {
             ("bytes", col(&|r| r.bytes as f64)),
             ("sim_time_s", col(&|r| r.sim_time_s)),
             ("wall_time_s", col(&|r| r.wall_time_s)),
+            ("quarantined", col(&|r| r.quarantined as f64)),
+            ("dp_epsilon", col(&|r| r.dp_epsilon)),
         ])
     }
 
     /// CSV with a header, one row per evaluation.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "comm_rounds,local_steps,loss,accuracy,stationarity,consensus,bytes,messages,sim_time_s,wall_time_s\n",
+            "comm_rounds,local_steps,loss,accuracy,stationarity,consensus,bytes,messages,sim_time_s,wall_time_s,quarantined,dp_epsilon\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{:.6},{:.4},{:.6e},{:.6e},{},{},{:.4},{:.3}\n",
+                "{},{},{:.6},{:.4},{:.6e},{:.6e},{},{},{:.4},{:.3},{},{:.4}\n",
                 r.comm_rounds,
                 r.local_steps,
                 r.loss,
@@ -120,7 +128,9 @@ impl RunLog {
                 r.bytes,
                 r.messages,
                 r.sim_time_s,
-                r.wall_time_s
+                r.wall_time_s,
+                r.quarantined,
+                r.dp_epsilon
             ));
         }
         out
@@ -154,6 +164,8 @@ pub fn round_metrics(
         messages: net.messages,
         sim_time_s: net.sim_time_s,
         wall_time_s,
+        quarantined: net.quarantined,
+        dp_epsilon: 0.0,
     }
 }
 
@@ -173,6 +185,8 @@ mod tests {
             messages: cr * 10,
             sim_time_s: cr as f64 * 0.1,
             wall_time_s: cr as f64 * 0.01,
+            quarantined: 0,
+            dp_epsilon: 0.0,
         }
     }
 

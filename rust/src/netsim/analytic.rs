@@ -102,6 +102,13 @@ impl Accountant {
         self.snap.sim_time_s += 2.0 * (self.link.latency_s + bytes as f64 / self.link.bandwidth_bps);
     }
 
+    /// Record `n` quarantined neighbor payloads — the fused driver's mirror
+    /// of [`super::Endpoint::report_quarantine`] (non-finite rows folded into
+    /// the self-weight, DESIGN.md §14).
+    pub fn report_quarantine(&mut self, n: u64) {
+        self.snap.quarantined += n;
+    }
+
     /// Plain-data copy of the counters so far.
     pub fn snapshot(&self) -> NetSnapshot {
         self.snap

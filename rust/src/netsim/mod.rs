@@ -96,11 +96,33 @@ impl Payload {
         }
     }
 
+    /// Does every value this payload decodes to come out finite?  The
+    /// ingest quarantine (DESIGN.md §14) classifies a neighbor message as
+    /// poisoned with this — exact, and one decode cheaper than scanning the
+    /// reconstructed vector (see [`Encoded::is_finite`]).
+    pub fn is_finite(&self) -> bool {
+        match self {
+            Payload::Dense(v) => v.iter().all(|x| x.is_finite()),
+            Payload::Compressed(e) => e.is_finite(),
+        }
+    }
+
     /// Reconstruct the carried vector into `out` (copy or decode) — the
     /// receiver side of the deterministic decode every party shares.
-    pub fn decode_into(&self, out: &mut [f32]) {
+    /// Malformed wire bytes error loudly (DESIGN.md §14); on error `out`
+    /// is poisoned and the caller must quarantine the message.
+    pub fn decode_into(&self, out: &mut [f32]) -> Result<()> {
         match self {
-            Payload::Dense(v) => out.copy_from_slice(v),
+            Payload::Dense(v) => {
+                anyhow::ensure!(
+                    v.len() == out.len(),
+                    "dense payload carries {} elements for a {}-element decode",
+                    v.len(),
+                    out.len()
+                );
+                out.copy_from_slice(v);
+                Ok(())
+            }
             Payload::Compressed(e) => crate::compress::decode_into(e, out),
         }
     }
@@ -134,6 +156,10 @@ pub struct NetStats {
     pub bytes: AtomicU64,
     /// Frames that were lost and resent (lossy links only).
     pub retransmissions: AtomicU64,
+    /// Neighbor payloads quarantined at ingest — malformed wire bytes or
+    /// non-finite values folded into the receiver's self-weight instead of
+    /// entering θ/ϑ (DESIGN.md §14).
+    pub quarantined: AtomicU64,
     /// Completed gossip rounds (bumped by the driver).
     pub rounds: AtomicU64,
     /// max causal clock over nodes, in microseconds (atomic max).
@@ -147,6 +173,7 @@ impl NetStats {
             messages: self.messages.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
             retransmissions: self.retransmissions.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
             sim_time_s: self.sim_time_us.load(Ordering::Relaxed) as f64 / 1e6,
         }
@@ -167,6 +194,8 @@ pub struct NetSnapshot {
     pub bytes: u64,
     /// Frames lost and resent so far.
     pub retransmissions: u64,
+    /// Neighbor payloads quarantined at ingest (malformed or non-finite).
+    pub quarantined: u64,
     /// Completed gossip rounds.
     pub rounds: u64,
     /// Simulated wall time (max causal clock over nodes), seconds.
@@ -293,6 +322,12 @@ impl Endpoint {
         self.stats.bump_time(self.clock_s);
 
         Ok(have.into_iter().map(|(from, m)| (from, m.payload)).collect())
+    }
+
+    /// Record `n` quarantined neighbor payloads (malformed or non-finite
+    /// ingest folded into the self-weight, never into θ/ϑ).
+    pub fn report_quarantine(&self, n: u64) {
+        self.stats.quarantined.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Advance the local clock by `secs` of compute (local SGD steps).
@@ -471,7 +506,7 @@ mod tests {
         e1.send_to(&[0], 1, PayloadKind::Params, &payload).unwrap();
         let got = e1.gather_from(&[0], 1, PayloadKind::Params).unwrap();
         let mut out = vec![9.0f32; 10];
-        got[0].1.decode_into(&mut out);
+        got[0].1.decode_into(&mut out).unwrap();
         assert_eq!(out[3], 5.0, "kept entry survives the wire");
         assert_eq!(out[1], 0.0, "dropped entries decode to zero");
         assert_eq!(stats.snapshot().bytes, 2 * 16, "charged at encoded size");

@@ -37,11 +37,19 @@ fn help_lists_subcommands() {
         "--driver",
         "--staleness-s",
         "--net-validate",
+        "--attack-plan",
+        "--attack-frac",
+        "--robust-rule",
+        "--robust-trim",
+        "--dp",
+        "--dp-clip",
+        "--dp-sigma",
     ] {
         assert!(text.contains(flag), "help missing `{flag}`");
     }
     assert!(text.contains("stragglers"), "help missing `stragglers`");
     assert!(text.contains("async"), "help missing `async`");
+    assert!(text.contains("robust"), "help missing `robust`");
 }
 
 #[test]
@@ -322,6 +330,88 @@ fn sweeps_and_baselines_reject_compression_flags() {
     ]);
     assert!(!out.status.success(), "fedavg --compress must fail");
     assert!(String::from_utf8_lossy(&out.stderr).contains("--compress"));
+}
+
+#[test]
+fn adversarial_train_runs_natively() {
+    let out = decfl(&[
+        "train", "--backend", "native", "--algo", "fd-dsgd", "--steps", "40",
+        "--q", "10", "--eval-every", "2", "--attack-plan", "sign-flip",
+        "--attack-frac", "0.2", "--robust-rule", "trimmed-mean",
+        "--dp", "gaussian", "--dp-clip", "10",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.starts_with("comm_rounds,"), "csv header missing");
+    assert!(text.contains("quarantined,dp_epsilon"), "adversarial columns missing:\n{text}");
+}
+
+#[test]
+fn robust_subcommand_sweeps_the_frontier() {
+    let out = decfl(&[
+        "robust", "--backend", "native", "--steps", "40", "--q", "10",
+        "--eval-every", "2", "--rules", "mean,median", "--fracs", "0.25",
+        "--topos", "ring",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for label in ["none", "sign-flip f=0.25", "median", "quarantined"] {
+        assert!(text.contains(label), "frontier table missing `{label}`:\n{text}");
+    }
+    assert!(text.contains("finding:"), "{text}");
+}
+
+#[test]
+fn robust_subcommand_owns_the_attack_axes() {
+    let out = decfl(&[
+        "robust", "--backend", "native", "--steps", "20", "--attack-frac", "0.3",
+    ]);
+    assert!(!out.status.success(), "robust --attack-frac must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--rules"), "{err}");
+
+    let out = decfl(&[
+        "robust", "--backend", "native", "--steps", "20", "--robust-rule", "median",
+    ]);
+    assert!(!out.status.success(), "robust --robust-rule must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--fracs"));
+
+    let out = decfl(&["robust", "--backend", "native", "--steps", "20", "--algo", "fedavg"]);
+    assert!(!out.status.success(), "robust --algo fedavg must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("gossip"), "no gossip hint");
+}
+
+#[test]
+fn sweeps_and_baselines_reject_adversarial_flags() {
+    // sweeps build their own configs: adversarial flags would be ignored
+    let out = decfl(&["qsweep", "--steps", "20", "--attack-plan", "sign-flip"]);
+    assert!(!out.status.success(), "qsweep --attack-plan must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--attack-plan"), "{err}");
+    assert!(err.contains("decfl robust"), "{err}");
+    let out = decfl(&["baselines", "--steps", "20", "--dp", "gaussian"]);
+    assert!(!out.status.success(), "baselines --dp must fail");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--dp"));
+    // FedAvg and centralized have no gossip messages to attack or clip
+    for algo in ["fedavg", "centralized"] {
+        let out = decfl(&[
+            "train", "--backend", "native", "--algo", algo, "--steps", "20",
+            "--robust-rule", "median",
+        ]);
+        assert!(!out.status.success(), "{algo} --robust-rule must fail");
+        assert!(String::from_utf8_lossy(&out.stderr).contains("--robust-rule"));
+    }
+    // the same settings arriving through --config TOML are caught too
+    let toml = std::env::temp_dir().join(format!("decfl_attack_{}.toml", std::process::id()));
+    std::fs::write(&toml, "[attack]\nplan = \"sign-flip\"\nfrac = 0.2\n").unwrap();
+    let out = decfl(&["baselines", "--steps", "20", "--config", toml.to_str().unwrap()]);
+    assert!(!out.status.success(), "baselines with TOML attack.plan must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("attack.plan"),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    std::fs::remove_file(&toml).ok();
 }
 
 #[test]
