@@ -1,0 +1,75 @@
+//! EXP-SH1 bench: sharded spill-backed node state vs resident stacks —
+//! per-round throughput, pool traffic (loads/spills/hits), and the flat
+//! hot-set residency as the fleet grows.
+//!
+//!     cargo bench --bench bench_shard
+//!     DECFL_FULL=1  cargo bench --bench bench_shard   # paper-scale fleets
+//!     DECFL_SMOKE=1 cargo bench --bench bench_shard   # CI compile+run check
+
+use decfl::benchutil::{bench, budget, full_scale, report, section, smoke};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+use decfl::engine::{RoundEngine, ShardedSync};
+
+fn main() -> anyhow::Result<()> {
+    let (ns, steps, q, shard_nodes, hot) = if full_scale() {
+        (vec![256usize, 1024, 4096], 200, 20, 64, 4)
+    } else if smoke() {
+        (vec![8], 12, 3, 3, 2)
+    } else {
+        (vec![32, 128], 60, 6, 16, 2)
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.algo = AlgoKind::FdDsgt;
+    cfg.hidden = 16;
+    cfg.m = 10;
+    cfg.q = q;
+    cfg.total_steps = steps;
+    cfg.eval_every = usize::MAX / 2; // final row only: time the sweep, not eval
+    cfg.records_per_hospital = 60;
+    cfg.topology = "ring".into();
+
+    println!(
+        "sharded node state, fd-dsgt fused/native: k={shard_nodes} hot={hot} steps={steps} q={q} ({} rounds)",
+        steps.div_ceil(q)
+    );
+
+    for &n in &ns {
+        cfg.n = n;
+        cfg.shard_nodes = 0;
+        let asm = assemble(&cfg)?; // shared cohort + graph for both drivers
+
+        section(&format!("n={n} resident"));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(&cfg, &asm).unwrap());
+        });
+        report(&format!("resident n={n}"), &t);
+
+        cfg.shard_nodes = shard_nodes;
+        cfg.hot_shards = hot;
+        section(&format!("n={n} sharded k={shard_nodes} h={hot}"));
+        let t = bench(budget(0.5), || {
+            std::hint::black_box(run_on(&cfg, &asm).unwrap());
+        });
+        report(&format!("sharded n={n}"), &t);
+
+        // one instrumented run for the pool counters + residency bound
+        let engine = RoundEngine::from_config(&cfg);
+        let mut drv = ShardedSync::new(&cfg, &asm.ds, &asm.graph, &asm.w)?;
+        engine.run(&mut drv)?;
+        let st = drv.pool_stats();
+        println!(
+            "pool: {} resident rows (bound {}), {} loads, {} spills, {} hits",
+            drv.resident_rows(),
+            shard_nodes * hot,
+            st.loads,
+            st.spills,
+            st.hits
+        );
+        cfg.shard_nodes = 0;
+    }
+    Ok(())
+}

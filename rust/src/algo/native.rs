@@ -17,7 +17,7 @@
 //! system is *testable and sweepable*, mirroring what e.g. a CPU-reference
 //! backend is to a TPU runtime.
 
-use super::{axpy, l2_dist_sq, row_mean, RobustRule};
+use super::{axpy, RobustRule};
 
 /// Samples per cache tile of the blocked forward/backward kernels.  Inside a
 /// tile every `w1` row is loaded once and applied to all tile samples, so the
@@ -1012,37 +1012,26 @@ impl NativeModel {
     /// even shards the two weightings coincide).  Stationarity and consensus
     /// stay node-mean quantities exactly as Theorem 1 defines them: the
     /// theorem's bounds are over `(1/N) Σ_i`, not over records.
+    ///
+    /// The reduction is a [`crate::metrics::StreamingEval`] fold — the same
+    /// Kahan-compensated left fold the sharded sweep (`engine::shard`) runs
+    /// shard by shard — so resident and sharded metrics agree bitwise by
+    /// construction at any shard count (`tests/shard_pins.rs`).
     pub fn eval_reduce(
         &self,
         theta: &[f32],
         per: &[(f64, Vec<f32>, usize, usize)],
     ) -> (f64, f64, f64, f64) {
         let p = self.p();
-        let n = per.len();
-        let mut mean_grad = vec![0.0f64; p];
-        let mut loss_wsum = 0.0;
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for (loss, grad, c, t) in per {
-            loss_wsum += loss * *t as f64;
-            for (acc, &g) in mean_grad.iter_mut().zip(grad) {
-                *acc += g as f64;
-            }
-            correct += c;
-            total += t;
+        let mut se = crate::metrics::StreamingEval::new(p);
+        for (i, (loss, grad, c, t)) in per.iter().enumerate() {
+            se.push_node(*loss, grad, *c, *t, &theta[i * p..(i + 1) * p]);
         }
-        let stat: f64 = mean_grad.iter().map(|g| (g / n as f64) * (g / n as f64)).sum();
-        let theta_bar = row_mean(theta, n, p);
-        let cons: f64 = (0..n)
-            .map(|i| l2_dist_sq(&theta[i * p..(i + 1) * p], &theta_bar))
-            .sum::<f64>()
-            / n as f64;
-        (
-            loss_wsum / total.max(1) as f64,
-            correct as f64 / total.max(1) as f64,
-            stat,
-            cons,
-        )
+        let mut cp = se.into_consensus_pass();
+        for i in 0..per.len() {
+            cp.push_row(&theta[i * p..(i + 1) * p]);
+        }
+        cp.finish()
     }
 
     /// `P(AD|x)` per row — `predict` twin.
@@ -1057,6 +1046,7 @@ impl NativeModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::row_mean;
     use crate::rng::Pcg64;
     use crate::testutil;
 

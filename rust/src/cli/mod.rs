@@ -257,6 +257,12 @@ pub fn apply_common_overrides(args: &Args, cfg: &mut crate::config::ExperimentCo
     if let Some(v) = args.get_f64("drop-prob")? {
         cfg.drop_prob = v;
     }
+    if let Some(v) = args.get_usize("shard-nodes")? {
+        cfg.shard_nodes = v;
+    }
+    if let Some(v) = args.get_usize("hot-shards")? {
+        cfg.hot_shards = v;
+    }
     if let Some(v) = args.get_f64("heterogeneity")? {
         cfg.heterogeneity = v;
     }
@@ -409,6 +415,22 @@ mod tests {
         assert_eq!(cfg.attack_plan, "none");
         assert_eq!(cfg.robust_rule, "mean");
         assert_eq!(cfg.dp, "off");
+    }
+
+    #[test]
+    fn state_sharding_overrides_apply() {
+        let a = parse(&["train", "--shard-nodes", "512", "--hot-shards", "3"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.shard_nodes, 512);
+        assert_eq!(cfg.hot_shards, 3);
+        assert!(a.finish().is_ok());
+        // defaults untouched when the flags are absent: unsharded resident slabs
+        let b = parse(&["train"]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        super::apply_common_overrides(&b, &mut cfg).unwrap();
+        assert_eq!(cfg.shard_nodes, 0);
+        assert_eq!(cfg.hot_shards, 4);
     }
 
     #[test]

@@ -227,6 +227,16 @@ pub struct ExperimentConfig {
     /// Target δ the (ε, δ)-accountant reports ε at.
     pub dp_delta: f64,
 
+    // -- node-state residency --
+    /// Nodes per state shard for the spill-backed slab pool
+    /// (`engine::shard`).  0 = unsharded resident slabs — the pinned
+    /// default; the resident code path is byte-for-byte untouched.
+    pub shard_nodes: usize,
+    /// Resident shard frames in the LRU hot-set (used only when
+    /// `shard_nodes > 0`); peak slab residency is `hot_shards · shard_nodes`
+    /// rows regardless of fleet size.
+    pub hot_shards: usize,
+
     // -- data --
     /// Shard non-iidness in [0, 1] (Dirichlet mixing of site profiles).
     pub heterogeneity: f64,
@@ -302,6 +312,8 @@ impl Default for ExperimentConfig {
             dp_clip: 1.0,
             dp_sigma: 1.0,
             dp_delta: 1e-5,
+            shard_nodes: 0,
+            hot_shards: 4,
             heterogeneity: 0.6,
             records_per_hospital: 500,
             ad_prevalence: 0.21,
@@ -367,6 +379,8 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64("dp.clip")? { self.dp_clip = v; }
         if let Some(v) = doc.get_f64("dp.sigma")? { self.dp_sigma = v; }
         if let Some(v) = doc.get_f64("dp.delta")? { self.dp_delta = v; }
+        if let Some(v) = doc.get_usize("state.shard_nodes")? { self.shard_nodes = v; }
+        if let Some(v) = doc.get_usize("state.hot_shards")? { self.hot_shards = v; }
         if let Some(v) = doc.get_f64("data.heterogeneity")? { self.heterogeneity = v; }
         if let Some(v) = doc.get_usize("data.records_per_hospital")? { self.records_per_hospital = v; }
         if let Some(v) = doc.get_f64("data.ad_prevalence")? { self.ad_prevalence = v; }
@@ -417,6 +431,9 @@ impl ExperimentConfig {
         crate::engine::adversary::plan_from_config(self)?;
         crate::engine::adversary::dp_from_config(self)?;
         crate::algo::RobustRule::parse(&self.robust_rule, self.robust_trim)?;
+        if self.shard_nodes > 0 && self.hot_shards == 0 {
+            bail!("state.hot_shards must be >= 1 when state.shard_nodes > 0");
+        }
         Ok(())
     }
 
@@ -560,6 +577,29 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.compute_plan = "fixed-tiers".into();
         c.compute_tiers = "0.5,2.0".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn state_sharding_overlay_and_validation() {
+        // default: unsharded resident slabs — the byte-for-byte pinned path
+        let c = ExperimentConfig::default();
+        assert_eq!(c.shard_nodes, 0);
+        assert_eq!(c.hot_shards, 4);
+        assert!(c.validate().is_ok());
+        let dir = std::env::temp_dir().join(format!("decfl_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.toml");
+        std::fs::write(&path, "[state]\nshard_nodes = 256\nhot_shards = 2\n").unwrap();
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.shard_nodes, 256);
+        assert_eq!(cfg.hot_shards, 2);
+        assert!(cfg.validate().is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+        // a sharded pool with zero resident frames can never make progress
+        let mut c = ExperimentConfig::default();
+        c.shard_nodes = 64;
+        c.hot_shards = 0;
         assert!(c.validate().is_err());
     }
 

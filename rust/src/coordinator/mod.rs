@@ -118,8 +118,21 @@ pub fn run_on(cfg: &ExperimentConfig, asm: &Assembled) -> Result<RunLog> {
                 cfg.algo.name()
             )
         }
+        AlgoKind::Centralized | AlgoKind::FedAvg if cfg.shard_nodes > 0 => {
+            bail!(
+                "state.shard_nodes applies to gossip algorithms, but `{}` runs the \
+                 synchronous baseline protocol with co-resident server state; drop \
+                 --shard-nodes or pick a gossip algorithm (dsgd|dsgt|fd-dsgd|fd-dsgt)",
+                cfg.algo.name()
+            )
+        }
         AlgoKind::Centralized => baselines::centralized(cfg, eval_compute.as_ref(), &asm.ds),
         AlgoKind::FedAvg => baselines::fedavg(cfg, eval_compute.as_ref(), &asm.ds),
+        // sharded node state: the spill-backed shard sweep owns the whole
+        // run (it bails loudly on async/actors and every unsupported axis)
+        _ if cfg.shard_nodes > 0 => {
+            crate::engine::shard::train_log(cfg, &asm.ds, &asm.graph, &asm.w)
+        }
         _ if cfg.driver == "async" => {
             crate::engine::asynchrony::train(cfg, eval_compute.as_ref(), &asm.ds, &asm.graph, &asm.w)
         }

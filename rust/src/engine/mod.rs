@@ -38,10 +38,12 @@
 
 pub mod adversary;
 pub mod asynchrony;
+pub mod shard;
 pub mod stragglers;
 pub mod strategy;
 
 pub use adversary::{AttackPlan, AttackSchedule, DpPlan, MsgPerturb};
+pub use shard::{NodeSlabPool, ShardSpec, ShardedSync};
 pub use stragglers::{ComputePlan, ComputeSchedule};
 pub use strategy::{
     CentralizedStrategy, CommCost, CommStrategy, DsgdStrategy, DsgtStrategy, FedAvgStrategy,

@@ -1,0 +1,971 @@
+//! Sharded node state — 10⁵–10⁶-node fleets without co-resident slabs.
+//!
+//! PR 6 made the *graph* axis sparse-native, but training state (θ, the
+//! DSGT tracker ϑ and gradient stacks) was still one flat resident array
+//! per quantity, so fleet size was capped by RAM long before the algorithm
+//! was.  This module shards the per-node quantity slabs into fixed-size
+//! node blocks backed by a spill file, keeps an LRU hot-set of
+//! [`ExperimentConfig::hot_shards`] blocks resident, and sweeps a
+//! communication round shard-by-shard in CSR-block order: each shard's pass
+//! gathers a compact stack of its own rows plus the halo rows its cut edges
+//! reference (a boundary exchange over the spill file — halo reads never
+//! load a shard), remaps the CSR columns onto that stack *preserving entry
+//! order*, and runs the exact per-node kernels the resident driver fans out
+//! (`NativeModel::{local_steps_into, dsgd_node_into, dsgt_node_into}`).
+//!
+//! Bitwise contract (pinned by `tests/shard_pins.rs`): because
+//! `combine_sparse_into` folds its f64 accumulator in CSR **entry order**
+//! and the remap is order-preserving, because the per-node sampler streams
+//! are `(seed, node)`-keyed and therefore shard-oblivious, and because
+//! evaluation is the same [`crate::metrics::StreamingEval`] left fold the
+//! resident `eval_reduce` runs, the sharded trajectory is bitwise identical
+//! to the resident fused driver at every shard count — 1 shard == k shards
+//! == unsharded.  The default (`state.shard_nodes = 0`) never constructs
+//! this driver at all, so the resident path stays byte-for-byte untouched.
+//!
+//! Scope: the sharded driver covers the honest gossip matrix — native
+//! backend, fused sync driver, mean combine, no compression, no
+//! attack/DP, uniform compute plan — under **any** network plan
+//! (static/rewire/edge-drop/churn).  Everything else bails loudly
+//! (DESIGN.md §15 has the full matrix and the rationale: those axes keep
+//! per-node side state whose residency is exactly what this module exists
+//! to avoid co-locating; they stay on the resident drivers).  Honest
+//! convergent runs never trip the non-finite quarantine scan, so the sweep
+//! skips it (§15).  Per-node samplers stay resident: their state is O(1)
+//! plus a lazily grown index permutation — orders of magnitude below one
+//! parameter row.
+
+use crate::algo::native::{NativeModel, Workspace};
+use crate::algo::RoundPlan;
+use crate::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use crate::coordinator::sampler::{init_theta, NodeSampler};
+use crate::data::{FederatedDataset, Shard};
+use crate::graph::{Graph, NetworkSchedule, ViewScratch};
+use crate::metrics::{round_metrics, RunLog, StreamingEval};
+use crate::mixing::SparseW;
+use crate::netsim::{analytic::Accountant, LinkModel};
+use anyhow::{bail, Result};
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ------------------------------------------------------------ layout ----
+
+/// Logical quantity slots in a [`NodeSlabPool`].  Front/back pairs swap via
+/// the pool's quantity map — no data movement, exactly like the resident
+/// driver's `std::mem::swap` of whole stacks.
+pub mod quantity {
+    /// Parameters θ (front).
+    pub const THETA: usize = 0;
+    /// Parameters θ (back buffer).
+    pub const THETA_BACK: usize = 1;
+    /// DSGT tracker ϑ (front).
+    pub const Y: usize = 2;
+    /// DSGT tracker ϑ (back buffer).
+    pub const Y_BACK: usize = 3;
+    /// DSGT previous gradient G (front).
+    pub const G: usize = 4;
+    /// DSGT previous gradient G (back buffer).
+    pub const G_BACK: usize = 5;
+}
+
+/// Fixed-size partition of `n` nodes into shards of `shard_nodes` rows
+/// (the last shard may be partial).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSpec {
+    /// Fleet size.
+    pub n: usize,
+    /// Nodes per shard.
+    pub shard_nodes: usize,
+}
+
+impl ShardSpec {
+    /// Number of shards covering the fleet.
+    pub fn n_shards(&self) -> usize {
+        self.n.div_ceil(self.shard_nodes)
+    }
+
+    /// Shard owning `node`.
+    pub fn shard_of(&self, node: usize) -> usize {
+        node / self.shard_nodes
+    }
+
+    /// Node range `[start, end)` of shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        let start = s * self.shard_nodes;
+        (start, ((s + 1) * self.shard_nodes).min(self.n))
+    }
+}
+
+// -------------------------------------------------------------- pool ----
+
+/// Counters a [`NodeSlabPool`] keeps about its own traffic, for benches,
+/// the EXP-SH1 experiment, and the hot-set-bound tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Shard loads from the spill file (cold acquires).
+    pub loads: u64,
+    /// Dirty-frame writebacks to the spill file (evictions).
+    pub spills: u64,
+    /// Acquires served by a resident frame.
+    pub hits: u64,
+}
+
+/// One resident shard frame: `shard_nodes · nq · p` floats.
+struct Frame {
+    /// Which shard this frame holds (`usize::MAX` = empty).
+    shard: usize,
+    /// LRU clock value of the last acquire.
+    last_use: u64,
+    /// Frame has row writes the spill file hasn't seen.
+    dirty: bool,
+    data: Vec<f32>,
+}
+
+static POOL_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Spill-file-backed pool of per-node quantity slabs with an LRU hot-set.
+///
+/// Layout: node-major, quantity-minor — node `i`'s `nq` rows of `p` floats
+/// are contiguous in its shard frame and at the mirrored offset in the
+/// spill file, so one shard is one contiguous file extent.  The file is
+/// created sparse (`set_len`) in the system temp directory, so untouched
+/// shards cost no disk, and it is removed on drop.  Front/back quantity
+/// swaps go through a logical→physical quantity map ([`Self::swap_quantities`]):
+/// a swap is two index writes, never a data move.
+///
+/// All frames are allocated up front, file I/O goes through preallocated
+/// byte buffers (`read_at`/`write_at`, little-endian f32), and the row
+/// accessors copy through caller buffers — warm sweeps allocate nothing
+/// (`tests/alloc_free.rs` pins this with a counting allocator).
+pub struct NodeSlabPool {
+    spec: ShardSpec,
+    /// Parameter row length.
+    p: usize,
+    /// Quantity rows per node.
+    nq: usize,
+    /// Logical quantity → physical slot.
+    qmap: Vec<usize>,
+    frames: Vec<Frame>,
+    /// shard → resident frame index.
+    map: Vec<Option<usize>>,
+    tick: u64,
+    file: std::fs::File,
+    path: std::path::PathBuf,
+    /// Whole-frame I/O staging (`frame_len · 4` bytes).
+    io_buf: Vec<u8>,
+    /// Single-row I/O staging (`p · 4` bytes) for halo reads.
+    row_buf: Vec<u8>,
+    stats: PoolStats,
+}
+
+impl NodeSlabPool {
+    /// Create a pool for `n` nodes in shards of `shard_nodes`, keeping at
+    /// most `hot_shards` frames resident, with `nq` quantity rows of `p`
+    /// floats per node.  The spill file starts all-zero (sparse).
+    pub fn new(n: usize, shard_nodes: usize, hot_shards: usize, p: usize, nq: usize) -> Result<Self> {
+        if n == 0 || shard_nodes == 0 || hot_shards == 0 || p == 0 || nq == 0 {
+            bail!("NodeSlabPool: n, shard_nodes, hot_shards, p, nq must all be positive");
+        }
+        let spec = ShardSpec { n, shard_nodes };
+        let n_shards = spec.n_shards();
+        let frame_len = shard_nodes * nq * p;
+        let path = std::env::temp_dir().join(format!(
+            "decfl_slab_{}_{}.bin",
+            std::process::id(),
+            POOL_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)?;
+        file.set_len((n_shards * frame_len * 4) as u64)?;
+        let frames = (0..hot_shards.min(n_shards))
+            .map(|_| Frame {
+                shard: usize::MAX,
+                last_use: 0,
+                dirty: false,
+                data: vec![0.0f32; frame_len],
+            })
+            .collect();
+        Ok(NodeSlabPool {
+            spec,
+            p,
+            nq,
+            qmap: (0..nq).collect(),
+            frames,
+            map: vec![None; n_shards],
+            tick: 0,
+            file,
+            path,
+            io_buf: vec![0u8; frame_len * 4],
+            row_buf: vec![0u8; p * 4],
+            stats: PoolStats::default(),
+        })
+    }
+
+    /// The node→shard partition.
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    /// Traffic counters so far.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Currently resident slab rows (node rows with ≥ 1 quantity in RAM) —
+    /// bounded by `hot_shards · shard_nodes` by construction; the
+    /// `alloc_free` test pins this.
+    pub fn resident_rows(&self) -> usize {
+        self.frames.iter().filter(|f| f.shard != usize::MAX).count() * self.spec.shard_nodes
+    }
+
+    /// Float offset of `(slot, quantity)` inside a frame / shard extent.
+    fn offset(&self, slot: usize, q: usize) -> usize {
+        (slot * self.nq + self.qmap[q]) * self.p
+    }
+
+    fn frame_len(&self) -> usize {
+        self.spec.shard_nodes * self.nq * self.p
+    }
+
+    /// Make `shard` resident (LRU-evicting if needed) and return its frame.
+    fn acquire(&mut self, shard: usize) -> Result<usize> {
+        self.tick += 1;
+        if let Some(fi) = self.map[shard] {
+            self.frames[fi].last_use = self.tick;
+            self.stats.hits += 1;
+            return Ok(fi);
+        }
+        // victim: an empty frame if any, else the least recently used
+        let fi = self
+            .frames
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, f)| if f.shard == usize::MAX { (0, 0) } else { (1, f.last_use) })
+            .map(|(i, _)| i)
+            .expect("pool holds at least one frame");
+        let old = self.frames[fi].shard;
+        if old != usize::MAX {
+            if self.frames[fi].dirty {
+                self.write_frame(fi)?;
+                self.stats.spills += 1;
+            }
+            self.map[old] = None;
+        }
+        self.read_frame(fi, shard)?;
+        self.stats.loads += 1;
+        let f = &mut self.frames[fi];
+        f.shard = shard;
+        f.dirty = false;
+        f.last_use = self.tick;
+        self.map[shard] = Some(fi);
+        Ok(fi)
+    }
+
+    fn write_frame(&mut self, fi: usize) -> Result<()> {
+        let frame_len = self.frame_len();
+        let Self { frames, io_buf, file, .. } = self;
+        let f = &frames[fi];
+        for (b, v) in io_buf.chunks_exact_mut(4).zip(&f.data) {
+            b.copy_from_slice(&v.to_le_bytes());
+        }
+        file.write_all_at(io_buf, (f.shard * frame_len * 4) as u64)?;
+        Ok(())
+    }
+
+    fn read_frame(&mut self, fi: usize, shard: usize) -> Result<()> {
+        let frame_len = self.frame_len();
+        let Self { frames, io_buf, file, .. } = self;
+        file.read_exact_at(io_buf, (shard * frame_len * 4) as u64)?;
+        for (v, b) in frames[fi].data.iter_mut().zip(io_buf.chunks_exact(4)) {
+            *v = f32::from_le_bytes(b.try_into().expect("4-byte chunk"));
+        }
+        Ok(())
+    }
+
+    /// Copy quantity `q` of `node` into `out` — from the resident frame if
+    /// the owning shard is hot, else straight from the spill file *without*
+    /// loading the shard (this is the halo gather: boundary rows of other
+    /// shards are read, never made resident).
+    pub fn read_row_into(&mut self, node: usize, q: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(out.len(), self.p);
+        let shard = self.spec.shard_of(node);
+        let slot = node % self.spec.shard_nodes;
+        let off = self.offset(slot, q);
+        if let Some(fi) = self.map[shard] {
+            out.copy_from_slice(&self.frames[fi].data[off..off + self.p]);
+            return Ok(());
+        }
+        let byte_off = ((shard * self.frame_len() + off) * 4) as u64;
+        let Self { file, row_buf, .. } = self;
+        file.read_exact_at(row_buf, byte_off)?;
+        for (v, b) in out.iter_mut().zip(row_buf.chunks_exact(4)) {
+            *v = f32::from_le_bytes(b.try_into().expect("4-byte chunk"));
+        }
+        Ok(())
+    }
+
+    /// Overwrite quantity `q` of `node`, making its shard resident first.
+    pub fn write_row(&mut self, node: usize, q: usize, data: &[f32]) -> Result<()> {
+        debug_assert_eq!(data.len(), self.p);
+        let shard = self.spec.shard_of(node);
+        let slot = node % self.spec.shard_nodes;
+        let off = self.offset(slot, q);
+        let fi = self.acquire(shard)?;
+        let f = &mut self.frames[fi];
+        f.data[off..off + self.p].copy_from_slice(data);
+        f.dirty = true;
+        Ok(())
+    }
+
+    /// Swap two logical quantities (e.g. θ front/back) across the WHOLE
+    /// fleet — two index writes, no data movement, the sharded twin of the
+    /// resident driver's stack swap.
+    pub fn swap_quantities(&mut self, a: usize, b: usize) {
+        self.qmap.swap(a, b);
+    }
+}
+
+impl Drop for NodeSlabPool {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.path).ok();
+    }
+}
+
+// ------------------------------------------------------------ driver ----
+
+/// The honest-matrix axes the sharded driver refuses (loudly): each keeps
+/// per-node side state whose residency is the very thing sharding avoids.
+fn reject_unsupported(cfg: &ExperimentConfig) -> Result<()> {
+    if !matches!(
+        cfg.algo,
+        AlgoKind::Dsgd | AlgoKind::Dsgt | AlgoKind::FdDsgd | AlgoKind::FdDsgt
+    ) {
+        bail!(
+            "state.shard_nodes applies to gossip algorithms (dsgd|dsgt|fd-dsgd|fd-dsgt); \
+             `{}` has no per-node gossip state to shard",
+            cfg.algo.name()
+        );
+    }
+    if cfg.backend != Backend::Native {
+        bail!(
+            "state.shard_nodes requires --backend native: the PJRT artifacts are lowered \
+             for whole-stack calls and would need the full θ stack resident anyway"
+        );
+    }
+    if cfg.mode != Mode::Fused || cfg.driver != "sync" {
+        bail!(
+            "state.shard_nodes requires the fused sync driver (--mode fused, run.driver \
+             sync): the actor and async drivers keep per-node inbox state resident by \
+             construction; drop --shard-nodes or switch drivers"
+        );
+    }
+    if cfg.compress != "none" {
+        bail!(
+            "compress `{}` requested with state.shard_nodes: compression carries decoded \
+             and error-feedback slabs the sharded sweep does not partition yet; drop one",
+            cfg.compress
+        );
+    }
+    if crate::engine::adversary::perturb_active(cfg) || cfg.robust_rule != "mean" {
+        bail!(
+            "adversarial settings (attack.plan={}, robust.rule={}, dp={}) requested with \
+             state.shard_nodes: the adversarial axis runs on the resident drivers; drop one",
+            cfg.attack_plan,
+            cfg.robust_rule,
+            cfg.dp
+        );
+    }
+    if cfg.compute_plan != "uniform" {
+        bail!(
+            "compute plan `{}` requested with state.shard_nodes: straggler plans carry \
+             per-round τ slabs on the resident drivers; drop one",
+            cfg.compute_plan
+        );
+    }
+    if cfg.drop_prob > 0.0 {
+        bail!(
+            "drop_prob={} requested, but sharded execution charges communication \
+             analytically over lossless links; use `--mode actors` for loss injection",
+            cfg.drop_prob
+        );
+    }
+    Ok(())
+}
+
+/// Sharded synchronous gossip driver — implements [`super::Driver`] so
+/// [`super::RoundEngine::run`] drives it with the exact round structure of
+/// the resident paths, but every phase is a shard sweep over a
+/// [`NodeSlabPool`] instead of a whole-stack call.  Serial by design: the
+/// sweep is I/O-shaped, and serial per-node kernels are bitwise identical
+/// to the resident parallel fan-out at every thread count anyway.
+pub struct ShardedSync<'a> {
+    model: NativeModel,
+    dsgt: bool,
+    pool: NodeSlabPool,
+    samplers: Vec<NodeSampler>,
+    shards: &'a [Shard],
+    n: usize,
+    p: usize,
+    local: usize,
+    compute_s_per_step: f64,
+    // per-round network view (mirrors SyncDriver::refresh_net)
+    net: NetworkSchedule,
+    scratch: ViewScratch,
+    wsp: SparseW,
+    online: Vec<bool>,
+    round_edges: u64,
+    net_key: Option<u64>,
+    acct: Accountant,
+    // sweep scratch, all grow-only: warm rounds allocate nothing
+    ws: Workspace,
+    lx: Vec<f32>,
+    ly: Vec<f32>,
+    cx: Vec<f32>,
+    cy: Vec<f32>,
+    step_losses: Vec<f64>,
+    stack_t: Vec<f32>,
+    stack_y: Vec<f32>,
+    ridx: Vec<u32>,
+    roff: Vec<usize>,
+    /// Global→compact-stack column map, `u32::MAX` = unmapped.  O(n) at 4
+    /// bytes/node (4 MB at 10⁶) — the one full-fleet array the sweep keeps,
+    /// reset per shard via the halo list rather than a full clear.
+    g2l: Vec<u32>,
+    halo: Vec<u32>,
+    t_out: Vec<f32>,
+    y_out: Vec<f32>,
+    g_out: Vec<f32>,
+    g_row: Vec<f32>,
+    log: RunLog,
+    started: std::time::Instant,
+}
+
+impl<'a> ShardedSync<'a> {
+    /// Build the sharded driver for an honest gossip config with
+    /// `cfg.shard_nodes > 0`.  Seeds θ row-by-row through the pool — the
+    /// full stack is never materialized.
+    pub fn new(
+        cfg: &ExperimentConfig,
+        ds: &'a FederatedDataset,
+        graph: &Graph,
+        w: &SparseW,
+    ) -> Result<Self> {
+        reject_unsupported(cfg)?;
+        if cfg.d != ds.d {
+            bail!("config d={} vs dataset d={}", cfg.d, ds.d);
+        }
+        if cfg.shard_nodes == 0 {
+            bail!("ShardedSync requires state.shard_nodes > 0 (0 = resident path)");
+        }
+        let n = ds.n_hospitals();
+        let model = NativeModel::new(cfg.d, cfg.hidden);
+        let p = model.p();
+        let dsgt = matches!(cfg.algo, AlgoKind::Dsgt | AlgoKind::FdDsgt);
+        let nq = if dsgt { 6 } else { 2 };
+        let mut pool =
+            NodeSlabPool::new(n, cfg.shard_nodes.min(n), cfg.hot_shards, p, nq)?;
+        for i in 0..n {
+            let row = init_theta(cfg.seed, i, &model);
+            pool.write_row(i, quantity::THETA, &row)?;
+        }
+        let net = NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?;
+        let local = RoundPlan::new(cfg.algo.effective_q(cfg.q)).local_per_round;
+        let link = LinkModel {
+            latency_s: cfg.latency_s,
+            bandwidth_bps: cfg.bandwidth_bps,
+            drop_prob: 0.0,
+        };
+        let (m, d) = (cfg.m, cfg.d);
+        Ok(ShardedSync {
+            model,
+            dsgt,
+            pool,
+            samplers: (0..n).map(|i| NodeSampler::new(cfg.seed, i, m)).collect(),
+            shards: &ds.shards[..],
+            n,
+            p,
+            local,
+            compute_s_per_step: cfg.compute_s_per_step,
+            net,
+            scratch: ViewScratch::new(),
+            wsp: SparseW::empty(),
+            online: vec![true; n],
+            round_edges: 0,
+            net_key: None,
+            acct: Accountant::new(link),
+            ws: Workspace::new(),
+            lx: vec![0.0f32; local * m * d],
+            ly: vec![0.0f32; local * m],
+            cx: vec![0.0f32; m * d],
+            cy: vec![0.0f32; m],
+            step_losses: vec![0.0f64; local],
+            stack_t: Vec::new(),
+            stack_y: Vec::new(),
+            ridx: Vec::new(),
+            roff: Vec::new(),
+            g2l: vec![u32::MAX; n],
+            halo: Vec::new(),
+            t_out: vec![0.0f32; p],
+            y_out: vec![0.0f32; if dsgt { p } else { 0 }],
+            g_out: vec![0.0f32; if dsgt { p } else { 0 }],
+            g_row: vec![0.0f32; if dsgt { p } else { 0 }],
+            log: RunLog::new(cfg.algo.name()),
+            started: std::time::Instant::now(),
+        })
+    }
+
+    /// Per-round network view refresh — the same key-cached, grow-only
+    /// materialization as the resident sync driver (no dense scatter: the
+    /// sweep is CSR-native at any n).
+    fn refresh_net(&mut self, round: usize) -> Result<()> {
+        let key = self.net.view_key(round);
+        if self.net_key == Some(key) {
+            return Ok(());
+        }
+        self.wsp.reserve_rows_nnz(self.net.n(), self.net.base_nnz());
+        let view = self.net.view_into(round, &mut self.scratch)?;
+        self.wsp.copy_from(view.w);
+        self.round_edges = view.active_directed_edges();
+        self.online.clear();
+        self.online.extend_from_slice(view.online);
+        self.net_key = Some(key);
+        Ok(())
+    }
+
+    /// Build the compact gather for shard `s`: own rows map to `[0,
+    /// own_len)`, halo columns (cut-edge endpoints of *online* own rows) to
+    /// `[own_len, ..)` in first-appearance order, and `ridx`/`roff` hold
+    /// the entry-order-preserving CSR remap per own row.
+    fn build_halo(&mut self, s0: usize, s1: usize) {
+        let own_len = s1 - s0;
+        self.halo.clear();
+        self.ridx.clear();
+        self.roff.clear();
+        for (k, v) in self.g2l[s0..s1].iter_mut().enumerate() {
+            *v = k as u32;
+        }
+        for i in s0..s1 {
+            self.roff.push(self.ridx.len());
+            if !self.online[i] {
+                continue; // kernel skipped; empty remap range
+            }
+            let (idx, _) = self.wsp.row(i);
+            for &c in idx {
+                let cu = c as usize;
+                if self.g2l[cu] == u32::MAX {
+                    self.g2l[cu] = (own_len + self.halo.len()) as u32;
+                    self.halo.push(c);
+                }
+                self.ridx.push(self.g2l[cu]);
+            }
+        }
+        self.roff.push(self.ridx.len());
+    }
+
+    /// Undo [`Self::build_halo`]'s map entries (sentinel reset via the halo
+    /// list — never a full O(n) clear).
+    fn reset_halo(&mut self, s0: usize, s1: usize) {
+        self.g2l[s0..s1].fill(u32::MAX);
+        for &j in &self.halo {
+            self.g2l[j as usize] = u32::MAX;
+        }
+    }
+
+    /// Pool traffic counters (benches / EXP-SH1).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// Currently resident slab rows — the hot-set bound under test.
+    pub fn resident_rows(&self) -> usize {
+        self.pool.resident_rows()
+    }
+
+    /// Consume the driver into its metric log (the scale path: θ is never
+    /// materialized).
+    pub fn into_log(self) -> RunLog {
+        self.log
+    }
+
+    /// Consume the driver into (log, final θ stack) — small-n use only;
+    /// this is the one call that materializes `n · p` floats.
+    pub fn into_result(mut self) -> Result<(RunLog, Vec<f32>)> {
+        let (n, p) = (self.n, self.p);
+        let mut theta = vec![0.0f32; n * p];
+        for i in 0..n {
+            self.pool.read_row_into(i, quantity::THETA, &mut theta[i * p..(i + 1) * p])?;
+        }
+        Ok((self.log, theta))
+    }
+}
+
+/// Gather quantity `q` rows for shard `[s0, s1)`'s compact stack
+/// `[own rows; halo rows]` into `stack` (grow-only buffer).  Free function
+/// so the caller can borrow the pool, the halo list, and the stack buffer
+/// as disjoint fields.
+fn gather_stack(
+    pool: &mut NodeSlabPool,
+    halo: &[u32],
+    s0: usize,
+    s1: usize,
+    q: usize,
+    p: usize,
+    stack: &mut Vec<f32>,
+) -> Result<()> {
+    let own_len = s1 - s0;
+    let need = (own_len + halo.len()) * p;
+    if stack.len() < need {
+        stack.resize(need, 0.0);
+    }
+    for i in s0..s1 {
+        let li = i - s0;
+        pool.read_row_into(i, q, &mut stack[li * p..(li + 1) * p])?;
+    }
+    for (k, &j) in halo.iter().enumerate() {
+        let li = own_len + k;
+        pool.read_row_into(j as usize, q, &mut stack[li * p..(li + 1) * p])?;
+    }
+    Ok(())
+}
+
+impl super::Driver for ShardedSync<'_> {
+    fn begin(&mut self) -> Result<()> {
+        if self.dsgt {
+            // DSGT init sweep: Y⁰ = G⁰ = ∇g(θ⁰) on one fresh comm batch per
+            // node — the same (seed, node)-keyed draw the resident
+            // `DsgtStrategy::init` makes, in the same per-node stream order
+            let spec = *self.pool.spec();
+            for s in 0..spec.n_shards() {
+                let (s0, s1) = spec.range(s);
+                for i in s0..s1 {
+                    self.samplers[i].batch(&self.shards[i], &mut self.cx, &mut self.cy);
+                    self.pool.read_row_into(i, quantity::THETA, &mut self.t_out)?;
+                    let (_, gi) = self.model.loss_and_grad(&self.t_out, &self.cx, &self.cy);
+                    self.pool.write_row(i, quantity::Y, &gi)?;
+                    self.pool.write_row(i, quantity::G, &gi)?;
+                }
+            }
+        }
+        self.observe(0, 0)
+    }
+
+    fn local_phase(&mut self, _round: usize, lrs: &[f32]) -> Result<()> {
+        let spec = *self.pool.spec();
+        let local = lrs.len();
+        for s in 0..spec.n_shards() {
+            let (s0, s1) = spec.range(s);
+            for i in s0..s1 {
+                // per-node streams are independent, so drawing node-by-node
+                // inside the shard sweep yields the identical batches the
+                // resident whole-fleet draw loop does
+                self.samplers[i].batches(&self.shards[i], local, &mut self.lx, &mut self.ly);
+                self.pool.read_row_into(i, quantity::THETA, &mut self.t_out)?;
+                self.model.local_steps_into(
+                    &mut self.t_out,
+                    &self.lx,
+                    &self.ly,
+                    lrs,
+                    &mut self.step_losses[..local],
+                    &mut self.ws,
+                );
+                // local steps touch no cross-node state: the in-place front
+                // write equals the resident back-buffer write + swap
+                self.pool.write_row(i, quantity::THETA, &self.t_out)?;
+            }
+        }
+        self.acct.local_compute(local as u64, self.compute_s_per_step);
+        Ok(())
+    }
+
+    fn comm_phase(&mut self, round: usize, lr: f32) -> Result<()> {
+        self.refresh_net(round)?;
+        let spec = *self.pool.spec();
+        let p = self.p;
+        for s in 0..spec.n_shards() {
+            let (s0, s1) = spec.range(s);
+            self.build_halo(s0, s1);
+            gather_stack(
+                &mut self.pool,
+                &self.halo,
+                s0,
+                s1,
+                quantity::THETA,
+                p,
+                &mut self.stack_t,
+            )?;
+            if self.dsgt {
+                gather_stack(
+                    &mut self.pool,
+                    &self.halo,
+                    s0,
+                    s1,
+                    quantity::Y,
+                    p,
+                    &mut self.stack_y,
+                )?;
+            }
+            for i in s0..s1 {
+                let li = i - s0;
+                // every row draws its batch every round — (seed, node)-keyed
+                // streams stay plan- and shard-independent; offline rows
+                // discard theirs, exactly like the resident strategies
+                self.samplers[i].batch(&self.shards[i], &mut self.cx, &mut self.cy);
+                if !self.online[i] {
+                    // offline: next = previous (the resident
+                    // restore_offline_rows), for every front quantity
+                    self.pool.read_row_into(i, quantity::THETA, &mut self.t_out)?;
+                    self.pool.write_row(i, quantity::THETA_BACK, &self.t_out)?;
+                    if self.dsgt {
+                        self.pool.read_row_into(i, quantity::Y, &mut self.y_out)?;
+                        self.pool.write_row(i, quantity::Y_BACK, &self.y_out)?;
+                        self.pool.read_row_into(i, quantity::G, &mut self.g_out)?;
+                        self.pool.write_row(i, quantity::G_BACK, &self.g_out)?;
+                    }
+                    continue;
+                }
+                let (idx, val) = self.wsp.row(i);
+                let r = self.roff[li]..self.roff[li + 1];
+                debug_assert_eq!(idx.len(), r.len());
+                if self.dsgt {
+                    self.pool.read_row_into(i, quantity::G, &mut self.g_row)?;
+                    self.model.dsgt_node_into(
+                        &self.ridx[r],
+                        val,
+                        &self.stack_t,
+                        &self.stack_y,
+                        &self.stack_y[li * p..(li + 1) * p],
+                        &self.g_row,
+                        &self.cx,
+                        &self.cy,
+                        lr,
+                        &mut self.t_out,
+                        &mut self.y_out,
+                        &mut self.g_out,
+                        &mut self.ws,
+                    );
+                    self.pool.write_row(i, quantity::THETA_BACK, &self.t_out)?;
+                    self.pool.write_row(i, quantity::Y_BACK, &self.y_out)?;
+                    self.pool.write_row(i, quantity::G_BACK, &self.g_out)?;
+                } else {
+                    self.model.dsgd_node_into(
+                        &self.ridx[r],
+                        val,
+                        &self.stack_t,
+                        &self.stack_t[li * p..(li + 1) * p],
+                        &self.cx,
+                        &self.cy,
+                        lr,
+                        &mut self.t_out,
+                        &mut self.ws,
+                    );
+                    self.pool.write_row(i, quantity::THETA_BACK, &self.t_out)?;
+                }
+            }
+            self.reset_halo(s0, s1);
+        }
+        self.pool.swap_quantities(quantity::THETA, quantity::THETA_BACK);
+        if self.dsgt {
+            self.pool.swap_quantities(quantity::Y, quantity::Y_BACK);
+            self.pool.swap_quantities(quantity::G, quantity::G_BACK);
+        }
+        // analytic accounting, byte-for-byte the resident fused charges:
+        // one comm gradient of compute, then per kind (θ; DSGT adds ϑ) one
+        // dense-f32 message per active directed edge
+        self.acct.local_compute(1, self.compute_s_per_step);
+        let kind_bytes = [4 * p as u64, 4 * p as u64];
+        let kinds = if self.dsgt { 2 } else { 1 };
+        self.acct.comm_round(self.round_edges, &kind_bytes[..kinds]);
+        Ok(())
+    }
+
+    fn observe(&mut self, round: u64, local_steps: u64) -> Result<()> {
+        // pass 1: per-node eval folded shard-by-shard through StreamingEval
+        // — the identical left fold the resident eval_reduce runs, so the
+        // metrics agree bitwise with the resident path
+        let mut se = StreamingEval::new(self.p);
+        for i in 0..self.n {
+            self.pool.read_row_into(i, quantity::THETA, &mut self.t_out)?;
+            let (loss, grad, correct, total) = self.model.eval_node(&self.t_out, &self.shards[i]);
+            se.push_node(loss, &grad, correct, total, &self.t_out);
+        }
+        // pass 2: consensus against the pass-1 mean, same sweep order
+        let mut cp = se.into_consensus_pass();
+        for i in 0..self.n {
+            self.pool.read_row_into(i, quantity::THETA, &mut self.t_out)?;
+            cp.push_row(&self.t_out);
+        }
+        let eval = cp.finish();
+        self.log.push(round_metrics(
+            round,
+            local_steps,
+            eval,
+            self.acct.snapshot(),
+            self.started.elapsed().as_secs_f64(),
+        ));
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ entry points ----
+
+/// Train an honest gossip config through the sharded driver; returns the
+/// metric log and the final θ stack (materialized once, at the end — for
+/// the pinned-equivalence tests and small-n callers).
+pub fn train(
+    cfg: &ExperimentConfig,
+    ds: &FederatedDataset,
+    graph: &Graph,
+    w: &SparseW,
+) -> Result<(RunLog, Vec<f32>)> {
+    let engine = super::RoundEngine::from_config(cfg);
+    let mut driver = ShardedSync::new(cfg, ds, graph, w)?;
+    engine.run(&mut driver)?;
+    driver.into_result()
+}
+
+/// Train through the sharded driver, log only — the 10⁵⁺-node path: the
+/// full θ stack is never materialized, before, during, or after the run.
+pub fn train_log(
+    cfg: &ExperimentConfig,
+    ds: &FederatedDataset,
+    graph: &Graph,
+    w: &SparseW,
+) -> Result<RunLog> {
+    let engine = super::RoundEngine::from_config(cfg);
+    let mut driver = ShardedSync::new(cfg, ds, graph, w)?;
+    engine.run(&mut driver)?;
+    Ok(driver.into_log())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_partitions_exactly() {
+        let s = ShardSpec { n: 10, shard_nodes: 4 };
+        assert_eq!(s.n_shards(), 3);
+        assert_eq!(s.range(0), (0, 4));
+        assert_eq!(s.range(2), (8, 10));
+        assert_eq!(s.shard_of(7), 1);
+        assert_eq!(s.shard_of(9), 2);
+    }
+
+    #[test]
+    fn pool_roundtrips_rows_through_eviction() {
+        // 6 nodes, shards of 2 (3 shards), hot-set of 1 frame: every write
+        // to a new shard evicts the previous one, so reads exercise both
+        // the resident-frame and the spill-file paths
+        let p = 5;
+        let mut pool = NodeSlabPool::new(6, 2, 1, p, 2).unwrap();
+        let row = |i: usize, q: usize| -> Vec<f32> {
+            (0..p).map(|k| (i * 100 + q * 10 + k) as f32).collect()
+        };
+        for i in 0..6 {
+            pool.write_row(i, 0, &row(i, 0)).unwrap();
+            pool.write_row(i, 1, &row(i, 1)).unwrap();
+        }
+        assert!(pool.resident_rows() <= 2, "hot-set bound: 1 frame × 2 nodes");
+        let mut buf = vec![0.0f32; p];
+        for i in 0..6 {
+            for q in 0..2 {
+                pool.read_row_into(i, q, &mut buf).unwrap();
+                assert_eq!(buf, row(i, q), "node {i} q {q}");
+            }
+        }
+        let st = pool.stats();
+        assert!(st.spills > 0, "a 1-frame pool over 3 shards must spill");
+        assert!(st.loads > 0);
+    }
+
+    #[test]
+    fn quantity_swap_moves_no_data() {
+        let p = 3;
+        let mut pool = NodeSlabPool::new(2, 2, 1, p, 2).unwrap();
+        pool.write_row(0, 0, &[1.0; 3]).unwrap();
+        pool.write_row(0, 1, &[2.0; 3]).unwrap();
+        pool.swap_quantities(0, 1);
+        let mut buf = vec![0.0f32; p];
+        pool.read_row_into(0, 0, &mut buf).unwrap();
+        assert_eq!(buf, [2.0; 3]);
+        pool.read_row_into(0, 1, &mut buf).unwrap();
+        assert_eq!(buf, [1.0; 3]);
+        // and the swap survives a spill/reload cycle (offsets go through
+        // the same qmap on the file side)
+        pool.write_row(1, 0, &[9.0; 3]).unwrap(); // same shard — stays hot
+        let mut other = NodeSlabPool::new(2, 1, 1, p, 2).unwrap();
+        other.write_row(0, 0, &[5.0; 3]).unwrap();
+        other.swap_quantities(0, 1);
+        other.write_row(1, 0, &[7.0; 3]).unwrap(); // evicts shard 0
+        other.read_row_into(0, 1, &mut buf).unwrap(); // file path
+        assert_eq!(buf, [5.0; 3]);
+    }
+
+    #[test]
+    fn spill_file_is_removed_on_drop() {
+        let pool = NodeSlabPool::new(4, 2, 1, 3, 2).unwrap();
+        let path = pool.path.clone();
+        assert!(path.exists());
+        drop(pool);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn unsupported_axes_bail_loudly() {
+        let base = || {
+            let mut cfg = ExperimentConfig::default();
+            cfg.backend = Backend::Native;
+            cfg.shard_nodes = 4;
+            cfg
+        };
+        let ds = crate::data::generate(&crate::data::DataConfig {
+            n_hospitals: 4,
+            records_per_hospital: 30,
+            records_jitter: 0,
+            ..crate::data::DataConfig::default()
+        })
+        .unwrap();
+        let graph =
+            Graph::build(&crate::graph::Topology::Ring, 4, &mut crate::rng::Pcg64::seed(0))
+                .unwrap();
+        let w = crate::mixing::build_sparse(&graph, crate::mixing::Scheme::Metropolis);
+        for (patch, needle) in [
+            (
+                Box::new(|c: &mut ExperimentConfig| c.compress = "q8".into())
+                    as Box<dyn Fn(&mut ExperimentConfig)>,
+                "compress",
+            ),
+            (Box::new(|c: &mut ExperimentConfig| c.backend = Backend::Pjrt), "native"),
+            (Box::new(|c: &mut ExperimentConfig| c.driver = "async".into()), "sync"),
+            (Box::new(|c: &mut ExperimentConfig| c.mode = Mode::Actors), "fused"),
+            (
+                Box::new(|c: &mut ExperimentConfig| {
+                    c.attack_plan = "sign-flip".into();
+                    c.attack_frac = 0.25;
+                }),
+                "adversarial",
+            ),
+            (
+                Box::new(|c: &mut ExperimentConfig| c.robust_rule = "median".into()),
+                "adversarial",
+            ),
+            (
+                Box::new(|c: &mut ExperimentConfig| c.compute_plan = "dropout".into()),
+                "compute plan",
+            ),
+            (Box::new(|c: &mut ExperimentConfig| c.drop_prob = 0.1), "lossless"),
+            (
+                Box::new(|c: &mut ExperimentConfig| c.algo = AlgoKind::FedAvg),
+                "gossip",
+            ),
+        ] {
+            let mut cfg = base();
+            patch(&mut cfg);
+            let err = train(&cfg, &ds, &graph, &w).unwrap_err().to_string();
+            assert!(err.contains(needle), "wanted `{needle}` in: {err}");
+        }
+    }
+}

@@ -476,11 +476,6 @@ impl CommStrategy for DsgdStrategy {
         }
         if let Some(pb) = &self.perturb {
             restore_attacker_rows(&mut st.theta_back, &st.theta, &pb.attack, st.p);
-            restore_attacker_rows(&mut self.y_back, &self.y, &pb.attack, st.p);
-            restore_attacker_rows(&mut self.g_back, &self.g, &pb.attack, st.p);
-        }
-        if let Some(pb) = &self.perturb {
-            restore_attacker_rows(&mut st.theta_back, &st.theta, &pb.attack, st.p);
         }
         std::mem::swap(&mut st.theta, &mut st.theta_back);
         Ok(())
@@ -688,6 +683,11 @@ impl CommStrategy for DsgtStrategy {
             restore_offline_rows(&mut st.theta_back, &st.theta, net.online, st.p);
             restore_offline_rows(&mut self.y_back, &self.y, net.online, st.p);
             restore_offline_rows(&mut self.g_back, &self.g, net.online, st.p);
+        }
+        if let Some(pb) = &self.perturb {
+            restore_attacker_rows(&mut st.theta_back, &st.theta, &pb.attack, st.p);
+            restore_attacker_rows(&mut self.y_back, &self.y, &pb.attack, st.p);
+            restore_attacker_rows(&mut self.g_back, &self.g, &pb.attack, st.p);
         }
         std::mem::swap(&mut st.theta, &mut st.theta_back);
         std::mem::swap(&mut self.y, &mut self.y_back);

@@ -43,6 +43,10 @@ pub struct AsyncRow {
     pub bytes: u64,
     /// Simulated wall-clock at the end of the run, seconds.
     pub sim_time_s: f64,
+    /// Non-finite payloads quarantined at the combine boundary over the
+    /// whole run (0 on honest convergent runs; nonzero is the audit trail
+    /// that an exploding or adversarial message was dropped, not mixed).
+    pub quarantined: u64,
     /// First simulated time at which accuracy reached the sync oracle's
     /// final accuracy − 1 point (NaN if the trajectory never got there).
     pub t_to_target_s: f64,
@@ -84,6 +88,7 @@ fn run_one(
         comm_rounds: last.comm_rounds,
         bytes: last.bytes,
         sim_time_s: last.sim_time_s,
+        quarantined: last.quarantined,
         t_to_target_s: target.map_or(f64::NAN, |t| time_to(&log, t)),
     };
     Ok((row, log))
@@ -192,6 +197,7 @@ pub fn rows_json(rows: &[AsyncRow]) -> Json {
                     ("comm_rounds", jsonl::num(r.comm_rounds as f64)),
                     ("bytes", jsonl::num(r.bytes as f64)),
                     ("sim_time_s", jsonl::num(r.sim_time_s)),
+                    ("quarantined", jsonl::num(r.quarantined as f64)),
                     ("t_to_target_s", jsonl::num(r.t_to_target_s)),
                 ])
             })
@@ -267,6 +273,30 @@ mod tests {
         assert_eq!(rows[1].driver, "async uncapped");
         assert_eq!(rows[2].driver, "async s=0.50");
         assert!((rows[2].staleness_s - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisoned_payload_quarantine_surfaces_in_rows_and_json() {
+        // regression: the combine-boundary quarantine counter used to stop
+        // at RoundMetrics — EXP-AS1 rows and their JSON dump dropped it, so
+        // a poisoned frontier run was indistinguishable from an honest one
+        let mut cfg = tiny_cfg();
+        cfg.compute_plan = "uniform".into();
+        cfg.attack_plan = "scaled-noise".into();
+        cfg.attack_frac = 0.2;
+        cfg.attack_scale = 1e39; // overflows f32 → Inf payloads on the wire
+        let rows = run(&cfg, &[0.0], &["ring".to_string()]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.quarantined > 0, "{}: poisoned payloads must surface", r.driver);
+            assert!(r.final_loss.is_finite(), "{}: the poison must never mix", r.driver);
+        }
+        let json = rows_json(&rows).to_string();
+        assert!(json.contains("\"quarantined\""), "{json}");
+        // honest runs keep the counter at zero — the column is an audit
+        // trail, not noise
+        let honest = run(&tiny_cfg(), &[0.0], &["ring".to_string()]).unwrap();
+        assert!(honest.iter().all(|r| r.quarantined == 0));
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod compress;
 pub mod fig1;
 pub mod fig2;
 pub mod robust;
+pub mod shard;
 pub mod speedup;
 pub mod stragglers;
 pub mod sweeps;

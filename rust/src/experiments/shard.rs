@@ -1,0 +1,275 @@
+//! EXP-SH1: node-state residency at scale — spill-backed sharded slabs vs
+//! resident stacks, over fleet size.
+//!
+//! Every fleet size runs the same honest gossip config through the sharded
+//! driver (`engine::shard::ShardedSync`) and reports the pool's measured
+//! peak residency, spill traffic, and per-round wall time.  Up to
+//! `compare_max` nodes the resident fused driver runs alongside and the two
+//! metric trajectories are checked **bitwise** — above it the resident run
+//! is skipped (that is the point: at 10⁵–10⁶ nodes the resident stacks do
+//! not fit, while the sharded pool holds `hot_shards · shard_nodes` rows no
+//! matter the fleet).  The headline scaling numbers for the README live in
+//! `BENCH_9.json`; this harness is the in-repo, always-runnable miniature.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{assemble, run_on};
+use crate::engine::{RoundEngine, ShardedSync};
+use crate::jsonl::{self, Json};
+use anyhow::{bail, Result};
+
+/// One (fleet size, driver) cell of the EXP-SH1 residency sweep.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    /// Fleet size.
+    pub n: usize,
+    /// Driver label (`resident`, or `sharded k=<shard_nodes> h=<hot_shards>`).
+    pub mode: String,
+    /// Peak resident slab rows: `n` for the resident driver, at most
+    /// `hot_shards · shard_nodes` for the sharded pool.
+    pub resident_rows: usize,
+    /// Peak resident slab bytes (`resident_rows · nq · p · 4`).
+    pub slab_bytes: u64,
+    /// Spill-file extent on disk (0 for the resident driver).
+    pub spill_bytes: u64,
+    /// Shard loads from the spill file.
+    pub loads: u64,
+    /// Dirty-frame writebacks to the spill file.
+    pub spills: u64,
+    /// Pool acquires served by a resident frame.
+    pub hits: u64,
+    /// Wall-clock seconds per communication round.
+    pub round_time_s: f64,
+    /// Final record-weighted training loss.
+    pub final_loss: f64,
+    /// `Some(true)` iff the metric trajectory is bitwise identical to the
+    /// resident run at this fleet size (`None` above `compare_max`, and for
+    /// the resident rows themselves).
+    pub matches_resident: Option<bool>,
+}
+
+/// Quantity rows per node: θ front/back, plus the DSGT tracker and
+/// gradient front/back pairs.
+fn nq_of(cfg: &ExperimentConfig) -> u64 {
+    if cfg.algo.uses_tracker() {
+        6
+    } else {
+        2
+    }
+}
+
+/// Bitwise comparison of two metric trajectories: every evaluation row's
+/// loss, accuracy, consensus, and stationarity must agree to the bit.
+fn logs_bitwise_equal(a: &crate::metrics::RunLog, b: &crate::metrics::RunLog) -> bool {
+    a.rows.len() == b.rows.len()
+        && a.rows.iter().zip(&b.rows).all(|(x, y)| {
+            x.comm_rounds == y.comm_rounds
+                && x.loss.to_bits() == y.loss.to_bits()
+                && x.accuracy.to_bits() == y.accuracy.to_bits()
+                && x.consensus.to_bits() == y.consensus.to_bits()
+                && x.stationarity.to_bits() == y.stationarity.to_bits()
+        })
+}
+
+/// Sweep fleet sizes: one sharded row per `n` (using `cfg.shard_nodes` /
+/// `cfg.hot_shards`; `shard_nodes = 0` defaults to 64), plus a resident
+/// comparison row for every `n ≤ compare_max` with the bitwise verdict on
+/// the sharded row.
+pub fn run(cfg: &ExperimentConfig, ns: &[usize], compare_max: usize) -> Result<Vec<ShardRow>> {
+    if ns.is_empty() {
+        bail!("need at least one fleet size (--ns)");
+    }
+    let mut rows = Vec::new();
+    for &n in ns {
+        let mut c = cfg.clone();
+        c.n = n;
+        c.shard_nodes = if cfg.shard_nodes == 0 { 64 } else { cfg.shard_nodes };
+        c.validate()?;
+        let asm = assemble(&c)?;
+        let p = crate::algo::native::NativeModel::new(c.d, c.hidden).p() as u64;
+        let nq = nq_of(&c);
+
+        // sharded run, driven directly so the pool counters stay readable
+        let engine = RoundEngine::from_config(&c);
+        let mut drv = ShardedSync::new(&c, &asm.ds, &asm.graph, &asm.w)?;
+        engine.run(&mut drv)?;
+        let stats = drv.pool_stats();
+        let resident_rows = drv.resident_rows();
+        let sharded_log = drv.into_log();
+        let last = sharded_log.rows.last().expect("run produced no metric rows");
+        let mut sharded = ShardRow {
+            n,
+            mode: format!("sharded k={} h={}", c.shard_nodes, c.hot_shards),
+            resident_rows,
+            slab_bytes: resident_rows as u64 * nq * p * 4,
+            spill_bytes: (n.div_ceil(c.shard_nodes) * c.shard_nodes) as u64 * nq * p * 4,
+            loads: stats.loads,
+            spills: stats.spills,
+            hits: stats.hits,
+            round_time_s: last.wall_time_s / (last.comm_rounds.max(1) as f64),
+            final_loss: last.loss,
+            matches_resident: None,
+        };
+
+        if n <= compare_max {
+            let mut r = c.clone();
+            r.shard_nodes = 0;
+            let resident_log = run_on(&r, &asm)?;
+            let rl = resident_log.rows.last().expect("run produced no metric rows");
+            sharded.matches_resident = Some(logs_bitwise_equal(&sharded_log, &resident_log));
+            rows.push(ShardRow {
+                n,
+                mode: "resident".into(),
+                resident_rows: n,
+                slab_bytes: n as u64 * nq * p * 4,
+                spill_bytes: 0,
+                loads: 0,
+                spills: 0,
+                hits: 0,
+                round_time_s: rl.wall_time_s / (rl.comm_rounds.max(1) as f64),
+                final_loss: rl.loss,
+                matches_resident: None,
+            });
+        }
+        rows.push(sharded);
+    }
+    Ok(rows)
+}
+
+/// Print the residency table.
+pub fn print_table(rows: &[ShardRow]) {
+    println!("EXP-SH1 — node-state residency: sharded spill-backed slabs vs resident stacks");
+    println!(
+        "{:<8} {:<20} {:>12} {:>12} {:>12} {:>8} {:>8} {:>12} {:>10} {:>8}",
+        "n", "mode", "res_rows", "slab_MB", "spill_MB", "loads", "spills", "round_s", "loss", "bitwise"
+    );
+    for r in rows {
+        println!(
+            "{:<8} {:<20} {:>12} {:>12.2} {:>12.2} {:>8} {:>8} {:>12.4} {:>10.4} {:>8}",
+            r.n,
+            r.mode,
+            r.resident_rows,
+            r.slab_bytes as f64 / 1e6,
+            r.spill_bytes as f64 / 1e6,
+            r.loads,
+            r.spills,
+            r.round_time_s,
+            r.final_loss,
+            match r.matches_resident {
+                Some(true) => "==",
+                Some(false) => "DIVERGED",
+                None => "-",
+            }
+        );
+    }
+}
+
+/// Human-readable observations: the hot-set bound and the bitwise verdicts.
+pub fn findings(rows: &[ShardRow]) -> Vec<String> {
+    let mut out = Vec::new();
+    for r in rows.iter().filter(|r| r.mode != "resident") {
+        if let Some(resident) = rows.iter().find(|s| s.mode == "resident" && s.n == r.n) {
+            let ratio = resident.slab_bytes as f64 / r.slab_bytes.max(1) as f64;
+            out.push(format!(
+                "n={}: sharded slab residency {:.2} MB vs resident {:.2} MB ({ratio:.1}x), \
+                 trajectories {}",
+                r.n,
+                r.slab_bytes as f64 / 1e6,
+                resident.slab_bytes as f64 / 1e6,
+                match r.matches_resident {
+                    Some(true) => "bitwise identical".to_string(),
+                    Some(false) => "DIVERGED — pinned contract broken".to_string(),
+                    None => "not compared".to_string(),
+                }
+            ));
+        } else {
+            out.push(format!(
+                "n={}: sharded slab residency {:.2} MB (resident would need {:.2} MB; \
+                 not run at this size)",
+                r.n,
+                r.slab_bytes as f64 / 1e6,
+                (r.n as u64 * (r.slab_bytes / r.resident_rows.max(1) as u64)) as f64 / 1e6,
+            ));
+        }
+    }
+    out
+}
+
+/// JSON dump of the sweep.
+pub fn rows_json(rows: &[ShardRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                jsonl::obj(vec![
+                    ("n", jsonl::num(r.n as f64)),
+                    ("mode", jsonl::s(&r.mode)),
+                    ("resident_rows", jsonl::num(r.resident_rows as f64)),
+                    ("slab_bytes", jsonl::num(r.slab_bytes as f64)),
+                    ("spill_bytes", jsonl::num(r.spill_bytes as f64)),
+                    ("loads", jsonl::num(r.loads as f64)),
+                    ("spills", jsonl::num(r.spills as f64)),
+                    ("hits", jsonl::num(r.hits as f64)),
+                    ("round_time_s", jsonl::num(r.round_time_s)),
+                    ("final_loss", jsonl::num(r.final_loss)),
+                    (
+                        "matches_resident",
+                        match r.matches_resident {
+                            Some(b) => Json::Bool(b),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AlgoKind, Backend, Mode};
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.mode = Mode::Fused;
+        cfg.algo = AlgoKind::FdDsgt;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 5;
+        cfg.total_steps = 40;
+        cfg.eval_every = 2;
+        cfg.records_per_hospital = 40;
+        cfg.records_jitter = 5;
+        cfg.shard_nodes = 3;
+        cfg.hot_shards = 2;
+        cfg
+    }
+
+    #[test]
+    fn sweep_reports_bitwise_match_and_bounded_residency() {
+        let rows = run(&tiny_cfg(), &[8, 12], 8).unwrap();
+        // n=8 compared (resident + sharded rows), n=12 sharded only
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].mode, "resident");
+        assert_eq!(rows[1].matches_resident, Some(true), "pinned contract broken");
+        assert_eq!(rows[2].matches_resident, None);
+        for r in rows.iter().filter(|r| r.mode != "resident") {
+            assert!(r.resident_rows <= 2 * 3, "hot-set bound: {}", r.resident_rows);
+            assert!(r.loads > 0, "a 2-frame pool over >2 shards must load");
+            assert!(r.final_loss.is_finite());
+        }
+        // residency stays flat as n grows — that is the whole experiment
+        assert_eq!(rows[1].slab_bytes, rows[2].slab_bytes);
+        let f = findings(&rows);
+        assert_eq!(f.len(), 2);
+        assert!(f[0].contains("bitwise identical"), "{}", f[0]);
+        let json = rows_json(&rows).to_string();
+        assert!(json.contains("\"matches_resident\""), "{json}");
+    }
+
+    #[test]
+    fn empty_fleet_list_is_rejected() {
+        let err = run(&tiny_cfg(), &[], 0).unwrap_err();
+        assert!(err.to_string().contains("fleet size"), "{err}");
+    }
+}

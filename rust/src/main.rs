@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 use decfl::cli::{apply_common_overrides, Args};
 use decfl::config::{AlgoKind, ExperimentConfig};
 use decfl::experiments::{
-    asynchrony, churn, compress, fig1, fig2, robust, speedup, stragglers, sweeps,
+    asynchrony, churn, compress, fig1, fig2, robust, shard, speedup, stragglers, sweeps,
 };
 
 const HELP: &str = "\
@@ -43,6 +43,10 @@ SUBCOMMANDS
               baseline per topology (--rules, --fracs, --topos; the attack
               plan defaults to sign-flip, shape it with --attack-plan /
               --attack-scale / --attack-age, layer DP with --dp-*)
+  shard       EXP-SH1: node-state residency vs fleet size — spill-backed
+              sharded slabs vs resident stacks, with a bitwise trajectory
+              check up to --compare-max nodes (--ns, --shard-nodes,
+              --hot-shards)
   export-data write the synthetic cohort as per-hospital CSVs
   info        print artifact manifest + config summary
   help        this text
@@ -108,6 +112,14 @@ COMMON OPTIONS (train + experiments)
   --topk-frac <f>         kept fraction for --compress topk (default 0.1)
   --error-feedback        opt-in EF residuals on the message streams
                           (experimental; destabilizes aggressive top-k)
+  --shard-nodes <k>       shard per-node state into k-node slabs backed by a
+                          spill file, keeping only the hot-set resident
+                          (default 0 = unsharded resident stacks, the pinned
+                          path; gossip + native + fused sync only; the
+                          sharded trajectory is bitwise identical)
+  --hot-shards <h>        resident shard frames in the LRU hot-set when
+                          --shard-nodes > 0 (default 4; peak slab residency
+                          is h·k rows at any fleet size)
   --heterogeneity <h>     data non-iidness in [0,1] (default 0.6)
   --seed <s>              RNG seed (default 7)
   --threads <k>           native-backend worker threads, 0 = one per core
@@ -128,6 +140,8 @@ EXAMPLES
               --robust-rule trimmed-mean --steps 2000
   decfl robust --backend native --steps 2000 --q 50 --fracs 0.1,0.2
   decfl train --backend native --dp gaussian --dp-clip 0.5 --steps 2000
+  decfl train --backend native --shard-nodes 64 --hot-shards 4 --steps 2000
+  decfl shard --backend native --ns 32,128,512 --steps 400 --q 20
   decfl fig2 --backend native --steps 2000 --q 50 --out fig2.json
   decfl churn --backend native --steps 2000 --q 50 --drops 0.2,0.4
   decfl compress --backend native --steps 2000 --q 50 --fracs 0.1,0.05
@@ -474,6 +488,24 @@ fn real_main() -> Result<()> {
                 println!("finding: {f}");
             }
             dump(&cfg.out, &robust::rows_json(&rows))?;
+        }
+        "shard" => {
+            let ns = args.get_usize_list("ns")?.unwrap_or_else(|| vec![32, 128, 512]);
+            let compare_max = args.get_usize("compare-max")?.unwrap_or(128);
+            args.finish()?;
+            if matches!(cfg.algo, AlgoKind::FedAvg | AlgoKind::Centralized) {
+                bail!(
+                    "`decfl shard` sweeps sharded gossip state, but `{}` keeps \
+                     co-resident server state; pick dsgd|dsgt|fd-dsgd|fd-dsgt",
+                    cfg.algo.name()
+                );
+            }
+            let rows = shard::run(&cfg, &ns, compare_max)?;
+            shard::print_table(&rows);
+            for f in shard::findings(&rows) {
+                println!("finding: {f}");
+            }
+            dump(&cfg.out, &shard::rows_json(&rows))?;
         }
         "export-data" => {
             reject_plan_flags(&args, &cfg, "export-data")?;

@@ -7,9 +7,168 @@
 //! (rounds / messages / bytes / simulated seconds).  Fig. 2's x-axis is
 //! `comm_rounds`; the comm-cost benches read `bytes`.
 
+use crate::algo::l2_dist_sq;
 use crate::jsonl::{self, Json};
 use crate::netsim::NetSnapshot;
 use anyhow::Result;
+
+// --------------------------------------------------- streaming eval ----
+
+/// Kahan-compensated f64 accumulator — one running sum plus its
+/// compensation term, so long folds (10⁵–10⁶ nodes) keep full f64
+/// accuracy while remaining a pure left fold: the result depends only on
+/// the push order, never on how the pushes were batched into shards.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Kahan {
+    sum: f64,
+    c: f64,
+}
+
+impl Kahan {
+    /// Fold one value into the compensated sum.
+    #[inline]
+    pub fn add(&mut self, v: f64) {
+        let y = v - self.c;
+        let t = self.sum + y;
+        self.c = (t - self.sum) - y;
+        self.sum = t;
+    }
+
+    /// The compensated sum so far.
+    #[inline]
+    pub fn value(&self) -> f64 {
+        self.sum
+    }
+}
+
+/// Streaming two-pass metric reduction over per-node eval partials.
+///
+/// This is THE eval arithmetic of the crate: `NativeModel::eval_reduce`
+/// (and through it every resident `eval_full`, both drivers, and the
+/// honest-subfleet filter) folds its partials through this type, and the
+/// sharded sweep (`engine::shard`) folds shard by shard through the same
+/// type — so resident and sharded metrics are bitwise-equal *by
+/// construction*, not by tolerance (pinned in `tests/shard_pins.rs`).
+///
+/// Pass 1 ([`StreamingEval::push_node`], strictly ascending node order)
+/// accumulates the record-weighted loss/accuracy numerators, the
+/// Kahan-compensated per-coordinate gradient sums behind the Theorem-1
+/// stationarity term, and the per-coordinate θ column sums behind θ̄.
+/// [`StreamingEval::into_consensus_pass`] then fixes θ̄ (column mean,
+/// rounded to f32 exactly like the resident `row_mean`) and pass 2
+/// ([`ConsensusPass::push_row`], same node order) folds each row's
+/// squared distance to θ̄.  Because every global quantity is a pure left
+/// fold in node order, shard boundaries cannot change a single bit —
+/// 1 shard, k shards, and the unsharded path all agree exactly.
+#[derive(Clone, Debug)]
+pub struct StreamingEval {
+    p: usize,
+    rows: usize,
+    loss_w: Kahan,
+    correct: u64,
+    total: u64,
+    gsum: Vec<Kahan>,
+    tsum: Vec<Kahan>,
+}
+
+impl StreamingEval {
+    /// Fresh accumulator for parameter size `p`.
+    pub fn new(p: usize) -> Self {
+        StreamingEval {
+            p,
+            rows: 0,
+            loss_w: Kahan::default(),
+            correct: 0,
+            total: 0,
+            gsum: vec![Kahan::default(); p],
+            tsum: vec![Kahan::default(); p],
+        }
+    }
+
+    /// Fold node `i`'s eval partial: its mean shard loss, full-shard
+    /// gradient, correct/total record counts, and parameter row.  Nodes
+    /// MUST be pushed in ascending node order — the fold order is the
+    /// determinism contract.
+    pub fn push_node(
+        &mut self,
+        loss: f64,
+        grad: &[f32],
+        correct: usize,
+        total: usize,
+        theta_row: &[f32],
+    ) {
+        debug_assert_eq!(grad.len(), self.p);
+        debug_assert_eq!(theta_row.len(), self.p);
+        self.loss_w.add(loss * total as f64);
+        for (acc, &g) in self.gsum.iter_mut().zip(grad) {
+            acc.add(g as f64);
+        }
+        for (acc, &t) in self.tsum.iter_mut().zip(theta_row) {
+            acc.add(t as f64);
+        }
+        self.correct += correct as u64;
+        self.total += total as u64;
+        self.rows += 1;
+    }
+
+    /// Close pass 1: fix θ̄ and the pass-1 metrics, returning the
+    /// consensus-pass folder that re-visits every row.
+    pub fn into_consensus_pass(self) -> ConsensusPass {
+        let n = self.rows.max(1) as f64;
+        let mut stat = Kahan::default();
+        let mut theta_bar = vec![0.0f32; self.p];
+        for (j, tb) in theta_bar.iter_mut().enumerate() {
+            let m = self.gsum[j].value() / n;
+            stat.add(m * m);
+            *tb = (self.tsum[j].value() / n) as f32;
+        }
+        let total = self.total.max(1) as f64;
+        ConsensusPass {
+            loss: self.loss_w.value() / total,
+            accuracy: self.correct as f64 / total,
+            stationarity: stat.value(),
+            theta_bar,
+            rows: self.rows,
+            cons: Kahan::default(),
+        }
+    }
+}
+
+/// Pass 2 of [`StreamingEval`]: folds `‖θ_i − θ̄‖²` row by row (same node
+/// order as pass 1) and finishes into the metric 4-tuple.
+#[derive(Clone, Debug)]
+pub struct ConsensusPass {
+    loss: f64,
+    accuracy: f64,
+    stationarity: f64,
+    theta_bar: Vec<f32>,
+    rows: usize,
+    cons: Kahan,
+}
+
+impl ConsensusPass {
+    /// The fleet-mean parameter vector θ̄ fixed by pass 1.
+    pub fn theta_bar(&self) -> &[f32] {
+        &self.theta_bar
+    }
+
+    /// Fold one node's squared distance to θ̄ (ascending node order, the
+    /// same rows pass 1 saw).
+    pub fn push_row(&mut self, theta_row: &[f32]) {
+        self.cons.add(l2_dist_sq(theta_row, &self.theta_bar));
+    }
+
+    /// → (record-weighted loss, record-weighted accuracy, stationarity,
+    /// consensus).
+    pub fn finish(self) -> (f64, f64, f64, f64) {
+        (
+            self.loss,
+            self.accuracy,
+            self.stationarity,
+            self.cons.value() / self.rows.max(1) as f64,
+        )
+    }
+}
 
 /// One evaluation point.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -104,6 +263,7 @@ impl RunLog {
             ("stationarity", col(&|r| r.stationarity)),
             ("consensus", col(&|r| r.consensus)),
             ("bytes", col(&|r| r.bytes as f64)),
+            ("messages", col(&|r| r.messages as f64)),
             ("sim_time_s", col(&|r| r.sim_time_s)),
             ("wall_time_s", col(&|r| r.wall_time_s)),
             ("quarantined", col(&|r| r.quarantined as f64)),
@@ -234,5 +394,52 @@ mod tests {
         let j = crate::jsonl::Json::parse(&log.to_json().to_string()).unwrap();
         assert_eq!(j.get("algo").unwrap().as_str().unwrap(), "fd-dsgt");
         assert_eq!(j.get("loss").unwrap().as_f64_vec().unwrap(), vec![0.7]);
+    }
+
+    #[test]
+    fn json_reports_messages_and_quarantined_columns() {
+        // regression: `messages` was in the CSV but silently missing from the
+        // JSON dump, and the PR-8 quarantine counter must survive into rows
+        let mut log = RunLog::new("fd-dsgd");
+        let mut r = row(1, 0.7);
+        r.quarantined = 3;
+        log.push(r);
+        let j = crate::jsonl::Json::parse(&log.to_json().to_string()).unwrap();
+        assert_eq!(j.get("messages").unwrap().as_f64_vec().unwrap(), vec![10.0]);
+        assert_eq!(j.get("quarantined").unwrap().as_f64_vec().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn kahan_beats_plain_sum_on_cancellation() {
+        let mut k = Kahan::default();
+        let vals = [1.0e16, 1.0, -1.0e16, 1.0];
+        let mut plain = 0.0f64;
+        for v in vals {
+            k.add(v);
+            plain += v;
+        }
+        assert_eq!(k.value(), 2.0);
+        assert_ne!(plain, 2.0, "plain f64 loses the small addends");
+    }
+
+    #[test]
+    fn streaming_eval_record_weights_a_1_vs_999_skew() {
+        // two "nodes", one record vs 999: the global loss must be the
+        // record-weighted mean, bitwise
+        let p = 3;
+        let mut se = StreamingEval::new(p);
+        let g = vec![0.0f32; p];
+        let row_a = vec![1.0f32; p];
+        let row_b = vec![1.0f32; p];
+        se.push_node(10.0, &g, 1, 1, &row_a);
+        se.push_node(0.5, &g, 500, 999, &row_b);
+        let mut cp = se.into_consensus_pass();
+        cp.push_row(&row_a);
+        cp.push_row(&row_b);
+        let (loss, acc, stat, cons) = cp.finish();
+        assert_eq!(loss, (10.0 * 1.0 + 0.5 * 999.0) / 1000.0);
+        assert_eq!(acc, 501.0 / 1000.0);
+        assert_eq!(stat, 0.0);
+        assert_eq!(cons, 0.0, "identical rows have zero consensus error");
     }
 }

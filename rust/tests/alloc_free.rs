@@ -16,9 +16,9 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
-use decfl::config::{AlgoKind, Backend, ExperimentConfig};
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
 use decfl::coordinator::{assemble, NativeCompute};
-use decfl::engine::{Driver, RoundEngine, SyncDriver};
+use decfl::engine::{Driver, RoundEngine, ShardedSync, SyncDriver};
 
 struct CountingAlloc;
 
@@ -122,4 +122,77 @@ fn steady_state_rounds_under_edge_dropout_are_allocation_free() {
 fn steady_state_rounds_under_node_churn_are_allocation_free() {
     let n = steady_round_allocs(AlgoKind::FdDsgt, "churn");
     assert_eq!(n, 0, "churn steady round performed {n} heap allocations");
+}
+
+/// Warm sharded sweep: (allocations over two measured rounds, resident slab
+/// rows afterwards, spill-file writes during the measured rounds).
+///
+/// The spill-backed pool preallocates every frame and I/O staging buffer at
+/// construction and the sweep scratch is grow-only, so once round 1 has
+/// sized everything, a full shard sweep — gather, halo reads, kernels,
+/// write-backs, LRU evictions with their file traffic — must never touch
+/// the heap, even while shards actively spill and reload.
+fn steady_sharded_sweep_allocs(
+    algo: AlgoKind,
+    shard_nodes: usize,
+    hot_shards: usize,
+) -> (u64, usize, u64) {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n = 6;
+    cfg.d = 42;
+    cfg.hidden = 8;
+    cfg.m = 8;
+    cfg.q = 4;
+    cfg.algo = algo;
+    cfg.total_steps = 40;
+    cfg.eval_every = 1000; // observe() is cadence work, not round work
+    cfg.backend = Backend::Native;
+    cfg.mode = Mode::Fused;
+    cfg.threads = 1;
+    cfg.records_per_hospital = 60;
+    cfg.shard_nodes = shard_nodes;
+    cfg.hot_shards = hot_shards;
+    let asm = assemble(&cfg).unwrap();
+    let engine = RoundEngine::from_config(&cfg);
+    let mut driver = ShardedSync::new(&cfg, &asm.ds, &asm.graph, &asm.w).unwrap();
+    driver.begin().unwrap();
+
+    // warm-up round: sizes the sampler scratch, the kernel workspace, the
+    // cached network view, and the halo/gather sweep buffers
+    let local = engine.plan.local_per_round;
+    let lrs1 = engine.sched.local_lrs(1, engine.q, local);
+    driver.local_phase(1, &lrs1).unwrap();
+    driver.comm_phase(1, engine.sched.comm_lr(1, engine.q)).unwrap();
+
+    let lrs2 = engine.sched.local_lrs(2, engine.q, local);
+    let lrs3 = engine.sched.local_lrs(3, engine.q, local);
+    let spills_before = driver.pool_stats().spills;
+    let before = allocs_here();
+    driver.local_phase(2, &lrs2).unwrap();
+    driver.comm_phase(2, engine.sched.comm_lr(2, engine.q)).unwrap();
+    driver.local_phase(3, &lrs3).unwrap();
+    driver.comm_phase(3, engine.sched.comm_lr(3, engine.q)).unwrap();
+    let allocs = allocs_here() - before;
+    let spilled = driver.pool_stats().spills - spills_before;
+    (allocs, driver.resident_rows(), spilled)
+}
+
+// n = 6 in shards of 2 with a 2-frame hot set: every sweep cycles 3 shards
+// through 2 frames, so the measured rounds continuously evict dirty frames
+// to the spill file — the warm path must stay allocation-free THROUGH that
+// file traffic, and the resident rows must stay at the hot-set bound.
+#[test]
+fn steady_state_sharded_dsgd_sweep_is_allocation_free_and_bounded() {
+    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgd, 2, 2);
+    assert_eq!(n, 0, "sharded fd-dsgd sweep performed {n} heap allocations");
+    assert!(resident <= 2 * 2, "resident rows {resident} exceed hot_shards × shard_nodes");
+    assert!(spilled > 0, "measured rounds must actually exercise the spill path");
+}
+
+#[test]
+fn steady_state_sharded_dsgt_sweep_is_allocation_free_and_bounded() {
+    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgt, 2, 2);
+    assert_eq!(n, 0, "sharded fd-dsgt sweep performed {n} heap allocations");
+    assert!(resident <= 2 * 2, "resident rows {resident} exceed hot_shards × shard_nodes");
+    assert!(spilled > 0, "measured rounds must actually exercise the spill path");
 }

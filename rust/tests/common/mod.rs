@@ -1,10 +1,24 @@
 //! Shared helpers for integration tests.
 //!
+//! [`ScenarioBuilder`] is the one place the scenario axes (topology ×
+//! network plan × compressor × compute plan × driver × state sharding)
+//! compose into an `ExperimentConfig`, so every pin file exercises the same
+//! shaped configs instead of hand-rolling drifting copies.
+//! [`pin_fused_eq_actors`] is the shared bitwise driver-equivalence
+//! assertion.
+//!
 //! All PJRT integration tests need the AOT artifacts (`make artifacts`).
 //! If they are missing we *skip* (pass with a loud message) so plain
 //! `cargo test` still works in a fresh checkout; `make test` always builds
 //! artifacts first.
+//!
+//! Each integration-test binary compiles this module separately and uses
+//! its own subset of the helpers, so the unused remainder is expected.
+#![allow(dead_code)]
 
+use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::coordinator::{assemble, run_on};
+use decfl::metrics::RunLog;
 use std::path::PathBuf;
 
 pub fn artifacts_dir() -> Option<PathBuf> {
@@ -29,4 +43,175 @@ pub fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
             "{what}[{i}]: {x} vs {y} (tol {tol})"
         );
     }
+}
+
+/// Composable scenario axes over one native-backend gossip base config
+/// (n=5, d=42, hidden=8, m=8, ring, eval every round).  Each axis setter
+/// also applies the pinned test shaping for that axis (rewire cadence,
+/// drop/churn probabilities, tier table, ...) so the pin files agree on
+/// what, say, "the churn plan" means.
+pub struct ScenarioBuilder {
+    cfg: ExperimentConfig,
+}
+
+impl ScenarioBuilder {
+    /// Gossip base: fused sync native, small fleet, every round evaluated.
+    pub fn gossip(algo: AlgoKind) -> Self {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = Backend::Native;
+        cfg.mode = Mode::Fused;
+        cfg.algo = algo;
+        cfg.n = 5;
+        cfg.d = 42;
+        cfg.hidden = 8;
+        cfg.m = 8;
+        cfg.q = 4;
+        cfg.total_steps = 32;
+        cfg.eval_every = 1;
+        cfg.records_per_hospital = 60;
+        cfg.heterogeneity = 0.5;
+        cfg.topology = "ring".into();
+        ScenarioBuilder { cfg }
+    }
+
+    /// Fleet size.
+    pub fn n(mut self, n: usize) -> Self {
+        self.cfg.n = n;
+        self
+    }
+
+    /// Local period and total local iterations.
+    pub fn rounds(mut self, q: usize, steps: usize) -> Self {
+        self.cfg.q = q;
+        self.cfg.total_steps = steps;
+        self
+    }
+
+    /// Evaluation cadence in comm rounds.
+    pub fn eval_every(mut self, k: usize) -> Self {
+        self.cfg.eval_every = k;
+        self
+    }
+
+    /// Base topology.
+    pub fn topology(mut self, t: &str) -> Self {
+        self.cfg.topology = t.into();
+        self
+    }
+
+    /// Dynamic network plan with the pinned test shaping
+    /// (rewire every 2, edge-drop 0.4, churn 0.3).
+    pub fn plan(mut self, p: &str) -> Self {
+        self.cfg.net_plan = p.into();
+        self.cfg.rewire_every = 2;
+        self.cfg.edge_drop = 0.4;
+        self.cfg.churn = 0.3;
+        self
+    }
+
+    /// Gossip compressor (+ top-k fraction and the opt-in EF residual).
+    pub fn compressor(mut self, c: &str, frac: f64, ef: bool) -> Self {
+        self.cfg.compress = c.into();
+        self.cfg.topk_frac = frac;
+        self.cfg.error_feedback = ef;
+        self
+    }
+
+    /// Straggler compute plan with the pinned test shaping
+    /// (tiers 1.0/0.5/0.25, σ=0.7, slow-frac 0.4).
+    pub fn compute(mut self, plan: &str) -> Self {
+        self.cfg.compute_plan = plan.into();
+        self.cfg.compute_tiers = "1.0,0.5,0.25".into();
+        self.cfg.compute_sigma = 0.7;
+        self.cfg.slow_frac = 0.4;
+        self
+    }
+
+    /// Run driver (`sync`/`async`).
+    pub fn driver(mut self, d: &str) -> Self {
+        self.cfg.driver = d.into();
+        self
+    }
+
+    /// Execution mode (fused vs actors).
+    pub fn mode(mut self, m: Mode) -> Self {
+        self.cfg.mode = m;
+        self
+    }
+
+    /// Byzantine attack axis.
+    pub fn attack(mut self, plan: &str, frac: f64) -> Self {
+        self.cfg.attack_plan = plan.into();
+        self.cfg.attack_frac = frac;
+        self
+    }
+
+    /// Robust combine rule (trim pinned high enough to engage on
+    /// degree-2 rows; see `decfl robust`).
+    pub fn robust_rule(mut self, rule: &str) -> Self {
+        self.cfg.robust_rule = rule.into();
+        self.cfg.robust_trim = 0.4;
+        self
+    }
+
+    /// Spill-backed node-state sharding (`state.shard_nodes` / hot-set).
+    pub fn sharded(mut self, shard_nodes: usize, hot_shards: usize) -> Self {
+        self.cfg.shard_nodes = shard_nodes;
+        self.cfg.hot_shards = hot_shards;
+        self
+    }
+
+    /// Escape hatch for per-test fields with no axis semantics.
+    pub fn tweak(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Finish into the config.
+    pub fn build(self) -> ExperimentConfig {
+        self.cfg
+    }
+}
+
+/// Every evaluation row of `a` and `b` must agree BITWISE on the metric
+/// axes (loss, accuracy, stationarity, consensus) plus the round/work
+/// counters.  Totals that race ahead on intermediate actor rows (bytes,
+/// messages) are compared on the final row only.
+pub fn assert_logs_bitwise(a: &RunLog, b: &RunLog, label: &str) {
+    assert_eq!(a.rows.len(), b.rows.len(), "{label}: row count");
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.comm_rounds, rb.comm_rounds, "{label}");
+        assert_eq!(
+            ra.loss.to_bits(),
+            rb.loss.to_bits(),
+            "{label} round {}: loss {} vs {}",
+            ra.comm_rounds,
+            ra.loss,
+            rb.loss
+        );
+        assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits(), "{label}: accuracy");
+        assert_eq!(
+            ra.stationarity.to_bits(),
+            rb.stationarity.to_bits(),
+            "{label}: stationarity"
+        );
+        assert_eq!(ra.consensus.to_bits(), rb.consensus.to_bits(), "{label}: consensus");
+        assert_eq!(ra.local_steps, rb.local_steps, "{label}: work accounting");
+    }
+    let (fa, fb) = (a.rows.last().unwrap(), b.rows.last().unwrap());
+    assert_eq!(fa.bytes, fb.bytes, "{label}: byte accounting");
+    assert_eq!(fa.messages, fb.messages, "{label}: message accounting");
+}
+
+/// The driver-equivalence pin: one assembled network, the same config
+/// through the fused driver and the actor driver, bitwise-identical logs.
+pub fn pin_fused_eq_actors(cfg: &ExperimentConfig, label: &str) {
+    let asm = assemble(cfg).unwrap();
+    let mut f = cfg.clone();
+    f.mode = Mode::Fused;
+    let fused = run_on(&f, &asm).unwrap();
+    let mut ac = cfg.clone();
+    ac.mode = Mode::Actors;
+    let actors = run_on(&ac, &asm).unwrap();
+    assert_logs_bitwise(&fused, &actors, label);
 }

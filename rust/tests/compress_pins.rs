@@ -13,26 +13,19 @@
 //!    stochastic-rounding noise is keyed by `(seed, round, node, kind)`,
 //!    never by call order or wall clock.
 
-use decfl::config::{AlgoKind, Backend, ExperimentConfig};
+mod common;
+
+use common::ScenarioBuilder;
+use decfl::config::{AlgoKind, ExperimentConfig};
 use decfl::coordinator::{assemble, run_on};
 use decfl::metrics::RunLog;
 
 fn cfg_with(algo: AlgoKind, compress: &str, steps: usize) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.n = 5;
-    cfg.d = 42;
-    cfg.hidden = 8;
-    cfg.m = 8;
-    cfg.q = 4;
-    cfg.algo = algo;
-    cfg.total_steps = steps;
-    cfg.eval_every = 2;
-    cfg.backend = Backend::Native;
-    cfg.records_per_hospital = 60;
-    cfg.heterogeneity = 0.5;
-    cfg.topology = "ring".into();
-    cfg.compress = compress.into();
-    cfg
+    ScenarioBuilder::gossip(algo)
+        .rounds(4, steps)
+        .eval_every(2)
+        .tweak(|c| c.compress = compress.into())
+        .build()
 }
 
 fn run(cfg: &ExperimentConfig) -> RunLog {

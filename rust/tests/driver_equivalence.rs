@@ -7,29 +7,18 @@
 //! `Static` schedule vs a hand-rolled replica of the pre-schedule
 //! single-graph loop (W captured once, no per-round views).  All pins also
 //! guard the parallel fan-out against nondeterministic reduction order.
+//!
+//! Scenario configs come from `common::ScenarioBuilder`; the fused-vs-actors
+//! assertion is `common::pin_fused_eq_actors`.
 
+mod common;
+
+use common::{pin_fused_eq_actors, ScenarioBuilder};
 use decfl::algo::LrSchedule;
-use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+use decfl::config::{AlgoKind, Mode};
 use decfl::coordinator::sampler::{init_thetas, NodeSampler};
 use decfl::coordinator::{assemble, run_on, Compute, NativeCompute};
 use decfl::rng::Pcg64;
-
-fn native_cfg(algo: AlgoKind, q: usize, steps: usize) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.n = 5;
-    cfg.d = 42;
-    cfg.hidden = 8;
-    cfg.m = 8;
-    cfg.q = q;
-    cfg.algo = algo;
-    cfg.total_steps = steps;
-    cfg.eval_every = 1;
-    cfg.backend = Backend::Native;
-    cfg.records_per_hospital = 60;
-    cfg.heterogeneity = 0.5;
-    cfg.topology = "ring".into();
-    cfg
-}
 
 #[test]
 fn fused_and_actor_drivers_bitwise_identical() {
@@ -39,35 +28,8 @@ fn fused_and_actor_drivers_bitwise_identical() {
         (AlgoKind::Dsgt, 1, 10),
         (AlgoKind::FdDsgt, 4, 24),
     ] {
-        let mut cfg = native_cfg(algo, q, steps);
-        let asm = assemble(&cfg).unwrap();
-
-        cfg.mode = Mode::Fused;
-        let fused = run_on(&cfg, &asm).unwrap();
-        cfg.mode = Mode::Actors;
-        let actors = run_on(&cfg, &asm).unwrap();
-
-        assert_eq!(fused.rows.len(), actors.rows.len(), "{algo:?}: row count");
-        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
-            assert_eq!(rf.comm_rounds, ra.comm_rounds, "{algo:?}");
-            assert_eq!(
-                rf.loss.to_bits(),
-                ra.loss.to_bits(),
-                "{algo:?} round {}: fused loss {} vs actor loss {}",
-                rf.comm_rounds,
-                rf.loss,
-                ra.loss
-            );
-            assert_eq!(rf.accuracy.to_bits(), ra.accuracy.to_bits(), "{algo:?}");
-            assert_eq!(rf.stationarity.to_bits(), ra.stationarity.to_bits(), "{algo:?}");
-            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{algo:?}");
-        }
-        // analytic accountant and channel netsim agree byte-for-byte
-        assert_eq!(
-            fused.rows.last().unwrap().bytes,
-            actors.rows.last().unwrap().bytes,
-            "{algo:?}: byte accounting"
-        );
+        let cfg = ScenarioBuilder::gossip(algo).rounds(q, steps).build();
+        pin_fused_eq_actors(&cfg, &format!("{algo:?}"));
     }
 }
 
@@ -75,7 +37,9 @@ fn fused_and_actor_drivers_bitwise_identical() {
 fn dynamic_plans_fused_and_actor_drivers_bitwise_identical() {
     // (plan, base topology, algo) — every dynamic NetPlan through both
     // drivers, DSGD and DSGT flavors, with per-round byte accounting
-    // matching the channel netsim on lossless links.
+    // matching the channel netsim on lossless links.  With edge counts
+    // varying every round, the byte totals only agree if every round was
+    // charged its own edge count.
     for (plan, topo, algo) in [
         ("rewire", "er", AlgoKind::FdDsgd),
         ("rewire", "er", AlgoKind::FdDsgt),
@@ -84,40 +48,12 @@ fn dynamic_plans_fused_and_actor_drivers_bitwise_identical() {
         ("churn", "ring", AlgoKind::FdDsgd),
         ("churn", "ring", AlgoKind::FdDsgt),
     ] {
-        let mut cfg = native_cfg(algo, 3, 30);
-        cfg.topology = topo.into();
-        cfg.net_plan = plan.into();
-        cfg.rewire_every = 2;
-        cfg.edge_drop = 0.4;
-        cfg.churn = 0.3;
-        let asm = assemble(&cfg).unwrap();
-
-        cfg.mode = Mode::Fused;
-        let fused = run_on(&cfg, &asm).unwrap();
-        cfg.mode = Mode::Actors;
-        let actors = run_on(&cfg, &asm).unwrap();
-
-        assert_eq!(fused.rows.len(), actors.rows.len(), "{plan}/{algo:?}: row count");
-        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
-            assert_eq!(rf.comm_rounds, ra.comm_rounds, "{plan}/{algo:?}");
-            assert_eq!(
-                rf.loss.to_bits(),
-                ra.loss.to_bits(),
-                "{plan}/{algo:?} round {}: fused loss {} vs actor loss {}",
-                rf.comm_rounds,
-                rf.loss,
-                ra.loss
-            );
-            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{plan}/{algo:?}");
-            assert_eq!(rf.stationarity.to_bits(), ra.stationarity.to_bits(), "{plan}/{algo:?}");
-        }
-        // Per-round active-edge charges must sum to exactly what the channel
-        // netsim moved: with edge counts varying every round, the totals
-        // only agree if every round was charged its own edge count.
-        // (Intermediate rows race ahead in actor mode, so compare finals.)
-        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
-        assert_eq!(ff.bytes, fa.bytes, "{plan}/{algo:?}: byte accounting");
-        assert_eq!(ff.messages, fa.messages, "{plan}/{algo:?}: message accounting");
+        let cfg = ScenarioBuilder::gossip(algo)
+            .rounds(3, 30)
+            .topology(topo)
+            .plan(plan)
+            .build();
+        pin_fused_eq_actors(&cfg, &format!("{plan}/{algo:?}"));
     }
 }
 
@@ -140,37 +76,11 @@ fn compressed_gossip_fused_and_actor_drivers_bitwise_identical() {
         (AlgoKind::FdDsgt, "q4", 0.1, false),
         (AlgoKind::FdDsgt, "topk", 0.05, false),
     ] {
-        let mut cfg = native_cfg(algo, 3, 18);
-        cfg.compress = compress.into();
-        cfg.topk_frac = frac;
-        cfg.error_feedback = ef;
-        let asm = assemble(&cfg).unwrap();
-
-        cfg.mode = Mode::Fused;
-        let fused = run_on(&cfg, &asm).unwrap();
-        cfg.mode = Mode::Actors;
-        let actors = run_on(&cfg, &asm).unwrap();
-
-        assert_eq!(fused.rows.len(), actors.rows.len(), "{algo:?}/{compress}");
-        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
-            assert_eq!(
-                rf.loss.to_bits(),
-                ra.loss.to_bits(),
-                "{algo:?}/{compress} round {}: fused {} vs actors {}",
-                rf.comm_rounds,
-                rf.loss,
-                ra.loss
-            );
-            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{algo:?}/{compress}");
-            assert_eq!(
-                rf.stationarity.to_bits(),
-                ra.stationarity.to_bits(),
-                "{algo:?}/{compress}"
-            );
-        }
-        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
-        assert_eq!(ff.bytes, fa.bytes, "{algo:?}/{compress}: encoded byte accounting");
-        assert_eq!(ff.messages, fa.messages, "{algo:?}/{compress}: message accounting");
+        let cfg = ScenarioBuilder::gossip(algo)
+            .rounds(3, 18)
+            .compressor(compress, frac, ef)
+            .build();
+        pin_fused_eq_actors(&cfg, &format!("{algo:?}/{compress}"));
     }
 }
 
@@ -178,29 +88,21 @@ fn compressed_gossip_fused_and_actor_drivers_bitwise_identical() {
 fn compressed_gossip_under_churn_drivers_bitwise_identical() {
     // compression composes with a dynamic plan: offline nodes skip the EF
     // step entirely (residuals carry), and both drivers must agree on it
-    let mut cfg = native_cfg(AlgoKind::FdDsgd, 3, 24);
-    cfg.net_plan = "churn".into();
-    cfg.churn = 0.3;
-    cfg.compress = "q8".into();
-    let asm = assemble(&cfg).unwrap();
-    cfg.mode = Mode::Fused;
-    let fused = run_on(&cfg, &asm).unwrap();
-    cfg.mode = Mode::Actors;
-    let actors = run_on(&cfg, &asm).unwrap();
-    for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
-        assert_eq!(rf.loss.to_bits(), ra.loss.to_bits(), "round {}", rf.comm_rounds);
-        assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits());
-    }
-    let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
-    assert_eq!(ff.bytes, fa.bytes, "churn + compression byte accounting");
+    let cfg = ScenarioBuilder::gossip(AlgoKind::FdDsgd)
+        .rounds(3, 24)
+        .plan("churn")
+        .compressor("q8", 0.1, false)
+        .build();
+    pin_fused_eq_actors(&cfg, "churn+q8");
 }
 
 #[test]
 fn straggler_plans_fused_and_actor_drivers_bitwise_identical() {
     // every straggler ComputePlan through both drivers, DSGD and DSGT
     // flavors: per-node τ-truncated local phases and the FedNova-style
-    // τ-weighted rescale must agree bit for bit, and stragglers never
-    // change gossip participation, so bytes/messages match exactly too
+    // τ-weighted rescale must agree bit for bit (including the
+    // schedule-derived true local work), and stragglers never change
+    // gossip participation, so bytes/messages match exactly too
     for (plan, algo) in [
         ("fixed-tiers", AlgoKind::FdDsgd),
         ("fixed-tiers", AlgoKind::FdDsgt),
@@ -209,38 +111,8 @@ fn straggler_plans_fused_and_actor_drivers_bitwise_identical() {
         ("dropout", AlgoKind::FdDsgd),
         ("dropout", AlgoKind::FdDsgt),
     ] {
-        let mut cfg = native_cfg(algo, 4, 32);
-        cfg.compute_plan = plan.into();
-        cfg.compute_tiers = "1.0,0.5,0.25".into();
-        cfg.compute_sigma = 0.7;
-        cfg.slow_frac = 0.4;
-        let asm = assemble(&cfg).unwrap();
-
-        cfg.mode = Mode::Fused;
-        let fused = run_on(&cfg, &asm).unwrap();
-        cfg.mode = Mode::Actors;
-        let actors = run_on(&cfg, &asm).unwrap();
-
-        assert_eq!(fused.rows.len(), actors.rows.len(), "{plan}/{algo:?}: row count");
-        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
-            assert_eq!(rf.comm_rounds, ra.comm_rounds, "{plan}/{algo:?}");
-            assert_eq!(
-                rf.loss.to_bits(),
-                ra.loss.to_bits(),
-                "{plan}/{algo:?} round {}: fused loss {} vs actor loss {}",
-                rf.comm_rounds,
-                rf.loss,
-                ra.loss
-            );
-            assert_eq!(rf.accuracy.to_bits(), ra.accuracy.to_bits(), "{plan}/{algo:?}");
-            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{plan}/{algo:?}");
-            assert_eq!(rf.stationarity.to_bits(), ra.stationarity.to_bits(), "{plan}/{algo:?}");
-            // both drivers report the same schedule-derived true local work
-            assert_eq!(rf.local_steps, ra.local_steps, "{plan}/{algo:?}: work accounting");
-        }
-        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
-        assert_eq!(ff.bytes, fa.bytes, "{plan}/{algo:?}: byte accounting");
-        assert_eq!(ff.messages, fa.messages, "{plan}/{algo:?}: message accounting");
+        let cfg = ScenarioBuilder::gossip(algo).compute(plan).build();
+        pin_fused_eq_actors(&cfg, &format!("{plan}/{algo:?}"));
     }
 }
 
@@ -251,23 +123,14 @@ fn straggler_plan_composed_with_churn_and_compression_bitwise_identical() {
     // for bit (offline nodes skip comm, stragglers truncate local work,
     // and the compression streams stay (seed, round, node, kind)-keyed)
     for algo in [AlgoKind::FdDsgd, AlgoKind::FdDsgt] {
-        let mut cfg = native_cfg(algo, 3, 24);
-        cfg.compute_plan = "dropout".into();
-        cfg.slow_frac = 0.3;
-        cfg.net_plan = "churn".into();
-        cfg.churn = 0.3;
-        cfg.compress = "q8".into();
-        let asm = assemble(&cfg).unwrap();
-        cfg.mode = Mode::Fused;
-        let fused = run_on(&cfg, &asm).unwrap();
-        cfg.mode = Mode::Actors;
-        let actors = run_on(&cfg, &asm).unwrap();
-        for (rf, ra) in fused.rows.iter().zip(&actors.rows) {
-            assert_eq!(rf.loss.to_bits(), ra.loss.to_bits(), "{algo:?} round {}", rf.comm_rounds);
-            assert_eq!(rf.consensus.to_bits(), ra.consensus.to_bits(), "{algo:?}");
-        }
-        let (ff, fa) = (fused.rows.last().unwrap(), actors.rows.last().unwrap());
-        assert_eq!(ff.bytes, fa.bytes, "{algo:?}: dropout+churn+q8 byte accounting");
+        let cfg = ScenarioBuilder::gossip(algo)
+            .rounds(3, 24)
+            .compute("dropout")
+            .tweak(|c| c.slow_frac = 0.3)
+            .plan("churn")
+            .compressor("q8", 0.1, false)
+            .build();
+        pin_fused_eq_actors(&cfg, &format!("dropout+churn+q8/{algo:?}"));
     }
 }
 
@@ -276,8 +139,10 @@ fn uniform_compute_plan_is_the_legacy_path_bitwise() {
     // zero behavior change by default: an explicit `uniform` plan and the
     // untouched default config produce identical logs through both drivers
     for mode in [Mode::Fused, Mode::Actors] {
-        let mut cfg = native_cfg(AlgoKind::FdDsgt, 4, 24);
-        cfg.mode = mode;
+        let cfg = ScenarioBuilder::gossip(AlgoKind::FdDsgt)
+            .rounds(4, 24)
+            .mode(mode)
+            .build();
         assert_eq!(cfg.compute_plan, "uniform", "default plan is uniform");
         let asm = assemble(&cfg).unwrap();
         let default_log = run_on(&cfg, &asm).unwrap();
@@ -299,7 +164,7 @@ fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
     // Hand-rolled replica of the pre-schedule trainer: W captured once as
     // f32, the same round structure inlined, no NetworkSchedule anywhere.
     // The engine's Static plan must match it bit for bit.
-    let cfg = native_cfg(AlgoKind::FdDsgd, 4, 24);
+    let cfg = ScenarioBuilder::gossip(AlgoKind::FdDsgd).rounds(4, 24).build();
     assert_eq!(cfg.net_plan, "static", "default plan is static");
     let asm = assemble(&cfg).unwrap();
     let engine_log = run_on(&cfg, &asm).unwrap();
@@ -311,7 +176,6 @@ fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
     let local = q - 1;
     let rounds = cfg.total_steps.div_ceil(q);
     let (n, m, d) = (cfg.n, cfg.m, cfg.d);
-    let p = model.p();
     let sched = LrSchedule::new(cfg.alpha0);
 
     let mut theta = init_thetas(cfg.seed, n, &model);
@@ -369,7 +233,7 @@ fn static_schedule_reproduces_pre_refactor_single_graph_loop() {
 #[test]
 fn threaded_training_bitwise_equal_serial() {
     for algo in [AlgoKind::FdDsgd, AlgoKind::FdDsgt] {
-        let mut cfg = native_cfg(algo, 4, 24);
+        let mut cfg = ScenarioBuilder::gossip(algo).rounds(4, 24).build();
         cfg.threads = 1;
         let serial = run_on(&cfg, &assemble(&cfg).unwrap()).unwrap();
         cfg.threads = 4;
@@ -448,8 +312,10 @@ fn threaded_round_ops_bitwise_equal_serial() {
 fn baselines_run_through_the_same_engine_cadence() {
     // FedAvg and centralized share the engine loop: same round axis and
     // row cadence as a decentralized run with the same schedule
-    let mut cfg = native_cfg(AlgoKind::FdDsgd, 4, 24);
-    cfg.eval_every = 2;
+    let cfg = ScenarioBuilder::gossip(AlgoKind::FdDsgd)
+        .rounds(4, 24)
+        .eval_every(2)
+        .build();
     let asm = assemble(&cfg).unwrap();
     let fd = run_on(&cfg, &asm).unwrap();
     let mut fa_cfg = cfg.clone();

@@ -4,26 +4,17 @@
 //! across threads, the small-scale mean-collapses/robust-holds frontier,
 //! and the per-run (ε, δ) report against the accountant.
 
-use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+mod common;
+
+use common::ScenarioBuilder;
+use decfl::config::{AlgoKind, ExperimentConfig, Mode};
 use decfl::coordinator::{assemble, run_on, Compute as _};
 use decfl::engine::{AttackSchedule, MsgPerturb};
 
 fn base_cfg(algo: AlgoKind) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.backend = Backend::Native;
-    cfg.mode = Mode::Fused;
-    cfg.algo = algo;
-    cfg.n = 8;
-    cfg.d = 42;
-    cfg.hidden = 8;
-    cfg.m = 8;
-    cfg.q = 4;
-    cfg.total_steps = 48;
-    cfg.eval_every = 1;
-    cfg.records_per_hospital = 60;
-    cfg.heterogeneity = 0.5;
-    cfg.topology = "ring".into();
-    cfg
+    // the robust pins run a slightly larger fleet than the gossip base so
+    // a 25% attack fraction yields ≥ 2 attackers
+    ScenarioBuilder::gossip(algo).n(8).rounds(4, 48).build()
 }
 
 #[test]
@@ -48,9 +39,12 @@ fn identity_routing_is_bitwise_invisible_in_every_driver() {
         (Mode::Actors, "sync"),
         (Mode::Fused, "async"),
     ] {
-        let mut dense = base_cfg(AlgoKind::FdDsgt);
-        dense.mode = mode;
-        dense.driver = driver.into();
+        let dense = ScenarioBuilder::gossip(AlgoKind::FdDsgt)
+            .n(8)
+            .rounds(4, 48)
+            .mode(mode)
+            .driver(driver)
+            .build();
         let asm = assemble(&dense).unwrap();
         let log_dense = run_on(&dense, &asm).unwrap();
 
@@ -130,6 +124,9 @@ fn robust_rules_are_thread_count_deterministic() {
 
 #[test]
 fn fused_and_actors_agree_under_robust_rule_and_attack() {
+    // tolerance, not the bitwise `pin_fused_eq_actors`: the coordinate-wise
+    // median's scratch layout differs between the whole-stack fused pass
+    // and the per-node actor step, which may legally reorder f64 rounding
     let mut cfg = base_cfg(AlgoKind::Dsgt);
     cfg.attack_plan = "sign-flip".into();
     cfg.attack_frac = 0.25;
@@ -151,11 +148,12 @@ fn mean_collapses_where_robust_rules_hold() {
     // the EXP-R1 acceptance shape at test scale: 20% sign-flip attackers on
     // an ER graph wreck the plain-mean combine while trimmed-mean and the
     // coordinate-wise median keep training
-    let mut base = base_cfg(AlgoKind::Dsgd);
-    base.n = 10;
-    base.topology = "er".into();
-    base.total_steps = 160;
-    base.eval_every = 8;
+    let base = ScenarioBuilder::gossip(AlgoKind::Dsgd)
+        .n(10)
+        .rounds(4, 160)
+        .eval_every(8)
+        .topology("er")
+        .build();
     let asm = assemble(&base).unwrap();
     let log_base = run_on(&base, &asm).unwrap();
     let base_last = log_base.rows.last().unwrap();

@@ -1,0 +1,270 @@
+//! Integration: sharded node-state correctness pins (DESIGN.md §15).
+//!
+//! The spill-backed shard sweep (`engine::shard`) is an execution-layout
+//! change, not an algorithm change, so its contract is BITWISE equality
+//! with the resident fused driver:
+//! 1. sharded == resident across the supported scenario matrix (algorithm
+//!    family × topology × dynamic network plan), logs AND final θ stack;
+//! 2. shard-count invariance — 1 shard, k shards, and unsharded agree
+//!    exactly, including a hot-set smaller than the shard count (real
+//!    spill/reload traffic) and single-node shards;
+//! 3. the streaming two-pass eval is a pure left fold in node order, so
+//!    ANY contiguous shard partition reproduces the resident
+//!    `eval_reduce` bit for bit — property-tested over random boundaries,
+//!    plus the 1-vs-999-record skew oracle for the record weighting and
+//!    the honest-subfleet filter from the Byzantine layer.
+
+mod common;
+
+use common::{assert_logs_bitwise, ScenarioBuilder};
+use decfl::algo::native::NativeModel;
+use decfl::config::AlgoKind;
+use decfl::coordinator::{assemble, make_compute, run_on};
+use decfl::data::Shard;
+use decfl::engine::{shard, AttackSchedule};
+use decfl::metrics::StreamingEval;
+use decfl::rng::Pcg64;
+
+#[test]
+fn sharded_equals_resident_bitwise_across_scenarios() {
+    // n = 9 with shard_nodes = 4 → shards of 4, 4, 1 (uneven tail) and a
+    // hot-set smaller than the shard count, so every round spills and
+    // reloads through the pool while the trajectory must not move a bit
+    for (algo, topo, plan, q, steps) in [
+        (AlgoKind::Dsgd, "ring", "static", 1, 10),
+        (AlgoKind::Dsgt, "complete", "static", 1, 10),
+        (AlgoKind::FdDsgd, "er", "static", 4, 24),
+        (AlgoKind::FdDsgt, "ring", "static", 4, 24),
+        (AlgoKind::FdDsgd, "ring", "churn", 3, 24),
+        (AlgoKind::FdDsgt, "er", "rewire", 3, 24),
+        (AlgoKind::FdDsgt, "complete", "edge-drop", 3, 24),
+    ] {
+        let label = format!("{algo:?}/{topo}/{plan}");
+        let mut b = ScenarioBuilder::gossip(algo).n(9).rounds(q, steps).topology(topo);
+        if plan != "static" {
+            b = b.plan(plan);
+        }
+        let resident_cfg = b.build();
+        let asm = assemble(&resident_cfg).unwrap();
+        let compute = make_compute(&resident_cfg).unwrap();
+        let (res_log, res_theta) = decfl::engine::train_decentralized(
+            &resident_cfg,
+            compute.as_ref(),
+            &asm.ds,
+            &asm.graph,
+            &asm.w,
+        )
+        .unwrap();
+
+        let mut sharded_cfg = resident_cfg.clone();
+        sharded_cfg.shard_nodes = 4;
+        sharded_cfg.hot_shards = 2;
+        let (sh_log, sh_theta) =
+            shard::train(&sharded_cfg, &asm.ds, &asm.graph, &asm.w).unwrap();
+
+        assert_logs_bitwise(&res_log, &sh_log, &label);
+        assert_eq!(res_theta, sh_theta, "{label}: final θ stack");
+    }
+}
+
+#[test]
+fn shard_count_is_invariant_one_equals_k_equals_unsharded() {
+    let cfg = ScenarioBuilder::gossip(AlgoKind::FdDsgt).n(9).build();
+    let asm = assemble(&cfg).unwrap();
+    let compute = make_compute(&cfg).unwrap();
+    let (res_log, res_theta) = decfl::engine::train_decentralized(
+        &cfg,
+        compute.as_ref(),
+        &asm.ds,
+        &asm.graph,
+        &asm.w,
+    )
+    .unwrap();
+
+    // one whole-fleet shard, a 4/4/1 split, pairs, and single-node shards
+    // with a 2-frame hot set (maximal spill churn) — all identical
+    for (k, hot) in [(9, 1), (4, 2), (2, 1), (1, 2)] {
+        let mut c = cfg.clone();
+        c.shard_nodes = k;
+        c.hot_shards = hot;
+        let (log, theta) = shard::train(&c, &asm.ds, &asm.graph, &asm.w).unwrap();
+        assert_logs_bitwise(&res_log, &log, &format!("shard_nodes={k} hot={hot}"));
+        assert_eq!(res_theta, theta, "shard_nodes={k} hot={hot}: final θ stack");
+    }
+}
+
+#[test]
+fn coordinator_routes_sharded_runs_and_rejects_server_algos() {
+    // run_on must hand a shard_nodes > 0 gossip config to the sharded
+    // driver (same log as calling it directly) and refuse the server-state
+    // baselines loudly instead of silently running them resident
+    let mut cfg = ScenarioBuilder::gossip(AlgoKind::FdDsgd)
+        .rounds(3, 18)
+        .sharded(2, 2)
+        .build();
+    let asm = assemble(&cfg).unwrap();
+    let routed = run_on(&cfg, &asm).unwrap();
+    let direct = shard::train_log(&cfg, &asm.ds, &asm.graph, &asm.w).unwrap();
+    assert_logs_bitwise(&routed, &direct, "run_on routing");
+
+    cfg.algo = AlgoKind::FedAvg;
+    let err = run_on(&cfg, &asm).unwrap_err().to_string();
+    assert!(err.contains("co-resident server state"), "{err}");
+}
+
+#[test]
+fn streaming_eval_over_random_shard_boundaries_matches_eval_reduce_bitwise() {
+    // property test: the two-pass streaming eval is a pure left fold in
+    // node order, so ANY contiguous partition of the fleet — including
+    // ragged random ones — must reproduce the resident reduction exactly
+    let ds = decfl::data::generate(&decfl::data::DataConfig {
+        n_hospitals: 13,
+        records_per_hospital: 30,
+        records_jitter: 7,
+        heterogeneity: 0.6,
+        ..decfl::data::DataConfig::default()
+    })
+    .unwrap();
+    let model = NativeModel::new(ds.d, 6);
+    let p = model.p();
+    let n = ds.shards.len();
+    let mut rng = Pcg64::seed(424242);
+    let theta: Vec<f32> = (0..n * p).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let want = model.eval_full(&theta, &ds.shards);
+
+    let per: Vec<(f64, Vec<f32>, usize, usize)> = ds
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| model.eval_node(&theta[i * p..(i + 1) * p], s))
+        .collect();
+
+    for trial in 0..10 {
+        let mut bounds = vec![0usize];
+        while *bounds.last().unwrap() < n {
+            let next = (bounds.last().unwrap() + rng.range(1, 5)).min(n);
+            bounds.push(next);
+        }
+        let mut se = StreamingEval::new(p);
+        for w in bounds.windows(2) {
+            for i in w[0]..w[1] {
+                let (loss, grad, c, t) = &per[i];
+                se.push_node(*loss, grad, *c, *t, &theta[i * p..(i + 1) * p]);
+            }
+        }
+        let mut cp = se.into_consensus_pass();
+        for w in bounds.windows(2) {
+            for i in w[0]..w[1] {
+                cp.push_row(&theta[i * p..(i + 1) * p]);
+            }
+        }
+        let got = cp.finish();
+        assert_eq!(got.0.to_bits(), want.0.to_bits(), "trial {trial} {bounds:?}: loss");
+        assert_eq!(got.1.to_bits(), want.1.to_bits(), "trial {trial}: accuracy");
+        assert_eq!(got.2.to_bits(), want.2.to_bits(), "trial {trial}: stationarity");
+        assert_eq!(got.3.to_bits(), want.3.to_bits(), "trial {trial}: consensus");
+    }
+}
+
+#[test]
+fn record_weighted_loss_pins_the_1_vs_999_skew_oracle() {
+    // a 1-record node next to a 999-record node: the global loss must be
+    // the pooled-record mean (node 0 carries weight 1/1000), not the naive
+    // node mean that lets a single record swing the fleet metric
+    let (d, h) = (6usize, 4usize);
+    let model = NativeModel::new(d, h);
+    let p = model.p();
+    let mut rng = Pcg64::seed(7);
+    let mk = |records: usize, scale: f64, rng: &mut Pcg64| -> Shard {
+        Shard {
+            n: records,
+            d,
+            x: (0..records * d).map(|_| (rng.normal() * scale) as f32).collect(),
+            y: (0..records).map(|i| (i % 2) as f32).collect(),
+        }
+    };
+    // outsized features on the singleton push its loss away from the bulk
+    let shards = vec![mk(1, 5.0, &mut rng), mk(999, 1.0, &mut rng)];
+    let theta: Vec<f32> = (0..2 * p).map(|_| (rng.normal() * 0.5) as f32).collect();
+
+    let per: Vec<(f64, Vec<f32>, usize, usize)> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| model.eval_node(&theta[i * p..(i + 1) * p], s))
+        .collect();
+    let (l1, l2) = (per[0].0, per[1].0);
+    assert!((l1 - l2).abs() > 1e-3, "oracle needs distinct node losses: {l1} vs {l2}");
+
+    let got = model.eval_full(&theta, &shards);
+    let want = (l1 + l2 * 999.0) / 1000.0;
+    assert!(
+        (got.0 - want).abs() <= 1e-12 * (1.0 + want.abs()),
+        "record weighting: {} vs oracle {want}",
+        got.0
+    );
+    // ... and is ~500x less sensitive to the singleton than the node mean
+    let naive = (l1 + l2) / 2.0;
+    assert!((got.0 - l2).abs() < (got.0 - naive).abs());
+
+    // the streaming fold with a shard boundary between the two nodes
+    // reproduces it bitwise
+    let mut se = StreamingEval::new(p);
+    for (i, (loss, grad, c, t)) in per.iter().enumerate() {
+        se.push_node(*loss, grad, *c, *t, &theta[i * p..(i + 1) * p]);
+    }
+    let mut cp = se.into_consensus_pass();
+    for i in 0..2 {
+        cp.push_row(&theta[i * p..(i + 1) * p]);
+    }
+    assert_eq!(cp.finish().0.to_bits(), got.0.to_bits(), "streaming skew fold");
+}
+
+#[test]
+fn honest_subfleet_streaming_filter_matches_hand_filtered_eval_bitwise() {
+    // the Byzantine layer evaluates honest nodes only (DESIGN.md §14); the
+    // streaming fold must support that filter without a resident stack —
+    // skipping attacker rows in BOTH passes equals a hand-packed
+    // eval_full over the honest sub-stack, bit for bit
+    let cfg = ScenarioBuilder::gossip(AlgoKind::Dsgd)
+        .n(8)
+        .attack("sign-flip", 0.25)
+        .build();
+    let asm = assemble(&cfg).unwrap();
+    let sched = AttackSchedule::from_config(&cfg).unwrap();
+    let model = NativeModel::new(cfg.d, cfg.hidden);
+    let p = model.p();
+    let mut rng = Pcg64::seed(99);
+    let theta: Vec<f32> = (0..cfg.n * p).map(|_| (rng.normal() * 0.3) as f32).collect();
+
+    let mut th = Vec::new();
+    let mut sh = Vec::new();
+    for i in 0..cfg.n {
+        if !sched.is_attacker(i) {
+            th.extend_from_slice(&theta[i * p..(i + 1) * p]);
+            sh.push(asm.ds.shards[i].clone());
+        }
+    }
+    assert!(!sh.is_empty() && sh.len() < cfg.n, "attack must split the fleet");
+    let want = model.eval_full(&th, &sh);
+
+    let mut se = StreamingEval::new(p);
+    for (i, s) in asm.ds.shards.iter().enumerate() {
+        if sched.is_attacker(i) {
+            continue;
+        }
+        let (loss, grad, c, t) = model.eval_node(&theta[i * p..(i + 1) * p], s);
+        se.push_node(loss, &grad, c, t, &theta[i * p..(i + 1) * p]);
+    }
+    let mut cp = se.into_consensus_pass();
+    for i in 0..cfg.n {
+        if sched.is_attacker(i) {
+            continue;
+        }
+        cp.push_row(&theta[i * p..(i + 1) * p]);
+    }
+    let got = cp.finish();
+    assert_eq!(got.0.to_bits(), want.0.to_bits(), "honest loss");
+    assert_eq!(got.1.to_bits(), want.1.to_bits(), "honest accuracy");
+    assert_eq!(got.2.to_bits(), want.2.to_bits(), "honest stationarity");
+    assert_eq!(got.3.to_bits(), want.3.to_bits(), "honest consensus");
+}

@@ -2,30 +2,15 @@
 //! (per-round `sim_time_s` = slowest participant's compute + link time),
 //! convergence under every plan, and the τ-weighted work accounting.
 
-use decfl::config::{AlgoKind, Backend, ExperimentConfig, Mode};
+mod common;
+
+use common::ScenarioBuilder;
+use decfl::config::{AlgoKind, ExperimentConfig};
 use decfl::coordinator::{assemble, run_on};
 use decfl::engine::ComputeSchedule;
 
 fn straggler_cfg(algo: AlgoKind, plan: &str) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.n = 5;
-    cfg.d = 42;
-    cfg.hidden = 8;
-    cfg.m = 8;
-    cfg.q = 4;
-    cfg.algo = algo;
-    cfg.total_steps = 32;
-    cfg.eval_every = 1;
-    cfg.mode = Mode::Fused;
-    cfg.backend = Backend::Native;
-    cfg.records_per_hospital = 60;
-    cfg.heterogeneity = 0.5;
-    cfg.topology = "ring".into();
-    cfg.compute_plan = plan.into();
-    cfg.compute_tiers = "1.0,0.5,0.25".into();
-    cfg.compute_sigma = 0.7;
-    cfg.slow_frac = 0.4;
-    cfg
+    ScenarioBuilder::gossip(algo).compute(plan).build()
 }
 
 #[test]
