@@ -31,6 +31,16 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = usize::MAX / 2; // final row only: time the sweep, not eval
     cfg.records_per_hospital = 60;
     cfg.topology = "ring".into();
+    if smoke() {
+        // CI compose check (PR-10): the sharded sweep must run the encode
+        // pipeline + robust combine + straggler schedule, not just the
+        // honest mean path
+        cfg.compress = "q8".into();
+        cfg.robust_rule = "trimmed-mean".into();
+        cfg.robust_trim = 0.4;
+        cfg.compute_plan = "lognormal".into();
+        cfg.compute_sigma = 0.7;
+    }
 
     println!(
         "sharded node state, fd-dsgt fused/native: k={shard_nodes} hot={hot} steps={steps} q={q} ({} rounds)",
@@ -62,11 +72,12 @@ fn main() -> anyhow::Result<()> {
         engine.run(&mut drv)?;
         let st = drv.pool_stats();
         println!(
-            "pool: {} resident rows (bound {}), {} loads, {} spills, {} hits",
+            "pool: {} resident rows (bound {}), {} loads, {} spills ({} writebacks), {} hits",
             drv.resident_rows(),
             shard_nodes * hot,
             st.loads,
             st.spills,
+            st.writebacks,
             st.hits
         );
         cfg.shard_nodes = 0;

@@ -280,8 +280,19 @@ pub trait Compressor: Send + Sync {
     /// Exact encoded size in bytes of one `p`-element message.
     fn wire_bytes(&self, p: usize) -> u64;
 
+    /// Encode `v` under `key` into `out`, salvaging `out`'s existing
+    /// heap buffers when the variant matches (a warm caller that feeds the
+    /// previous message back in encodes allocation-free).  The produced
+    /// message is identical to [`Compressor::encode`] — buffer reuse never
+    /// changes a single wire byte.
+    fn encode_into(&self, v: &[f32], key: MsgKey, out: &mut Encoded);
+
     /// Encode `v` under `key` (pure: no internal state advances).
-    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded;
+    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded {
+        let mut out = Encoded::Dense(Vec::new());
+        self.encode_into(v, key, &mut out);
+        out
+    }
 }
 
 // ----------------------------------------------------------- identity ----
@@ -300,8 +311,14 @@ impl Compressor for Identity {
         4 * p as u64
     }
 
-    fn encode(&self, v: &[f32], _key: MsgKey) -> Encoded {
-        Encoded::Dense(v.to_vec())
+    fn encode_into(&self, v: &[f32], _key: MsgKey, out: &mut Encoded) {
+        let mut buf = match std::mem::replace(out, Encoded::Dense(Vec::new())) {
+            Encoded::Dense(b) => b,
+            _ => Vec::new(),
+        };
+        buf.clear();
+        buf.extend_from_slice(v);
+        *out = Encoded::Dense(buf);
     }
 }
 
@@ -333,15 +350,22 @@ impl Compressor for QuantizeQ8 {
         4 + p as u64
     }
 
-    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded {
+    fn encode_into(&self, v: &[f32], key: MsgKey, out: &mut Encoded) {
+        let mut codes = match std::mem::replace(out, Encoded::Dense(Vec::new())) {
+            Encoded::Q8 { codes, .. } => codes,
+            _ => Vec::new(),
+        };
+        codes.clear();
         let amax = absmax(v);
         if amax == 0.0 {
-            return Encoded::Q8 { scale: 0.0, codes: vec![0u8; v.len()] };
+            codes.resize(v.len(), 0u8);
+            *out = Encoded::Q8 { scale: 0.0, codes };
+            return;
         }
         let scale = amax / 127.0;
         let mut rng = key.rng();
-        let codes = v.iter().map(|&x| stoch_round(x, scale, 127, &mut rng) as i8 as u8).collect();
-        Encoded::Q8 { scale, codes }
+        codes.extend(v.iter().map(|&x| stoch_round(x, scale, 127, &mut rng) as i8 as u8));
+        *out = Encoded::Q8 { scale, codes };
     }
 }
 
@@ -359,16 +383,24 @@ impl Compressor for QuantizeQ4 {
         4 + p.div_ceil(2) as u64
     }
 
-    fn encode(&self, v: &[f32], key: MsgKey) -> Encoded {
+    fn encode_into(&self, v: &[f32], key: MsgKey, out: &mut Encoded) {
         let len = v.len() as u32;
+        let nbytes = v.len().div_ceil(2);
+        let mut codes = match std::mem::replace(out, Encoded::Dense(Vec::new())) {
+            Encoded::Q4 { codes, .. } => codes,
+            _ => Vec::new(),
+        };
+        codes.clear();
         let amax = absmax(v);
         if amax == 0.0 {
             // nibble 8 encodes the code 0
-            return Encoded::Q4 { scale: 0.0, len, codes: vec![0x88u8; v.len().div_ceil(2)] };
+            codes.resize(nbytes, 0x88u8);
+            *out = Encoded::Q4 { scale: 0.0, len, codes };
+            return;
         }
+        codes.resize(nbytes, 0u8);
         let scale = amax / 7.0;
         let mut rng = key.rng();
-        let mut codes = vec![0u8; v.len().div_ceil(2)];
         for (i, &x) in v.iter().enumerate() {
             let nib = (stoch_round(x, scale, 7, &mut rng) + 8) as u8;
             codes[i / 2] |= nib << ((i % 2) * 4);
@@ -379,7 +411,7 @@ impl Compressor for QuantizeQ4 {
                 *last |= 0x80;
             }
         }
-        Encoded::Q4 { scale, len, codes }
+        *out = Encoded::Q4 { scale, len, codes };
     }
 }
 
@@ -410,10 +442,15 @@ impl Compressor for TopK {
         8 * self.k(p) as u64
     }
 
-    fn encode(&self, v: &[f32], _key: MsgKey) -> Encoded {
+    fn encode_into(&self, v: &[f32], _key: MsgKey, out: &mut Encoded) {
         let p = v.len();
         let k = self.k(p);
-        let mut order: Vec<u32> = (0..p as u32).collect();
+        let (mut order, mut val) = match std::mem::replace(out, Encoded::Dense(Vec::new())) {
+            Encoded::TopK { idx, val, .. } => (idx, val),
+            _ => (Vec::new(), Vec::new()),
+        };
+        order.clear();
+        order.extend(0..p as u32);
         // strict total order: |v| descending, index ascending on ties (and a
         // total_cmp so non-finite values cannot panic the sort)
         let by_mag = |&a: &u32, &b: &u32| {
@@ -427,8 +464,9 @@ impl Compressor for TopK {
             order.truncate(k);
         }
         order.sort_unstable();
-        let val = order.iter().map(|&i| v[i as usize]).collect();
-        Encoded::TopK { len: p as u32, idx: order, val }
+        val.clear();
+        val.extend(order.iter().map(|&i| v[i as usize]));
+        *out = Encoded::TopK { len: p as u32, idx: order, val };
     }
 }
 
@@ -596,6 +634,40 @@ mod tests {
         assert_ne!(a, QuantizeQ8.encode(&v, key(3, 2)), "node must move the noise");
         let tk = MsgKey::new(7, 3, 1, PayloadKind::Tracker);
         assert_ne!(a, QuantizeQ8.encode(&v, tk), "payload kind must move the noise");
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_without_changing_a_byte() {
+        // the warm path feeds the previous round's message back in as the
+        // output buffer; salvaged capacity must never leak into the new
+        // message — whatever variant the buffer held before
+        let comps: [&dyn Compressor; 4] =
+            [&Identity, &QuantizeQ8, &QuantizeQ4, &TopK { frac: 0.3 }];
+        for c in comps {
+            for seed in 0..4u64 {
+                let prev = sample_vec(40, seed * 2 + 100);
+                let v = sample_vec(24, seed * 2 + 101);
+                for stale in comps {
+                    // a stale message from ANY compressor (variant mismatch
+                    // forces the fallback path) and from the same one
+                    // (variant match exercises the salvage path)
+                    let mut out = stale.encode(&prev, key(1, 0));
+                    c.encode_into(&v, key(2, 1), &mut out);
+                    assert_eq!(
+                        out,
+                        c.encode(&v, key(2, 1)),
+                        "{} reusing a {} buffer",
+                        c.label(),
+                        stale.label()
+                    );
+                }
+                // zero vector through a dirty same-variant buffer
+                let zeros = vec![0.0f32; 24];
+                let mut out = c.encode(&prev, key(3, 0));
+                c.encode_into(&zeros, key(3, 1), &mut out);
+                assert_eq!(out, c.encode(&zeros, key(3, 1)), "{} zero reuse", c.label());
+            }
+        }
     }
 
     #[test]

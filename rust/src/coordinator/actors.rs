@@ -54,9 +54,10 @@
 
 use crate::algo::{add_diff, axpy, scale_displacement};
 use crate::algo::native::NativeModel;
-use crate::compress::{add_residual, decode_into, residual_update, GossipComm, MsgKey};
+use crate::compress::GossipComm;
 use crate::config::ExperimentConfig;
 use crate::data::{FederatedDataset, Shard};
+use crate::engine::pipeline::{encode_row_owned, RowPerturb};
 use crate::engine::{self, ComputeSchedule, RoundEngine};
 use crate::graph::{Graph, NetworkSchedule, ViewScratch};
 use crate::metrics::{round_metrics, RunLog};
@@ -236,16 +237,14 @@ impl NodeDriver<'_> {
 }
 
 /// One payload stream's encode-and-broadcast step of a compressed round:
-/// build the outgoing vector (error-compensated `v = x + e` when EF is on),
-/// apply the attack/DP perturbation when one is active (the adversary
-/// corrupts what actually hits the wire — and the sender's own mix row, so
-/// an attacker drinks its own poison exactly like the fused driver), encode
-/// it under the `(seed, round, node, kind)` key, keep the decoded x̂ in
-/// `hat` (the node's own mix row — exactly what receivers decode), update
-/// the residual, and put the *encoded* message on the wire.  The per-stream
-/// twin of the fused driver's `ef_compress_stack` row step — both call the
-/// same `compress`/`adversary` helpers in the same order, which is what
-/// keeps DSGD's and DSGT's streams from ever diverging between drivers.
+/// run the shared message pipeline ([`engine::pipeline::encode_row_owned`]
+/// — EF compensation, the attack/DP stage at the encode boundary, the
+/// deterministic encode under the `(seed, round, node, kind)` key, the
+/// decoded x̂ kept in `hat` as the node's own mix row, the residual update)
+/// and put the *encoded* message on the wire.  The per-stream twin of the
+/// fused driver's `ef_compress_stack` row step — both ARE the same
+/// pipeline function, which is what keeps DSGD's and DSGT's streams from
+/// ever diverging between drivers.
 #[allow(clippy::too_many_arguments)]
 fn ef_encode_send(
     comp: &dyn crate::compress::Compressor,
@@ -262,19 +261,11 @@ fn ef_encode_send(
     nbrs: &[usize],
     perturb: Option<&mut engine::MsgPerturb>,
 ) -> Result<()> {
-    if ef {
-        add_residual(data, e, vbuf);
-    } else {
-        vbuf.copy_from_slice(data);
-    }
-    if let Some(pb) = perturb {
-        pb.apply(round, id, kind.tag(), vbuf);
-    }
-    let enc = comp.encode(vbuf, MsgKey::new(seed, round, id, kind));
-    decode_into(&enc, hat)?;
-    if ef {
-        residual_update(vbuf, hat, e);
-    }
+    let rp = match perturb {
+        Some(pb) => RowPerturb::Inline(pb),
+        None => RowPerturb::Off,
+    };
+    let enc = encode_row_owned(comp, ef, seed, round, id, kind, data, e, vbuf, hat, rp)?;
     ep.send_to(nbrs, round as u64, kind, &Arc::new(Payload::Compressed(enc)))?;
     Ok(())
 }
@@ -585,7 +576,7 @@ where
     let dp = engine::adversary::dp_from_config(cfg)?;
     let dp_kinds: u64 = if cfg.algo.uses_tracker() { 2 } else { 1 };
     // under an active attack the observer reports honest-sub-fleet metrics
-    // (engine::strategy::eval_honest_subset, DESIGN.md §14), same as fused
+    // (engine::pipeline::eval_honest_subset, DESIGN.md §14), same as fused
     let attack = engine::adversary::AttackSchedule::from_config(cfg)?;
     csched.ensure_runnable(n, eval_compute.local_steps_len())?;
     let net = Arc::new(NetworkSchedule::from_config(cfg, graph.clone(), w.clone())?);
@@ -635,7 +626,7 @@ where
         let theta0 = init_thetas(cfg.seed, n, &model);
         let mut log = RunLog::new(cfg.algo.name());
         let eval0 =
-            engine::strategy::eval_honest_subset(Some(&attack), &theta0, &ds.shards, p, eval_compute)?;
+            engine::pipeline::eval_honest_subset(Some(&attack), &theta0, &ds.shards, p, eval_compute)?;
         log.push(round_metrics(0, 0, eval0, stats.snapshot(), started.elapsed().as_secs_f64()));
 
         let mut pending: std::collections::BTreeMap<u64, (usize, Vec<f32>)> = Default::default();
@@ -652,7 +643,7 @@ where
             if entry.0 == n {
                 let (_, stacked) = pending.remove(&snap.round).unwrap();
                 stats.rounds.store(snap.round, std::sync::atomic::Ordering::Relaxed);
-                let eval = engine::strategy::eval_honest_subset(
+                let eval = engine::pipeline::eval_honest_subset(
                     Some(&attack),
                     &stacked,
                     &ds.shards,

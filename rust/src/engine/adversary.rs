@@ -437,24 +437,75 @@ impl MsgPerturb {
     /// off pass through untouched.
     pub fn apply(&mut self, round: usize, i: usize, kind: u8, data: &mut [f32]) {
         if self.attack.is_attacker(i) {
-            match self.attack.plan {
-                AttackPlan::None => {}
-                AttackPlan::SignFlip => {
-                    for v in data.iter_mut() {
-                        *v = -*v;
-                    }
+            if let AttackPlan::StaleReplay { age } = self.attack.plan {
+                self.replay.step(i, kind, round, age, data);
+            } else {
+                self.attack_stateless(round, i, kind, data);
+            }
+        }
+        self.dp_noise(round, i, kind, data);
+    }
+
+    /// [`MsgPerturb::apply`] with the stale-replay state held by the caller
+    /// instead of the internal cache: `slot` is node `i`'s persistent replay
+    /// row for this payload kind and `stored` its has-a-copy flag.  A
+    /// spill-backed driver keeps both in its slab pool (the replay row is
+    /// just another registered quantity), so a 10⁶-node fleet of replay
+    /// attackers needs no resident `BTreeMap`.  Bitwise-identical to
+    /// `apply` — both route through the same stateless attack and DP arms,
+    /// and the replay refresh grid is the same arithmetic.
+    pub fn apply_pooled(
+        &self,
+        round: usize,
+        i: usize,
+        kind: u8,
+        data: &mut [f32],
+        slot: &mut [f32],
+        stored: &mut bool,
+    ) {
+        if self.attack.is_attacker(i) {
+            if let AttackPlan::StaleReplay { age } = self.attack.plan {
+                if !*stored || round % age == 0 {
+                    slot.copy_from_slice(data);
+                    *stored = true;
+                } else {
+                    data.copy_from_slice(slot);
                 }
-                AttackPlan::ScaledNoise { scale } => {
-                    let mut rng = self.attack.draw_rng(round, i, kind);
-                    for v in data.iter_mut() {
-                        *v += (scale * rng.normal()) as f32;
-                    }
+            } else {
+                self.attack_stateless(round, i, kind, data);
+            }
+        }
+        self.dp_noise(round, i, kind, data);
+    }
+
+    /// Does node `i` need a caller-managed replay slot under
+    /// [`MsgPerturb::apply_pooled`] (i.e. is it a stale-replay attacker)?
+    pub fn wants_replay(&self, i: usize) -> bool {
+        matches!(self.attack.plan, AttackPlan::StaleReplay { .. }) && self.attack.is_attacker(i)
+    }
+
+    /// The stateless attack arms (sign-flip / scaled-noise) shared by
+    /// [`MsgPerturb::apply`] and [`MsgPerturb::apply_pooled`]; `None` and
+    /// stale-replay are handled by the callers.
+    fn attack_stateless(&self, round: usize, i: usize, kind: u8, data: &mut [f32]) {
+        match self.attack.plan {
+            AttackPlan::None | AttackPlan::StaleReplay { .. } => {}
+            AttackPlan::SignFlip => {
+                for v in data.iter_mut() {
+                    *v = -*v;
                 }
-                AttackPlan::StaleReplay { age } => {
-                    self.replay.step(i, kind, round, age, data);
+            }
+            AttackPlan::ScaledNoise { scale } => {
+                let mut rng = self.attack.draw_rng(round, i, kind);
+                for v in data.iter_mut() {
+                    *v += (scale * rng.normal()) as f32;
                 }
             }
         }
+    }
+
+    /// The DP clip + keyed Gaussian noise stage shared by both apply paths.
+    fn dp_noise(&self, round: usize, i: usize, kind: u8, data: &mut [f32]) {
         if self.dp.on {
             let norm = crate::algo::l2_norm(data);
             if norm > self.dp.clip {
@@ -570,6 +621,61 @@ mod tests {
             let mut m = msg(r);
             pb.apply(r, attacker, 0, &mut m);
             assert_eq!(m, msg(3), "round {r}");
+        }
+    }
+
+    #[test]
+    fn apply_pooled_matches_apply_bitwise_for_every_plan() {
+        // the pooled variant externalizes only the replay storage; the wire
+        // bytes must match the internal-cache path exactly, round by round,
+        // for every plan × DP combination
+        for (plan, dp_on) in [
+            ("sign-flip", false),
+            ("scaled-noise", false),
+            ("stale-replay", false),
+            ("sign-flip", true),
+            ("stale-replay", true),
+            ("none", true),
+        ] {
+            let mut cfg = cfg_with(plan, if plan == "none" { 0.0 } else { 0.5 });
+            cfg.n = 4;
+            cfg.attack_scale = 2.0;
+            cfg.attack_age = 3;
+            if dp_on {
+                cfg.dp = "gaussian".into();
+                cfg.dp_clip = 1.0;
+                cfg.dp_sigma = 0.4;
+            }
+            let mut inline = MsgPerturb::from_config(&cfg).unwrap().unwrap();
+            let pooled = MsgPerturb::from_config(&cfg).unwrap().unwrap();
+            // one external slot per (node, kind), mirroring a pooled driver
+            let p = 6usize;
+            let mut slots = vec![vec![0.0f32; p]; 4 * 2];
+            let mut stored = vec![false; 4 * 2];
+            for round in 1..=7 {
+                for i in 0..4 {
+                    for kind in 0..2u8 {
+                        let msg: Vec<f32> =
+                            (0..p).map(|j| (round * 10 + i * 2 + j) as f32 * 0.1).collect();
+                        let (mut a, mut b) = (msg.clone(), msg);
+                        inline.apply(round, i, kind, &mut a);
+                        let s = i * 2 + kind as usize;
+                        pooled.apply_pooled(
+                            round,
+                            i,
+                            kind,
+                            &mut b,
+                            &mut slots[s],
+                            &mut stored[s],
+                        );
+                        assert_eq!(a, b, "{plan} dp={dp_on} r={round} i={i} k={kind}");
+                        assert_eq!(
+                            pooled.wants_replay(i),
+                            plan == "stale-replay" && pooled.attack.is_attacker(i),
+                        );
+                    }
+                }
+            }
         }
     }
 

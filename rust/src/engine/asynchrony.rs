@@ -78,7 +78,7 @@
 
 use crate::algo::native::NativeModel;
 use crate::algo::{add_diff, axpy};
-use crate::compress::{add_residual, decode_into, residual_update, GossipComm, MsgKey};
+use crate::compress::GossipComm;
 use crate::config::{ExperimentConfig, Mode};
 use crate::coordinator::compute::Compute;
 use crate::coordinator::sampler::{init_theta, NodeSampler};
@@ -93,6 +93,7 @@ use std::collections::{BTreeMap, BinaryHeap};
 use std::rc::Rc;
 
 use super::adversary::{dp_from_config, DpPlan, MsgPerturb};
+use super::pipeline::{encode_row_owned, RowPerturb};
 use super::{ComputeSchedule, RoundEngine};
 
 /// Virtual seconds → integer microseconds (the heap's total-order clock).
@@ -333,7 +334,7 @@ impl Sim<'_> {
         }
         // honest-sub-fleet metrics under an active attack (DESIGN.md §14),
         // same masking as the sync drivers
-        let eval = crate::engine::strategy::eval_honest_subset(
+        let eval = crate::engine::pipeline::eval_honest_subset(
             self.perturb.as_ref().map(|pb| &pb.attack),
             &self.scratch.eval_stack,
             &self.ds.shards,
@@ -403,19 +404,23 @@ impl Sim<'_> {
     ) -> Result<Rc<Vec<f32>>> {
         match &comm.comp {
             Some(comp) => {
-                if comm.error_feedback {
-                    add_residual(data, e, vbuf);
-                } else {
-                    vbuf.copy_from_slice(data);
-                }
-                if let Some(pb) = perturb {
-                    pb.apply(g, i, kind.tag(), vbuf);
-                }
-                let enc = comp.encode(vbuf, MsgKey::new(comm.seed, g, i, kind));
-                decode_into(&enc, hat)?;
-                if comm.error_feedback {
-                    residual_update(vbuf, hat, e);
-                }
+                let rp = match perturb {
+                    Some(pb) => RowPerturb::Inline(pb),
+                    None => RowPerturb::Off,
+                };
+                encode_row_owned(
+                    comp.as_ref(),
+                    comm.error_feedback,
+                    comm.seed,
+                    g,
+                    i,
+                    kind,
+                    data,
+                    e,
+                    vbuf,
+                    hat,
+                    rp,
+                )?;
                 Ok(Rc::new(hat.to_vec()))
             }
             None => {

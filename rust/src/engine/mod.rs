@@ -38,16 +38,17 @@
 
 pub mod adversary;
 pub mod asynchrony;
+pub mod pipeline;
 pub mod shard;
 pub mod stragglers;
 pub mod strategy;
 
 pub use adversary::{AttackPlan, AttackSchedule, DpPlan, MsgPerturb};
-pub use shard::{NodeSlabPool, ShardSpec, ShardedSync};
+pub use pipeline::RoundNet;
+pub use shard::{NodeSlabPool, PoolStats, QuantityRegistry, QuantitySet, ShardSpec, ShardedSync};
 pub use stragglers::{ComputePlan, ComputeSchedule};
 pub use strategy::{
     CentralizedStrategy, CommCost, CommStrategy, DsgdStrategy, DsgtStrategy, FedAvgStrategy,
-    RoundNet,
 };
 
 use crate::algo::native::NativeModel;

@@ -1,0 +1,629 @@
+//! The driver-agnostic message pipeline — every byte a node sends passes
+//! through here, in every driver.
+//!
+//! Encode → attack → DP-noise → decode → quarantine is the same sequence in
+//! the fused sync driver (`strategy.rs`), the actor runtime
+//! (`coordinator::actors`), the async event queue (`engine::asynchrony`),
+//! and the spill-backed sharded sweep (`engine::shard`).  It used to be
+//! duplicated per driver; this module is the single implementation, so
+//! poisoned/compressed/noised wire bytes are identical everywhere **by
+//! construction** — the fused==actors==async==sharded bitwise pins reduce to
+//! "everyone calls the same function with the same `(seed, round, node,
+//! kind)` key".
+//!
+//! The pieces, in wire order:
+//!
+//! 1. [`encode_row`] — one node's one payload: error-feedback compensation
+//!    (`v = x + e`), the [`MsgPerturb`] attack/DP stage at the encode
+//!    boundary (via [`RowPerturb`], which lets a pooled driver keep the
+//!    stale-replay state in its slab pool), deterministic encode under the
+//!    `(seed, round, node, kind)` key, decode into x̂, and the residual
+//!    update `e ← v − x̂`.  [`ef_compress_stack`] is the whole-stack loop
+//!    the fused strategies run; [`encode_row_owned`] the per-message form
+//!    the actor/async runtimes send.
+//! 2. [`quarantine_compact`] / [`compact_from_bad`] — the non-finite ingest
+//!    guard (DESIGN.md §14): drop entries from poisoned senders and fold
+//!    their weights into each receiver's self-weight, preserving row sums
+//!    and CSR entry order (robust combine rules key on entry counts, so the
+//!    compaction must be byte-stable across drivers).
+//! 3. [`restore_offline_rows`] / [`restore_attacker_rows`] — the post-mix
+//!    row semantics: offline nodes skip the update; Byzantine nodes
+//!    broadcast poison but never apply the update themselves.
+//! 4. [`eval_honest_subset`] — the honest-sub-fleet metric filter shared by
+//!    every driver's observe step.
+//!
+//! [`RoundNet`] — the per-round network view the schedule emits — lives
+//! here too: it is the pipeline's graph-side input, common to all drivers.
+
+use super::adversary::{AttackSchedule, MsgPerturb};
+use crate::compress::{add_residual, decode_into, residual_update, Compressor, Encoded, MsgKey};
+use crate::coordinator::compute::{Compute, MixView};
+use crate::data::Shard;
+use crate::mixing::SparseW;
+use crate::netsim::PayloadKind;
+use anyhow::{ensure, Result};
+
+/// The network of ONE communication round, as the schedule emitted it.
+pub struct RoundNet<'a> {
+    /// Row-major dense f32 mixing matrix `[n, n]` for this round — present
+    /// only when the backend asked for it (`Compute::wants_dense_w`); the
+    /// sparse-native path never materializes it (n×n is 40 GB at n = 10⁵).
+    pub w: Option<&'a [f32]>,
+    /// Degree-sparse CSR view of the round's mixing matrix (per-node
+    /// `(neighbor, weight)` rows, ascending) — always present; what the
+    /// native gossip kernels consume.
+    pub sparse: &'a SparseW,
+    /// Per-node participation mask (all `true` except under node churn).
+    pub online: &'a [bool],
+}
+
+impl RoundNet<'_> {
+    /// Is every node participating this round (no churn)?
+    pub fn all_online(&self) -> bool {
+        self.online.iter().all(|&b| b)
+    }
+
+    /// Both W forms, packaged for the compute layer.
+    pub fn mix(&self) -> MixView<'_> {
+        MixView { dense: self.w, sparse: self.sparse }
+    }
+}
+
+/// Overwrite the stack rows of offline nodes with their previous values —
+/// an offline node skips the communication update entirely (exactly what
+/// its actor-driver counterpart does by not gossiping that round).
+pub fn restore_offline_rows(next: &mut [f32], prev: &[f32], online: &[bool], p: usize) {
+    for (i, &on) in online.iter().enumerate() {
+        if !on {
+            next[i * p..(i + 1) * p].copy_from_slice(&prev[i * p..(i + 1) * p]);
+        }
+    }
+}
+
+/// Byzantine nodes follow their own protocol, not ours: they train honestly
+/// on their local shard (the engine's local phase) and broadcast perturbed
+/// payloads, but never *apply* the communication update — their row reverts
+/// to its pre-comm state after every round (DESIGN.md §14).  This keeps the
+/// attack calibrated: a sign-flip attacker broadcasts `−θ` at the honest
+/// parameter scale, instead of mixing its own poison back in and growing
+/// its state by `(2 − w_ii)` per round until it overflows — an attacker
+/// whose payload dwarfs the fleet by 10²⁰ is trivially screened and says
+/// nothing about a rule's robustness.  No-op when the attack plan is off.
+pub fn restore_attacker_rows(next: &mut [f32], prev: &[f32], attack: &AttackSchedule, p: usize) {
+    if !attack.active() {
+        return;
+    }
+    for i in 0..next.len() / p {
+        if attack.is_attacker(i) {
+            next[i * p..(i + 1) * p].copy_from_slice(&prev[i * p..(i + 1) * p]);
+        }
+    }
+}
+
+/// Is *online* sender `i`'s row non-finite in any of the given payload
+/// stacks?  (A sender poisons all its payload kinds at once — one bad kind
+/// quarantines the node from both θ and ϑ mixing.)
+pub fn bad_sender(stacks: &[&[f32]], online: &[bool], p: usize, i: usize) -> bool {
+    online[i] && stacks.iter().any(|s| s[i * p..(i + 1) * p].iter().any(|v| !v.is_finite()))
+}
+
+/// Quarantine-compact `src` given the per-sender `bad` mask, into `wq`
+/// (reset and refilled): every receiver drops its entries from bad senders
+/// and folds their weights into its self-weight, materializing a diagonal
+/// entry when the source row had none.  Entry order (ascending columns) and
+/// zero-weight entries are preserved — robust combine rules derive their
+/// trim/median counts from entry counts, so the compaction must not change
+/// them for clean neighbors.  Returns the number of dropped directed
+/// entries.  Shared verbatim by the resident fused path and the sharded
+/// sweep; `wq` is grow-only, so a warm caller re-compacts allocation-free.
+pub fn compact_from_bad(src: &SparseW, bad: &[bool], wq: &mut SparseW) -> u64 {
+    let n = bad.len();
+    wq.reset(n);
+    wq.reserve_rows_nnz(n, src.nnz());
+    let mut dropped = 0u64;
+    for i in 0..n {
+        let (idx, val) = src.row(i);
+        // Fold the quarantined neighbors' weights in CSR (ascending-column)
+        // order — the actor driver sums in the same order, so the
+        // fused==actors bitwise pin survives an active quarantine.
+        let mut folded = 0.0f32;
+        for (&j, &v) in idx.iter().zip(val) {
+            if j as usize != i && bad[j as usize] {
+                folded += v;
+                dropped += 1;
+            }
+        }
+        let mut diag_done = false;
+        for (&j, &v) in idx.iter().zip(val) {
+            let ju = j as usize;
+            if !diag_done && ju > i {
+                // the source row had no self-weight: materialize one to
+                // receive the folded mass, keeping columns ascending
+                wq.push_entry(i as u32, folded);
+                diag_done = true;
+            }
+            if ju == i {
+                wq.push_entry(j, v + folded);
+                diag_done = true;
+            } else if !bad[ju] {
+                wq.push_entry(j, v);
+            }
+        }
+        if !diag_done {
+            wq.push_entry(i as u32, folded);
+        }
+        wq.seal_row();
+    }
+    dropped
+}
+
+/// Non-finite ingest guard (DESIGN.md §14): if any online sender's payload
+/// row carries NaN/Inf, build a quarantine-compacted copy of the round's
+/// CSR mixing matrix via [`compact_from_bad`], so honest nodes never mix a
+/// non-finite value and row sums are preserved.  Returns the compacted W
+/// plus the number of dropped directed entries, or `None` on the clean
+/// path — which scans allocation-free, preserving the steady-state
+/// zero-alloc contract (`tests/alloc_free.rs`).
+pub fn quarantine_compact(
+    net: &RoundNet,
+    stacks: &[&[f32]],
+    p: usize,
+) -> Result<Option<(SparseW, u64)>> {
+    let n = net.online.len();
+    if !(0..n).any(|i| bad_sender(stacks, net.online, p, i)) {
+        return Ok(None);
+    }
+    ensure!(
+        net.w.is_none(),
+        "non-finite neighbor payloads detected, but this backend mixes a dense W; \
+         quarantine (folding bad senders into the self-weight, DESIGN.md §14) is \
+         sparse-native only — rerun on the native backend"
+    );
+    let bad: Vec<bool> = (0..n).map(|i| bad_sender(stacks, net.online, p, i)).collect();
+    let mut wq = SparseW::empty();
+    let dropped = compact_from_bad(net.sparse, &bad, &mut wq);
+    Ok(Some((wq, dropped)))
+}
+
+/// How the attack/DP stage stores its per-sender stale-replay state inside
+/// [`encode_row`]: not at all, inside the [`MsgPerturb`]'s own cache, or in
+/// a caller-owned slot (a spill-backed driver registers the replay row as a
+/// pooled quantity).  All three produce identical wire bytes.
+pub enum RowPerturb<'a> {
+    /// Honest run — no perturbation pipeline was built.
+    Off,
+    /// The driver-owned pipeline with its internal replay cache (fused
+    /// strategies, actor nodes, the async simulator).
+    Inline(&'a mut MsgPerturb),
+    /// Pool-backed: the replay slot is caller storage
+    /// ([`MsgPerturb::apply_pooled`]).
+    Pooled {
+        /// The shared (immutable) perturbation pipeline.
+        pb: &'a MsgPerturb,
+        /// This sender's persistent replay row for this payload kind.
+        slot: &'a mut [f32],
+        /// Has `slot` been written at least once?
+        stored: &'a mut bool,
+    },
+}
+
+impl RowPerturb<'_> {
+    /// Apply the attack/DP stage to one outgoing message (no-op for `Off`).
+    fn apply(&mut self, round: usize, node: usize, kind: u8, data: &mut [f32]) {
+        match self {
+            RowPerturb::Off => {}
+            RowPerturb::Inline(pb) => pb.apply(round, node, kind, data),
+            RowPerturb::Pooled { pb, slot, stored } => {
+                pb.apply_pooled(round, node, kind, data, slot, stored);
+            }
+        }
+    }
+}
+
+/// The per-message pipeline, start to finish, for ONE sender's ONE payload:
+/// build the error-compensated message `v = x + e` (or a plain copy when EF
+/// is off), run the attack/DP stage on it, encode under the deterministic
+/// `(seed, round, node, kind)` key, decode the wire message into `hat`
+/// (what every receiver — and the sender itself — mixes), and update the
+/// residual in place (`e ← v − x̂`; untouched when EF is off).
+///
+/// `enc` is a reusable output buffer ([`Compressor::encode_into`] salvages
+/// its allocation), so a warm caller encodes allocation-free.  Every driver
+/// routes through this function, which is what makes their wire bytes
+/// bitwise-identical by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_row(
+    comp: &dyn Compressor,
+    ef: bool,
+    seed: u64,
+    round: usize,
+    node: usize,
+    kind: PayloadKind,
+    x: &[f32],
+    e: &mut [f32],
+    vbuf: &mut [f32],
+    hat: &mut [f32],
+    mut perturb: RowPerturb<'_>,
+    enc: &mut Encoded,
+) -> Result<()> {
+    if ef {
+        add_residual(x, e, vbuf);
+    } else {
+        vbuf.copy_from_slice(x);
+    }
+    perturb.apply(round, node, kind.tag(), vbuf);
+    comp.encode_into(vbuf, MsgKey::new(seed, round, node, kind), enc);
+    decode_into(enc, hat)?;
+    if ef {
+        residual_update(vbuf, hat, e);
+    }
+    Ok(())
+}
+
+/// [`encode_row`] returning an owned message — the form the actor and async
+/// runtimes use, whose payloads leave the sender (an `Arc`/`Rc` on a
+/// channel) rather than staying in a driver slab.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_row_owned(
+    comp: &dyn Compressor,
+    ef: bool,
+    seed: u64,
+    round: usize,
+    node: usize,
+    kind: PayloadKind,
+    x: &[f32],
+    e: &mut [f32],
+    vbuf: &mut [f32],
+    hat: &mut [f32],
+    perturb: RowPerturb<'_>,
+) -> Result<Encoded> {
+    let mut enc = Encoded::Dense(Vec::new());
+    encode_row(comp, ef, seed, round, node, kind, x, e, vbuf, hat, perturb, &mut enc)?;
+    Ok(enc)
+}
+
+/// Error-feedback-compress one whole payload stack for this round: per
+/// *online* row `i`, run [`encode_row`] — the error-compensated message
+/// `v = x_i + e_i`, the perturbation stage, the deterministic
+/// encode/decode into the `xhat` row, and the new residual `v − x̂` written
+/// into the residual back slab.  Offline rows carry their residual forward
+/// untouched; their `xhat` row is left stale — online neighbors never mix
+/// it (absorbed weights are zero), and while the offline node's own kernel
+/// row does read it through its identity self-weight, that whole output row
+/// is discarded by `restore_offline_rows` right after the round.
+///
+/// This is the fused twin of the per-node EF step the actor driver runs
+/// before broadcasting — both are [`encode_row`], so the decoded stacks
+/// (and therefore the trajectories) agree bitwise.
+///
+/// When a [`MsgPerturb`] pipeline is active (Byzantine attack and/or DP,
+/// `engine::adversary`), it is applied to the error-compensated message
+/// *before* encoding — the attacker/DP layer corrupts what actually hits
+/// the wire, pre-quantization.  The sender's own `xhat` row decodes the
+/// corrupted copy too, but an attacker's comm-update output is discarded
+/// afterwards ([`restore_attacker_rows`]): Byzantine nodes broadcast
+/// poison, they don't follow the update rule.
+#[allow(clippy::too_many_arguments)]
+pub fn ef_compress_stack(
+    comp: &dyn Compressor,
+    ef: bool,
+    seed: u64,
+    round: usize,
+    kind: PayloadKind,
+    stack: &[f32],
+    online: &[bool],
+    p: usize,
+    e: &[f32],
+    e_back: &mut [f32],
+    xhat: &mut [f32],
+    vbuf: &mut [f32],
+    mut perturb: Option<&mut MsgPerturb>,
+) -> Result<()> {
+    let n = stack.len() / p;
+    let mut enc = Encoded::Dense(Vec::new());
+    for i in 0..n {
+        let row = i * p..(i + 1) * p;
+        if ef {
+            // seed the in-place residual row with the front copy; offline
+            // rows stop here (residual carried forward untouched)
+            e_back[row.clone()].copy_from_slice(&e[row.clone()]);
+        }
+        if !online[i] {
+            continue;
+        }
+        let rp = match perturb.as_deref_mut() {
+            Some(pb) => RowPerturb::Inline(pb),
+            None => RowPerturb::Off,
+        };
+        encode_row(
+            comp,
+            ef,
+            seed,
+            round,
+            i,
+            kind,
+            &stack[row.clone()],
+            &mut e_back[row.clone()],
+            vbuf,
+            &mut xhat[row],
+            rp,
+            &mut enc,
+        )?;
+    }
+    Ok(())
+}
+
+/// Record-weighted metrics over the **honest sub-fleet** when a Byzantine
+/// attack is active (DESIGN.md §14).  An attacker node is adversarial
+/// software, not a hospital: its parameter row is arbitrary (sign-flip, for
+/// one, makes the attacker's own state grow geometrically, since its row
+/// mixes the poison it broadcast), so folding it into the global metric
+/// would let the adversary report any loss it likes.  Robustness is judged
+/// on what honest sites actually serve — attacker records are excluded from
+/// the weighting, and consensus is measured across honest rows.  DP-only
+/// pipelines (no attack plan) and the honest defaults keep the full-fleet
+/// metric bitwise-unchanged.  Runs at the eval cadence, off the
+/// zero-allocation round path, shared by all drivers.
+pub fn eval_honest_subset(
+    attack: Option<&AttackSchedule>,
+    theta: &[f32],
+    shards: &[Shard],
+    p: usize,
+    compute: &dyn Compute,
+) -> Result<(f64, f64, f64, f64)> {
+    let Some(a) = attack.filter(|a| a.active()) else {
+        return compute.eval_full(theta, shards);
+    };
+    let n = shards.len();
+    let keep: Vec<usize> = (0..n).filter(|&i| !a.is_attacker(i)).collect();
+    if keep.len() == n || keep.is_empty() {
+        // nothing to mask — or a fully Byzantine fleet, which has no honest
+        // metric to report; fall back to the whole stack rather than NaN
+        return compute.eval_full(theta, shards);
+    }
+    let mut th = Vec::with_capacity(keep.len() * p);
+    let mut sh = Vec::with_capacity(keep.len());
+    for &i in &keep {
+        th.extend_from_slice(&theta[i * p..(i + 1) * p]);
+        sh.push(shards[i].clone());
+    }
+    compute.eval_full(&th, &sh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, QuantizeQ8};
+    use crate::config::ExperimentConfig;
+
+    #[test]
+    fn restore_offline_rows_is_row_exact() {
+        let prev = vec![1.0f32, 1.0, 2.0, 2.0, 3.0, 3.0];
+        let mut next = vec![9.0f32, 9.0, 8.0, 8.0, 7.0, 7.0];
+        restore_offline_rows(&mut next, &prev, &[true, false, true], 2);
+        assert_eq!(next, vec![9.0, 9.0, 2.0, 2.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn ef_compress_stack_identity_reconstructs_and_zeroes_residual() {
+        let (n, p) = (3usize, 4usize);
+        let stack: Vec<f32> = (0..n * p).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let online = vec![true, false, true];
+        let e: Vec<f32> = vec![0.5f32; n * p];
+        let mut e_back = vec![0.0f32; n * p];
+        let mut xhat = vec![0.0f32; n * p];
+        let mut vbuf = vec![0.0f32; p];
+        ef_compress_stack(
+            &Identity, true, 7, 2, PayloadKind::Params, &stack, &online, p, &e, &mut e_back,
+            &mut xhat, &mut vbuf, None,
+        )
+        .unwrap();
+        // online rows: x̂ = θ + e exactly, residual collapses to zero
+        for i in [0usize, 2] {
+            for j in 0..p {
+                assert_eq!(xhat[i * p + j], stack[i * p + j] + 0.5);
+                assert_eq!(e_back[i * p + j], 0.0);
+            }
+        }
+        // offline row: residual carried forward untouched
+        assert!(e_back[p..2 * p].iter().all(|&r| r == 0.5));
+    }
+
+    #[test]
+    fn ef_compress_stack_applies_the_perturbation_at_the_encode_boundary() {
+        let (n, p) = (4usize, 3usize);
+        let stack = vec![1.0f32; n * p];
+        let online = vec![true; n];
+        let e = vec![0.0f32; n * p];
+        let mut e_back = vec![0.0f32; n * p];
+        let mut xhat = vec![0.0f32; n * p];
+        let mut vbuf = vec![0.0f32; p];
+        let cfg = ExperimentConfig {
+            n,
+            attack_plan: "sign-flip".into(),
+            attack_frac: 0.25,
+            ..ExperimentConfig::default()
+        };
+        let mut pb = MsgPerturb::from_config(&cfg).unwrap().unwrap();
+        let attacker = (0..n).find(|&i| pb.attack.is_attacker(i)).unwrap();
+        ef_compress_stack(
+            &Identity,
+            false,
+            cfg.seed,
+            1,
+            PayloadKind::Params,
+            &stack,
+            &online,
+            p,
+            &e,
+            &mut e_back,
+            &mut xhat,
+            &mut vbuf,
+            Some(&mut pb),
+        )
+        .unwrap();
+        for i in 0..n {
+            let want = if i == attacker { -1.0 } else { 1.0 };
+            assert!(xhat[i * p..(i + 1) * p].iter().all(|&v| v == want), "row {i}");
+        }
+    }
+
+    #[test]
+    fn encode_row_matches_the_stack_loop_bitwise_per_row() {
+        // the sharded driver encodes row by row through encode_row; the
+        // fused strategies run the whole-stack loop — the per-row outputs
+        // (x̂, residual, wire message) must agree exactly, including under a
+        // lossy quantizer and an active perturbation
+        let (n, p) = (5usize, 9usize);
+        let stack: Vec<f32> = (0..n * p).map(|i| (i as f32 * 0.37).sin()).collect();
+        let online = vec![true, true, false, true, true];
+        let e: Vec<f32> = (0..n * p).map(|i| (i as f32 * 0.11).cos() * 0.1).collect();
+        let cfg = ExperimentConfig {
+            n,
+            attack_plan: "scaled-noise".into(),
+            attack_frac: 0.4,
+            attack_scale: 1.5,
+            ..ExperimentConfig::default()
+        };
+        for ef in [false, true] {
+            let mut pb_stack = MsgPerturb::from_config(&cfg).unwrap().unwrap();
+            let pb_row = MsgPerturb::from_config(&cfg).unwrap().unwrap();
+            let mut e_back = vec![0.0f32; n * p];
+            let mut xhat = vec![0.0f32; n * p];
+            let mut vbuf = vec![0.0f32; p];
+            ef_compress_stack(
+                &QuantizeQ8,
+                ef,
+                7,
+                3,
+                PayloadKind::Params,
+                &stack,
+                &online,
+                p,
+                &e,
+                &mut e_back,
+                &mut xhat,
+                &mut vbuf,
+                Some(&mut pb_stack),
+            )
+            .unwrap();
+            let mut enc = Encoded::Dense(Vec::new());
+            for i in 0..n {
+                if !online[i] {
+                    continue;
+                }
+                let mut e_row = e[i * p..(i + 1) * p].to_vec();
+                let mut hat = vec![0.0f32; p];
+                let mut v = vec![0.0f32; p];
+                let mut slot = vec![0.0f32; p];
+                let mut stored = false;
+                encode_row(
+                    &QuantizeQ8,
+                    ef,
+                    7,
+                    3,
+                    i,
+                    PayloadKind::Params,
+                    &stack[i * p..(i + 1) * p],
+                    &mut e_row,
+                    &mut v,
+                    &mut hat,
+                    RowPerturb::Pooled { pb: &pb_row, slot: &mut slot, stored: &mut stored },
+                    &mut enc,
+                )
+                .unwrap();
+                assert_eq!(hat, xhat[i * p..(i + 1) * p], "ef={ef} row {i}: x̂");
+                if ef {
+                    assert_eq!(e_row, e_back[i * p..(i + 1) * p], "ef={ef} row {i}: residual");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quarantine_folds_bad_senders_into_self_weight() {
+        // 3-node path: W rows sum to 1
+        #[rustfmt::skip]
+        let dense = vec![
+            0.5,  0.5, 0.0,
+            0.25, 0.5, 0.25,
+            0.0,  0.5, 0.5,
+        ];
+        let w = SparseW::from_dense(3, &dense);
+        let online = [true, true, true];
+        let p = 2usize;
+        let clean = vec![0.0f32; 6];
+        let mut poisoned = clean.clone();
+        poisoned[2] = f32::NAN; // node 1's row
+        let net = RoundNet { w: None, sparse: &w, online: &online };
+        // clean path: no compaction, no allocation
+        assert!(quarantine_compact(&net, &[&clean], p).unwrap().is_none());
+        let (wq, dropped) = quarantine_compact(&net, &[&poisoned], p).unwrap().unwrap();
+        assert_eq!(dropped, 2, "rows 0 and 2 each drop their node-1 entry");
+        #[rustfmt::skip]
+        let want = vec![
+            1.0,  0.0, 0.0,
+            0.25, 0.5, 0.25, // the bad node's own row is untouched
+            0.0,  0.0, 1.0,
+        ];
+        assert_eq!(wq.to_dense(), want);
+        // a second payload kind can trigger the quarantine on its own
+        let (wq2, d2) = quarantine_compact(&net, &[&clean, &poisoned], p).unwrap().unwrap();
+        assert_eq!((wq2.to_dense(), d2), (want, 2));
+        // dense-W backends cannot compact rows: loud error, not silence
+        let dnet = RoundNet { w: Some(&dense), sparse: &w, online: &online };
+        let err = quarantine_compact(&dnet, &[&poisoned], p).unwrap_err().to_string();
+        assert!(err.contains("sparse-native"), "{err}");
+    }
+
+    #[test]
+    fn quarantine_materializes_a_missing_self_weight() {
+        // node 0 has no diagonal entry: the folded mass must create one,
+        // keeping columns ascending
+        #[rustfmt::skip]
+        let dense = vec![
+            0.0, 1.0, 0.0,
+            0.5, 0.0, 0.5,
+            0.0, 1.0, 0.0,
+        ];
+        let w = SparseW::from_dense(3, &dense);
+        let online = [true, true, true];
+        let mut poisoned = vec![0.0f32; 3];
+        poisoned[1] = f32::INFINITY; // p = 1, node 1 bad
+        let net = RoundNet { w: None, sparse: &w, online: &online };
+        let (wq, dropped) = quarantine_compact(&net, &[&poisoned], 1).unwrap().unwrap();
+        assert_eq!(dropped, 2);
+        #[rustfmt::skip]
+        let want = vec![
+            1.0, 0.0, 0.0,
+            0.5, 0.0, 0.5,
+            0.0, 0.0, 1.0,
+        ];
+        assert_eq!(wq.to_dense(), want);
+        // offline senders are never scanned (their weights are already 0)
+        let offline = [true, false, true];
+        let onet = RoundNet { w: None, sparse: &w, online: &offline };
+        assert!(quarantine_compact(&onet, &[&poisoned], 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn compacting_into_a_warm_buffer_matches_a_fresh_one() {
+        // the sharded sweep keeps a persistent wq and re-compacts in place;
+        // a dirty buffer must produce the identical matrix
+        #[rustfmt::skip]
+        let dense = vec![
+            0.5,  0.5, 0.0,
+            0.25, 0.5, 0.25,
+            0.0,  0.5, 0.5,
+        ];
+        let w = SparseW::from_dense(3, &dense);
+        let bad = vec![false, true, false];
+        let mut fresh = SparseW::empty();
+        let d1 = compact_from_bad(&w, &bad, &mut fresh);
+        let mut warm = SparseW::empty();
+        compact_from_bad(&w, &[true, false, false], &mut warm); // dirty it
+        let d2 = compact_from_bad(&w, &bad, &mut warm);
+        assert_eq!(d1, d2);
+        assert_eq!(fresh.to_dense(), warm.to_dense());
+    }
+}

@@ -22,15 +22,18 @@
 //! every algorithm.  Adding an algorithm = implementing this trait; the
 //! loop, both drivers, the CLI, and the benches pick it up unchanged.
 
-use super::adversary::{AttackSchedule, MsgPerturb};
+use super::adversary::MsgPerturb;
+use super::pipeline::{
+    ef_compress_stack, eval_honest_subset, quarantine_compact, restore_attacker_rows,
+    restore_offline_rows,
+};
 use super::EngineState;
 use crate::algo::axpy;
 use crate::algo::native::NativeModel;
-use crate::compress::{add_residual, decode_into, residual_update, Compressor, GossipComm, MsgKey};
+use crate::compress::GossipComm;
 use crate::coordinator::compute::{Compute, MixView};
-use crate::data::Shard;
-use crate::mixing::SparseW;
 use crate::netsim::PayloadKind;
+use super::pipeline::RoundNet;
 use anyhow::{ensure, Result};
 
 /// What one communication round costs on the wire (drives the analytic
@@ -52,201 +55,6 @@ pub enum CommCost {
     Star,
     /// No communication (fusion-center baseline).
     None,
-}
-
-/// The network of ONE communication round, as the schedule emitted it.
-pub struct RoundNet<'a> {
-    /// Row-major dense f32 mixing matrix `[n, n]` for this round — present
-    /// only when the backend asked for it (`Compute::wants_dense_w`); the
-    /// sparse-native path never materializes it (n×n is 40 GB at n = 10⁵).
-    pub w: Option<&'a [f32]>,
-    /// Degree-sparse CSR view of the round's mixing matrix (per-node
-    /// `(neighbor, weight)` rows, ascending) — always present; what the
-    /// native gossip kernels consume.
-    pub sparse: &'a SparseW,
-    /// Per-node participation mask (all `true` except under node churn).
-    pub online: &'a [bool],
-}
-
-impl RoundNet<'_> {
-    /// Is every node participating this round (no churn)?
-    pub fn all_online(&self) -> bool {
-        self.online.iter().all(|&b| b)
-    }
-
-    /// Both W forms, packaged for the compute layer.
-    pub fn mix(&self) -> MixView<'_> {
-        MixView { dense: self.w, sparse: self.sparse }
-    }
-}
-
-/// Overwrite the stack rows of offline nodes with their previous values —
-/// an offline node skips the communication update entirely (exactly what
-/// its actor-driver counterpart does by not gossiping that round).
-fn restore_offline_rows(next: &mut [f32], prev: &[f32], online: &[bool], p: usize) {
-    for (i, &on) in online.iter().enumerate() {
-        if !on {
-            next[i * p..(i + 1) * p].copy_from_slice(&prev[i * p..(i + 1) * p]);
-        }
-    }
-}
-
-/// Byzantine nodes follow their own protocol, not ours: they train honestly
-/// on their local shard (the engine's local phase) and broadcast perturbed
-/// payloads, but never *apply* the communication update — their row reverts
-/// to its pre-comm state after every round (DESIGN.md §14).  This keeps the
-/// attack calibrated: a sign-flip attacker broadcasts `−θ` at the honest
-/// parameter scale, instead of mixing its own poison back in and growing
-/// its state by `(2 − w_ii)` per round until it overflows — an attacker
-/// whose payload dwarfs the fleet by 10²⁰ is trivially screened and says
-/// nothing about a rule's robustness.  No-op when the attack plan is off.
-fn restore_attacker_rows(next: &mut [f32], prev: &[f32], attack: &AttackSchedule, p: usize) {
-    if !attack.active() {
-        return;
-    }
-    for i in 0..next.len() / p {
-        if attack.is_attacker(i) {
-            next[i * p..(i + 1) * p].copy_from_slice(&prev[i * p..(i + 1) * p]);
-        }
-    }
-}
-
-/// Is *online* sender `i`'s row non-finite in any of the given payload
-/// stacks?  (A sender poisons all its payload kinds at once — one bad kind
-/// quarantines the node from both θ and ϑ mixing.)
-fn bad_sender(stacks: &[&[f32]], online: &[bool], p: usize, i: usize) -> bool {
-    online[i] && stacks.iter().any(|s| s[i * p..(i + 1) * p].iter().any(|v| !v.is_finite()))
-}
-
-/// Non-finite ingest guard (DESIGN.md §14): if any online sender's payload
-/// row carries NaN/Inf, build a quarantine-compacted copy of the round's
-/// CSR mixing matrix — every receiver drops its entries from bad senders
-/// and folds their weights into its self-weight (the same row compaction
-/// the async driver applies to stale/missing neighbors), so honest nodes
-/// never mix a non-finite value and row sums are preserved.  Returns the
-/// compacted W plus the number of dropped directed entries, or `None` on
-/// the clean path — which scans allocation-free, preserving the
-/// steady-state zero-alloc contract (`tests/alloc_free.rs`).
-fn quarantine_compact(
-    net: &RoundNet,
-    stacks: &[&[f32]],
-    p: usize,
-) -> Result<Option<(SparseW, u64)>> {
-    let n = net.online.len();
-    if !(0..n).any(|i| bad_sender(stacks, net.online, p, i)) {
-        return Ok(None);
-    }
-    ensure!(
-        net.w.is_none(),
-        "non-finite neighbor payloads detected, but this backend mixes a dense W; \
-         quarantine (folding bad senders into the self-weight, DESIGN.md §14) is \
-         sparse-native only — rerun on the native backend"
-    );
-    let bad: Vec<bool> = (0..n).map(|i| bad_sender(stacks, net.online, p, i)).collect();
-    let src = net.sparse;
-    let mut wq = SparseW::empty();
-    wq.reset(n);
-    wq.reserve_rows_nnz(n, src.nnz());
-    let mut dropped = 0u64;
-    for i in 0..n {
-        let (idx, val) = src.row(i);
-        // Fold the quarantined neighbors' weights in CSR (ascending-column)
-        // order — the actor driver sums in the same order, so the
-        // fused==actors bitwise pin survives an active quarantine.
-        let mut folded = 0.0f32;
-        for (&j, &v) in idx.iter().zip(val) {
-            if j as usize != i && bad[j as usize] {
-                folded += v;
-                dropped += 1;
-            }
-        }
-        let mut diag_done = false;
-        for (&j, &v) in idx.iter().zip(val) {
-            let ju = j as usize;
-            if !diag_done && ju > i {
-                // the source row had no self-weight: materialize one to
-                // receive the folded mass, keeping columns ascending
-                wq.push_entry(i as u32, folded);
-                diag_done = true;
-            }
-            if ju == i {
-                wq.push_entry(j, v + folded);
-                diag_done = true;
-            } else if !bad[ju] {
-                wq.push_entry(j, v);
-            }
-        }
-        if !diag_done {
-            wq.push_entry(i as u32, folded);
-        }
-        wq.seal_row();
-    }
-    Ok(Some((wq, dropped)))
-}
-
-/// Error-feedback-compress one whole payload stack for this round: per
-/// *online* row `i`, build the error-compensated message `v = x_i + e_i`,
-/// encode it under the deterministic `(seed, round, i, kind)` key, decode
-/// the wire message into the `xhat` row (what neighbors — and the node
-/// itself — mix), and write the new residual `v − x̂` into the residual back
-/// slab.  Offline rows carry their residual forward untouched; their
-/// `xhat` row is left stale — online neighbors never mix it (absorbed
-/// weights are zero), and while the offline node's own kernel row does
-/// read it through its identity self-weight, that whole output row is
-/// discarded by `restore_offline_rows` right after the round.
-///
-/// This is the fused twin of the per-node EF step the actor driver runs
-/// before broadcasting — both call the same `compress::{add_residual,
-/// residual_update}` helpers and the same encode/decode, so the decoded
-/// stacks (and therefore the trajectories) agree bitwise.
-///
-/// When a [`MsgPerturb`] pipeline is active (Byzantine attack and/or DP,
-/// `engine::adversary`), it is applied to the error-compensated message
-/// *before* encoding — the attacker/DP layer corrupts what actually hits
-/// the wire, pre-quantization.  The sender's own `xhat` row decodes the
-/// corrupted copy too, but an attacker's comm-update output is discarded
-/// afterwards ([`restore_attacker_rows`]): Byzantine nodes broadcast
-/// poison, they don't follow the update rule.
-#[allow(clippy::too_many_arguments)]
-fn ef_compress_stack(
-    comp: &dyn Compressor,
-    ef: bool,
-    seed: u64,
-    round: usize,
-    kind: PayloadKind,
-    stack: &[f32],
-    online: &[bool],
-    p: usize,
-    e: &[f32],
-    e_back: &mut [f32],
-    xhat: &mut [f32],
-    vbuf: &mut [f32],
-    mut perturb: Option<&mut MsgPerturb>,
-) -> Result<()> {
-    let n = stack.len() / p;
-    for i in 0..n {
-        let row = i * p..(i + 1) * p;
-        if !online[i] {
-            if ef {
-                e_back[row.clone()].copy_from_slice(&e[row]);
-            }
-            continue;
-        }
-        if ef {
-            add_residual(&stack[row.clone()], &e[row.clone()], vbuf);
-        } else {
-            vbuf.copy_from_slice(&stack[row.clone()]);
-        }
-        if let Some(pb) = perturb.as_deref_mut() {
-            pb.apply(round, i, kind.tag(), vbuf);
-        }
-        let enc = comp.encode(vbuf, MsgKey::new(seed, round, i, kind));
-        decode_into(&enc, &mut xhat[row.clone()])?;
-        if ef {
-            residual_update(vbuf, &xhat[row.clone()], &mut e_back[row]);
-        }
-    }
-    Ok(())
 }
 
 /// The communication update of Algorithm 1 — eq. 2, eq. 3, a server
@@ -311,43 +119,6 @@ pub trait CommStrategy {
     fn quarantined(&self) -> u64 {
         0
     }
-}
-
-/// Record-weighted metrics over the **honest sub-fleet** when a Byzantine
-/// attack is active (DESIGN.md §14).  An attacker node is adversarial
-/// software, not a hospital: its parameter row is arbitrary (sign-flip, for
-/// one, makes the attacker's own state grow geometrically, since its row
-/// mixes the poison it broadcast), so folding it into the global metric
-/// would let the adversary report any loss it likes.  Robustness is judged
-/// on what honest sites actually serve — attacker records are excluded from
-/// the weighting, and consensus is measured across honest rows.  DP-only
-/// pipelines (no attack plan) and the honest defaults keep the full-fleet
-/// metric bitwise-unchanged.  Runs at the eval cadence, off the
-/// zero-allocation round path, shared by all three drivers.
-pub fn eval_honest_subset(
-    attack: Option<&AttackSchedule>,
-    theta: &[f32],
-    shards: &[Shard],
-    p: usize,
-    compute: &dyn Compute,
-) -> Result<(f64, f64, f64, f64)> {
-    let Some(a) = attack.filter(|a| a.active()) else {
-        return compute.eval_full(theta, shards);
-    };
-    let n = shards.len();
-    let keep: Vec<usize> = (0..n).filter(|&i| !a.is_attacker(i)).collect();
-    if keep.len() == n || keep.is_empty() {
-        // nothing to mask — or a fully Byzantine fleet, which has no honest
-        // metric to report; fall back to the whole stack rather than NaN
-        return compute.eval_full(theta, shards);
-    }
-    let mut th = Vec::with_capacity(keep.len() * p);
-    let mut sh = Vec::with_capacity(keep.len());
-    for &i in &keep {
-        th.extend_from_slice(&theta[i * p..(i + 1) * p]);
-        sh.push(shards[i].clone());
-    }
-    compute.eval_full(&th, &sh)
 }
 
 // --------------------------------------------------------------- DSGD ----
@@ -826,146 +597,5 @@ mod tests {
         };
         let dsgt_tk = DsgtStrategy::new(tk, p);
         assert_eq!(dsgt_tk.cost(), CommCost::Gossip { kinds: 2, kind_bytes: [80, 80] });
-    }
-
-    #[test]
-    fn restore_offline_rows_is_row_exact() {
-        let prev = vec![1.0f32, 1.0, 2.0, 2.0, 3.0, 3.0];
-        let mut next = vec![9.0f32, 9.0, 8.0, 8.0, 7.0, 7.0];
-        restore_offline_rows(&mut next, &prev, &[true, false, true], 2);
-        assert_eq!(next, vec![9.0, 9.0, 2.0, 2.0, 7.0, 7.0]);
-    }
-
-    #[test]
-    fn ef_compress_stack_identity_reconstructs_and_zeroes_residual() {
-        use crate::compress::Identity;
-        let (n, p) = (3usize, 4usize);
-        let stack: Vec<f32> = (0..n * p).map(|i| i as f32 * 0.25 - 1.0).collect();
-        let online = vec![true, false, true];
-        let e: Vec<f32> = vec![0.5f32; n * p];
-        let mut e_back = vec![0.0f32; n * p];
-        let mut xhat = vec![0.0f32; n * p];
-        let mut vbuf = vec![0.0f32; p];
-        ef_compress_stack(
-            &Identity, true, 7, 2, PayloadKind::Params, &stack, &online, p, &e, &mut e_back,
-            &mut xhat, &mut vbuf, None,
-        )
-        .unwrap();
-        // online rows: x̂ = θ + e exactly, residual collapses to zero
-        for i in [0usize, 2] {
-            for j in 0..p {
-                assert_eq!(xhat[i * p + j], stack[i * p + j] + 0.5);
-                assert_eq!(e_back[i * p + j], 0.0);
-            }
-        }
-        // offline row: residual carried forward untouched
-        assert!(e_back[p..2 * p].iter().all(|&r| r == 0.5));
-    }
-
-    #[test]
-    fn ef_compress_stack_applies_the_perturbation_at_the_encode_boundary() {
-        use crate::compress::Identity;
-        use crate::config::ExperimentConfig;
-        let (n, p) = (4usize, 3usize);
-        let stack = vec![1.0f32; n * p];
-        let online = vec![true; n];
-        let e = vec![0.0f32; n * p];
-        let mut e_back = vec![0.0f32; n * p];
-        let mut xhat = vec![0.0f32; n * p];
-        let mut vbuf = vec![0.0f32; p];
-        let cfg = ExperimentConfig {
-            n,
-            attack_plan: "sign-flip".into(),
-            attack_frac: 0.25,
-            ..ExperimentConfig::default()
-        };
-        let mut pb = MsgPerturb::from_config(&cfg).unwrap().unwrap();
-        let attacker = (0..n).find(|&i| pb.attack.is_attacker(i)).unwrap();
-        ef_compress_stack(
-            &Identity,
-            false,
-            cfg.seed,
-            1,
-            PayloadKind::Params,
-            &stack,
-            &online,
-            p,
-            &e,
-            &mut e_back,
-            &mut xhat,
-            &mut vbuf,
-            Some(&mut pb),
-        )
-        .unwrap();
-        for i in 0..n {
-            let want = if i == attacker { -1.0 } else { 1.0 };
-            assert!(xhat[i * p..(i + 1) * p].iter().all(|&v| v == want), "row {i}");
-        }
-    }
-
-    #[test]
-    fn quarantine_folds_bad_senders_into_self_weight() {
-        // 3-node path: W rows sum to 1
-        #[rustfmt::skip]
-        let dense = vec![
-            0.5,  0.5, 0.0,
-            0.25, 0.5, 0.25,
-            0.0,  0.5, 0.5,
-        ];
-        let w = SparseW::from_dense(3, &dense);
-        let online = [true, true, true];
-        let p = 2usize;
-        let clean = vec![0.0f32; 6];
-        let mut poisoned = clean.clone();
-        poisoned[2] = f32::NAN; // node 1's row
-        let net = RoundNet { w: None, sparse: &w, online: &online };
-        // clean path: no compaction, no allocation
-        assert!(quarantine_compact(&net, &[&clean], p).unwrap().is_none());
-        let (wq, dropped) = quarantine_compact(&net, &[&poisoned], p).unwrap().unwrap();
-        assert_eq!(dropped, 2, "rows 0 and 2 each drop their node-1 entry");
-        #[rustfmt::skip]
-        let want = vec![
-            1.0,  0.0, 0.0,
-            0.25, 0.5, 0.25, // the bad node's own row is untouched
-            0.0,  0.0, 1.0,
-        ];
-        assert_eq!(wq.to_dense(), want);
-        // a second payload kind can trigger the quarantine on its own
-        let (wq2, d2) = quarantine_compact(&net, &[&clean, &poisoned], p).unwrap().unwrap();
-        assert_eq!((wq2.to_dense(), d2), (want, 2));
-        // dense-W backends cannot compact rows: loud error, not silence
-        let dnet = RoundNet { w: Some(&dense), sparse: &w, online: &online };
-        let err = quarantine_compact(&dnet, &[&poisoned], p).unwrap_err().to_string();
-        assert!(err.contains("sparse-native"), "{err}");
-    }
-
-    #[test]
-    fn quarantine_materializes_a_missing_self_weight() {
-        // node 0 has no diagonal entry: the folded mass must create one,
-        // keeping columns ascending
-        #[rustfmt::skip]
-        let dense = vec![
-            0.0, 1.0, 0.0,
-            0.5, 0.0, 0.5,
-            0.0, 1.0, 0.0,
-        ];
-        let w = SparseW::from_dense(3, &dense);
-        let online = [true, true, true];
-        let mut poisoned = vec![0.0f32; 3];
-        poisoned[1] = f32::INFINITY; // p = 1, node 1 bad
-        let net = RoundNet { w: None, sparse: &w, online: &online };
-        let (wq, dropped) = quarantine_compact(&net, &[&poisoned], 1).unwrap().unwrap();
-        assert_eq!(dropped, 2);
-        #[rustfmt::skip]
-        let want = vec![
-            1.0, 0.0, 0.0,
-            0.5, 0.0, 0.5,
-            0.0, 0.0, 1.0,
-        ];
-        assert_eq!(wq.to_dense(), want);
-        // offline senders are never scanned (their weights are already 0)
-        let offline = [true, false, true];
-        let onet = RoundNet { w: None, sparse: &w, online: &offline };
-        assert!(quarantine_compact(&onet, &[&poisoned], 1).unwrap().is_none());
     }
 }

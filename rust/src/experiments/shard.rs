@@ -13,7 +13,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{assemble, run_on};
-use crate::engine::{RoundEngine, ShardedSync};
+use crate::engine::{QuantitySet, RoundEngine, ShardedSync};
 use crate::jsonl::{self, Json};
 use anyhow::{bail, Result};
 
@@ -33,8 +33,10 @@ pub struct ShardRow {
     pub spill_bytes: u64,
     /// Shard loads from the spill file.
     pub loads: u64,
-    /// Dirty-frame writebacks to the spill file.
+    /// Frame evictions under hot-set pressure.
     pub spills: u64,
+    /// Dirty evictions written back to the spill file (`≤ spills`).
+    pub writebacks: u64,
     /// Pool acquires served by a resident frame.
     pub hits: u64,
     /// Wall-clock seconds per communication round.
@@ -47,14 +49,13 @@ pub struct ShardRow {
     pub matches_resident: Option<bool>,
 }
 
-/// Quantity rows per node: θ front/back, plus the DSGT tracker and
-/// gradient front/back pairs.
-fn nq_of(cfg: &ExperimentConfig) -> u64 {
-    if cfg.algo.uses_tracker() {
-        6
-    } else {
-        2
-    }
+/// Quantity rows per node under `cfg`'s axes — derived from the same
+/// [`QuantitySet`] registration the sharded driver makes (θ front/back,
+/// the DSGT pairs, decoded X̂/Ŷ rows, EF residuals, replay slots), so the
+/// residency figures track exactly what the pool actually holds.
+fn nq_of(cfg: &ExperimentConfig) -> Result<u64> {
+    let (reg, _) = QuantitySet::for_config(cfg)?;
+    Ok(reg.count() as u64)
 }
 
 /// Bitwise comparison of two metric trajectories: every evaluation row's
@@ -86,7 +87,7 @@ pub fn run(cfg: &ExperimentConfig, ns: &[usize], compare_max: usize) -> Result<V
         c.validate()?;
         let asm = assemble(&c)?;
         let p = crate::algo::native::NativeModel::new(c.d, c.hidden).p() as u64;
-        let nq = nq_of(&c);
+        let nq = nq_of(&c)?;
 
         // sharded run, driven directly so the pool counters stay readable
         let engine = RoundEngine::from_config(&c);
@@ -104,6 +105,7 @@ pub fn run(cfg: &ExperimentConfig, ns: &[usize], compare_max: usize) -> Result<V
             spill_bytes: (n.div_ceil(c.shard_nodes) * c.shard_nodes) as u64 * nq * p * 4,
             loads: stats.loads,
             spills: stats.spills,
+            writebacks: stats.writebacks,
             hits: stats.hits,
             round_time_s: last.wall_time_s / (last.comm_rounds.max(1) as f64),
             final_loss: last.loss,
@@ -124,6 +126,7 @@ pub fn run(cfg: &ExperimentConfig, ns: &[usize], compare_max: usize) -> Result<V
                 spill_bytes: 0,
                 loads: 0,
                 spills: 0,
+                writebacks: 0,
                 hits: 0,
                 round_time_s: rl.wall_time_s / (rl.comm_rounds.max(1) as f64),
                 final_loss: rl.loss,
@@ -139,12 +142,12 @@ pub fn run(cfg: &ExperimentConfig, ns: &[usize], compare_max: usize) -> Result<V
 pub fn print_table(rows: &[ShardRow]) {
     println!("EXP-SH1 — node-state residency: sharded spill-backed slabs vs resident stacks");
     println!(
-        "{:<8} {:<20} {:>12} {:>12} {:>12} {:>8} {:>8} {:>12} {:>10} {:>8}",
-        "n", "mode", "res_rows", "slab_MB", "spill_MB", "loads", "spills", "round_s", "loss", "bitwise"
+        "{:<8} {:<20} {:>12} {:>12} {:>12} {:>8} {:>8} {:>8} {:>12} {:>10} {:>8}",
+        "n", "mode", "res_rows", "slab_MB", "spill_MB", "loads", "spills", "wbacks", "round_s", "loss", "bitwise"
     );
     for r in rows {
         println!(
-            "{:<8} {:<20} {:>12} {:>12.2} {:>12.2} {:>8} {:>8} {:>12.4} {:>10.4} {:>8}",
+            "{:<8} {:<20} {:>12} {:>12.2} {:>12.2} {:>8} {:>8} {:>8} {:>12.4} {:>10.4} {:>8}",
             r.n,
             r.mode,
             r.resident_rows,
@@ -152,6 +155,7 @@ pub fn print_table(rows: &[ShardRow]) {
             r.spill_bytes as f64 / 1e6,
             r.loads,
             r.spills,
+            r.writebacks,
             r.round_time_s,
             r.final_loss,
             match r.matches_resident {
@@ -207,6 +211,7 @@ pub fn rows_json(rows: &[ShardRow]) -> Json {
                     ("spill_bytes", jsonl::num(r.spill_bytes as f64)),
                     ("loads", jsonl::num(r.loads as f64)),
                     ("spills", jsonl::num(r.spills as f64)),
+                    ("writebacks", jsonl::num(r.writebacks as f64)),
                     ("hits", jsonl::num(r.hits as f64)),
                     ("round_time_s", jsonl::num(r.round_time_s)),
                     ("final_loss", jsonl::num(r.final_loss)),
@@ -256,6 +261,7 @@ mod tests {
         for r in rows.iter().filter(|r| r.mode != "resident") {
             assert!(r.resident_rows <= 2 * 3, "hot-set bound: {}", r.resident_rows);
             assert!(r.loads > 0, "a 2-frame pool over >2 shards must load");
+            assert!(r.writebacks <= r.spills, "clean evictions cost no I/O");
             assert!(r.final_loss.is_finite());
         }
         // residency stays flat as n grows — that is the whole experiment
@@ -265,6 +271,17 @@ mod tests {
         assert!(f[0].contains("bitwise identical"), "{}", f[0]);
         let json = rows_json(&rows).to_string();
         assert!(json.contains("\"matches_resident\""), "{json}");
+    }
+
+    #[test]
+    fn nq_tracks_registered_quantities() {
+        // the residency math follows the quantity registry: compression
+        // and EF add pooled rows, and the table must bill for them
+        let mut cfg = tiny_cfg();
+        assert_eq!(nq_of(&cfg).unwrap(), 6, "fd-dsgt: θ/ϑ/G front+back");
+        cfg.compress = "q8".into();
+        cfg.error_feedback = true;
+        assert_eq!(nq_of(&cfg).unwrap(), 10, "+ X̂/Ŷ + EF residual pair");
     }
 
     #[test]

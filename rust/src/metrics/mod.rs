@@ -204,6 +204,16 @@ pub struct RoundMetrics {
     /// Privacy spent so far: the (ε, δ)-accountant's ε at the configured δ
     /// (`dp.delta`); 0 when the DP layer is off.
     pub dp_epsilon: f64,
+    /// Cumulative slab-pool shard loads from the spill file (sharded runs
+    /// only; 0 on the resident path — see `engine::shard::PoolStats`).
+    pub pool_loads: u64,
+    /// Cumulative slab-pool frame evictions (hot-set pressure).
+    pub pool_spills: u64,
+    /// Cumulative dirty evictions written back to the spill file
+    /// (`pool_writebacks ≤ pool_spills`).
+    pub pool_writebacks: u64,
+    /// Cumulative slab-pool acquires served by a resident frame.
+    pub pool_hits: u64,
 }
 
 impl RoundMetrics {
@@ -268,17 +278,21 @@ impl RunLog {
             ("wall_time_s", col(&|r| r.wall_time_s)),
             ("quarantined", col(&|r| r.quarantined as f64)),
             ("dp_epsilon", col(&|r| r.dp_epsilon)),
+            ("pool_loads", col(&|r| r.pool_loads as f64)),
+            ("pool_spills", col(&|r| r.pool_spills as f64)),
+            ("pool_writebacks", col(&|r| r.pool_writebacks as f64)),
+            ("pool_hits", col(&|r| r.pool_hits as f64)),
         ])
     }
 
     /// CSV with a header, one row per evaluation.
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
-            "comm_rounds,local_steps,loss,accuracy,stationarity,consensus,bytes,messages,sim_time_s,wall_time_s,quarantined,dp_epsilon\n",
+            "comm_rounds,local_steps,loss,accuracy,stationarity,consensus,bytes,messages,sim_time_s,wall_time_s,quarantined,dp_epsilon,pool_loads,pool_spills,pool_writebacks,pool_hits\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{},{},{:.6},{:.4},{:.6e},{:.6e},{},{},{:.4},{:.3},{},{:.4}\n",
+                "{},{},{:.6},{:.4},{:.6e},{:.6e},{},{},{:.4},{:.3},{},{:.4},{},{},{},{}\n",
                 r.comm_rounds,
                 r.local_steps,
                 r.loss,
@@ -290,7 +304,11 @@ impl RunLog {
                 r.sim_time_s,
                 r.wall_time_s,
                 r.quarantined,
-                r.dp_epsilon
+                r.dp_epsilon,
+                r.pool_loads,
+                r.pool_spills,
+                r.pool_writebacks,
+                r.pool_hits
             ));
         }
         out
@@ -326,6 +344,10 @@ pub fn round_metrics(
         wall_time_s,
         quarantined: net.quarantined,
         dp_epsilon: 0.0,
+        pool_loads: 0,
+        pool_spills: 0,
+        pool_writebacks: 0,
+        pool_hits: 0,
     }
 }
 
@@ -347,6 +369,10 @@ mod tests {
             wall_time_s: cr as f64 * 0.01,
             quarantined: 0,
             dp_epsilon: 0.0,
+            pool_loads: 0,
+            pool_spills: 0,
+            pool_writebacks: 0,
+            pool_hits: 0,
         }
     }
 
@@ -407,6 +433,26 @@ mod tests {
         let j = crate::jsonl::Json::parse(&log.to_json().to_string()).unwrap();
         assert_eq!(j.get("messages").unwrap().as_f64_vec().unwrap(), vec![10.0]);
         assert_eq!(j.get("quarantined").unwrap().as_f64_vec().unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn json_and_csv_report_pool_columns() {
+        // PR-10: sharded runs surface the slab-pool traffic in the run log
+        let mut log = RunLog::new("fd-dsgt");
+        let mut r = row(1, 0.7);
+        r.pool_loads = 5;
+        r.pool_spills = 2;
+        r.pool_writebacks = 1;
+        r.pool_hits = 9;
+        log.push(r);
+        let j = crate::jsonl::Json::parse(&log.to_json().to_string()).unwrap();
+        assert_eq!(j.get("pool_loads").unwrap().as_f64_vec().unwrap(), vec![5.0]);
+        assert_eq!(j.get("pool_spills").unwrap().as_f64_vec().unwrap(), vec![2.0]);
+        assert_eq!(j.get("pool_writebacks").unwrap().as_f64_vec().unwrap(), vec![1.0]);
+        assert_eq!(j.get("pool_hits").unwrap().as_f64_vec().unwrap(), vec![9.0]);
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("pool_loads,pool_spills,pool_writebacks,pool_hits"));
     }
 
     #[test]

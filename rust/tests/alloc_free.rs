@@ -136,6 +136,7 @@ fn steady_sharded_sweep_allocs(
     algo: AlgoKind,
     shard_nodes: usize,
     hot_shards: usize,
+    tweak: impl FnOnce(&mut ExperimentConfig),
 ) -> (u64, usize, u64) {
     let mut cfg = ExperimentConfig::default();
     cfg.n = 6;
@@ -152,6 +153,7 @@ fn steady_sharded_sweep_allocs(
     cfg.records_per_hospital = 60;
     cfg.shard_nodes = shard_nodes;
     cfg.hot_shards = hot_shards;
+    tweak(&mut cfg);
     let asm = assemble(&cfg).unwrap();
     let engine = RoundEngine::from_config(&cfg);
     let mut driver = ShardedSync::new(&cfg, &asm.ds, &asm.graph, &asm.w).unwrap();
@@ -183,7 +185,7 @@ fn steady_sharded_sweep_allocs(
 // file traffic, and the resident rows must stay at the hot-set bound.
 #[test]
 fn steady_state_sharded_dsgd_sweep_is_allocation_free_and_bounded() {
-    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgd, 2, 2);
+    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgd, 2, 2, |_| {});
     assert_eq!(n, 0, "sharded fd-dsgd sweep performed {n} heap allocations");
     assert!(resident <= 2 * 2, "resident rows {resident} exceed hot_shards × shard_nodes");
     assert!(spilled > 0, "measured rounds must actually exercise the spill path");
@@ -191,8 +193,24 @@ fn steady_state_sharded_dsgd_sweep_is_allocation_free_and_bounded() {
 
 #[test]
 fn steady_state_sharded_dsgt_sweep_is_allocation_free_and_bounded() {
-    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgt, 2, 2);
+    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgt, 2, 2, |_| {});
     assert_eq!(n, 0, "sharded fd-dsgt sweep performed {n} heap allocations");
     assert!(resident <= 2 * 2, "resident rows {resident} exceed hot_shards × shard_nodes");
     assert!(spilled > 0, "measured rounds must actually exercise the spill path");
+}
+
+// PR-10: the compressed sharded sweep — encode sweep (q8 + error-feedback
+// residuals through the pooled X̂/Ŷ and EF quantities), the quarantine flag
+// scan, gather over the decoded stacks, and the rule kernels — must also
+// stay allocation-free once warm, WHILE those extra pooled quantities churn
+// through spill evictions (3 shards through 2 frames every sweep).
+#[test]
+fn steady_state_sharded_q8_ef_sweep_is_allocation_free_through_spills() {
+    let (n, resident, spilled) = steady_sharded_sweep_allocs(AlgoKind::FdDsgt, 2, 2, |c| {
+        c.compress = "q8".into();
+        c.error_feedback = true;
+    });
+    assert_eq!(n, 0, "sharded q8+EF sweep performed {n} heap allocations");
+    assert!(resident <= 2 * 2, "resident rows {resident} exceed hot_shards × shard_nodes");
+    assert!(spilled > 0, "q8+EF slabs must live through real evictions");
 }

@@ -12,7 +12,14 @@
 //!    ANY contiguous shard partition reproduces the resident
 //!    `eval_reduce` bit for bit — property-tested over random boundaries,
 //!    plus the 1-vs-999-record skew oracle for the record weighting and
-//!    the honest-subfleet filter from the Byzantine layer.
+//!    the honest-subfleet filter from the Byzantine layer;
+//! 4. (PR 10) the FULL scenario matrix is shard-native: compression
+//!    (q8/q4/top-k, EF on/off) × robust combine rule × attack plan × DP ×
+//!    straggler compute plan all route through the shared message pipeline
+//!    and the quantity-registry pool, and every composition — including a
+//!    hot-set smaller than the shard count, so the new pooled quantities
+//!    (X̂/Ŷ, EF residuals, replay slots) live through spill evictions —
+//!    stays bitwise-equal to the resident fused driver.
 
 mod common;
 
@@ -90,6 +97,106 @@ fn shard_count_is_invariant_one_equals_k_equals_unsharded() {
         let (log, theta) = shard::train(&c, &asm.ds, &asm.graph, &asm.w).unwrap();
         assert_logs_bitwise(&res_log, &log, &format!("shard_nodes={k} hot={hot}"));
         assert_eq!(res_theta, theta, "shard_nodes={k} hot={hot}: final θ stack");
+    }
+}
+
+#[test]
+fn sharded_equals_resident_bitwise_across_message_pipeline_matrix() {
+    // PR-10 tentpole pin: every message-shaping axis — compressor × EF ×
+    // robust rule × attack plan × DP × compute plan — runs shard-native
+    // through the one extracted pipeline, bitwise-equal to the resident
+    // fused driver.  n = 9, shard_nodes = 4, hot_shards = 2: three shards
+    // through two frames, so the compressed/adversarial quantities (X̂/Ŷ,
+    // EF residuals, replay slots) spill and reload every single sweep.
+    type Axis = (
+        &'static str,                     // label
+        AlgoKind,
+        (&'static str, f64, bool),        // compressor (name, topk_frac, ef)
+        &'static str,                     // robust rule ("" = mean)
+        (&'static str, f64),              // attack (plan, frac); "" = none
+        &'static str,                     // dp ("" = off)
+        &'static str,                     // compute plan ("" = uniform)
+    );
+    let cases: [Axis; 10] = [
+        ("q8", AlgoKind::FdDsgd, ("q8", 0.0, false), "", ("", 0.0), "", ""),
+        ("q8+ef/dsgt", AlgoKind::FdDsgt, ("q8", 0.0, true), "", ("", 0.0), "", ""),
+        ("q4+ef", AlgoKind::FdDsgd, ("q4", 0.0, true), "", ("", 0.0), "", ""),
+        ("topk+ef/dsgt", AlgoKind::FdDsgt, ("top-k", 0.25, true), "", ("", 0.0), "", ""),
+        ("median uncompressed", AlgoKind::FdDsgd, ("none", 0.0, false), "median", ("", 0.0), "", ""),
+        (
+            "q8+trim+signflip",
+            AlgoKind::FdDsgd,
+            ("q8", 0.0, false),
+            "trimmed-mean",
+            ("sign-flip", 0.25),
+            "",
+            "",
+        ),
+        (
+            "replay uncompressed/dsgt",
+            AlgoKind::FdDsgt,
+            ("none", 0.0, false),
+            "",
+            ("stale-replay", 0.25),
+            "",
+            "",
+        ),
+        ("q8+ef+replay", AlgoKind::FdDsgd, ("q8", 0.0, true), "", ("stale-replay", 0.25), "", ""),
+        ("q8+dp", AlgoKind::FdDsgd, ("q8", 0.0, false), "", ("", 0.0), "gaussian", ""),
+        (
+            "grand compose",
+            AlgoKind::FdDsgt,
+            ("q8", 0.0, true),
+            "trimmed-mean",
+            ("sign-flip", 0.25),
+            "gaussian",
+            "lognormal",
+        ),
+    ];
+    for (label, algo, (comp, frac, ef), rule, (attack, afrac), dp, cplan) in cases {
+        let mut b = ScenarioBuilder::gossip(algo).n(9).rounds(3, 18);
+        if comp != "none" {
+            b = b.compressor(comp, frac, ef);
+        }
+        if !rule.is_empty() {
+            b = b.robust_rule(rule);
+        }
+        if !attack.is_empty() {
+            b = b.attack(attack, afrac);
+        }
+        if !dp.is_empty() {
+            b = b.tweak(|c| c.dp = "gaussian".into());
+        }
+        if !cplan.is_empty() {
+            b = b.compute(cplan);
+        }
+        let resident_cfg = b.build();
+        let asm = assemble(&resident_cfg).unwrap();
+        let compute = make_compute(&resident_cfg).unwrap();
+        let (res_log, res_theta) = decfl::engine::train_decentralized(
+            &resident_cfg,
+            compute.as_ref(),
+            &asm.ds,
+            &asm.graph,
+            &asm.w,
+        )
+        .unwrap();
+
+        let mut sharded_cfg = resident_cfg.clone();
+        sharded_cfg.shard_nodes = 4;
+        sharded_cfg.hot_shards = 2;
+        let (sh_log, sh_theta) =
+            shard::train(&sharded_cfg, &asm.ds, &asm.graph, &asm.w).unwrap();
+        assert_logs_bitwise(&res_log, &sh_log, label);
+        assert_eq!(res_theta, sh_theta, "{label}: final θ stack");
+
+        // the run log surfaces real pool traffic on the sharded side only,
+        // and the (ε, δ) accountant agrees across drivers
+        let (shr, rr) = (sh_log.rows.last().unwrap(), res_log.rows.last().unwrap());
+        assert!(shr.pool_loads > 0, "{label}: sharded run must report pool loads");
+        assert!(shr.pool_spills > 0, "{label}: hot < shards must report evictions");
+        assert_eq!(rr.pool_loads, 0, "{label}: resident runs have no pool traffic");
+        assert_eq!(shr.dp_epsilon.to_bits(), rr.dp_epsilon.to_bits(), "{label}: dp ε");
     }
 }
 

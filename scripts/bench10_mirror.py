@@ -1,0 +1,347 @@
+#!/usr/bin/env python3
+"""Numpy mirror of the PR-10 sharded message pipeline for BENCH_10.json.
+
+The container that grows this repo ships no Rust toolchain, so the frozen
+BENCH numbers come from a line-faithful numpy mirror of
+``rust/src/engine/shard.rs`` (same convention as BENCH_9.json).  This
+script mirrors the PR-10 surface: the quantity-registry slab pool carrying
+TEN per-node quantities for a q8 + error-feedback FD-DSGT run
+(theta/y/g front+back, decoded X-hat/Y-hat, EF residuals for both
+message kinds) and the driver-agnostic message pipeline
+(EF accumulate -> q8 encode -> decode -> trimmed-mean combine), sharded
+against resident.
+
+Mirrored layout invariants (see DESIGN.md section 15):
+  * node-major quantity-minor frames of ``shard_nodes x nq x p`` f32;
+  * LRU hot-set with dirty-only write-back through a preallocated staging
+    buffer (``pread``/``pwrite``, no mmap, file ftruncate'd so holes read
+    zero -- the sparse-file zero-init invariant);
+  * halo rows served by single-row pread WITHOUT faulting the neighbor
+    shard into the hot set;
+  * front/back swap by qmap index permutation, never by copying rows;
+  * data streams keyed per ``(seed, block, round, step)`` with a fixed
+    block size, so shard boundaries cannot leak into the draw order.
+
+Every per-round operation (keyed draws, per-row q8 with EF, elementwise
+median-of-3 trimmed combine) is row-independent, so the sharded sweep is
+bitwise-equal to the resident one -- ``selftest`` asserts that across live
+LRU evictions.  RNG streams are NOT bit-matched to the crate's Pcg64;
+round times are indicative.  The authoritative bitwise contract is
+``rust/tests/shard_pins.rs``.
+
+Usage:
+  python3 scripts/bench10_mirror.py selftest
+  python3 scripts/bench10_mirror.py run --n 1000 --mode sharded --rounds 4
+  python3 scripts/bench10_mirror.py run --n 100000 --mode resident --rlimit-mb 1500
+"""
+
+import argparse
+import json
+import os
+import resource
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+# Shapes: d=42, hidden=16 MLP -> p = 42*16 + 16 + 16*1 + 1 = 705, matching
+# BENCH_9's model so the two freezes compose into one RSS story.
+P = 705
+BLOCK = 64  # data-stream block; equals shard_nodes so draws never straddle
+LOCAL_STEPS = 3
+LR = np.float32(0.02)
+SEED = 7
+
+# Quantity ids, registration order == physical frame order (QuantitySet
+# for a q8+EF FD-DSGT config registers exactly these ten).
+TH, TH_B, Y, Y_B, G, G_B, XH, YH, EF_T, EF_Y = range(10)
+NQ = 10
+NAMES = ["theta", "theta_back", "y", "y_back", "g", "g_back",
+         "xhat", "yhat", "ef_t", "ef_y"]
+
+
+def block_rng(block, rnd, step):
+    """Deterministic, shard-oblivious stream for one data block."""
+    return np.random.default_rng([SEED, block, rnd, step])
+
+
+def draw_block(block, rnd, step, k):
+    """k gradient rows for data block `block` at (round, step)."""
+    return block_rng(block, rnd, step).standard_normal((BLOCK, P), dtype=np.float32)[:k]
+
+
+def q8_rows(v):
+    """Per-row q8: symmetric int8 quantize, dequantized back to f32.
+
+    Row-independent and elementwise, so any row blocking is bitwise-equal.
+    """
+    a = np.max(np.abs(v), axis=1, keepdims=True)
+    scale = a / np.float32(127.0)
+    safe = np.where(scale == 0, np.float32(1.0), scale)
+    q = np.clip(np.rint(v / safe), np.float32(-127.0), np.float32(127.0))
+    return np.where(a == 0, np.float32(0.0), q * safe).astype(np.float32, copy=False)
+
+
+def encode_rows(x, e):
+    """The pipeline's encode_row over a row block: EF accumulate -> q8 ->
+    residual update (fully overwrites e, the single-buffer invariant)."""
+    v = x + e
+    hat = q8_rows(v)
+    e[:] = v - hat
+    return hat
+
+
+def combine3(prev_rows, self_rows, next_rows):
+    """Trimmed-mean (trim 0.4) over the ring stencil: of 3 values per
+    coordinate, drop the min and max -> elementwise median."""
+    return np.median(np.stack([prev_rows, self_rows, next_rows]), axis=0).astype(
+        np.float32, copy=False
+    )
+
+
+class Pool:
+    """Spill-backed slab pool: LRU hot-set, dirty-only write-back, halo
+    single-row pread, qmap front/back swap.  Mirrors NodeSlabPool."""
+
+    def __init__(self, n, shard_nodes, hot_shards):
+        self.n = n
+        self.k = shard_nodes
+        self.n_shards = -(-n // shard_nodes)
+        self.hot = hot_shards
+        self.frames = np.zeros((hot_shards, shard_nodes, NQ, P), dtype=np.float32)
+        self.staging = np.empty(shard_nodes * NQ * P, dtype=np.float32)
+        self.row_staging = np.empty(P, dtype=np.float32)
+        self.frame_bytes = self.staging.nbytes
+        self.owner = [None] * hot_shards          # frame -> shard
+        self.where = [None] * self.n_shards       # shard -> frame
+        self.dirty = [False] * hot_shards
+        self.lru = []                             # frame indices, LRU first
+        self.qmap = list(range(NQ))
+        fd, path = tempfile.mkstemp(prefix="decfl-mirror-")
+        os.unlink(path)
+        os.ftruncate(fd, self.n_shards * self.frame_bytes)  # holes read zero
+        self.fd = fd
+        self.loads = self.spills = self.writebacks = self.hits = 0
+
+    def close(self):
+        os.close(self.fd)
+
+    def _touch(self, f):
+        self.lru.remove(f)
+        self.lru.append(f)
+
+    def acquire(self, shard):
+        f = self.where[shard]
+        if f is not None:
+            self.hits += 1
+            self._touch(f)
+            return f
+        if len(self.lru) < self.hot:
+            f = len(self.lru)
+            self.lru.append(f)
+        else:
+            f = self.lru[0]
+            old = self.owner[f]
+            if self.dirty[f]:
+                self.staging[:] = self.frames[f].reshape(-1)
+                os.pwrite(self.fd, self.staging.data, old * self.frame_bytes)
+                self.writebacks += 1
+            self.spills += 1
+            self.where[old] = None
+            self._touch(f)
+        got = os.preadv(self.fd, [self.staging.data], shard * self.frame_bytes)
+        assert got == self.frame_bytes
+        self.frames[f] = self.staging.reshape(self.k, NQ, P)
+        self.loads += 1
+        self.owner[f] = shard
+        self.where[shard] = f
+        self.dirty[f] = False
+        return f
+
+    def rows(self, shard, q):
+        """(k, P) view of logical quantity q in the (hot) shard's frame."""
+        f = self.acquire(shard)
+        lo = shard * self.k
+        k = min(self.n, lo + self.k) - lo
+        return self.frames[f][:k, self.qmap[q], :]
+
+    def mark_dirty(self, shard):
+        self.dirty[self.where[shard]] = True
+
+    def read_row(self, node, q, out):
+        """Halo read: hot frame if present, else one pread -- never faults
+        the neighbor's shard into the hot set."""
+        shard, local = divmod(node, self.k)
+        f = self.where[shard]
+        if f is not None:
+            self.hits += 1
+            out[:] = self.frames[f][local, self.qmap[q], :]
+            return
+        off = shard * self.frame_bytes + (local * NQ + self.qmap[q]) * P * 4
+        got = os.preadv(self.fd, [out.data], off)
+        assert got == P * 4
+        self.loads += 1
+
+    def swap(self, a, b):
+        self.qmap[a], self.qmap[b] = self.qmap[b], self.qmap[a]
+
+    def stats(self):
+        return {"loads": self.loads, "spills": self.spills,
+                "writebacks": self.writebacks, "hits": self.hits}
+
+
+def run_resident(n, rounds):
+    """Resident stacks, identical math, block-keyed draws."""
+    q = [np.zeros((n, P), dtype=np.float32) for _ in range(NQ)]
+    for b in range(-(-n // BLOCK)):
+        lo, hi = b * BLOCK, min(n, (b + 1) * BLOCK)
+        q[TH][lo:hi] = draw_block(b, 0, 0, hi - lo)
+    times = []
+    for rnd in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        for step in range(LOCAL_STEPS):
+            for b in range(-(-n // BLOCK)):
+                lo, hi = b * BLOCK, min(n, (b + 1) * BLOCK)
+                gr = draw_block(b, rnd, step, hi - lo)
+                q[TH][lo:hi] -= LR * gr
+                q[Y][lo:hi] += gr - q[G][lo:hi]
+                q[G][lo:hi] = gr
+        q[XH][:] = encode_rows(q[TH], q[EF_T])
+        q[YH][:] = encode_rows(q[Y], q[EF_Y])
+        for b in range(-(-n // BLOCK)):  # blockwise: bound the transients
+            lo, hi = b * BLOCK, min(n, (b + 1) * BLOCK)
+            idx = np.arange(lo, hi)
+            for src, dst in ((XH, TH_B), (YH, Y_B)):
+                q[dst][lo:hi] = combine3(
+                    q[src][(idx - 1) % n], q[src][lo:hi], q[src][(idx + 1) % n]
+                )
+        q[TH], q[TH_B] = q[TH_B], q[TH]
+        q[Y], q[Y_B] = q[Y_B], q[Y]
+        times.append(time.perf_counter() - t0)
+    return q[TH], times, {"loads": 0, "spills": 0, "writebacks": 0, "hits": 0}
+
+
+def checksum(rows_of):
+    """Order-pinned fleet checksum: f64 per-block sums added in block
+    order, identical between layouts without materializing (n, P)."""
+    total = 0.0
+    b = 0
+    while True:
+        rows = rows_of(b)
+        if rows is None:
+            return total
+        total += float(rows.astype(np.float64).sum())
+        b += 1
+
+
+def run_sharded(n, rounds, hot_shards):
+    """The sharded sweep through the pool: local, encode, combine-with-halo."""
+    pool = Pool(n, BLOCK, hot_shards)
+    for s in range(pool.n_shards):
+        lo = s * BLOCK
+        pool.rows(s, TH)[:] = draw_block(s, 0, 0, min(n, lo + BLOCK) - lo)
+        pool.mark_dirty(s)
+    prev = np.empty(P, dtype=np.float32)
+    nxt = np.empty(P, dtype=np.float32)
+    times = []
+    for rnd in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        for s in range(pool.n_shards):  # local phase
+            lo = s * BLOCK
+            k = min(n, lo + BLOCK) - lo
+            th, y, g = pool.rows(s, TH), pool.rows(s, Y), pool.rows(s, G)
+            for step in range(LOCAL_STEPS):
+                gr = draw_block(s, rnd, step, k)
+                th -= LR * gr
+                y += gr - g
+                g[:] = gr
+            pool.mark_dirty(s)
+        for s in range(pool.n_shards):  # encode sweep
+            pool.rows(s, XH)[:] = encode_rows(pool.rows(s, TH), pool.rows(s, EF_T))
+            pool.rows(s, YH)[:] = encode_rows(pool.rows(s, Y), pool.rows(s, EF_Y))
+            pool.mark_dirty(s)
+        for s in range(pool.n_shards):  # combine sweep with halo reads
+            lo = s * BLOCK
+            k = min(n, lo + BLOCK) - lo
+            for src, dst in ((XH, TH_B), (YH, Y_B)):
+                rows = pool.rows(s, src)
+                pool.read_row((lo - 1) % n, src, prev)
+                pool.read_row((lo + k) % n, src, nxt)
+                p_rows = np.concatenate([prev[None, :], rows[:-1]])
+                n_rows = np.concatenate([rows[1:], nxt[None, :]])
+                pool.rows(s, dst)[:] = combine3(p_rows, rows, n_rows)
+            pool.mark_dirty(s)
+        pool.swap(TH, TH_B)
+        pool.swap(Y, Y_B)
+        times.append(time.perf_counter() - t0)
+    return pool, times, pool.stats()
+
+
+def cmd_run(args):
+    if args.rlimit_mb:
+        lim = args.rlimit_mb << 20
+        resource.setrlimit(resource.RLIMIT_AS, (lim, lim))
+    try:
+        if args.mode == "resident":
+            theta, times, stats = run_resident(args.n, args.rounds)
+
+            def rows_of(b):
+                lo = b * BLOCK
+                return None if lo >= args.n else theta[lo : min(args.n, lo + BLOCK)]
+
+        else:
+            pool, times, stats = run_sharded(args.n, args.rounds, args.hot_shards)
+
+            def rows_of(b):
+                return None if b >= pool.n_shards else pool.rows(b, TH)
+
+    except MemoryError:
+        print(json.dumps({"n": args.n, "mode": args.mode, "oom": True}))
+        return
+    total = checksum(rows_of)
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    print(json.dumps({
+        "n": args.n, "mode": args.mode, "oom": False,
+        "rounds": args.rounds, "round_s": sum(times) / len(times),
+        "peak_rss_mb": round(rss_mb, 1), "theta_sum": total,
+        **stats,
+    }))
+
+
+def cmd_selftest(args):
+    n, rounds = 512, 3
+    rt, _, _ = run_resident(n, rounds)
+    pool, _, ss = run_sharded(n, rounds, 2)
+    # .copy() inside the comprehension: rows() returns a frame view, and a
+    # later acquire may reuse that frame before concatenate reads it
+    st = np.concatenate([pool.rows(s, TH).copy() for s in range(pool.n_shards)])
+    pool.close()
+    bitwise = bool(np.array_equal(rt.view(np.uint32), st.view(np.uint32)))
+    print(json.dumps({
+        "n": n, "rounds": rounds, "final_theta_bitwise": bitwise,
+        "max_abs_diff": float(np.max(np.abs(rt - st))),
+        "pool_loads": ss["loads"], "pool_spills": ss["spills"],
+        "pool_writebacks": ss["writebacks"],
+    }))
+    sys.exit(0 if bitwise else 1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    r = sub.add_parser("run", help="one measured child run")
+    r.add_argument("--n", type=int, required=True)
+    r.add_argument("--mode", choices=["resident", "sharded"], required=True)
+    r.add_argument("--rounds", type=int, default=2)
+    r.add_argument("--hot-shards", type=int, default=4)
+    r.add_argument("--rlimit-mb", type=int, default=0)
+    r.set_defaults(fn=cmd_run)
+    s = sub.add_parser("selftest", help="sharded == resident bitwise check")
+    s.set_defaults(fn=cmd_selftest)
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()
